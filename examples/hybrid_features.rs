@@ -1,0 +1,79 @@
+//! Hybrid features without pre-encoding — the paper's §2 headline.
+//!
+//! Builds a dataset whose columns mix numbers, category strings and
+//! missing cells *in the same column*, trains UDT directly on it, and
+//! contrasts the memory footprint with what one-hot encoding would need
+//! (the paper: 39 GB one-hot vs ~90 MB for UDT on "credit card").
+//!
+//!     cargo run --release --example hybrid_features
+
+use udt::data::csv::{load_csv_str, CsvOptions};
+use udt::data::value::Value;
+use udt::tree::{predict::predict_row, TrainConfig};
+use udt::Tree;
+
+fn main() -> anyhow::Result<()> {
+    // A CSV with genuinely hybrid columns: "status" mixes numeric codes
+    // and strings; "income" has missing cells. No encoding happens —
+    // cells parse as numbers first, then as interned categoricals.
+    let mut csv = String::from("age,income,status,label\n");
+    let statuses = ["single", "married", "divorced"];
+    for i in 0..3000u32 {
+        let age = 20 + (i * 7) % 50;
+        let income = if i % 11 == 0 {
+            String::new() // missing
+        } else {
+            format!("{}", 20_000 + (i * 137) % 80_000)
+        };
+        // Hybrid column: mostly strings, sometimes a numeric code.
+        let status = if i % 5 == 0 {
+            format!("{}", i % 3) // numeric code
+        } else {
+            statuses[(i % 3) as usize].to_string()
+        };
+        let label = if (age > 40 && i % 3 == 0) || status == "married" {
+            "approve"
+        } else {
+            "reject"
+        };
+        csv.push_str(&format!("{age},{income},{status},{label}\n"));
+    }
+
+    let ds = load_csv_str("hybrid", &csv, &CsvOptions::default())?;
+    println!("column composition (numeric / categorical / missing):");
+    for c in &ds.columns {
+        let s = c.stats();
+        println!("  {:8} {:5} / {:4} / {:4}", c.name, s.n_num, s.n_cat, s.n_missing);
+    }
+
+    let tree = Tree::fit(&ds, &TrainConfig::default())?;
+    println!(
+        "\ntrained on hybrid data directly: {} nodes, depth {}, accuracy {:.3}",
+        tree.n_nodes(),
+        tree.depth,
+        tree.accuracy(&ds)
+    );
+
+    // Memory comparison vs one-hot encoding (every distinct categorical
+    // value becomes a column of M doubles).
+    let distinct_cats = ds.interner.len();
+    let onehot_cols = ds.n_features() + distinct_cats;
+    let onehot_bytes = ds.n_rows() * onehot_cols * 8;
+    println!(
+        "\nno-pre-encoding footprint: {:.2} MB | one-hot equivalent: {:.2} MB ({} extra columns)",
+        ds.approx_bytes() as f64 / 1e6,
+        onehot_bytes as f64 / 1e6,
+        distinct_cats
+    );
+
+    // Missing values at prediction time route to the negative branch —
+    // untouched, never imputed.
+    let p = predict_row(
+        &tree,
+        &[Value::Num(55.0), Value::Missing, Value::Missing],
+        usize::MAX,
+        0,
+    );
+    println!("\nprediction with missing cells: {p:?}");
+    Ok(())
+}

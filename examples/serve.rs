@@ -1,0 +1,106 @@
+//! Serving demo: train a model, start the TCP prediction server, fire a
+//! burst of batched client requests, report latency/throughput, shut
+//! down. All in one process (client threads ↔ server threads).
+//!
+//!     cargo run --release --example serve
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use udt::coordinator::serve::Server;
+use udt::data::synth::{generate_classification, SynthSpec};
+use udt::tree::{TrainConfig, Tree};
+use udt::util::timer::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let mut spec = SynthSpec::classification("serve_demo", 20_000, 12, 4);
+    spec.cat_frac = 0.3;
+    let ds = generate_classification(&spec, 42);
+    let tree = Tree::fit(&ds, &TrainConfig::default())?;
+    println!(
+        "model: {} nodes, depth {} — starting server",
+        tree.n_nodes(),
+        tree.depth
+    );
+
+    let server = Server::new(tree, ds.interner.clone(), ds.class_names.clone());
+    let (tx, rx) = mpsc::channel();
+    let server2 = server.clone();
+    let server_thread = std::thread::spawn(move || {
+        server2
+            .serve("127.0.0.1:0", |addr| tx.send(addr).unwrap())
+            .unwrap();
+    });
+    let addr = rx.recv()?;
+    println!("listening on {addr}");
+
+    // Client burst: 4 connections × 50 batches × 64 rows.
+    let n_clients = 4;
+    let batches = 50;
+    let batch_size = 64;
+    let t = Timer::start();
+    let mut handles = Vec::new();
+    for client in 0..n_clients {
+        let ds = ds.clone();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<f64> {
+            let stream = TcpStream::connect(addr)?;
+            let mut writer = stream.try_clone()?;
+            let mut reader = BufReader::new(stream);
+            let mut lat_ms = 0.0;
+            for b in 0..batches {
+                let mut req = String::from("[");
+                for i in 0..batch_size {
+                    let r = (client * 7919 + b * 131 + i) % ds.n_rows();
+                    if i > 0 {
+                        req.push(',');
+                    }
+                    req.push('[');
+                    for (f, col) in ds.columns.iter().enumerate() {
+                        if f > 0 {
+                            req.push(',');
+                        }
+                        match col.values[r] {
+                            udt::data::value::Value::Num(x) => req.push_str(&format!("{x}")),
+                            udt::data::value::Value::Cat(c) => {
+                                req.push_str(&format!("\"{}\"", ds.interner.name(c)))
+                            }
+                            udt::data::value::Value::Missing => req.push_str("null"),
+                        }
+                    }
+                    req.push(']');
+                }
+                req.push_str("]\n");
+                let t = Timer::start();
+                writer.write_all(req.as_bytes())?;
+                let mut line = String::new();
+                reader.read_line(&mut line)?;
+                lat_ms += t.ms();
+                assert!(line.starts_with('['), "unexpected response: {line}");
+            }
+            Ok(lat_ms / batches as f64)
+        }));
+    }
+    let mut mean_latency = 0.0;
+    for h in handles {
+        mean_latency += h.join().unwrap()?;
+    }
+    mean_latency /= n_clients as f64;
+    let total = (n_clients * batches * batch_size) as f64;
+    let wall_s = t.elapsed().as_secs_f64();
+    println!(
+        "{total} predictions in {:.2} s → {:.0} preds/s; mean batch latency {:.2} ms ({} rows/batch)",
+        wall_s,
+        total / wall_s,
+        mean_latency,
+        batch_size
+    );
+
+    // Shut down.
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(b"\"shutdown\"\n")?;
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line)?;
+    server_thread.join().unwrap();
+    println!("server stopped");
+    Ok(())
+}

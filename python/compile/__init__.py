@@ -1,0 +1,6 @@
+"""Build-time compile package: L2 JAX model + L1 Pallas kernels + AOT.
+
+Python here runs ONCE (``make artifacts``) to lower the split-selection
+hot-spot to HLO text; the Rust coordinator executes the artifacts via
+PJRT. Nothing in this package is imported at request time.
+"""

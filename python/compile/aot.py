@@ -1,0 +1,100 @@
+"""AOT lowering: JAX/Pallas → HLO **text** artifacts + manifest.json.
+
+HLO text (never ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Exported (M, B, C) variants. M is padded example count (multiple of the
+# hist kernel's TILE_M=1024); B is the bin count; C the padded class count.
+VARIANTS = [
+    dict(m=4_096, b=256, c=32),
+    dict(m=32_768, b=256, c=32),
+    dict(m=262_144, b=256, c=32),
+]
+
+# Regression label-split scan variants (M only).
+SSE_VARIANTS = [dict(m=4_096), dict(m=32_768)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_split_select(m, b, c) -> str:
+    fn = functools.partial(model.split_select, n_bins=b)
+    args = model.split_select_abstract(m, b, c)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def lower_label_split(m) -> str:
+    import jax.numpy as jnp
+
+    args = (
+        jax.ShapeDtypeStruct((m,), jnp.float32),
+        jax.ShapeDtypeStruct((m,), jnp.float32),
+    )
+    return to_hlo_text(jax.jit(model.label_split_select).lower(*args))
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--small-only",
+        action="store_true",
+        help="lower only the smallest variant (fast CI path)",
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"version": 1, "artifacts": []}
+
+    variants = VARIANTS[:1] if args.small_only else VARIANTS
+    for v in variants:
+        name = f"split_select_m{v['m']}"
+        path = f"{name}.hlo.txt"
+        text = lower_split_select(v["m"], v["b"], v["c"])
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            dict(name=name, path=path, m=v["m"], b=v["b"], c=v["c"])
+        )
+        print(f"lowered {name}: {len(text)} chars")
+
+    sse_variants = SSE_VARIANTS[:1] if args.small_only else SSE_VARIANTS
+    for v in sse_variants:
+        name = f"label_split_m{v['m']}"
+        path = f"{name}.hlo.txt"
+        text = lower_label_split(v["m"])
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        # b/c are 0 for the scan artifacts (single-vector kernel).
+        manifest["artifacts"].append(dict(name=name, path=path, m=v["m"], b=0, c=0))
+        print(f"lowered {name}: {len(text)} chars")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out_dir}/manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels for the Superfast Selection hot-spot.
+
+- ``hist``: label histogram over binned feature values (MXU-friendly
+  one-hot matmul formulation, tiled over examples).
+- ``splitscore``: prefix-sum + simplified-information-gain scores for all
+  binary split candidates (paper Algorithm 3 / 4 on a binned domain).
+- ``ssescan``: regression label split (paper Algorithm 6) as a prefix scan.
+- ``ref``: pure-jnp oracle implementations used by pytest.
+
+All kernels run with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); on real TPU hardware the same BlockSpecs tile VMEM.
+"""
+
+from . import hist, ref, splitscore, ssescan  # noqa: F401

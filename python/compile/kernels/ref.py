@@ -1,0 +1,85 @@
+"""Pure-jnp oracle for every kernel: the correctness reference.
+
+These mirror the Rust native engine's semantics on the binned domain:
+``rest`` carries the per-class categorical+missing counts, which join the
+negative side of every numeric candidate (missing values "left
+untouched"). Scores are the paper's simplified information gain
+(Algorithm 3), natural log. Empty-side candidates score ``NEG_SENTINEL``.
+"""
+
+import jax.numpy as jnp
+
+NEG_SENTINEL = -1e30
+
+
+def hist_ref(bin_ids, labels, mask, n_bins, n_classes):
+    """Masked 2-D histogram: counts[b, c] = Σ_i mask·[bin=b]·[label=c]."""
+    onehot_b = (bin_ids[:, None] == jnp.arange(n_bins)[None, :]).astype(jnp.float32)
+    onehot_c = (labels[:, None] == jnp.arange(n_classes)[None, :]).astype(jnp.float32)
+    return (onehot_b * mask[:, None].astype(jnp.float32)).T @ onehot_c
+
+
+def info_gain_rows(pos, neg):
+    """Paper Algorithm 3 row-wise: pos/neg are [..., C] count matrices.
+
+    Returns the simplified information gain (−H(T|a) up to the constant
+    H(T)); invalid (empty-side) rows get NEG_SENTINEL.
+    """
+    tot_p = pos.sum(-1)
+    tot_n = neg.sum(-1)
+    tot = tot_p + tot_n
+
+    def side(x, tx):
+        tx_safe = jnp.maximum(tx, 1.0)[..., None]
+        term = x * jnp.log(jnp.maximum(x, 1e-30) / tx_safe)
+        return jnp.where(x > 0, term, 0.0).sum(-1)
+
+    ret = (side(pos, tot_p) + side(neg, tot_n)) / jnp.maximum(tot, 1.0)
+    valid = (tot_p > 0) & (tot_n > 0)
+    return jnp.where(valid, ret, NEG_SENTINEL)
+
+
+def split_scores_ref(counts, rest):
+    """Score all ``≤ bin`` and ``> bin`` candidates from a [B, C] histogram.
+
+    ``rest[c]`` = categorical + missing count of class c (always negative
+    side). Returns (le[B], gt[B]).
+    """
+    prefix = jnp.cumsum(counts, axis=0)  # [B, C] — cnt(bin ≤ b)
+    tot = prefix[-1]  # [C]
+    le_pos = prefix
+    le_neg = (tot - prefix) + rest[None, :]
+    gt_pos = tot - prefix
+    gt_neg = prefix + rest[None, :]
+    return info_gain_rows(le_pos, le_neg), info_gain_rows(gt_pos, gt_neg)
+
+
+def split_select_ref(bin_ids, labels, mask, rest, n_bins):
+    """End-to-end oracle: histogram then scores."""
+    counts = hist_ref(bin_ids, labels, mask, n_bins, rest.shape[0])
+    return split_scores_ref(counts, rest)
+
+
+def sse_scan_ref(values, mask):
+    """Regression label-split scan (paper Algorithm 6) on sorted values.
+
+    ``values`` must be ascending within the masked prefix (mask is 1 for
+    the first n entries, 0 for padding). Returns score[i] for the split
+    ``label ≤ values[i]``: sum²/n on both sides (higher = lower SSE);
+    positions that are not run boundaries (values[i+1] == values[i]),
+    padding, and the last valid position score NEG_SENTINEL.
+    """
+    m = values.shape[0]
+    v = values * mask
+    cum_n = jnp.cumsum(mask)
+    cum_s = jnp.cumsum(v)
+    tot_n = cum_n[-1]
+    tot_s = cum_s[-1]
+    n_neg = tot_n - cum_n
+    s_neg = tot_s - cum_s
+    score = cum_s**2 / jnp.maximum(cum_n, 1.0) + s_neg**2 / jnp.maximum(n_neg, 1.0)
+    next_vals = jnp.concatenate([values[1:], values[-1:]])
+    next_mask = jnp.concatenate([mask[1:], jnp.zeros((1,), mask.dtype)])
+    is_boundary = (next_vals != values) | (next_mask == 0)
+    valid = (mask > 0) & is_boundary & (n_neg > 0) & (cum_n > 0)
+    return jnp.where(valid, score, NEG_SENTINEL)

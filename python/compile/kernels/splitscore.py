@@ -1,0 +1,69 @@
+"""Prefix-sum + information-gain scoring of all binned split candidates.
+
+The Pallas form of paper Algorithm 4 lines 10–28 on the binned domain:
+given the [B, C] histogram from ``hist`` and the per-class
+categorical+missing counts ``rest[C]`` (always the negative side — the
+hybrid/missing semantics), compute for every bin b the simplified
+information gain of ``≤ edge(b)`` and ``> edge(b)``.
+
+Single-block kernel: B·C f32 = 32 KiB lives entirely in VMEM; the scan is
+``jnp.cumsum`` along B; each candidate's heuristic is the O(C) reduction
+of Algorithm 3, vectorized across all B candidates at once. Empty-side
+candidates are marked with ``NEG_SENTINEL`` so the Rust consumer skips
+them.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_SENTINEL
+
+
+def _info_gain(pos, neg):
+    """Vectorized Algorithm 3 over rows of [B, C] count matrices."""
+    tot_p = pos.sum(-1)
+    tot_n = neg.sum(-1)
+    tot = tot_p + tot_n
+
+    def side(x, tx):
+        tx_safe = jnp.maximum(tx, 1.0)[..., None]
+        term = x * jnp.log(jnp.maximum(x, 1e-30) / tx_safe)
+        return jnp.where(x > 0, term, 0.0).sum(-1)
+
+    ret = (side(pos, tot_p) + side(neg, tot_n)) / jnp.maximum(tot, 1.0)
+    valid = (tot_p > 0) & (tot_n > 0)
+    return jnp.where(valid, ret, NEG_SENTINEL)
+
+
+def _score_kernel(counts_ref, rest_ref, le_ref, gt_ref):
+    counts = counts_ref[...]  # [B, C]
+    rest = rest_ref[...]  # [C]
+    prefix = jnp.cumsum(counts, axis=0)  # cnt(bin ≤ b) — the prefix sum
+    tot = prefix[-1]  # [C] numeric totals
+    le_ref[...] = _info_gain(prefix, (tot - prefix) + rest[None, :])
+    gt_ref[...] = _info_gain(tot - prefix, prefix + rest[None, :])
+
+
+@jax.jit
+def split_scores(counts, rest):
+    """(le[B], gt[B]) information-gain scores from a [B, C] histogram."""
+    n_bins, n_classes = counts.shape
+    return pl.pallas_call(
+        _score_kernel,
+        in_specs=[
+            pl.BlockSpec((n_bins, n_classes), lambda: (0, 0)),
+            pl.BlockSpec((n_classes,), lambda: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_bins,), lambda: (0,)),
+            pl.BlockSpec((n_bins,), lambda: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_bins,), jnp.float32),
+            jax.ShapeDtypeStruct((n_bins,), jnp.float32),
+        ],
+        interpret=True,
+    )(counts, rest)

@@ -1,0 +1,52 @@
+"""Regression label split (paper Algorithm 6) as a Pallas prefix scan.
+
+Input: the node's label values sorted ascending (padded; ``mask`` marks
+real entries). Output: for every position i, the SSE criterion of the
+split ``label ≤ values[i]`` in prefix-sum form
+``Σ_≤² / n_≤ + Σ_>² / n_>`` (maximizing it minimizes SSE, Eq. 3 with the
+constant dropped). Non-boundary positions (inside a run of equal labels),
+padding, and the last valid position score ``NEG_SENTINEL``.
+
+Single-block kernel: an M-vector plus two cumsums — trivially
+VMEM-resident for the exported variants.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_SENTINEL
+
+
+def _sse_kernel(values_ref, mask_ref, out_ref):
+    values = values_ref[...]
+    mask = mask_ref[...]
+    v = values * mask
+    cum_n = jnp.cumsum(mask)
+    cum_s = jnp.cumsum(v)
+    tot_n = cum_n[-1]
+    tot_s = cum_s[-1]
+    n_neg = tot_n - cum_n
+    s_neg = tot_s - cum_s
+    score = cum_s**2 / jnp.maximum(cum_n, 1.0) + s_neg**2 / jnp.maximum(n_neg, 1.0)
+    next_vals = jnp.concatenate([values[1:], values[-1:]])
+    next_mask = jnp.concatenate([mask[1:], jnp.zeros((1,), mask.dtype)])
+    is_boundary = (next_vals != values) | (next_mask == 0)
+    valid = (mask > 0) & is_boundary & (n_neg > 0) & (cum_n > 0)
+    out_ref[...] = jnp.where(valid, score, NEG_SENTINEL)
+
+
+@jax.jit
+def sse_scan(values, mask):
+    """score[i] of the label split ``≤ values[i]`` (see module docstring)."""
+    m = values.shape[0]
+    return pl.pallas_call(
+        _sse_kernel,
+        in_specs=[
+            pl.BlockSpec((m,), lambda: (0,)),
+            pl.BlockSpec((m,), lambda: (0,)),
+        ],
+        out_specs=pl.BlockSpec((m,), lambda: (0,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(values, mask)

@@ -1,0 +1,56 @@
+"""Layer-2 JAX model: the split-selection compute graph.
+
+Composes the L1 kernels into the function the Rust coordinator calls per
+(node, feature): histogram → prefix-sum scores. Lowered once by ``aot.py``
+into a single fused HLO module per (M, B, C) variant; no host round-trips
+inside one selection call.
+"""
+
+import functools
+
+import jax
+
+from .kernels import hist as hist_kernel
+from .kernels import splitscore, ssescan
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins",))
+def split_select(bin_ids, labels, mask, rest, *, n_bins):
+    """Score every binned numeric split candidate of one feature.
+
+    Args:
+      bin_ids: i32[M] quantile-bin id per (sorted) numeric row; padded.
+      labels:  i32[M] class id per row; padding rows are zeros.
+      mask:    f32[M] 1.0 for real rows, 0.0 for padding.
+      rest:    f32[C] per-class categorical+missing counts (the rows that
+               evaluate false under every numeric predicate).
+      n_bins:  static B.
+
+    Returns:
+      (le, gt): f32[B] simplified information gain of ``≤ edge(b)`` and
+      ``> edge(b)`` for every bin b; empty-side candidates are
+      NEG_SENTINEL.
+    """
+    n_classes = rest.shape[0]
+    counts = hist_kernel.hist(
+        bin_ids, labels, mask, n_bins=n_bins, n_classes=n_classes
+    )
+    return splitscore.split_scores(counts, rest)
+
+
+@jax.jit
+def label_split_select(values, mask):
+    """Regression label-split scores (Algorithm 6) for sorted labels."""
+    return (ssescan.sse_scan(values, mask),)
+
+
+def split_select_abstract(m, n_bins, n_classes):
+    """ShapeDtypeStructs for lowering a (M, B, C) variant."""
+    import jax.numpy as jnp
+
+    return (
+        jax.ShapeDtypeStruct((m,), jnp.int32),
+        jax.ShapeDtypeStruct((m,), jnp.int32),
+        jax.ShapeDtypeStruct((m,), jnp.float32),
+        jax.ShapeDtypeStruct((n_classes,), jnp.float32),
+    )

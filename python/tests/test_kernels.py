@@ -1,0 +1,232 @@
+"""L1 correctness: every Pallas kernel (interpret) vs the pure-jnp oracle
+vs hand-rolled numpy. Hypothesis sweeps shapes and value ranges."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hist as hist_kernel
+from compile.kernels import ref, splitscore, ssescan
+
+TILE_M = hist_kernel.TILE_M
+
+
+def numpy_hist(bins, labels, mask, n_bins, n_classes):
+    out = np.zeros((n_bins, n_classes), np.float64)
+    for b, l, m in zip(bins, labels, mask):
+        out[b, l] += m
+    return out
+
+
+def make_inputs(seed, m, n_bins, n_classes, pad_frac=0.2):
+    rng = np.random.default_rng(seed)
+    bins = rng.integers(0, n_bins, m).astype(np.int32)
+    labels = rng.integers(0, n_classes, m).astype(np.int32)
+    n_valid = int(m * (1 - pad_frac))
+    mask = np.zeros(m, np.float32)
+    mask[:n_valid] = 1.0
+    return jnp.array(bins), jnp.array(labels), jnp.array(mask)
+
+
+class TestHist:
+    @pytest.mark.parametrize("n_bins,n_classes", [(4, 2), (16, 8), (256, 32)])
+    def test_matches_numpy(self, n_bins, n_classes):
+        bins, labels, mask = make_inputs(1, TILE_M * 2, n_bins, n_classes)
+        got = hist_kernel.hist(bins, labels, mask, n_bins=n_bins, n_classes=n_classes)
+        want = numpy_hist(
+            np.asarray(bins), np.asarray(labels), np.asarray(mask), n_bins, n_classes
+        )
+        np.testing.assert_allclose(np.asarray(got), want, rtol=0, atol=0)
+
+    def test_matches_ref(self):
+        bins, labels, mask = make_inputs(2, TILE_M, 32, 8)
+        got = hist_kernel.hist(bins, labels, mask, n_bins=32, n_classes=8)
+        want = ref.hist_ref(bins, labels, mask, 32, 8)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+    def test_mask_zero_rows_do_not_count(self):
+        bins, labels, mask = make_inputs(3, TILE_M, 8, 3, pad_frac=0.5)
+        got = hist_kernel.hist(bins, labels, mask, n_bins=8, n_classes=3)
+        assert float(np.asarray(got).sum()) == float(np.asarray(mask).sum())
+
+    def test_multi_tile_accumulation(self):
+        # Grid > 1: the constant-index output block must accumulate.
+        bins, labels, mask = make_inputs(4, TILE_M * 4, 8, 4, pad_frac=0.0)
+        got = hist_kernel.hist(bins, labels, mask, n_bins=8, n_classes=4)
+        assert float(np.asarray(got).sum()) == TILE_M * 4
+
+    def test_rejects_unaligned_m(self):
+        bins, labels, mask = make_inputs(5, 100, 4, 2)
+        with pytest.raises(AssertionError):
+            hist_kernel.hist(bins, labels, mask, n_bins=4, n_classes=2)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 10_000),
+        n_bins=st.integers(2, 64),
+        n_classes=st.integers(2, 16),
+        tiles=st.integers(1, 3),
+    )
+    def test_hypothesis_sweep(self, seed, n_bins, n_classes, tiles):
+        bins, labels, mask = make_inputs(seed, TILE_M * tiles, n_bins, n_classes)
+        got = hist_kernel.hist(bins, labels, mask, n_bins=n_bins, n_classes=n_classes)
+        want = numpy_hist(
+            np.asarray(bins), np.asarray(labels), np.asarray(mask), n_bins, n_classes
+        )
+        np.testing.assert_allclose(np.asarray(got), want)
+
+
+def numpy_split_scores(counts, rest):
+    """Independent numpy re-derivation of Algorithm 3 over all candidates."""
+    b, c = counts.shape
+    prefix = np.cumsum(counts, axis=0)
+    tot = prefix[-1]
+    le = np.full(b, ref.NEG_SENTINEL)
+    gt = np.full(b, ref.NEG_SENTINEL)
+
+    def ig(pos, neg):
+        tp, tn = pos.sum(), neg.sum()
+        if tp == 0 or tn == 0:
+            return ref.NEG_SENTINEL
+        t = tp + tn
+        r = 0.0
+        for x in pos:
+            if x > 0:
+                r += x / t * np.log(x / tp)
+        for x in neg:
+            if x > 0:
+                r += x / t * np.log(x / tn)
+        return r
+
+    for i in range(b):
+        le[i] = ig(prefix[i], tot - prefix[i] + rest)
+        gt[i] = ig(tot - prefix[i], prefix[i] + rest)
+    return le, gt
+
+
+class TestSplitScores:
+    def test_matches_numpy(self):
+        rng = np.random.default_rng(7)
+        counts = jnp.array(rng.integers(0, 50, (16, 4)).astype(np.float32))
+        rest = jnp.array(rng.integers(0, 20, 4).astype(np.float32))
+        le, gt = splitscore.split_scores(counts, rest)
+        le_np, gt_np = numpy_split_scores(np.asarray(counts), np.asarray(rest))
+        np.testing.assert_allclose(np.asarray(le), le_np, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(gt), gt_np, rtol=1e-5)
+
+    def test_matches_ref(self):
+        rng = np.random.default_rng(8)
+        counts = jnp.array(rng.integers(0, 9, (256, 32)).astype(np.float32))
+        rest = jnp.array(rng.integers(0, 5, 32).astype(np.float32))
+        le, gt = splitscore.split_scores(counts, rest)
+        le_r, gt_r = ref.split_scores_ref(counts, rest)
+        np.testing.assert_allclose(np.asarray(le), np.asarray(le_r), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(gt), np.asarray(gt_r), rtol=1e-6)
+
+    def test_paper_worked_example(self):
+        """Paper Tables 1–4 on the binned domain: numeric values 1..5 as
+        bins 0..4 with classes a,b,c and the categorical counts as rest;
+        the best candidate must be `≤ 2` (bin 1) at ≈ −0.87."""
+        # cnt[bin, class]: a: 3,4,4,5 → bins 2,3,3,4; b: 1,1,2,2,3; c: 3,4,4,5,5
+        counts = np.zeros((5, 3), np.float32)
+        for v in [3, 4, 4, 5]:
+            counts[v - 1, 0] += 1
+        for v in [1, 1, 2, 2, 3]:
+            counts[v - 1, 1] += 1
+        for v in [3, 4, 4, 5, 5]:
+            counts[v - 1, 2] += 1
+        rest = jnp.array([3.0, 3.0, 2.0], jnp.float32)  # x,x,y / y,y,z / z,z
+        le, gt = splitscore.split_scores(jnp.array(counts), rest)
+        le = np.asarray(le)
+        best_bin = int(le.argmax())
+        assert best_bin == 1  # value 2
+        assert abs(le[best_bin] - (-0.87)) < 0.01
+        # Other pinned cells (≤1, ≤4; >1):
+        assert abs(le[0] - (-0.99)) < 0.01
+        assert abs(le[3] - (-1.08)) < 0.01
+        assert abs(np.asarray(gt)[0] - (-1.06)) < 0.01
+
+    def test_empty_side_sentinel(self):
+        counts = jnp.zeros((8, 4), jnp.float32)
+        rest = jnp.zeros((4,), jnp.float32)
+        le, gt = splitscore.split_scores(counts, rest)
+        assert np.all(np.asarray(le) <= ref.NEG_SENTINEL / 2)
+        assert np.all(np.asarray(gt) <= ref.NEG_SENTINEL / 2)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 10_000),
+        n_bins=st.integers(2, 64),
+        n_classes=st.integers(2, 12),
+    )
+    def test_hypothesis_sweep(self, seed, n_bins, n_classes):
+        rng = np.random.default_rng(seed)
+        counts = rng.integers(0, 30, (n_bins, n_classes)).astype(np.float32)
+        rest = rng.integers(0, 10, n_classes).astype(np.float32)
+        le, gt = splitscore.split_scores(jnp.array(counts), jnp.array(rest))
+        le_np, gt_np = numpy_split_scores(counts, rest)
+        np.testing.assert_allclose(np.asarray(le), le_np, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(gt), gt_np, rtol=1e-4, atol=1e-5)
+
+
+class TestSseScan:
+    def numpy_sse(self, values, mask):
+        n = int(mask.sum())
+        vals = values[:n]
+        out = np.full(len(values), ref.NEG_SENTINEL)
+        tot = vals.sum()
+        for i in range(n - 1):
+            if vals[i + 1] == vals[i]:
+                continue
+            lo = vals[: i + 1]
+            hi = vals[i + 1 :]
+            out[i] = lo.sum() ** 2 / len(lo) + hi.sum() ** 2 / len(hi)
+        return out
+
+    def test_matches_numpy(self):
+        rng = np.random.default_rng(11)
+        m = 512
+        values = np.sort(rng.normal(size=m).astype(np.float32))
+        mask = np.ones(m, np.float32)
+        mask[400:] = 0.0
+        values[400:] = values[399]  # padding mirrors aot padding
+        got = np.asarray(ssescan.sse_scan(jnp.array(values), jnp.array(mask)))
+        want = self.numpy_sse(values, mask)
+        valid = want > ref.NEG_SENTINEL / 2
+        np.testing.assert_allclose(got[valid], want[valid], rtol=1e-4)
+        assert np.all(got[~valid] <= ref.NEG_SENTINEL / 2)
+
+    def test_matches_ref(self):
+        rng = np.random.default_rng(12)
+        values = jnp.sort(jnp.array(rng.normal(size=256).astype(np.float32)))
+        mask = jnp.ones((256,), jnp.float32)
+        got = ssescan.sse_scan(values, mask)
+        want = ref.sse_scan_ref(values, mask)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+    def test_bimodal_argmax_at_gap(self):
+        values = jnp.array([1.0, 1.0, 1.0, 1.0, 9.0, 9.0, 9.0, 9.0], jnp.float32)
+        mask = jnp.ones((8,), jnp.float32)
+        s = np.asarray(ssescan.sse_scan(values, mask))
+        assert int(s.argmax()) == 3  # boundary of the low cluster
+
+    def test_constant_labels_all_sentinel(self):
+        values = jnp.full((16,), 5.0, jnp.float32)
+        mask = jnp.ones((16,), jnp.float32)
+        s = np.asarray(ssescan.sse_scan(values, mask))
+        assert np.all(s <= ref.NEG_SENTINEL / 2)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000), n=st.integers(2, 200))
+    def test_hypothesis_sweep(self, seed, n):
+        rng = np.random.default_rng(seed)
+        m = 256
+        vals = np.sort(rng.integers(0, 20, n).astype(np.float32))
+        values = np.concatenate([vals, np.full(m - n, vals[-1], np.float32)])
+        mask = np.concatenate([np.ones(n, np.float32), np.zeros(m - n, np.float32)])
+        got = np.asarray(ssescan.sse_scan(jnp.array(values), jnp.array(mask)))
+        want = self.numpy_sse(values, mask)
+        valid = want > ref.NEG_SENTINEL / 2
+        np.testing.assert_allclose(got[valid], want[valid], rtol=1e-3)
+        assert np.all(got[~valid] <= ref.NEG_SENTINEL / 2)

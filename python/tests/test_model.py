@@ -1,0 +1,97 @@
+"""L2: the composed split_select graph and its AOT lowering."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import aot, model
+from compile.kernels import ref
+from compile.kernels.hist import TILE_M
+
+
+def make_case(seed, m, n_bins, n_classes, valid_frac=0.8):
+    rng = np.random.default_rng(seed)
+    n_valid = int(m * valid_frac)
+    bins = np.zeros(m, np.int32)
+    labels = np.zeros(m, np.int32)
+    bins[:n_valid] = np.sort(rng.integers(0, n_bins, n_valid))  # sorted, like rust
+    labels[:n_valid] = rng.integers(0, n_classes, n_valid)
+    mask = np.zeros(m, np.float32)
+    mask[:n_valid] = 1.0
+    rest = rng.integers(0, 6, n_classes).astype(np.float32)
+    return (
+        jnp.array(bins),
+        jnp.array(labels),
+        jnp.array(mask),
+        jnp.array(rest),
+    )
+
+
+class TestSplitSelect:
+    def test_matches_ref_end_to_end(self):
+        bins, labels, mask, rest = make_case(1, TILE_M * 2, 256, 32)
+        le, gt = model.split_select(bins, labels, mask, rest, n_bins=256)
+        le_r, gt_r = ref.split_select_ref(bins, labels, mask, rest, 256)
+        np.testing.assert_allclose(np.asarray(le), np.asarray(le_r), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(gt), np.asarray(gt_r), rtol=1e-5)
+
+    def test_argmax_identifies_planted_split(self):
+        # Plant a perfect split at bin 3: classes 0 below, 1 above.
+        m = TILE_M
+        bins = np.sort(np.random.default_rng(2).integers(0, 8, m)).astype(np.int32)
+        labels = (bins > 3).astype(np.int32)
+        mask = np.ones(m, np.float32)
+        rest = np.zeros(2, np.float32)
+        le, _ = model.split_select(
+            jnp.array(bins), jnp.array(labels), jnp.array(mask), jnp.array(rest), n_bins=8
+        )
+        assert int(np.asarray(le).argmax()) == 3
+        assert abs(float(np.asarray(le)[3])) < 1e-6  # pure split → ig 0
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 1000), n_classes=st.integers(2, 8))
+    def test_hypothesis_consistency(self, seed, n_classes):
+        bins, labels, mask, rest = make_case(seed, TILE_M, 16, n_classes)
+        le, gt = model.split_select(bins, labels, mask, rest, n_bins=16)
+        le_r, gt_r = ref.split_select_ref(bins, labels, mask, rest, 16)
+        np.testing.assert_allclose(np.asarray(le), np.asarray(le_r), rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(gt), np.asarray(gt_r), rtol=1e-4)
+
+
+class TestAot:
+    def test_lowered_hlo_text_is_parseable_hlo(self):
+        text = aot.lower_split_select(TILE_M, 16, 4)
+        assert "HloModule" in text
+        # One fused module: entry computation consumes 4 params.
+        assert "ENTRY" in text
+        for p in range(4):
+            assert f"parameter({p})" in text
+
+    def test_label_split_lowering(self):
+        text = aot.lower_label_split(TILE_M)
+        assert "HloModule" in text
+        assert "parameter(1)" in text
+
+    def test_variants_are_tile_aligned(self):
+        for v in aot.VARIANTS:
+            assert v["m"] % TILE_M == 0
+            assert v["b"] <= v["m"]
+
+    def test_manifest_written(self, tmp_path):
+        import subprocess, sys, json, os
+
+        out = tmp_path / "arts"
+        env = dict(os.environ)
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--small-only"],
+            check=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            env=env,
+        )
+        manifest = json.loads((out / "manifest.json").read_text())
+        assert manifest["version"] == 1
+        names = {a["name"] for a in manifest["artifacts"]}
+        assert "split_select_m4096" in names
+        for a in manifest["artifacts"]:
+            assert (out / a["path"]).exists()

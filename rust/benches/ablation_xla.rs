@@ -1,0 +1,70 @@
+//! Ablation: native Superfast engine vs the XLA (AOT JAX/Pallas via PJRT)
+//! backend, per node size. Requires `make artifacts`; exits 0 with a
+//! notice otherwise.
+//!
+//! On CPU the XLA path pays a fixed per-call PJRT cost, so the native
+//! engine wins; the bench quantifies that overhead and verifies score
+//! agreement (exact at ≤256 distinct values). On TPU the same artifacts
+//! turn the histogram into MXU matmuls (DESIGN.md §8).
+//!
+//!   make artifacts && cargo bench --bench ablation_xla
+
+use udt::bench_support::{bench, BenchConfig, Table};
+use udt::data::synth::{generate_classification, SynthSpec};
+use udt::runtime::xla_split::{XlaSelection, XlaSelectionConfig};
+use udt::selection::heuristic::{ClassCriterion, Criterion};
+use udt::selection::superfast::{best_split_on_feat, FeatureView, LabelsView, Scratch};
+
+fn main() {
+    let Some(xla) = XlaSelection::load_default(XlaSelectionConfig { min_rows: 1 }) else {
+        eprintln!("ablation_xla: artifacts not built (run `make artifacts`) — skipping");
+        return;
+    };
+    let cfg = BenchConfig::from_env();
+    let mut table = Table::new(&[
+        "node rows", "native(ms)", "xla(ms)", "xla/native", "Δscore",
+    ]);
+
+    for rows in [1_000usize, 4_000, 16_000, 64_000, 250_000] {
+        let rows = ((rows as f64 * cfg.scale) as usize).max(500);
+        let mut spec = SynthSpec::classification("xab", rows, 1, 2);
+        spec.numeric_cardinality = 200; // exact binning
+        spec.cat_frac = 0.0;
+        spec.hybrid_frac = 0.0;
+        spec.missing_frac = 0.0;
+        let ds = generate_classification(&spec, 42);
+        let col = &ds.columns[0];
+        let row_ids: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let sorted = col.sorted_numeric();
+        let view = FeatureView::new(0, col, &row_ids, &sorted.0, &sorted.1);
+        let labels = LabelsView::from_labels(&ds.labels);
+        let crit = Criterion::Class(ClassCriterion::InfoGain);
+
+        let m_native = bench("native", &cfg, || {
+            let _ = best_split_on_feat(&view, &labels, crit);
+        });
+        let mut scratch = Scratch::new();
+        let m_xla = bench("xla", &cfg, || {
+            let _ = xla.best_split_on_feat(&view, &labels, crit, &mut scratch);
+        });
+
+        let native = best_split_on_feat(&view, &labels, crit).unwrap();
+        let accel = xla
+            .best_split_on_feat(&view, &labels, crit, &mut scratch)
+            .unwrap();
+        let delta = (native.score - accel.score).abs();
+        assert!(delta < 1e-4, "score mismatch {delta}");
+
+        table.row(vec![
+            rows.to_string(),
+            format!("{:.3}", m_native.mean_ms()),
+            format!("{:.3}", m_xla.mean_ms()),
+            format!("{:.1}x", m_xla.mean_ms() / m_native.mean_ms()),
+            format!("{delta:.2e}"),
+        ]);
+        eprintln!("done rows={rows}");
+    }
+
+    println!("\n== Ablation: native vs XLA selection backend (CPU PJRT) ==");
+    println!("{}", table.render());
+}

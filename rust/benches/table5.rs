@@ -1,0 +1,50 @@
+//! Paper Table 5 + its figure: generic vs Superfast Selection on a single
+//! feature of a credit-card-fraud-shaped dataset, sizes 10K–100K.
+//!
+//! Paper reference series (ms, on an M2 MacBook Air, C++):
+//!   size:      10K 20K 30K 40K  50K  60K  70K  80K   90K  100K
+//!   generic:   1.8K 6.8K 15K 27K 42K 61K 83K 110K 142K 178K
+//!   superfast: 4    10   15  23  28  32  38  44   51   58
+//! The reproduction asserts the *shape*: superfast ~linear in M, generic
+//! ~quadratic-ish (M·N with N ∝ M), crossover immediate.
+//!
+//!   cargo bench --bench table5
+//!   UDT_BENCH_RUNS=10 cargo bench --bench table5   # paper-style 10 runs
+
+use udt::bench_support::{table5, BenchConfig};
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let sizes: Vec<usize> = table5::paper_sizes()
+        .into_iter()
+        .map(|s| ((s as f64 * cfg.scale) as usize).max(1000))
+        .collect();
+    eprintln!(
+        "table5: sizes {:?} ({} runs each; UDT_BENCH_SCALE={})",
+        sizes, cfg.runs, cfg.scale
+    );
+
+    let table = table5::run(&sizes, cfg.runs, 42);
+    println!("\n== Table 5: time (ms) of split selection on a single feature ==");
+    println!("{}", table.render());
+    println!("== Figure series (CSV) ==");
+    println!("{}", table.to_csv());
+
+    // Shape assertions (who wins, by what factor).
+    let first = table5::measure(sizes[0], cfg.runs, 42);
+    let last = table5::measure(*sizes.last().unwrap(), cfg.runs, 42);
+    assert!(first.agree && last.agree, "engines must agree");
+    assert!(
+        last.generic_ms / last.superfast_ms > 20.0,
+        "superfast should dominate at 100K (got {:.0}x)",
+        last.generic_ms / last.superfast_ms
+    );
+    // Generic grows superlinearly vs superfast's linear growth.
+    let generic_growth = last.generic_ms / first.generic_ms;
+    let superfast_growth = last.superfast_ms / first.superfast_ms;
+    assert!(
+        generic_growth > 2.0 * superfast_growth,
+        "generic growth {generic_growth:.1}x vs superfast {superfast_growth:.1}x"
+    );
+    eprintln!("table5: shape assertions passed");
+}

@@ -1,0 +1,73 @@
+//! Paper Table 6: UDT on the 19 classification datasets — full-tree
+//! nodes/depth/train-ms, tune-ms, test accuracy, tuned-tree
+//! nodes/depth/retrain-ms.
+//!
+//! Datasets are shape-matched synthetics (DESIGN.md §6). Default scale is
+//! 0.1× row counts so the full suite runs in minutes; set
+//! UDT_BENCH_SCALE=1.0 for paper-sized runs (kdd99_full at 4.9M rows
+//! needs several GB of RAM and is skipped above 2M rows unless
+//! UDT_BENCH_FULL=1).
+//!
+//!   cargo bench --bench table6
+
+use udt::bench_support::{BenchConfig, Table};
+use udt::coordinator::pipeline::{run_pipeline, Quality};
+use udt::data::synth::{generate_any, registry};
+use udt::tree::TrainConfig;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let scale = if cfg.scale == 1.0 && std::env::var("UDT_BENCH_SCALE").is_err() {
+        0.1
+    } else {
+        cfg.scale
+    };
+    let full = std::env::var("UDT_BENCH_FULL").is_ok();
+    eprintln!("table6: scale {scale} (UDT_BENCH_SCALE to change; UDT_BENCH_FULL=1 for kdd99_full)");
+
+    let mut table = Table::new(&[
+        "dataset", "rows", "feat", "cls", "nodes", "depth", "train(ms)", "tune(ms)",
+        "acc", "t.nodes", "t.depth", "t.train(ms)", "paper(train/tune/acc)",
+    ]);
+    for entry in registry::classification_registry() {
+        let spec = entry.spec.scaled(scale);
+        if spec.n_rows > 2_000_000 && !full {
+            eprintln!("skipping {} at {} rows (set UDT_BENCH_FULL=1)", spec.name, spec.n_rows);
+            continue;
+        }
+        let ds = generate_any(&spec, 42);
+        let train_cfg = TrainConfig {
+            n_threads: 0,
+            ..Default::default()
+        };
+        let rep = run_pipeline(&ds, &train_cfg, 1).expect("pipeline");
+        let acc = match rep.quality {
+            Quality::Accuracy(a) => a,
+            _ => unreachable!(),
+        };
+        table.row(vec![
+            rep.dataset.clone(),
+            rep.n_examples.to_string(),
+            rep.n_features.to_string(),
+            rep.n_labels.to_string(),
+            rep.full_nodes.to_string(),
+            rep.full_depth.to_string(),
+            format!("{:.0}", rep.full_train_ms),
+            format!("{:.1}", rep.tune_ms),
+            format!("{acc:.3}"),
+            rep.tuned_nodes.to_string(),
+            rep.tuned_depth.to_string(),
+            format!("{:.0}", rep.tuned_train_ms),
+            format!(
+                "{:.0}/{:.0}/{:.2}",
+                entry.paper_train_ms * scale, // linear first-order scaling
+                entry.paper_tune_ms * scale,
+                entry.paper_quality
+            ),
+        ]);
+        eprintln!("done {}", rep.dataset);
+    }
+    println!("\n== Table 6: UDT on classification datasets (scale {scale}) ==");
+    println!("{}", table.render());
+    println!("== CSV ==\n{}", table.to_csv());
+}

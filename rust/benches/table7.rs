@@ -1,0 +1,55 @@
+//! Paper Table 7: UDT on the 5 regression datasets — full-tree stats,
+//! tune time, test MAE/RMSE, tuned-tree stats.
+//!
+//!   cargo bench --bench table7        (0.25× scale by default)
+//!   UDT_BENCH_SCALE=1.0 cargo bench --bench table7
+
+use udt::bench_support::{BenchConfig, Table};
+use udt::coordinator::pipeline::{run_pipeline, Quality};
+use udt::data::synth::{generate_any, registry};
+use udt::tree::TrainConfig;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let scale = if std::env::var("UDT_BENCH_SCALE").is_err() {
+        0.25
+    } else {
+        cfg.scale
+    };
+    eprintln!("table7: scale {scale}");
+
+    let mut table = Table::new(&[
+        "dataset", "rows", "feat", "nodes", "depth", "train(ms)", "tune(ms)", "MAE",
+        "RMSE", "t.nodes", "t.depth", "t.train(ms)",
+    ]);
+    for entry in registry::regression_registry() {
+        let ds = generate_any(&entry.spec.scaled(scale), 42);
+        let train_cfg = TrainConfig {
+            n_threads: 0,
+            ..Default::default()
+        };
+        let rep = run_pipeline(&ds, &train_cfg, 1).expect("pipeline");
+        let (mae, rmse) = match rep.quality {
+            Quality::Regression { mae, rmse } => (mae, rmse),
+            _ => unreachable!(),
+        };
+        table.row(vec![
+            rep.dataset.clone(),
+            rep.n_examples.to_string(),
+            rep.n_features.to_string(),
+            rep.full_nodes.to_string(),
+            rep.full_depth.to_string(),
+            format!("{:.0}", rep.full_train_ms),
+            format!("{:.1}", rep.tune_ms),
+            format!("{mae:.3}"),
+            format!("{rmse:.3}"),
+            rep.tuned_nodes.to_string(),
+            rep.tuned_depth.to_string(),
+            format!("{:.0}", rep.tuned_train_ms),
+        ]);
+        eprintln!("done {}", rep.dataset);
+    }
+    println!("\n== Table 7: UDT on regression datasets (scale {scale}) ==");
+    println!("{}", table.render());
+    println!("== CSV ==\n{}", table.to_csv());
+}

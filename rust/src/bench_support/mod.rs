@@ -1,0 +1,248 @@
+//! Benchmark framework (the offline image ships no criterion): warmup,
+//! repeated timed runs, mean/stddev/min, and table/CSV renderers shared by
+//! every `rust/benches/*` target so each paper table regenerates with the
+//! same formatting.
+
+pub mod table5;
+
+use crate::util::timer::Timer;
+use std::time::Duration;
+
+/// Measurement of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub runs: Vec<f64>, // milliseconds
+}
+
+impl Measurement {
+    pub fn mean_ms(&self) -> f64 {
+        self.runs.iter().sum::<f64>() / self.runs.len().max(1) as f64
+    }
+
+    pub fn min_ms(&self) -> f64 {
+        self.runs.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn stddev_ms(&self) -> f64 {
+        let n = self.runs.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let mean = self.mean_ms();
+        let var = self
+            .runs
+            .iter()
+            .map(|x| (x - mean) * (x - mean))
+            .sum::<f64>()
+            / (n - 1) as f64;
+        var.sqrt()
+    }
+}
+
+/// Bench runner configuration (env-overridable for CI).
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup: usize,
+    pub runs: usize,
+    /// Global scale factor applied by workloads to the paper's dataset
+    /// sizes (UDT_BENCH_SCALE env; 1.0 = paper-sized).
+    pub scale: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: 1,
+            runs: 3,
+            scale: 1.0,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Read from environment: UDT_BENCH_RUNS, UDT_BENCH_WARMUP,
+    /// UDT_BENCH_SCALE.
+    pub fn from_env() -> Self {
+        let mut c = Self::default();
+        if let Ok(v) = std::env::var("UDT_BENCH_RUNS") {
+            if let Ok(n) = v.parse() {
+                c.runs = n;
+            }
+        }
+        if let Ok(v) = std::env::var("UDT_BENCH_WARMUP") {
+            if let Ok(n) = v.parse() {
+                c.warmup = n;
+            }
+        }
+        if let Ok(v) = std::env::var("UDT_BENCH_SCALE") {
+            if let Ok(s) = v.parse() {
+                c.scale = s;
+            }
+        }
+        c
+    }
+}
+
+/// Time `f` under the config; `f` runs `warmup + runs` times.
+pub fn bench(name: &str, config: &BenchConfig, mut f: impl FnMut()) -> Measurement {
+    for _ in 0..config.warmup {
+        f();
+    }
+    let mut runs = Vec::with_capacity(config.runs);
+    for _ in 0..config.runs {
+        let t = Timer::start();
+        f();
+        runs.push(t.ms());
+    }
+    Measurement {
+        name: name.to_string(),
+        runs,
+    }
+}
+
+/// Time a single invocation (for expensive end-to-end cases).
+pub fn bench_once(name: &str, f: impl FnOnce()) -> Measurement {
+    let t = Timer::start();
+    f();
+    Measurement {
+        name: name.to_string(),
+        runs: vec![t.ms()],
+    }
+}
+
+/// Fixed-width table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV rendering (for figure series).
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format milliseconds compactly for table cells.
+pub fn fmt_ms(ms: f64) -> String {
+    if ms < 1.0 {
+        format!("{ms:.3}")
+    } else if ms < 100.0 {
+        format!("{ms:.2}")
+    } else {
+        format!("{ms:.0}")
+    }
+}
+
+/// Sleep-free busy-wait used by self-tests.
+#[doc(hidden)]
+pub fn spin_for(d: Duration) {
+    let t = Timer::start();
+    while t.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_stats() {
+        let m = Measurement {
+            name: "x".into(),
+            runs: vec![1.0, 2.0, 3.0],
+        };
+        assert!((m.mean_ms() - 2.0).abs() < 1e-12);
+        assert_eq!(m.min_ms(), 1.0);
+        assert!((m.stddev_ms() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_runs_requested_times() {
+        let mut count = 0;
+        let cfg = BenchConfig {
+            warmup: 2,
+            runs: 5,
+            scale: 1.0,
+        };
+        let m = bench("t", &cfg, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(m.runs.len(), 5);
+    }
+
+    #[test]
+    fn bench_measures_time() {
+        let cfg = BenchConfig {
+            warmup: 0,
+            runs: 2,
+            scale: 1.0,
+        };
+        let m = bench("spin", &cfg, || spin_for(Duration::from_millis(3)));
+        assert!(m.min_ms() >= 2.5, "{:?}", m.runs);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "ms"]);
+        t.row(vec!["a".into(), "1.5".into()]);
+        t.row(vec!["long-name".into(), "10".into()]);
+        let s = t.render();
+        assert!(s.contains("long-name"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("name,ms\n"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,117 @@
+//! Shared workload for paper Table 5 / Figure 1: generic vs Superfast
+//! Selection on a single feature of a credit-card-fraud-shaped dataset
+//! (1M × 7, numeric-heavy, 2 classes). Used by the `table5` bench target
+//! and the `udt bench-selection` subcommand.
+
+use super::{fmt_ms, Table};
+use crate::data::synth::{generate_classification, registry, SynthSpec};
+use crate::selection::generic::best_split_on_feat_generic;
+use crate::selection::heuristic::{ClassCriterion, Criterion};
+use crate::selection::superfast::{best_split_on_feat, FeatureView, LabelsView};
+use crate::util::timer::Timer;
+
+/// One measured size point.
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub size: usize,
+    pub generic_ms: f64,
+    pub superfast_ms: f64,
+    pub agree: bool,
+}
+
+/// The workload spec (credit-card-fraud shape, numeric feature 0).
+fn workload_spec(n_rows: usize) -> SynthSpec {
+    let mut spec = registry::find("credit_card_fraud")
+        .expect("registered")
+        .spec
+        .clone();
+    spec.n_rows = n_rows;
+    // A purely numeric measured feature keeps the comparison about the
+    // selection algorithms (as in the paper's single-feature experiment);
+    // unique-value count N grows with M via the cardinality knob.
+    spec.cat_frac = 0.0;
+    spec.hybrid_frac = 0.0;
+    spec.missing_frac = 0.0;
+    spec.numeric_cardinality = (n_rows / 10).max(64);
+    spec
+}
+
+/// Measure one size (averaging `runs` runs of each engine).
+pub fn measure(size: usize, runs: usize, seed: u64) -> Point {
+    let ds = generate_classification(&workload_spec(size), seed);
+    let col = &ds.columns[0];
+    let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+    let sorted = col.sorted_numeric();
+    let view = FeatureView::new(0, col, &rows, &sorted.0, &sorted.1);
+    let labels = LabelsView::from_labels(&ds.labels);
+    let criterion = Criterion::Class(ClassCriterion::InfoGain);
+
+    let mut generic_ms = 0.0;
+    let mut superfast_ms = 0.0;
+    let mut fast_result = None;
+    let mut slow_result = None;
+    for _ in 0..runs.max(1) {
+        let t = Timer::start();
+        slow_result = best_split_on_feat_generic(&view, &labels, criterion);
+        generic_ms += t.ms();
+        let t = Timer::start();
+        fast_result = best_split_on_feat(&view, &labels, criterion);
+        superfast_ms += t.ms();
+    }
+    let agree = match (fast_result, slow_result) {
+        (Some(a), Some(b)) => (a.score - b.score).abs() < 1e-9 && a.op == b.op,
+        (None, None) => true,
+        _ => false,
+    };
+    Point {
+        size,
+        generic_ms: generic_ms / runs.max(1) as f64,
+        superfast_ms: superfast_ms / runs.max(1) as f64,
+        agree,
+    }
+}
+
+/// Run the full sweep and render the paper's table layout.
+pub fn run(sizes: &[usize], runs: usize, seed: u64) -> Table {
+    let mut table = Table::new(&["data size", "generic(ms)", "superfast(ms)", "speedup", "agree"]);
+    for &size in sizes {
+        let p = measure(size, runs, seed);
+        table.row(vec![
+            format!("{}K", size / 1000),
+            fmt_ms(p.generic_ms),
+            fmt_ms(p.superfast_ms),
+            format!("{:.0}x", p.generic_ms / p.superfast_ms.max(1e-9)),
+            p.agree.to_string(),
+        ]);
+    }
+    table
+}
+
+/// The paper's size grid (10K..100K).
+pub fn paper_sizes() -> Vec<usize> {
+    (1..=10).map(|i| i * 10_000).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engines_agree_and_superfast_wins_at_scale() {
+        let p = measure(20_000, 1, 7);
+        assert!(p.agree, "engines disagree");
+        assert!(
+            p.generic_ms > p.superfast_ms,
+            "generic {} !> superfast {}",
+            p.generic_ms,
+            p.superfast_ms
+        );
+    }
+
+    #[test]
+    fn table_has_row_per_size() {
+        let t = run(&[1000, 2000], 1, 3);
+        let rendered = t.render();
+        assert!(rendered.contains("1K") && rendered.contains("2K"));
+    }
+}

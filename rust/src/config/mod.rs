@@ -1,0 +1,5 @@
+//! Launcher-grade configuration: `key=value` files + CLI overrides.
+
+mod settings;
+
+pub use settings::{Config, ConfigError};

@@ -1,0 +1,174 @@
+//! Configuration model for the `udt` launcher.
+//!
+//! Sources, lowest to highest precedence:
+//! 1. built-in defaults,
+//! 2. a config file (`--config path`, simple `key = value` lines, `#`
+//!    comments, sections ignored),
+//! 3. CLI `--set key=value` overrides.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// Config error (unknown key, bad value, IO).
+#[derive(Debug)]
+pub struct ConfigError(pub String);
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// A flat typed view over string settings.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse `key = value` lines. `[sections]` become `section.key`.
+    pub fn from_str(text: &str) -> Result<Self, ConfigError> {
+        let mut cfg = Config::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                ConfigError(format!("line {}: expected `key = value`", lineno + 1))
+            })?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            cfg.values
+                .insert(key, v.trim().trim_matches('"').to_string());
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| ConfigError(format!("{}: {e}", path.as_ref().display())))?;
+        Self::from_str(&text)
+    }
+
+    /// Apply a `key=value` override (CLI `--set`).
+    pub fn set_kv(&mut self, kv: &str) -> Result<(), ConfigError> {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| ConfigError(format!("`--set {kv}`: expected key=value")))?;
+        self.values.insert(k.trim().to_string(), v.trim().to_string());
+        Ok(())
+    }
+
+    /// Merge `other` on top of `self`.
+    pub fn merge(&mut self, other: &Config) {
+        for (k, v) in &other.values {
+            self.values.insert(k.clone(), v.clone());
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, ConfigError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ConfigError(format!("{key}: `{v}` is not an integer"))),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, ConfigError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ConfigError(format!("{key}: `{v}` is not a number"))),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool, ConfigError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true" | "1" | "yes" | "on") => Ok(true),
+            Some("false" | "0" | "no" | "off") => Ok(false),
+            Some(v) => Err(ConfigError(format!("{key}: `{v}` is not a bool"))),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let cfg = Config::from_str(
+            "# top\nthreads = 4\n[train]\nmax_depth = 12 # inline\ncriterion = \"gini\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get_usize("threads", 0).unwrap(), 4);
+        assert_eq!(cfg.get_usize("train.max_depth", 0).unwrap(), 12);
+        assert_eq!(cfg.get("train.criterion"), Some("gini"));
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut cfg = Config::from_str("a = 1\n").unwrap();
+        cfg.set_kv("a=2").unwrap();
+        assert_eq!(cfg.get_usize("a", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn merge_precedence() {
+        let mut base = Config::from_str("a = 1\nb = 1\n").unwrap();
+        let over = Config::from_str("b = 2\n").unwrap();
+        base.merge(&over);
+        assert_eq!(cfg_get(&base, "a"), "1");
+        assert_eq!(cfg_get(&base, "b"), "2");
+    }
+
+    fn cfg_get(c: &Config, k: &str) -> String {
+        c.get(k).unwrap().to_string()
+    }
+
+    #[test]
+    fn typed_errors() {
+        let cfg = Config::from_str("x = notanum\nflag = maybe\n").unwrap();
+        assert!(cfg.get_usize("x", 0).is_err());
+        assert!(cfg.get_f64("x", 0.0).is_err());
+        assert!(cfg.get_bool("flag", false).is_err());
+        assert!(cfg.get_bool("missing", true).unwrap());
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(Config::from_str("just words\n").is_err());
+        assert!(Config::new().set_kv("noequals").is_err());
+    }
+}

@@ -1,0 +1,139 @@
+//! Evaluation metrics: accuracy, confusion matrix, per-class PR/F1,
+//! MAE/RMSE/R² for regression.
+
+use crate::data::dataset::Dataset;
+use crate::tree::{predict::predict_ds, Tree};
+
+/// Confusion matrix with derived statistics.
+#[derive(Debug, Clone)]
+pub struct Confusion {
+    pub n_classes: usize,
+    /// `counts[actual][predicted]`.
+    pub counts: Vec<Vec<u32>>,
+}
+
+impl Confusion {
+    pub fn from_tree(tree: &Tree, ds: &Dataset, rows: &[u32]) -> Self {
+        let c = ds.labels.n_classes();
+        let mut counts = vec![vec![0u32; c]; c];
+        for &r in rows {
+            let pred = predict_ds(tree, ds, r as usize, usize::MAX, 0).class() as usize;
+            let actual = ds.labels.class(r as usize) as usize;
+            counts[actual][pred] += 1;
+        }
+        Self {
+            n_classes: c,
+            counts,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts
+            .iter()
+            .flat_map(|r| r.iter())
+            .map(|&x| x as u64)
+            .sum()
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        let correct: u64 = (0..self.n_classes).map(|i| self.counts[i][i] as u64).sum();
+        correct as f64 / self.total().max(1) as f64
+    }
+
+    /// (precision, recall, f1) for one class; NaN-free (0 where undefined).
+    pub fn prf(&self, class: usize) -> (f64, f64, f64) {
+        let tp = self.counts[class][class] as f64;
+        let pred: f64 = (0..self.n_classes).map(|a| self.counts[a][class] as f64).sum();
+        let actual: f64 = self.counts[class].iter().map(|&x| x as f64).sum();
+        let precision = if pred > 0.0 { tp / pred } else { 0.0 };
+        let recall = if actual > 0.0 { tp / actual } else { 0.0 };
+        let f1 = if precision + recall > 0.0 {
+            2.0 * precision * recall / (precision + recall)
+        } else {
+            0.0
+        };
+        (precision, recall, f1)
+    }
+
+    /// Macro-averaged F1.
+    pub fn macro_f1(&self) -> f64 {
+        (0..self.n_classes).map(|c| self.prf(c).2).sum::<f64>() / self.n_classes.max(1) as f64
+    }
+}
+
+/// Regression report.
+#[derive(Debug, Clone, Copy)]
+pub struct RegReport {
+    pub mae: f64,
+    pub rmse: f64,
+    pub r2: f64,
+}
+
+impl RegReport {
+    pub fn from_tree(tree: &Tree, ds: &Dataset, rows: &[u32]) -> Self {
+        let n = rows.len() as f64;
+        let mean: f64 = rows
+            .iter()
+            .map(|&r| ds.labels.target(r as usize))
+            .sum::<f64>()
+            / n;
+        let (mut abs, mut sq, mut tot_sq) = (0.0, 0.0, 0.0);
+        for &r in rows {
+            let y = ds.labels.target(r as usize);
+            let pred = predict_ds(tree, ds, r as usize, usize::MAX, 0).value();
+            abs += (pred - y).abs();
+            sq += (pred - y) * (pred - y);
+            tot_sq += (y - mean) * (y - mean);
+        }
+        RegReport {
+            mae: abs / n,
+            rmse: (sq / n).sqrt(),
+            r2: if tot_sq > 0.0 { 1.0 - sq / tot_sq } else { 0.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_classification, generate_regression, SynthSpec};
+    use crate::tree::TrainConfig;
+
+    #[test]
+    fn confusion_consistent_with_accuracy() {
+        let spec = SynthSpec::classification("t", 800, 5, 3);
+        let ds = generate_classification(&spec, 41);
+        let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let cm = Confusion::from_tree(&tree, &ds, &rows);
+        assert_eq!(cm.total() as usize, ds.n_rows());
+        assert!((cm.accuracy() - tree.accuracy(&ds)).abs() < 1e-12);
+        assert!(cm.macro_f1() > 0.5);
+    }
+
+    #[test]
+    fn prf_bounds() {
+        let spec = SynthSpec::classification("t", 500, 4, 2);
+        let ds = generate_classification(&spec, 43);
+        let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let cm = Confusion::from_tree(&tree, &ds, &rows);
+        for c in 0..2 {
+            let (p, r, f1) = cm.prf(c);
+            for v in [p, r, f1] {
+                assert!((0.0..=1.0).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn regression_report_r2_near_one_on_train() {
+        let spec = SynthSpec::regression("r", 600, 5);
+        let ds = generate_regression(&spec, 47);
+        let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let rep = RegReport::from_tree(&tree, &ds, &rows);
+        assert!(rep.r2 > 0.9, "r2={}", rep.r2);
+        assert!(rep.mae <= rep.rmse + 1e-12);
+    }
+}

@@ -1,0 +1,7 @@
+//! Training/tuning orchestration: worker pools, the end-to-end pipeline
+//! (train → tune → prune → evaluate), metrics and the prediction server.
+
+pub mod metrics;
+pub mod parallel;
+pub mod pipeline;
+pub mod serve;

@@ -1,0 +1,133 @@
+//! Scoped worker-pool primitives built on `std::thread` (the offline
+//! image ships no rayon). Work is pulled from an atomic cursor so uneven
+//! item costs balance automatically; each worker owns a scratch value to
+//! keep hot loops allocation-free.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Map `f` over `items`, preserving order, with `n_threads` workers and a
+/// per-worker scratch created by `make_scratch`.
+pub fn parallel_map_scratch<T, R, S>(
+    items: Vec<T>,
+    n_threads: usize,
+    make_scratch: impl Fn() -> S + Sync,
+    f: impl Fn(T, &mut S) -> R + Sync,
+) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = n_threads.max(1).min(n);
+    if workers == 1 {
+        let mut scratch = make_scratch();
+        return items.into_iter().map(|it| f(it, &mut scratch)).collect();
+    }
+
+    // Items move behind Mutex slots; results are written back by index.
+    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                let mut scratch = make_scratch();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let item = slots[i].lock().unwrap().take().unwrap();
+                    let r = f(item, &mut scratch);
+                    *results[i].lock().unwrap() = Some(r);
+                }
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker completed"))
+        .collect()
+}
+
+/// Map without scratch.
+pub fn parallel_map<T, R>(
+    items: Vec<T>,
+    n_threads: usize,
+    f: impl Fn(T) -> R + Sync,
+) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+{
+    parallel_map_scratch(items, n_threads, || (), |t, _| f(t))
+}
+
+/// Effective worker count: `requested`, or all cores when 0.
+pub fn effective_threads(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let xs: Vec<usize> = (0..1000).collect();
+        let ys = parallel_map(xs.clone(), 8, |x| x * 2);
+        assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let ys = parallel_map(vec![1, 2, 3], 1, |x| x + 1);
+        assert_eq!(ys, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let ys: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| x);
+        assert!(ys.is_empty());
+    }
+
+    #[test]
+    fn scratch_is_per_worker() {
+        // Each worker's scratch counts its own items; the sum must equal n.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static TOTAL: AtomicUsize = AtomicUsize::new(0);
+        struct Counter(usize);
+        impl Drop for Counter {
+            fn drop(&mut self) {
+                TOTAL.fetch_add(self.0, Ordering::SeqCst);
+            }
+        }
+        let _ = parallel_map_scratch(
+            (0..100).collect::<Vec<_>>(),
+            4,
+            || Counter(0),
+            |_, c| {
+                c.0 += 1;
+            },
+        );
+        assert_eq!(TOTAL.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn effective_threads_zero_means_all() {
+        assert!(effective_threads(0) >= 1);
+        assert_eq!(effective_threads(3), 3);
+    }
+}

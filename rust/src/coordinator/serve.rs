@@ -1,0 +1,244 @@
+//! Batch prediction server.
+//!
+//! A small line-oriented TCP protocol (std::net + a worker pool; the
+//! offline image has no tokio): each request line is a JSON array of
+//! feature values (numbers, strings, or null for missing) — or an array
+//! of such arrays for a batch — and the response line is the JSON array
+//! of predictions. `"ping"` → `"pong"`, `"stats"` → counters,
+//! `"shutdown"` closes the listener.
+
+use crate::data::interner::Interner;
+use crate::data::value::Value;
+use crate::tree::{predict::predict_row, NodeLabel, Tree};
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Shared server state.
+pub struct Server {
+    tree: Tree,
+    interner: Interner,
+    class_names: Vec<String>,
+    requests: AtomicU64,
+    predictions: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+impl Server {
+    pub fn new(tree: Tree, interner: Interner, class_names: Vec<String>) -> Arc<Self> {
+        Arc::new(Self {
+            tree,
+            interner,
+            class_names,
+            requests: AtomicU64::new(0),
+            predictions: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+        })
+    }
+
+    /// Parse one JSON value into a feature cell.
+    fn cell(&self, j: &Json) -> Result<Value> {
+        Ok(match j {
+            Json::Null => Value::Missing,
+            Json::Num(x) => Value::Num(*x),
+            Json::Str(s) => match self.interner.get(s) {
+                Some(id) => Value::Cat(id),
+                // Unseen category: behaves like "equal to nothing" — the
+                // comparison semantics route it negative everywhere, which
+                // is exactly what Missing does.
+                None => Value::Missing,
+            },
+            other => return Err(anyhow!("bad cell {other:?}")),
+        })
+    }
+
+    fn predict_one(&self, arr: &[Json]) -> Result<Json> {
+        if arr.len() != self.tree.n_features {
+            return Err(anyhow!(
+                "expected {} features, got {}",
+                self.tree.n_features,
+                arr.len()
+            ));
+        }
+        let row: Result<Vec<Value>> = arr.iter().map(|j| self.cell(j)).collect();
+        let label = predict_row(&self.tree, &row?, usize::MAX, 0);
+        self.predictions.fetch_add(1, Ordering::Relaxed);
+        Ok(match label {
+            NodeLabel::Class(c) => match self.class_names.get(c as usize) {
+                Some(name) => Json::Str(name.clone()),
+                None => Json::Num(c as f64),
+            },
+            NodeLabel::Value(v) => Json::Num(v),
+        })
+    }
+
+    /// Handle one request line; returns the response line.
+    pub fn handle(&self, line: &str) -> String {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let trimmed = line.trim();
+        if trimmed == "\"ping\"" || trimmed == "ping" {
+            return "\"pong\"".to_string();
+        }
+        if trimmed == "\"stats\"" || trimmed == "stats" {
+            return Json::obj(vec![
+                (
+                    "requests",
+                    Json::Num(self.requests.load(Ordering::Relaxed) as f64),
+                ),
+                (
+                    "predictions",
+                    Json::Num(self.predictions.load(Ordering::Relaxed) as f64),
+                ),
+                ("nodes", Json::Num(self.tree.n_nodes() as f64)),
+            ])
+            .to_string();
+        }
+        if trimmed == "\"shutdown\"" || trimmed == "shutdown" {
+            self.shutdown.store(true, Ordering::SeqCst);
+            return "\"bye\"".to_string();
+        }
+        match self.handle_predict(trimmed) {
+            Ok(j) => j.to_string(),
+            Err(e) => Json::obj(vec![("error", Json::Str(e.to_string()))]).to_string(),
+        }
+    }
+
+    fn handle_predict(&self, line: &str) -> Result<Json> {
+        let parsed = Json::parse(line).map_err(|e| anyhow!("{e}"))?;
+        let arr = parsed
+            .as_arr()
+            .ok_or_else(|| anyhow!("request must be a JSON array"))?;
+        // Batch if the first element is itself an array.
+        if matches!(arr.first(), Some(Json::Arr(_))) {
+            let preds: Result<Vec<Json>> = arr
+                .iter()
+                .map(|row| {
+                    row.as_arr()
+                        .ok_or_else(|| anyhow!("batch rows must be arrays"))
+                        .and_then(|r| self.predict_one(r))
+                })
+                .collect();
+            Ok(Json::Arr(preds?))
+        } else {
+            self.predict_one(arr)
+        }
+    }
+
+    /// Serve until a `shutdown` request arrives. Returns the bound address
+    /// through `on_bound` (useful with port 0 in tests).
+    pub fn serve(self: &Arc<Self>, addr: &str, on_bound: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        on_bound(listener.local_addr()?);
+        listener.set_nonblocking(true)?;
+        std::thread::scope(|scope| -> Result<()> {
+            loop {
+                if self.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let server = Arc::clone(self);
+                        scope.spawn(move || {
+                            let _ = server.client_loop(stream);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+            }
+            Ok(())
+        })
+    }
+
+    fn client_loop(&self, stream: TcpStream) -> Result<()> {
+        let mut writer = stream.try_clone()?;
+        let reader = BufReader::new(stream);
+        for line in reader.lines() {
+            let line = line?;
+            if line.is_empty() {
+                continue;
+            }
+            let resp = self.handle(&line);
+            writer.write_all(resp.as_bytes())?;
+            writer.write_all(b"\n")?;
+            if self.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_classification, SynthSpec};
+    use crate::tree::TrainConfig;
+
+    fn server() -> Arc<Server> {
+        let mut spec = SynthSpec::classification("srv", 500, 4, 2);
+        spec.cat_frac = 0.3;
+        let ds = generate_classification(&spec, 61);
+        let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
+        Server::new(tree, ds.interner.clone(), ds.class_names.clone())
+    }
+
+    #[test]
+    fn ping_and_stats() {
+        let s = server();
+        assert_eq!(s.handle("\"ping\""), "\"pong\"");
+        let stats = Json::parse(&s.handle("stats")).unwrap();
+        assert!(stats.get("requests").unwrap().as_f64().unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn single_and_batch_predictions() {
+        let s = server();
+        let row = "[1.0, 2.0, 3.0, null]";
+        let r1 = s.handle(row);
+        assert!(r1.starts_with('"'), "{r1}");
+        let batch = format!("[{row}, {row}]");
+        let rb = Json::parse(&s.handle(&batch)).unwrap();
+        assert_eq!(rb.as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn wrong_arity_is_error() {
+        let s = server();
+        let resp = Json::parse(&s.handle("[1.0]")).unwrap();
+        assert!(resp.get("error").is_some());
+    }
+
+    #[test]
+    fn unseen_category_is_treated_as_missing() {
+        let s = server();
+        let r = s.handle("[\"never-seen-category\", 1.0, 1.0, 1.0]");
+        assert!(!r.contains("error"), "{r}");
+    }
+
+    #[test]
+    fn tcp_round_trip() {
+        let s = server();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let s2 = Arc::clone(&s);
+        let handle = std::thread::spawn(move || {
+            s2.serve("127.0.0.1:0", |addr| tx.send(addr).unwrap()).unwrap();
+        });
+        let addr = rx.recv().unwrap();
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(b"\"ping\"\n").unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "\"pong\"");
+        stream.write_all(b"\"shutdown\"\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        handle.join().unwrap();
+    }
+}

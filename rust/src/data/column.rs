@@ -1,0 +1,155 @@
+//! A single hybrid feature column with cached summary statistics.
+
+use super::value::Value;
+
+/// Columnar storage for one feature.
+#[derive(Debug, Clone, Default)]
+pub struct Column {
+    pub name: String,
+    pub values: Vec<Value>,
+}
+
+/// Cheap summary of a column's composition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ColumnStats {
+    pub n_num: usize,
+    pub n_cat: usize,
+    pub n_missing: usize,
+}
+
+impl Column {
+    pub fn new(name: impl Into<String>, values: Vec<Value>) -> Self {
+        Self {
+            name: name.into(),
+            values,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    #[inline]
+    pub fn get(&self, row: usize) -> Value {
+        self.values[row]
+    }
+
+    pub fn stats(&self) -> ColumnStats {
+        let mut s = ColumnStats::default();
+        for v in &self.values {
+            match v {
+                Value::Num(_) => s.n_num += 1,
+                Value::Cat(_) => s.n_cat += 1,
+                Value::Missing => s.n_missing += 1,
+            }
+        }
+        s
+    }
+
+    /// Row indices holding numeric values, sorted ascending by value
+    /// (ties broken by row id for determinism). This is the `X^A`
+    /// pre-sort of UDT Algorithm 5, done once per feature.
+    pub fn sorted_numeric_rows(&self) -> Vec<u32> {
+        self.sorted_numeric().0
+    }
+
+    /// `(rows, values)` of the numeric cells, sorted ascending by value
+    /// (ties by row id). The value array is carried through the builder's
+    /// sorted-list filtering so the selection hot loop reads values
+    /// sequentially instead of chasing 16-byte `Value` cells.
+    pub fn sorted_numeric(&self) -> (Vec<u32>, Vec<f64>) {
+        // Sort (value, row) pairs directly — sequential key access beats
+        // sorting indices with indirect loads.
+        let mut pairs: Vec<(f64, u32)> = self
+            .values
+            .iter()
+            .enumerate()
+            .filter_map(|(r, v)| v.as_num().map(|x| (x, r as u32)))
+            .collect();
+        pairs.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        let rows = pairs.iter().map(|p| p.1).collect();
+        let vals = pairs.iter().map(|p| p.0).collect();
+        (rows, vals)
+    }
+
+    /// `(rows, cat_ids)` of the categorical cells, grouped by ascending
+    /// category id (ties by row id). Maintained through the builder's
+    /// filtering so per-node per-category counts come from a sequential
+    /// group walk instead of a hash map over all node rows.
+    pub fn sorted_categorical(&self) -> (Vec<u32>, Vec<u32>) {
+        let mut pairs: Vec<(u32, u32)> = self
+            .values
+            .iter()
+            .enumerate()
+            .filter_map(|(r, v)| v.as_cat().map(|c| (c.0, r as u32)))
+            .collect();
+        pairs.sort_unstable();
+        let rows = pairs.iter().map(|p| p.1).collect();
+        let ids = pairs.iter().map(|p| p.0).collect();
+        (rows, ids)
+    }
+
+    /// Number of distinct numeric values (the paper's `N` on the numeric
+    /// side). `O(M log M)`.
+    pub fn unique_numeric_count(&self) -> usize {
+        let mut nums: Vec<f64> = self.values.iter().filter_map(|v| v.as_num()).collect();
+        nums.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        nums.dedup();
+        nums.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::interner::Interner;
+
+    fn col() -> (Column, Interner) {
+        let mut i = Interner::new();
+        let x = i.intern("x");
+        let c = Column::new(
+            "f",
+            vec![
+                Value::Num(3.0),
+                Value::Cat(x),
+                Value::Num(1.0),
+                Value::Missing,
+                Value::Num(1.0),
+                Value::Num(2.0),
+            ],
+        );
+        (c, i)
+    }
+
+    #[test]
+    fn stats_count_kinds() {
+        let (c, _) = col();
+        let s = c.stats();
+        assert_eq!(
+            s,
+            ColumnStats {
+                n_num: 4,
+                n_cat: 1,
+                n_missing: 1
+            }
+        );
+    }
+
+    #[test]
+    fn sorted_rows_ascending_stable() {
+        let (c, _) = col();
+        let idx = c.sorted_numeric_rows();
+        // values at rows: 2→1.0, 4→1.0, 5→2.0, 0→3.0
+        assert_eq!(idx, vec![2, 4, 5, 0]);
+    }
+
+    #[test]
+    fn unique_numeric() {
+        let (c, _) = col();
+        assert_eq!(c.unique_numeric_count(), 3);
+    }
+}

@@ -1,0 +1,314 @@
+//! CSV ingestion with hybrid type inference.
+//!
+//! Cells parse as numbers first and fall back to interned categoricals
+//! (`?`, `NA`, empty → missing) — the paper's no-pre-encoding rule. The
+//! last column is the label by default. Handles quoted fields, embedded
+//! commas/quotes and CRLF line endings.
+
+use super::column::Column;
+use super::dataset::{Dataset, Labels, TaskKind};
+use super::interner::Interner;
+use super::value::{parse_cell, Value};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// CSV loading options.
+#[derive(Debug, Clone)]
+pub struct CsvOptions {
+    /// Whether the first row is a header.
+    pub has_header: bool,
+    /// Column index of the label; `None` means the last column.
+    pub label_col: Option<usize>,
+    /// Task kind; `Classification` interns label strings into class ids,
+    /// `Regression` requires numeric labels.
+    pub task: TaskKind,
+    /// Field delimiter.
+    pub delimiter: char,
+}
+
+impl Default for CsvOptions {
+    fn default() -> Self {
+        Self {
+            has_header: true,
+            label_col: None,
+            task: TaskKind::Classification,
+            delimiter: ',',
+        }
+    }
+}
+
+/// Parse one CSV record honoring quotes. Returns fields.
+pub fn parse_record(line: &str, delim: char) -> Vec<String> {
+    let mut fields = Vec::new();
+    let mut cur = String::new();
+    let mut chars = line.chars().peekable();
+    let mut in_quotes = false;
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            if c == '"' {
+                if chars.peek() == Some(&'"') {
+                    cur.push('"');
+                    chars.next();
+                } else {
+                    in_quotes = false;
+                }
+            } else {
+                cur.push(c);
+            }
+        } else if c == '"' {
+            in_quotes = true;
+        } else if c == delim {
+            fields.push(std::mem::take(&mut cur));
+        } else if c != '\r' {
+            cur.push(c);
+        }
+    }
+    fields.push(cur);
+    fields
+}
+
+/// Load a dataset from CSV text.
+pub fn load_csv_str(name: &str, text: &str, opts: &CsvOptions) -> Result<Dataset> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let mut header: Option<Vec<String>> = None;
+    if opts.has_header {
+        header = lines
+            .next()
+            .map(|l| parse_record(l, opts.delimiter))
+            .map(|fs| fs.into_iter().map(|f| f.trim().to_string()).collect());
+    }
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for (i, line) in lines.enumerate() {
+        let fields = parse_record(line, opts.delimiter);
+        if let Some(prev) = rows.first() {
+            if fields.len() != prev.len() {
+                bail!(
+                    "row {} has {} fields, expected {}",
+                    i + 1,
+                    fields.len(),
+                    prev.len()
+                );
+            }
+        }
+        rows.push(fields);
+    }
+    if rows.is_empty() {
+        bail!("csv `{name}` has no data rows");
+    }
+    let width = rows[0].len();
+    if width < 2 {
+        bail!("csv `{name}` needs at least one feature column plus a label");
+    }
+    let label_col = opts.label_col.unwrap_or(width - 1);
+    if label_col >= width {
+        bail!("label column {label_col} out of range (width {width})");
+    }
+
+    let mut interner = Interner::new();
+    let feature_cols: Vec<usize> = (0..width).filter(|&c| c != label_col).collect();
+    let mut columns: Vec<Column> = feature_cols
+        .iter()
+        .map(|&c| {
+            let col_name = header
+                .as_ref()
+                .and_then(|h| h.get(c).cloned())
+                .unwrap_or_else(|| format!("f{c}"));
+            Column::new(col_name, Vec::with_capacity(rows.len()))
+        })
+        .collect();
+
+    for row in &rows {
+        for (slot, &c) in feature_cols.iter().enumerate() {
+            let v = parse_cell(&row[c], |s| interner.intern(s));
+            columns[slot].values.push(v);
+        }
+    }
+
+    let labels = match opts.task {
+        TaskKind::Classification => {
+            let mut class_ids: HashMap<String, u16> = HashMap::new();
+            let mut names: Vec<String> = Vec::new();
+            let ids: Vec<u16> = rows
+                .iter()
+                .map(|r| {
+                    let raw = r[label_col].trim().to_string();
+                    *class_ids.entry(raw.clone()).or_insert_with(|| {
+                        names.push(raw.clone());
+                        (names.len() - 1) as u16
+                    })
+                })
+                .collect();
+            let n_classes = names.len();
+            let mut ds = Dataset::new(
+                name,
+                columns,
+                Labels::Class { ids, n_classes },
+                interner,
+            )?;
+            ds.class_names = names;
+            return Ok(ds);
+        }
+        TaskKind::Regression => {
+            let values: Result<Vec<f64>> = rows
+                .iter()
+                .enumerate()
+                .map(|(i, r)| {
+                    r[label_col]
+                        .trim()
+                        .parse::<f64>()
+                        .with_context(|| format!("row {i}: non-numeric regression label"))
+                })
+                .collect();
+            Labels::Reg { values: values? }
+        }
+    };
+    Dataset::new(name, columns, labels, interner)
+}
+
+/// Load a dataset from a CSV file on disk.
+pub fn load_csv(path: impl AsRef<Path>, opts: &CsvOptions) -> Result<Dataset> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().to_string())
+        .unwrap_or_else(|| "csv".to_string());
+    load_csv_str(&name, &text, opts)
+}
+
+/// Write a dataset back to CSV text (used by `gen-data` and tests).
+pub fn to_csv_string(ds: &Dataset) -> String {
+    let mut out = String::new();
+    for c in &ds.columns {
+        out.push_str(&c.name);
+        out.push(',');
+    }
+    out.push_str("label\n");
+    for row in 0..ds.n_rows() {
+        for c in &ds.columns {
+            match c.values[row] {
+                Value::Num(x) => out.push_str(&format_num(x)),
+                Value::Cat(id) => {
+                    let name = ds.interner.name(id);
+                    if name.contains(',') || name.contains('"') {
+                        out.push('"');
+                        out.push_str(&name.replace('"', "\"\""));
+                        out.push('"');
+                    } else {
+                        out.push_str(name);
+                    }
+                }
+                Value::Missing => {}
+            }
+            out.push(',');
+        }
+        match &ds.labels {
+            Labels::Class { ids, .. } => {
+                let id = ids[row] as usize;
+                if let Some(n) = ds.class_names.get(id) {
+                    out.push_str(n);
+                } else {
+                    out.push_str(&format!("c{id}"));
+                }
+            }
+            Labels::Reg { values } => out.push_str(&format_num(values[row])),
+        }
+        out.push('\n');
+    }
+    out
+}
+
+fn format_num(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_quoted_fields() {
+        let fs = parse_record(r#"a,"b,c","d""e",f"#, ',');
+        assert_eq!(fs, vec!["a", "b,c", "d\"e", "f"]);
+    }
+
+    #[test]
+    fn loads_classification_csv() {
+        let text = "age,color,label\n3,red,yes\n4,blue,no\n?,red,yes\n";
+        let ds = load_csv_str("t", text, &CsvOptions::default()).unwrap();
+        assert_eq!(ds.n_rows(), 3);
+        assert_eq!(ds.n_features(), 2);
+        assert_eq!(ds.labels.n_classes(), 2);
+        assert_eq!(ds.value(0, 0), Value::Num(3.0));
+        assert!(ds.value(1, 0).is_cat());
+        assert!(ds.value(0, 2).is_missing());
+        assert_eq!(ds.class_names, vec!["yes", "no"]);
+    }
+
+    #[test]
+    fn loads_regression_csv() {
+        let text = "x,y\n1,0.5\n2,1.5\n";
+        let opts = CsvOptions {
+            task: TaskKind::Regression,
+            ..Default::default()
+        };
+        let ds = load_csv_str("r", text, &opts).unwrap();
+        assert_eq!(ds.task(), TaskKind::Regression);
+        assert_eq!(ds.labels.target(1), 1.5);
+    }
+
+    #[test]
+    fn regression_rejects_text_labels() {
+        let text = "x,y\n1,abc\n";
+        let opts = CsvOptions {
+            task: TaskKind::Regression,
+            ..Default::default()
+        };
+        assert!(load_csv_str("r", text, &opts).is_err());
+    }
+
+    #[test]
+    fn ragged_rows_rejected() {
+        let text = "a,b,label\n1,2,x\n1,x\n";
+        assert!(load_csv_str("t", text, &CsvOptions::default()).is_err());
+    }
+
+    #[test]
+    fn hybrid_column_round_trips() {
+        let text = "f,label\n1,y\ncat,n\n,y\n2.5,n\n";
+        let ds = load_csv_str("t", text, &CsvOptions::default()).unwrap();
+        let csv = to_csv_string(&ds);
+        let ds2 = load_csv_str("t2", &csv, &CsvOptions::default()).unwrap();
+        assert_eq!(ds2.n_rows(), ds.n_rows());
+        for r in 0..ds.n_rows() {
+            match (ds.value(0, r), ds2.value(0, r)) {
+                (Value::Num(a), Value::Num(b)) => assert_eq!(a, b),
+                (Value::Cat(a), Value::Cat(b)) => {
+                    assert_eq!(ds.interner.name(a), ds2.interner.name(b))
+                }
+                (Value::Missing, Value::Missing) => {}
+                (a, b) => panic!("mismatch {a:?} vs {b:?}"),
+            }
+            assert_eq!(ds.labels.class(r), ds2.labels.class(r));
+        }
+    }
+
+    #[test]
+    fn label_col_override() {
+        let text = "label,f\nyes,1\nno,2\n";
+        let opts = CsvOptions {
+            label_col: Some(0),
+            ..Default::default()
+        };
+        let ds = load_csv_str("t", text, &opts).unwrap();
+        assert_eq!(ds.n_features(), 1);
+        assert_eq!(ds.value(0, 1), Value::Num(2.0));
+    }
+}

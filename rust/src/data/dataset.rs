@@ -1,0 +1,252 @@
+//! Dataset container: hybrid feature columns + labels + interner.
+
+use super::column::Column;
+use super::interner::Interner;
+use super::value::Value;
+use anyhow::{bail, Result};
+
+/// Classification or regression.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    Classification,
+    Regression,
+}
+
+/// Label storage. Classification labels are dense `u16` class ids;
+/// regression labels are `f64` targets.
+#[derive(Debug, Clone)]
+pub enum Labels {
+    Class { ids: Vec<u16>, n_classes: usize },
+    Reg { values: Vec<f64> },
+}
+
+impl Labels {
+    pub fn len(&self) -> usize {
+        match self {
+            Labels::Class { ids, .. } => ids.len(),
+            Labels::Reg { values } => values.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn kind(&self) -> TaskKind {
+        match self {
+            Labels::Class { .. } => TaskKind::Classification,
+            Labels::Reg { .. } => TaskKind::Regression,
+        }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self {
+            Labels::Class { n_classes, .. } => *n_classes,
+            Labels::Reg { .. } => 0,
+        }
+    }
+
+    #[inline]
+    pub fn class(&self, row: usize) -> u16 {
+        match self {
+            Labels::Class { ids, .. } => ids[row],
+            Labels::Reg { .. } => panic!("class() on regression labels"),
+        }
+    }
+
+    #[inline]
+    pub fn target(&self, row: usize) -> f64 {
+        match self {
+            Labels::Reg { values } => values[row],
+            Labels::Class { .. } => panic!("target() on classification labels"),
+        }
+    }
+}
+
+/// An in-memory tabular dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub columns: Vec<Column>,
+    pub labels: Labels,
+    pub interner: Interner,
+    /// Human-readable class names (classification only, may be empty).
+    pub class_names: Vec<String>,
+}
+
+impl Dataset {
+    pub fn new(
+        name: impl Into<String>,
+        columns: Vec<Column>,
+        labels: Labels,
+        interner: Interner,
+    ) -> Result<Self> {
+        let n = labels.len();
+        for c in &columns {
+            if c.len() != n {
+                bail!(
+                    "column `{}` has {} rows but labels have {}",
+                    c.name,
+                    c.len(),
+                    n
+                );
+            }
+        }
+        Ok(Self {
+            name: name.into(),
+            columns,
+            labels,
+            interner,
+            class_names: Vec::new(),
+        })
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.columns.len()
+    }
+
+    pub fn task(&self) -> TaskKind {
+        self.labels.kind()
+    }
+
+    #[inline]
+    pub fn value(&self, feature: usize, row: usize) -> Value {
+        self.columns[feature].values[row]
+    }
+
+    /// One example as a row of values (allocates; for serving/tests).
+    pub fn row(&self, row: usize) -> Vec<Value> {
+        self.columns.iter().map(|c| c.values[row]).collect()
+    }
+
+    /// Deterministic train/validation/test split by shuffled row ids
+    /// (the paper uses 80/10/10).
+    pub fn split_indices(
+        &self,
+        train_frac: f64,
+        val_frac: f64,
+        seed: u64,
+    ) -> (Vec<u32>, Vec<u32>, Vec<u32>) {
+        let n = self.n_rows();
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        let mut rng = crate::util::rng::Rng::new(seed);
+        rng.shuffle(&mut idx);
+        let n_train = ((n as f64) * train_frac).round() as usize;
+        let n_val = ((n as f64) * val_frac).round() as usize;
+        let n_train = n_train.min(n);
+        let n_val = n_val.min(n - n_train);
+        let train = idx[..n_train].to_vec();
+        let val = idx[n_train..n_train + n_val].to_vec();
+        let test = idx[n_train + n_val..].to_vec();
+        (train, val, test)
+    }
+
+    /// Materialize a subset of rows as a new dataset (used by tests and
+    /// the bench harness; the tree builder itself works on index sets).
+    pub fn subset(&self, rows: &[u32]) -> Dataset {
+        let columns = self
+            .columns
+            .iter()
+            .map(|c| {
+                Column::new(
+                    c.name.clone(),
+                    rows.iter().map(|&r| c.values[r as usize]).collect(),
+                )
+            })
+            .collect();
+        let labels = match &self.labels {
+            Labels::Class { ids, n_classes } => Labels::Class {
+                ids: rows.iter().map(|&r| ids[r as usize]).collect(),
+                n_classes: *n_classes,
+            },
+            Labels::Reg { values } => Labels::Reg {
+                values: rows.iter().map(|&r| values[r as usize]).collect(),
+            },
+        };
+        Dataset {
+            name: self.name.clone(),
+            columns,
+            labels,
+            interner: self.interner.clone(),
+            class_names: self.class_names.clone(),
+        }
+    }
+
+    /// Approximate resident memory of the feature matrix, in bytes.
+    pub fn approx_bytes(&self) -> usize {
+        self.n_rows() * self.n_features() * std::mem::size_of::<Value>()
+            + match &self.labels {
+                Labels::Class { ids, .. } => ids.len() * 2,
+                Labels::Reg { values } => values.len() * 8,
+            }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let mut interner = Interner::new();
+        let a = interner.intern("a");
+        let cols = vec![
+            Column::new("f0", vec![Value::Num(1.0), Value::Num(2.0), Value::Cat(a)]),
+            Column::new("f1", vec![Value::Missing, Value::Num(0.5), Value::Num(0.1)]),
+        ];
+        let labels = Labels::Class {
+            ids: vec![0, 1, 0],
+            n_classes: 2,
+        };
+        Dataset::new("tiny", cols, labels, interner).unwrap()
+    }
+
+    #[test]
+    fn shape_accessors() {
+        let d = tiny();
+        assert_eq!(d.n_rows(), 3);
+        assert_eq!(d.n_features(), 2);
+        assert_eq!(d.task(), TaskKind::Classification);
+        assert_eq!(d.labels.n_classes(), 2);
+    }
+
+    #[test]
+    fn mismatched_lengths_rejected() {
+        let cols = vec![Column::new("f0", vec![Value::Num(1.0)])];
+        let labels = Labels::Class {
+            ids: vec![0, 1],
+            n_classes: 2,
+        };
+        assert!(Dataset::new("bad", cols, labels, Interner::new()).is_err());
+    }
+
+    #[test]
+    fn split_partitions_rows() {
+        let d = tiny();
+        let (tr, va, te) = d.split_indices(0.34, 0.33, 7);
+        let mut all: Vec<u32> = tr.iter().chain(&va).chain(&te).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn subset_extracts_rows() {
+        let d = tiny();
+        let s = d.subset(&[2, 0]);
+        assert_eq!(s.n_rows(), 2);
+        assert_eq!(s.labels.class(0), 0);
+        assert!(s.value(0, 0).is_cat());
+        assert_eq!(s.value(0, 1), Value::Num(1.0));
+    }
+
+    #[test]
+    fn row_view() {
+        let d = tiny();
+        let r = d.row(1);
+        assert_eq!(r[0], Value::Num(2.0));
+        assert_eq!(r[1], Value::Num(0.5));
+    }
+}

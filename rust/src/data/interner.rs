@@ -1,0 +1,85 @@
+//! String interner for categorical values.
+//!
+//! Every distinct categorical string in a dataset maps to a dense
+//! [`CatId`]; columns store the 4-byte id instead of the string, and split
+//! predicates compare ids. One interner is shared per dataset so ids are
+//! stable across columns (a value like `"unknown"` appearing in several
+//! columns interns once).
+
+use std::collections::HashMap;
+
+/// Dense id of an interned categorical string.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CatId(pub u32);
+
+/// Two-way string ↔ id table.
+#[derive(Debug, Clone, Default)]
+pub struct Interner {
+    by_name: HashMap<String, CatId>,
+    names: Vec<String>,
+}
+
+impl Interner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Intern a string, returning its stable id.
+    pub fn intern(&mut self, s: &str) -> CatId {
+        if let Some(&id) = self.by_name.get(s) {
+            return id;
+        }
+        let id = CatId(self.names.len() as u32);
+        self.names.push(s.to_string());
+        self.by_name.insert(s.to_string(), id);
+        id
+    }
+
+    /// Look up without interning.
+    pub fn get(&self, s: &str) -> Option<CatId> {
+        self.by_name.get(s).copied()
+    }
+
+    /// Resolve an id back to its string.
+    pub fn name(&self, id: CatId) -> &str {
+        &self.names[id.0 as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_is_idempotent() {
+        let mut i = Interner::new();
+        let a = i.intern("red");
+        let b = i.intern("red");
+        assert_eq!(a, b);
+        assert_eq!(i.len(), 1);
+    }
+
+    #[test]
+    fn ids_are_dense_and_resolve() {
+        let mut i = Interner::new();
+        let ids: Vec<CatId> = ["x", "y", "z"].iter().map(|s| i.intern(s)).collect();
+        assert_eq!(ids, vec![CatId(0), CatId(1), CatId(2)]);
+        assert_eq!(i.name(ids[1]), "y");
+        assert_eq!(i.get("z"), Some(CatId(2)));
+        assert_eq!(i.get("w"), None);
+    }
+
+    #[test]
+    fn distinct_strings_distinct_ids() {
+        let mut i = Interner::new();
+        assert_ne!(i.intern("a"), i.intern("b"));
+    }
+}

@@ -1,0 +1,14 @@
+//! Tabular data substrate: hybrid values (numeric + categorical + missing),
+//! string interning, columnar datasets, CSV ingestion and the synthetic
+//! dataset registry substituting for the paper's UCI/Kaggle downloads.
+
+pub mod column;
+pub mod csv;
+pub mod dataset;
+pub mod interner;
+pub mod synth;
+pub mod value;
+
+pub use dataset::{Dataset, Labels, TaskKind};
+pub use interner::{CatId, Interner};
+pub use value::Value;

@@ -1,0 +1,167 @@
+//! Registry of shape-matched substitutes for every dataset the paper
+//! evaluates (Table 6 classification, Table 7 regression). The
+//! `(n_rows, n_features, n_classes)` triples are exactly the paper's;
+//! the remaining knobs (categorical mix, cardinality, ground-truth depth,
+//! noise) are chosen so tree sizes and accuracy land in the paper's bands.
+
+use super::SynthSpec;
+
+/// A registry entry: the paper's dataset stats plus our synth knobs.
+#[derive(Debug, Clone)]
+pub struct DatasetEntry {
+    pub spec: SynthSpec,
+    /// Paper-reported numbers for EXPERIMENTS.md comparisons
+    /// (full-tree train ms, tune ms, accuracy-or-RMSE).
+    pub paper_train_ms: f64,
+    pub paper_tune_ms: f64,
+    pub paper_quality: f64,
+}
+
+fn cls(
+    name: &str,
+    m: usize,
+    k: usize,
+    c: usize,
+    cat_frac: f64,
+    cardinality: usize,
+    gt_depth: usize,
+    noise: f64,
+    paper: (f64, f64, f64),
+) -> DatasetEntry {
+    let mut spec = SynthSpec::classification(name, m, k, c);
+    spec.cat_frac = cat_frac;
+    spec.hybrid_frac = 0.05;
+    spec.missing_frac = 0.02;
+    spec.numeric_cardinality = cardinality;
+    spec.gt_depth = gt_depth;
+    spec.noise = noise;
+    DatasetEntry {
+        spec,
+        paper_train_ms: paper.0,
+        paper_tune_ms: paper.1,
+        paper_quality: paper.2,
+    }
+}
+
+fn reg(
+    name: &str,
+    m: usize,
+    k: usize,
+    cardinality: usize,
+    gt_depth: usize,
+    noise: f64,
+    paper: (f64, f64, f64),
+) -> DatasetEntry {
+    let mut spec = SynthSpec::regression(name, m, k);
+    spec.cat_frac = 0.1;
+    spec.hybrid_frac = 0.05;
+    spec.missing_frac = 0.01;
+    spec.numeric_cardinality = cardinality;
+    spec.gt_depth = gt_depth;
+    spec.noise = noise;
+    DatasetEntry {
+        spec,
+        paper_train_ms: paper.0,
+        paper_tune_ms: paper.1,
+        paper_quality: paper.2,
+    }
+}
+
+/// The 19 classification datasets of Table 6 (name, M, K, C as reported).
+/// Paper columns recorded: (train ms, tune ms, accuracy).
+pub fn classification_registry() -> Vec<DatasetEntry> {
+    vec![
+        cls("adult", 32_561, 14, 2, 0.5, 128, 10, 0.12, (586.0, 50.0, 0.86)),
+        cls("credit_card", 30_000, 23, 2, 0.2, 256, 10, 0.16, (1340.0, 52.0, 0.82)),
+        cls("rain_in_australia", 145_460, 23, 3, 0.3, 256, 11, 0.15, (4229.0, 288.0, 0.83)),
+        cls("parkinson", 765, 753, 2, 0.0, 128, 5, 0.15, (611.0, 2.0, 0.80)),
+        cls("intention", 12_330, 17, 2, 0.4, 128, 8, 0.08, (170.0, 6.0, 0.90)),
+        cls("shuttle", 58_000, 9, 7, 0.0, 128, 5, 0.002, (36.0, 21.0, 1.0)),
+        cls("wall_robot", 5_456, 24, 4, 0.0, 128, 6, 0.01, (70.0, 2.0, 0.99)),
+        cls("nursery", 12_960, 8, 5, 1.0, 8, 8, 0.004, (18.0, 5.0, 1.0)),
+        cls("page_blocks", 5_473, 10, 5, 0.0, 128, 7, 0.03, (40.0, 2.0, 0.96)),
+        cls("weight_lifting", 4_024, 154, 5, 0.0, 128, 5, 0.005, (75.0, 1.0, 1.0)),
+        cls("letter", 20_000, 16, 26, 0.0, 16, 12, 0.10, (276.0, 20.0, 0.87)),
+        cls("nearest_earth_objects", 90_836, 7, 2, 0.0, 256, 11, 0.07, (943.0, 73.0, 0.91)),
+        cls("optidigits", 3_823, 64, 10, 0.0, 17, 9, 0.09, (121.0, 2.0, 0.89)),
+        cls("heart_disease_indicators", 253_680, 21, 2, 0.5, 64, 11, 0.08, (5802.0, 453.0, 0.91)),
+        cls("credit_card_fraud", 1_000_000, 7, 2, 0.15, 256, 6, 0.002, (5832.0, 285.0, 1.0)),
+        cls("churn_modeling", 10_000, 10, 2, 0.3, 256, 9, 0.13, (155.0, 10.0, 0.85)),
+        cls("covertype", 581_012, 54, 7, 0.8, 128, 13, 0.05, (16_573.0, 1023.0, 0.94)),
+        cls("kdd99_10", 494_020, 41, 23, 0.2, 128, 7, 0.001, (977.0, 245.0, 1.0)),
+        cls("kdd99_full", 4_898_431, 41, 23, 0.2, 128, 8, 0.001, (24_926.0, 3140.0, 1.0)),
+    ]
+}
+
+/// The 5 regression datasets of Table 7 (paper columns: train ms, tune ms,
+/// RMSE).
+pub fn regression_registry() -> Vec<DatasetEntry> {
+    vec![
+        reg("bike_sharing_hour", 17_379, 12, 256, 10, 0.10, (1216.0, 26.0, 64.2)),
+        reg("california_housing", 20_640, 9, 256, 10, 0.12, (1439.0, 40.0, 57_633.3)),
+        reg("wine_quality", 6_497, 11, 128, 8, 0.10, (180.0, 6.0, 0.83)),
+        reg("wave_energy_farm", 36_043, 148, 256, 9, 0.10, (18_630.0, 147.0, 7979.9)),
+        reg("appliances_energy", 19_735, 27, 256, 10, 0.15, (2576.0, 40.0, 94.6)),
+    ]
+}
+
+/// Find a dataset entry by name in either registry.
+pub fn find(name: &str) -> Option<DatasetEntry> {
+    classification_registry()
+        .into_iter()
+        .chain(regression_registry())
+        .find(|e| e.spec.name == name)
+}
+
+/// Names of all registered datasets.
+pub fn all_names() -> Vec<String> {
+    classification_registry()
+        .into_iter()
+        .chain(regression_registry())
+        .map(|e| e.spec.name)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_matches_paper_counts() {
+        assert_eq!(classification_registry().len(), 19);
+        assert_eq!(regression_registry().len(), 5);
+    }
+
+    #[test]
+    fn paper_shapes_pinned() {
+        let e = find("kdd99_10").unwrap();
+        assert_eq!(e.spec.n_rows, 494_020);
+        assert_eq!(e.spec.n_features, 41);
+        assert_eq!(e.spec.n_classes, 23);
+        let e = find("churn_modeling").unwrap();
+        assert_eq!((e.spec.n_rows, e.spec.n_features, e.spec.n_classes), (10_000, 10, 2));
+        let e = find("credit_card_fraud").unwrap();
+        assert_eq!((e.spec.n_rows, e.spec.n_features), (1_000_000, 7));
+    }
+
+    #[test]
+    fn names_unique() {
+        let names = all_names();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len());
+    }
+
+    #[test]
+    fn find_unknown_is_none() {
+        assert!(find("no_such_dataset").is_none());
+    }
+
+    #[test]
+    fn regression_specs_have_no_classes() {
+        for e in regression_registry() {
+            assert!(e.spec.is_regression());
+        }
+    }
+}

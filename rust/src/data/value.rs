@@ -1,0 +1,164 @@
+//! Hybrid feature values and the paper's comparison semantics (§2, Table 3).
+//!
+//! A feature cell is numeric, categorical, or missing — *without
+//! pre-encoding*. Comparisons are total but deliberately "false-biased":
+//!
+//! * numeric ⋈ numeric — usual IEEE ordering / equality;
+//! * categorical = categorical — identity; `≤ / >` between categoricals is
+//!   **false** (no order is assumed);
+//! * numeric ⋈ categorical — equality false, inequality true, ordered
+//!   comparisons false (Table 3: `10 ≤ 'cat'` → false, `10 > 'cat'` → false);
+//! * missing ⋈ anything — every split predicate evaluates false, which is
+//!   exactly the paper's "leave missing values untouched": they always
+//!   flow to the negative branch and never contribute to a positive set.
+
+use super::interner::CatId;
+
+/// One cell of a hybrid feature column.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Value {
+    /// Numeric value (parsed as `f64`).
+    Num(f64),
+    /// Interned categorical value.
+    Cat(CatId),
+    /// Missing entry — kept untouched, never imputed.
+    Missing,
+}
+
+impl Value {
+    #[inline]
+    pub fn is_num(&self) -> bool {
+        matches!(self, Value::Num(_))
+    }
+
+    #[inline]
+    pub fn is_cat(&self) -> bool {
+        matches!(self, Value::Cat(_))
+    }
+
+    #[inline]
+    pub fn is_missing(&self) -> bool {
+        matches!(self, Value::Missing)
+    }
+
+    #[inline]
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    #[inline]
+    pub fn as_cat(&self) -> Option<CatId> {
+        match self {
+            Value::Cat(c) => Some(*c),
+            _ => None,
+        }
+    }
+
+    /// Paper Table 3 equality: same-type identity, cross-type always false,
+    /// missing equals nothing (including missing).
+    #[inline]
+    pub fn eq_value(&self, other: &Value) -> bool {
+        match (self, other) {
+            (Value::Num(a), Value::Num(b)) => a == b,
+            (Value::Cat(a), Value::Cat(b)) => a == b,
+            _ => false,
+        }
+    }
+
+    /// Paper Table 3 `≤`: only defined (possibly true) between numerics.
+    #[inline]
+    pub fn le_value(&self, other: &Value) -> bool {
+        match (self, other) {
+            (Value::Num(a), Value::Num(b)) => a <= b,
+            _ => false,
+        }
+    }
+
+    /// Paper Table 3 `>`: only defined (possibly true) between numerics.
+    #[inline]
+    pub fn gt_value(&self, other: &Value) -> bool {
+        match (self, other) {
+            (Value::Num(a), Value::Num(b)) => a > b,
+            _ => false,
+        }
+    }
+}
+
+/// Parse a raw text cell using the paper's "read as a number first,
+/// convert to categorical if the conversion fails" rule. `intern` is
+/// called only for categorical cells.
+pub fn parse_cell(raw: &str, mut intern: impl FnMut(&str) -> CatId) -> Value {
+    let t = raw.trim();
+    if t.is_empty() || t == "?" || t.eq_ignore_ascii_case("na") || t.eq_ignore_ascii_case("nan")
+        || t.eq_ignore_ascii_case("null")
+    {
+        return Value::Missing;
+    }
+    match t.parse::<f64>() {
+        Ok(x) if x.is_finite() => Value::Num(x),
+        _ => Value::Cat(intern(t)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::interner::Interner;
+
+    #[test]
+    fn table3_semantics() {
+        let mut i = Interner::new();
+        let cat = Value::Cat(i.intern("cat"));
+        let ten = Value::Num(10.0);
+        // Table 3 rows:
+        assert!(!ten.eq_value(&cat)); // 10 = 'cat' → False
+        assert!(!ten.le_value(&cat)); // 10 ≤ 'cat' → False
+        assert!(!ten.gt_value(&cat)); // 10 > 'cat' → False
+                                      // 10 ≠ 'cat' → True is the negation of eq:
+        assert!(!ten.eq_value(&cat));
+    }
+
+    #[test]
+    fn same_type_comparisons() {
+        let mut i = Interner::new();
+        let a = Value::Cat(i.intern("a"));
+        let a2 = Value::Cat(i.intern("a"));
+        let b = Value::Cat(i.intern("b"));
+        assert!(a.eq_value(&a2));
+        assert!(!a.eq_value(&b));
+        assert!(!a.le_value(&a2)); // no order between categoricals
+        assert!(Value::Num(1.0).le_value(&Value::Num(1.0)));
+        assert!(Value::Num(2.0).gt_value(&Value::Num(1.0)));
+        assert!(!Value::Num(1.0).gt_value(&Value::Num(1.0)));
+    }
+
+    #[test]
+    fn missing_compares_false_with_everything() {
+        let m = Value::Missing;
+        for v in [Value::Num(0.0), Value::Missing] {
+            assert!(!m.eq_value(&v));
+            assert!(!m.le_value(&v));
+            assert!(!m.gt_value(&v));
+            assert!(!v.le_value(&m));
+            assert!(!v.gt_value(&m));
+        }
+    }
+
+    #[test]
+    fn parse_cell_hybrid_rule() {
+        let mut i = Interner::new();
+        assert_eq!(parse_cell("3.5", |s| i.intern(s)), Value::Num(3.5));
+        assert_eq!(parse_cell(" -2 ", |s| i.intern(s)), Value::Num(-2.0));
+        assert!(parse_cell("cat", |s| i.intern(s)).is_cat());
+        assert!(parse_cell("", |s| i.intern(s)).is_missing());
+        assert!(parse_cell("?", |s| i.intern(s)).is_missing());
+        assert!(parse_cell("NA", |s| i.intern(s)).is_missing());
+        // "inf" parses as f64 infinity — not finite, so treated categorical.
+        assert!(parse_cell("inf", |s| i.intern(s)).is_cat());
+        // Mixed column entry like "12abc" is categorical.
+        assert!(parse_cell("12abc", |s| i.intern(s)).is_cat());
+    }
+}

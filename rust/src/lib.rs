@@ -1,0 +1,45 @@
+//! # UDT — Ultrafast Decision Tree
+//!
+//! A production-grade reproduction of *"Superfast Selection for Decision
+//! Tree Algorithms"* (Wang & Gupta, 2024) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the full decision-tree framework: hybrid
+//!   tabular data substrate, Superfast Selection (`O(M + N·C)` split
+//!   selection via prefix sums), the generic `O(M·N)` baseline, the UDT
+//!   builder (`O(K·M log M)` total), Training-Only-Once Tuning, a
+//!   thread-pool coordinator, CLI, metrics and a prediction server.
+//! * **Layer 2 (python/compile/model.py)** — the same split-scoring
+//!   dataflow expressed in JAX, AOT-lowered to HLO text at build time.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the
+//!   histogram + prefix-scan + heuristic hot-spot, executed from Rust via
+//!   the PJRT CPU client ([`runtime`]).
+//!
+//! Quick start:
+//!
+//! ```no_run
+//! use udt::data::synth::{SynthSpec, generate_classification};
+//! use udt::tree::{Tree, TrainConfig};
+//!
+//! let spec = SynthSpec::classification("demo", 1000, 8, 3);
+//! let ds = generate_classification(&spec, 42);
+//! let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
+//! let acc = tree.accuracy(&ds);
+//! assert!(acc > 0.8);
+//! ```
+
+pub mod bench_support;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod runtime;
+pub mod selection;
+pub mod tree;
+pub mod util;
+
+pub use data::dataset::Dataset;
+pub use selection::split::SplitPredicate;
+pub use tree::{TrainConfig, Tree};
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

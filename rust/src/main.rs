@@ -1,0 +1,439 @@
+//! `udt` — the launcher.
+//!
+//! Subcommands:
+//!   train        train a tree on a CSV or registered synthetic dataset
+//!   pipeline     the paper's full train→tune→prune→evaluate pipeline
+//!   predict      load a serialized tree and predict over a CSV
+//!   gen-data     materialize a registered synthetic dataset as CSV
+//!   bench-selection  Table 5 (generic vs superfast, single feature)
+//!   bench-suite      Table 6 / Table 7 rows
+//!   serve        prediction server over TCP
+//!   artifacts    inspect the AOT artifact manifest
+//!
+//! Run `udt <subcommand> --help` for options.
+
+use anyhow::{anyhow, bail, Result};
+use udt::config::Config;
+use udt::coordinator::pipeline::{run_pipeline, Quality};
+use udt::coordinator::serve::Server;
+use udt::data::csv::{load_csv, CsvOptions};
+use udt::data::dataset::TaskKind;
+use udt::data::synth::{generate_any, registry};
+use udt::selection::heuristic::ClassCriterion;
+use udt::tree::serialize;
+use udt::tree::{Backend, TrainConfig, Tree};
+use udt::util::cli::Command;
+use udt::util::json::Json;
+use udt::util::timer::Timer;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(sub) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match sub.as_str() {
+        "train" => cmd_train(rest),
+        "pipeline" => cmd_pipeline(rest),
+        "predict" => cmd_predict(rest),
+        "gen-data" => cmd_gen_data(rest),
+        "rank-features" => cmd_rank_features(rest),
+        "bench-selection" => cmd_bench_selection(rest),
+        "bench-suite" => cmd_bench_suite(rest),
+        "serve" => cmd_serve(rest),
+        "artifacts" => cmd_artifacts(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand `{other}` (try `udt help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "udt — Ultrafast Decision Tree (Superfast Selection reproduction)\n\
+         \n\
+         subcommands:\n\
+           train            train a tree (CSV or --dataset from the registry)\n\
+           pipeline         train → tune (once) → prune → evaluate\n\
+           predict          predict with a serialized tree over a CSV\n\
+           gen-data         write a registry dataset to CSV\n\
+           rank-features    Superfast Selection as a feature-selection filter\n\
+           bench-selection  Table 5: generic vs superfast on one feature\n\
+           bench-suite      Table 6/7 rows over the dataset registry\n\
+           serve            TCP prediction server\n\
+           artifacts        list AOT artifacts and their shapes\n"
+    );
+}
+
+/// Shared training options → TrainConfig.
+fn train_config(a: &udt::util::cli::Args, cfg: &Config) -> Result<TrainConfig> {
+    let crit_default = cfg.get_or("train.criterion", "info_gain");
+    let criterion = a.get_or("criterion", &crit_default);
+    let criterion = ClassCriterion::parse(criterion)
+        .ok_or_else(|| anyhow!("unknown criterion `{criterion}`"))?;
+    let backend_default = cfg.get_or("train.backend", "superfast");
+    let backend = match a.get_or("backend", &backend_default) {
+        "superfast" => Backend::Superfast,
+        "generic" => Backend::Generic,
+        "xla" => {
+            let xla = udt::runtime::xla_split::XlaSelection::load_default(Default::default())
+                .ok_or_else(|| anyhow!("xla backend requires built artifacts (make artifacts)"))?;
+            Backend::Xla(std::sync::Arc::new(xla))
+        }
+        other => bail!("unknown backend `{other}`"),
+    };
+    Ok(TrainConfig {
+        criterion,
+        max_depth: a.get_usize("max-depth", usize::MAX)?,
+        min_samples_split: a.get_usize("min-split", 2)?,
+        backend,
+        n_threads: a.get_usize("threads", cfg.get_usize("train.threads", 1).unwrap_or(1))?,
+        ..Default::default()
+    })
+}
+
+fn base_config(a: &udt::util::cli::Args) -> Result<Config> {
+    let mut cfg = Config::new();
+    if let Some(path) = a.get("config") {
+        cfg = Config::from_file(path).map_err(|e| anyhow!("{e}"))?;
+    }
+    Ok(cfg)
+}
+
+fn load_dataset(a: &udt::util::cli::Args) -> Result<udt::Dataset> {
+    let seed = a.get_u64("seed", 42)?;
+    if let Some(name) = a.get("dataset") {
+        let entry = registry::find(name)
+            .ok_or_else(|| anyhow!("unknown dataset `{name}`; see `udt gen-data --list`"))?;
+        let scale: f64 = a.get_f64("scale", 1.0)?;
+        return Ok(generate_any(&entry.spec.scaled(scale), seed));
+    }
+    if let Some(path) = a.positional.first() {
+        let task = match a.get_or("task", "classification") {
+            "classification" => TaskKind::Classification,
+            "regression" => TaskKind::Regression,
+            other => bail!("unknown task `{other}`"),
+        };
+        return load_csv(
+            path,
+            &CsvOptions {
+                task,
+                ..Default::default()
+            },
+        );
+    }
+    bail!("provide a CSV path or --dataset <name>")
+}
+
+fn cmd_train(raw: &[String]) -> Result<()> {
+    let cmd = Command::new("train", "train a decision tree")
+        .opt("dataset", "registry dataset name (alternative to CSV)", None)
+        .opt("scale", "row-count scale for registry datasets", Some("1.0"))
+        .opt("task", "classification|regression (CSV input)", Some("classification"))
+        .opt("criterion", "info_gain|gini|chi2", None)
+        .opt("backend", "superfast|generic|xla", None)
+        .opt("max-depth", "maximum depth", None)
+        .opt("min-split", "minimum samples to split", None)
+        .opt("threads", "worker threads (0 = all cores)", None)
+        .opt("seed", "rng seed", Some("42"))
+        .opt("out", "write the trained tree as JSON", None)
+        .opt("config", "config file", None)
+        .positional("input.csv");
+    let a = cmd.parse(raw)?;
+    let cfg = base_config(&a)?;
+    let ds = load_dataset(&a)?;
+    let train_cfg = train_config(&a, &cfg)?;
+
+    let timer = Timer::start();
+    let tree = Tree::fit(&ds, &train_cfg)?;
+    let ms = timer.ms();
+    println!(
+        "dataset={} rows={} features={} | nodes={} depth={} train={:.1}ms",
+        ds.name,
+        ds.n_rows(),
+        ds.n_features(),
+        tree.n_nodes(),
+        tree.depth,
+        ms
+    );
+    match ds.task() {
+        TaskKind::Classification => {
+            println!("train accuracy = {:.4}", tree.accuracy(&ds))
+        }
+        TaskKind::Regression => {
+            let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+            let (mae, rmse) = tree.regression_error(&ds, &rows);
+            println!("train MAE = {mae:.4}, RMSE = {rmse:.4}");
+        }
+    }
+    if let Some(out) = a.get("out") {
+        std::fs::write(out, serialize::to_json(&tree, &ds.interner).to_pretty())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_pipeline(raw: &[String]) -> Result<()> {
+    let cmd = Command::new("pipeline", "train → tune once → prune → evaluate")
+        .opt("dataset", "registry dataset name", None)
+        .opt("scale", "row-count scale", Some("1.0"))
+        .opt("task", "classification|regression (CSV input)", Some("classification"))
+        .opt("criterion", "info_gain|gini|chi2", None)
+        .opt("backend", "superfast|generic|xla", None)
+        .opt("max-depth", "maximum depth", None)
+        .opt("min-split", "minimum samples to split", None)
+        .opt("threads", "worker threads", None)
+        .opt("seed", "rng seed", Some("42"))
+        .opt("config", "config file", None)
+        .positional("input.csv");
+    let a = cmd.parse(raw)?;
+    let cfg = base_config(&a)?;
+    let ds = load_dataset(&a)?;
+    let train_cfg = train_config(&a, &cfg)?;
+    let rep = run_pipeline(&ds, &train_cfg, a.get_u64("seed", 42)?)?;
+    println!(
+        "{}: full tree {} nodes / depth {} in {:.0} ms; tuned in {:.1} ms over {} settings",
+        rep.dataset, rep.full_nodes, rep.full_depth, rep.full_train_ms, rep.tune_ms, rep.n_settings
+    );
+    println!(
+        "  best: max_depth={} min_split={} → tuned tree {} nodes / depth {} (retrain {:.0} ms)",
+        rep.best_max_depth, rep.best_min_split, rep.tuned_nodes, rep.tuned_depth, rep.tuned_train_ms
+    );
+    match rep.quality {
+        Quality::Accuracy(acc) => println!("  test accuracy = {acc:.4}"),
+        Quality::Regression { mae, rmse } => println!("  test MAE = {mae:.4}, RMSE = {rmse:.4}"),
+    }
+    Ok(())
+}
+
+fn cmd_predict(raw: &[String]) -> Result<()> {
+    let cmd = Command::new("predict", "predict with a serialized tree")
+        .opt("model", "tree JSON (from `train --out`)", None)
+        .opt("task", "classification|regression", Some("classification"))
+        .positional("input.csv");
+    let a = cmd.parse(raw)?;
+    let model_path = a
+        .get("model")
+        .ok_or_else(|| anyhow!("--model is required"))?;
+    let ds = load_dataset(&a)?;
+    let mut interner = ds.interner.clone();
+    let text = std::fs::read_to_string(model_path)?;
+    let tree = serialize::from_json(
+        &Json::parse(&text).map_err(|e| anyhow!("{e}"))?,
+        &mut interner,
+    )?;
+    match ds.task() {
+        TaskKind::Classification => {
+            println!("accuracy = {:.4}", tree.accuracy(&ds));
+        }
+        TaskKind::Regression => {
+            let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+            let (mae, rmse) = tree.regression_error(&ds, &rows);
+            println!("MAE = {mae:.4}, RMSE = {rmse:.4}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(raw: &[String]) -> Result<()> {
+    let cmd = Command::new("gen-data", "materialize a registry dataset as CSV")
+        .opt("dataset", "registry dataset name", None)
+        .opt("scale", "row-count scale", Some("1.0"))
+        .opt("seed", "rng seed", Some("42"))
+        .opt("out", "output CSV path", None)
+        .flag("list", "list registered datasets");
+    let a = cmd.parse(raw)?;
+    if a.flag("list") {
+        for e in registry::classification_registry() {
+            println!(
+                "{:28} {:>9} rows {:>4} feats {:>3} classes",
+                e.spec.name, e.spec.n_rows, e.spec.n_features, e.spec.n_classes
+            );
+        }
+        for e in registry::regression_registry() {
+            println!(
+                "{:28} {:>9} rows {:>4} feats  regression",
+                e.spec.name, e.spec.n_rows, e.spec.n_features
+            );
+        }
+        return Ok(());
+    }
+    let ds = load_dataset(&a)?;
+    let out = a
+        .get("out")
+        .map(String::from)
+        .unwrap_or_else(|| format!("{}.csv", ds.name));
+    std::fs::write(&out, udt::data::csv::to_csv_string(&ds))?;
+    println!("wrote {} ({} rows)", out, ds.n_rows());
+    Ok(())
+}
+
+fn cmd_rank_features(raw: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "rank-features",
+        "rank features by best-split gain (Superfast Selection)",
+    )
+    .opt("dataset", "registry dataset name", None)
+    .opt("scale", "row-count scale", Some("1.0"))
+    .opt("task", "classification|regression (CSV input)", Some("classification"))
+    .opt("criterion", "info_gain|gini|chi2", None)
+    .opt("top", "print only the top K features", None)
+    .opt("seed", "rng seed", Some("42"))
+    .opt("config", "config file", None)
+    .positional("input.csv");
+    let a = cmd.parse(raw)?;
+    let cfg = base_config(&a)?;
+    let ds = load_dataset(&a)?;
+    let train_cfg = train_config(&a, &cfg)?;
+    let criterion = udt::selection::feature_rank::default_criterion(&ds, &train_cfg);
+    let timer = Timer::start();
+    let ranked = udt::selection::feature_rank::rank_features(&ds, criterion);
+    let ms = timer.ms();
+    let top = a.get_usize("top", ranked.len())?;
+    println!("ranked {} features in {ms:.1} ms (criterion {:?}):", ranked.len(), criterion);
+    for (i, f) in ranked.iter().take(top).enumerate() {
+        println!("  {:>3}. {:24} gain={:.6}", i + 1, f.name, f.gain);
+    }
+    Ok(())
+}
+
+fn cmd_bench_selection(raw: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "bench-selection",
+        "Table 5: generic vs superfast selection on a single feature",
+    )
+    .opt("sizes", "comma-separated sizes", Some("10000,20000,30000,40000,50000,60000,70000,80000,90000,100000"))
+    .opt("runs", "repetitions per size", Some("3"))
+    .opt("seed", "rng seed", Some("42"));
+    let a = cmd.parse(raw)?;
+    let sizes: Vec<usize> = a
+        .get("sizes")
+        .unwrap()
+        .split(',')
+        .map(|s| s.trim().parse().map_err(|_| anyhow!("bad size `{s}`")))
+        .collect::<Result<_>>()?;
+    let runs = a.get_usize("runs", 3)?;
+    let table = udt::bench_support::table5::run(&sizes, runs, a.get_u64("seed", 42)?);
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_bench_suite(raw: &[String]) -> Result<()> {
+    let cmd = Command::new("bench-suite", "Table 6/7 rows over the registry")
+        .opt("task", "classification|regression|all", Some("all"))
+        .opt("scale", "row-count scale (1.0 = paper-sized)", Some("0.1"))
+        .opt("threads", "worker threads", Some("0"))
+        .opt("only", "comma-separated dataset names", None)
+        .opt("seed", "rng seed", Some("42"));
+    let a = cmd.parse(raw)?;
+    let scale = a.get_f64("scale", 0.1)?;
+    let threads = a.get_usize("threads", 0)?;
+    let seed = a.get_u64("seed", 42)?;
+    let only: Option<Vec<String>> = a
+        .get("only")
+        .map(|s| s.split(',').map(|x| x.trim().to_string()).collect());
+    let task = a.get_or("task", "all").to_string();
+
+    let mut entries = Vec::new();
+    if task == "classification" || task == "all" {
+        entries.extend(registry::classification_registry());
+    }
+    if task == "regression" || task == "all" {
+        entries.extend(registry::regression_registry());
+    }
+    if let Some(only) = &only {
+        entries.retain(|e| only.contains(&e.spec.name));
+    }
+
+    let mut table = udt::bench_support::Table::new(&[
+        "dataset", "rows", "feats", "nodes", "depth", "train(ms)", "tune(ms)", "quality",
+        "t.nodes", "t.depth", "t.train(ms)",
+    ]);
+    for e in entries {
+        let ds = generate_any(&e.spec.scaled(scale), seed);
+        let cfg = TrainConfig {
+            n_threads: threads,
+            ..Default::default()
+        };
+        let rep = run_pipeline(&ds, &cfg, seed)?;
+        let quality = match rep.quality {
+            Quality::Accuracy(acc) => format!("acc={acc:.3}"),
+            Quality::Regression { rmse, .. } => format!("rmse={rmse:.2}"),
+        };
+        table.row(vec![
+            rep.dataset,
+            rep.n_examples.to_string(),
+            rep.n_features.to_string(),
+            rep.full_nodes.to_string(),
+            rep.full_depth.to_string(),
+            format!("{:.0}", rep.full_train_ms),
+            format!("{:.1}", rep.tune_ms),
+            quality,
+            rep.tuned_nodes.to_string(),
+            rep.tuned_depth.to_string(),
+            format!("{:.0}", rep.tuned_train_ms),
+        ]);
+        println!("{}", table.render());
+    }
+    Ok(())
+}
+
+fn cmd_serve(raw: &[String]) -> Result<()> {
+    let cmd = Command::new("serve", "TCP prediction server")
+        .opt("model", "tree JSON (from `train --out`)", None)
+        .opt("dataset", "train on a registry dataset instead", None)
+        .opt("scale", "row-count scale", Some("0.1"))
+        .opt("seed", "rng seed", Some("42"))
+        .opt("addr", "listen address", Some("127.0.0.1:7878"))
+        .positional("input.csv (when training from CSV)");
+    let a = cmd.parse(raw)?;
+
+    let (tree, interner, class_names) = if let Some(model) = a.get("model") {
+        // Model-only serving needs an interner seeded by the model itself.
+        let mut interner = udt::data::interner::Interner::new();
+        let text = std::fs::read_to_string(model)?;
+        let tree = serialize::from_json(
+            &Json::parse(&text).map_err(|e| anyhow!("{e}"))?,
+            &mut interner,
+        )?;
+        (tree, interner, Vec::new())
+    } else {
+        let ds = load_dataset(&a)?;
+        let tree = Tree::fit(&ds, &TrainConfig::default())?;
+        (tree, ds.interner.clone(), ds.class_names.clone())
+    };
+
+    let server = Server::new(tree, interner, class_names);
+    let addr = a.get_or("addr", "127.0.0.1:7878").to_string();
+    println!("serving on {addr} (send \"shutdown\" to stop)");
+    server.serve(&addr, |bound| println!("bound {bound}"))
+}
+
+fn cmd_artifacts(raw: &[String]) -> Result<()> {
+    let cmd = Command::new("artifacts", "inspect the AOT artifact manifest")
+        .opt("dir", "artifacts directory", Some("artifacts"));
+    let a = cmd.parse(raw)?;
+    let dir = a.get_or("dir", "artifacts");
+    let manifest = udt::runtime::manifest::Manifest::load(dir)?;
+    for spec in &manifest.artifacts {
+        println!(
+            "{:24} m={:>8} b={:>4} c={:>3}  {}",
+            spec.name,
+            spec.m,
+            spec.b,
+            spec.c,
+            manifest.hlo_path(spec).display()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,146 @@
+//! Equal-frequency (quantile) binning of a node's numeric rows.
+//!
+//! The accelerator path works on fixed-width histograms (B bins), the
+//! standard way to map a per-unique-value scan onto fixed VMEM tiles
+//! (DESIGN.md §2 Hardware-Adaptation). Bin edges are actual data values,
+//! so a bin-boundary split is a valid `≤ edge` predicate; when the node
+//! has ≤ B distinct values the binning is exact and the XLA path scores
+//! exactly the candidates the native path does.
+
+/// Binning of one feature at one node.
+#[derive(Debug, Clone)]
+pub struct Binning {
+    /// Upper edge value of each used bin (ascending). `edges.len() ≤ B`.
+    pub edges: Vec<f64>,
+    /// Bin id of every input row, aligned with the `sorted_rows` input.
+    pub bin_of_sorted: Vec<u32>,
+}
+
+impl Binning {
+    pub fn n_bins(&self) -> usize {
+        self.edges.len()
+    }
+}
+
+/// Bin `values` (ascending) into at most `max_bins` equal-frequency bins
+/// whose boundaries never split a run of equal values. Returns `None`
+/// when `values` is empty.
+pub fn quantile_bins(values: &[f64], max_bins: usize) -> Option<Binning> {
+    let n = values.len();
+    if n == 0 || max_bins == 0 {
+        return None;
+    }
+    let mut edges: Vec<f64> = Vec::new();
+    let mut bin_of_sorted: Vec<u32> = Vec::with_capacity(n);
+
+    // Distinct-value runs, assigned to bins by a target per-bin count.
+    let target = (n as f64 / max_bins as f64).max(1.0);
+    let mut current_bin = 0u32;
+    let mut in_bin = 0usize; // rows already placed in current bin
+    let mut i = 0usize;
+    while i < n {
+        // Find the run of equal values.
+        let v = values[i];
+        let mut j = i;
+        while j < n && values[j] == v {
+            j += 1;
+        }
+        let run = j - i;
+        // Close the current bin if adding this run overshoots the target
+        // (and the bin is non-empty, and more bins are available).
+        if in_bin > 0
+            && (in_bin + run) as f64 > target
+            && (current_bin as usize) < max_bins - 1
+        {
+            current_bin += 1;
+            in_bin = 0;
+        }
+        if in_bin == 0 {
+            edges.push(v);
+        } else {
+            *edges.last_mut().unwrap() = v;
+        }
+        for _ in 0..run {
+            bin_of_sorted.push(current_bin);
+        }
+        in_bin += run;
+        i = j;
+    }
+    Some(Binning {
+        edges,
+        bin_of_sorted,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bin_values(vals: &[f64], max_bins: usize) -> Binning {
+        // vals must already be ascending for this helper.
+        quantile_bins(vals, max_bins).unwrap()
+    }
+
+    #[test]
+    fn distinct_values_under_bins_is_exact() {
+        let vals = [1.0, 2.0, 3.0, 4.0];
+        let b = bin_values(&vals, 8);
+        assert_eq!(b.edges, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(b.bin_of_sorted, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn equal_runs_never_split() {
+        let vals = [1.0, 1.0, 1.0, 1.0, 2.0, 2.0, 2.0, 2.0];
+        let b = bin_values(&vals, 2);
+        assert_eq!(b.edges, vec![1.0, 2.0]);
+        assert_eq!(&b.bin_of_sorted[..4], &[0, 0, 0, 0]);
+        assert_eq!(&b.bin_of_sorted[4..], &[1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn respects_max_bins() {
+        let vals: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let b = bin_values(&vals, 16);
+        assert!(b.n_bins() <= 16);
+        // Equal-frequency: bins are balanced within a factor of ~2.
+        let mut counts = vec![0usize; b.n_bins()];
+        for &bin in &b.bin_of_sorted {
+            counts[bin as usize] += 1;
+        }
+        let (min, max) = (
+            counts.iter().min().unwrap(),
+            counts.iter().max().unwrap(),
+        );
+        assert!(max / min.max(&1) <= 2, "{counts:?}");
+    }
+
+    #[test]
+    fn edges_are_bin_maxima_and_monotonic() {
+        let vals = [0.5, 0.5, 1.5, 2.0, 2.0, 2.0, 9.0];
+        let b = bin_values(&vals, 3);
+        for w in b.edges.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        // Every row's value ≤ its bin's edge, and > previous bin's edge.
+        for (i, &bin) in b.bin_of_sorted.iter().enumerate() {
+            let v = vals[i];
+            assert!(v <= b.edges[bin as usize]);
+            if bin > 0 {
+                assert!(v > b.edges[bin as usize - 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_input_is_none() {
+        assert!(quantile_bins(&[], 4).is_none());
+    }
+
+    #[test]
+    fn single_value_single_bin() {
+        let b = bin_values(&[7.0, 7.0, 7.0], 4);
+        assert_eq!(b.edges, vec![7.0]);
+        assert_eq!(b.bin_of_sorted, vec![0, 0, 0]);
+    }
+}

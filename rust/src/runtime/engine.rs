@@ -1,0 +1,144 @@
+//! PJRT execution engine.
+//!
+//! Wraps the `xla` crate: one CPU PJRT client, plus every artifact from
+//! the manifest compiled **once** at startup (`HloModuleProto::from_text_file
+//! → XlaComputation::from_proto → client.compile`). Python never runs at
+//! request time; the HLO *text* interchange (not serialized protos) is
+//! required because jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects — see /opt/xla-example/README.md.
+
+use super::manifest::{ArtifactSpec, Manifest};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A compiled artifact ready to execute.
+pub struct LoadedArtifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedArtifact {
+    /// Execute with literal inputs; returns the flattened output tuple.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.spec.name))?;
+        let literal = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("execute {}: empty result", self.spec.name))?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal {}: {e:?}", self.spec.name))?;
+        // aot.py lowers with return_tuple=True: the single output is a tuple.
+        literal
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {}: {e:?}", self.spec.name))
+    }
+}
+
+/// The engine: PJRT client + compiled executables by name.
+pub struct Engine {
+    pub manifest: Manifest,
+    artifacts: HashMap<String, LoadedArtifact>,
+    platform: String,
+}
+
+impl Engine {
+    /// Load and compile every artifact under `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let platform = client
+            .platform_name();
+        let mut artifacts = HashMap::new();
+        for spec in &manifest.artifacts {
+            let path = manifest.hlo_path(spec);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))
+                .with_context(|| format!("artifact `{}`", spec.name))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile `{}`: {e:?}", spec.name))?;
+            artifacts.insert(
+                spec.name.clone(),
+                LoadedArtifact {
+                    spec: spec.clone(),
+                    exe,
+                },
+            );
+        }
+        Ok(Engine {
+            manifest,
+            artifacts,
+            platform,
+        })
+    }
+
+    /// Try to load from the default artifacts directory; `None` when the
+    /// artifacts have not been built (callers degrade to the native path).
+    pub fn load_default() -> Option<Engine> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        match Engine::load(&dir) {
+            Ok(e) => Some(e),
+            Err(err) => {
+                eprintln!("warning: failed to load artifacts from {}: {err:#}", dir.display());
+                None
+            }
+        }
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    pub fn get(&self, name: &str) -> Result<&LoadedArtifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Pick the smallest variant fitting `n` rows / `n_classes` classes.
+    pub fn variant_for(&self, n: usize, n_classes: usize) -> Result<&LoadedArtifact> {
+        let spec = self
+            .manifest
+            .variant_for(n, n_classes)
+            .ok_or_else(|| anyhow!("no artifact variant fits m={n}, c={n_classes}"))?;
+        self.get(&spec.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Engine tests requiring built artifacts live in
+    /// `rust/tests/runtime_roundtrip.rs`; here we only cover the
+    /// no-artifacts degradation path.
+    #[test]
+    fn load_default_missing_dir_is_none() {
+        let old = std::env::var_os("UDT_ARTIFACTS");
+        std::env::set_var("UDT_ARTIFACTS", "/nonexistent/udt-artifacts");
+        assert!(Engine::load_default().is_none());
+        match old {
+            Some(v) => std::env::set_var("UDT_ARTIFACTS", v),
+            None => std::env::remove_var("UDT_ARTIFACTS"),
+        }
+    }
+
+    #[test]
+    fn load_missing_manifest_errors() {
+        assert!(Engine::load("/nonexistent/udt-artifacts").is_err());
+    }
+}

@@ -1,0 +1,136 @@
+//! Artifact manifest: `python/compile/aot.py` writes
+//! `artifacts/manifest.json` describing every lowered HLO module and its
+//! static shapes; the Rust engine loads executables from it.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled artifact (a `jax.jit`-lowered module in HLO text).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Logical name, e.g. `split_select_m4096`.
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub path: PathBuf,
+    /// Static example count (padded M).
+    pub m: usize,
+    /// Number of numeric bins (B).
+    pub b: usize,
+    /// Padded class count (C).
+    pub c: usize,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON with the given base directory.
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let json = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let arr = json
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: missing `artifacts` array"))?;
+        let mut artifacts = Vec::with_capacity(arr.len());
+        for (i, a) in arr.iter().enumerate() {
+            let get_str = |k: &str| {
+                a.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact {i}: missing `{k}`"))
+            };
+            let get_num = |k: &str| {
+                a.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("artifact {i}: missing `{k}`"))
+            };
+            artifacts.push(ArtifactSpec {
+                name: get_str("name")?.to_string(),
+                path: PathBuf::from(get_str("path")?),
+                m: get_num("m")?,
+                b: get_num("b")?,
+                c: get_num("c")?,
+            });
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.path)
+    }
+
+    /// Smallest variant whose padded `m` fits `n` rows (and matches `c`).
+    pub fn variant_for(&self, n: usize, n_classes: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.m >= n && a.c >= n_classes)
+            .min_by_key(|a| a.m)
+    }
+
+    /// The default artifacts directory (env `UDT_ARTIFACTS` or
+    /// `artifacts/` relative to the workspace).
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("UDT_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "artifacts": [
+            {"name": "split_select_m4096", "path": "split_select_m4096.hlo.txt",
+             "m": 4096, "b": 256, "c": 32},
+            {"name": "split_select_m32768", "path": "split_select_m32768.hlo.txt",
+             "m": 32768, "b": 256, "c": 32}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.artifacts[0].b, 256);
+        assert_eq!(
+            m.hlo_path(&m.artifacts[0]),
+            PathBuf::from("/tmp/a/split_select_m4096.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn variant_selection_picks_smallest_fit() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        assert_eq!(m.variant_for(100, 2).unwrap().m, 4096);
+        assert_eq!(m.variant_for(4096, 2).unwrap().m, 4096);
+        assert_eq!(m.variant_for(4097, 2).unwrap().m, 32768);
+        assert!(m.variant_for(1_000_000, 2).is_none());
+        assert!(m.variant_for(10, 64).is_none()); // too many classes
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}", PathBuf::from(".")).is_err());
+        assert!(Manifest::parse("[1,2]", PathBuf::from(".")).is_err());
+        assert!(
+            Manifest::parse(r#"{"artifacts":[{"name":"x"}]}"#, PathBuf::from(".")).is_err()
+        );
+    }
+}

@@ -1,0 +1,7 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
+//! Rust request path (Python is build-time only).
+
+pub mod binning;
+pub mod engine;
+pub mod manifest;
+pub mod xla_split;

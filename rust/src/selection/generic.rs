@@ -1,0 +1,164 @@
+//! Generic split selection (paper Algorithm 1) — the `O(M·N)` baseline.
+//!
+//! For every distinct value of the feature it re-scans *all* of the node's
+//! rows to build the positive/negative class counts of each candidate,
+//! then applies the same criterion as [`super::superfast`]. It must agree
+//! with Superfast Selection on every candidate's score — that equivalence
+//! is the core correctness property of the paper and is enforced by the
+//! property tests in `rust/tests/prop_selection.rs`.
+
+use super::heuristic::{sse_score, Criterion};
+use super::split::SplitOp;
+use super::superfast::{FeatureView, LabelsView, ScoredSplit};
+use crate::data::interner::CatId;
+use crate::data::value::Value;
+use std::collections::BTreeSet;
+
+/// Best split on one feature by exhaustive re-scanning.
+pub fn best_split_on_feat_generic(
+    view: &FeatureView,
+    labels: &LabelsView,
+    criterion: Criterion,
+) -> Option<ScoredSplit> {
+    // Collect the unique value sets (one O(M) scan, as Algorithm 1 line 2).
+    let mut nums: Vec<f64> = Vec::new();
+    let mut cats: BTreeSet<u32> = BTreeSet::new();
+    for &r in view.rows {
+        match view.col.get(r as usize) {
+            Value::Num(x) => nums.push(x),
+            Value::Cat(CatId(id)) => {
+                cats.insert(id);
+            }
+            Value::Missing => {}
+        }
+    }
+    nums.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    nums.dedup();
+
+    let mut best: Option<ScoredSplit> = None;
+    let consider = |score: f64, op: SplitOp, best: &mut Option<ScoredSplit>| {
+        if score.is_finite() {
+            let better = match best {
+                None => true,
+                Some(b) => score > b.score,
+            };
+            if better {
+                *best = Some(ScoredSplit { score, op });
+            }
+        }
+    };
+
+    // Candidate loop: one full O(M) scan per candidate (the cost the paper
+    // eliminates). Candidates enumerate in the same order as superfast
+    // (ascending numerics: ≤ then >; then ascending categorical ids) so
+    // tie-breaking matches.
+    let ops = nums
+        .iter()
+        .flat_map(|&x| [SplitOp::Le(x), SplitOp::Gt(x)])
+        .chain(cats.iter().map(|&id| SplitOp::Eq(CatId(id))));
+    for op in ops {
+        match labels {
+            LabelsView::Class { ids, n_classes } => {
+                let c = *n_classes;
+                let mut pos = vec![0.0f64; c];
+                let mut neg = vec![0.0f64; c];
+                for &r in view.rows {
+                    let y = ids[r as usize] as usize;
+                    if op.eval(view.col.get(r as usize)) {
+                        pos[y] += 1.0;
+                    } else {
+                        neg[y] += 1.0;
+                    }
+                }
+                let tp: f64 = pos.iter().sum();
+                let tn: f64 = neg.iter().sum();
+                if tp > 0.0 && tn > 0.0 {
+                    let crit = match criterion {
+                        Criterion::Class(cc) => cc,
+                        Criterion::Sse => panic!("criterion/labels kind mismatch"),
+                    };
+                    consider(crit.score(&pos, &neg), op, &mut best);
+                }
+            }
+            LabelsView::Reg { values } => {
+                let (mut np, mut sp, mut nn, mut sn) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+                for &r in view.rows {
+                    let y = values[r as usize];
+                    if op.eval(view.col.get(r as usize)) {
+                        np += 1.0;
+                        sp += y;
+                    } else {
+                        nn += 1.0;
+                        sn += y;
+                    }
+                }
+                consider(sse_score(np, sp, nn, sn), op, &mut best);
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::column::Column;
+    use crate::selection::heuristic::ClassCriterion;
+    use crate::selection::superfast::best_split_on_feat;
+
+    #[test]
+    fn matches_superfast_on_paper_example() {
+        let (col, labels, _) = crate::selection::superfast::testdata::paper_example();
+        let rows: Vec<u32> = (0..col.len() as u32).collect();
+        let sorted = col.sorted_numeric();
+        let view = FeatureView::new(0, &col, &rows, &sorted.0, &sorted.1);
+        let lv = LabelsView::Class {
+            ids: &labels,
+            n_classes: 3,
+        };
+        let crit = Criterion::Class(ClassCriterion::InfoGain);
+        let fast = best_split_on_feat(&view, &lv, crit).unwrap();
+        let slow = best_split_on_feat_generic(&view, &lv, crit).unwrap();
+        assert_eq!(fast.op, slow.op);
+        assert!((fast.score - slow.score).abs() < 1e-12);
+    }
+
+    #[test]
+    fn agrees_on_degenerate_column() {
+        let col = Column::new("f", vec![Value::Missing; 4]);
+        let labels = vec![0u16, 1, 0, 1];
+        let rows: Vec<u32> = (0..4).collect();
+        let sorted = col.sorted_numeric();
+        let view = FeatureView::new(0, &col, &rows, &sorted.0, &sorted.1);
+        let lv = LabelsView::Class {
+            ids: &labels,
+            n_classes: 2,
+        };
+        let crit = Criterion::Class(ClassCriterion::InfoGain);
+        assert!(best_split_on_feat(&view, &lv, crit).is_none());
+        assert!(best_split_on_feat_generic(&view, &lv, crit).is_none());
+    }
+
+    #[test]
+    fn regression_agreement_small() {
+        let col = Column::new(
+            "f",
+            vec![
+                Value::Num(1.0),
+                Value::Num(3.0),
+                Value::Num(3.0),
+                Value::Num(7.0),
+                Value::Missing,
+            ],
+        );
+        let targets = vec![1.0, 2.0, 2.5, 9.0, 5.0];
+        let rows: Vec<u32> = (0..5).collect();
+        let sorted = col.sorted_numeric();
+        let view = FeatureView::new(0, &col, &rows, &sorted.0, &sorted.1);
+        let lv = LabelsView::Reg { values: &targets };
+        let fast = best_split_on_feat(&view, &lv, Criterion::Sse).unwrap();
+        let slow = best_split_on_feat_generic(&view, &lv, Criterion::Sse).unwrap();
+        assert_eq!(fast.op, slow.op);
+        assert!((fast.score - slow.score).abs() < 1e-9 * fast.score.abs().max(1.0));
+    }
+}

@@ -1,0 +1,359 @@
+//! Split criteria. All scores follow the convention **higher is better**.
+//!
+//! Classification criteria consume the per-class positive/negative counts
+//! of a binary split (paper Algorithm 3 signature); each evaluation is
+//! `O(C)`, which is what makes Superfast Selection `O(M + N·C)` overall.
+//! Regression uses the SSE criterion of paper Eq. 3 reduced to the
+//! `Σ²/n` form that prefix sums can evaluate in `O(1)` per candidate.
+
+/// Classification criterion selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ClassCriterion {
+    /// Simplified information gain (paper Algorithm 3): `−H(T|a)` up to
+    /// the constant `H(T)`.
+    #[default]
+    InfoGain,
+    /// Negative weighted Gini impurity.
+    Gini,
+    /// Pearson χ² statistic of the 2×C contingency table.
+    ChiSquare,
+}
+
+impl ClassCriterion {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "info_gain" | "ig" | "entropy" => Some(Self::InfoGain),
+            "gini" => Some(Self::Gini),
+            "chi2" | "chi_square" => Some(Self::ChiSquare),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::InfoGain => "info_gain",
+            Self::Gini => "gini",
+            Self::ChiSquare => "chi2",
+        }
+    }
+
+    /// Score a binary split from per-class counts. `pos[i]` / `neg[i]` are
+    /// the numbers of class-`i` examples on the positive / negative side.
+    #[inline]
+    pub fn score(&self, pos: &[f64], neg: &[f64]) -> f64 {
+        match self {
+            Self::InfoGain => info_gain(pos, neg),
+            Self::Gini => neg_gini(pos, neg),
+            Self::ChiSquare => chi_square(pos, neg),
+        }
+    }
+
+    /// Hot-path variant: per-class counts come from a closure and the
+    /// side totals are already known (Superfast Selection maintains them
+    /// incrementally), so scoring is a single `O(C)` pass with no
+    /// intermediate arrays. Must agree exactly with [`Self::score`].
+    #[inline]
+    pub fn score_with_totals(
+        &self,
+        c: usize,
+        tot_p: f64,
+        tot_n: f64,
+        mut count_of: impl FnMut(usize) -> (f64, f64),
+    ) -> f64 {
+        let tot = tot_p + tot_n;
+        if tot == 0.0 {
+            return f64::NEG_INFINITY;
+        }
+        match self {
+            Self::InfoGain => {
+                // Accumulation order and expression forms mirror
+                // [`info_gain`] exactly (all positive terms, then all
+                // negative terms) so the two code paths are bit-identical
+                // — cross-engine tie-breaking depends on it.
+                let inv_tot = 1.0 / tot;
+                let mut ret = 0.0;
+                if tot_p > 0.0 {
+                    let inv_p = 1.0 / tot_p;
+                    for y in 0..c {
+                        let (p, _) = count_of(y);
+                        if p > 0.0 {
+                            ret += p * inv_tot * (p * inv_p).ln();
+                        }
+                    }
+                }
+                if tot_n > 0.0 {
+                    let inv_n = 1.0 / tot_n;
+                    for y in 0..c {
+                        let (_, n) = count_of(y);
+                        if n > 0.0 {
+                            ret += n * inv_tot * (n * inv_n).ln();
+                        }
+                    }
+                }
+                ret
+            }
+            Self::Gini => {
+                let mut impurity = 0.0;
+                if tot_p > 0.0 {
+                    let mut s = 0.0;
+                    for y in 0..c {
+                        let (p, _) = count_of(y);
+                        s += (p / tot_p) * (p / tot_p);
+                    }
+                    impurity += tot_p / tot * (1.0 - s);
+                }
+                if tot_n > 0.0 {
+                    let mut s = 0.0;
+                    for y in 0..c {
+                        let (_, n) = count_of(y);
+                        s += (n / tot_n) * (n / tot_n);
+                    }
+                    impurity += tot_n / tot * (1.0 - s);
+                }
+                -impurity
+            }
+            Self::ChiSquare => {
+                if tot_p == 0.0 || tot_n == 0.0 {
+                    return 0.0;
+                }
+                let mut stat = 0.0;
+                for y in 0..c {
+                    let (p, n) = count_of(y);
+                    let class_tot = p + n;
+                    if class_tot == 0.0 {
+                        continue;
+                    }
+                    let exp_p = tot_p * class_tot / tot;
+                    let exp_n = tot_n * class_tot / tot;
+                    stat += (p - exp_p) * (p - exp_p) / exp_p;
+                    stat += (n - exp_n) * (n - exp_n) / exp_n;
+                }
+                stat
+            }
+        }
+    }
+}
+
+/// Task-level criterion (classification variants or regression SSE).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Criterion {
+    Class(ClassCriterion),
+    /// Regression: maximize `Σ_pos²/n_pos + Σ_neg²/n_neg` (equivalent to
+    /// minimizing SSE, paper Eq. 3 with the constant term dropped).
+    Sse,
+}
+
+impl Default for Criterion {
+    fn default() -> Self {
+        Criterion::Class(ClassCriterion::InfoGain)
+    }
+}
+
+/// Paper Algorithm 3: simplified information gain,
+/// `Σ_i (p_i/tot)·log(p_i/tot_p) + Σ_i (n_i/tot)·log(n_i/tot_n)`.
+/// Natural log (matches the worked example's −0.87 at `≤ 2`).
+#[inline]
+pub fn info_gain(pos: &[f64], neg: &[f64]) -> f64 {
+    let tot_p: f64 = pos.iter().sum();
+    let tot_n: f64 = neg.iter().sum();
+    let tot = tot_p + tot_n;
+    if tot == 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    let inv_tot = 1.0 / tot;
+    let mut ret = 0.0;
+    if tot_p > 0.0 {
+        let inv_p = 1.0 / tot_p;
+        for &p in pos {
+            if p > 0.0 {
+                ret += p * inv_tot * (p * inv_p).ln();
+            }
+        }
+    }
+    if tot_n > 0.0 {
+        let inv_n = 1.0 / tot_n;
+        for &n in neg {
+            if n > 0.0 {
+                ret += n * inv_tot * (n * inv_n).ln();
+            }
+        }
+    }
+    ret
+}
+
+/// Negative weighted Gini impurity:
+/// `−( tot_p/tot · (1 − Σ(p_i/tot_p)²) + tot_n/tot · (1 − Σ(n_i/tot_n)²) )`.
+#[inline]
+pub fn neg_gini(pos: &[f64], neg: &[f64]) -> f64 {
+    let tot_p: f64 = pos.iter().sum();
+    let tot_n: f64 = neg.iter().sum();
+    let tot = tot_p + tot_n;
+    if tot == 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    let mut impurity = 0.0;
+    if tot_p > 0.0 {
+        let s: f64 = pos.iter().map(|&p| (p / tot_p) * (p / tot_p)).sum();
+        impurity += tot_p / tot * (1.0 - s);
+    }
+    if tot_n > 0.0 {
+        let s: f64 = neg.iter().map(|&n| (n / tot_n) * (n / tot_n)).sum();
+        impurity += tot_n / tot * (1.0 - s);
+    }
+    -impurity
+}
+
+/// Pearson χ² statistic over the 2×C table (sides × classes).
+#[inline]
+pub fn chi_square(pos: &[f64], neg: &[f64]) -> f64 {
+    let tot_p: f64 = pos.iter().sum();
+    let tot_n: f64 = neg.iter().sum();
+    let tot = tot_p + tot_n;
+    if tot == 0.0 || tot_p == 0.0 || tot_n == 0.0 {
+        return 0.0; // no association measurable
+    }
+    let mut stat = 0.0;
+    for (i, (&p, &n)) in pos.iter().zip(neg).enumerate() {
+        let _ = i;
+        let class_tot = p + n;
+        if class_tot == 0.0 {
+            continue;
+        }
+        let exp_p = tot_p * class_tot / tot;
+        let exp_n = tot_n * class_tot / tot;
+        stat += (p - exp_p) * (p - exp_p) / exp_p;
+        stat += (n - exp_n) * (n - exp_n) / exp_n;
+    }
+    stat
+}
+
+/// Regression SSE criterion in prefix-sum form (higher is better):
+/// `sum_p²/n_p + sum_n²/n_n`. Returns `-inf` if either side is empty
+/// (no valid partition).
+#[inline]
+pub fn sse_score(n_pos: f64, sum_pos: f64, n_neg: f64, sum_neg: f64) -> f64 {
+    if n_pos <= 0.0 || n_neg <= 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    sum_pos * sum_pos / n_pos + sum_neg * sum_neg / n_neg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn info_gain_prefers_pure_split() {
+        // Perfect separation of two classes...
+        let pure = info_gain(&[10.0, 0.0], &[0.0, 10.0]);
+        // ...beats a totally mixed one.
+        let mixed = info_gain(&[5.0, 5.0], &[5.0, 5.0]);
+        assert!(pure > mixed);
+        assert!((pure - 0.0).abs() < 1e-12); // pure sides have zero cond. entropy
+        assert!((mixed - (0.5f64.ln())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_worked_example_le_2() {
+        // Paper Tables 1/2/4: split `≤ 2` → pos = {4 examples of class b},
+        // neg = {7 a, 4 b, 7 c}; score reported as −0.87.
+        let score = info_gain(&[0.0, 4.0, 0.0], &[7.0, 4.0, 7.0]);
+        assert!((score - (-0.87)).abs() < 0.005, "score={score}");
+    }
+
+    #[test]
+    fn paper_worked_example_table4_rows() {
+        // Rows of paper Table 4 that are arithmetically consistent with
+        // Tables 1–2 (a few of the published cells appear to be typos;
+        // see EXPERIMENTS.md §T1–T4 for the full re-derivation).
+        // `≤ 1`: pos = 2 of class b; neg = a:7, b:6, c:7 → −0.99.
+        let s = info_gain(&[0.0, 2.0, 0.0], &[7.0, 6.0, 7.0]);
+        assert!((s - (-0.99)).abs() < 0.01, "{s}");
+        // `= x` (categorical): pos = a:2; neg = a:5, b:8, c:7 → −0.98.
+        let s = info_gain(&[2.0, 0.0, 0.0], &[5.0, 8.0, 7.0]);
+        assert!((s - (-0.98)).abs() < 0.01, "{s}");
+        // `> 1`: pos = a:4, b:3, c:5; neg = a:3, b:5, c:2 → −1.06.
+        let s = info_gain(&[4.0, 3.0, 5.0], &[3.0, 5.0, 2.0]);
+        assert!((s - (-1.06)).abs() < 0.01, "{s}");
+        // `≤ 4`: pos = a:3, b:5, c:3; neg = a:4, b:3, c:4 → −1.08.
+        let s = info_gain(&[3.0, 5.0, 3.0], &[4.0, 3.0, 4.0]);
+        assert!((s - (-1.08)).abs() < 0.01, "{s}");
+    }
+
+    #[test]
+    fn gini_prefers_pure_split() {
+        let pure = neg_gini(&[10.0, 0.0], &[0.0, 10.0]);
+        let mixed = neg_gini(&[5.0, 5.0], &[5.0, 5.0]);
+        assert!(pure > mixed);
+        assert_eq!(pure, 0.0);
+        assert!((mixed - (-0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chi2_zero_when_independent() {
+        // Same class mix on both sides → no association.
+        let s = chi_square(&[6.0, 2.0], &[3.0, 1.0]);
+        assert!(s.abs() < 1e-9, "{s}");
+        // Perfect association is large.
+        assert!(chi_square(&[8.0, 0.0], &[0.0, 8.0]) > 10.0);
+    }
+
+    #[test]
+    fn criteria_handle_empty_sides() {
+        for c in [
+            ClassCriterion::InfoGain,
+            ClassCriterion::Gini,
+            ClassCriterion::ChiSquare,
+        ] {
+            let s = c.score(&[0.0, 0.0], &[3.0, 4.0]);
+            assert!(s.is_finite() || s == f64::NEG_INFINITY);
+        }
+    }
+
+    #[test]
+    fn sse_score_prefix_form() {
+        // Labels [1,1,5,5]: split in the middle is exact.
+        let best = sse_score(2.0, 2.0, 2.0, 10.0);
+        let worse = sse_score(1.0, 1.0, 3.0, 11.0);
+        assert!(best > worse);
+        assert_eq!(sse_score(0.0, 0.0, 4.0, 12.0), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn score_with_totals_bit_identical_to_score() {
+        let cases: Vec<(Vec<f64>, Vec<f64>)> = vec![
+            (vec![3.0, 0.0, 4.0], vec![4.0, 8.0, 3.0]),
+            (vec![0.0, 2.0, 0.0], vec![7.0, 6.0, 7.0]),
+            (vec![1.0, 1.0], vec![9.0, 0.0]),
+            (vec![5.0], vec![5.0]),
+        ];
+        for crit in [
+            ClassCriterion::InfoGain,
+            ClassCriterion::Gini,
+            ClassCriterion::ChiSquare,
+        ] {
+            for (pos, neg) in &cases {
+                let a = crit.score(pos, neg);
+                let tp: f64 = pos.iter().sum();
+                let tn: f64 = neg.iter().sum();
+                let b = crit.score_with_totals(pos.len(), tp, tn, |y| (pos[y], neg[y]));
+                assert!(
+                    a == b || (a.is_nan() && b.is_nan()),
+                    "{crit:?} {pos:?}/{neg:?}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parse_names_round_trip() {
+        for c in [
+            ClassCriterion::InfoGain,
+            ClassCriterion::Gini,
+            ClassCriterion::ChiSquare,
+        ] {
+            assert_eq!(ClassCriterion::parse(c.name()), Some(c));
+        }
+        assert_eq!(ClassCriterion::parse("nope"), None);
+    }
+}

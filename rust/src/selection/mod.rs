@@ -1,0 +1,20 @@
+//! Split selection — the paper's core contribution.
+//!
+//! * [`split`] — split predicates and the hybrid comparison semantics.
+//! * [`heuristic`] — split criteria (information gain, Gini, χ², SSE).
+//! * [`superfast`] — Superfast Selection: `O(M + N·C)` per feature via a
+//!   single statistics pass + prefix sums (paper Algorithms 2 & 4).
+//! * [`generic`] — the `O(M·N)` baseline (paper Algorithm 1).
+//! * [`xla_backend`] — alternate large-node backend that executes the
+//!   AOT-compiled JAX/Pallas kernels through PJRT.
+
+pub mod feature_rank;
+pub mod generic;
+pub mod heuristic;
+pub mod split;
+pub mod superfast;
+pub mod xla_backend;
+
+pub use heuristic::{ClassCriterion, Criterion};
+pub use split::{SplitOp, SplitPredicate};
+pub use superfast::{best_split_on_feat, FeatureView, LabelsView, ScoredSplit};

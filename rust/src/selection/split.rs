@@ -1,0 +1,152 @@
+//! Split predicates over hybrid values.
+//!
+//! A split is a unary predicate `pred(v) → bool` on one feature. The
+//! positive branch holds rows where the predicate is true. Candidates
+//! (paper §2 "Split Candidates"):
+//!
+//! * `≤ x` and `> x` for every numeric value `x` — note these are *not*
+//!   complements in a hybrid column: categorical and missing cells
+//!   evaluate false under both, so both are scored;
+//! * `= c` for every categorical value `c` (`≠ c` is its complement and
+//!   carries the same score under the symmetric criteria, so it is not
+//!   enumerated separately);
+//! * missing cells evaluate false under every candidate ("left
+//!   untouched": always routed to the negative branch).
+
+use crate::data::interner::{CatId, Interner};
+use crate::data::value::Value;
+use std::fmt;
+
+/// The comparison operator + operand of a split.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SplitOp {
+    /// Numeric `value ≤ threshold`.
+    Le(f64),
+    /// Numeric `value > threshold`.
+    Gt(f64),
+    /// Categorical `value = category`.
+    Eq(CatId),
+}
+
+impl SplitOp {
+    /// Evaluate against a cell value (Table 3 semantics).
+    #[inline]
+    pub fn eval(&self, v: Value) -> bool {
+        match (self, v) {
+            (SplitOp::Le(t), Value::Num(x)) => x <= *t,
+            (SplitOp::Gt(t), Value::Num(x)) => x > *t,
+            (SplitOp::Eq(c), Value::Cat(id)) => id == *c,
+            // Cross-type and missing: always false.
+            _ => false,
+        }
+    }
+}
+
+/// A complete split: feature index + operator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SplitPredicate {
+    pub feature: usize,
+    pub op: SplitOp,
+}
+
+impl SplitPredicate {
+    #[inline]
+    pub fn eval_row(&self, row: &[Value]) -> bool {
+        self.op.eval(row[self.feature])
+    }
+
+    #[inline]
+    pub fn eval_value(&self, v: Value) -> bool {
+        self.op.eval(v)
+    }
+
+    /// Render with the interner for categorical operands.
+    pub fn display<'a>(&'a self, interner: &'a Interner) -> SplitDisplay<'a> {
+        SplitDisplay {
+            split: self,
+            interner,
+        }
+    }
+}
+
+/// Pretty-printer bound to an interner.
+pub struct SplitDisplay<'a> {
+    split: &'a SplitPredicate,
+    interner: &'a Interner,
+}
+
+impl fmt::Display for SplitDisplay<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.split.op {
+            SplitOp::Le(t) => write!(f, "f{} ≤ {t}", self.split.feature),
+            SplitOp::Gt(t) => write!(f, "f{} > {t}", self.split.feature),
+            SplitOp::Eq(c) => {
+                write!(f, "f{} = {}", self.split.feature, self.interner.name(c))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::interner::Interner;
+
+    #[test]
+    fn le_gt_on_numeric() {
+        assert!(SplitOp::Le(2.0).eval(Value::Num(2.0)));
+        assert!(!SplitOp::Le(2.0).eval(Value::Num(2.1)));
+        assert!(SplitOp::Gt(2.0).eval(Value::Num(2.1)));
+        assert!(!SplitOp::Gt(2.0).eval(Value::Num(2.0)));
+    }
+
+    #[test]
+    fn categorical_and_missing_fail_numeric_ops() {
+        let mut i = Interner::new();
+        let c = Value::Cat(i.intern("x"));
+        assert!(!SplitOp::Le(1e9).eval(c));
+        assert!(!SplitOp::Gt(-1e9).eval(c));
+        assert!(!SplitOp::Le(1e9).eval(Value::Missing));
+        assert!(!SplitOp::Gt(-1e9).eval(Value::Missing));
+    }
+
+    #[test]
+    fn eq_on_categorical_only() {
+        let mut i = Interner::new();
+        let x = i.intern("x");
+        let y = i.intern("y");
+        assert!(SplitOp::Eq(x).eval(Value::Cat(x)));
+        assert!(!SplitOp::Eq(x).eval(Value::Cat(y)));
+        assert!(!SplitOp::Eq(x).eval(Value::Num(0.0)));
+        assert!(!SplitOp::Eq(x).eval(Value::Missing));
+    }
+
+    #[test]
+    fn le_and_gt_are_not_complements_on_hybrid() {
+        let mut i = Interner::new();
+        let c = Value::Cat(i.intern("x"));
+        // Both false: the hybrid cell goes negative under either split.
+        assert!(!SplitOp::Le(5.0).eval(c) && !SplitOp::Gt(5.0).eval(c));
+    }
+
+    #[test]
+    fn eval_row_uses_feature_index() {
+        let p = SplitPredicate {
+            feature: 1,
+            op: SplitOp::Le(3.0),
+        };
+        assert!(p.eval_row(&[Value::Num(100.0), Value::Num(2.0)]));
+        assert!(!p.eval_row(&[Value::Num(2.0), Value::Num(100.0)]));
+    }
+
+    #[test]
+    fn display_renders_categories() {
+        let mut i = Interner::new();
+        let id = i.intern("red");
+        let p = SplitPredicate {
+            feature: 3,
+            op: SplitOp::Eq(id),
+        };
+        assert_eq!(format!("{}", p.display(&i)), "f3 = red");
+    }
+}

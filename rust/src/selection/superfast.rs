@@ -1,0 +1,699 @@
+//! Superfast Selection (paper Algorithms 2 & 4).
+//!
+//! One pass over the node's rows collects per-class statistics
+//! (`O(M_node)`); a walk over the pre-sorted numeric rows maintains the
+//! running prefix counts, scoring every `≤ x` / `> x` candidate in `O(C)`
+//! at each distinct value boundary; categorical `= c` candidates are
+//! scored from the per-category count table. Total: `O(M + N·C)` per
+//! feature versus the generic engine's `O(M·N)`.
+
+use super::heuristic::{sse_score, Criterion};
+use super::split::SplitOp;
+use crate::data::column::Column;
+use crate::data::interner::CatId;
+use crate::data::value::Value;
+use std::collections::BTreeMap;
+
+/// Label access for selection: class ids or regression targets.
+#[derive(Debug, Clone, Copy)]
+pub enum LabelsView<'a> {
+    Class { ids: &'a [u16], n_classes: usize },
+    Reg { values: &'a [f64] },
+}
+
+impl<'a> LabelsView<'a> {
+    pub fn from_labels(labels: &'a crate::data::dataset::Labels) -> Self {
+        match labels {
+            crate::data::dataset::Labels::Class { ids, n_classes } => LabelsView::Class {
+                ids,
+                n_classes: *n_classes,
+            },
+            crate::data::dataset::Labels::Reg { values } => LabelsView::Reg { values },
+        }
+    }
+}
+
+/// One feature of one tree node, as the selection engines see it.
+#[derive(Debug, Clone, Copy)]
+pub struct FeatureView<'a> {
+    /// Feature index (for the returned predicate).
+    pub feature: usize,
+    /// The full column (row-addressable).
+    pub col: &'a Column,
+    /// All rows of the node.
+    pub rows: &'a [u32],
+    /// The node's numeric rows for this feature, sorted ascending by value
+    /// (UDT's maintained `X^A`).
+    pub sorted_num: &'a [u32],
+    /// Values parallel to `sorted_num` — carried through the builder's
+    /// filtering so the prefix walk reads values sequentially.
+    pub sorted_vals: &'a [f64],
+    /// Per-class counts of *all* node rows (classification; may be empty,
+    /// in which case pass 1 derives totals itself).
+    pub class_counts: &'a [f64],
+    /// `(count, sum)` of targets over all node rows (regression).
+    pub reg_stats: Option<(f64, f64)>,
+    /// Whether the column contains categorical/missing cells anywhere in
+    /// the dataset. `false` lets the engine skip the O(M) statistics pass
+    /// entirely (totals come from `class_counts` / `reg_stats`).
+    pub col_has_nonnum: bool,
+    /// The node's categorical rows for this feature, grouped by ascending
+    /// category id (parallel arrays). When `cat_lists_valid`, the engine
+    /// derives all statistics from the sorted lists — no column access.
+    pub sorted_cat_rows: &'a [u32],
+    /// Category ids parallel to `sorted_cat_rows` (non-decreasing).
+    pub sorted_cat_ids: &'a [u32],
+    /// Whether `sorted_cat_rows/ids` are authoritative for this node.
+    pub cat_lists_valid: bool,
+    /// Class labels parallel to `sorted_num` (classification only; may be
+    /// empty — the engine then looks labels up through the row ids).
+    pub sorted_labs: &'a [u16],
+    /// Class labels parallel to `sorted_cat_rows` (same contract).
+    pub sorted_cat_labs: &'a [u16],
+}
+
+impl<'a> FeatureView<'a> {
+    /// Conservative constructor (always runs the statistics pass);
+    /// convenient for tests, benches and one-off calls.
+    pub fn new(
+        feature: usize,
+        col: &'a Column,
+        rows: &'a [u32],
+        sorted_num: &'a [u32],
+        sorted_vals: &'a [f64],
+    ) -> Self {
+        debug_assert_eq!(sorted_num.len(), sorted_vals.len());
+        Self {
+            feature,
+            col,
+            rows,
+            sorted_num,
+            sorted_vals,
+            class_counts: &[],
+            reg_stats: None,
+            col_has_nonnum: true,
+            sorted_cat_rows: &[],
+            sorted_cat_ids: &[],
+            cat_lists_valid: false,
+            sorted_labs: &[],
+            sorted_cat_labs: &[],
+        }
+    }
+}
+
+/// A candidate split with its heuristic score (higher is better).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScoredSplit {
+    pub score: f64,
+    pub op: SplitOp,
+}
+
+/// `Option<ScoredSplit>` upgrade helper: keep the strictly-better
+/// candidate; ignore non-finite scores (empty-side sentinels).
+trait Consider {
+    fn consider(&mut self, score: f64, op: SplitOp);
+}
+
+impl Consider for Option<ScoredSplit> {
+    #[inline]
+    fn consider(&mut self, score: f64, op: SplitOp) {
+        if !score.is_finite() {
+            return;
+        }
+        match self {
+            None => *self = Some(ScoredSplit { score, op }),
+            Some(b) if score > b.score => *self = Some(ScoredSplit { score, op }),
+            _ => {}
+        }
+    }
+}
+
+/// Reusable scratch buffers so per-node selection does not allocate in the
+/// hot loop.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    cum: Vec<f64>,
+    tot_num: Vec<f64>,
+    rest: Vec<f64>,
+    pos: Vec<f64>,
+    neg: Vec<f64>,
+    cat: BTreeMap<u32, Vec<f64>>,
+    cat_reg: BTreeMap<u32, (f64, f64)>,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn reset_class(&mut self, c: usize) {
+        for v in [&mut self.cum, &mut self.tot_num, &mut self.rest, &mut self.pos, &mut self.neg]
+        {
+            v.clear();
+            v.resize(c, 0.0);
+        }
+        self.cat.clear();
+    }
+}
+
+/// Best split on one feature — allocating convenience wrapper.
+pub fn best_split_on_feat(
+    view: &FeatureView,
+    labels: &LabelsView,
+    criterion: Criterion,
+) -> Option<ScoredSplit> {
+    let mut scratch = Scratch::new();
+    best_split_on_feat_with(view, labels, criterion, &mut scratch)
+}
+
+/// Best split on one feature using caller-provided scratch buffers.
+pub fn best_split_on_feat_with(
+    view: &FeatureView,
+    labels: &LabelsView,
+    criterion: Criterion,
+    scratch: &mut Scratch,
+) -> Option<ScoredSplit> {
+    match (labels, criterion) {
+        (LabelsView::Class { ids, n_classes }, Criterion::Class(crit)) => {
+            classification(view, ids, *n_classes, crit, scratch)
+        }
+        (LabelsView::Reg { values }, Criterion::Sse) => regression(view, values, scratch),
+        _ => panic!("criterion/labels kind mismatch"),
+    }
+}
+
+fn classification(
+    view: &FeatureView,
+    ids: &[u16],
+    n_classes: usize,
+    crit: super::heuristic::ClassCriterion,
+    scratch: &mut Scratch,
+) -> Option<ScoredSplit> {
+    let c = n_classes;
+    scratch.reset_class(c);
+
+    // Pass 1 (Algorithm 4 lines 2–9): per-class totals and the
+    // per-category count table. `rest` = categorical + missing counts —
+    // rows that evaluate false under every numeric candidate.
+    //
+    // Fast path (builder-provided node stats + maintained lists): derive
+    // the numeric totals from the sorted numeric list, the rest by
+    // subtraction from the node's class counts, and the per-category
+    // table later from the grouped categorical list — no column access,
+    // no hash map, everything sequential.
+    let node_stats = view.class_counts.len() == c;
+    if !view.col_has_nonnum && node_stats {
+        scratch.tot_num.copy_from_slice(view.class_counts);
+    } else if view.cat_lists_valid && node_stats {
+        if view.sorted_labs.len() == view.sorted_num.len() {
+            for &y in view.sorted_labs {
+                scratch.tot_num[y as usize] += 1.0;
+            }
+        } else {
+            for &r in view.sorted_num {
+                scratch.tot_num[ids[r as usize] as usize] += 1.0;
+            }
+        }
+        for y in 0..c {
+            scratch.rest[y] = view.class_counts[y] - scratch.tot_num[y];
+        }
+    } else {
+        for &r in view.rows {
+            let y = ids[r as usize] as usize;
+            match view.col.get(r as usize) {
+                Value::Num(_) => scratch.tot_num[y] += 1.0,
+                Value::Cat(CatId(id)) => {
+                    scratch.rest[y] += 1.0;
+                    scratch
+                        .cat
+                        .entry(id)
+                        .or_insert_with(|| vec![0.0; c])[y] += 1.0;
+                }
+                Value::Missing => scratch.rest[y] += 1.0,
+            }
+        }
+    }
+
+    let mut best: Option<ScoredSplit> = None;
+
+    // Pass 2 (lines 10–28): prefix-sum walk over the sorted numeric rows.
+    // `cum[y]` is cnt_n[y, ≤ x] — the prefix sum — maintained incrementally.
+    // Values stream sequentially from `sorted_vals`.
+    let sorted = view.sorted_num;
+    let vals = view.sorted_vals;
+    let mut i = 0;
+    let n_num_total: f64 = scratch.tot_num.iter().sum();
+    let rest_total: f64 = scratch.rest.iter().sum();
+    let mut cum_total = 0.0f64; // maintained incrementally (O(1)/candidate)
+    let inline_labs = view.sorted_labs.len() == sorted.len();
+    while i < sorted.len() {
+        let x = vals[i];
+        // Absorb the group of rows sharing value x. With inline labels
+        // (builder-maintained) the accumulate streams sequentially.
+        let group_start = i;
+        if inline_labs {
+            while i < sorted.len() && vals[i] == x {
+                scratch.cum[view.sorted_labs[i] as usize] += 1.0;
+                i += 1;
+            }
+        } else {
+            while i < sorted.len() && vals[i] == x {
+                scratch.cum[ids[sorted[i] as usize] as usize] += 1.0;
+                i += 1;
+            }
+        }
+        cum_total += (i - group_start) as f64;
+        let (cum, tot_num, rest) = (&scratch.cum, &scratch.tot_num, &scratch.rest);
+        // `≤ x`: pos = prefix counts; neg = remaining numerics + rest.
+        // Totals are maintained incrementally, so each candidate is one
+        // fused O(C) pass (no pos/neg arrays materialized).
+        let pos_total = cum_total;
+        let neg_total = n_num_total - cum_total + rest_total;
+        if pos_total > 0.0 && neg_total > 0.0 {
+            let score = crit.score_with_totals(c, pos_total, neg_total, |y| {
+                (cum[y], tot_num[y] - cum[y] + rest[y])
+            });
+            best.consider(score, SplitOp::Le(x));
+        }
+        // `> x`: pos = suffix numerics; neg = prefix + rest.
+        let pos_total = n_num_total - cum_total;
+        let neg_total = cum_total + rest_total;
+        if pos_total > 0.0 && neg_total > 0.0 {
+            let score = crit.score_with_totals(c, pos_total, neg_total, |y| {
+                (tot_num[y] - cum[y], cum[y] + rest[y])
+            });
+            best.consider(score, SplitOp::Gt(x));
+        }
+    }
+
+    // Pass 3 (lines 29–36): categorical `= x` candidates.
+    let all_total = n_num_total + rest_total;
+    if view.cat_lists_valid && node_stats {
+        // Grouped walk over the maintained categorical list (ids are
+        // non-decreasing, so each category is one contiguous group).
+        let cat_ids = view.sorted_cat_ids;
+        let cat_rows = view.sorted_cat_rows;
+        let inline_cat_labs = view.sorted_cat_labs.len() == cat_ids.len();
+        let mut i = 0;
+        while i < cat_ids.len() {
+            let id = cat_ids[i];
+            for y in 0..c {
+                scratch.pos[y] = 0.0;
+            }
+            let mut pos_total = 0.0f64;
+            while i < cat_ids.len() && cat_ids[i] == id {
+                let y = if inline_cat_labs {
+                    view.sorted_cat_labs[i] as usize
+                } else {
+                    ids[cat_rows[i] as usize] as usize
+                };
+                scratch.pos[y] += 1.0;
+                pos_total += 1.0;
+                i += 1;
+            }
+            let neg_total = all_total - pos_total;
+            if pos_total > 0.0 && neg_total > 0.0 {
+                for y in 0..c {
+                    scratch.neg[y] =
+                        scratch.tot_num[y] + scratch.rest[y] - scratch.pos[y];
+                }
+                let score = crit.score(&scratch.pos, &scratch.neg);
+                best.consider(score, SplitOp::Eq(CatId(id)));
+            }
+        }
+    } else {
+        for (&id, cnt) in &scratch.cat {
+            let pos_total: f64 = cnt.iter().sum();
+            let neg_total = all_total - pos_total;
+            if pos_total > 0.0 && neg_total > 0.0 {
+                for y in 0..c {
+                    scratch.pos[y] = cnt[y];
+                    scratch.neg[y] = scratch.tot_num[y] + scratch.rest[y] - cnt[y];
+                }
+                let score = crit.score(&scratch.pos, &scratch.neg);
+                best.consider(score, SplitOp::Eq(CatId(id)));
+            }
+        }
+    }
+
+    best
+}
+
+fn regression(view: &FeatureView, values: &[f64], scratch: &mut Scratch) -> Option<ScoredSplit> {
+    scratch.cat_reg.clear();
+    // Pass 1: totals. (count, sum) for numerics and for the rest. Skipped
+    // for clean columns (totals provided by the caller).
+    let (mut n_num, mut sum_num) = (0.0f64, 0.0f64);
+    let (mut n_rest, mut sum_rest) = (0.0f64, 0.0f64);
+    match (view.col_has_nonnum, view.reg_stats, view.cat_lists_valid) {
+        (false, Some((n, sum)), _) => {
+            n_num = n;
+            sum_num = sum;
+        }
+        (true, Some((n_all_s, sum_all_s)), true) => {
+            // Fast path: numeric totals from the sorted list; the rest by
+            // subtraction. Categorical groups are handled in pass 3.
+            n_num = view.sorted_num.len() as f64;
+            for &r in view.sorted_num {
+                sum_num += values[r as usize];
+            }
+            n_rest = n_all_s - n_num;
+            sum_rest = sum_all_s - sum_num;
+        }
+        _ => {
+            for &r in view.rows {
+                let y = values[r as usize];
+                match view.col.get(r as usize) {
+                    Value::Num(_) => {
+                        n_num += 1.0;
+                        sum_num += y;
+                    }
+                    Value::Cat(CatId(id)) => {
+                        n_rest += 1.0;
+                        sum_rest += y;
+                        let e = scratch.cat_reg.entry(id).or_insert((0.0, 0.0));
+                        e.0 += 1.0;
+                        e.1 += y;
+                    }
+                    Value::Missing => {
+                        n_rest += 1.0;
+                        sum_rest += y;
+                    }
+                }
+            }
+        }
+    }
+    let (n_all, sum_all) = (n_num + n_rest, sum_num + sum_rest);
+
+    let mut best: Option<ScoredSplit> = None;
+
+    // Pass 2: prefix-sum walk over sequential values.
+    let sorted = view.sorted_num;
+    let vals = view.sorted_vals;
+    let mut i = 0;
+    let (mut cum_n, mut cum_sum) = (0.0f64, 0.0f64);
+    while i < sorted.len() {
+        let x = vals[i];
+        while i < sorted.len() && vals[i] == x {
+            cum_n += 1.0;
+            cum_sum += values[sorted[i] as usize];
+            i += 1;
+        }
+        // `≤ x`
+        let score = sse_score(cum_n, cum_sum, n_all - cum_n, sum_all - cum_sum);
+        best.consider(score, SplitOp::Le(x));
+        // `> x`
+        let score = sse_score(
+            n_num - cum_n,
+            sum_num - cum_sum,
+            cum_n + n_rest,
+            cum_sum + sum_rest,
+        );
+        best.consider(score, SplitOp::Gt(x));
+    }
+
+    // Pass 3: categorical candidates.
+    if view.cat_lists_valid && view.reg_stats.is_some() {
+        // Grouped walk over the maintained categorical list.
+        let cat_ids = view.sorted_cat_ids;
+        let cat_rows = view.sorted_cat_rows;
+        let mut i = 0;
+        while i < cat_ids.len() {
+            let id = cat_ids[i];
+            let (mut cn, mut cs) = (0.0f64, 0.0f64);
+            while i < cat_ids.len() && cat_ids[i] == id {
+                cn += 1.0;
+                cs += values[cat_rows[i] as usize];
+                i += 1;
+            }
+            let score = sse_score(cn, cs, n_all - cn, sum_all - cs);
+            best.consider(score, SplitOp::Eq(CatId(id)));
+        }
+    } else {
+        for (&id, &(cn, cs)) in &scratch.cat_reg {
+            let score = sse_score(cn, cs, n_all - cn, sum_all - cs);
+            best.consider(score, SplitOp::Eq(CatId(id)));
+        }
+    }
+
+    best
+}
+
+/// Best split across all features (paper Algorithm 4,
+/// `best_split_on_all_feats`). Sequential; the coordinator provides a
+/// parallel version.
+pub fn best_split_on_all_feats(
+    views: &[FeatureView],
+    labels: &LabelsView,
+    criterion: Criterion,
+) -> Option<(usize, ScoredSplit)> {
+    let mut scratch = Scratch::new();
+    let mut best: Option<(usize, ScoredSplit)> = None;
+    for view in views {
+        if let Some(s) = best_split_on_feat_with(view, labels, criterion, &mut scratch) {
+            let better = match &best {
+                None => true,
+                Some((_, b)) => s.score > b.score,
+            };
+            if better {
+                best = Some((view.feature, s));
+            }
+        }
+    }
+    best
+}
+
+/// Paper worked-example fixture shared across test modules.
+#[cfg(test)]
+pub(crate) mod testdata {
+    use crate::data::column::Column;
+    use crate::data::interner::Interner;
+    use crate::data::value::Value;
+
+    /// Paper Tables 1–2: 22 examples, classes a/b/c, hybrid feature.
+    pub(crate) fn paper_example() -> (Column, Vec<u16>, Interner) {
+        let mut interner = Interner::new();
+        let x = interner.intern("x");
+        let y = interner.intern("y");
+        let z = interner.intern("z");
+        let mut vals = Vec::new();
+        let mut labels = Vec::new();
+        // class a (label 0): 3 4 4 5 x x y
+        for v in [3.0, 4.0, 4.0, 5.0] {
+            vals.push(Value::Num(v));
+            labels.push(0);
+        }
+        for c in [x, x, y] {
+            vals.push(Value::Cat(c));
+            labels.push(0);
+        }
+        // class b (label 1): 1 1 2 2 3 y y z
+        for v in [1.0, 1.0, 2.0, 2.0, 3.0] {
+            vals.push(Value::Num(v));
+            labels.push(1);
+        }
+        for c in [y, y, z] {
+            vals.push(Value::Cat(c));
+            labels.push(1);
+        }
+        // class c (label 2): 3 4 4 5 5 z z
+        for v in [3.0, 4.0, 4.0, 5.0, 5.0] {
+            vals.push(Value::Num(v));
+            labels.push(2);
+        }
+        for c in [z, z] {
+            vals.push(Value::Cat(c));
+            labels.push(2);
+        }
+        (Column::new("f", vals), labels, interner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testdata::paper_example;
+    use super::*;
+    use crate::data::column::Column;
+    use crate::data::interner::Interner;
+    use crate::selection::heuristic::ClassCriterion;
+
+    fn view_of<'a>(
+        col: &'a Column,
+        rows: &'a [u32],
+        sorted: &'a (Vec<u32>, Vec<f64>),
+    ) -> FeatureView<'a> {
+        FeatureView::new(0, col, rows, &sorted.0, &sorted.1)
+    }
+
+    #[test]
+    fn paper_best_split_is_le_2_at_minus_0_87() {
+        let (col, labels, _) = paper_example();
+        let rows: Vec<u32> = (0..col.len() as u32).collect();
+        let sorted = col.sorted_numeric();
+        let view = view_of(&col, &rows, &sorted);
+        let lv = LabelsView::Class {
+            ids: &labels,
+            n_classes: 3,
+        };
+        let best = best_split_on_feat(&view, &lv, Criterion::Class(ClassCriterion::InfoGain))
+            .expect("has candidates");
+        assert_eq!(best.op, SplitOp::Le(2.0));
+        assert!((best.score - (-0.87)).abs() < 0.005, "score={}", best.score);
+    }
+
+    #[test]
+    fn pure_numeric_perfect_split() {
+        let col = Column::new(
+            "f",
+            (0..10).map(|i| Value::Num(i as f64)).collect::<Vec<_>>(),
+        );
+        let labels: Vec<u16> = (0..10).map(|i| (i >= 5) as u16).collect();
+        let rows: Vec<u32> = (0..10).collect();
+        let sorted = col.sorted_numeric();
+        let view = view_of(&col, &rows, &sorted);
+        let lv = LabelsView::Class {
+            ids: &labels,
+            n_classes: 2,
+        };
+        let best = best_split_on_feat(&view, &lv, Criterion::Class(ClassCriterion::InfoGain))
+            .unwrap();
+        assert_eq!(best.op, SplitOp::Le(4.0));
+        assert!(best.score.abs() < 1e-12); // perfectly pure
+    }
+
+    #[test]
+    fn all_same_value_no_split() {
+        let col = Column::new("f", vec![Value::Num(1.0); 6]);
+        let labels = vec![0u16, 1, 0, 1, 0, 1];
+        let rows: Vec<u32> = (0..6).collect();
+        let sorted = col.sorted_numeric();
+        let view = view_of(&col, &rows, &sorted);
+        let lv = LabelsView::Class {
+            ids: &labels,
+            n_classes: 2,
+        };
+        // `≤1` has an empty negative side and `>1` an empty positive side;
+        // no categorical values — no usable candidate.
+        assert!(best_split_on_feat(&view, &lv, Criterion::Class(ClassCriterion::InfoGain))
+            .is_none());
+    }
+
+    #[test]
+    fn missing_rows_always_negative() {
+        // Feature: [1, 2, Missing, Missing]; classes [0, 0, 1, 1].
+        let col = Column::new(
+            "f",
+            vec![
+                Value::Num(1.0),
+                Value::Num(2.0),
+                Value::Missing,
+                Value::Missing,
+            ],
+        );
+        let labels = vec![0u16, 0, 1, 1];
+        let rows: Vec<u32> = (0..4).collect();
+        let sorted = col.sorted_numeric();
+        let view = view_of(&col, &rows, &sorted);
+        let lv = LabelsView::Class {
+            ids: &labels,
+            n_classes: 2,
+        };
+        let best = best_split_on_feat(&view, &lv, Criterion::Class(ClassCriterion::InfoGain))
+            .unwrap();
+        // `≤2` separates numerics (class 0) from missings (class 1): pure.
+        assert_eq!(best.op, SplitOp::Le(2.0));
+        assert!(best.score.abs() < 1e-12);
+    }
+
+    #[test]
+    fn regression_exact_split() {
+        let col = Column::new(
+            "f",
+            vec![
+                Value::Num(1.0),
+                Value::Num(2.0),
+                Value::Num(10.0),
+                Value::Num(11.0),
+            ],
+        );
+        let targets = vec![5.0, 5.0, 50.0, 50.0];
+        let rows: Vec<u32> = (0..4).collect();
+        let sorted = col.sorted_numeric();
+        let view = view_of(&col, &rows, &sorted);
+        let lv = LabelsView::Reg { values: &targets };
+        let best = best_split_on_feat(&view, &lv, Criterion::Sse).unwrap();
+        assert_eq!(best.op, SplitOp::Le(2.0));
+        // Perfect split: SSE form = 10²/2 + 100²/2 = 5050.
+        assert!((best.score - 5050.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn regression_categorical_candidate_wins() {
+        let mut interner = Interner::new();
+        let a = interner.intern("a");
+        // A missing row breaks the tie between `= a` and `≤ 6` (which
+        // would otherwise induce the same partition with the same score).
+        let col = Column::new(
+            "f",
+            vec![
+                Value::Cat(a),
+                Value::Cat(a),
+                Value::Num(5.0),
+                Value::Num(6.0),
+                Value::Missing,
+            ],
+        );
+        let targets = vec![100.0, 100.0, 1.0, 2.0, 50.0];
+        let rows: Vec<u32> = (0..5).collect();
+        let sorted = col.sorted_numeric();
+        let view = view_of(&col, &rows, &sorted);
+        let best = best_split_on_feat(&view, &LabelsView::Reg { values: &targets }, Criterion::Sse)
+            .unwrap();
+        assert_eq!(best.op, SplitOp::Eq(a));
+    }
+
+    #[test]
+    fn best_across_features_picks_informative_one() {
+        // f0 is noise (each value maps to both classes); f1 separates.
+        let col0 = Column::new("f0", vec![Value::Num(1.0), Value::Num(2.0), Value::Num(1.0), Value::Num(2.0)]);
+        let col1 = Column::new("f1", vec![Value::Num(0.0), Value::Num(0.0), Value::Num(9.0), Value::Num(9.0)]);
+        let labels = vec![0u16, 0, 1, 1];
+        let rows: Vec<u32> = (0..4).collect();
+        let s0 = col0.sorted_numeric();
+        let s1 = col1.sorted_numeric();
+        let views = vec![
+            FeatureView::new(0, &col0, &rows, &s0.0, &s0.1),
+            FeatureView::new(1, &col1, &rows, &s1.0, &s1.1),
+        ];
+        let lv = LabelsView::Class { ids: &labels, n_classes: 2 };
+        let (f, s) = best_split_on_all_feats(&views, &lv, Criterion::Class(ClassCriterion::InfoGain)).unwrap();
+        assert_eq!(f, 1);
+        assert!(s.score.abs() < 1e-12);
+    }
+
+    #[test]
+    fn node_subset_rows_respected() {
+        // Selection must only see the node's rows, not the whole column.
+        let (col, labels, _) = paper_example();
+        // Restrict to class-b rows only → node is pure → no informative
+        // split, but candidates still score (all score equally).
+        let rows: Vec<u32> = (7..15).collect();
+        let (all_rows, all_vals) = col.sorted_numeric();
+        let mut sorted = (Vec::new(), Vec::new());
+        for (r, v) in all_rows.into_iter().zip(all_vals) {
+            if (7..15).contains(&(r as usize)) {
+                sorted.0.push(r);
+                sorted.1.push(v);
+            }
+        }
+        let view = view_of(&col, &rows, &sorted);
+        let lv = LabelsView::Class {
+            ids: &labels,
+            n_classes: 3,
+        };
+        let best = best_split_on_feat(&view, &lv, Criterion::Class(ClassCriterion::InfoGain))
+            .unwrap();
+        // Node is pure: conditional entropy is 0 for any split.
+        assert!(best.score.abs() < 1e-12);
+    }
+}

@@ -1,0 +1,10 @@
+//! XLA-accelerated split selection backend (filled in with the runtime).
+//!
+//! Large nodes can evaluate the histogram + prefix-scan + scoring hot-spot
+//! through the AOT-compiled JAX/Pallas artifacts (see
+//! `python/compile/kernels/`) executed on the PJRT CPU client. The native
+//! Rust engine remains exact and is the default; this backend bins numeric
+//! values to 256 quantiles first (DESIGN.md §2).
+
+// Implemented in `crate::runtime`; re-exported here for discoverability.
+pub use crate::runtime::xla_split::{XlaSelection, XlaSelectionConfig};

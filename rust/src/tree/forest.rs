@@ -1,0 +1,245 @@
+//! Bagged ensembles of UDT trees (the paper's intro motivates ensemble
+//! methods as a standard decision-tree optimization; this extension shows
+//! Superfast Selection slotting into one unchanged).
+//!
+//! Subagging (subsample aggregation) + per-tree feature masking
+//! (random-forest style): each tree trains on a random subsample drawn
+//! *without replacement* — the UDT builder's maintained sorted lists
+//! assume unique rows, and subagging is statistically equivalent to
+//! bootstrap bagging at half the sample rate. At prediction time the
+//! ensemble majority-votes (classification) or averages (regression).
+//! Feature masking blanks the masked columns of the per-tree view, so
+//! the single-tree builder is reused untouched.
+
+use super::{TrainConfig, Tree};
+use crate::data::dataset::{Dataset, Labels, TaskKind};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Forest configuration.
+#[derive(Debug, Clone)]
+pub struct ForestConfig {
+    pub n_trees: usize,
+    /// Fraction of features each tree sees (1.0 = all).
+    pub feature_frac: f64,
+    /// Subsample size (without replacement) as a fraction of the
+    /// training set.
+    pub sample_frac: f64,
+    pub tree: TrainConfig,
+    pub seed: u64,
+}
+
+impl Default for ForestConfig {
+    fn default() -> Self {
+        Self {
+            n_trees: 10,
+            feature_frac: 0.7,
+            sample_frac: 0.7,
+            tree: TrainConfig::default(),
+            seed: 0xF0_4E57,
+        }
+    }
+}
+
+/// A trained ensemble. Each member remembers which features it saw.
+#[derive(Debug, Clone)]
+pub struct Forest {
+    pub trees: Vec<Tree>,
+    pub task: TaskKind,
+    pub n_classes: usize,
+}
+
+impl Forest {
+    /// Train `n_trees` bagged trees.
+    pub fn fit(ds: &Dataset, config: &ForestConfig) -> Result<Forest> {
+        let mut rng = Rng::new(config.seed);
+        let n = ds.n_rows();
+        let sample_n = ((n as f64 * config.sample_frac) as usize).max(1);
+        let keep_features =
+            ((ds.n_features() as f64 * config.feature_frac).ceil() as usize).clamp(1, ds.n_features());
+
+        let mut trees = Vec::with_capacity(config.n_trees);
+        let mut all_rows: Vec<u32> = (0..n as u32).collect();
+        for t in 0..config.n_trees {
+            let mut tree_rng = rng.fork(t as u64);
+            // Subsample rows without replacement (partial Fisher–Yates).
+            tree_rng.shuffle(&mut all_rows);
+            let rows: Vec<u32> = all_rows[..sample_n.min(n)].to_vec();
+            // Feature mask: blank out unused columns in a view copy.
+            let mut feats: Vec<usize> = (0..ds.n_features()).collect();
+            tree_rng.shuffle(&mut feats);
+            let masked: std::collections::HashSet<usize> =
+                feats[keep_features..].iter().copied().collect();
+            let tree = if masked.is_empty() {
+                Tree::fit_rows(ds, &rows, &config.tree)?
+            } else {
+                let mut columns = ds.columns.clone();
+                for (f, col) in columns.iter_mut().enumerate() {
+                    if masked.contains(&f) {
+                        for v in &mut col.values {
+                            *v = crate::data::value::Value::Missing;
+                        }
+                    }
+                }
+                let view = Dataset {
+                    name: ds.name.clone(),
+                    columns,
+                    labels: ds.labels.clone(),
+                    interner: ds.interner.clone(),
+                    class_names: ds.class_names.clone(),
+                };
+                Tree::fit_rows(&view, &rows, &config.tree)?
+            };
+            trees.push(tree);
+        }
+        Ok(Forest {
+            trees,
+            task: ds.task(),
+            n_classes: ds.labels.n_classes(),
+        })
+    }
+
+    /// Majority-vote / averaged prediction for row `r` of `ds`.
+    pub fn predict_ds(&self, ds: &Dataset, r: usize) -> super::NodeLabel {
+        match self.task {
+            TaskKind::Classification => {
+                let mut votes = vec![0u32; self.n_classes.max(1)];
+                for tree in &self.trees {
+                    let c = super::predict::predict_ds(tree, ds, r, usize::MAX, 0).class();
+                    votes[c as usize] += 1;
+                }
+                let best = votes
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|&(i, &v)| (v, std::cmp::Reverse(i)))
+                    .unwrap()
+                    .0;
+                super::NodeLabel::Class(best as u16)
+            }
+            TaskKind::Regression => {
+                let sum: f64 = self
+                    .trees
+                    .iter()
+                    .map(|t| super::predict::predict_ds(t, ds, r, usize::MAX, 0).value())
+                    .sum();
+                super::NodeLabel::Value(sum / self.trees.len() as f64)
+            }
+        }
+    }
+
+    /// Ensemble accuracy over rows.
+    pub fn accuracy_rows(&self, ds: &Dataset, rows: &[u32]) -> f64 {
+        let correct = rows
+            .iter()
+            .filter(|&&r| {
+                self.predict_ds(ds, r as usize).class() == ds.labels.class(r as usize)
+            })
+            .count();
+        correct as f64 / rows.len().max(1) as f64
+    }
+
+    /// Ensemble RMSE over rows (regression).
+    pub fn rmse_rows(&self, ds: &Dataset, rows: &[u32]) -> f64 {
+        let values = match &ds.labels {
+            Labels::Reg { values } => values,
+            _ => panic!("rmse on classification forest"),
+        };
+        let sq: f64 = rows
+            .iter()
+            .map(|&r| {
+                let e = self.predict_ds(ds, r as usize).value() - values[r as usize];
+                e * e
+            })
+            .sum();
+        (sq / rows.len().max(1) as f64).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_any, SynthSpec};
+
+    #[test]
+    fn forest_beats_or_matches_single_tree_on_noisy_holdout() {
+        let mut spec = SynthSpec::classification("ft", 3000, 8, 2);
+        spec.noise = 0.25;
+        let ds = generate_any(&spec, 71);
+        let (train, _, test) = ds.split_indices(0.8, 0.1, 9);
+
+        let single = Tree::fit_rows(&ds, &train, &TrainConfig::default()).unwrap();
+        let single_acc = single.accuracy_rows(&ds, &test);
+
+        let forest = Forest::fit(
+            &ds.subset(&train),
+            &ForestConfig {
+                n_trees: 15,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let test_ds = ds.subset(&test);
+        let all: Vec<u32> = (0..test_ds.n_rows() as u32).collect();
+        let forest_acc = forest.accuracy_rows(&test_ds, &all);
+        assert!(
+            forest_acc >= single_acc - 0.03,
+            "forest {forest_acc} vs single {single_acc}"
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = SynthSpec::classification("fd", 500, 5, 2);
+        let ds = generate_any(&spec, 73);
+        let cfg = ForestConfig {
+            n_trees: 4,
+            ..Default::default()
+        };
+        let a = Forest::fit(&ds, &cfg).unwrap();
+        let b = Forest::fit(&ds, &cfg).unwrap();
+        for (ta, tb) in a.trees.iter().zip(&b.trees) {
+            assert_eq!(ta.n_nodes(), tb.n_nodes());
+        }
+    }
+
+    #[test]
+    fn regression_forest_averages() {
+        let spec = SynthSpec::regression("fr", 800, 5);
+        let ds = generate_any(&spec, 77);
+        let forest = Forest::fit(
+            &ds,
+            &ForestConfig {
+                n_trees: 8,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let rmse = forest.rmse_rows(&ds, &rows);
+        assert!(rmse.is_finite() && rmse < 50.0, "rmse {rmse}");
+    }
+
+    #[test]
+    fn feature_masking_trains_on_subset() {
+        let spec = SynthSpec::classification("fm", 400, 10, 2);
+        let ds = generate_any(&spec, 79);
+        let forest = Forest::fit(
+            &ds,
+            &ForestConfig {
+                n_trees: 3,
+                feature_frac: 0.3,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // Every tree's splits must use ≤ 3 distinct features.
+        for tree in &forest.trees {
+            let used: std::collections::HashSet<usize> = tree
+                .nodes
+                .iter()
+                .filter_map(|n| n.split.as_ref().map(|s| s.feature))
+                .collect();
+            assert!(used.len() <= 3, "{used:?}");
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Numeric label selection for regression (paper Algorithm 6).
+//!
+//! Given the node's labels pre-sorted ascending, one prefix-sum pass
+//! scores every label threshold with the SSE criterion (Eq. 3 with the
+//! constant `Σy²` dropped) and returns the best threshold. UDT uses it to
+//! binarize a regression node's targets into two pseudo-classes, after
+//! which feature selection proceeds as 2-class classification — so `C`
+//! stays 2 and the overall complexity is unchanged.
+
+use crate::selection::heuristic::sse_score;
+
+/// Best label threshold for `sorted_rows` (row ids sorted ascending by
+/// target). Returns `(threshold, score)`; `None` if all labels are equal
+/// (no binary partition exists).
+pub fn best_label_split(sorted_rows: &[u32], targets: &[f64]) -> Option<(f64, f64)> {
+    let n = sorted_rows.len();
+    if n < 2 {
+        return None;
+    }
+    let tot: f64 = sorted_rows.iter().map(|&r| targets[r as usize]).sum();
+    let n_f = n as f64;
+
+    let mut best: Option<(f64, f64)> = None;
+    let mut cum_n = 0.0f64;
+    let mut cum_sum = 0.0f64;
+    let mut i = 0;
+    while i < n {
+        let y = targets[sorted_rows[i] as usize];
+        // Absorb the run of equal labels.
+        while i < n && targets[sorted_rows[i] as usize] == y {
+            cum_n += 1.0;
+            cum_sum += y;
+            i += 1;
+        }
+        if i == n {
+            break; // `≤ max` leaves the negative side empty
+        }
+        let score = sse_score(cum_n, cum_sum, n_f - cum_n, tot - cum_sum);
+        if best.map_or(true, |(_, b)| score > b) {
+            best = Some((y, score));
+        }
+    }
+    best
+}
+
+/// Binarize node labels at `threshold` into pseudo-classes
+/// (0: `y ≤ t`, 1: `y > t`), writing into `pseudo` (indexed by row id).
+pub fn binarize(rows: &[u32], targets: &[f64], threshold: f64, pseudo: &mut [u16]) {
+    for &r in rows {
+        pseudo[r as usize] = (targets[r as usize] > threshold) as u16;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sorted_by_target(targets: &[f64]) -> Vec<u32> {
+        let mut idx: Vec<u32> = (0..targets.len() as u32).collect();
+        idx.sort_by(|&a, &b| {
+            targets[a as usize]
+                .partial_cmp(&targets[b as usize])
+                .unwrap()
+        });
+        idx
+    }
+
+    #[test]
+    fn bimodal_labels_split_at_gap() {
+        let targets = [1.0, 1.1, 0.9, 10.0, 10.1, 9.9];
+        let sorted = sorted_by_target(&targets);
+        let (t, _) = best_label_split(&sorted, &targets).unwrap();
+        assert!((0.9..10.0).contains(&t), "threshold {t}");
+        // The best boundary is after the low cluster.
+        assert_eq!(t, 1.1);
+    }
+
+    #[test]
+    fn constant_labels_no_split() {
+        let targets = [5.0; 8];
+        let sorted = sorted_by_target(&targets);
+        assert!(best_label_split(&sorted, &targets).is_none());
+    }
+
+    #[test]
+    fn single_row_no_split() {
+        assert!(best_label_split(&[0], &[1.0]).is_none());
+    }
+
+    #[test]
+    fn matches_exhaustive_minimizer() {
+        // Compare against brute-force SSE minimization over thresholds.
+        let targets = [3.0, 1.0, 4.0, 1.5, 9.0, 2.6, 5.0, 3.5];
+        let sorted = sorted_by_target(&targets);
+        let (t_fast, s_fast) = best_label_split(&sorted, &targets).unwrap();
+
+        let mut uniq: Vec<f64> = targets.to_vec();
+        uniq.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        uniq.dedup();
+        let mut best: Option<(f64, f64)> = None;
+        for &t in &uniq[..uniq.len() - 1] {
+            let (lo, hi): (Vec<f64>, Vec<f64>) = targets.iter().partition(|&&y| y <= t);
+            let s = sse_score(
+                lo.len() as f64,
+                lo.iter().sum(),
+                hi.len() as f64,
+                hi.iter().sum(),
+            );
+            if best.map_or(true, |(_, b)| s > b) {
+                best = Some((t, s));
+            }
+        }
+        let (t_slow, s_slow) = best.unwrap();
+        assert_eq!(t_fast, t_slow);
+        assert!((s_fast - s_slow).abs() < 1e-9);
+    }
+
+    #[test]
+    fn binarize_marks_sides() {
+        let targets = [1.0, 5.0, 3.0];
+        let mut pseudo = vec![0u16; 3];
+        binarize(&[0, 1, 2], &targets, 3.0, &mut pseudo);
+        assert_eq!(pseudo, vec![0, 1, 0]);
+    }
+}

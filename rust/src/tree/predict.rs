@@ -1,0 +1,161 @@
+//! Prediction (paper Algorithm 7).
+//!
+//! Every node carries a label, so prediction can stop early at any inner
+//! node — the mechanism behind Training-Only-Once Tuning: `max_depth`
+//! bounds the walk, and a node with fewer than `min_split` training
+//! samples answers as if it were a leaf.
+
+use super::{NodeLabel, Tree};
+use crate::data::dataset::Dataset;
+use crate::data::value::Value;
+
+/// Predict for a materialized row of values.
+pub fn predict_row(tree: &Tree, row: &[Value], max_depth: usize, min_split: usize) -> NodeLabel {
+    let mut node = &tree.nodes[Tree::ROOT as usize];
+    let mut depth = 1usize;
+    loop {
+        if node.is_leaf() || (node.n_samples as usize) < min_split || depth >= max_depth {
+            return node.label;
+        }
+        let split = node.split.as_ref().unwrap();
+        let (pos, neg) = node.children.unwrap();
+        let next = if split.eval_row(row) { pos } else { neg };
+        node = &tree.nodes[next as usize];
+        depth += 1;
+    }
+}
+
+/// Predict for row `r` of a dataset without materializing the row.
+pub fn predict_ds(
+    tree: &Tree,
+    ds: &Dataset,
+    r: usize,
+    max_depth: usize,
+    min_split: usize,
+) -> NodeLabel {
+    let mut node = &tree.nodes[Tree::ROOT as usize];
+    let mut depth = 1usize;
+    loop {
+        if node.is_leaf() || (node.n_samples as usize) < min_split || depth >= max_depth {
+            return node.label;
+        }
+        let split = node.split.as_ref().unwrap();
+        let (pos, neg) = node.children.unwrap();
+        let next = if split.eval_value(ds.value(split.feature, r)) {
+            pos
+        } else {
+            neg
+        };
+        node = &tree.nodes[next as usize];
+        depth += 1;
+    }
+}
+
+/// The full root-to-leaf path of row `r` (node arena ids). Used by the
+/// tuner to evaluate *all* hyper-parameter settings from one walk.
+pub fn path_ds(tree: &Tree, ds: &Dataset, r: usize) -> Vec<u32> {
+    let mut path = vec![Tree::ROOT];
+    let mut node = &tree.nodes[Tree::ROOT as usize];
+    while let (Some(split), Some((pos, neg))) = (&node.split, node.children) {
+        let next = if split.eval_value(ds.value(split.feature, r)) {
+            pos
+        } else {
+            neg
+        };
+        path.push(next);
+        node = &tree.nodes[next as usize];
+    }
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::column::Column;
+    use crate::data::dataset::{Dataset, Labels};
+    use crate::data::interner::Interner;
+    use crate::tree::TrainConfig;
+
+    fn step_dataset() -> Dataset {
+        // f0 < 5 → class 0, else class 1; plus a refinement at f0 < 2.
+        let vals: Vec<Value> = (0..10).map(|i| Value::Num(i as f64)).collect();
+        let ids: Vec<u16> = (0..10).map(|i| (i >= 5) as u16).collect();
+        Dataset::new(
+            "step",
+            vec![Column::new("f0", vals)],
+            Labels::Class { ids, n_classes: 2 },
+            Interner::new(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn full_depth_prediction_reaches_leaves() {
+        let ds = step_dataset();
+        let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
+        for r in 0..10 {
+            let p = predict_ds(&tree, &ds, r, usize::MAX, 0);
+            assert_eq!(p.class(), ds.labels.class(r));
+        }
+    }
+
+    #[test]
+    fn depth_1_returns_root_label() {
+        let ds = step_dataset();
+        let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
+        let root_label = tree.nodes[0].label;
+        for r in 0..10 {
+            assert_eq!(predict_ds(&tree, &ds, r, 1, 0), root_label);
+        }
+    }
+
+    #[test]
+    fn min_split_stops_at_small_nodes() {
+        let ds = step_dataset();
+        let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
+        // With min_split larger than the whole training set, even the root
+        // acts as a leaf.
+        for r in 0..10 {
+            assert_eq!(predict_ds(&tree, &ds, r, usize::MAX, 11), tree.nodes[0].label);
+        }
+    }
+
+    #[test]
+    fn path_starts_at_root_ends_at_leaf() {
+        let ds = step_dataset();
+        let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
+        for r in 0..10 {
+            let path = path_ds(&tree, &ds, r);
+            assert_eq!(path[0], Tree::ROOT);
+            assert!(tree.nodes[*path.last().unwrap() as usize].is_leaf());
+            // Consecutive entries are parent→child.
+            for w in path.windows(2) {
+                let (pos, neg) = tree.nodes[w[0] as usize].children.unwrap();
+                assert!(w[1] == pos || w[1] == neg);
+            }
+        }
+    }
+
+    #[test]
+    fn predict_row_matches_predict_ds() {
+        let ds = step_dataset();
+        let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
+        for r in 0..10 {
+            let row = ds.row(r);
+            assert_eq!(
+                predict_row(&tree, &row, usize::MAX, 0),
+                predict_ds(&tree, &ds, r, usize::MAX, 0)
+            );
+        }
+    }
+
+    #[test]
+    fn missing_value_routes_negative() {
+        let ds = step_dataset();
+        let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
+        // A missing value fails every predicate → always negative branch.
+        let p = predict_row(&tree, &[Value::Missing], usize::MAX, 0);
+        // Root split is f0 ≤ 4 (pos side = class 0); negative side → 1.
+        assert_eq!(p.class(), 1);
+    }
+}

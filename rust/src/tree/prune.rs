@@ -1,0 +1,114 @@
+//! Pruning: materialize the sub-tree a `(max_depth, min_split)` setting
+//! actually uses, dropping everything below the cut (paper §3: "the tree
+//! model will be pruned based on the optimal evaluation result").
+
+use super::{Node, Tree};
+
+/// Return a new tree equivalent to predicting on `tree` with the given
+/// hyper-parameters: nodes at `depth == max_depth` or with
+/// `n_samples < min_split` become leaves; unreachable nodes are dropped
+/// and the arena is re-packed breadth-first.
+pub fn prune(tree: &Tree, max_depth: usize, min_split: usize) -> Tree {
+    let mut nodes: Vec<Node> = Vec::new();
+    let mut depth = 0u16;
+    // BFS with id remapping. Queue holds (old_id, new_parent_slot, is_pos).
+    let mut queue: Vec<(u32, u32)> = Vec::new(); // (old id, new id)
+    nodes.push(tree.nodes[Tree::ROOT as usize].clone());
+    queue.push((Tree::ROOT, 0));
+
+    let mut qi = 0;
+    while qi < queue.len() {
+        let (old_id, new_id) = queue[qi];
+        qi += 1;
+        let old = &tree.nodes[old_id as usize];
+        depth = depth.max(old.depth);
+        let cut = old.is_leaf()
+            || old.depth as usize >= max_depth
+            || (old.n_samples as usize) < min_split;
+        if cut {
+            let n = &mut nodes[new_id as usize];
+            n.split = None;
+            n.children = None;
+        } else {
+            let (pos, neg) = old.children.unwrap();
+            let pos_new = nodes.len() as u32;
+            let neg_new = pos_new + 1;
+            nodes.push(tree.nodes[pos as usize].clone());
+            nodes.push(tree.nodes[neg as usize].clone());
+            nodes[new_id as usize].children = Some((pos_new, neg_new));
+            queue.push((pos, pos_new));
+            queue.push((neg, neg_new));
+        }
+    }
+
+    // Depth of the pruned tree = max over kept nodes.
+    let depth = nodes.iter().map(|n| n.depth).max().unwrap_or(0);
+    Tree {
+        nodes,
+        task: tree.task,
+        n_features: tree.n_features,
+        depth,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_classification, SynthSpec};
+    use crate::tree::{predict::predict_ds, TrainConfig};
+
+    fn tree_and_ds() -> (Tree, crate::data::dataset::Dataset) {
+        let spec = SynthSpec::classification("t", 1000, 5, 3);
+        let ds = generate_classification(&spec, 13);
+        let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
+        (tree, ds)
+    }
+
+    #[test]
+    fn pruned_predictions_match_hyperparameter_predictions() {
+        let (tree, ds) = tree_and_ds();
+        for (depth, split) in [(1, 0), (4, 0), (6, 25), (1000, 100)] {
+            let pruned = prune(&tree, depth, split);
+            for r in (0..ds.n_rows()).step_by(37) {
+                let a = predict_ds(&tree, &ds, r, depth, split);
+                let b = predict_ds(&pruned, &ds, r, usize::MAX, 0);
+                assert_eq!(a, b, "depth={depth} split={split} row={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn prune_to_depth_1_is_single_node() {
+        let (tree, _) = tree_and_ds();
+        let p = prune(&tree, 1, 0);
+        assert_eq!(p.n_nodes(), 1);
+        assert!(p.nodes[0].is_leaf());
+        assert_eq!(p.depth, 1);
+    }
+
+    #[test]
+    fn prune_with_no_limits_is_identity_shape() {
+        let (tree, _) = tree_and_ds();
+        let p = prune(&tree, usize::MAX, 0);
+        assert_eq!(p.n_nodes(), tree.n_nodes());
+        assert_eq!(p.depth, tree.depth);
+        assert_eq!(p.n_leaves(), tree.n_leaves());
+    }
+
+    #[test]
+    fn pruned_tree_is_smaller_and_consistent() {
+        let (tree, _) = tree_and_ds();
+        let p = prune(&tree, (tree.depth / 2).max(1) as usize, 10);
+        assert!(p.n_nodes() < tree.n_nodes());
+        // Arena invariants: children in range, leaves have no split.
+        for n in &p.nodes {
+            match (n.split.as_ref(), n.children) {
+                (Some(_), Some((a, b))) => {
+                    assert!((a as usize) < p.n_nodes() && (b as usize) < p.n_nodes());
+                }
+                (None, None) => {}
+                other => panic!("inconsistent node {other:?}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,227 @@
+//! Tree ⇄ JSON serialization for deployment and the prediction server.
+//!
+//! Categorical split operands serialize as their *string* value so a tree
+//! can be loaded against a fresh interner.
+
+use super::{Node, NodeLabel, Tree};
+use crate::data::dataset::TaskKind;
+use crate::data::interner::Interner;
+use crate::selection::split::{SplitOp, SplitPredicate};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Serialize a tree (with its interner for categorical operands).
+pub fn to_json(tree: &Tree, interner: &Interner) -> Json {
+    let nodes: Vec<Json> = tree
+        .nodes
+        .iter()
+        .map(|n| {
+            let mut fields: Vec<(&str, Json)> = vec![
+                ("n", Json::Num(n.n_samples as f64)),
+                ("d", Json::Num(n.depth as f64)),
+                (
+                    "label",
+                    match n.label {
+                        NodeLabel::Class(c) => Json::Num(c as f64),
+                        NodeLabel::Value(v) => Json::Num(v),
+                    },
+                ),
+            ];
+            if let (Some(split), Some((pos, neg))) = (&n.split, n.children) {
+                fields.push(("feature", Json::Num(split.feature as f64)));
+                let (op, operand) = match split.op {
+                    SplitOp::Le(t) => ("le", Json::Num(t)),
+                    SplitOp::Gt(t) => ("gt", Json::Num(t)),
+                    SplitOp::Eq(c) => ("eq", Json::Str(interner.name(c).to_string())),
+                };
+                fields.push(("op", Json::Str(op.to_string())));
+                fields.push(("operand", operand));
+                fields.push((
+                    "children",
+                    Json::Arr(vec![Json::Num(pos as f64), Json::Num(neg as f64)]),
+                ));
+            }
+            Json::obj(fields)
+        })
+        .collect();
+
+    Json::obj(vec![
+        (
+            "task",
+            Json::Str(
+                match tree.task {
+                    TaskKind::Classification => "classification",
+                    TaskKind::Regression => "regression",
+                }
+                .to_string(),
+            ),
+        ),
+        ("n_features", Json::Num(tree.n_features as f64)),
+        ("depth", Json::Num(tree.depth as f64)),
+        ("nodes", Json::Arr(nodes)),
+    ])
+}
+
+/// Deserialize a tree, interning categorical operands into `interner`.
+pub fn from_json(json: &Json, interner: &mut Interner) -> Result<Tree> {
+    let task = match json.get("task").and_then(Json::as_str) {
+        Some("classification") => TaskKind::Classification,
+        Some("regression") => TaskKind::Regression,
+        other => bail!("bad task {other:?}"),
+    };
+    let n_features = json
+        .get("n_features")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("missing n_features"))?;
+    let depth = json
+        .get("depth")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("missing depth"))? as u16;
+    let node_arr = json
+        .get("nodes")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing nodes"))?;
+
+    let mut nodes = Vec::with_capacity(node_arr.len());
+    for (i, nj) in node_arr.iter().enumerate() {
+        let ctx = || format!("node {i}");
+        let n_samples = nj
+            .get("n")
+            .and_then(Json::as_f64)
+            .with_context(ctx)? as u32;
+        let node_depth = nj.get("d").and_then(Json::as_f64).with_context(ctx)? as u16;
+        let label_num = nj
+            .get("label")
+            .and_then(Json::as_f64)
+            .with_context(ctx)?;
+        let label = match task {
+            TaskKind::Classification => NodeLabel::Class(label_num as u16),
+            TaskKind::Regression => NodeLabel::Value(label_num),
+        };
+        let (split, children) = match nj.get("op") {
+            None => (None, None),
+            Some(op_json) => {
+                let feature = nj
+                    .get("feature")
+                    .and_then(Json::as_usize)
+                    .with_context(ctx)?;
+                let op = match (op_json.as_str(), nj.get("operand")) {
+                    (Some("le"), Some(Json::Num(t))) => SplitOp::Le(*t),
+                    (Some("gt"), Some(Json::Num(t))) => SplitOp::Gt(*t),
+                    (Some("eq"), Some(Json::Str(s))) => SplitOp::Eq(interner.intern(s)),
+                    other => bail!("node {i}: bad split {other:?}"),
+                };
+                let ch = nj
+                    .get("children")
+                    .and_then(Json::as_arr)
+                    .with_context(ctx)?;
+                if ch.len() != 2 {
+                    bail!("node {i}: children must be a pair");
+                }
+                let pos = ch[0].as_usize().with_context(ctx)? as u32;
+                let neg = ch[1].as_usize().with_context(ctx)? as u32;
+                (
+                    Some(SplitPredicate { feature, op }),
+                    Some((pos, neg)),
+                )
+            }
+        };
+        nodes.push(Node {
+            split,
+            children,
+            label,
+            n_samples,
+            depth: node_depth,
+        });
+    }
+
+    // Validate child indices.
+    for (i, n) in nodes.iter().enumerate() {
+        if let Some((a, b)) = n.children {
+            if a as usize >= nodes.len() || b as usize >= nodes.len() {
+                bail!("node {i}: child out of range");
+            }
+        }
+    }
+
+    Ok(Tree {
+        nodes,
+        task,
+        n_features,
+        depth,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_any, generate_classification, SynthSpec};
+    use crate::tree::{predict::predict_ds, TrainConfig};
+
+    #[test]
+    fn classification_round_trip_preserves_predictions() {
+        let mut spec = SynthSpec::classification("t", 600, 6, 3);
+        spec.cat_frac = 0.4; // exercise Eq splits
+        let ds = generate_classification(&spec, 19);
+        let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
+        let json = to_json(&tree, &ds.interner);
+        let text = json.to_pretty();
+
+        let mut interner2 = ds.interner.clone();
+        let tree2 = from_json(&Json::parse(&text).unwrap(), &mut interner2).unwrap();
+        assert_eq!(tree2.n_nodes(), tree.n_nodes());
+        for r in (0..ds.n_rows()).step_by(13) {
+            assert_eq!(
+                predict_ds(&tree, &ds, r, usize::MAX, 0),
+                predict_ds(&tree2, &ds, r, usize::MAX, 0)
+            );
+        }
+    }
+
+    #[test]
+    fn regression_round_trip() {
+        let spec = SynthSpec::regression("r", 400, 5);
+        let ds = generate_any(&spec, 29);
+        let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
+        let json = to_json(&tree, &ds.interner);
+        let mut interner2 = ds.interner.clone();
+        let tree2 = from_json(&json, &mut interner2).unwrap();
+        for r in (0..ds.n_rows()).step_by(7) {
+            let a = predict_ds(&tree, &ds, r, usize::MAX, 0).value();
+            let b = predict_ds(&tree2, &ds, r, usize::MAX, 0).value();
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        let mut i = Interner::new();
+        assert!(from_json(&Json::parse("{}").unwrap(), &mut i).is_err());
+        let bad = r#"{"task":"classification","n_features":1,"depth":1,
+            "nodes":[{"n":1,"d":1,"label":0,"op":"le","operand":1,
+                      "feature":0,"children":[5,6]}]}"#;
+        assert!(from_json(&Json::parse(bad).unwrap(), &mut i).is_err());
+    }
+
+    #[test]
+    fn eq_operand_interns_into_fresh_interner() {
+        let mut spec = SynthSpec::classification("t", 300, 3, 2);
+        spec.cat_frac = 1.0;
+        let ds = generate_classification(&spec, 37);
+        let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
+        let json = to_json(&tree, &ds.interner);
+        // Fresh interner: ids may differ but names must resolve.
+        let mut fresh = Interner::new();
+        let tree2 = from_json(&json, &mut fresh).unwrap();
+        let has_eq = tree2.nodes.iter().any(|n| {
+            matches!(
+                n.split,
+                Some(SplitPredicate {
+                    op: SplitOp::Eq(_),
+                    ..
+                })
+            )
+        });
+        assert!(has_eq, "expected at least one categorical split");
+    }
+}

@@ -1,0 +1,236 @@
+//! Tiny CLI argument parser (the offline image has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands. Each option is declared up-front so `--help` output and
+//! unknown-flag errors are automatic.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declared option for help text and validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub value: bool, // takes a value?
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got `{v}`")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// A subcommand parser.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positional_help: &'static str,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            opts: Vec::new(),
+            positional_help: "",
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            value: true,
+            help,
+            default,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            value: false,
+            help,
+            default: None,
+        });
+        self
+    }
+
+    pub fn positional(mut self, help: &'static str) -> Self {
+        self.positional_help = help;
+        self
+    }
+
+    /// Parse raw args (after the subcommand name).
+    pub fn parse(&self, raw: &[String]) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        // Seed defaults.
+        for spec in &self.opts {
+            if let Some(d) = spec.default {
+                args.options.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key}\n\n{}", self.help()))?;
+                if spec.value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("--{key} expects a value"))?
+                        }
+                    };
+                    args.options.insert(key, val);
+                } else {
+                    if inline_val.is_some() {
+                        anyhow::bail!("--{key} does not take a value");
+                    }
+                    args.flags.push(key);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    /// Render help text.
+    pub fn help(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        if !self.positional_help.is_empty() {
+            let _ = writeln!(s, "  args: {}", self.positional_help);
+        }
+        for o in &self.opts {
+            let kind = if o.value { " <value>" } else { "" };
+            let def = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "  --{}{kind}\t{}{def}", o.name, o.help);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("train", "train a tree")
+            .opt("dataset", "dataset name", Some("adult"))
+            .opt("depth", "max depth", None)
+            .flag("verbose", "chatty output")
+            .positional("input files")
+    }
+
+    fn raw(toks: &[&str]) -> Vec<String> {
+        toks.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&raw(&[])).unwrap();
+        assert_eq!(a.get("dataset"), Some("adult"));
+        assert_eq!(a.get("depth"), None);
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = cmd().parse(&raw(&["--depth", "5", "--dataset=kdd"])).unwrap();
+        assert_eq!(a.get_usize("depth", 0).unwrap(), 5);
+        assert_eq!(a.get("dataset"), Some("kdd"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = cmd().parse(&raw(&["file.csv", "--verbose", "x.csv"])).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["file.csv", "x.csv"]);
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(cmd().parse(&raw(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(cmd().parse(&raw(&["--depth"])).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = cmd().parse(&raw(&["--depth", "abc"])).unwrap();
+        assert!(a.get_usize("depth", 0).is_err());
+    }
+
+    #[test]
+    fn help_mentions_options() {
+        let h = cmd().help();
+        assert!(h.contains("--dataset"));
+        assert!(h.contains("--verbose"));
+    }
+}

@@ -1,0 +1,8 @@
+//! Small self-contained substrates the offline build environment forces us
+//! to own: PRNG, CLI parsing, JSON, property testing, timing.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod timer;

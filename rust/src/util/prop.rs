@@ -1,0 +1,150 @@
+//! Miniature property-based testing harness (the offline image has no
+//! `proptest`). A property is a closure over a seeded [`Rng`]; the runner
+//! executes many cases and, on failure, retries the failing seed with
+//! progressively smaller `size` hints to report a smaller counterexample.
+//!
+//! ```
+//! use udt::util::prop::{check, Config};
+//! check("reverse twice is identity", Config::default(), |rng, size| {
+//!     let n = rng.range(0, size.max(1));
+//!     let xs: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     if ys == xs { Ok(()) } else { Err("mismatch".into()) }
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Runner configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: usize,
+    /// Base seed; each case uses `seed + case_index`.
+    pub seed: u64,
+    /// Maximum size hint passed to the property (grows over the run).
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 64,
+            seed: 0xDEC1_51F0,
+            max_size: 64,
+        }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    pub fn max_size(mut self, s: usize) -> Self {
+        self.max_size = s;
+        self
+    }
+}
+
+/// Run a property; panics with a reproducible report on failure.
+///
+/// The property receives a fresh deterministic [`Rng`] and a `size` hint
+/// that ramps from 1 to `max_size` over the run, so earlier cases are
+/// naturally smaller (cheap shrinking).
+pub fn check<F>(name: &str, config: Config, mut property: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..config.cases {
+        let size = ramp(case, config.cases, config.max_size);
+        let seed = config.seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng, size) {
+            // Try to find a smaller failure with the same seed family.
+            let mut smallest = (size, seed, msg);
+            for shrink_size in (1..size).rev() {
+                let mut r2 = Rng::new(seed);
+                if let Err(m) = property(&mut r2, shrink_size) {
+                    smallest = (shrink_size, seed, m);
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property `{name}` failed (case {case}/{}, size {}, seed {:#x}):\n  {}",
+                config.cases, smallest.0, smallest.1, smallest.2
+            );
+        }
+    }
+}
+
+fn ramp(case: usize, cases: usize, max_size: usize) -> usize {
+    if cases <= 1 {
+        return max_size;
+    }
+    1 + case * max_size.saturating_sub(1) / (cases - 1)
+}
+
+/// Convenience assertion helpers for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Approximate float equality with context on failure.
+pub fn ensure_close(a: f64, b: f64, tol: f64, ctx: &str) -> Result<(), String> {
+    let scale = 1.0_f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale || (a.is_nan() && b.is_nan()) {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add commutes", Config::default().cases(32), |rng, _| {
+            let a = rng.next_u64() >> 1;
+            let b = rng.next_u64() >> 1;
+            ensure(a + b == b + a, "commute")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn failing_property_panics_with_name() {
+        check("always fails", Config::default().cases(4), |_, _| {
+            Err("nope".into())
+        });
+    }
+
+    #[test]
+    fn size_ramps_up() {
+        assert_eq!(ramp(0, 10, 100), 1);
+        assert_eq!(ramp(9, 10, 100), 100);
+        assert!(ramp(5, 10, 100) > 1);
+    }
+
+    #[test]
+    fn ensure_close_scales() {
+        assert!(ensure_close(1e9, 1e9 + 1.0, 1e-6, "big").is_ok());
+        assert!(ensure_close(1.0, 1.1, 1e-6, "small").is_err());
+        assert!(ensure_close(f64::NAN, f64::NAN, 0.0, "nan").is_ok());
+    }
+}

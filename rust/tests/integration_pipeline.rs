@@ -1,0 +1,211 @@
+//! Cross-module integration: full train→tune→prune→evaluate pipelines on
+//! registry datasets, CSV ingestion, tree serialization, the prediction
+//! server, and failure injection.
+
+use udt::coordinator::pipeline::{run_pipeline, Quality};
+use udt::coordinator::serve::Server;
+use udt::data::csv::{load_csv_str, to_csv_string, CsvOptions};
+use udt::data::dataset::TaskKind;
+use udt::data::synth::{generate_any, registry, SynthSpec};
+use udt::tree::{serialize, Backend, RegStrategy, TrainConfig, Tree};
+use udt::util::json::Json;
+
+#[test]
+fn pipeline_on_scaled_registry_datasets() {
+    // A cross-section of Table 6 shapes at 5% scale: hybrid-heavy,
+    // many-class, wide, and numeric-heavy datasets. Thresholds reflect
+    // each dataset's difficulty at this tiny scale (letter has 26 classes
+    // and a deep ground truth — 1000 rows barely scratch it).
+    for (name, min_acc) in [
+        ("adult", 0.5),
+        ("letter", 0.12),
+        ("nursery", 0.5),
+        ("churn_modeling", 0.5),
+    ] {
+        let entry = registry::find(name).unwrap();
+        let ds = generate_any(&entry.spec.scaled(0.05), 11);
+        let rep = run_pipeline(&ds, &TrainConfig::default(), 1).unwrap();
+        match rep.quality {
+            Quality::Accuracy(a) => {
+                assert!(a > min_acc, "{name}: accuracy {a}");
+            }
+            _ => panic!("classification expected"),
+        }
+        assert!(rep.tuned_nodes <= rep.full_nodes, "{name}");
+        assert!(rep.n_settings > 100, "{name}");
+    }
+}
+
+#[test]
+fn pipeline_on_scaled_regression_datasets() {
+    for name in ["wine_quality", "bike_sharing_hour"] {
+        let entry = registry::find(name).unwrap();
+        let ds = generate_any(&entry.spec.scaled(0.05), 13);
+        let rep = run_pipeline(&ds, &TrainConfig::default(), 2).unwrap();
+        match rep.quality {
+            Quality::Regression { mae, rmse } => {
+                assert!(mae.is_finite() && rmse.is_finite() && mae <= rmse + 1e-9, "{name}");
+            }
+            _ => panic!("regression expected"),
+        }
+    }
+}
+
+#[test]
+fn csv_train_predict_round_trip() {
+    // Generate → CSV → parse → train → serialize → reload → same preds.
+    let mut spec = SynthSpec::classification("csvtest", 400, 5, 3);
+    spec.cat_frac = 0.4;
+    spec.missing_frac = 0.05;
+    let ds0 = generate_any(&spec, 17);
+    let csv = to_csv_string(&ds0);
+    let ds = load_csv_str("csvtest", &csv, &CsvOptions::default()).unwrap();
+    assert_eq!(ds.n_rows(), 400);
+    assert_eq!(ds.task(), TaskKind::Classification);
+
+    let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
+    let json_text = serialize::to_json(&tree, &ds.interner).to_pretty();
+    let mut interner = ds.interner.clone();
+    let tree2 = serialize::from_json(&Json::parse(&json_text).unwrap(), &mut interner).unwrap();
+    for r in (0..ds.n_rows()).step_by(11) {
+        assert_eq!(
+            udt::tree::predict::predict_ds(&tree, &ds, r, usize::MAX, 0),
+            udt::tree::predict::predict_ds(&tree2, &ds, r, usize::MAX, 0)
+        );
+    }
+}
+
+#[test]
+fn server_predictions_match_tree() {
+    let mut spec = SynthSpec::classification("srv", 600, 4, 2);
+    spec.cat_frac = 0.25;
+    let ds = generate_any(&spec, 19);
+    let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
+    let server = Server::new(tree.clone(), ds.interner.clone(), ds.class_names.clone());
+
+    for r in (0..ds.n_rows()).step_by(29) {
+        let row = ds.row(r);
+        let cells: Vec<String> = row
+            .iter()
+            .map(|v| match v {
+                udt::data::value::Value::Num(x) => format!("{x}"),
+                udt::data::value::Value::Cat(c) => {
+                    format!("\"{}\"", ds.interner.name(*c))
+                }
+                udt::data::value::Value::Missing => "null".to_string(),
+            })
+            .collect();
+        let req = format!("[{}]", cells.join(","));
+        let resp = server.handle(&req);
+        let expected = udt::tree::predict::predict_row(&tree, &row, usize::MAX, 0).class();
+        let expected_name = &ds.class_names[expected as usize];
+        assert_eq!(resp, format!("\"{expected_name}\""), "row {r}");
+    }
+}
+
+#[test]
+fn backends_build_identical_trees_on_hybrid_data() {
+    let mut spec = SynthSpec::classification("bk", 800, 6, 3);
+    spec.cat_frac = 0.3;
+    spec.missing_frac = 0.05;
+    let ds = generate_any(&spec, 23);
+    let t_fast = Tree::fit(&ds, &TrainConfig::default()).unwrap();
+    let t_slow = Tree::fit(
+        &ds,
+        &TrainConfig {
+            backend: Backend::Generic,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(t_fast.n_nodes(), t_slow.n_nodes());
+    for (a, b) in t_fast.nodes.iter().zip(&t_slow.nodes) {
+        assert_eq!(a.split, b.split);
+        assert_eq!(a.label, b.label);
+    }
+}
+
+#[test]
+fn regression_strategies_comparable_quality() {
+    let spec = SynthSpec::regression("regcmp", 2500, 8);
+    let ds = generate_any(&spec, 29);
+    let (train, _, test) = ds.split_indices(0.8, 0.1, 5);
+    let mut rmses = Vec::new();
+    for strategy in [RegStrategy::LabelSplit, RegStrategy::DirectSse] {
+        let tree = Tree::fit_rows(
+            &ds,
+            &train,
+            &TrainConfig {
+                reg_strategy: strategy,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let (_, rmse) = tree.regression_error(&ds, &test);
+        rmses.push(rmse);
+    }
+    // The paper's label-split strategy should be in the same quality
+    // ballpark as direct SSE (within 2.5×).
+    assert!(
+        rmses[0] < rmses[1] * 2.5 && rmses[1] < rmses[0] * 2.5,
+        "label-split {} vs direct {}",
+        rmses[0],
+        rmses[1]
+    );
+}
+
+#[test]
+fn failure_injection_empty_and_degenerate_inputs() {
+    // Empty row set.
+    let spec = SynthSpec::classification("fi", 50, 3, 2);
+    let ds = generate_any(&spec, 31);
+    assert!(Tree::fit_rows(&ds, &[], &TrainConfig::default()).is_err());
+
+    // max_depth = 0 rejected.
+    assert!(Tree::fit(
+        &ds,
+        &TrainConfig {
+            max_depth: 0,
+            ..Default::default()
+        }
+    )
+    .is_err());
+
+    // Single-row training set → single leaf.
+    let t = Tree::fit_rows(&ds, &[0], &TrainConfig::default()).unwrap();
+    assert_eq!(t.n_nodes(), 1);
+
+    // All-missing feature column still trains (on the other columns).
+    let mut columns = ds.columns.clone();
+    for v in &mut columns[0].values {
+        *v = udt::data::value::Value::Missing;
+    }
+    let ds2 = udt::Dataset::new("fi2", columns, ds.labels.clone(), ds.interner.clone()).unwrap();
+    let t2 = Tree::fit(&ds2, &TrainConfig::default()).unwrap();
+    assert!(t2.n_nodes() >= 1);
+
+    // Malformed CSV errors.
+    assert!(load_csv_str("bad", "a,b\n", &CsvOptions::default()).is_err());
+    assert!(load_csv_str("bad", "", &CsvOptions::default()).is_err());
+}
+
+#[test]
+fn chi2_and_gini_criteria_train_reasonably() {
+    let spec = SynthSpec::classification("crit", 1200, 6, 3);
+    let ds = generate_any(&spec, 37);
+    for crit in [
+        udt::selection::heuristic::ClassCriterion::Gini,
+        udt::selection::heuristic::ClassCriterion::ChiSquare,
+    ] {
+        let tree = Tree::fit(
+            &ds,
+            &TrainConfig {
+                criterion: crit,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let acc = tree.accuracy(&ds);
+        assert!(acc > 0.9, "{}: {acc}", crit.name());
+    }
+}

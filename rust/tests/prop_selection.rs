@@ -1,0 +1,239 @@
+//! The paper's core correctness theorem, as property tests:
+//! **Superfast Selection ≡ generic selection** — same best score (and same
+//! split under deterministic tie-breaking) on arbitrary hybrid data, for
+//! every supported criterion, plus prefix-sum and invariance properties.
+
+use udt::data::column::Column;
+use udt::data::interner::Interner;
+use udt::data::value::Value;
+use udt::selection::generic::best_split_on_feat_generic;
+use udt::selection::heuristic::{ClassCriterion, Criterion};
+use udt::selection::superfast::{best_split_on_feat, FeatureView, LabelsView};
+use udt::util::prop::{check, ensure, ensure_close, Config};
+use udt::util::rng::Rng;
+
+/// Random hybrid column + classification labels.
+fn random_case(
+    rng: &mut Rng,
+    size: usize,
+) -> (Column, Vec<u16>, usize, Interner) {
+    let n = rng.range(2, size.max(3));
+    let n_classes = rng.range(2, 6);
+    let n_values = rng.range(1, 12); // small domain → many duplicates
+    let cat_prob = rng.f64() * 0.6;
+    let missing_prob = rng.f64() * 0.2;
+    let mut interner = Interner::new();
+    let cats: Vec<_> = (0..4).map(|i| interner.intern(&format!("c{i}"))).collect();
+    let mut vals = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let r = rng.f64();
+        let v = if r < missing_prob {
+            Value::Missing
+        } else if r < missing_prob + cat_prob {
+            Value::Cat(*rng.choose(&cats))
+        } else {
+            // Include negative and fractional values.
+            Value::Num(rng.range(0, n_values) as f64 * 1.5 - 4.0)
+        };
+        vals.push(v);
+        labels.push(rng.below(n_classes as u64) as u16);
+    }
+    (Column::new("f", vals), labels, n_classes, interner)
+}
+
+fn view_of<'a>(
+    col: &'a Column,
+    rows: &'a [u32],
+    sorted: &'a (Vec<u32>, Vec<f64>),
+) -> FeatureView<'a> {
+    FeatureView::new(0, col, rows, &sorted.0, &sorted.1)
+}
+
+#[test]
+fn superfast_equals_generic_classification() {
+    for criterion in [
+        ClassCriterion::InfoGain,
+        ClassCriterion::Gini,
+        ClassCriterion::ChiSquare,
+    ] {
+        check(
+            &format!("superfast ≡ generic ({})", criterion.name()),
+            Config::default().cases(150).max_size(200).seed(criterion.name().len() as u64),
+            |rng, size| {
+                let (col, labels, n_classes, _) = random_case(rng, size);
+                let rows: Vec<u32> = (0..col.len() as u32).collect();
+                let sorted = col.sorted_numeric();
+                let view = view_of(&col, &rows, &sorted);
+                let lv = LabelsView::Class {
+                    ids: &labels,
+                    n_classes,
+                };
+                let crit = Criterion::Class(criterion);
+                let fast = best_split_on_feat(&view, &lv, crit);
+                let slow = best_split_on_feat_generic(&view, &lv, crit);
+                match (fast, slow) {
+                    (None, None) => Ok(()),
+                    (Some(a), Some(b)) => {
+                        ensure_close(a.score, b.score, 1e-9, "best scores differ")?;
+                        ensure(
+                            a.op == b.op,
+                            format!("ops differ: {:?} vs {:?} (scores {} / {})", a.op, b.op, a.score, b.score),
+                        )
+                    }
+                    (a, b) => Err(format!("one engine found a split: {a:?} vs {b:?}")),
+                }
+            },
+        );
+    }
+}
+
+#[test]
+fn superfast_equals_generic_regression() {
+    check(
+        "superfast ≡ generic (sse)",
+        Config::default().cases(120).max_size(150),
+        |rng, size| {
+            let (col, _, _, _) = random_case(rng, size);
+            let n = col.len();
+            let targets: Vec<f64> = (0..n).map(|_| rng.f64_range(-5.0, 5.0)).collect();
+            let rows: Vec<u32> = (0..n as u32).collect();
+            let sorted = col.sorted_numeric();
+            let view = view_of(&col, &rows, &sorted);
+            let lv = LabelsView::Reg { values: &targets };
+            let fast = best_split_on_feat(&view, &lv, Criterion::Sse);
+            let slow = best_split_on_feat_generic(&view, &lv, Criterion::Sse);
+            match (fast, slow) {
+                (None, None) => Ok(()),
+                (Some(a), Some(b)) => {
+                    ensure_close(a.score, b.score, 1e-9, "scores")?;
+                    ensure(a.op == b.op, format!("ops differ: {:?} vs {:?}", a.op, b.op))
+                }
+                (a, b) => Err(format!("mismatch: {a:?} vs {b:?}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn selection_is_row_order_invariant() {
+    check(
+        "row permutation does not change the best split",
+        Config::default().cases(60).max_size(120),
+        |rng, size| {
+            let (col, labels, n_classes, _) = random_case(rng, size);
+            let n = col.len();
+            let rows: Vec<u32> = (0..n as u32).collect();
+            let mut shuffled = rows.clone();
+            rng.shuffle(&mut shuffled);
+            let sorted = col.sorted_numeric();
+            let lv = LabelsView::Class {
+                ids: &labels,
+                n_classes,
+            };
+            let crit = Criterion::Class(ClassCriterion::InfoGain);
+            let a = best_split_on_feat(&view_of(&col, &rows, &sorted), &lv, crit);
+            let b = best_split_on_feat(&view_of(&col, &shuffled, &sorted), &lv, crit);
+            match (a, b) {
+                (None, None) => Ok(()),
+                (Some(a), Some(b)) => {
+                    ensure_close(a.score, b.score, 1e-9, "permutation changed score")?;
+                    ensure(a.op == b.op, "permutation changed op")
+                }
+                _ => Err("permutation changed existence".into()),
+            }
+        },
+    );
+}
+
+#[test]
+fn best_score_upper_bounds_every_candidate() {
+    // The returned split must be at least as good as a random predicate's
+    // direct evaluation.
+    check(
+        "best split dominates sampled candidates",
+        Config::default().cases(80).max_size(100),
+        |rng, size| {
+            let (col, labels, n_classes, _) = random_case(rng, size);
+            let rows: Vec<u32> = (0..col.len() as u32).collect();
+            let sorted = col.sorted_numeric();
+            let view = view_of(&col, &rows, &sorted);
+            let lv = LabelsView::Class {
+                ids: &labels,
+                n_classes,
+            };
+            let crit = Criterion::Class(ClassCriterion::InfoGain);
+            let Some(best) = best_split_on_feat(&view, &lv, crit) else {
+                return Ok(());
+            };
+            // Sample candidate thresholds from the data.
+            for _ in 0..8 {
+                let r = rng.below(col.len() as u64) as usize;
+                let op = match col.get(r) {
+                    Value::Num(x) => {
+                        if rng.chance(0.5) {
+                            udt::selection::split::SplitOp::Le(x)
+                        } else {
+                            udt::selection::split::SplitOp::Gt(x)
+                        }
+                    }
+                    Value::Cat(c) => udt::selection::split::SplitOp::Eq(c),
+                    Value::Missing => continue,
+                };
+                let mut pos = vec![0.0f64; n_classes];
+                let mut neg = vec![0.0f64; n_classes];
+                for &rr in &rows {
+                    let y = labels[rr as usize] as usize;
+                    if op.eval(col.get(rr as usize)) {
+                        pos[y] += 1.0;
+                    } else {
+                        neg[y] += 1.0;
+                    }
+                }
+                if pos.iter().sum::<f64>() == 0.0 || neg.iter().sum::<f64>() == 0.0 {
+                    continue;
+                }
+                let s = ClassCriterion::InfoGain.score(&pos, &neg);
+                ensure(
+                    best.score >= s - 1e-9,
+                    format!("candidate {op:?} scores {s} > best {}", best.score),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prefix_sum_counts_match_direct_counts() {
+    // Indirect prefix-sum identity: per-class counts from the sorted walk
+    // must equal direct counting for `≤ x` at every distinct x.
+    check(
+        "prefix counts ≡ direct counts",
+        Config::default().cases(60).max_size(80),
+        |rng, size| {
+            let (col, labels, n_classes, _) = random_case(rng, size);
+            let (sorted, vals) = col.sorted_numeric();
+            // Pick a random distinct numeric value.
+            if sorted.is_empty() {
+                return Ok(());
+            }
+            let x = vals[rng.below(sorted.len() as u64) as usize];
+            let mut from_walk = vec![0u32; n_classes];
+            for (&r, &v) in sorted.iter().zip(&vals) {
+                if v <= x {
+                    from_walk[labels[r as usize] as usize] += 1;
+                }
+            }
+            let mut direct = vec![0u32; n_classes];
+            for r in 0..col.len() {
+                if let Value::Num(v) = col.get(r) {
+                    if v <= x {
+                        direct[labels[r] as usize] += 1;
+                    }
+                }
+            }
+            ensure(from_walk == direct, format!("{from_walk:?} vs {direct:?}"))
+        },
+    );
+}

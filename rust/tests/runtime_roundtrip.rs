@@ -1,0 +1,229 @@
+//! End-to-end runtime tests: load the AOT artifacts (built by
+//! `make artifacts`), execute them through PJRT, and check the numbers
+//! against the native Rust engine. Skipped (with a notice) when the
+//! artifacts have not been built.
+
+use udt::data::column::Column;
+use udt::data::value::Value;
+use udt::runtime::engine::Engine;
+use udt::runtime::xla_split::{XlaSelection, XlaSelectionConfig};
+use udt::selection::heuristic::{ClassCriterion, Criterion};
+use udt::selection::superfast::{best_split_on_feat, FeatureView, LabelsView, Scratch};
+use udt::util::rng::Rng;
+
+fn engine() -> Option<Engine> {
+    match Engine::load_default() {
+        Some(e) => Some(e),
+        None => {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn engine_loads_manifest_artifacts() {
+    let Some(engine) = engine() else { return };
+    assert_eq!(engine.platform(), "cpu");
+    let names = engine.names();
+    assert!(
+        names.iter().any(|n| n.starts_with("split_select_m")),
+        "{names:?}"
+    );
+    // Variant selection picks the smallest fitting M.
+    let v = engine.variant_for(100, 2).unwrap();
+    assert_eq!(v.spec.m, 4096);
+}
+
+#[test]
+fn split_select_artifact_matches_native_scores() {
+    let Some(engine) = engine() else { return };
+    let artifact = engine.variant_for(1000, 3).unwrap();
+    let (m, b, c) = (artifact.spec.m, artifact.spec.b, artifact.spec.c);
+
+    // Data: 1000 rows over 7 distinct values (bins are exact), 3 classes.
+    let mut rng = Rng::new(99);
+    let n = 1000usize;
+    let n_distinct = 7usize;
+    let values: Vec<i32> = (0..n).map(|_| rng.below(n_distinct as u64) as i32).collect();
+    let labels_u16: Vec<u16> = values
+        .iter()
+        .map(|&v| {
+            if rng.chance(0.8) {
+                ((v as usize) * 3 / n_distinct) as u16
+            } else {
+                rng.below(3) as u16
+            }
+        })
+        .collect();
+
+    // Kernel inputs: sorted by value, bin id = value (exact binning).
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| values[i]);
+    let mut bin_ids = vec![0i32; m];
+    let mut label_ids = vec![0i32; m];
+    let mut mask = vec![0f32; m];
+    for (slot, &i) in order.iter().enumerate() {
+        bin_ids[slot] = values[i];
+        label_ids[slot] = labels_u16[i] as i32;
+        mask[slot] = 1.0;
+    }
+    let rest = vec![0f32; c];
+    let outputs = artifact
+        .execute(&[
+            xla::Literal::vec1(&bin_ids),
+            xla::Literal::vec1(&label_ids),
+            xla::Literal::vec1(&mask),
+            xla::Literal::vec1(&rest),
+        ])
+        .unwrap();
+    assert_eq!(outputs.len(), 2);
+    let le: Vec<f32> = outputs[0].to_vec().unwrap();
+    let gt: Vec<f32> = outputs[1].to_vec().unwrap();
+    assert_eq!(le.len(), b);
+
+    // Native oracle: per-candidate info gain on the same data.
+    let col = Column::new(
+        "f",
+        values.iter().map(|&v| Value::Num(v as f64)).collect::<Vec<_>>(),
+    );
+    let rows: Vec<u32> = (0..n as u32).collect();
+    let sorted = col.sorted_numeric();
+    let view = FeatureView::new(0, &col, &rows, &sorted.0, &sorted.1);
+    let lv = LabelsView::Class {
+        ids: &labels_u16,
+        n_classes: 3,
+    };
+    let native = best_split_on_feat(&view, &lv, Criterion::Class(ClassCriterion::InfoGain))
+        .expect("has a split");
+
+    // The artifact's best over (le, gt) must match the native best score
+    // (exact binning ⇒ identical candidate set), up to f32 precision.
+    let kernel_best = le
+        .iter()
+        .chain(gt.iter())
+        .copied()
+        .filter(|s| *s > -1e29)
+        .fold(f32::NEG_INFINITY, f32::max);
+    assert!(
+        (kernel_best as f64 - native.score).abs() < 1e-4,
+        "kernel {kernel_best} vs native {}",
+        native.score
+    );
+}
+
+#[test]
+fn xla_backend_agrees_with_native_on_exact_bins() {
+    let Some(_) = engine() else { return };
+    let xla_sel = XlaSelection::load_default(XlaSelectionConfig { min_rows: 1 }).unwrap();
+
+    let mut rng = Rng::new(7);
+    let n = 2000usize;
+    // ≤ 256 distinct values → binning exact; hybrid column with cats+missing.
+    let mut interner = udt::data::interner::Interner::new();
+    let cats: Vec<_> = (0..3).map(|i| interner.intern(&format!("k{i}"))).collect();
+    let vals: Vec<Value> = (0..n)
+        .map(|_| {
+            let r = rng.f64();
+            if r < 0.1 {
+                Value::Missing
+            } else if r < 0.3 {
+                Value::Cat(*rng.choose(&cats))
+            } else {
+                Value::Num(rng.below(200) as f64)
+            }
+        })
+        .collect();
+    let labels: Vec<u16> = vals
+        .iter()
+        .map(|v| match v {
+            Value::Num(x) if *x < 60.0 => 0,
+            Value::Num(_) => 1,
+            _ => rng.below(2) as u16,
+        })
+        .collect();
+    let col = Column::new("f", vals);
+    let rows: Vec<u32> = (0..n as u32).collect();
+    let sorted = col.sorted_numeric();
+    let view = FeatureView::new(0, &col, &rows, &sorted.0, &sorted.1);
+    let lv = LabelsView::Class {
+        ids: &labels,
+        n_classes: 2,
+    };
+    let crit = Criterion::Class(ClassCriterion::InfoGain);
+    let mut scratch = Scratch::new();
+
+    let native = best_split_on_feat(&view, &lv, crit).unwrap();
+    let accel = xla_sel
+        .best_split_on_feat(&view, &lv, crit, &mut scratch)
+        .unwrap();
+    assert!(
+        (native.score - accel.score).abs() < 1e-4,
+        "native {} vs xla {}",
+        native.score,
+        accel.score
+    );
+    assert_eq!(native.op, accel.op);
+}
+
+#[test]
+fn tree_fit_with_xla_backend_learns() {
+    let Some(_) = engine() else { return };
+    let xla_sel = XlaSelection::load_default(XlaSelectionConfig { min_rows: 256 }).unwrap();
+    let mut spec = udt::data::synth::SynthSpec::classification("xla_t", 3000, 5, 2);
+    spec.numeric_cardinality = 128; // exact binning throughout
+    let ds = udt::data::synth::generate_classification(&spec, 5);
+    let cfg = udt::tree::TrainConfig {
+        backend: udt::tree::Backend::Xla(std::sync::Arc::new(xla_sel)),
+        ..Default::default()
+    };
+    let tree = udt::Tree::fit(&ds, &cfg).unwrap();
+    let acc = tree.accuracy(&ds);
+    assert!(acc > 0.9, "accuracy {acc}");
+}
+
+#[test]
+fn label_split_artifact_matches_algorithm6() {
+    let Some(engine) = engine() else { return };
+    let Ok(artifact) = engine.get("label_split_m4096") else {
+        eprintln!("SKIP: label_split artifact not present");
+        return;
+    };
+    let m = artifact.spec.m;
+    let mut rng = Rng::new(3);
+    let n = 500usize;
+    let mut targets: Vec<f64> = (0..n).map(|_| (rng.below(40) as f64) * 0.5).collect();
+    targets.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    let mut values = vec![0f32; m];
+    let mut mask = vec![0f32; m];
+    for i in 0..n {
+        values[i] = targets[i] as f32;
+        mask[i] = 1.0;
+    }
+    // Padding mirrors aot: repeat the last value with mask 0.
+    for i in n..m {
+        values[i] = targets[n - 1] as f32;
+    }
+    let outputs = artifact
+        .execute(&[xla::Literal::vec1(&values), xla::Literal::vec1(&mask)])
+        .unwrap();
+    let scores: Vec<f32> = outputs[0].to_vec().unwrap();
+
+    // Native Algorithm 6.
+    let sorted_rows: Vec<u32> = (0..n as u32).collect();
+    let (native_t, native_s) =
+        udt::tree::label_split::best_label_split(&sorted_rows, &targets).unwrap();
+
+    let (best_i, best_s) = scores
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| **s > -1e29)
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap();
+    assert!(
+        (*best_s as f64 - native_s).abs() < native_s.abs() * 1e-4 + 1e-2,
+        "kernel {best_s} vs native {native_s}"
+    );
+    assert_eq!(values[best_i] as f64, native_t);
+}
