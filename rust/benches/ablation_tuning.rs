@@ -27,7 +27,7 @@ fn main() {
 
     // Once-tuning over the paper's full grid.
     let grid = TuneGrid::default();
-    let fast = tune(&full, &ds, &val, train.len(), &grid);
+    let fast = tune(&full, &ds, &val, train.len(), &grid).expect("once-tuner");
 
     // Retraining baseline over a reduced grid, projected to the full grid
     // (running 200+ retrainings is exactly the cost the paper avoids).

@@ -7,6 +7,7 @@
 use udt::bench_support::{BenchConfig, Table};
 use udt::coordinator::pipeline::{run_pipeline, Quality};
 use udt::data::synth::{generate_any, registry};
+use udt::tree::tuning::TuneGrid;
 use udt::tree::TrainConfig;
 
 fn main() {
@@ -28,7 +29,7 @@ fn main() {
             n_threads: 0,
             ..Default::default()
         };
-        let rep = run_pipeline(&ds, &train_cfg, 1).expect("pipeline");
+        let rep = run_pipeline(&ds, &train_cfg, &TuneGrid::default(), 1).expect("pipeline");
         let (mae, rmse) = match rep.quality {
             Quality::Regression { mae, rmse } => (mae, rmse),
             _ => unreachable!(),

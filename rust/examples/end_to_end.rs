@@ -4,20 +4,22 @@
 //! The paper's claim (§Abstract): single training < 1 s, Training-Only-
 //! Once Tuning of ~215 settings < 0.25 s, on a laptop. This driver runs
 //! the full system — synthetic substrate → parallel UDT training →
-//! once-tuning → pruning → test evaluation → model serving — and, when
-//! AOT artifacts are present, a three-layer XLA spot-check of the root
-//! split. Results are recorded in EXPERIMENTS.md.
+//! once-tuning → pruning → test evaluation → any-model serving — and,
+//! when AOT artifacts are present (and the `xla` feature is on), a
+//! three-layer XLA spot-check of the root split.
 //!
 //!     cargo run --release --example end_to_end [scale]
 //!
 //! `scale` defaults to 1.0 (the full 494k rows); pass 0.1 for a fast run.
 
-use udt::coordinator::pipeline::{run_pipeline, Quality};
+use udt::coordinator::pipeline::{run_pipeline_model, Quality};
+use udt::coordinator::serve::Server;
 use udt::data::synth::{generate_any, registry};
-use udt::tree::{TrainConfig, Tree};
+use udt::tree::tuning::TuneGrid;
 use udt::util::timer::Timer;
+use udt::{SavedModel, Udt};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> udt::Result<()> {
     let scale: f64 = std::env::args()
         .nth(1)
         .map(|s| s.parse().expect("scale must be a number"))
@@ -40,12 +42,10 @@ fn main() -> anyhow::Result<()> {
         t.elapsed().as_secs_f64()
     );
 
-    // Full pipeline with all cores.
-    let cfg = TrainConfig {
-        n_threads: 0, // all cores
-        ..Default::default()
-    };
-    let rep = run_pipeline(&ds, &cfg, 1)?;
+    // Full pipeline with all cores; the tuned artifact comes back as a
+    // servable Model::TunedTree.
+    let cfg = Udt::builder().threads(0).build()?;
+    let (rep, model) = run_pipeline_model(&ds, &cfg, &TuneGrid::default(), 1)?;
     println!(
         "[2/5] full tree: {} nodes, depth {} — trained in {:.0} ms {}",
         rep.full_nodes,
@@ -70,13 +70,9 @@ fn main() -> anyhow::Result<()> {
         rep.tuned_nodes, rep.tuned_depth, acc
     );
 
-    // Serving spot check: the trained model answers a prediction request.
-    let tree = Tree::fit(&ds, &cfg)?;
-    let server = udt::coordinator::serve::Server::new(
-        tree,
-        ds.interner.clone(),
-        ds.class_names.clone(),
-    );
+    // Serving spot check: the *tuned* model (caps applied at predict
+    // time) answers a prediction request through the server.
+    let server = Server::new(SavedModel::new(model, &ds));
     let row = ds.row(0);
     let cells: Vec<String> = row
         .iter()
@@ -87,7 +83,7 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
     let resp = server.handle(&format!("[{}]", cells.join(",")));
-    println!("[5/5] serving: row 0 → {resp}");
+    println!("[5/5] serving (tuned tree): row 0 → {resp}");
 
     // Optional three-layer spot check via the AOT artifacts.
     if let Some(xla) =

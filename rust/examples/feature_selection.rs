@@ -9,10 +9,11 @@
 use udt::data::synth::{generate_classification, registry};
 use udt::selection::feature_rank::{rank_features, top_k};
 use udt::selection::heuristic::{ClassCriterion, Criterion};
-use udt::tree::{TrainConfig, Tree};
+use udt::tree::Tree;
 use udt::util::timer::Timer;
+use udt::Udt;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> udt::Result<()> {
     // Parkinson shape: 765 examples × 753 features — the classic
     // feature-selection regime.
     let spec = registry::find("parkinson").unwrap().spec;
@@ -38,12 +39,12 @@ fn main() -> anyhow::Result<()> {
     }
 
     let (train, _, test) = ds.split_indices(0.8, 0.1, 7);
-    let cfg = TrainConfig::default();
+    let cfg = Udt::builder().build()?;
 
     let t = Timer::start();
     let full = Tree::fit_rows(&ds, &train, &cfg)?;
     let full_ms = t.ms();
-    let full_acc = full.accuracy_rows(&ds, &test);
+    let full_acc = full.accuracy_rows(&ds, &test)?;
 
     let (filtered, kept) = top_k(&ds, criterion, 32);
     let t = Timer::start();
@@ -51,7 +52,7 @@ fn main() -> anyhow::Result<()> {
     let slim_ms = t.ms();
     let test_filtered = filtered.subset(&test);
     let all: Vec<u32> = (0..test_filtered.n_rows() as u32).collect();
-    let slim_acc = slim.accuracy_rows(&test_filtered, &all);
+    let slim_acc = slim.accuracy_rows(&test_filtered, &all)?;
 
     println!("\nfull  ({} features): train {:.0} ms, test acc {:.3}", ds.n_features(), full_ms, full_acc);
     println!(

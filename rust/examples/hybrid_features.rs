@@ -9,10 +9,9 @@
 
 use udt::data::csv::{load_csv_str, CsvOptions};
 use udt::data::value::Value;
-use udt::tree::{predict::predict_row, TrainConfig};
-use udt::Tree;
+use udt::{Estimator, Udt};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> udt::Result<()> {
     // A CSV with genuinely hybrid columns: "status" mixes numeric codes
     // and strings; "income" has missing cells. No encoding happens —
     // cells parse as numbers first, then as interned categoricals.
@@ -46,12 +45,12 @@ fn main() -> anyhow::Result<()> {
         println!("  {:8} {:5} / {:4} / {:4}", c.name, s.n_num, s.n_cat, s.n_missing);
     }
 
-    let tree = Tree::fit(&ds, &TrainConfig::default())?;
+    let tree = Udt::builder().fit(&ds)?;
     println!(
         "\ntrained on hybrid data directly: {} nodes, depth {}, accuracy {:.3}",
         tree.n_nodes(),
         tree.depth,
-        tree.accuracy(&ds)
+        tree.accuracy(&ds)?
     );
 
     // Memory comparison vs one-hot encoding (every distinct categorical
@@ -67,13 +66,9 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Missing values at prediction time route to the negative branch —
-    // untouched, never imputed.
-    let p = predict_row(
-        &tree,
-        &[Value::Num(55.0), Value::Missing, Value::Missing],
-        usize::MAX,
-        0,
-    );
+    // untouched, never imputed. The Estimator surface checks arity and
+    // returns a typed error instead of panicking on bad requests.
+    let p = tree.predict_row(&[Value::Num(55.0), Value::Missing, Value::Missing])?;
     println!("\nprediction with missing cells: {p:?}");
     Ok(())
 }

@@ -1,13 +1,15 @@
-//! Quickstart: generate a small tabular dataset, train UDT, tune once,
-//! prune, and evaluate — the whole paper pipeline in ~30 lines.
+//! Quickstart: generate a small tabular dataset, train through the
+//! fluent builder, tune once, prune, and evaluate — the whole paper
+//! pipeline in ~30 lines.
 //!
 //!     cargo run --release --example quickstart
 
 use udt::coordinator::pipeline::{run_pipeline, Quality};
 use udt::data::synth::{generate_classification, SynthSpec};
-use udt::tree::TrainConfig;
+use udt::tree::tuning::TuneGrid;
+use udt::Udt;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> udt::Result<()> {
     // 20k examples, 10 features (mixed numeric/categorical/missing), 3 classes.
     let mut spec = SynthSpec::classification("quickstart", 20_000, 10, 3);
     spec.noise = 0.08;
@@ -20,7 +22,10 @@ fn main() -> anyhow::Result<()> {
         ds.approx_bytes() as f64 / 1e6
     );
 
-    let report = run_pipeline(&ds, &TrainConfig::default(), 1)?;
+    // The builder validates before training: bad settings are typed
+    // errors, not panics.
+    let cfg = Udt::builder().threads(0).build()?;
+    let report = run_pipeline(&ds, &cfg, &TuneGrid::default(), 1)?;
     println!(
         "full tree:  {} nodes, depth {}, trained in {:.1} ms",
         report.full_nodes, report.full_depth, report.full_train_ms

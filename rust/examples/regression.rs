@@ -7,10 +7,11 @@
 
 use udt::coordinator::metrics::RegReport;
 use udt::data::synth::{generate_regression, registry};
-use udt::tree::{RegStrategy, TrainConfig, Tree};
+use udt::tree::{RegStrategy, Tree};
 use udt::util::timer::Timer;
+use udt::Udt;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> udt::Result<()> {
     let spec = registry::find("wine_quality").unwrap().spec;
     let ds = generate_regression(&spec, 42);
     let (train, _, test) = ds.split_indices(0.8, 0.1, 3);
@@ -24,14 +25,11 @@ fn main() -> anyhow::Result<()> {
         ("label-split (paper Alg. 6)", RegStrategy::LabelSplit),
         ("direct SSE (classic CART)", RegStrategy::DirectSse),
     ] {
-        let cfg = TrainConfig {
-            reg_strategy: strategy,
-            ..Default::default()
-        };
+        let cfg = Udt::builder().reg_strategy(strategy).build()?;
         let t = Timer::start();
         let tree = Tree::fit_rows(&ds, &train, &cfg)?;
         let ms = t.ms();
-        let rep = RegReport::from_tree(&tree, &ds, &test);
+        let rep = RegReport::from_tree(&tree, &ds, &test)?;
         println!(
             "{name:28} {:6} nodes depth {:3} in {:7.1} ms | test MAE {:.3} RMSE {:.3} R² {:.3}",
             tree.n_nodes(),

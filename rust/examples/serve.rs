@@ -1,29 +1,35 @@
-//! Serving demo: train a model, start the TCP prediction server, fire a
-//! burst of batched client requests, report latency/throughput, shut
-//! down. All in one process (client threads ↔ server threads).
+//! Serving demo: train a model, ship it as a `SavedModel`, start the TCP
+//! prediction server, fire a burst of batched client requests, report
+//! latency/throughput, shut down. All in one process (client threads ↔
+//! server threads).
 //!
-//!     cargo run --release --example serve
+//!     cargo run --release --example serve [--forest]
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::mpsc;
 use udt::coordinator::serve::Server;
 use udt::data::synth::{generate_classification, SynthSpec};
-use udt::tree::{TrainConfig, Tree};
 use udt::util::timer::Timer;
+use udt::{Forest, Model, SavedModel, Udt};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> udt::Result<()> {
+    let want_forest = std::env::args().any(|a| a == "--forest");
     let mut spec = SynthSpec::classification("serve_demo", 20_000, 12, 4);
     spec.cat_frac = 0.3;
     let ds = generate_classification(&spec, 42);
-    let tree = Tree::fit(&ds, &TrainConfig::default())?;
+    let model = if want_forest {
+        Model::Forest(Forest::builder().n_trees(8).fit(&ds)?)
+    } else {
+        Model::SingleTree(Udt::builder().fit(&ds)?)
+    };
     println!(
-        "model: {} nodes, depth {} — starting server",
-        tree.n_nodes(),
-        tree.depth
+        "model: kind={} nodes={} — starting server",
+        model.kind(),
+        model.n_nodes()
     );
 
-    let server = Server::new(tree, ds.interner.clone(), ds.class_names.clone());
+    let server = Server::new(SavedModel::new(model, &ds));
     let (tx, rx) = mpsc::channel();
     let server2 = server.clone();
     let server_thread = std::thread::spawn(move || {
@@ -31,7 +37,7 @@ fn main() -> anyhow::Result<()> {
             .serve("127.0.0.1:0", |addr| tx.send(addr).unwrap())
             .unwrap();
     });
-    let addr = rx.recv()?;
+    let addr = rx.recv().expect("server bound");
     println!("listening on {addr}");
 
     // Client burst: 4 connections × 50 batches × 64 rows.
@@ -42,7 +48,7 @@ fn main() -> anyhow::Result<()> {
     let mut handles = Vec::new();
     for client in 0..n_clients {
         let ds = ds.clone();
-        handles.push(std::thread::spawn(move || -> anyhow::Result<f64> {
+        handles.push(std::thread::spawn(move || -> udt::Result<f64> {
             let stream = TcpStream::connect(addr)?;
             let mut writer = stream.try_clone()?;
             let mut reader = BufReader::new(stream);

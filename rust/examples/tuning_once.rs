@@ -6,10 +6,11 @@
 
 use udt::data::synth::{generate_classification, registry};
 use udt::tree::tuning::{tune, tune_by_retraining, TuneGrid};
-use udt::tree::{TrainConfig, Tree};
+use udt::tree::Tree;
 use udt::util::timer::Timer;
+use udt::Udt;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> udt::Result<()> {
     // Churn-modeling shape (10k × 10, 2 classes), with label noise so
     // tuning has something to do.
     let mut spec = registry::find("churn_modeling").unwrap().spec;
@@ -17,7 +18,7 @@ fn main() -> anyhow::Result<()> {
     let ds = generate_classification(&spec, 42);
     let (train, val, test) = ds.split_indices(0.8, 0.1, 7);
 
-    let cfg = TrainConfig::default();
+    let cfg = Udt::builder().build()?;
     let t = Timer::start();
     let full = Tree::fit_rows(&ds, &train, &cfg)?;
     println!(
@@ -29,7 +30,7 @@ fn main() -> anyhow::Result<()> {
 
     // Training-Only-Once Tuning: all settings from one trained tree.
     let grid = TuneGrid::default();
-    let fast = tune(&full, &ds, &val, train.len(), &grid);
+    let fast = tune(&full, &ds, &val, train.len(), &grid)?;
     println!(
         "training-once tuning: {} settings in {:.1} ms → depth {}, min_split {} (val acc {:.4})",
         fast.n_settings, fast.tune_ms, fast.best_max_depth, fast.best_min_split, fast.best_metric
@@ -62,8 +63,8 @@ fn main() -> anyhow::Result<()> {
         "tuned tree: {} nodes, depth {}, test accuracy {:.4} (full tree: {:.4})",
         pruned.n_nodes(),
         pruned.depth,
-        pruned.accuracy_rows(&ds, &test),
-        full.accuracy_rows(&ds, &test)
+        pruned.accuracy_rows(&ds, &test)?,
+        full.accuracy_rows(&ds, &test)?
     );
     Ok(())
 }

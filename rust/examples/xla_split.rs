@@ -1,28 +1,27 @@
 //! The three layers composing: split selection through the AOT-compiled
 //! JAX/Pallas artifacts (L1 kernels → L2 graph → L3 Rust via PJRT).
 //!
-//! Requires `make artifacts` first. Trains the same tree with the native
-//! Superfast engine and with the XLA backend, comparing results and
-//! timing.
+//! Requires `make artifacts` and the `xla` cargo feature first. Trains
+//! the same tree with the native Superfast engine and with the XLA
+//! backend, comparing results and timing. Without artifacts (or without
+//! the feature) it exits with a notice.
 //!
-//!     make artifacts && cargo run --release --example xla_split
+//!     make artifacts && cargo run --release --features xla --example xla_split
 
 use std::sync::Arc;
 use udt::data::synth::{generate_classification, SynthSpec};
 use udt::runtime::xla_split::{XlaSelection, XlaSelectionConfig};
-use udt::tree::{Backend, TrainConfig, Tree};
+use udt::tree::Backend;
 use udt::util::timer::Timer;
+use udt::Udt;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> udt::Result<()> {
     let Some(xla_sel) = XlaSelection::load_default(XlaSelectionConfig::default()) else {
-        eprintln!("artifacts not found — run `make artifacts` first");
+        eprintln!(
+            "artifacts not found — run `make artifacts` and build with `--features xla`"
+        );
         std::process::exit(2);
     };
-    println!(
-        "PJRT platform: {} | artifacts: {:?}",
-        xla_sel.engine().platform(),
-        xla_sel.engine().names()
-    );
 
     // ≤128 distinct numeric values per feature → quantile binning is
     // exact and both backends score identical candidate sets.
@@ -31,31 +30,27 @@ fn main() -> anyhow::Result<()> {
     let ds = generate_classification(&spec, 42);
 
     let t = Timer::start();
-    let native = Tree::fit(&ds, &TrainConfig::default())?;
+    let native = Udt::builder().fit(&ds)?;
     let native_ms = t.ms();
 
     let t = Timer::start();
-    let accel = Tree::fit(
-        &ds,
-        &TrainConfig {
-            backend: Backend::Xla(Arc::new(xla_sel)),
-            ..Default::default()
-        },
-    )?;
+    let accel = Udt::builder()
+        .backend(Backend::Xla(Arc::new(xla_sel)))
+        .fit(&ds)?;
     let accel_ms = t.ms();
 
     println!(
         "native engine: {} nodes, depth {}, acc {:.4}, {:.0} ms",
         native.n_nodes(),
         native.depth,
-        native.accuracy(&ds),
+        native.accuracy(&ds)?,
         native_ms
     );
     println!(
         "xla backend:   {} nodes, depth {}, acc {:.4}, {:.0} ms",
         accel.n_nodes(),
         accel.depth,
-        accel.accuracy(&ds),
+        accel.accuracy(&ds)?,
         accel_ms
     );
     println!(

@@ -5,7 +5,18 @@
 //! 2. a config file (`--config path`, simple `key = value` lines, `#`
 //!    comments, sections ignored),
 //! 3. CLI `--set key=value` overrides.
+//!
+//! Recognized key groups:
+//!
+//! * `train.criterion`, `train.backend`, `train.threads` — builder defaults;
+//! * `tune.min_split_max_frac`, `tune.min_split_steps` — the
+//!   Training-Only-Once hyper-parameter grid ([`TuneGrid`]);
+//! * `forest.n_trees`, `forest.feature_frac`, `forest.sample_frac`,
+//!   `forest.seed` — ensemble knobs ([`ForestConfig`]).
 
+use crate::tree::forest::ForestConfig;
+use crate::tree::tuning::TuneGrid;
+use crate::tree::TrainConfig;
 use std::collections::BTreeMap;
 use std::fmt;
 use std::path::Path;
@@ -117,8 +128,51 @@ impl Config {
         }
     }
 
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, ConfigError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ConfigError(format!("{key}: `{v}` is not an integer"))),
+        }
+    }
+
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.values.keys().map(|s| s.as_str())
+    }
+
+    /// The Training-Only-Once tuning grid from the `tune.*` keys.
+    pub fn tune_grid(&self) -> Result<TuneGrid, ConfigError> {
+        let defaults = TuneGrid::default();
+        let grid = TuneGrid {
+            min_split_max_frac: self
+                .get_f64("tune.min_split_max_frac", defaults.min_split_max_frac)?,
+            min_split_steps: self.get_usize("tune.min_split_steps", defaults.min_split_steps)?,
+        };
+        if !(0.0..=1.0).contains(&grid.min_split_max_frac) {
+            return Err(ConfigError(format!(
+                "tune.min_split_max_frac: `{}` must be in [0, 1]",
+                grid.min_split_max_frac
+            )));
+        }
+        if grid.min_split_steps == 0 {
+            return Err(ConfigError(
+                "tune.min_split_steps: must be >= 1".to_string(),
+            ));
+        }
+        Ok(grid)
+    }
+
+    /// Ensemble knobs from the `forest.*` keys, around a per-tree config.
+    pub fn forest_config(&self, tree: TrainConfig) -> Result<ForestConfig, ConfigError> {
+        let defaults = ForestConfig::default();
+        Ok(ForestConfig {
+            n_trees: self.get_usize("forest.n_trees", defaults.n_trees)?,
+            feature_frac: self.get_f64("forest.feature_frac", defaults.feature_frac)?,
+            sample_frac: self.get_f64("forest.sample_frac", defaults.sample_frac)?,
+            seed: self.get_u64("forest.seed", defaults.seed)?,
+            tree,
+        })
     }
 }
 
@@ -170,5 +224,40 @@ mod tests {
     fn bad_lines_error() {
         assert!(Config::from_str("just words\n").is_err());
         assert!(Config::new().set_kv("noequals").is_err());
+    }
+
+    #[test]
+    fn tune_grid_from_keys() {
+        let mut cfg = Config::new();
+        cfg.set_kv("tune.min_split_max_frac=0.1").unwrap();
+        cfg.set_kv("tune.min_split_steps=50").unwrap();
+        let grid = cfg.tune_grid().unwrap();
+        assert!((grid.min_split_max_frac - 0.1).abs() < 1e-12);
+        assert_eq!(grid.min_split_steps, 50);
+        // Defaults apply when keys are absent.
+        let d = Config::new().tune_grid().unwrap();
+        assert_eq!(d.min_split_steps, 200);
+    }
+
+    #[test]
+    fn tune_grid_rejects_bad_values() {
+        let mut cfg = Config::new();
+        cfg.set_kv("tune.min_split_max_frac=2.0").unwrap();
+        assert!(cfg.tune_grid().is_err());
+        let mut cfg = Config::new();
+        cfg.set_kv("tune.min_split_steps=0").unwrap();
+        assert!(cfg.tune_grid().is_err());
+    }
+
+    #[test]
+    fn forest_config_from_keys() {
+        let mut cfg = Config::new();
+        cfg.set_kv("forest.n_trees=25").unwrap();
+        cfg.set_kv("forest.sample_frac=0.5").unwrap();
+        let fc = cfg.forest_config(TrainConfig::default()).unwrap();
+        assert_eq!(fc.n_trees, 25);
+        assert!((fc.sample_frac - 0.5).abs() < 1e-12);
+        // Untouched knobs keep their defaults.
+        assert!((fc.feature_frac - 0.7).abs() < 1e-12);
     }
 }

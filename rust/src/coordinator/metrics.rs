@@ -1,8 +1,9 @@
 //! Evaluation metrics: accuracy, confusion matrix, per-class PR/F1,
 //! MAE/RMSE/R² for regression.
 
-use crate::data::dataset::Dataset;
-use crate::tree::{predict::predict_ds, Tree};
+use crate::data::dataset::{Dataset, TaskKind};
+use crate::error::{Result, UdtError};
+use crate::tree::{predict::predict_ds, require_task, Tree};
 
 /// Confusion matrix with derived statistics.
 #[derive(Debug, Clone)]
@@ -13,18 +14,32 @@ pub struct Confusion {
 }
 
 impl Confusion {
-    pub fn from_tree(tree: &Tree, ds: &Dataset, rows: &[u32]) -> Self {
+    pub fn from_tree(tree: &Tree, ds: &Dataset, rows: &[u32]) -> Result<Self> {
+        require_task(TaskKind::Classification, tree.task)?;
+        require_task(TaskKind::Classification, ds.task())?;
         let c = ds.labels.n_classes();
         let mut counts = vec![vec![0u32; c]; c];
         for &r in rows {
-            let pred = predict_ds(tree, ds, r as usize, usize::MAX, 0).class() as usize;
+            let pred = predict_ds(tree, ds, r as usize, usize::MAX, 0)
+                .as_class()
+                .unwrap_or(0) as usize;
             let actual = ds.labels.class(r as usize) as usize;
-            counts[actual][pred] += 1;
+            // A deserialized model can carry class ids the dataset does
+            // not know; surface that as a typed error, not a panic.
+            let cell = counts
+                .get_mut(actual)
+                .and_then(|row| row.get_mut(pred))
+                .ok_or_else(|| {
+                    UdtError::predict(format!(
+                        "class id out of range: predicted {pred}, actual {actual}, n_classes {c}"
+                    ))
+                })?;
+            *cell += 1;
         }
-        Self {
+        Ok(Self {
             n_classes: c,
             counts,
-        }
+        })
     }
 
     pub fn total(&self) -> u64 {
@@ -70,7 +85,9 @@ pub struct RegReport {
 }
 
 impl RegReport {
-    pub fn from_tree(tree: &Tree, ds: &Dataset, rows: &[u32]) -> Self {
+    pub fn from_tree(tree: &Tree, ds: &Dataset, rows: &[u32]) -> Result<Self> {
+        require_task(TaskKind::Regression, tree.task)?;
+        require_task(TaskKind::Regression, ds.task())?;
         let n = rows.len() as f64;
         let mean: f64 = rows
             .iter()
@@ -80,16 +97,18 @@ impl RegReport {
         let (mut abs, mut sq, mut tot_sq) = (0.0, 0.0, 0.0);
         for &r in rows {
             let y = ds.labels.target(r as usize);
-            let pred = predict_ds(tree, ds, r as usize, usize::MAX, 0).value();
+            let pred = predict_ds(tree, ds, r as usize, usize::MAX, 0)
+                .as_value()
+                .unwrap_or(f64::NAN);
             abs += (pred - y).abs();
             sq += (pred - y) * (pred - y);
             tot_sq += (y - mean) * (y - mean);
         }
-        RegReport {
+        Ok(RegReport {
             mae: abs / n,
             rmse: (sq / n).sqrt(),
             r2: if tot_sq > 0.0 { 1.0 - sq / tot_sq } else { 0.0 },
-        }
+        })
     }
 }
 
@@ -105,9 +124,9 @@ mod tests {
         let ds = generate_classification(&spec, 41);
         let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
         let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
-        let cm = Confusion::from_tree(&tree, &ds, &rows);
+        let cm = Confusion::from_tree(&tree, &ds, &rows).unwrap();
         assert_eq!(cm.total() as usize, ds.n_rows());
-        assert!((cm.accuracy() - tree.accuracy(&ds)).abs() < 1e-12);
+        assert!((cm.accuracy() - tree.accuracy(&ds).unwrap()).abs() < 1e-12);
         assert!(cm.macro_f1() > 0.5);
     }
 
@@ -117,7 +136,7 @@ mod tests {
         let ds = generate_classification(&spec, 43);
         let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
         let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
-        let cm = Confusion::from_tree(&tree, &ds, &rows);
+        let cm = Confusion::from_tree(&tree, &ds, &rows).unwrap();
         for c in 0..2 {
             let (p, r, f1) = cm.prf(c);
             for v in [p, r, f1] {
@@ -132,7 +151,7 @@ mod tests {
         let ds = generate_regression(&spec, 47);
         let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
         let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
-        let rep = RegReport::from_tree(&tree, &ds, &rows);
+        let rep = RegReport::from_tree(&tree, &ds, &rows).unwrap();
         assert!(rep.r2 > 0.9, "r2={}", rep.r2);
         assert!(rep.mae <= rep.rmse + 1e-12);
     }

@@ -5,27 +5,13 @@
 //! train(ms)" column).
 
 use crate::data::dataset::{Dataset, TaskKind};
+use crate::error::Result;
+use crate::model::Model;
 use crate::tree::tuning::{tune_and_prune, TuneGrid};
 use crate::tree::{TrainConfig, Tree};
 use crate::util::timer::Timer;
-use anyhow::Result;
 
-/// Test-set quality: accuracy or (MAE, RMSE).
-#[derive(Debug, Clone, Copy)]
-pub enum Quality {
-    Accuracy(f64),
-    Regression { mae: f64, rmse: f64 },
-}
-
-impl Quality {
-    /// Scalar summary (accuracy, or RMSE for regression).
-    pub fn headline(&self) -> f64 {
-        match self {
-            Quality::Accuracy(a) => *a,
-            Quality::Regression { rmse, .. } => *rmse,
-        }
-    }
-}
+pub use crate::model::Quality;
 
 /// One row of Table 6 / Table 7.
 #[derive(Debug, Clone)]
@@ -50,8 +36,26 @@ pub struct PipelineReport {
     pub tuned_train_ms: f64,
 }
 
-/// Run the full paper pipeline on one dataset.
-pub fn run_pipeline(ds: &Dataset, config: &TrainConfig, split_seed: u64) -> Result<PipelineReport> {
+/// Run the full paper pipeline on one dataset. The tuning `grid` comes
+/// from [`TuneGrid::default`] or the `tune.*` configuration keys.
+pub fn run_pipeline(
+    ds: &Dataset,
+    config: &TrainConfig,
+    grid: &TuneGrid,
+    split_seed: u64,
+) -> Result<PipelineReport> {
+    run_pipeline_model(ds, config, grid, split_seed).map(|(report, _)| report)
+}
+
+/// [`run_pipeline`], additionally returning the servable artifact: a
+/// [`Model::TunedTree`] carrying the full tree plus the Training-Only-Once
+/// effective `(max_depth, min_split)`.
+pub fn run_pipeline_model(
+    ds: &Dataset,
+    config: &TrainConfig,
+    grid: &TuneGrid,
+    split_seed: u64,
+) -> Result<(PipelineReport, Model)> {
     let (train, val, test) = ds.split_indices(0.8, 0.1, split_seed);
 
     // Train the full ("full-fledged") tree.
@@ -60,16 +64,15 @@ pub fn run_pipeline(ds: &Dataset, config: &TrainConfig, split_seed: u64) -> Resu
     let full_train_ms = timer.ms();
 
     // Training-Only-Once Tuning + pruning.
-    let grid = TuneGrid::default();
     let t_tune = Timer::start();
-    let (tune_result, pruned) = tune_and_prune(&full, ds, &val, train.len(), &grid);
+    let (tune_result, pruned) = tune_and_prune(&full, ds, &val, train.len(), grid)?;
     let tune_ms = t_tune.ms();
 
     // Test quality of the pruned tree.
     let quality = match ds.task() {
-        TaskKind::Classification => Quality::Accuracy(pruned.accuracy_rows(ds, &test)),
+        TaskKind::Classification => Quality::Accuracy(pruned.accuracy_rows(ds, &test)?),
         TaskKind::Regression => {
-            let (mae, rmse) = pruned.regression_error(ds, &test);
+            let (mae, rmse) = pruned.regression_error(ds, &test)?;
             Quality::Regression { mae, rmse }
         }
     };
@@ -85,7 +88,7 @@ pub fn run_pipeline(ds: &Dataset, config: &TrainConfig, split_seed: u64) -> Resu
     let retrained = Tree::fit_rows(ds, &train, &tuned_cfg)?;
     let tuned_train_ms = t_retrain.ms();
 
-    Ok(PipelineReport {
+    let report = PipelineReport {
         dataset: ds.name.clone(),
         n_examples: ds.n_rows(),
         n_features: ds.n_features(),
@@ -104,7 +107,13 @@ pub fn run_pipeline(ds: &Dataset, config: &TrainConfig, split_seed: u64) -> Resu
             let _ = &retrained;
             tuned_train_ms
         },
-    })
+    };
+    let model = Model::TunedTree {
+        tree: full,
+        max_depth: tune_result.best_max_depth,
+        min_split: tune_result.best_min_split,
+    };
+    Ok((report, model))
 }
 
 #[cfg(test)]
@@ -117,7 +126,7 @@ mod tests {
         let mut spec = SynthSpec::classification("pipe", 3000, 8, 3);
         spec.noise = 0.1;
         let ds = generate_any(&spec, 51);
-        let rep = run_pipeline(&ds, &TrainConfig::default(), 1).unwrap();
+        let rep = run_pipeline(&ds, &TrainConfig::default(), &TuneGrid::default(), 1).unwrap();
         assert_eq!(rep.n_examples, 3000);
         assert!(rep.full_nodes >= rep.tuned_nodes);
         assert!(rep.full_depth >= rep.tuned_depth);
@@ -133,7 +142,7 @@ mod tests {
     fn regression_pipeline_produces_sane_report() {
         let spec = SynthSpec::regression("rpipe", 2000, 6);
         let ds = generate_any(&spec, 52);
-        let rep = run_pipeline(&ds, &TrainConfig::default(), 2).unwrap();
+        let rep = run_pipeline(&ds, &TrainConfig::default(), &TuneGrid::default(), 2).unwrap();
         match rep.quality {
             Quality::Regression { mae, rmse } => {
                 assert!(mae.is_finite() && rmse.is_finite());
@@ -148,7 +157,7 @@ mod tests {
         // The paper's headline: tune+prune ≪ full training.
         let spec = SynthSpec::classification("fast", 20_000, 10, 2);
         let ds = generate_any(&spec, 53);
-        let rep = run_pipeline(&ds, &TrainConfig::default(), 3).unwrap();
+        let rep = run_pipeline(&ds, &TrainConfig::default(), &TuneGrid::default(), 3).unwrap();
         assert!(
             rep.tune_ms < rep.full_train_ms,
             "tune {} !< train {}",

@@ -1,42 +1,49 @@
-//! Batch prediction server.
+//! Batch prediction server over any [`Model`] family.
 //!
 //! A small line-oriented TCP protocol (std::net + a worker pool; the
 //! offline image has no tokio): each request line is a JSON array of
 //! feature values (numbers, strings, or null for missing) — or an array
 //! of such arrays for a batch — and the response line is the JSON array
-//! of predictions. `"ping"` → `"pong"`, `"stats"` → counters,
-//! `"shutdown"` closes the listener.
+//! of predictions. Requests parse into rows once, then dispatch through
+//! [`Model::predict_batch`], so the family match is amortized over the
+//! whole batch and tuned trees / forests serve exactly like single trees.
+//!
+//! Control lines: `"ping"` → `"pong"`, `"stats"` → counters + model
+//! identity, `"schema"` → the bundled [`Schema`], `"shutdown"` closes the
+//! listener.
 
-use crate::data::interner::Interner;
 use crate::data::value::Value;
-use crate::tree::{predict::predict_row, NodeLabel, Tree};
+use crate::error::{Result, UdtError};
+use crate::model::{Model, SavedModel};
+use crate::tree::NodeLabel;
 use crate::util::json::Json;
-use anyhow::{anyhow, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
-/// Shared server state.
+/// Shared server state: the model bundle plus counters.
 pub struct Server {
-    tree: Tree,
-    interner: Interner,
-    class_names: Vec<String>,
+    saved: SavedModel,
     requests: AtomicU64,
     predictions: AtomicU64,
     shutdown: AtomicBool,
 }
 
 impl Server {
-    pub fn new(tree: Tree, interner: Interner, class_names: Vec<String>) -> Arc<Self> {
+    /// Serve a model bundle (any family; see [`SavedModel::load`]).
+    pub fn new(saved: SavedModel) -> Arc<Self> {
         Arc::new(Self {
-            tree,
-            interner,
-            class_names,
+            saved,
             requests: AtomicU64::new(0),
             predictions: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
         })
+    }
+
+    /// The served model.
+    pub fn model(&self) -> &Model {
+        &self.saved.model
     }
 
     /// Parse one JSON value into a feature cell.
@@ -44,35 +51,31 @@ impl Server {
         Ok(match j {
             Json::Null => Value::Missing,
             Json::Num(x) => Value::Num(*x),
-            Json::Str(s) => match self.interner.get(s) {
+            Json::Str(s) => match self.saved.interner.get(s) {
                 Some(id) => Value::Cat(id),
                 // Unseen category: behaves like "equal to nothing" — the
                 // comparison semantics route it negative everywhere, which
                 // is exactly what Missing does.
                 None => Value::Missing,
             },
-            other => return Err(anyhow!("bad cell {other:?}")),
+            other => return Err(UdtError::predict(format!("bad cell {other:?}"))),
         })
     }
 
-    fn predict_one(&self, arr: &[Json]) -> Result<Json> {
-        if arr.len() != self.tree.n_features {
-            return Err(anyhow!(
-                "expected {} features, got {}",
-                self.tree.n_features,
-                arr.len()
-            ));
-        }
-        let row: Result<Vec<Value>> = arr.iter().map(|j| self.cell(j)).collect();
-        let label = predict_row(&self.tree, &row?, usize::MAX, 0);
-        self.predictions.fetch_add(1, Ordering::Relaxed);
-        Ok(match label {
-            NodeLabel::Class(c) => match self.class_names.get(c as usize) {
-                Some(name) => Json::Str(name.clone()),
+    /// Parse one JSON row into feature cells.
+    fn parse_row(&self, arr: &[Json]) -> Result<Vec<Value>> {
+        arr.iter().map(|j| self.cell(j)).collect()
+    }
+
+    /// Render a prediction: class name when the schema knows one.
+    fn label_json(&self, label: NodeLabel) -> Json {
+        match label {
+            NodeLabel::Class(c) => match self.saved.schema.class_name(c) {
+                Some(name) => Json::Str(name.to_string()),
                 None => Json::Num(c as f64),
             },
             NodeLabel::Value(v) => Json::Num(v),
-        })
+        }
     }
 
     /// Handle one request line; returns the response line.
@@ -92,9 +95,17 @@ impl Server {
                     "predictions",
                     Json::Num(self.predictions.load(Ordering::Relaxed) as f64),
                 ),
-                ("nodes", Json::Num(self.tree.n_nodes() as f64)),
+                ("kind", Json::Str(self.saved.model.kind().to_string())),
+                ("nodes", Json::Num(self.saved.model.n_nodes() as f64)),
+                (
+                    "n_features",
+                    Json::Num(self.saved.model.n_features() as f64),
+                ),
             ])
             .to_string();
+        }
+        if trimmed == "\"schema\"" || trimmed == "schema" {
+            return self.saved.schema.to_json().to_string();
         }
         if trimmed == "\"shutdown\"" || trimmed == "shutdown" {
             self.shutdown.store(true, Ordering::SeqCst);
@@ -107,29 +118,42 @@ impl Server {
     }
 
     fn handle_predict(&self, line: &str) -> Result<Json> {
-        let parsed = Json::parse(line).map_err(|e| anyhow!("{e}"))?;
+        let parsed = Json::parse(line).map_err(|e| UdtError::predict(e.to_string()))?;
         let arr = parsed
             .as_arr()
-            .ok_or_else(|| anyhow!("request must be a JSON array"))?;
+            .ok_or_else(|| UdtError::predict("request must be a JSON array"))?;
         // Batch if the first element is itself an array.
         if matches!(arr.first(), Some(Json::Arr(_))) {
-            let preds: Result<Vec<Json>> = arr
+            let rows: Result<Vec<Vec<Value>>> = arr
                 .iter()
                 .map(|row| {
                     row.as_arr()
-                        .ok_or_else(|| anyhow!("batch rows must be arrays"))
-                        .and_then(|r| self.predict_one(r))
+                        .ok_or_else(|| UdtError::predict("batch rows must be arrays"))
+                        .and_then(|r| self.parse_row(r))
                 })
                 .collect();
-            Ok(Json::Arr(preds?))
+            let rows = rows?;
+            let labels = self.saved.model.predict_batch(&rows)?;
+            self.predictions
+                .fetch_add(labels.len() as u64, Ordering::Relaxed);
+            Ok(Json::Arr(
+                labels.into_iter().map(|l| self.label_json(l)).collect(),
+            ))
         } else {
-            self.predict_one(arr)
+            let row = self.parse_row(arr)?;
+            let label = self.saved.model.predict_row(&row)?;
+            self.predictions.fetch_add(1, Ordering::Relaxed);
+            Ok(self.label_json(label))
         }
     }
 
     /// Serve until a `shutdown` request arrives. Returns the bound address
     /// through `on_bound` (useful with port 0 in tests).
-    pub fn serve(self: &Arc<Self>, addr: &str, on_bound: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+    pub fn serve(
+        self: &Arc<Self>,
+        addr: &str,
+        on_bound: impl FnOnce(std::net::SocketAddr),
+    ) -> Result<()> {
         let listener = TcpListener::bind(addr)?;
         on_bound(listener.local_addr()?);
         listener.set_nonblocking(true)?;
@@ -178,14 +202,14 @@ impl Server {
 mod tests {
     use super::*;
     use crate::data::synth::{generate_classification, SynthSpec};
-    use crate::tree::TrainConfig;
+    use crate::model::Udt;
 
     fn server() -> Arc<Server> {
         let mut spec = SynthSpec::classification("srv", 500, 4, 2);
         spec.cat_frac = 0.3;
         let ds = generate_classification(&spec, 61);
-        let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
-        Server::new(tree, ds.interner.clone(), ds.class_names.clone())
+        let tree = Udt::builder().fit(&ds).unwrap();
+        Server::new(SavedModel::new(Model::SingleTree(tree), &ds))
     }
 
     #[test]
@@ -194,6 +218,14 @@ mod tests {
         assert_eq!(s.handle("\"ping\""), "\"pong\"");
         let stats = Json::parse(&s.handle("stats")).unwrap();
         assert!(stats.get("requests").unwrap().as_f64().unwrap() >= 1.0);
+        assert_eq!(stats.get("kind").unwrap().as_str().unwrap(), "single_tree");
+    }
+
+    #[test]
+    fn schema_request_lists_features() {
+        let s = server();
+        let schema = Json::parse(&s.handle("schema")).unwrap();
+        assert_eq!(schema.get("features").unwrap().as_arr().unwrap().len(), 4);
     }
 
     #[test]
@@ -201,7 +233,7 @@ mod tests {
         let s = server();
         let row = "[1.0, 2.0, 3.0, null]";
         let r1 = s.handle(row);
-        assert!(r1.starts_with('"'), "{r1}");
+        assert!(r1.starts_with('"') || r1.parse::<f64>().is_ok(), "{r1}");
         let batch = format!("[{row}, {row}]");
         let rb = Json::parse(&s.handle(&batch)).unwrap();
         assert_eq!(rb.as_arr().unwrap().len(), 2);

@@ -9,7 +9,7 @@ use super::column::Column;
 use super::dataset::{Dataset, Labels, TaskKind};
 use super::interner::Interner;
 use super::value::{parse_cell, Value};
-use anyhow::{bail, Context, Result};
+use crate::error::{Result, UdtError};
 use std::collections::HashMap;
 use std::path::Path;
 
@@ -84,26 +84,30 @@ pub fn load_csv_str(name: &str, text: &str, opts: &CsvOptions) -> Result<Dataset
         let fields = parse_record(line, opts.delimiter);
         if let Some(prev) = rows.first() {
             if fields.len() != prev.len() {
-                bail!(
+                return Err(UdtError::data(format!(
                     "row {} has {} fields, expected {}",
                     i + 1,
                     fields.len(),
                     prev.len()
-                );
+                )));
             }
         }
         rows.push(fields);
     }
     if rows.is_empty() {
-        bail!("csv `{name}` has no data rows");
+        return Err(UdtError::data(format!("csv `{name}` has no data rows")));
     }
     let width = rows[0].len();
     if width < 2 {
-        bail!("csv `{name}` needs at least one feature column plus a label");
+        return Err(UdtError::data(format!(
+            "csv `{name}` needs at least one feature column plus a label"
+        )));
     }
     let label_col = opts.label_col.unwrap_or(width - 1);
     if label_col >= width {
-        bail!("label column {label_col} out of range (width {width})");
+        return Err(UdtError::data(format!(
+            "label column {label_col} out of range (width {width})"
+        )));
     }
 
     let mut interner = Interner::new();
@@ -155,10 +159,9 @@ pub fn load_csv_str(name: &str, text: &str, opts: &CsvOptions) -> Result<Dataset
                 .iter()
                 .enumerate()
                 .map(|(i, r)| {
-                    r[label_col]
-                        .trim()
-                        .parse::<f64>()
-                        .with_context(|| format!("row {i}: non-numeric regression label"))
+                    r[label_col].trim().parse::<f64>().map_err(|_| {
+                        UdtError::data(format!("row {i}: non-numeric regression label"))
+                    })
                 })
                 .collect();
             Labels::Reg { values: values? }
@@ -171,7 +174,7 @@ pub fn load_csv_str(name: &str, text: &str, opts: &CsvOptions) -> Result<Dataset
 pub fn load_csv(path: impl AsRef<Path>, opts: &CsvOptions) -> Result<Dataset> {
     let path = path.as_ref();
     let text = std::fs::read_to_string(path)
-        .with_context(|| format!("reading {}", path.display()))?;
+        .map_err(|e| UdtError::data(format!("reading {}: {e}", path.display())))?;
     let name = path
         .file_stem()
         .map(|s| s.to_string_lossy().to_string())

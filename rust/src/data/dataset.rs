@@ -3,7 +3,7 @@
 use super::column::Column;
 use super::interner::Interner;
 use super::value::Value;
-use anyhow::{bail, Result};
+use crate::error::{Result, UdtError};
 
 /// Classification or regression.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -84,12 +84,12 @@ impl Dataset {
         let n = labels.len();
         for c in &columns {
             if c.len() != n {
-                bail!(
+                return Err(UdtError::data(format!(
                     "column `{}` has {} rows but labels have {}",
                     c.name,
                     c.len(),
                     n
-                );
+                )));
             }
         }
         Ok(Self {

@@ -45,6 +45,13 @@ impl Interner {
         &self.names[id.0 as usize]
     }
 
+    /// All interned strings in id order (id `i` ↔ `names()[i]`). Interning
+    /// them into a fresh interner in order reproduces identical ids — the
+    /// basis of model-bundle serialization.
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
     pub fn len(&self) -> usize {
         self.names.len()
     }

@@ -1,0 +1,150 @@
+//! Typed errors for the public `udt` surface.
+//!
+//! Everything a user can get wrong — an invalid builder configuration, a
+//! task mismatch (accuracy on a regression model), malformed CSV or model
+//! JSON, a bad prediction request — surfaces as a [`UdtError`] variant
+//! instead of a panic or an opaque string.
+
+use crate::data::dataset::TaskKind;
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, UdtError>;
+
+/// The error type of the public `udt` API.
+#[derive(Debug)]
+pub enum UdtError {
+    /// A builder or training configuration is invalid.
+    InvalidConfig(String),
+    /// The operation requires the other task kind (e.g. classification
+    /// accuracy of a regression model).
+    TaskMismatch { expected: TaskKind, got: TaskKind },
+    /// Dataset construction or ingestion failed (CSV shape, mismatched
+    /// column lengths, empty row sets, ...).
+    Data(String),
+    /// A serialized model document failed to parse or validate.
+    Model(String),
+    /// A prediction request is malformed (wrong arity, bad cell).
+    Predict(String),
+    /// Configuration file / `--set` override errors.
+    Config(crate::config::ConfigError),
+    /// Command-line usage errors.
+    Usage(String),
+    /// Accelerator runtime / artifact errors.
+    Runtime(String),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+}
+
+impl UdtError {
+    /// Shorthand for [`UdtError::InvalidConfig`].
+    pub fn invalid_config(msg: impl Into<String>) -> Self {
+        UdtError::InvalidConfig(msg.into())
+    }
+
+    /// Shorthand for [`UdtError::Data`].
+    pub fn data(msg: impl Into<String>) -> Self {
+        UdtError::Data(msg.into())
+    }
+
+    /// Shorthand for [`UdtError::Model`].
+    pub fn model(msg: impl Into<String>) -> Self {
+        UdtError::Model(msg.into())
+    }
+
+    /// Shorthand for [`UdtError::Predict`].
+    pub fn predict(msg: impl Into<String>) -> Self {
+        UdtError::Predict(msg.into())
+    }
+
+    /// Shorthand for [`UdtError::Usage`].
+    pub fn usage(msg: impl Into<String>) -> Self {
+        UdtError::Usage(msg.into())
+    }
+
+    /// Shorthand for [`UdtError::Runtime`].
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        UdtError::Runtime(msg.into())
+    }
+}
+
+fn task_name(t: TaskKind) -> &'static str {
+    match t {
+        TaskKind::Classification => "classification",
+        TaskKind::Regression => "regression",
+    }
+}
+
+impl fmt::Display for UdtError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            UdtError::InvalidConfig(m) => write!(f, "invalid config: {m}"),
+            UdtError::TaskMismatch { expected, got } => write!(
+                f,
+                "task mismatch: expected {}, got {}",
+                task_name(*expected),
+                task_name(*got)
+            ),
+            UdtError::Data(m) => write!(f, "data error: {m}"),
+            UdtError::Model(m) => write!(f, "model error: {m}"),
+            UdtError::Predict(m) => write!(f, "predict error: {m}"),
+            UdtError::Config(e) => write!(f, "{e}"),
+            UdtError::Usage(m) => write!(f, "{m}"),
+            UdtError::Runtime(m) => write!(f, "runtime error: {m}"),
+            UdtError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for UdtError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            UdtError::Io(e) => Some(e),
+            UdtError::Config(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for UdtError {
+    fn from(e: std::io::Error) -> Self {
+        UdtError::Io(e)
+    }
+}
+
+impl From<crate::config::ConfigError> for UdtError {
+    fn from(e: crate::config::ConfigError) -> Self {
+        UdtError::Config(e)
+    }
+}
+
+impl From<crate::util::json::JsonError> for UdtError {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        UdtError::Model(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_are_informative() {
+        let e = UdtError::invalid_config("max_depth must be >= 1");
+        assert!(e.to_string().contains("max_depth"));
+        let e = UdtError::TaskMismatch {
+            expected: TaskKind::Classification,
+            got: TaskKind::Regression,
+        };
+        assert!(e.to_string().contains("classification"));
+        assert!(e.to_string().contains("regression"));
+    }
+
+    #[test]
+    fn io_errors_convert() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: UdtError = io.into();
+        assert!(matches!(e, UdtError::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -8,38 +8,67 @@
 //!   tabular data substrate, Superfast Selection (`O(M + N·C)` split
 //!   selection via prefix sums), the generic `O(M·N)` baseline, the UDT
 //!   builder (`O(K·M log M)` total), Training-Only-Once Tuning, a
-//!   thread-pool coordinator, CLI, metrics and a prediction server.
+//!   thread-pool coordinator, CLI, metrics and an any-model prediction
+//!   server.
 //! * **Layer 2 (python/compile/model.py)** — the same split-scoring
 //!   dataflow expressed in JAX, AOT-lowered to HLO text at build time.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the
 //!   histogram + prefix-scan + heuristic hot-spot, executed from Rust via
-//!   the PJRT CPU client ([`runtime`]).
+//!   the PJRT CPU client ([`runtime`], behind the `xla` cargo feature).
 //!
-//! Quick start:
+//! ## The model surface
+//!
+//! Training goes through the fluent [`Udt::builder`] / [`Forest::builder`]
+//! API; every trained family implements [`Estimator`]
+//! (`fit` / `predict_row` / `predict_batch` / `evaluate`); a trained
+//! artifact ships as a [`Model`] — single tree, Training-Only-Once tuned
+//! tree, or bagged forest — bundled with its schema and interner in a
+//! [`SavedModel`], which `udt serve` and `udt predict` round-trip.
+//! User mistakes (bad configs, task mismatches, malformed model JSON,
+//! wrong-arity requests) surface as typed [`UdtError`]s, never panics.
 //!
 //! ```no_run
-//! use udt::data::synth::{SynthSpec, generate_classification};
-//! use udt::tree::{Tree, TrainConfig};
+//! use udt::data::synth::{generate_classification, SynthSpec};
+//! use udt::selection::heuristic::ClassCriterion;
+//! use udt::{Estimator, Model, SavedModel, Udt};
 //!
-//! let spec = SynthSpec::classification("demo", 1000, 8, 3);
-//! let ds = generate_classification(&spec, 42);
-//! let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
-//! let acc = tree.accuracy(&ds);
-//! assert!(acc > 0.8);
+//! fn main() -> udt::Result<()> {
+//!     let spec = SynthSpec::classification("demo", 10_000, 8, 3);
+//!     let ds = generate_classification(&spec, 42);
+//!
+//!     // Fluent, validating training surface.
+//!     let tree = Udt::builder()
+//!         .criterion(ClassCriterion::Gini)
+//!         .max_depth(8)
+//!         .threads(8)
+//!         .fit(&ds)?;
+//!
+//!     // One contract for every family.
+//!     let quality = tree.evaluate(&ds)?;
+//!     println!("accuracy = {:.4}", quality.headline());
+//!
+//!     // Ship it: schema + interner travel with the model.
+//!     SavedModel::new(Model::SingleTree(tree), &ds).save("model.json")?;
+//!     Ok(())
+//! }
 //! ```
 
 pub mod bench_support;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod error;
+pub mod model;
 pub mod runtime;
 pub mod selection;
 pub mod tree;
 pub mod util;
 
 pub use data::dataset::Dataset;
+pub use error::{Result, UdtError};
+pub use model::{
+    Estimator, ForestBuilder, Model, Quality, SavedModel, Schema, Udt, UdtBuilder,
+};
 pub use selection::split::SplitPredicate;
-pub use tree::{TrainConfig, Tree};
-
-/// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+pub use tree::forest::{Forest, ForestConfig};
+pub use tree::{Backend, NodeLabel, RegStrategy, TrainConfig, Tree};

@@ -1,35 +1,35 @@
 //! `udt` — the launcher.
 //!
 //! Subcommands:
-//!   train        train a tree on a CSV or registered synthetic dataset
+//!   train        train a tree or forest on a CSV or registered dataset
 //!   pipeline     the paper's full train→tune→prune→evaluate pipeline
-//!   predict      load a serialized tree and predict over a CSV
+//!   predict      load a serialized model and evaluate it over a CSV
 //!   gen-data     materialize a registered synthetic dataset as CSV
 //!   bench-selection  Table 5 (generic vs superfast, single feature)
 //!   bench-suite      Table 6 / Table 7 rows
-//!   serve        prediction server over TCP
+//!   serve        prediction server over TCP (any model family)
 //!   artifacts    inspect the AOT artifact manifest
 //!
-//! Run `udt <subcommand> --help` for options.
+//! Run `udt <subcommand> --help` for options. Every training command
+//! accepts `--set key=value` overrides (e.g. `--set tune.min_split_steps=50`
+//! or `--set forest.n_trees=25`) on top of an optional `--config` file.
 
-use anyhow::{anyhow, bail, Result};
 use udt::config::Config;
-use udt::coordinator::pipeline::{run_pipeline, Quality};
+use udt::coordinator::pipeline::{run_pipeline_model, Quality};
 use udt::coordinator::serve::Server;
 use udt::data::csv::{load_csv, CsvOptions};
 use udt::data::dataset::TaskKind;
 use udt::data::synth::{generate_any, registry};
 use udt::selection::heuristic::ClassCriterion;
-use udt::tree::serialize;
-use udt::tree::{Backend, TrainConfig, Tree};
-use udt::util::cli::Command;
-use udt::util::json::Json;
+use udt::tree::Backend;
+use udt::util::cli::{Args, Command};
 use udt::util::timer::Timer;
+use udt::{Forest, Model, Result, SavedModel, Tree, Udt, UdtError};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = run(&args) {
-        eprintln!("error: {e:#}");
+        eprintln!("error: {e}");
         std::process::exit(1);
     }
 }
@@ -54,7 +54,9 @@ fn run(args: &[String]) -> Result<()> {
             print_usage();
             Ok(())
         }
-        other => bail!("unknown subcommand `{other}` (try `udt help`)"),
+        other => Err(UdtError::usage(format!(
+            "unknown subcommand `{other}` (try `udt help`)"
+        ))),
     }
 }
 
@@ -63,58 +65,72 @@ fn print_usage() {
         "udt — Ultrafast Decision Tree (Superfast Selection reproduction)\n\
          \n\
          subcommands:\n\
-           train            train a tree (CSV or --dataset from the registry)\n\
+           train            train a tree or forest (CSV or --dataset)\n\
            pipeline         train → tune (once) → prune → evaluate\n\
-           predict          predict with a serialized tree over a CSV\n\
+           predict          evaluate a serialized model over a CSV\n\
            gen-data         write a registry dataset to CSV\n\
            rank-features    Superfast Selection as a feature-selection filter\n\
            bench-selection  Table 5: generic vs superfast on one feature\n\
            bench-suite      Table 6/7 rows over the dataset registry\n\
-           serve            TCP prediction server\n\
+           serve            TCP prediction server (tree, tuned tree or forest)\n\
            artifacts        list AOT artifacts and their shapes\n"
     );
 }
 
-/// Shared training options → TrainConfig.
-fn train_config(a: &udt::util::cli::Args, cfg: &Config) -> Result<TrainConfig> {
+/// Shared training options → a validated `TrainConfig` via the builder.
+fn train_config(a: &Args, cfg: &Config) -> Result<udt::TrainConfig> {
     let crit_default = cfg.get_or("train.criterion", "info_gain");
     let criterion = a.get_or("criterion", &crit_default);
     let criterion = ClassCriterion::parse(criterion)
-        .ok_or_else(|| anyhow!("unknown criterion `{criterion}`"))?;
+        .ok_or_else(|| UdtError::usage(format!("unknown criterion `{criterion}`")))?;
     let backend_default = cfg.get_or("train.backend", "superfast");
     let backend = match a.get_or("backend", &backend_default) {
         "superfast" => Backend::Superfast,
         "generic" => Backend::Generic,
         "xla" => {
             let xla = udt::runtime::xla_split::XlaSelection::load_default(Default::default())
-                .ok_or_else(|| anyhow!("xla backend requires built artifacts (make artifacts)"))?;
+                .ok_or_else(|| {
+                    UdtError::runtime(
+                        "xla backend requires built artifacts (make artifacts) and the \
+                         `xla` cargo feature",
+                    )
+                })?;
             Backend::Xla(std::sync::Arc::new(xla))
         }
-        other => bail!("unknown backend `{other}`"),
+        other => return Err(UdtError::usage(format!("unknown backend `{other}`"))),
     };
-    Ok(TrainConfig {
-        criterion,
-        max_depth: a.get_usize("max-depth", usize::MAX)?,
-        min_samples_split: a.get_usize("min-split", 2)?,
-        backend,
-        n_threads: a.get_usize("threads", cfg.get_usize("train.threads", 1).unwrap_or(1))?,
-        ..Default::default()
-    })
+    let mut builder = Udt::builder()
+        .criterion(criterion)
+        .backend(backend)
+        .min_samples_split(a.get_usize("min-split", 2)?)
+        .threads(a.get_usize("threads", cfg.get_usize("train.threads", 1)?)?);
+    if let Some(depth) = a.get("max-depth") {
+        let depth: usize = depth
+            .parse()
+            .map_err(|_| UdtError::usage(format!("--max-depth expects an integer, got `{depth}`")))?;
+        builder = builder.max_depth(depth);
+    }
+    builder.build()
 }
 
-fn base_config(a: &udt::util::cli::Args) -> Result<Config> {
+/// Config file + `--set key=value` overrides.
+fn base_config(a: &Args) -> Result<Config> {
     let mut cfg = Config::new();
     if let Some(path) = a.get("config") {
-        cfg = Config::from_file(path).map_err(|e| anyhow!("{e}"))?;
+        cfg = Config::from_file(path)?;
+    }
+    for kv in a.get_all("set") {
+        cfg.set_kv(kv)?;
     }
     Ok(cfg)
 }
 
-fn load_dataset(a: &udt::util::cli::Args) -> Result<udt::Dataset> {
+fn load_dataset(a: &Args) -> Result<udt::Dataset> {
     let seed = a.get_u64("seed", 42)?;
     if let Some(name) = a.get("dataset") {
-        let entry = registry::find(name)
-            .ok_or_else(|| anyhow!("unknown dataset `{name}`; see `udt gen-data --list`"))?;
+        let entry = registry::find(name).ok_or_else(|| {
+            UdtError::usage(format!("unknown dataset `{name}`; see `udt gen-data --list`"))
+        })?;
         let scale: f64 = a.get_f64("scale", 1.0)?;
         return Ok(generate_any(&entry.spec.scaled(scale), seed));
     }
@@ -122,7 +138,7 @@ fn load_dataset(a: &udt::util::cli::Args) -> Result<udt::Dataset> {
         let task = match a.get_or("task", "classification") {
             "classification" => TaskKind::Classification,
             "regression" => TaskKind::Regression,
-            other => bail!("unknown task `{other}`"),
+            other => return Err(UdtError::usage(format!("unknown task `{other}`"))),
         };
         return load_csv(
             path,
@@ -132,11 +148,11 @@ fn load_dataset(a: &udt::util::cli::Args) -> Result<udt::Dataset> {
             },
         );
     }
-    bail!("provide a CSV path or --dataset <name>")
+    Err(UdtError::usage("provide a CSV path or --dataset <name>"))
 }
 
 fn cmd_train(raw: &[String]) -> Result<()> {
-    let cmd = Command::new("train", "train a decision tree")
+    let cmd = Command::new("train", "train a decision tree or forest")
         .opt("dataset", "registry dataset name (alternative to CSV)", None)
         .opt("scale", "row-count scale for registry datasets", Some("1.0"))
         .opt("task", "classification|regression (CSV input)", Some("classification"))
@@ -145,9 +161,11 @@ fn cmd_train(raw: &[String]) -> Result<()> {
         .opt("max-depth", "maximum depth", None)
         .opt("min-split", "minimum samples to split", None)
         .opt("threads", "worker threads (0 = all cores)", None)
+        .opt("forest", "train a bagged forest of N trees instead", None)
         .opt("seed", "rng seed", Some("42"))
-        .opt("out", "write the trained tree as JSON", None)
+        .opt("out", "write the trained model as JSON", None)
         .opt("config", "config file", None)
+        .opt_multi("set", "config override key=value")
         .positional("input.csv");
     let a = cmd.parse(raw)?;
     let cfg = base_config(&a)?;
@@ -155,29 +173,33 @@ fn cmd_train(raw: &[String]) -> Result<()> {
     let train_cfg = train_config(&a, &cfg)?;
 
     let timer = Timer::start();
-    let tree = Tree::fit(&ds, &train_cfg)?;
+    let model = match a.get("forest") {
+        None => Model::SingleTree(Tree::fit(&ds, &train_cfg)?),
+        Some(n) => {
+            let n: usize = n
+                .parse()
+                .map_err(|_| UdtError::usage(format!("--forest expects an integer, got `{n}`")))?;
+            let mut forest_cfg = cfg.forest_config(train_cfg)?;
+            forest_cfg.n_trees = n;
+            Model::Forest(Forest::fit(&ds, &forest_cfg)?)
+        }
+    };
     let ms = timer.ms();
     println!(
-        "dataset={} rows={} features={} | nodes={} depth={} train={:.1}ms",
+        "dataset={} rows={} features={} | kind={} nodes={} train={:.1}ms",
         ds.name,
         ds.n_rows(),
         ds.n_features(),
-        tree.n_nodes(),
-        tree.depth,
+        model.kind(),
+        model.n_nodes(),
         ms
     );
-    match ds.task() {
-        TaskKind::Classification => {
-            println!("train accuracy = {:.4}", tree.accuracy(&ds))
-        }
-        TaskKind::Regression => {
-            let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
-            let (mae, rmse) = tree.regression_error(&ds, &rows);
-            println!("train MAE = {mae:.4}, RMSE = {rmse:.4}");
-        }
+    match model.evaluate(&ds)? {
+        Quality::Accuracy(acc) => println!("train accuracy = {acc:.4}"),
+        Quality::Regression { mae, rmse } => println!("train MAE = {mae:.4}, RMSE = {rmse:.4}"),
     }
     if let Some(out) = a.get("out") {
-        std::fs::write(out, serialize::to_json(&tree, &ds.interner).to_pretty())?;
+        SavedModel::new(model, &ds).save(out)?;
         println!("wrote {out}");
     }
     Ok(())
@@ -194,13 +216,16 @@ fn cmd_pipeline(raw: &[String]) -> Result<()> {
         .opt("min-split", "minimum samples to split", None)
         .opt("threads", "worker threads", None)
         .opt("seed", "rng seed", Some("42"))
+        .opt("out", "write the tuned model as JSON", None)
         .opt("config", "config file", None)
+        .opt_multi("set", "config override key=value (tune.* shapes the grid)")
         .positional("input.csv");
     let a = cmd.parse(raw)?;
     let cfg = base_config(&a)?;
     let ds = load_dataset(&a)?;
     let train_cfg = train_config(&a, &cfg)?;
-    let rep = run_pipeline(&ds, &train_cfg, a.get_u64("seed", 42)?)?;
+    let grid = cfg.tune_grid()?;
+    let (rep, model) = run_pipeline_model(&ds, &train_cfg, &grid, a.get_u64("seed", 42)?)?;
     println!(
         "{}: full tree {} nodes / depth {} in {:.0} ms; tuned in {:.1} ms over {} settings",
         rep.dataset, rep.full_nodes, rep.full_depth, rep.full_train_ms, rep.tune_ms, rep.n_settings
@@ -213,34 +238,43 @@ fn cmd_pipeline(raw: &[String]) -> Result<()> {
         Quality::Accuracy(acc) => println!("  test accuracy = {acc:.4}"),
         Quality::Regression { mae, rmse } => println!("  test MAE = {mae:.4}, RMSE = {rmse:.4}"),
     }
+    if let Some(out) = a.get("out") {
+        SavedModel::new(model, &ds).save(out)?;
+        println!("wrote {out} (tuned tree, servable)");
+    }
     Ok(())
 }
 
 fn cmd_predict(raw: &[String]) -> Result<()> {
-    let cmd = Command::new("predict", "predict with a serialized tree")
-        .opt("model", "tree JSON (from `train --out`)", None)
+    let cmd = Command::new("predict", "evaluate a serialized model over a CSV")
+        .opt("model", "model JSON (from `train --out` or `pipeline --out`)", None)
+        .opt("dataset", "registry dataset name (alternative to CSV)", None)
+        .opt("scale", "row-count scale", Some("1.0"))
         .opt("task", "classification|regression", Some("classification"))
+        .opt("seed", "rng seed", Some("42"))
         .positional("input.csv");
     let a = cmd.parse(raw)?;
     let model_path = a
         .get("model")
-        .ok_or_else(|| anyhow!("--model is required"))?;
-    let ds = load_dataset(&a)?;
-    let mut interner = ds.interner.clone();
-    let text = std::fs::read_to_string(model_path)?;
-    let tree = serialize::from_json(
-        &Json::parse(&text).map_err(|e| anyhow!("{e}"))?,
-        &mut interner,
-    )?;
-    match ds.task() {
-        TaskKind::Classification => {
-            println!("accuracy = {:.4}", tree.accuracy(&ds));
-        }
-        TaskKind::Regression => {
-            let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
-            let (mae, rmse) = tree.regression_error(&ds, &rows);
-            println!("MAE = {mae:.4}, RMSE = {rmse:.4}");
-        }
+        .ok_or_else(|| UdtError::usage("--model is required"))?;
+    let mut ds = load_dataset(&a)?;
+    let mut saved = SavedModel::load(model_path)?;
+    // The CSV interned its strings and class labels independently of the
+    // model bundle; remap the model's categorical operands into the
+    // dataset's id space and the dataset's class ids into the model's.
+    let mut interner = std::mem::take(&mut ds.interner);
+    saved.align_to(&mut interner)?;
+    ds.interner = interner;
+    saved.align_labels(&mut ds);
+    println!(
+        "model: kind={} features={} nodes={}",
+        saved.model.kind(),
+        saved.model.n_features(),
+        saved.model.n_nodes()
+    );
+    match saved.model.evaluate(&ds)? {
+        Quality::Accuracy(acc) => println!("accuracy = {acc:.4}"),
+        Quality::Regression { mae, rmse } => println!("MAE = {mae:.4}, RMSE = {rmse:.4}"),
     }
     Ok(())
 }
@@ -290,6 +324,7 @@ fn cmd_rank_features(raw: &[String]) -> Result<()> {
     .opt("top", "print only the top K features", None)
     .opt("seed", "rng seed", Some("42"))
     .opt("config", "config file", None)
+    .opt_multi("set", "config override key=value")
     .positional("input.csv");
     let a = cmd.parse(raw)?;
     let cfg = base_config(&a)?;
@@ -320,7 +355,11 @@ fn cmd_bench_selection(raw: &[String]) -> Result<()> {
         .get("sizes")
         .unwrap()
         .split(',')
-        .map(|s| s.trim().parse().map_err(|_| anyhow!("bad size `{s}`")))
+        .map(|s| {
+            s.trim()
+                .parse()
+                .map_err(|_| UdtError::usage(format!("bad size `{s}`")))
+        })
         .collect::<Result<_>>()?;
     let runs = a.get_usize("runs", 3)?;
     let table = udt::bench_support::table5::run(&sizes, runs, a.get_u64("seed", 42)?);
@@ -334,8 +373,12 @@ fn cmd_bench_suite(raw: &[String]) -> Result<()> {
         .opt("scale", "row-count scale (1.0 = paper-sized)", Some("0.1"))
         .opt("threads", "worker threads", Some("0"))
         .opt("only", "comma-separated dataset names", None)
-        .opt("seed", "rng seed", Some("42"));
+        .opt("seed", "rng seed", Some("42"))
+        .opt("config", "config file", None)
+        .opt_multi("set", "config override key=value");
     let a = cmd.parse(raw)?;
+    let cfg = base_config(&a)?;
+    let grid = cfg.tune_grid()?;
     let scale = a.get_f64("scale", 0.1)?;
     let threads = a.get_usize("threads", 0)?;
     let seed = a.get_u64("seed", 42)?;
@@ -361,11 +404,8 @@ fn cmd_bench_suite(raw: &[String]) -> Result<()> {
     ]);
     for e in entries {
         let ds = generate_any(&e.spec.scaled(scale), seed);
-        let cfg = TrainConfig {
-            n_threads: threads,
-            ..Default::default()
-        };
-        let rep = run_pipeline(&ds, &cfg, seed)?;
+        let train_cfg = Udt::builder().threads(threads).build()?;
+        let (rep, _) = run_pipeline_model(&ds, &train_cfg, &grid, seed)?;
         let quality = match rep.quality {
             Quality::Accuracy(acc) => format!("acc={acc:.3}"),
             Quality::Regression { rmse, .. } => format!("rmse={rmse:.2}"),
@@ -389,31 +429,48 @@ fn cmd_bench_suite(raw: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(raw: &[String]) -> Result<()> {
-    let cmd = Command::new("serve", "TCP prediction server")
-        .opt("model", "tree JSON (from `train --out`)", None)
+    let cmd = Command::new("serve", "TCP prediction server (any model family)")
+        .opt("model", "model JSON (from `train --out` or `pipeline --out`)", None)
         .opt("dataset", "train on a registry dataset instead", None)
         .opt("scale", "row-count scale", Some("0.1"))
+        .opt("forest", "with --dataset: train a forest of N trees", None)
         .opt("seed", "rng seed", Some("42"))
         .opt("addr", "listen address", Some("127.0.0.1:7878"))
+        .opt("config", "config file", None)
+        .opt_multi("set", "config override key=value")
         .positional("input.csv (when training from CSV)");
     let a = cmd.parse(raw)?;
+    // Parse config + --set up front so malformed overrides error on the
+    // --model path too (they only affect training, but should never be
+    // silently ignored).
+    let cfg = base_config(&a)?;
 
-    let (tree, interner, class_names) = if let Some(model) = a.get("model") {
-        // Model-only serving needs an interner seeded by the model itself.
-        let mut interner = udt::data::interner::Interner::new();
-        let text = std::fs::read_to_string(model)?;
-        let tree = serialize::from_json(
-            &Json::parse(&text).map_err(|e| anyhow!("{e}"))?,
-            &mut interner,
-        )?;
-        (tree, interner, Vec::new())
+    let saved = if let Some(model) = a.get("model") {
+        SavedModel::load(model)?
     } else {
         let ds = load_dataset(&a)?;
-        let tree = Tree::fit(&ds, &TrainConfig::default())?;
-        (tree, ds.interner.clone(), ds.class_names.clone())
+        let tree_cfg = train_config(&a, &cfg)?;
+        let model = match a.get("forest") {
+            None => Model::SingleTree(Tree::fit(&ds, &tree_cfg)?),
+            Some(n) => {
+                let n: usize = n.parse().map_err(|_| {
+                    UdtError::usage(format!("--forest expects an integer, got `{n}`"))
+                })?;
+                let mut forest_cfg = cfg.forest_config(tree_cfg)?;
+                forest_cfg.n_trees = n;
+                Model::Forest(Forest::fit(&ds, &forest_cfg)?)
+            }
+        };
+        SavedModel::new(model, &ds)
     };
 
-    let server = Server::new(tree, interner, class_names);
+    println!(
+        "serving kind={} nodes={} features={}",
+        saved.model.kind(),
+        saved.model.n_nodes(),
+        saved.model.n_features()
+    );
+    let server = Server::new(saved);
     let addr = a.get_or("addr", "127.0.0.1:7878").to_string();
     println!("serving on {addr} (send \"shutdown\" to stop)");
     server.serve(&addr, |bound| println!("bound {bound}"))

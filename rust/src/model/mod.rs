@@ -1,0 +1,695 @@
+//! The unified model surface: one way to train, predict, evaluate and
+//! ship any UDT artifact.
+//!
+//! * [`Estimator`] — the `fit` / `predict_row` / `predict_batch` /
+//!   `evaluate` contract implemented by [`Tree`] and [`Forest`].
+//! * [`Udt::builder`] / [`Forest::builder`] — fluent, validating
+//!   configuration builders replacing hand-rolled config literals.
+//! * [`Model`] — a trained artifact of any family: a single tree, a
+//!   Training-Only-Once tuned tree (the full tree plus its effective
+//!   `(max_depth, min_split)`), or a bagged forest. The prediction server
+//!   and CLI dispatch through it, so every family is servable.
+//! * [`SavedModel`] — a [`Model`] bundled with its [`Schema`] and string
+//!   interner; versioned JSON serialization lives in [`serialize`].
+//!
+//! ```no_run
+//! use udt::data::synth::{generate_classification, SynthSpec};
+//! use udt::selection::heuristic::ClassCriterion;
+//! use udt::{Estimator, Udt};
+//!
+//! # fn main() -> udt::Result<()> {
+//! let ds = generate_classification(&SynthSpec::classification("demo", 1000, 8, 3), 42);
+//! let tree = Udt::builder()
+//!     .criterion(ClassCriterion::Gini)
+//!     .max_depth(8)
+//!     .threads(8)
+//!     .fit(&ds)?;
+//! let quality = tree.evaluate(&ds)?;
+//! println!("{:.3}", quality.headline());
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod schema;
+pub mod serialize;
+
+pub use schema::{FeatureKind, Schema};
+
+use crate::data::dataset::{Dataset, Labels, TaskKind};
+use crate::data::interner::Interner;
+use crate::data::value::Value;
+use crate::error::{Result, UdtError};
+use crate::selection::heuristic::ClassCriterion;
+use crate::selection::split::SplitOp;
+use crate::tree::forest::{Forest, ForestConfig};
+use crate::tree::{predict, require_task, Backend, NodeLabel, RegStrategy, TrainConfig, Tree};
+
+/// Model quality on a dataset: accuracy or (MAE, RMSE).
+#[derive(Debug, Clone, Copy)]
+pub enum Quality {
+    Accuracy(f64),
+    Regression { mae: f64, rmse: f64 },
+}
+
+impl Quality {
+    /// Scalar summary (accuracy, or RMSE for regression).
+    pub fn headline(&self) -> f64 {
+        match self {
+            Quality::Accuracy(a) => *a,
+            Quality::Regression { rmse, .. } => *rmse,
+        }
+    }
+}
+
+/// The single training/prediction contract every UDT model family
+/// implements. `fit` takes the family's config; everything downstream —
+/// row prediction, batch prediction, evaluation — is uniform.
+pub trait Estimator: Sized {
+    /// The family's training configuration ([`TrainConfig`],
+    /// [`ForestConfig`], ...).
+    type Config;
+
+    /// Train on a dataset.
+    fn fit(ds: &Dataset, config: &Self::Config) -> Result<Self>;
+
+    /// Task kind the model was trained for.
+    fn task(&self) -> TaskKind;
+
+    /// Number of feature columns the model expects.
+    fn n_features(&self) -> usize;
+
+    /// Predict one materialized row. Errors on arity mismatch.
+    fn predict_row(&self, row: &[Value]) -> Result<NodeLabel>;
+
+    /// Predict a batch of rows. Errors on any arity mismatch.
+    fn predict_batch(&self, rows: &[Vec<Value>]) -> Result<Vec<NodeLabel>> {
+        rows.iter().map(|r| self.predict_row(r)).collect()
+    }
+
+    /// Quality over a whole dataset (accuracy, or MAE/RMSE).
+    fn evaluate(&self, ds: &Dataset) -> Result<Quality>;
+}
+
+fn check_arity(expected: usize, got: usize) -> Result<()> {
+    if expected == got {
+        Ok(())
+    } else {
+        Err(UdtError::predict(format!(
+            "expected {expected} features, got {got}"
+        )))
+    }
+}
+
+/// `Quality` wrapper over the shared `crate::tree::mae_rmse` fold.
+fn regression_quality(pairs: impl Iterator<Item = (f64, f64)>) -> Quality {
+    let (mae, rmse) = crate::tree::mae_rmse(pairs);
+    Quality::Regression { mae, rmse }
+}
+
+/// Tree quality under prediction-time hyper-parameter caps (the
+/// Training-Only-Once serving path uses non-trivial caps).
+fn evaluate_tree(tree: &Tree, ds: &Dataset, max_depth: usize, min_split: usize) -> Result<Quality> {
+    check_arity(tree.n_features, ds.n_features())?;
+    require_task(tree.task, ds.task())?;
+    let n = ds.n_rows();
+    match ds.task() {
+        TaskKind::Classification => {
+            let correct = (0..n)
+                .filter(|&r| {
+                    predict::predict_ds(tree, ds, r, max_depth, min_split).as_class()
+                        == Some(ds.labels.class(r))
+                })
+                .count();
+            Ok(Quality::Accuracy(correct as f64 / n.max(1) as f64))
+        }
+        TaskKind::Regression => Ok(regression_quality((0..n).map(|r| {
+            (
+                predict::predict_ds(tree, ds, r, max_depth, min_split)
+                    .as_value()
+                    .unwrap_or(f64::NAN),
+                ds.labels.target(r),
+            )
+        }))),
+    }
+}
+
+impl Estimator for Tree {
+    type Config = TrainConfig;
+
+    fn fit(ds: &Dataset, config: &TrainConfig) -> Result<Tree> {
+        Tree::fit(ds, config)
+    }
+
+    fn task(&self) -> TaskKind {
+        self.task
+    }
+
+    fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    fn predict_row(&self, row: &[Value]) -> Result<NodeLabel> {
+        check_arity(self.n_features, row.len())?;
+        Ok(predict::predict_row(self, row, usize::MAX, 0))
+    }
+
+    fn evaluate(&self, ds: &Dataset) -> Result<Quality> {
+        evaluate_tree(self, ds, usize::MAX, 0)
+    }
+}
+
+impl Estimator for Forest {
+    type Config = ForestConfig;
+
+    fn fit(ds: &Dataset, config: &ForestConfig) -> Result<Forest> {
+        Forest::fit(ds, config)
+    }
+
+    fn task(&self) -> TaskKind {
+        self.task
+    }
+
+    fn n_features(&self) -> usize {
+        Forest::n_features(self)
+    }
+
+    fn predict_row(&self, row: &[Value]) -> Result<NodeLabel> {
+        check_arity(Forest::n_features(self), row.len())?;
+        Ok(self.predict_values(row))
+    }
+
+    fn evaluate(&self, ds: &Dataset) -> Result<Quality> {
+        check_arity(Forest::n_features(self), ds.n_features())?;
+        require_task(self.task, ds.task())?;
+        match ds.task() {
+            TaskKind::Classification => {
+                let all: Vec<u32> = (0..ds.n_rows() as u32).collect();
+                Ok(Quality::Accuracy(self.accuracy_rows(ds, &all)?))
+            }
+            TaskKind::Regression => Ok(regression_quality((0..ds.n_rows()).map(|r| {
+                (
+                    self.predict_ds(ds, r).as_value().unwrap_or(f64::NAN),
+                    ds.labels.target(r),
+                )
+            }))),
+        }
+    }
+}
+
+/// Entry point of the fluent single-tree API: `Udt::builder()`.
+pub struct Udt;
+
+impl Udt {
+    /// A validating builder over [`TrainConfig`].
+    pub fn builder() -> UdtBuilder {
+        UdtBuilder::new()
+    }
+}
+
+/// Fluent, validating builder for single-tree training.
+///
+/// Invalid settings surface as [`UdtError::InvalidConfig`] from
+/// [`build`](UdtBuilder::build) / [`fit`](UdtBuilder::fit) instead of
+/// panicking mid-training.
+#[derive(Debug, Clone, Default)]
+pub struct UdtBuilder {
+    cfg: TrainConfig,
+}
+
+impl UdtBuilder {
+    pub fn new() -> Self {
+        Self {
+            cfg: TrainConfig::default(),
+        }
+    }
+
+    /// Classification split criterion (ignored for regression).
+    pub fn criterion(mut self, c: ClassCriterion) -> Self {
+        self.cfg.criterion = c;
+        self
+    }
+
+    /// Maximum tree depth (root = 1). Must be ≥ 1.
+    pub fn max_depth(mut self, d: usize) -> Self {
+        self.cfg.max_depth = d;
+        self
+    }
+
+    /// Minimum node size eligible for splitting. Must be ≥ 2.
+    pub fn min_samples_split(mut self, m: usize) -> Self {
+        self.cfg.min_samples_split = m;
+        self
+    }
+
+    /// Minimum heuristic gain over the parent to accept a split.
+    pub fn min_gain(mut self, g: f64) -> Self {
+        self.cfg.min_gain = g;
+        self
+    }
+
+    /// Selection engine.
+    pub fn backend(mut self, b: Backend) -> Self {
+        self.cfg.backend = b;
+        self
+    }
+
+    /// Regression split strategy.
+    pub fn reg_strategy(mut self, s: RegStrategy) -> Self {
+        self.cfg.reg_strategy = s;
+        self
+    }
+
+    /// Worker threads (0 = all cores, 1 = sequential).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.cfg.n_threads = n;
+        self
+    }
+
+    /// Validate and return the underlying [`TrainConfig`].
+    pub fn build(self) -> Result<TrainConfig> {
+        if self.cfg.max_depth < 1 {
+            return Err(UdtError::invalid_config("max_depth must be >= 1"));
+        }
+        if self.cfg.min_samples_split < 2 {
+            return Err(UdtError::invalid_config(
+                "min_samples_split must be >= 2 (a 1-row node cannot split)",
+            ));
+        }
+        if !self.cfg.min_gain.is_finite() {
+            return Err(UdtError::invalid_config("min_gain must be finite"));
+        }
+        Ok(self.cfg)
+    }
+
+    /// Validate, then train a [`Tree`] on `ds`.
+    pub fn fit(self, ds: &Dataset) -> Result<Tree> {
+        let cfg = self.build()?;
+        Tree::fit(ds, &cfg)
+    }
+}
+
+impl Forest {
+    /// A validating builder over [`ForestConfig`].
+    pub fn builder() -> ForestBuilder {
+        ForestBuilder::new()
+    }
+}
+
+/// Fluent, validating builder for bagged-forest training.
+#[derive(Debug, Clone, Default)]
+pub struct ForestBuilder {
+    cfg: ForestConfig,
+}
+
+impl ForestBuilder {
+    pub fn new() -> Self {
+        Self {
+            cfg: ForestConfig::default(),
+        }
+    }
+
+    /// Ensemble size. Must be ≥ 1.
+    pub fn n_trees(mut self, n: usize) -> Self {
+        self.cfg.n_trees = n;
+        self
+    }
+
+    /// Fraction of features each tree sees, in (0, 1].
+    pub fn feature_frac(mut self, f: f64) -> Self {
+        self.cfg.feature_frac = f;
+        self
+    }
+
+    /// Subsample fraction per tree (without replacement), in (0, 1].
+    pub fn sample_frac(mut self, f: f64) -> Self {
+        self.cfg.sample_frac = f;
+        self
+    }
+
+    /// Bagging seed.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.cfg.seed = s;
+        self
+    }
+
+    /// Per-tree training configuration (from [`Udt::builder`]).
+    pub fn tree(mut self, cfg: TrainConfig) -> Self {
+        self.cfg.tree = cfg;
+        self
+    }
+
+    /// Validate and return the underlying [`ForestConfig`].
+    pub fn build(self) -> Result<ForestConfig> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
+    }
+
+    /// Validate, then train a [`Forest`] on `ds`.
+    pub fn fit(self, ds: &Dataset) -> Result<Forest> {
+        let cfg = self.build()?;
+        Forest::fit(ds, &cfg)
+    }
+}
+
+/// A trained artifact of any family, serving-ready.
+#[derive(Debug, Clone)]
+pub enum Model {
+    /// A plain decision tree.
+    SingleTree(Tree),
+    /// A full tree plus the Training-Only-Once effective hyper-parameters;
+    /// predictions stop at `max_depth` / nodes smaller than `min_split`
+    /// exactly as the tuner evaluated them (paper Algorithm 7).
+    TunedTree {
+        tree: Tree,
+        max_depth: usize,
+        min_split: usize,
+    },
+    /// A bagged ensemble.
+    Forest(Forest),
+}
+
+impl Model {
+    /// Stable serialization tag of the family.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Model::SingleTree(_) => "single_tree",
+            Model::TunedTree { .. } => "tuned_tree",
+            Model::Forest(_) => "forest",
+        }
+    }
+
+    pub fn task(&self) -> TaskKind {
+        match self {
+            Model::SingleTree(t) => t.task,
+            Model::TunedTree { tree, .. } => tree.task,
+            Model::Forest(f) => f.task,
+        }
+    }
+
+    pub fn n_features(&self) -> usize {
+        match self {
+            Model::SingleTree(t) => t.n_features,
+            Model::TunedTree { tree, .. } => tree.n_features,
+            Model::Forest(f) => f.n_features(),
+        }
+    }
+
+    /// Total node count (across all member trees for a forest).
+    pub fn n_nodes(&self) -> usize {
+        match self {
+            Model::SingleTree(t) => t.n_nodes(),
+            Model::TunedTree { tree, .. } => tree.n_nodes(),
+            Model::Forest(f) => f.n_nodes(),
+        }
+    }
+
+    /// Predict one materialized row. Errors on arity mismatch.
+    pub fn predict_row(&self, row: &[Value]) -> Result<NodeLabel> {
+        check_arity(self.n_features(), row.len())?;
+        Ok(match self {
+            Model::SingleTree(t) => predict::predict_row(t, row, usize::MAX, 0),
+            Model::TunedTree {
+                tree,
+                max_depth,
+                min_split,
+            } => predict::predict_row(tree, row, *max_depth, *min_split),
+            Model::Forest(f) => f.predict_values(row),
+        })
+    }
+
+    /// Predict a batch. The family dispatch happens once per batch, not
+    /// once per row — the serving hot path.
+    pub fn predict_batch(&self, rows: &[Vec<Value>]) -> Result<Vec<NodeLabel>> {
+        let n_features = self.n_features();
+        for row in rows {
+            check_arity(n_features, row.len())?;
+        }
+        Ok(match self {
+            Model::SingleTree(t) => rows
+                .iter()
+                .map(|r| predict::predict_row(t, r, usize::MAX, 0))
+                .collect(),
+            Model::TunedTree {
+                tree,
+                max_depth,
+                min_split,
+            } => rows
+                .iter()
+                .map(|r| predict::predict_row(tree, r, *max_depth, *min_split))
+                .collect(),
+            Model::Forest(f) => rows.iter().map(|r| f.predict_values(r)).collect(),
+        })
+    }
+
+    /// Quality over a dataset, honoring tuned caps.
+    pub fn evaluate(&self, ds: &Dataset) -> Result<Quality> {
+        match self {
+            Model::SingleTree(t) => evaluate_tree(t, ds, usize::MAX, 0),
+            Model::TunedTree {
+                tree,
+                max_depth,
+                min_split,
+            } => evaluate_tree(tree, ds, *max_depth, *min_split),
+            Model::Forest(f) => f.evaluate(ds),
+        }
+    }
+
+    fn trees_mut(&mut self) -> Vec<&mut Tree> {
+        match self {
+            Model::SingleTree(t) => vec![t],
+            Model::TunedTree { tree, .. } => vec![tree],
+            Model::Forest(f) => f.trees.iter_mut().collect(),
+        }
+    }
+
+    /// Remap categorical split operands from `from`'s id space into `to`'s
+    /// (interning unseen names). Lets a loaded model predict over a
+    /// dataset that interned its strings independently.
+    pub fn reintern(&mut self, from: &Interner, to: &mut Interner) -> Result<()> {
+        for tree in self.trees_mut() {
+            for node in &mut tree.nodes {
+                if let Some(split) = &mut node.split {
+                    if let SplitOp::Eq(id) = split.op {
+                        let name = from.names().get(id.0 as usize).ok_or_else(|| {
+                            UdtError::model(format!("categorical operand {} out of range", id.0))
+                        })?;
+                        split.op = SplitOp::Eq(to.intern(name));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A [`Model`] with everything serving needs: the [`Schema`] and the
+/// categorical string interner it was trained with.
+#[derive(Debug, Clone)]
+pub struct SavedModel {
+    pub model: Model,
+    pub schema: Schema,
+    pub interner: Interner,
+}
+
+impl SavedModel {
+    /// Bundle a model with the schema/interner of its training dataset.
+    pub fn new(model: Model, ds: &Dataset) -> SavedModel {
+        SavedModel {
+            model,
+            schema: Schema::of(ds),
+            interner: ds.interner.clone(),
+        }
+    }
+
+    /// Remap the model's categorical operands into `target`'s id space
+    /// (e.g. the interner of a freshly-loaded evaluation CSV).
+    pub fn align_to(&mut self, target: &mut Interner) -> Result<()> {
+        let from = std::mem::take(&mut self.interner);
+        self.model.reintern(&from, target)?;
+        self.interner = target.clone();
+        Ok(())
+    }
+
+    /// Remap `ds`'s class-label ids into the model's class-id space using
+    /// the bundled class names. A CSV assigns ids by first appearance, so
+    /// an evaluation file listing classes in a different order would
+    /// otherwise score a correct model as wrong. No-op for regression
+    /// models or when either side carries no class names; classes the
+    /// model never saw get fresh ids past its range (they can never match
+    /// a prediction, which is the correct "always wrong" semantics).
+    pub fn align_labels(&self, ds: &mut Dataset) {
+        if self.model.task() != TaskKind::Classification
+            || self.schema.class_names.is_empty()
+            || ds.class_names.is_empty()
+        {
+            return;
+        }
+        let mut names = self.schema.class_names.clone();
+        let map: Vec<u16> = ds
+            .class_names
+            .iter()
+            .map(|n| match names.iter().position(|m| m == n) {
+                Some(i) => i as u16,
+                None => {
+                    names.push(n.clone());
+                    (names.len() - 1) as u16
+                }
+            })
+            .collect();
+        if let Labels::Class { ids, n_classes } = &mut ds.labels {
+            for id in ids.iter_mut() {
+                *id = map.get(*id as usize).copied().unwrap_or(*id);
+            }
+            *n_classes = names.len();
+        }
+        ds.class_names = names;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_any, generate_classification, SynthSpec};
+
+    fn small_ds() -> Dataset {
+        let mut spec = SynthSpec::classification("m", 600, 5, 3);
+        spec.cat_frac = 0.3;
+        generate_classification(&spec, 91)
+    }
+
+    #[test]
+    fn builder_produces_working_tree() {
+        let ds = small_ds();
+        let tree = Udt::builder()
+            .criterion(ClassCriterion::Gini)
+            .max_depth(8)
+            .threads(1)
+            .fit(&ds)
+            .unwrap();
+        assert!(tree.depth <= 8);
+        match tree.evaluate(&ds).unwrap() {
+            Quality::Accuracy(a) => assert!(a > 0.5, "acc {a}"),
+            _ => panic!("expected accuracy"),
+        }
+    }
+
+    #[test]
+    fn builder_rejects_bad_configs() {
+        assert!(matches!(
+            Udt::builder().max_depth(0).build(),
+            Err(UdtError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            Udt::builder().min_samples_split(1).build(),
+            Err(UdtError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            Udt::builder().min_gain(f64::NAN).build(),
+            Err(UdtError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            Forest::builder().n_trees(0).build(),
+            Err(UdtError::InvalidConfig(_))
+        ));
+    }
+
+    #[test]
+    fn model_families_predict_consistently() {
+        let ds = small_ds();
+        let tree = Udt::builder().fit(&ds).unwrap();
+        let forest = Forest::builder().n_trees(3).fit(&ds).unwrap();
+        let models = [
+            Model::SingleTree(tree.clone()),
+            Model::TunedTree {
+                tree,
+                max_depth: 4,
+                min_split: 10,
+            },
+            Model::Forest(forest),
+        ];
+        let rows: Vec<Vec<Value>> = (0..20).map(|r| ds.row(r)).collect();
+        for m in &models {
+            let batch = m.predict_batch(&rows).unwrap();
+            assert_eq!(batch.len(), rows.len());
+            for (row, label) in rows.iter().zip(&batch) {
+                assert_eq!(m.predict_row(row).unwrap(), *label, "{}", m.kind());
+            }
+        }
+    }
+
+    #[test]
+    fn tuned_tree_honors_caps() {
+        let ds = small_ds();
+        let tree = Udt::builder().fit(&ds).unwrap();
+        let capped = Model::TunedTree {
+            tree: tree.clone(),
+            max_depth: 1,
+            min_split: 0,
+        };
+        let root_label = tree.nodes[0].label;
+        for r in (0..ds.n_rows()).step_by(41) {
+            assert_eq!(capped.predict_row(&ds.row(r)).unwrap(), root_label);
+        }
+    }
+
+    #[test]
+    fn arity_mismatch_is_a_typed_error() {
+        let ds = small_ds();
+        let tree = Udt::builder().fit(&ds).unwrap();
+        let model = Model::SingleTree(tree);
+        assert!(matches!(
+            model.predict_row(&[Value::Num(1.0)]),
+            Err(UdtError::Predict(_))
+        ));
+        assert!(matches!(
+            model.predict_batch(&[vec![Value::Num(1.0)]]),
+            Err(UdtError::Predict(_))
+        ));
+    }
+
+    #[test]
+    fn align_labels_remaps_permuted_class_ids() {
+        use crate::data::column::Column;
+        // f0 in 0..10; label = f0 >= 5.
+        let mk = |names: [&str; 2], flip: bool| {
+            let vals: Vec<Value> = (0..10).map(|i| Value::Num(i as f64)).collect();
+            let ids: Vec<u16> = (0..10).map(|i| ((i >= 5) ^ flip) as u16).collect();
+            let mut ds = Dataset::new(
+                "al",
+                vec![Column::new("f0", vals)],
+                Labels::Class { ids, n_classes: 2 },
+                Interner::new(),
+            )
+            .unwrap();
+            ds.class_names = names.iter().map(|s| s.to_string()).collect();
+            ds
+        };
+        // Trained where "neg"=0, "pos"=1.
+        let train_ds = mk(["neg", "pos"], false);
+        let tree = Udt::builder().fit(&train_ds).unwrap();
+        let saved = SavedModel::new(Model::SingleTree(tree), &train_ds);
+        // Same data, but the eval file listed "pos" first → ids flipped.
+        let mut eval_ds = mk(["pos", "neg"], true);
+        // Without alignment every comparison is inverted.
+        match saved.model.evaluate(&eval_ds).unwrap() {
+            Quality::Accuracy(a) => assert!(a < 0.5, "pre-align acc {a}"),
+            _ => panic!("expected accuracy"),
+        }
+        saved.align_labels(&mut eval_ds);
+        match saved.model.evaluate(&eval_ds).unwrap() {
+            Quality::Accuracy(a) => assert_eq!(a, 1.0, "post-align acc {a}"),
+            _ => panic!("expected accuracy"),
+        }
+    }
+
+    #[test]
+    fn evaluate_task_mismatch_is_typed() {
+        let class_ds = small_ds();
+        let reg_ds = generate_any(&SynthSpec::regression("r", 300, 5), 3);
+        let tree = Udt::builder().fit(&class_ds).unwrap();
+        assert!(matches!(
+            tree.evaluate(&reg_ds),
+            Err(UdtError::TaskMismatch { .. })
+        ));
+    }
+}

@@ -1,0 +1,194 @@
+//! Model schema: the dataset-shape metadata bundled with every serialized
+//! model so serving never needs the training data — feature names and
+//! kinds, plus human-readable class names.
+
+use crate::data::dataset::Dataset;
+use crate::error::{Result, UdtError};
+use crate::util::json::Json;
+
+/// What a feature column held at training time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeatureKind {
+    /// Only numeric cells (plus missing).
+    Numeric,
+    /// Only categorical cells (plus missing).
+    Categorical,
+    /// Hybrid: numeric and categorical cells in the same column.
+    Mixed,
+    /// Unknown composition (legacy models without a schema).
+    Unknown,
+}
+
+impl FeatureKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FeatureKind::Numeric => "numeric",
+            FeatureKind::Categorical => "categorical",
+            FeatureKind::Mixed => "mixed",
+            FeatureKind::Unknown => "unknown",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FeatureKind> {
+        match s {
+            "numeric" => Some(FeatureKind::Numeric),
+            "categorical" => Some(FeatureKind::Categorical),
+            "mixed" => Some(FeatureKind::Mixed),
+            "unknown" => Some(FeatureKind::Unknown),
+            _ => None,
+        }
+    }
+}
+
+/// The dataset shape a model was trained against.
+#[derive(Debug, Clone)]
+pub struct Schema {
+    /// One name per feature column, in model feature order.
+    pub feature_names: Vec<String>,
+    /// One kind per feature column, parallel to `feature_names`.
+    pub feature_kinds: Vec<FeatureKind>,
+    /// Human-readable class names (classification; may be empty when the
+    /// training labels were already numeric).
+    pub class_names: Vec<String>,
+}
+
+impl Schema {
+    /// Derive the schema of a dataset.
+    pub fn of(ds: &Dataset) -> Schema {
+        let feature_names = ds.columns.iter().map(|c| c.name.clone()).collect();
+        let feature_kinds = ds
+            .columns
+            .iter()
+            .map(|c| {
+                let s = c.stats();
+                match (s.n_num > 0, s.n_cat > 0) {
+                    (true, true) => FeatureKind::Mixed,
+                    (true, false) => FeatureKind::Numeric,
+                    (false, true) => FeatureKind::Categorical,
+                    (false, false) => FeatureKind::Unknown,
+                }
+            })
+            .collect();
+        Schema {
+            feature_names,
+            feature_kinds,
+            class_names: ds.class_names.clone(),
+        }
+    }
+
+    /// Placeholder schema for legacy model documents (`f0`, `f1`, ...).
+    pub fn unnamed(n_features: usize) -> Schema {
+        Schema {
+            feature_names: (0..n_features).map(|i| format!("f{i}")).collect(),
+            feature_kinds: vec![FeatureKind::Unknown; n_features],
+            class_names: Vec::new(),
+        }
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.feature_names.len()
+    }
+
+    /// Human-readable name of a class id, when known.
+    pub fn class_name(&self, class: u16) -> Option<&str> {
+        self.class_names.get(class as usize).map(|s| s.as_str())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let features: Vec<Json> = self
+            .feature_names
+            .iter()
+            .zip(&self.feature_kinds)
+            .map(|(name, kind)| {
+                Json::obj(vec![
+                    ("name", Json::Str(name.clone())),
+                    ("kind", Json::Str(kind.name().to_string())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("features", Json::Arr(features)),
+            (
+                "classes",
+                Json::Arr(
+                    self.class_names
+                        .iter()
+                        .map(|c| Json::Str(c.clone()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(json: &Json) -> Result<Schema> {
+        let features = json
+            .get("features")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| UdtError::model("schema: missing `features`"))?;
+        let mut feature_names = Vec::with_capacity(features.len());
+        let mut feature_kinds = Vec::with_capacity(features.len());
+        for (i, f) in features.iter().enumerate() {
+            let name = f
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| UdtError::model(format!("schema: feature {i} missing `name`")))?;
+            let kind = f
+                .get("kind")
+                .and_then(Json::as_str)
+                .and_then(FeatureKind::parse)
+                .ok_or_else(|| UdtError::model(format!("schema: feature {i} bad `kind`")))?;
+            feature_names.push(name.to_string());
+            feature_kinds.push(kind);
+        }
+        let classes = json
+            .get("classes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| UdtError::model("schema: missing `classes`"))?;
+        let class_names = classes
+            .iter()
+            .map(|c| {
+                c.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| UdtError::model("schema: class names must be strings"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Schema {
+            feature_names,
+            feature_kinds,
+            class_names,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_classification, SynthSpec};
+
+    #[test]
+    fn schema_round_trips_through_json() {
+        let mut spec = SynthSpec::classification("s", 200, 6, 3);
+        spec.cat_frac = 0.3;
+        let ds = generate_classification(&spec, 7);
+        let schema = Schema::of(&ds);
+        assert_eq!(schema.n_features(), 6);
+        let back = Schema::from_json(&schema.to_json()).unwrap();
+        assert_eq!(back.feature_names, schema.feature_names);
+        assert_eq!(back.feature_kinds, schema.feature_kinds);
+        assert_eq!(back.class_names, schema.class_names);
+    }
+
+    #[test]
+    fn rejects_malformed_schema() {
+        assert!(Schema::from_json(&Json::parse("{}").unwrap()).is_err());
+        let bad = r#"{"features":[{"name":"a","kind":"nope"}],"classes":[]}"#;
+        assert!(Schema::from_json(&Json::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn unnamed_generates_placeholders() {
+        let s = Schema::unnamed(3);
+        assert_eq!(s.feature_names, vec!["f0", "f1", "f2"]);
+        assert_eq!(s.feature_kinds, vec![FeatureKind::Unknown; 3]);
+    }
+}

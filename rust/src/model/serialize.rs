@@ -1,0 +1,398 @@
+//! Versioned JSON serialization of [`SavedModel`]: one self-contained
+//! document bundling the model family, every tree, the [`Schema`] and the
+//! categorical string interner — so `udt serve`/`udt predict` round-trip
+//! *any* model without the training data.
+//!
+//! Document shape (version 1):
+//!
+//! ```text
+//! {
+//!   "format": "udt-model", "version": 1, "kind": "tuned_tree",
+//!   "schema":   {"features": [{"name": ..., "kind": ...}], "classes": [...]},
+//!   "interner": ["str0", "str1", ...],          // id i == names[i]
+//!   "tree":     {...},                          // single_tree / tuned_tree
+//!   "tuned":    {"max_depth": 7, "min_split": 40},  // tuned_tree only
+//!   "trees":    [{...}, ...], "n_classes": 3    // forest only
+//! }
+//! ```
+//!
+//! Legacy bare-tree documents (the pre-model `train --out` output: a JSON
+//! object with a top-level `"nodes"` array and no `"format"` key) still
+//! load, as a [`Model::SingleTree`] with a placeholder schema.
+
+use super::{Model, SavedModel, Schema};
+use crate::data::dataset::TaskKind;
+use crate::data::interner::Interner;
+use crate::error::{Result, UdtError};
+use crate::tree::forest::Forest;
+use crate::tree::serialize as tree_serialize;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Format tag of model documents.
+pub const FORMAT: &str = "udt-model";
+/// Current document version.
+pub const VERSION: usize = 1;
+
+impl SavedModel {
+    /// Serialize to a versioned JSON document.
+    pub fn to_json(&self) -> Json {
+        let interner_names: Vec<Json> = self
+            .interner
+            .names()
+            .iter()
+            .map(|s| Json::Str(s.clone()))
+            .collect();
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("format", Json::Str(FORMAT.to_string())),
+            ("version", Json::Num(VERSION as f64)),
+            ("kind", Json::Str(self.model.kind().to_string())),
+            ("schema", self.schema.to_json()),
+            ("interner", Json::Arr(interner_names)),
+        ];
+        match &self.model {
+            Model::SingleTree(tree) => {
+                fields.push(("tree", tree_serialize::to_json(tree, &self.interner)));
+            }
+            Model::TunedTree {
+                tree,
+                max_depth,
+                min_split,
+            } => {
+                fields.push(("tree", tree_serialize::to_json(tree, &self.interner)));
+                fields.push((
+                    "tuned",
+                    Json::obj(vec![
+                        ("max_depth", Json::Num(*max_depth as f64)),
+                        ("min_split", Json::Num(*min_split as f64)),
+                    ]),
+                ));
+            }
+            Model::Forest(forest) => {
+                let trees: Vec<Json> = forest
+                    .trees
+                    .iter()
+                    .map(|t| tree_serialize::to_json(t, &self.interner))
+                    .collect();
+                fields.push(("trees", Json::Arr(trees)));
+                fields.push(("n_classes", Json::Num(forest.n_classes as f64)));
+            }
+        }
+        Json::obj(fields)
+    }
+
+    /// Parse a model document (current format or a legacy bare tree).
+    pub fn from_json(json: &Json) -> Result<SavedModel> {
+        match json.get("format").and_then(Json::as_str) {
+            Some(FORMAT) => {}
+            Some(other) => {
+                return Err(UdtError::model(format!("unknown model format `{other}`")));
+            }
+            None => return load_legacy_tree(json),
+        }
+        let version = json
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| UdtError::model("missing `version`"))?;
+        if version != VERSION {
+            return Err(UdtError::model(format!(
+                "unsupported model version {version} (this build reads version {VERSION})"
+            )));
+        }
+        let schema = Schema::from_json(
+            json.get("schema")
+                .ok_or_else(|| UdtError::model("missing `schema`"))?,
+        )?;
+        let mut interner = Interner::new();
+        for (i, name) in json
+            .get("interner")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| UdtError::model("missing `interner`"))?
+            .iter()
+            .enumerate()
+        {
+            let s = name
+                .as_str()
+                .ok_or_else(|| UdtError::model(format!("interner entry {i} must be a string")))?;
+            interner.intern(s);
+        }
+
+        let kind = json
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| UdtError::model("missing `kind`"))?;
+        let model = match kind {
+            "single_tree" => Model::SingleTree(require_tree(json, &mut interner)?),
+            "tuned_tree" => {
+                let tree = require_tree(json, &mut interner)?;
+                let tuned = json
+                    .get("tuned")
+                    .ok_or_else(|| UdtError::model("tuned_tree: missing `tuned`"))?;
+                let max_depth = tuned
+                    .get("max_depth")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| UdtError::model("tuned_tree: missing `tuned.max_depth`"))?;
+                let min_split = tuned
+                    .get("min_split")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| UdtError::model("tuned_tree: missing `tuned.min_split`"))?;
+                if max_depth < 1 {
+                    return Err(UdtError::model("tuned_tree: max_depth must be >= 1"));
+                }
+                Model::TunedTree {
+                    tree,
+                    max_depth,
+                    min_split,
+                }
+            }
+            "forest" => {
+                let tree_docs = json
+                    .get("trees")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| UdtError::model("forest: missing `trees`"))?;
+                if tree_docs.is_empty() {
+                    return Err(UdtError::model("forest: must contain at least one tree"));
+                }
+                let n_classes = json
+                    .get("n_classes")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| UdtError::model("forest: missing `n_classes`"))?;
+                let mut trees = Vec::with_capacity(tree_docs.len());
+                for (i, doc) in tree_docs.iter().enumerate() {
+                    let tree = tree_serialize::from_json(doc, &mut interner)
+                        .map_err(|e| UdtError::model(format!("forest tree {i}: {e}")))?;
+                    trees.push(tree);
+                }
+                let task = trees[0].task;
+                let n_features = trees[0].n_features;
+                if trees
+                    .iter()
+                    .any(|t| t.task != task || t.n_features != n_features)
+                {
+                    return Err(UdtError::model(
+                        "forest: member trees disagree on task or feature count",
+                    ));
+                }
+                if task == TaskKind::Classification {
+                    // Out-of-range node labels would silently lose their
+                    // votes in the ensemble aggregation.
+                    let max_class = trees
+                        .iter()
+                        .flat_map(|t| t.nodes.iter())
+                        .filter_map(|n| n.label.as_class())
+                        .max()
+                        .unwrap_or(0);
+                    if max_class as usize >= n_classes {
+                        return Err(UdtError::model(format!(
+                            "forest: node label class {max_class} out of range \
+                             (n_classes {n_classes})"
+                        )));
+                    }
+                }
+                Model::Forest(Forest {
+                    trees,
+                    task,
+                    n_classes,
+                })
+            }
+            other => return Err(UdtError::model(format!("unknown model kind `{other}`"))),
+        };
+
+        if schema.n_features() != model.n_features() {
+            return Err(UdtError::model(format!(
+                "schema lists {} features but the model expects {}",
+                schema.n_features(),
+                model.n_features()
+            )));
+        }
+        if model.task() == TaskKind::Regression && !schema.class_names.is_empty() {
+            return Err(UdtError::model(
+                "regression model cannot carry class names",
+            ));
+        }
+
+        Ok(SavedModel {
+            model,
+            schema,
+            interner,
+        })
+    }
+
+    /// Write the pretty-printed document to `path`.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_json().to_pretty())?;
+        Ok(())
+    }
+
+    /// Load a model document from `path`.
+    pub fn load(path: impl AsRef<Path>) -> Result<SavedModel> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| UdtError::model(format!("reading {}: {e}", path.display())))?;
+        let json =
+            Json::parse(&text).map_err(|e| UdtError::model(format!("{}: {e}", path.display())))?;
+        Self::from_json(&json)
+    }
+}
+
+fn require_tree(json: &Json, interner: &mut Interner) -> Result<crate::tree::Tree> {
+    let doc = json
+        .get("tree")
+        .ok_or_else(|| UdtError::model("missing `tree`"))?;
+    tree_serialize::from_json(doc, interner)
+}
+
+fn load_legacy_tree(json: &Json) -> Result<SavedModel> {
+    if json.get("nodes").is_none() {
+        return Err(UdtError::model(
+            "not a udt model document (no `format` tag and no `nodes` array)",
+        ));
+    }
+    let mut interner = Interner::new();
+    let tree = tree_serialize::from_json(json, &mut interner)?;
+    let schema = Schema::unnamed(tree.n_features);
+    Ok(SavedModel {
+        model: Model::SingleTree(tree),
+        schema,
+        interner,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_any, generate_classification, SynthSpec};
+    use crate::model::Udt;
+    use crate::tree::forest::ForestConfig;
+    use crate::tree::TrainConfig;
+    use crate::tree::Tree;
+
+    fn cat_ds() -> crate::data::dataset::Dataset {
+        let mut spec = SynthSpec::classification("ser", 500, 5, 3);
+        spec.cat_frac = 0.4;
+        generate_classification(&spec, 101)
+    }
+
+    fn round_trip(saved: &SavedModel) -> SavedModel {
+        let text = saved.to_json().to_pretty();
+        SavedModel::from_json(&Json::parse(&text).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn single_tree_round_trip_preserves_predictions_and_schema() {
+        let ds = cat_ds();
+        let tree = Udt::builder().fit(&ds).unwrap();
+        let saved = SavedModel::new(Model::SingleTree(tree), &ds);
+        let back = round_trip(&saved);
+        assert_eq!(back.model.kind(), "single_tree");
+        assert_eq!(back.schema.feature_names, saved.schema.feature_names);
+        assert_eq!(back.interner.len(), saved.interner.len());
+        for r in (0..ds.n_rows()).step_by(17) {
+            let row = ds.row(r);
+            assert_eq!(
+                back.model.predict_row(&row).unwrap(),
+                saved.model.predict_row(&row).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn tuned_tree_round_trip_keeps_caps() {
+        let ds = cat_ds();
+        let tree = Udt::builder().fit(&ds).unwrap();
+        let saved = SavedModel::new(
+            Model::TunedTree {
+                tree,
+                max_depth: 3,
+                min_split: 25,
+            },
+            &ds,
+        );
+        let back = round_trip(&saved);
+        match &back.model {
+            Model::TunedTree {
+                max_depth,
+                min_split,
+                ..
+            } => {
+                assert_eq!(*max_depth, 3);
+                assert_eq!(*min_split, 25);
+            }
+            other => panic!("expected tuned tree, got {}", other.kind()),
+        }
+        for r in (0..ds.n_rows()).step_by(13) {
+            let row = ds.row(r);
+            assert_eq!(
+                back.model.predict_row(&row).unwrap(),
+                saved.model.predict_row(&row).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn forest_round_trip_preserves_votes() {
+        let ds = cat_ds();
+        let forest = Forest::fit(
+            &ds,
+            &ForestConfig {
+                n_trees: 4,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let saved = SavedModel::new(Model::Forest(forest), &ds);
+        let back = round_trip(&saved);
+        assert_eq!(back.model.kind(), "forest");
+        for r in (0..ds.n_rows()).step_by(19) {
+            let row = ds.row(r);
+            assert_eq!(
+                back.model.predict_row(&row).unwrap(),
+                saved.model.predict_row(&row).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn regression_model_round_trips() {
+        let ds = generate_any(&SynthSpec::regression("serreg", 300, 4), 7);
+        let tree = Udt::builder().fit(&ds).unwrap();
+        let saved = SavedModel::new(Model::SingleTree(tree), &ds);
+        let back = round_trip(&saved);
+        let row = ds.row(5);
+        assert_eq!(
+            back.model.predict_row(&row).unwrap(),
+            saved.model.predict_row(&row).unwrap()
+        );
+    }
+
+    #[test]
+    fn legacy_bare_tree_documents_still_load() {
+        let ds = cat_ds();
+        let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
+        let legacy = tree_serialize::to_json(&tree, &ds.interner).to_pretty();
+        let saved = SavedModel::from_json(&Json::parse(&legacy).unwrap()).unwrap();
+        assert_eq!(saved.model.kind(), "single_tree");
+        assert_eq!(saved.schema.n_features(), ds.n_features());
+    }
+
+    #[test]
+    fn malformed_documents_are_typed_model_errors() {
+        for doc in [
+            "{}",
+            r#"{"format":"udt-model"}"#,
+            r#"{"format":"udt-model","version":99,"kind":"single_tree"}"#,
+            r#"{"format":"not-a-model","version":1}"#,
+            r#"{"format":"udt-model","version":1,"kind":"alien",
+                "schema":{"features":[],"classes":[]},"interner":[]}"#,
+            r#"{"format":"udt-model","version":1,"kind":"forest",
+                "schema":{"features":[],"classes":[]},"interner":[],
+                "trees":[],"n_classes":2}"#,
+        ] {
+            let parsed = Json::parse(doc).unwrap();
+            assert!(
+                matches!(SavedModel::from_json(&parsed), Err(UdtError::Model(_))),
+                "{doc}"
+            );
+        }
+    }
+}

@@ -8,7 +8,7 @@
 //! xla_extension 0.5.1 rejects — see /opt/xla-example/README.md.
 
 use super::manifest::{ArtifactSpec, Manifest};
-use anyhow::{anyhow, Context, Result};
+use crate::error::{Result, UdtError};
 use std::collections::HashMap;
 use std::path::Path;
 
@@ -24,17 +24,17 @@ impl LoadedArtifact {
         let result = self
             .exe
             .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("execute {}: {e:?}", self.spec.name))?;
+            .map_err(|e| UdtError::runtime(format!("execute {}: {e:?}", self.spec.name)))?;
         let literal = result
             .first()
             .and_then(|d| d.first())
-            .ok_or_else(|| anyhow!("execute {}: empty result", self.spec.name))?
+            .ok_or_else(|| UdtError::runtime(format!("execute {}: empty result", self.spec.name)))?
             .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal {}: {e:?}", self.spec.name))?;
+            .map_err(|e| UdtError::runtime(format!("to_literal {}: {e:?}", self.spec.name)))?;
         // aot.py lowers with return_tuple=True: the single output is a tuple.
         literal
             .to_tuple()
-            .map_err(|e| anyhow!("untuple {}: {e:?}", self.spec.name))
+            .map_err(|e| UdtError::runtime(format!("untuple {}: {e:?}", self.spec.name)))
     }
 }
 
@@ -49,19 +49,24 @@ impl Engine {
     /// Load and compile every artifact under `dir`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
         let manifest = Manifest::load(&dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| UdtError::runtime(format!("pjrt cpu client: {e:?}")))?;
         let platform = client
             .platform_name();
         let mut artifacts = HashMap::new();
         for spec in &manifest.artifacts {
             let path = manifest.hlo_path(spec);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))
-                .with_context(|| format!("artifact `{}`", spec.name))?;
+            let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
+                UdtError::runtime(format!(
+                    "artifact `{}`: parse {}: {e:?}",
+                    spec.name,
+                    path.display()
+                ))
+            })?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = client
                 .compile(&comp)
-                .map_err(|e| anyhow!("compile `{}`: {e:?}", spec.name))?;
+                .map_err(|e| UdtError::runtime(format!("compile `{}`: {e:?}", spec.name)))?;
             artifacts.insert(
                 spec.name.clone(),
                 LoadedArtifact {
@@ -100,7 +105,7 @@ impl Engine {
     pub fn get(&self, name: &str) -> Result<&LoadedArtifact> {
         self.artifacts
             .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))
+            .ok_or_else(|| UdtError::runtime(format!("unknown artifact `{name}`")))
     }
 
     pub fn names(&self) -> Vec<&str> {
@@ -114,7 +119,9 @@ impl Engine {
         let spec = self
             .manifest
             .variant_for(n, n_classes)
-            .ok_or_else(|| anyhow!("no artifact variant fits m={n}, c={n_classes}"))?;
+            .ok_or_else(|| {
+                UdtError::runtime(format!("no artifact variant fits m={n}, c={n_classes}"))
+            })?;
         self.get(&spec.name)
     }
 }

@@ -2,8 +2,8 @@
 //! `artifacts/manifest.json` describing every lowered HLO module and its
 //! static shapes; the Rust engine loads executables from it.
 
+use crate::error::{Result, UdtError};
 use crate::util::json::Json;
-use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// One AOT-compiled artifact (a `jax.jit`-lowered module in HLO text).
@@ -34,28 +34,28 @@ impl Manifest {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {}", path.display()))?;
+            .map_err(|e| UdtError::runtime(format!("reading {}: {e}", path.display())))?;
         Self::parse(&text, dir)
     }
 
     /// Parse manifest JSON with the given base directory.
     pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
-        let json = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let json = Json::parse(text).map_err(|e| UdtError::runtime(format!("manifest: {e}")))?;
         let arr = json
             .get("artifacts")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("manifest: missing `artifacts` array"))?;
+            .ok_or_else(|| UdtError::runtime("manifest: missing `artifacts` array"))?;
         let mut artifacts = Vec::with_capacity(arr.len());
         for (i, a) in arr.iter().enumerate() {
             let get_str = |k: &str| {
                 a.get(k)
                     .and_then(Json::as_str)
-                    .ok_or_else(|| anyhow!("artifact {i}: missing `{k}`"))
+                    .ok_or_else(|| UdtError::runtime(format!("artifact {i}: missing `{k}`")))
             };
             let get_num = |k: &str| {
                 a.get(k)
                     .and_then(Json::as_usize)
-                    .ok_or_else(|| anyhow!("artifact {i}: missing `{k}`"))
+                    .ok_or_else(|| UdtError::runtime(format!("artifact {i}: missing `{k}`")))
             };
             artifacts.push(ArtifactSpec {
                 name: get_str("name")?.to_string(),

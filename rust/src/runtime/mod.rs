@@ -1,7 +1,14 @@
 //! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
 //! Rust request path (Python is build-time only).
+//!
+//! The PJRT execution engine needs the external `xla` crate, which the
+//! offline build image does not carry — it compiles only under the `xla`
+//! cargo feature. Without it, [`xla_split::XlaSelection`] is a stub whose
+//! loader reports "no artifacts" and whose selection falls back to the
+//! exact native engine, so every caller keeps working.
 
 pub mod binning;
+#[cfg(feature = "xla")]
 pub mod engine;
 pub mod manifest;
 pub mod xla_split;

@@ -9,17 +9,12 @@
 //!
 //! Scores come back as f32 (the kernel's dtype); the native engine keeps
 //! f64. The `ablation_xla` bench quantifies the agreement.
-
-use super::binning::quantile_bins;
-use super::engine::{Engine, LoadedArtifact};
-use crate::data::interner::CatId;
-use crate::data::value::Value;
-use crate::selection::heuristic::{ClassCriterion, Criterion};
-use crate::selection::split::SplitOp;
-use crate::selection::superfast::{FeatureView, LabelsView, ScoredSplit};
-use anyhow::{anyhow, Result};
-use std::collections::BTreeMap;
-use std::sync::Mutex;
+//!
+//! The PJRT path needs the external `xla` crate and therefore compiles
+//! only under the `xla` cargo feature. Without it this module exposes a
+//! stub [`XlaSelection`] whose loader returns `None` and whose selection
+//! delegates to the exact native engine, so `Backend::Xla` stays
+//! type-correct everywhere.
 
 /// Tunables of the XLA backend.
 #[derive(Debug, Clone)]
@@ -35,211 +30,266 @@ impl Default for XlaSelectionConfig {
     }
 }
 
-/// The backend: a loaded engine + config.
-pub struct XlaSelection {
-    engine: Engine,
-    pub config: XlaSelectionConfig,
-    /// PJRT executions are serialized; the CPU client is used from the
-    /// coordinator's worker threads.
-    lock: Mutex<()>,
-}
+#[cfg(feature = "xla")]
+mod imp {
+    use super::XlaSelectionConfig;
+    use crate::data::interner::CatId;
+    use crate::data::value::Value;
+    use crate::error::{Result, UdtError};
+    use crate::runtime::binning::quantile_bins;
+    use crate::runtime::engine::{Engine, LoadedArtifact};
+    use crate::selection::heuristic::{ClassCriterion, Criterion};
+    use crate::selection::split::SplitOp;
+    use crate::selection::superfast::{FeatureView, LabelsView, Scratch, ScoredSplit};
+    use std::collections::BTreeMap;
+    use std::sync::Mutex;
 
-// SAFETY: the PJRT CPU client and loaded executables are internally
-// thread-safe in XLA's C API; the `xla` crate just doesn't mark its
-// pointer wrappers. We additionally serialize `execute` calls with a
-// mutex, so no concurrent mutation of the wrapped objects occurs.
-unsafe impl Send for XlaSelection {}
-unsafe impl Sync for XlaSelection {}
-
-impl std::fmt::Debug for XlaSelection {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("XlaSelection")
-            .field("config", &self.config)
-            .field("artifacts", &self.engine.names())
-            .finish()
+    /// The backend: a loaded engine + config.
+    pub struct XlaSelection {
+        engine: Engine,
+        pub config: XlaSelectionConfig,
+        /// PJRT executions are serialized; the CPU client is used from the
+        /// coordinator's worker threads.
+        lock: Mutex<()>,
     }
-}
 
-impl XlaSelection {
-    pub fn new(engine: Engine, config: XlaSelectionConfig) -> Self {
-        Self {
-            engine,
-            config,
-            lock: Mutex::new(()),
+    // SAFETY: the PJRT CPU client and loaded executables are internally
+    // thread-safe in XLA's C API; the `xla` crate just doesn't mark its
+    // pointer wrappers. We additionally serialize `execute` calls with a
+    // mutex, so no concurrent mutation of the wrapped objects occurs.
+    unsafe impl Send for XlaSelection {}
+    unsafe impl Sync for XlaSelection {}
+
+    impl std::fmt::Debug for XlaSelection {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("XlaSelection")
+                .field("config", &self.config)
+                .field("artifacts", &self.engine.names())
+                .finish()
         }
     }
 
-    /// Load from the default artifacts directory.
-    pub fn load_default(config: XlaSelectionConfig) -> Option<Self> {
-        Engine::load_default().map(|e| Self::new(e, config))
-    }
-
-    pub fn engine(&self) -> &Engine {
-        &self.engine
-    }
-
-    /// Best split on one feature. Falls back to the native engine for
-    /// small nodes, non-info-gain criteria and regression views.
-    pub fn best_split_on_feat(
-        &self,
-        view: &FeatureView,
-        labels: &LabelsView,
-        criterion: Criterion,
-        scratch: &mut crate::selection::superfast::Scratch,
-    ) -> Option<ScoredSplit> {
-        let usable = matches!(
-            (labels, criterion),
-            (
-                LabelsView::Class { .. },
-                Criterion::Class(ClassCriterion::InfoGain)
-            )
-        ) && view.sorted_num.len() >= self.config.min_rows;
-        if !usable {
-            return crate::selection::superfast::best_split_on_feat_with(
-                view, labels, criterion, scratch,
-            );
+    impl XlaSelection {
+        pub fn new(engine: Engine, config: XlaSelectionConfig) -> Self {
+            Self {
+                engine,
+                config,
+                lock: Mutex::new(()),
+            }
         }
-        match self.xla_numeric_candidates(view, labels) {
-            Ok(best_numeric) => {
-                // Categorical candidates stay native; combine.
-                let best_cat = self.native_categorical(view, labels, criterion);
-                match (best_numeric, best_cat) {
-                    (Some(a), Some(b)) => Some(if a.score >= b.score { a } else { b }),
-                    (a, b) => a.or(b),
+
+        /// Load from the default artifacts directory.
+        pub fn load_default(config: XlaSelectionConfig) -> Option<Self> {
+            Engine::load_default().map(|e| Self::new(e, config))
+        }
+
+        pub fn engine(&self) -> &Engine {
+            &self.engine
+        }
+
+        /// Best split on one feature. Falls back to the native engine for
+        /// small nodes, non-info-gain criteria and regression views.
+        pub fn best_split_on_feat(
+            &self,
+            view: &FeatureView,
+            labels: &LabelsView,
+            criterion: Criterion,
+            scratch: &mut Scratch,
+        ) -> Option<ScoredSplit> {
+            let usable = matches!(
+                (labels, criterion),
+                (
+                    LabelsView::Class { .. },
+                    Criterion::Class(ClassCriterion::InfoGain)
+                )
+            ) && view.sorted_num.len() >= self.config.min_rows;
+            if !usable {
+                return crate::selection::superfast::best_split_on_feat_with(
+                    view, labels, criterion, scratch,
+                );
+            }
+            match self.xla_numeric_candidates(view, labels) {
+                Ok(best_numeric) => {
+                    // Categorical candidates stay native; combine.
+                    let best_cat = self.native_categorical(view, labels, criterion);
+                    match (best_numeric, best_cat) {
+                        (Some(a), Some(b)) => Some(if a.score >= b.score { a } else { b }),
+                        (a, b) => a.or(b),
+                    }
+                }
+                Err(err) => {
+                    // Robustness: degrade to the exact native path.
+                    eprintln!("xla backend error ({err}); falling back to native");
+                    crate::selection::superfast::best_split_on_feat_with(
+                        view, labels, criterion, scratch,
+                    )
                 }
             }
-            Err(err) => {
-                // Robustness: degrade to the exact native path.
-                eprintln!("xla backend error ({err:#}); falling back to native");
-                crate::selection::superfast::best_split_on_feat_with(
-                    view, labels, criterion, scratch,
-                )
+        }
+
+        /// Run the AOT module over the binned numeric rows.
+        fn xla_numeric_candidates(
+            &self,
+            view: &FeatureView,
+            labels: &LabelsView,
+        ) -> Result<Option<ScoredSplit>> {
+            let LabelsView::Class { ids, n_classes } = labels else {
+                return Err(UdtError::runtime("xla path requires classification labels"));
+            };
+            let n = view.sorted_num.len();
+            if n == 0 {
+                return Ok(None);
             }
-        }
-    }
+            let artifact: &LoadedArtifact = self.engine.variant_for(n, *n_classes)?;
+            let (m_pad, b_bins, c_pad) = (artifact.spec.m, artifact.spec.b, artifact.spec.c);
 
-    /// Run the AOT module over the binned numeric rows.
-    fn xla_numeric_candidates(
-        &self,
-        view: &FeatureView,
-        labels: &LabelsView,
-    ) -> Result<Option<ScoredSplit>> {
-        let LabelsView::Class { ids, n_classes } = labels else {
-            return Err(anyhow!("xla path requires classification labels"));
-        };
-        let n = view.sorted_num.len();
-        if n == 0 {
-            return Ok(None);
-        }
-        let artifact: &LoadedArtifact = self.engine.variant_for(n, *n_classes)?;
-        let (m_pad, b_bins, c_pad) = (artifact.spec.m, artifact.spec.b, artifact.spec.c);
+            let binning =
+                quantile_bins(view.sorted_vals, b_bins).expect("non-empty numeric rows");
 
-        let binning =
-            quantile_bins(view.sorted_vals, b_bins).expect("non-empty numeric rows");
-
-        // Assemble padded inputs.
-        let mut bin_ids = vec![0i32; m_pad];
-        let mut label_ids = vec![0i32; m_pad];
-        let mut mask = vec![0f32; m_pad];
-        for (i, &r) in view.sorted_num.iter().enumerate() {
-            bin_ids[i] = binning.bin_of_sorted[i] as i32;
-            label_ids[i] = ids[r as usize] as i32;
-            mask[i] = 1.0;
-        }
-        // Per-class categorical+missing counts ("rest"), padded to C.
-        let mut rest = vec![0f32; c_pad];
-        for &r in view.rows {
-            match view.col.get(r as usize) {
-                Value::Num(_) => {}
-                _ => rest[ids[r as usize] as usize] += 1.0,
+            // Assemble padded inputs.
+            let mut bin_ids = vec![0i32; m_pad];
+            let mut label_ids = vec![0i32; m_pad];
+            let mut mask = vec![0f32; m_pad];
+            for (i, &r) in view.sorted_num.iter().enumerate() {
+                bin_ids[i] = binning.bin_of_sorted[i] as i32;
+                label_ids[i] = ids[r as usize] as i32;
+                mask[i] = 1.0;
             }
-        }
+            // Per-class categorical+missing counts ("rest"), padded to C.
+            let mut rest = vec![0f32; c_pad];
+            for &r in view.rows {
+                match view.col.get(r as usize) {
+                    Value::Num(_) => {}
+                    _ => rest[ids[r as usize] as usize] += 1.0,
+                }
+            }
 
-        let inputs = [
-            xla::Literal::vec1(&bin_ids),
-            xla::Literal::vec1(&label_ids),
-            xla::Literal::vec1(&mask),
-            xla::Literal::vec1(&rest),
-        ];
-        let outputs = {
-            let _guard = self.lock.lock().unwrap();
-            artifact.execute(&inputs)?
-        };
-        if outputs.len() != 2 {
-            return Err(anyhow!("expected (le, gt) outputs, got {}", outputs.len()));
-        }
-        let le: Vec<f32> = outputs[0]
-            .to_vec()
-            .map_err(|e| anyhow!("le scores: {e:?}"))?;
-        let gt: Vec<f32> = outputs[1]
-            .to_vec()
-            .map_err(|e| anyhow!("gt scores: {e:?}"))?;
+            let inputs = [
+                xla::Literal::vec1(&bin_ids),
+                xla::Literal::vec1(&label_ids),
+                xla::Literal::vec1(&mask),
+                xla::Literal::vec1(&rest),
+            ];
+            let outputs = {
+                let _guard = self.lock.lock().unwrap();
+                artifact.execute(&inputs)?
+            };
+            if outputs.len() != 2 {
+                return Err(UdtError::runtime(format!(
+                    "expected (le, gt) outputs, got {}",
+                    outputs.len()
+                )));
+            }
+            let le: Vec<f32> = outputs[0]
+                .to_vec()
+                .map_err(|e| UdtError::runtime(format!("le scores: {e:?}")))?;
+            let gt: Vec<f32> = outputs[1]
+                .to_vec()
+                .map_err(|e| UdtError::runtime(format!("gt scores: {e:?}")))?;
 
-        // Argmax over the used bins; the kernel marks empty-side
-        // candidates with a large negative sentinel.
-        let mut best: Option<ScoredSplit> = None;
-        let used = binning.n_bins();
-        for b in 0..used {
-            for (scores, op) in [
-                (&le, SplitOp::Le(binning.edges[b])),
-                (&gt, SplitOp::Gt(binning.edges[b])),
-            ] {
-                let s = scores[b] as f64;
-                if s > -1e29 {
-                    let better = best.map_or(true, |bst| s > bst.score);
-                    if better {
-                        best = Some(ScoredSplit { score: s, op });
+            // Argmax over the used bins; the kernel marks empty-side
+            // candidates with a large negative sentinel.
+            let mut best: Option<ScoredSplit> = None;
+            let used = binning.n_bins();
+            for b in 0..used {
+                for (scores, op) in [
+                    (&le, SplitOp::Le(binning.edges[b])),
+                    (&gt, SplitOp::Gt(binning.edges[b])),
+                ] {
+                    let s = scores[b] as f64;
+                    if s > -1e29 {
+                        let better = best.map_or(true, |bst| s > bst.score);
+                        if better {
+                            best = Some(ScoredSplit { score: s, op });
+                        }
                     }
                 }
             }
+            Ok(best)
         }
-        Ok(best)
-    }
 
-    /// Native scoring of categorical `=` candidates (cheap: vocabularies
-    /// are small compared to numeric cardinality).
-    fn native_categorical(
-        &self,
-        view: &FeatureView,
-        labels: &LabelsView,
-        criterion: Criterion,
-    ) -> Option<ScoredSplit> {
-        let LabelsView::Class { ids, n_classes } = labels else {
-            return None;
-        };
-        let Criterion::Class(crit) = criterion else {
-            return None;
-        };
-        let c = *n_classes;
-        let mut totals = vec![0.0f64; c];
-        let mut cat: BTreeMap<u32, Vec<f64>> = BTreeMap::new();
-        for &r in view.rows {
-            let y = ids[r as usize] as usize;
-            totals[y] += 1.0;
-            if let Value::Cat(CatId(id)) = view.col.get(r as usize) {
-                cat.entry(id).or_insert_with(|| vec![0.0; c])[y] += 1.0;
+        /// Native scoring of categorical `=` candidates (cheap: vocabularies
+        /// are small compared to numeric cardinality).
+        fn native_categorical(
+            &self,
+            view: &FeatureView,
+            labels: &LabelsView,
+            criterion: Criterion,
+        ) -> Option<ScoredSplit> {
+            let LabelsView::Class { ids, n_classes } = labels else {
+                return None;
+            };
+            let Criterion::Class(crit) = criterion else {
+                return None;
+            };
+            let c = *n_classes;
+            let mut totals = vec![0.0f64; c];
+            let mut cat: BTreeMap<u32, Vec<f64>> = BTreeMap::new();
+            for &r in view.rows {
+                let y = ids[r as usize] as usize;
+                totals[y] += 1.0;
+                if let Value::Cat(CatId(id)) = view.col.get(r as usize) {
+                    cat.entry(id).or_insert_with(|| vec![0.0; c])[y] += 1.0;
+                }
             }
+            let all: f64 = totals.iter().sum();
+            let mut best: Option<ScoredSplit> = None;
+            let mut neg = vec![0.0f64; c];
+            for (&id, counts) in &cat {
+                let pos_total: f64 = counts.iter().sum();
+                if pos_total == 0.0 || all - pos_total == 0.0 {
+                    continue;
+                }
+                for y in 0..c {
+                    neg[y] = totals[y] - counts[y];
+                }
+                let score = crit.score(counts, &neg);
+                let better = best.map_or(true, |b| score > b.score);
+                if better && score.is_finite() {
+                    best = Some(ScoredSplit {
+                        score,
+                        op: SplitOp::Eq(CatId(id)),
+                    });
+                }
+            }
+            best
         }
-        let all: f64 = totals.iter().sum();
-        let mut best: Option<ScoredSplit> = None;
-        let mut neg = vec![0.0f64; c];
-        for (&id, counts) in &cat {
-            let pos_total: f64 = counts.iter().sum();
-            if pos_total == 0.0 || all - pos_total == 0.0 {
-                continue;
-            }
-            for y in 0..c {
-                neg[y] = totals[y] - counts[y];
-            }
-            let score = crit.score(counts, &neg);
-            let better = best.map_or(true, |b| score > b.score);
-            if better && score.is_finite() {
-                best = Some(ScoredSplit {
-                    score,
-                    op: SplitOp::Eq(CatId(id)),
-                });
-            }
-        }
-        best
     }
 }
+
+#[cfg(not(feature = "xla"))]
+mod imp {
+    use super::XlaSelectionConfig;
+    use crate::selection::heuristic::Criterion;
+    use crate::selection::superfast::{FeatureView, LabelsView, Scratch, ScoredSplit};
+
+    /// Stub backend built without the `xla` feature: it can never be
+    /// constructed through [`XlaSelection::load_default`] (which reports
+    /// "no artifacts"), and if a value is ever obtained another way its
+    /// selection is just the exact native engine.
+    #[derive(Debug)]
+    pub struct XlaSelection {
+        pub config: XlaSelectionConfig,
+    }
+
+    impl XlaSelection {
+        /// Artifacts cannot be executed without the `xla` feature; always
+        /// `None` so callers degrade to the native path.
+        pub fn load_default(_config: XlaSelectionConfig) -> Option<Self> {
+            None
+        }
+
+        /// Exact native selection (the stub has no accelerator).
+        pub fn best_split_on_feat(
+            &self,
+            view: &FeatureView,
+            labels: &LabelsView,
+            criterion: Criterion,
+            scratch: &mut Scratch,
+        ) -> Option<ScoredSplit> {
+            crate::selection::superfast::best_split_on_feat_with(view, labels, criterion, scratch)
+        }
+    }
+}
+
+pub use imp::XlaSelection;

@@ -167,7 +167,7 @@ mod tests {
         assert!(keep.contains(&1)); // the planted signal survives
         // Training on the filtered set still works perfectly.
         let tree = crate::Tree::fit(&filtered, &TrainConfig::default()).unwrap();
-        assert_eq!(tree.accuracy(&filtered), 1.0);
+        assert_eq!(tree.accuracy(&filtered).unwrap(), 1.0);
     }
 
     #[test]

@@ -29,10 +29,10 @@ use crate::data::dataset::{Dataset, Labels, TaskKind};
 use crate::selection::generic::best_split_on_feat_generic;
 use crate::selection::heuristic::Criterion;
 use crate::selection::split::SplitPredicate;
+use crate::error::{Result, UdtError};
 use crate::selection::superfast::{
     best_split_on_feat_with, FeatureView, LabelsView, Scratch, ScoredSplit,
 };
-use anyhow::{ensure, Result};
 
 /// Pending node: the row sets Algorithm 5 threads through the queue.
 struct WorkItem {
@@ -114,17 +114,24 @@ struct FitCtx<'a> {
 
 /// Train a tree over `rows` of `ds`.
 pub fn fit_rows(ds: &Dataset, rows: &[u32], config: &TrainConfig) -> Result<Tree> {
-    ensure!(!rows.is_empty(), "cannot fit on an empty row set");
-    ensure!(ds.n_features() > 0, "dataset has no features");
-    ensure!(config.max_depth >= 1, "max_depth must be ≥ 1");
+    if rows.is_empty() {
+        return Err(UdtError::data("cannot fit on an empty row set"));
+    }
+    if ds.n_features() == 0 {
+        return Err(UdtError::data("dataset has no features"));
+    }
+    if config.max_depth < 1 {
+        return Err(UdtError::invalid_config("max_depth must be >= 1"));
+    }
 
     // Root pre-sort (Algorithm 5 line 2): numeric (row, value) pairs per
     // feature, filtered to the requested row subset.
     let member = membership_mask(ds.n_rows(), rows);
-    ensure!(
-        member.iter().filter(|&&m| m).count() == rows.len(),
-        "duplicate rows in training subset (sample without replacement)"
-    );
+    if member.iter().filter(|&&m| m).count() != rows.len() {
+        return Err(UdtError::data(
+            "duplicate rows in training subset (sample without replacement)",
+        ));
+    }
     let full = rows.len() == ds.n_rows();
     let mut sorted_num = Vec::with_capacity(ds.n_features());
     let mut sorted_vals = Vec::with_capacity(ds.n_features());
@@ -724,7 +731,7 @@ mod tests {
     fn learns_xor_exactly() {
         let ds = xor_dataset();
         let tree = fit_rows(&ds, &(0..40).collect::<Vec<_>>(), &TrainConfig::default()).unwrap();
-        assert_eq!(tree.accuracy(&ds), 1.0);
+        assert_eq!(tree.accuracy(&ds).unwrap(), 1.0);
         assert_eq!(tree.depth, 3);
         assert_eq!(tree.n_nodes(), 7); // perfect binary tree
     }
@@ -745,7 +752,7 @@ mod tests {
         // Train on a strict subset; accuracy on that subset must be 1.
         let rows: Vec<u32> = (0..40).step_by(2).collect();
         let tree = fit_rows(&ds, &rows, &TrainConfig::default()).unwrap();
-        assert_eq!(tree.accuracy_rows(&ds, &rows), 1.0);
+        assert_eq!(tree.accuracy_rows(&ds, &rows).unwrap(), 1.0);
         assert_eq!(tree.nodes[0].n_samples as usize, rows.len());
     }
 
@@ -788,7 +795,7 @@ mod tests {
                 },
             )
             .unwrap();
-            let (mae, rmse) = tree.regression_error(&ds, &rows);
+            let (mae, rmse) = tree.regression_error(&ds, &rows).unwrap();
             // Training error of a full tree should be near the noise floor.
             assert!(rmse < 3.0, "{strategy:?}: rmse={rmse}");
             assert!(mae <= rmse + 1e-12);

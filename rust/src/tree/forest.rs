@@ -11,12 +11,14 @@
 //! Feature masking blanks the masked columns of the per-tree view, so
 //! the single-tree builder is reused untouched.
 
-use super::{TrainConfig, Tree};
-use crate::data::dataset::{Dataset, Labels, TaskKind};
+use super::{require_task, NodeLabel, TrainConfig, Tree};
+use crate::data::dataset::{Dataset, TaskKind};
+use crate::data::value::Value;
+use crate::error::{Result, UdtError};
 use crate::util::rng::Rng;
-use anyhow::Result;
 
-/// Forest configuration.
+/// Forest configuration. Build one through [`Forest::builder`] to get
+/// validation, or fill the fields directly.
 #[derive(Debug, Clone)]
 pub struct ForestConfig {
     pub n_trees: usize,
@@ -41,6 +43,31 @@ impl Default for ForestConfig {
     }
 }
 
+impl ForestConfig {
+    /// Validate the ensemble knobs ([`UdtError::InvalidConfig`] on bad ones).
+    pub fn validate(&self) -> Result<()> {
+        if self.n_trees == 0 {
+            return Err(UdtError::invalid_config("n_trees must be >= 1"));
+        }
+        if !(self.feature_frac > 0.0 && self.feature_frac <= 1.0) {
+            return Err(UdtError::invalid_config(format!(
+                "feature_frac must be in (0, 1], got {}",
+                self.feature_frac
+            )));
+        }
+        if !(self.sample_frac > 0.0 && self.sample_frac <= 1.0) {
+            return Err(UdtError::invalid_config(format!(
+                "sample_frac must be in (0, 1], got {}",
+                self.sample_frac
+            )));
+        }
+        if self.tree.max_depth < 1 {
+            return Err(UdtError::invalid_config("max_depth must be >= 1"));
+        }
+        Ok(())
+    }
+}
+
 /// A trained ensemble. Each member remembers which features it saw.
 #[derive(Debug, Clone)]
 pub struct Forest {
@@ -52,11 +79,12 @@ pub struct Forest {
 impl Forest {
     /// Train `n_trees` bagged trees.
     pub fn fit(ds: &Dataset, config: &ForestConfig) -> Result<Forest> {
+        config.validate()?;
         let mut rng = Rng::new(config.seed);
         let n = ds.n_rows();
         let sample_n = ((n as f64 * config.sample_frac) as usize).max(1);
-        let keep_features =
-            ((ds.n_features() as f64 * config.feature_frac).ceil() as usize).clamp(1, ds.n_features());
+        let keep_features = ((ds.n_features() as f64 * config.feature_frac).ceil() as usize)
+            .clamp(1, ds.n_features());
 
         let mut trees = Vec::with_capacity(config.n_trees);
         let mut all_rows: Vec<u32> = (0..n as u32).collect();
@@ -77,7 +105,7 @@ impl Forest {
                 for (f, col) in columns.iter_mut().enumerate() {
                     if masked.contains(&f) {
                         for v in &mut col.values {
-                            *v = crate::data::value::Value::Missing;
+                            *v = Value::Missing;
                         }
                     }
                 }
@@ -99,59 +127,91 @@ impl Forest {
         })
     }
 
-    /// Majority-vote / averaged prediction for row `r` of `ds`.
-    pub fn predict_ds(&self, ds: &Dataset, r: usize) -> super::NodeLabel {
+    /// Number of features the member trees expect.
+    pub fn n_features(&self) -> usize {
+        self.trees.first().map(|t| t.n_features).unwrap_or(0)
+    }
+
+    /// Total node count across the ensemble.
+    pub fn n_nodes(&self) -> usize {
+        self.trees.iter().map(Tree::n_nodes).sum()
+    }
+
+    /// Aggregate the member predictions: majority vote (classification,
+    /// ties broken toward the smaller class id) or mean (regression).
+    fn aggregate(&self, per_tree: impl Iterator<Item = NodeLabel>) -> NodeLabel {
         match self.task {
             TaskKind::Classification => {
                 let mut votes = vec![0u32; self.n_classes.max(1)];
-                for tree in &self.trees {
-                    let c = super::predict::predict_ds(tree, ds, r, usize::MAX, 0).class();
-                    votes[c as usize] += 1;
+                for label in per_tree {
+                    if let Some(c) = label.as_class() {
+                        if let Some(v) = votes.get_mut(c as usize) {
+                            *v += 1;
+                        }
+                    }
                 }
                 let best = votes
                     .iter()
                     .enumerate()
                     .max_by_key(|&(i, &v)| (v, std::cmp::Reverse(i)))
-                    .unwrap()
-                    .0;
-                super::NodeLabel::Class(best as u16)
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                NodeLabel::Class(best as u16)
             }
             TaskKind::Regression => {
-                let sum: f64 = self
-                    .trees
-                    .iter()
-                    .map(|t| super::predict::predict_ds(t, ds, r, usize::MAX, 0).value())
-                    .sum();
-                super::NodeLabel::Value(sum / self.trees.len() as f64)
+                let mut sum = 0.0f64;
+                let mut n = 0usize;
+                for label in per_tree {
+                    sum += label.as_value().unwrap_or(f64::NAN);
+                    n += 1;
+                }
+                NodeLabel::Value(sum / n.max(1) as f64)
             }
         }
     }
 
+    /// Majority-vote / averaged prediction for row `r` of `ds`.
+    pub fn predict_ds(&self, ds: &Dataset, r: usize) -> NodeLabel {
+        self.aggregate(
+            self.trees
+                .iter()
+                .map(|t| super::predict::predict_ds(t, ds, r, usize::MAX, 0)),
+        )
+    }
+
+    /// Ensemble prediction for one materialized row of values.
+    pub fn predict_values(&self, row: &[Value]) -> NodeLabel {
+        self.aggregate(
+            self.trees
+                .iter()
+                .map(|t| super::predict::predict_row(t, row, usize::MAX, 0)),
+        )
+    }
+
     /// Ensemble accuracy over rows.
-    pub fn accuracy_rows(&self, ds: &Dataset, rows: &[u32]) -> f64 {
+    pub fn accuracy_rows(&self, ds: &Dataset, rows: &[u32]) -> Result<f64> {
+        require_task(TaskKind::Classification, self.task)?;
+        require_task(TaskKind::Classification, ds.task())?;
         let correct = rows
             .iter()
             .filter(|&&r| {
-                self.predict_ds(ds, r as usize).class() == ds.labels.class(r as usize)
+                self.predict_ds(ds, r as usize).as_class() == Some(ds.labels.class(r as usize))
             })
             .count();
-        correct as f64 / rows.len().max(1) as f64
+        Ok(correct as f64 / rows.len().max(1) as f64)
     }
 
     /// Ensemble RMSE over rows (regression).
-    pub fn rmse_rows(&self, ds: &Dataset, rows: &[u32]) -> f64 {
-        let values = match &ds.labels {
-            Labels::Reg { values } => values,
-            _ => panic!("rmse on classification forest"),
-        };
-        let sq: f64 = rows
-            .iter()
-            .map(|&r| {
-                let e = self.predict_ds(ds, r as usize).value() - values[r as usize];
-                e * e
-            })
-            .sum();
-        (sq / rows.len().max(1) as f64).sqrt()
+    pub fn rmse_rows(&self, ds: &Dataset, rows: &[u32]) -> Result<f64> {
+        require_task(TaskKind::Regression, self.task)?;
+        require_task(TaskKind::Regression, ds.task())?;
+        let (_, rmse) = super::mae_rmse(rows.iter().map(|&r| {
+            (
+                self.predict_ds(ds, r as usize).as_value().unwrap_or(f64::NAN),
+                ds.labels.target(r as usize),
+            )
+        }));
+        Ok(rmse)
     }
 }
 
@@ -168,7 +228,7 @@ mod tests {
         let (train, _, test) = ds.split_indices(0.8, 0.1, 9);
 
         let single = Tree::fit_rows(&ds, &train, &TrainConfig::default()).unwrap();
-        let single_acc = single.accuracy_rows(&ds, &test);
+        let single_acc = single.accuracy_rows(&ds, &test).unwrap();
 
         let forest = Forest::fit(
             &ds.subset(&train),
@@ -180,7 +240,7 @@ mod tests {
         .unwrap();
         let test_ds = ds.subset(&test);
         let all: Vec<u32> = (0..test_ds.n_rows() as u32).collect();
-        let forest_acc = forest.accuracy_rows(&test_ds, &all);
+        let forest_acc = forest.accuracy_rows(&test_ds, &all).unwrap();
         assert!(
             forest_acc >= single_acc - 0.03,
             "forest {forest_acc} vs single {single_acc}"
@@ -215,7 +275,7 @@ mod tests {
         )
         .unwrap();
         let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
-        let rmse = forest.rmse_rows(&ds, &rows);
+        let rmse = forest.rmse_rows(&ds, &rows).unwrap();
         assert!(rmse.is_finite() && rmse < 50.0, "rmse {rmse}");
     }
 
@@ -240,6 +300,50 @@ mod tests {
                 .filter_map(|n| n.split.as_ref().map(|s| s.feature))
                 .collect();
             assert!(used.len() <= 3, "{used:?}");
+        }
+    }
+
+    #[test]
+    fn invalid_configs_are_rejected() {
+        let spec = SynthSpec::classification("fv", 100, 4, 2);
+        let ds = generate_any(&spec, 81);
+        for cfg in [
+            ForestConfig {
+                n_trees: 0,
+                ..Default::default()
+            },
+            ForestConfig {
+                feature_frac: 0.0,
+                ..Default::default()
+            },
+            ForestConfig {
+                sample_frac: 1.5,
+                ..Default::default()
+            },
+        ] {
+            assert!(matches!(
+                Forest::fit(&ds, &cfg),
+                Err(UdtError::InvalidConfig(_))
+            ));
+        }
+    }
+
+    #[test]
+    fn row_and_ds_predictions_agree() {
+        let mut spec = SynthSpec::classification("fp", 600, 5, 3);
+        spec.cat_frac = 0.3;
+        let ds = generate_any(&spec, 83);
+        let forest = Forest::fit(
+            &ds,
+            &ForestConfig {
+                n_trees: 5,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for r in (0..ds.n_rows()).step_by(37) {
+            let row = ds.row(r);
+            assert_eq!(forest.predict_values(&row), forest.predict_ds(&ds, r));
         }
     }
 }

@@ -10,9 +10,9 @@ pub mod serialize;
 pub mod tuning;
 
 use crate::data::dataset::{Dataset, TaskKind};
+use crate::error::{Result, UdtError};
 use crate::selection::heuristic::{ClassCriterion, Criterion};
 use crate::selection::split::SplitPredicate;
-use anyhow::Result;
 
 /// Which selection engine drives the builder.
 #[derive(Debug, Clone, Default)]
@@ -99,17 +99,21 @@ pub enum NodeLabel {
 }
 
 impl NodeLabel {
-    pub fn class(&self) -> u16 {
+    /// The class id, or `None` for a regression label.
+    #[inline]
+    pub fn as_class(&self) -> Option<u16> {
         match self {
-            NodeLabel::Class(c) => *c,
-            NodeLabel::Value(_) => panic!("class() on regression label"),
+            NodeLabel::Class(c) => Some(*c),
+            NodeLabel::Value(_) => None,
         }
     }
 
-    pub fn value(&self) -> f64 {
+    /// The regression value, or `None` for a classification label.
+    #[inline]
+    pub fn as_value(&self) -> Option<f64> {
         match self {
-            NodeLabel::Value(v) => *v,
-            NodeLabel::Class(_) => panic!("value() on classification label"),
+            NodeLabel::Value(v) => Some(*v),
+            NodeLabel::Class(_) => None,
         }
     }
 }
@@ -168,43 +172,72 @@ impl Tree {
     }
 
     /// Classification accuracy over a dataset (full-depth predictions).
-    pub fn accuracy(&self, ds: &Dataset) -> f64 {
+    ///
+    /// Returns [`UdtError::TaskMismatch`] when the tree or the dataset is
+    /// a regression one.
+    pub fn accuracy(&self, ds: &Dataset) -> Result<f64> {
         self.accuracy_rows(ds, &(0..ds.n_rows() as u32).collect::<Vec<_>>())
     }
 
     /// Accuracy over selected rows.
-    pub fn accuracy_rows(&self, ds: &Dataset, rows: &[u32]) -> f64 {
-        assert_eq!(self.task, TaskKind::Classification);
+    pub fn accuracy_rows(&self, ds: &Dataset, rows: &[u32]) -> Result<f64> {
+        require_task(TaskKind::Classification, self.task)?;
+        require_task(TaskKind::Classification, ds.task())?;
         if rows.is_empty() {
-            return f64::NAN;
+            return Ok(f64::NAN);
         }
         let correct = rows
             .iter()
             .filter(|&&r| {
-                predict::predict_ds(self, ds, r as usize, usize::MAX, 0).class()
-                    == ds.labels.class(r as usize)
+                predict::predict_ds(self, ds, r as usize, usize::MAX, 0).as_class()
+                    == Some(ds.labels.class(r as usize))
             })
             .count();
-        correct as f64 / rows.len() as f64
+        Ok(correct as f64 / rows.len() as f64)
     }
 
     /// (MAE, RMSE) over selected rows (regression).
-    pub fn regression_error(&self, ds: &Dataset, rows: &[u32]) -> (f64, f64) {
-        assert_eq!(self.task, TaskKind::Regression);
+    pub fn regression_error(&self, ds: &Dataset, rows: &[u32]) -> Result<(f64, f64)> {
+        require_task(TaskKind::Regression, self.task)?;
+        require_task(TaskKind::Regression, ds.task())?;
         if rows.is_empty() {
-            return (f64::NAN, f64::NAN);
+            return Ok((f64::NAN, f64::NAN));
         }
-        let mut abs = 0.0;
-        let mut sq = 0.0;
-        for &r in rows {
-            let pred = predict::predict_ds(self, ds, r as usize, usize::MAX, 0).value();
-            let err = pred - ds.labels.target(r as usize);
-            abs += err.abs();
-            sq += err * err;
-        }
-        let n = rows.len() as f64;
-        (abs / n, (sq / n).sqrt())
+        Ok(mae_rmse(rows.iter().map(|&r| {
+            (
+                predict::predict_ds(self, ds, r as usize, usize::MAX, 0)
+                    .as_value()
+                    .unwrap_or(f64::NAN),
+                ds.labels.target(r as usize),
+            )
+        })))
     }
+}
+
+/// Typed task guard used across the estimator surface.
+pub(crate) fn require_task(expected: TaskKind, got: TaskKind) -> Result<()> {
+    if expected == got {
+        Ok(())
+    } else {
+        Err(UdtError::TaskMismatch { expected, got })
+    }
+}
+
+/// Shared MAE/RMSE fold over `(prediction, target)` pairs — the single
+/// implementation behind tree, forest and model evaluation (yields 0.0
+/// on empty input; callers wanting NaN-on-empty check first).
+pub(crate) fn mae_rmse(pairs: impl Iterator<Item = (f64, f64)>) -> (f64, f64) {
+    let mut abs = 0.0;
+    let mut sq = 0.0;
+    let mut n = 0usize;
+    for (pred, y) in pairs {
+        let err = pred - y;
+        abs += err.abs();
+        sq += err * err;
+        n += 1;
+    }
+    let nf = n.max(1) as f64;
+    (abs / nf, (sq / nf).sqrt())
 }
 
 #[cfg(test)]
@@ -217,7 +250,7 @@ mod tests {
         let spec = SynthSpec::classification("t", 2000, 6, 3);
         let ds = generate_classification(&spec, 11);
         let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
-        let acc = tree.accuracy(&ds);
+        let acc = tree.accuracy(&ds).unwrap();
         // Full tree on training data should fit nearly perfectly
         // (residual error only where identical rows carry different labels).
         assert!(acc > 0.95, "train accuracy {acc}");

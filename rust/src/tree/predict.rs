@@ -95,7 +95,7 @@ mod tests {
         let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
         for r in 0..10 {
             let p = predict_ds(&tree, &ds, r, usize::MAX, 0);
-            assert_eq!(p.class(), ds.labels.class(r));
+            assert_eq!(p.as_class(), Some(ds.labels.class(r)));
         }
     }
 
@@ -156,6 +156,6 @@ mod tests {
         // A missing value fails every predicate → always negative branch.
         let p = predict_row(&tree, &[Value::Missing], usize::MAX, 0);
         // Root split is f0 ≤ 4 (pos side = class 0); negative side → 1.
-        assert_eq!(p.class(), 1);
+        assert_eq!(p.as_class(), Some(1));
     }
 }

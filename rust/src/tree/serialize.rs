@@ -6,9 +6,9 @@
 use super::{Node, NodeLabel, Tree};
 use crate::data::dataset::TaskKind;
 use crate::data::interner::Interner;
+use crate::error::{Result, UdtError};
 use crate::selection::split::{SplitOp, SplitPredicate};
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
 
 /// Serialize a tree (with its interner for categorical operands).
 pub fn to_json(tree: &Tree, interner: &Interner) -> Json {
@@ -67,33 +67,31 @@ pub fn from_json(json: &Json, interner: &mut Interner) -> Result<Tree> {
     let task = match json.get("task").and_then(Json::as_str) {
         Some("classification") => TaskKind::Classification,
         Some("regression") => TaskKind::Regression,
-        other => bail!("bad task {other:?}"),
+        other => return Err(UdtError::model(format!("bad task {other:?}"))),
     };
     let n_features = json
         .get("n_features")
         .and_then(Json::as_usize)
-        .ok_or_else(|| anyhow!("missing n_features"))?;
+        .ok_or_else(|| UdtError::model("missing n_features"))?;
     let depth = json
         .get("depth")
         .and_then(Json::as_usize)
-        .ok_or_else(|| anyhow!("missing depth"))? as u16;
+        .ok_or_else(|| UdtError::model("missing depth"))? as u16;
     let node_arr = json
         .get("nodes")
         .and_then(Json::as_arr)
-        .ok_or_else(|| anyhow!("missing nodes"))?;
+        .ok_or_else(|| UdtError::model("missing nodes"))?;
 
     let mut nodes = Vec::with_capacity(node_arr.len());
     for (i, nj) in node_arr.iter().enumerate() {
-        let ctx = || format!("node {i}");
-        let n_samples = nj
-            .get("n")
-            .and_then(Json::as_f64)
-            .with_context(ctx)? as u32;
-        let node_depth = nj.get("d").and_then(Json::as_f64).with_context(ctx)? as u16;
-        let label_num = nj
-            .get("label")
-            .and_then(Json::as_f64)
-            .with_context(ctx)?;
+        let field = |k: &str| {
+            nj.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| UdtError::model(format!("node {i}: missing `{k}`")))
+        };
+        let n_samples = field("n")? as u32;
+        let node_depth = field("d")? as u16;
+        let label_num = field("label")?;
         let label = match task {
             TaskKind::Classification => NodeLabel::Class(label_num as u16),
             TaskKind::Regression => NodeLabel::Value(label_num),
@@ -104,26 +102,31 @@ pub fn from_json(json: &Json, interner: &mut Interner) -> Result<Tree> {
                 let feature = nj
                     .get("feature")
                     .and_then(Json::as_usize)
-                    .with_context(ctx)?;
+                    .ok_or_else(|| UdtError::model(format!("node {i}: missing `feature`")))?;
                 let op = match (op_json.as_str(), nj.get("operand")) {
                     (Some("le"), Some(Json::Num(t))) => SplitOp::Le(*t),
                     (Some("gt"), Some(Json::Num(t))) => SplitOp::Gt(*t),
                     (Some("eq"), Some(Json::Str(s))) => SplitOp::Eq(interner.intern(s)),
-                    other => bail!("node {i}: bad split {other:?}"),
+                    other => {
+                        return Err(UdtError::model(format!("node {i}: bad split {other:?}")))
+                    }
                 };
                 let ch = nj
                     .get("children")
                     .and_then(Json::as_arr)
-                    .with_context(ctx)?;
+                    .ok_or_else(|| UdtError::model(format!("node {i}: missing `children`")))?;
                 if ch.len() != 2 {
-                    bail!("node {i}: children must be a pair");
+                    return Err(UdtError::model(format!("node {i}: children must be a pair")));
                 }
-                let pos = ch[0].as_usize().with_context(ctx)? as u32;
-                let neg = ch[1].as_usize().with_context(ctx)? as u32;
-                (
-                    Some(SplitPredicate { feature, op }),
-                    Some((pos, neg)),
-                )
+                let pos = ch[0]
+                    .as_usize()
+                    .ok_or_else(|| UdtError::model(format!("node {i}: bad child id")))?
+                    as u32;
+                let neg = ch[1]
+                    .as_usize()
+                    .ok_or_else(|| UdtError::model(format!("node {i}: bad child id")))?
+                    as u32;
+                (Some(SplitPredicate { feature, op }), Some((pos, neg)))
             }
         };
         nodes.push(Node {
@@ -135,11 +138,31 @@ pub fn from_json(json: &Json, interner: &mut Interner) -> Result<Tree> {
         });
     }
 
-    // Validate child indices.
+    // Validate the arena so prediction on a malformed document can
+    // never index out of bounds or loop forever: at least one node,
+    // children in range and strictly after their parent (the builder and
+    // pruner both emit BFS order, so this holds for every legitimate
+    // document and forces any root-to-leaf walk to terminate).
+    if nodes.is_empty() {
+        return Err(UdtError::model("tree must contain at least one node"));
+    }
     for (i, n) in nodes.iter().enumerate() {
         if let Some((a, b)) = n.children {
             if a as usize >= nodes.len() || b as usize >= nodes.len() {
-                bail!("node {i}: child out of range");
+                return Err(UdtError::model(format!("node {i}: child out of range")));
+            }
+            if a as usize <= i || b as usize <= i {
+                return Err(UdtError::model(format!(
+                    "node {i}: children must come after their parent (got {a}, {b})"
+                )));
+            }
+        }
+        if let Some(split) = &n.split {
+            if split.feature >= n_features {
+                return Err(UdtError::model(format!(
+                    "node {i}: split feature {} out of range (n_features {n_features})",
+                    split.feature
+                )));
             }
         }
     }
@@ -187,8 +210,8 @@ mod tests {
         let mut interner2 = ds.interner.clone();
         let tree2 = from_json(&json, &mut interner2).unwrap();
         for r in (0..ds.n_rows()).step_by(7) {
-            let a = predict_ds(&tree, &ds, r, usize::MAX, 0).value();
-            let b = predict_ds(&tree2, &ds, r, usize::MAX, 0).value();
+            let a = predict_ds(&tree, &ds, r, usize::MAX, 0).as_value().unwrap();
+            let b = predict_ds(&tree2, &ds, r, usize::MAX, 0).as_value().unwrap();
             assert!((a - b).abs() < 1e-12);
         }
     }
@@ -201,6 +224,20 @@ mod tests {
             "nodes":[{"n":1,"d":1,"label":0,"op":"le","operand":1,
                       "feature":0,"children":[5,6]}]}"#;
         assert!(from_json(&Json::parse(bad).unwrap(), &mut i).is_err());
+        // Empty arena would panic at the first prediction.
+        let empty = r#"{"task":"classification","n_features":0,"depth":0,"nodes":[]}"#;
+        assert!(from_json(&Json::parse(empty).unwrap(), &mut i).is_err());
+        // Self-referencing children (in range) would loop forever.
+        let cyclic = r#"{"task":"classification","n_features":1,"depth":1,
+            "nodes":[{"n":9,"d":1,"label":0,"op":"le","operand":1,
+                      "feature":0,"children":[0,0]}]}"#;
+        assert!(from_json(&Json::parse(cyclic).unwrap(), &mut i).is_err());
+        // Out-of-range split feature would index past the row.
+        let bad_feature = r#"{"task":"classification","n_features":1,"depth":2,
+            "nodes":[{"n":2,"d":1,"label":0,"op":"le","operand":1,
+                      "feature":3,"children":[1,2]},
+                     {"n":1,"d":2,"label":0},{"n":1,"d":2,"label":1}]}"#;
+        assert!(from_json(&Json::parse(bad_feature).unwrap(), &mut i).is_err());
     }
 
     #[test]

@@ -14,8 +14,8 @@
 use super::predict::path_ds;
 use super::{prune, NodeLabel, TrainConfig, Tree};
 use crate::data::dataset::{Dataset, TaskKind};
+use crate::error::{Result, UdtError};
 use crate::util::timer::Timer;
-use anyhow::Result;
 
 /// Outcome of a tuning sweep.
 #[derive(Debug, Clone)]
@@ -55,9 +55,11 @@ pub fn tune(
     val_rows: &[u32],
     n_train: usize,
     grid: &TuneGrid,
-) -> TuneResult {
+) -> Result<TuneResult> {
     let timer = Timer::start();
-    assert!(!val_rows.is_empty(), "validation set is empty");
+    if val_rows.is_empty() {
+        return Err(UdtError::data("validation set is empty"));
+    }
 
     // One walk per validation example: node ids along its path.
     let paths: Vec<Vec<u32>> = val_rows
@@ -95,13 +97,13 @@ pub fn tune(
         }
     }
 
-    TuneResult {
+    Ok(TuneResult {
         best_max_depth: best_depth,
         best_min_split: best_split,
         best_metric,
         n_settings,
         tune_ms: timer.ms(),
-    }
+    })
 }
 
 /// Metric of one `(max_depth, min_split)` setting using the cached paths.
@@ -118,7 +120,7 @@ fn eval_setting(
             let mut correct = 0usize;
             for (&r, path) in val_rows.iter().zip(paths) {
                 let label = label_at(tree, path, max_depth, min_split);
-                if label.class() == ds.labels.class(r as usize) {
+                if label.as_class() == Some(ds.labels.class(r as usize)) {
                     correct += 1;
                 }
             }
@@ -128,7 +130,7 @@ fn eval_setting(
             let mut sq = 0.0f64;
             for (&r, path) in val_rows.iter().zip(paths) {
                 let label = label_at(tree, path, max_depth, min_split);
-                let err = label.value() - ds.labels.target(r as usize);
+                let err = label.as_value().unwrap_or(f64::NAN) - ds.labels.target(r as usize);
                 sq += err * err;
             }
             -(sq / val_rows.len() as f64).sqrt()
@@ -159,10 +161,10 @@ pub fn tune_and_prune(
     val_rows: &[u32],
     n_train: usize,
     grid: &TuneGrid,
-) -> (TuneResult, Tree) {
-    let result = tune(tree, ds, val_rows, n_train, grid);
+) -> Result<(TuneResult, Tree)> {
+    let result = tune(tree, ds, val_rows, n_train, grid)?;
     let pruned = prune::prune(tree, result.best_max_depth, result.best_min_split);
-    (result, pruned)
+    Ok((result, pruned))
 }
 
 /// Generic baseline: retrain a tree for every grid setting (what the
@@ -188,8 +190,8 @@ pub fn tune_by_retraining(
         };
         let tree = Tree::fit_rows(ds, train_rows, &cfg)?;
         Ok(match ds.task() {
-            TaskKind::Classification => tree.accuracy_rows(ds, val_rows),
-            TaskKind::Regression => -tree.regression_error(ds, val_rows).1,
+            TaskKind::Classification => tree.accuracy_rows(ds, val_rows)?,
+            TaskKind::Regression => -tree.regression_error(ds, val_rows)?.1,
         })
     };
 
@@ -236,8 +238,8 @@ mod tests {
         let ds = noisy_ds();
         let (train, val, _) = ds.split_indices(0.8, 0.1, 3);
         let tree = Tree::fit_rows(&ds, &train, &TrainConfig::default()).unwrap();
-        let full_acc = tree.accuracy_rows(&ds, &val);
-        let r = tune(&tree, &ds, &val, train.len(), &TuneGrid::default());
+        let full_acc = tree.accuracy_rows(&ds, &val).unwrap();
+        let r = tune(&tree, &ds, &val, train.len(), &TuneGrid::default()).unwrap();
         assert!(
             r.best_metric >= full_acc - 1e-12,
             "tuned {} < full {full_acc}",
@@ -252,9 +254,10 @@ mod tests {
         let ds = noisy_ds();
         let (train, val, test) = ds.split_indices(0.8, 0.1, 4);
         let tree = Tree::fit_rows(&ds, &train, &TrainConfig::default()).unwrap();
-        let (r, pruned) = tune_and_prune(&tree, &ds, &val, train.len(), &TuneGrid::default());
-        let full_test = tree.accuracy_rows(&ds, &test);
-        let tuned_test = pruned.accuracy_rows(&ds, &test);
+        let (r, pruned) =
+            tune_and_prune(&tree, &ds, &val, train.len(), &TuneGrid::default()).unwrap();
+        let full_test = tree.accuracy_rows(&ds, &test).unwrap();
+        let tuned_test = pruned.accuracy_rows(&ds, &test).unwrap();
         // With 25% label noise the full tree memorizes noise; the tuned
         // tree should do at least as well on held-out data (allow a tiny
         // slack for val/test mismatch).
@@ -283,8 +286,8 @@ mod tests {
                     .iter()
                     .filter(|&&r| {
                         super::super::predict::predict_ds(&tree, &ds, r as usize, depth, split)
-                            .class()
-                            == ds.labels.class(r as usize)
+                            .as_class()
+                            == Some(ds.labels.class(r as usize))
                     })
                     .count();
                 correct as f64 / val.len() as f64
@@ -311,7 +314,7 @@ mod tests {
             min_split_steps: 20,
             ..Default::default()
         };
-        let fast = tune(&tree, &ds, &val, train.len(), &grid);
+        let fast = tune(&tree, &ds, &val, train.len(), &grid).unwrap();
         let slow =
             tune_by_retraining(&ds, &train, &val, &cfg, tree.depth as usize, &grid).unwrap();
         assert!((fast.best_metric - slow.best_metric).abs() < 0.05);
@@ -324,7 +327,7 @@ mod tests {
         let ds = crate::data::synth::generate_regression(&spec, 7);
         let (train, val, _) = ds.split_indices(0.8, 0.1, 8);
         let tree = Tree::fit_rows(&ds, &train, &TrainConfig::default()).unwrap();
-        let r = tune(&tree, &ds, &val, train.len(), &TuneGrid::default());
+        let r = tune(&tree, &ds, &val, train.len(), &TuneGrid::default()).unwrap();
         assert!(r.best_metric.is_finite());
         assert!(r.best_max_depth >= 1);
     }

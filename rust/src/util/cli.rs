@@ -1,9 +1,11 @@
 //! Tiny CLI argument parser (the offline image has no `clap`).
 //!
-//! Supports `--flag`, `--key value`, `--key=value`, positional args and
-//! subcommands. Each option is declared up-front so `--help` output and
-//! unknown-flag errors are automatic.
+//! Supports `--flag`, `--key value`, `--key=value`, repeatable options
+//! (`--set a=1 --set b=2`), positional args and subcommands. Each option
+//! is declared up-front so `--help` output and unknown-flag errors are
+//! automatic. Errors surface as [`UdtError::Usage`].
 
+use crate::error::{Result, UdtError};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
@@ -12,6 +14,7 @@ use std::fmt::Write as _;
 pub struct OptSpec {
     pub name: &'static str,
     pub value: bool, // takes a value?
+    pub multi: bool, // may repeat?
     pub help: &'static str,
     pub default: Option<&'static str>,
 }
@@ -21,6 +24,7 @@ pub struct OptSpec {
 pub struct Args {
     pub positional: Vec<String>,
     pub options: BTreeMap<String, String>,
+    pub multi: BTreeMap<String, Vec<String>>,
     pub flags: Vec<String>,
 }
 
@@ -33,30 +37,35 @@ impl Args {
         self.get(key).unwrap_or(default)
     }
 
-    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+    /// All values of a repeatable option, in order of appearance.
+    pub fn get_all(&self, key: &str) -> &[String] {
+        self.multi.get(key).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got `{v}`")),
+                .map_err(|_| UdtError::usage(format!("--{key} expects an integer, got `{v}`"))),
         }
     }
 
-    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got `{v}`")),
+                .map_err(|_| UdtError::usage(format!("--{key} expects a number, got `{v}`"))),
         }
     }
 
-    pub fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
         match self.get(key) {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got `{v}`")),
+                .map_err(|_| UdtError::usage(format!("--{key} expects an integer, got `{v}`"))),
         }
     }
 
@@ -83,12 +92,30 @@ impl Command {
         }
     }
 
-    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+        default: Option<&'static str>,
+    ) -> Self {
         self.opts.push(OptSpec {
             name,
             value: true,
+            multi: false,
             help,
             default,
+        });
+        self
+    }
+
+    /// A value option that may repeat (e.g. `--set a=1 --set b=2`).
+    pub fn opt_multi(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            value: true,
+            multi: true,
+            help,
+            default: None,
         });
         self
     }
@@ -97,6 +124,7 @@ impl Command {
         self.opts.push(OptSpec {
             name,
             value: false,
+            multi: false,
             help,
             default: None,
         });
@@ -109,7 +137,7 @@ impl Command {
     }
 
     /// Parse raw args (after the subcommand name).
-    pub fn parse(&self, raw: &[String]) -> anyhow::Result<Args> {
+    pub fn parse(&self, raw: &[String]) -> Result<Args> {
         let mut args = Args::default();
         // Seed defaults.
         for spec in &self.opts {
@@ -125,11 +153,9 @@ impl Command {
                     Some((k, v)) => (k.to_string(), Some(v.to_string())),
                     None => (rest.to_string(), None),
                 };
-                let spec = self
-                    .opts
-                    .iter()
-                    .find(|s| s.name == key)
-                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key}\n\n{}", self.help()))?;
+                let spec = self.opts.iter().find(|s| s.name == key).ok_or_else(|| {
+                    UdtError::usage(format!("unknown option --{key}\n\n{}", self.help()))
+                })?;
                 if spec.value {
                     let val = match inline_val {
                         Some(v) => v,
@@ -137,13 +163,17 @@ impl Command {
                             i += 1;
                             raw.get(i)
                                 .cloned()
-                                .ok_or_else(|| anyhow::anyhow!("--{key} expects a value"))?
+                                .ok_or_else(|| UdtError::usage(format!("--{key} expects a value")))?
                         }
                     };
-                    args.options.insert(key, val);
+                    if spec.multi {
+                        args.multi.entry(key).or_default().push(val);
+                    } else {
+                        args.options.insert(key, val);
+                    }
                 } else {
                     if inline_val.is_some() {
-                        anyhow::bail!("--{key} does not take a value");
+                        return Err(UdtError::usage(format!("--{key} does not take a value")));
                     }
                     args.flags.push(key);
                 }
@@ -164,11 +194,12 @@ impl Command {
         }
         for o in &self.opts {
             let kind = if o.value { " <value>" } else { "" };
+            let rep = if o.multi { " (repeatable)" } else { "" };
             let def = o
                 .default
                 .map(|d| format!(" [default: {d}]"))
                 .unwrap_or_default();
-            let _ = writeln!(s, "  --{}{kind}\t{}{def}", o.name, o.help);
+            let _ = writeln!(s, "  --{}{kind}\t{}{rep}{def}", o.name, o.help);
         }
         s
     }
@@ -182,6 +213,7 @@ mod tests {
         Command::new("train", "train a tree")
             .opt("dataset", "dataset name", Some("adult"))
             .opt("depth", "max depth", None)
+            .opt_multi("set", "config override key=value")
             .flag("verbose", "chatty output")
             .positional("input files")
     }
@@ -212,6 +244,15 @@ mod tests {
     }
 
     #[test]
+    fn repeatable_options_accumulate() {
+        let a = cmd()
+            .parse(&raw(&["--set", "a=1", "--set=b=2", "--set", "c=3"]))
+            .unwrap();
+        assert_eq!(a.get_all("set"), &["a=1", "b=2", "c=3"]);
+        assert!(a.get_all("missing").is_empty());
+    }
+
+    #[test]
     fn unknown_flag_errors() {
         assert!(cmd().parse(&raw(&["--nope"])).is_err());
     }
@@ -232,5 +273,6 @@ mod tests {
         let h = cmd().help();
         assert!(h.contains("--dataset"));
         assert!(h.contains("--verbose"));
+        assert!(h.contains("repeatable"));
     }
 }

@@ -1,14 +1,16 @@
 //! Cross-module integration: full train→tune→prune→evaluate pipelines on
-//! registry datasets, CSV ingestion, tree serialization, the prediction
-//! server, and failure injection.
+//! registry datasets, CSV ingestion, model serialization, the prediction
+//! server, and failure injection — all through the unified model surface.
 
 use udt::coordinator::pipeline::{run_pipeline, Quality};
 use udt::coordinator::serve::Server;
 use udt::data::csv::{load_csv_str, to_csv_string, CsvOptions};
 use udt::data::dataset::TaskKind;
 use udt::data::synth::{generate_any, registry, SynthSpec};
-use udt::tree::{serialize, Backend, RegStrategy, TrainConfig, Tree};
+use udt::tree::tuning::TuneGrid;
+use udt::tree::{Backend, RegStrategy};
 use udt::util::json::Json;
+use udt::{Estimator, Model, SavedModel, Tree, Udt, UdtError};
 
 #[test]
 fn pipeline_on_scaled_registry_datasets() {
@@ -24,7 +26,8 @@ fn pipeline_on_scaled_registry_datasets() {
     ] {
         let entry = registry::find(name).unwrap();
         let ds = generate_any(&entry.spec.scaled(0.05), 11);
-        let rep = run_pipeline(&ds, &TrainConfig::default(), 1).unwrap();
+        let cfg = Udt::builder().build().unwrap();
+        let rep = run_pipeline(&ds, &cfg, &TuneGrid::default(), 1).unwrap();
         match rep.quality {
             Quality::Accuracy(a) => {
                 assert!(a > min_acc, "{name}: accuracy {a}");
@@ -41,7 +44,8 @@ fn pipeline_on_scaled_regression_datasets() {
     for name in ["wine_quality", "bike_sharing_hour"] {
         let entry = registry::find(name).unwrap();
         let ds = generate_any(&entry.spec.scaled(0.05), 13);
-        let rep = run_pipeline(&ds, &TrainConfig::default(), 2).unwrap();
+        let cfg = Udt::builder().build().unwrap();
+        let rep = run_pipeline(&ds, &cfg, &TuneGrid::default(), 2).unwrap();
         match rep.quality {
             Quality::Regression { mae, rmse } => {
                 assert!(mae.is_finite() && rmse.is_finite() && mae <= rmse + 1e-9, "{name}");
@@ -49,6 +53,25 @@ fn pipeline_on_scaled_regression_datasets() {
             _ => panic!("regression expected"),
         }
     }
+}
+
+#[test]
+fn pipeline_honors_a_custom_tune_grid() {
+    let entry = registry::find("churn_modeling").unwrap();
+    let ds = generate_any(&entry.spec.scaled(0.05), 17);
+    let cfg = Udt::builder().build().unwrap();
+    let small_grid = TuneGrid {
+        min_split_steps: 10,
+        ..Default::default()
+    };
+    let rep_small = run_pipeline(&ds, &cfg, &small_grid, 1).unwrap();
+    let rep_default = run_pipeline(&ds, &cfg, &TuneGrid::default(), 1).unwrap();
+    // Settings = depth sweep + (steps + 1) min_split probes.
+    assert_eq!(
+        rep_default.n_settings - rep_small.n_settings,
+        200 - 10,
+        "grid size must drive the number of evaluated settings"
+    );
 }
 
 #[test]
@@ -63,25 +86,29 @@ fn csv_train_predict_round_trip() {
     assert_eq!(ds.n_rows(), 400);
     assert_eq!(ds.task(), TaskKind::Classification);
 
-    let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
-    let json_text = serialize::to_json(&tree, &ds.interner).to_pretty();
-    let mut interner = ds.interner.clone();
-    let tree2 = serialize::from_json(&Json::parse(&json_text).unwrap(), &mut interner).unwrap();
+    let tree = Udt::builder().fit(&ds).unwrap();
+    let saved = SavedModel::new(Model::SingleTree(tree), &ds);
+    let text = saved.to_json().to_pretty();
+    let back = SavedModel::from_json(&Json::parse(&text).unwrap()).unwrap();
     for r in (0..ds.n_rows()).step_by(11) {
+        let row = ds.row(r);
         assert_eq!(
-            udt::tree::predict::predict_ds(&tree, &ds, r, usize::MAX, 0),
-            udt::tree::predict::predict_ds(&tree2, &ds, r, usize::MAX, 0)
+            back.model.predict_row(&row).unwrap(),
+            saved.model.predict_row(&row).unwrap()
         );
     }
 }
 
 #[test]
-fn server_predictions_match_tree() {
+fn server_predictions_match_model() {
     let mut spec = SynthSpec::classification("srv", 600, 4, 2);
     spec.cat_frac = 0.25;
     let ds = generate_any(&spec, 19);
-    let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
-    let server = Server::new(tree.clone(), ds.interner.clone(), ds.class_names.clone());
+    let tree = Udt::builder().fit(&ds).unwrap();
+    let saved = SavedModel::new(Model::SingleTree(tree), &ds);
+    let class_names = saved.schema.class_names.clone();
+    let model = saved.model.clone();
+    let server = Server::new(saved);
 
     for r in (0..ds.n_rows()).step_by(29) {
         let row = ds.row(r);
@@ -97,8 +124,8 @@ fn server_predictions_match_tree() {
             .collect();
         let req = format!("[{}]", cells.join(","));
         let resp = server.handle(&req);
-        let expected = udt::tree::predict::predict_row(&tree, &row, usize::MAX, 0).class();
-        let expected_name = &ds.class_names[expected as usize];
+        let expected = model.predict_row(&row).unwrap().as_class().unwrap();
+        let expected_name = &class_names[expected as usize];
         assert_eq!(resp, format!("\"{expected_name}\""), "row {r}");
     }
 }
@@ -109,15 +136,8 @@ fn backends_build_identical_trees_on_hybrid_data() {
     spec.cat_frac = 0.3;
     spec.missing_frac = 0.05;
     let ds = generate_any(&spec, 23);
-    let t_fast = Tree::fit(&ds, &TrainConfig::default()).unwrap();
-    let t_slow = Tree::fit(
-        &ds,
-        &TrainConfig {
-            backend: Backend::Generic,
-            ..Default::default()
-        },
-    )
-    .unwrap();
+    let t_fast = Udt::builder().fit(&ds).unwrap();
+    let t_slow = Udt::builder().backend(Backend::Generic).fit(&ds).unwrap();
     assert_eq!(t_fast.n_nodes(), t_slow.n_nodes());
     for (a, b) in t_fast.nodes.iter().zip(&t_slow.nodes) {
         assert_eq!(a.split, b.split);
@@ -132,16 +152,9 @@ fn regression_strategies_comparable_quality() {
     let (train, _, test) = ds.split_indices(0.8, 0.1, 5);
     let mut rmses = Vec::new();
     for strategy in [RegStrategy::LabelSplit, RegStrategy::DirectSse] {
-        let tree = Tree::fit_rows(
-            &ds,
-            &train,
-            &TrainConfig {
-                reg_strategy: strategy,
-                ..Default::default()
-            },
-        )
-        .unwrap();
-        let (_, rmse) = tree.regression_error(&ds, &test);
+        let cfg = Udt::builder().reg_strategy(strategy).build().unwrap();
+        let tree = Tree::fit_rows(&ds, &train, &cfg).unwrap();
+        let (_, rmse) = tree.regression_error(&ds, &test).unwrap();
         rmses.push(rmse);
     }
     // The paper's label-split strategy should be in the same quality
@@ -159,20 +172,20 @@ fn failure_injection_empty_and_degenerate_inputs() {
     // Empty row set.
     let spec = SynthSpec::classification("fi", 50, 3, 2);
     let ds = generate_any(&spec, 31);
-    assert!(Tree::fit_rows(&ds, &[], &TrainConfig::default()).is_err());
+    let cfg = Udt::builder().build().unwrap();
+    assert!(matches!(
+        Tree::fit_rows(&ds, &[], &cfg),
+        Err(UdtError::Data(_))
+    ));
 
-    // max_depth = 0 rejected.
-    assert!(Tree::fit(
-        &ds,
-        &TrainConfig {
-            max_depth: 0,
-            ..Default::default()
-        }
-    )
-    .is_err());
+    // max_depth = 0 rejected by the builder, not a panic downstream.
+    assert!(matches!(
+        Udt::builder().max_depth(0).fit(&ds),
+        Err(UdtError::InvalidConfig(_))
+    ));
 
     // Single-row training set → single leaf.
-    let t = Tree::fit_rows(&ds, &[0], &TrainConfig::default()).unwrap();
+    let t = Tree::fit_rows(&ds, &[0], &cfg).unwrap();
     assert_eq!(t.n_nodes(), 1);
 
     // All-missing feature column still trains (on the other columns).
@@ -181,8 +194,15 @@ fn failure_injection_empty_and_degenerate_inputs() {
         *v = udt::data::value::Value::Missing;
     }
     let ds2 = udt::Dataset::new("fi2", columns, ds.labels.clone(), ds.interner.clone()).unwrap();
-    let t2 = Tree::fit(&ds2, &TrainConfig::default()).unwrap();
+    let t2 = Udt::builder().fit(&ds2).unwrap();
     assert!(t2.n_nodes() >= 1);
+
+    // Task mismatch is typed, not a panic.
+    let reg = generate_any(&SynthSpec::regression("fir", 60, 3), 33);
+    assert!(matches!(
+        t.evaluate(&reg),
+        Err(UdtError::TaskMismatch { .. })
+    ));
 
     // Malformed CSV errors.
     assert!(load_csv_str("bad", "a,b\n", &CsvOptions::default()).is_err());
@@ -197,15 +217,8 @@ fn chi2_and_gini_criteria_train_reasonably() {
         udt::selection::heuristic::ClassCriterion::Gini,
         udt::selection::heuristic::ClassCriterion::ChiSquare,
     ] {
-        let tree = Tree::fit(
-            &ds,
-            &TrainConfig {
-                criterion: crit,
-                ..Default::default()
-            },
-        )
-        .unwrap();
-        let acc = tree.accuracy(&ds);
+        let tree = Udt::builder().criterion(crit).fit(&ds).unwrap();
+        let acc = tree.accuracy(&ds).unwrap();
         assert!(acc > 0.9, "{}: {acc}", crit.name());
     }
 }

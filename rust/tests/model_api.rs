@@ -1,0 +1,284 @@
+//! The unified model surface, end to end: serde round-trips of all three
+//! `Model` variants (schema + interner included), TCP serving of a tuned
+//! tree and a forest (single, batch and stats requests over the wire),
+//! and builder validation (bad configs are typed errors, not panics).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use udt::coordinator::serve::Server;
+use udt::data::synth::{generate_any, generate_classification, SynthSpec};
+use udt::data::value::Value;
+use udt::tree::tuning::{tune, TuneGrid};
+use udt::util::json::Json;
+use udt::{Estimator, Forest, Model, SavedModel, Tree, Udt, UdtError};
+
+fn hybrid_ds() -> udt::Dataset {
+    let mut spec = SynthSpec::classification("mapi", 1200, 6, 3);
+    spec.cat_frac = 0.35;
+    spec.missing_frac = 0.05;
+    spec.noise = 0.15;
+    generate_classification(&spec, 4242)
+}
+
+/// Serialize → parse → deserialize, asserting the document is versioned
+/// and self-contained (schema + interner travel with the model).
+fn round_trip(saved: &SavedModel) -> SavedModel {
+    let json = saved.to_json();
+    assert_eq!(
+        json.get("format").and_then(Json::as_str),
+        Some("udt-model"),
+        "document must carry the format tag"
+    );
+    assert!(json.get("schema").is_some(), "schema must be bundled");
+    assert!(json.get("interner").is_some(), "interner must be bundled");
+    let text = json.to_pretty();
+    SavedModel::from_json(&Json::parse(&text).unwrap()).unwrap()
+}
+
+#[test]
+fn all_three_model_variants_round_trip_with_schema_and_interner() {
+    let ds = hybrid_ds();
+    let tree = Udt::builder().fit(&ds).unwrap();
+    let (train, val, _) = ds.split_indices(0.8, 0.1, 7);
+    let full = Tree::fit_rows(&ds, &train, &Udt::builder().build().unwrap()).unwrap();
+    let tuned = tune(&full, &ds, &val, train.len(), &TuneGrid::default()).unwrap();
+    let forest = Forest::builder().n_trees(4).fit(&ds).unwrap();
+
+    let variants = [
+        SavedModel::new(Model::SingleTree(tree), &ds),
+        SavedModel::new(
+            Model::TunedTree {
+                tree: full,
+                max_depth: tuned.best_max_depth,
+                min_split: tuned.best_min_split,
+            },
+            &ds,
+        ),
+        SavedModel::new(Model::Forest(forest), &ds),
+    ];
+
+    for saved in &variants {
+        let back = round_trip(saved);
+        assert_eq!(back.model.kind(), saved.model.kind());
+        assert_eq!(back.schema.feature_names, saved.schema.feature_names);
+        assert_eq!(back.schema.class_names, saved.schema.class_names);
+        assert_eq!(back.interner.len(), saved.interner.len());
+        for r in (0..ds.n_rows()).step_by(31) {
+            let row = ds.row(r);
+            assert_eq!(
+                back.model.predict_row(&row).unwrap(),
+                saved.model.predict_row(&row).unwrap(),
+                "{} row {r}",
+                saved.model.kind()
+            );
+        }
+    }
+}
+
+/// Start a server, run `f` against the live socket, shut down cleanly.
+fn with_tcp_server(saved: SavedModel, f: impl FnOnce(&mut TcpStream, &mut BufReader<TcpStream>)) {
+    let server = Server::new(saved);
+    let (tx, rx) = mpsc::channel();
+    let s2 = server.clone();
+    let handle = std::thread::spawn(move || {
+        s2.serve("127.0.0.1:0", |addr| tx.send(addr).unwrap()).unwrap();
+    });
+    let addr = rx.recv().unwrap();
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    f(&mut stream, &mut reader);
+    stream.write_all(b"\"shutdown\"\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    handle.join().unwrap();
+}
+
+fn request(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str) -> String {
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    resp.trim().to_string()
+}
+
+fn json_cells(ds: &udt::Dataset, r: usize) -> String {
+    let cells: Vec<String> = ds
+        .row(r)
+        .iter()
+        .map(|v| match v {
+            Value::Num(x) => format!("{x}"),
+            Value::Cat(c) => format!("\"{}\"", ds.interner.name(*c).replace('"', "\\\"")),
+            Value::Missing => "null".to_string(),
+        })
+        .collect();
+    format!("[{}]", cells.join(","))
+}
+
+/// The response the server should give for one locally-predicted label.
+fn expected_response(saved: &SavedModel, ds: &udt::Dataset, r: usize) -> String {
+    let label = saved.model.predict_row(&ds.row(r)).unwrap();
+    let class = label.as_class().unwrap();
+    match saved.schema.class_name(class) {
+        Some(name) => format!("\"{name}\""),
+        None => format!("{class}"),
+    }
+}
+
+#[test]
+fn tcp_serving_a_tuned_tree_loaded_from_json() {
+    let ds = hybrid_ds();
+    let (train, val, _) = ds.split_indices(0.8, 0.1, 11);
+    let full = Tree::fit_rows(&ds, &train, &Udt::builder().build().unwrap()).unwrap();
+    let tuned = tune(&full, &ds, &val, train.len(), &TuneGrid::default()).unwrap();
+    let saved = round_trip(&SavedModel::new(
+        Model::TunedTree {
+            tree: full,
+            max_depth: tuned.best_max_depth,
+            min_split: tuned.best_min_split,
+        },
+        &ds,
+    ));
+    let local = saved.clone();
+
+    with_tcp_server(saved, |stream, reader| {
+        // Single-row requests.
+        for r in [0usize, 97, 501] {
+            let resp = request(stream, reader, &json_cells(&ds, r));
+            assert_eq!(resp, expected_response(&local, &ds, r), "row {r}");
+        }
+        // Batch request.
+        let rows: Vec<usize> = (0..10).map(|i| i * 13).collect();
+        let batch = format!(
+            "[{}]",
+            rows.iter()
+                .map(|&r| json_cells(&ds, r))
+                .collect::<Vec<_>>()
+                .join(",")
+        );
+        let resp = request(stream, reader, &batch);
+        let parsed = Json::parse(&resp).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), rows.len());
+        for (&r, got) in rows.iter().zip(arr) {
+            assert_eq!(got.to_string(), expected_response(&local, &ds, r));
+        }
+        // Stats identify the model family and count the work done.
+        let stats = Json::parse(&request(stream, reader, "\"stats\"")).unwrap();
+        assert_eq!(stats.get("kind").unwrap().as_str().unwrap(), "tuned_tree");
+        assert!(stats.get("predictions").unwrap().as_f64().unwrap() >= 13.0);
+    });
+}
+
+#[test]
+fn tcp_serving_a_forest_loaded_from_json() {
+    let ds = hybrid_ds();
+    let forest = Forest::builder().n_trees(5).sample_frac(0.6).fit(&ds).unwrap();
+    let saved = round_trip(&SavedModel::new(Model::Forest(forest), &ds));
+    let local = saved.clone();
+
+    with_tcp_server(saved, |stream, reader| {
+        for r in [3usize, 42, 777] {
+            let resp = request(stream, reader, &json_cells(&ds, r));
+            assert_eq!(resp, expected_response(&local, &ds, r), "row {r}");
+        }
+        let batch = format!("[{},{}]", json_cells(&ds, 8), json_cells(&ds, 9));
+        let parsed = Json::parse(&request(stream, reader, &batch)).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 2);
+        let stats = Json::parse(&request(stream, reader, "\"stats\"")).unwrap();
+        assert_eq!(stats.get("kind").unwrap().as_str().unwrap(), "forest");
+        assert!(stats.get("nodes").unwrap().as_f64().unwrap() > 0.0);
+    });
+}
+
+#[test]
+fn builders_reject_bad_configs_with_typed_errors() {
+    let ds = hybrid_ds();
+    // Tree builder.
+    assert!(matches!(
+        Udt::builder().max_depth(0).build(),
+        Err(UdtError::InvalidConfig(_))
+    ));
+    assert!(matches!(
+        Udt::builder().min_samples_split(0).build(),
+        Err(UdtError::InvalidConfig(_))
+    ));
+    assert!(matches!(
+        Udt::builder().min_gain(f64::INFINITY).fit(&ds),
+        Err(UdtError::InvalidConfig(_))
+    ));
+    // Forest builder.
+    assert!(matches!(
+        Forest::builder().n_trees(0).fit(&ds),
+        Err(UdtError::InvalidConfig(_))
+    ));
+    assert!(matches!(
+        Forest::builder().feature_frac(-0.5).build(),
+        Err(UdtError::InvalidConfig(_))
+    ));
+    assert!(matches!(
+        Forest::builder().sample_frac(2.0).build(),
+        Err(UdtError::InvalidConfig(_))
+    ));
+    // Valid builds still work.
+    let tree = Udt::builder().max_depth(4).fit(&ds).unwrap();
+    assert!(tree.depth <= 4);
+}
+
+#[test]
+fn malformed_model_documents_surface_as_model_errors() {
+    for doc in [
+        r#"{"format":"udt-model","version":1}"#,
+        r#"{"format":"udt-model","version":2,"kind":"single_tree",
+            "schema":{"features":[],"classes":[]},"interner":[]}"#,
+        // Split feature out of range must be rejected at load, not panic
+        // at predict.
+        r#"{"format":"udt-model","version":1,"kind":"single_tree",
+            "schema":{"features":[{"name":"f0","kind":"numeric"}],"classes":[]},
+            "interner":[],
+            "tree":{"task":"classification","n_features":1,"depth":2,
+                    "nodes":[{"n":2,"d":1,"label":0,"op":"le","operand":1,
+                              "feature":9,"children":[1,2]},
+                             {"n":1,"d":2,"label":0},
+                             {"n":1,"d":2,"label":1}]}}"#,
+    ] {
+        let parsed = Json::parse(doc).unwrap();
+        assert!(
+            matches!(SavedModel::from_json(&parsed), Err(UdtError::Model(_))),
+            "{doc}"
+        );
+    }
+}
+
+#[test]
+fn estimator_contract_is_uniform_across_families() {
+    let ds = hybrid_ds();
+    let reg_ds = generate_any(&SynthSpec::regression("mreg", 400, 6), 9);
+
+    let tree = <Tree as Estimator>::fit(&ds, &Udt::builder().build().unwrap()).unwrap();
+    let forest = <Forest as Estimator>::fit(&ds, &Forest::builder().n_trees(3).build().unwrap())
+        .unwrap();
+
+    let rows: Vec<Vec<Value>> = (0..16).map(|r| ds.row(r)).collect();
+    // Batch output matches row-by-row output for both families.
+    assert_eq!(tree.predict_batch(&rows).unwrap().len(), 16);
+    assert_eq!(forest.predict_batch(&rows).unwrap().len(), 16);
+    // Evaluation returns the classification quality flavor.
+    assert!(matches!(
+        tree.evaluate(&ds).unwrap(),
+        udt::Quality::Accuracy(_)
+    ));
+    assert!(matches!(
+        forest.evaluate(&ds).unwrap(),
+        udt::Quality::Accuracy(_)
+    ));
+    // Task mismatch is typed for both.
+    assert!(matches!(
+        tree.evaluate(&reg_ds),
+        Err(UdtError::TaskMismatch { .. })
+    ));
+    assert!(matches!(
+        forest.evaluate(&reg_ds),
+        Err(UdtError::TaskMismatch { .. })
+    ));
+}
