@@ -8,13 +8,19 @@
 //! needs several GB of RAM and is skipped above 2M rows unless
 //! UDT_BENCH_FULL=1).
 //!
+//! Besides the printed table, the run writes a machine-readable
+//! `BENCH_table6.json` (train wall-clock, rows/sec, peak arena bytes per
+//! dataset) at the repository root so the perf trajectory is tracked
+//! PR-over-PR.
+//!
 //!   cargo bench --bench table6
 
-use udt::bench_support::{BenchConfig, Table};
+use udt::bench_support::{write_bench_json, BenchConfig, Table};
 use udt::coordinator::pipeline::{run_pipeline, Quality};
 use udt::data::synth::{generate_any, registry};
 use udt::tree::tuning::TuneGrid;
 use udt::tree::TrainConfig;
+use udt::util::json::Json;
 
 fn main() {
     let cfg = BenchConfig::from_env();
@@ -30,6 +36,7 @@ fn main() {
         "dataset", "rows", "feat", "cls", "nodes", "depth", "train(ms)", "tune(ms)",
         "acc", "t.nodes", "t.depth", "t.train(ms)", "paper(train/tune/acc)",
     ]);
+    let mut json_rows: Vec<Json> = Vec::new();
     for entry in registry::classification_registry() {
         let spec = entry.spec.scaled(scale);
         if spec.n_rows > 2_000_000 && !full {
@@ -46,6 +53,20 @@ fn main() {
             Quality::Accuracy(a) => a,
             _ => unreachable!(),
         };
+        let rows_per_sec = rep.n_train as f64 / (rep.full_train_ms / 1000.0).max(1e-9);
+        json_rows.push(Json::obj(vec![
+            ("dataset", Json::Str(rep.dataset.clone())),
+            ("rows", Json::Num(rep.n_examples as f64)),
+            ("train_rows", Json::Num(rep.n_train as f64)),
+            ("features", Json::Num(rep.n_features as f64)),
+            ("classes", Json::Num(rep.n_labels as f64)),
+            ("nodes", Json::Num(rep.full_nodes as f64)),
+            ("train_ms", Json::Num(rep.full_train_ms)),
+            ("tune_ms", Json::Num(rep.tune_ms)),
+            ("rows_per_sec", Json::Num(rows_per_sec)),
+            ("peak_arena_bytes", Json::Num(rep.peak_arena_bytes as f64)),
+            ("accuracy", Json::Num(acc)),
+        ]));
         table.row(vec![
             rep.dataset.clone(),
             rep.n_examples.to_string(),
@@ -71,4 +92,14 @@ fn main() {
     println!("\n== Table 6: UDT on classification datasets (scale {scale}) ==");
     println!("{}", table.render());
     println!("== CSV ==\n{}", table.to_csv());
+
+    let artifact = Json::obj(vec![
+        ("bench", Json::Str("table6".into())),
+        ("scale", Json::Num(scale)),
+        ("datasets", Json::Arr(json_rows)),
+    ]);
+    match write_bench_json("table6", &artifact) {
+        Ok(p) => eprintln!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write bench artifact: {e}"),
+    }
 }

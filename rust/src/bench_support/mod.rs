@@ -5,7 +5,9 @@
 
 pub mod table5;
 
+use crate::util::json::Json;
 use crate::util::timer::Timer;
+use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 /// Measurement of one benchmark case.
@@ -169,6 +171,32 @@ impl Table {
     }
 }
 
+/// Write a machine-readable perf artifact `BENCH_<name>.json` so the
+/// repository's perf trajectory is tracked PR-over-PR.
+///
+/// Location: `$UDT_BENCH_DIR` when set, else the repository root (the
+/// parent of this crate's manifest directory). Returns the path written.
+pub fn write_bench_json(name: &str, payload: &Json) -> std::io::Result<PathBuf> {
+    let dir = match std::env::var("UDT_BENCH_DIR") {
+        Ok(d) => PathBuf::from(d),
+        Err(_) => Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .map(Path::to_path_buf)
+            .unwrap_or_else(|| PathBuf::from(".")),
+    };
+    write_bench_json_to(&dir, name, payload)
+}
+
+/// [`write_bench_json`] with an explicit directory (tests use this to
+/// avoid touching the process environment).
+pub fn write_bench_json_to(dir: &Path, name: &str, payload: &Json) -> std::io::Result<PathBuf> {
+    let path = dir.join(format!("BENCH_{name}.json"));
+    let mut text = payload.to_pretty();
+    text.push('\n');
+    std::fs::write(&path, text)?;
+    Ok(path)
+}
+
 /// Format milliseconds compactly for table cells.
 pub fn fmt_ms(ms: f64) -> String {
     if ms < 1.0 {
@@ -244,5 +272,27 @@ mod tests {
     fn table_rejects_bad_rows() {
         let mut t = Table::new(&["a", "b"]);
         t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn bench_json_artifact_round_trips() {
+        let dir = std::env::temp_dir().join("udt_bench_selftest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let payload = Json::obj(vec![
+            ("bench", Json::Str("selftest".into())),
+            ("train_ms", Json::Num(12.5)),
+        ]);
+        let path = write_bench_json_to(&dir, "selftest", &payload).unwrap();
+        assert_eq!(
+            path.file_name().and_then(|n| n.to_str()),
+            Some("BENCH_selftest.json")
+        );
+        let text = std::fs::read_to_string(&path).unwrap();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("train_ms").and_then(Json::as_f64), Some(12.5));
+        assert_eq!(
+            back.get("bench").and_then(Json::as_str),
+            Some("selftest")
+        );
     }
 }

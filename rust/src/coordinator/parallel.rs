@@ -2,9 +2,33 @@
 //! image ships no rayon). Work is pulled from an atomic cursor so uneven
 //! item costs balance automatically; each worker owns a scratch value to
 //! keep hot loops allocation-free.
+//!
+//! The queue is lock-free: items and results live in index-addressed
+//! cells, and the cursor's `fetch_add` hands every index to exactly one
+//! worker, so the hot loop takes zero locks per item (the previous
+//! design paid two `Mutex` acquisitions per item — a measurable tax when
+//! the tree frontier fans out to thousands of small nodes).
 
+use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+
+/// One item/result cell of the work queue.
+///
+/// Access is externally synchronized: the atomic cursor returns each
+/// index exactly once, so at most one worker ever touches a given cell,
+/// and `thread::scope` join publishes all writes back to the caller.
+struct Slot<V>(UnsafeCell<Option<V>>);
+
+// SAFETY: a `Slot` is only accessed by the single worker that claimed
+// its index from the cursor (see `parallel_map_scratch`); the scope join
+// provides the happens-before edge for the caller's reads.
+unsafe impl<V: Send> Sync for Slot<V> {}
+
+impl<V> Slot<V> {
+    fn new(v: Option<V>) -> Self {
+        Slot(UnsafeCell::new(v))
+    }
+}
 
 /// Map `f` over `items`, preserving order, with `n_threads` workers and a
 /// per-worker scratch created by `make_scratch`.
@@ -28,9 +52,10 @@ where
         return items.into_iter().map(|it| f(it, &mut scratch)).collect();
     }
 
-    // Items move behind Mutex slots; results are written back by index.
-    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
-    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    // Index-addressed cells + one shared cursor: the only synchronization
+    // in the hot loop is the cursor's `fetch_add`.
+    let slots: Vec<Slot<T>> = items.into_iter().map(|t| Slot::new(Some(t))).collect();
+    let results: Vec<Slot<R>> = (0..n).map(|_| Slot::new(None)).collect();
     let cursor = AtomicUsize::new(0);
 
     std::thread::scope(|scope| {
@@ -42,9 +67,13 @@ where
                     if i >= n {
                         break;
                     }
-                    let item = slots[i].lock().unwrap().take().unwrap();
+                    // SAFETY: `fetch_add` handed index `i` to this worker
+                    // alone; nobody else reads or writes slot `i` until
+                    // the scope joins.
+                    let item = unsafe { (*slots[i].0.get()).take() }.expect("item present");
                     let r = f(item, &mut scratch);
-                    *results[i].lock().unwrap() = Some(r);
+                    // SAFETY: same exclusive claim on index `i`.
+                    unsafe { *results[i].0.get() = Some(r) };
                 }
             });
         }
@@ -52,7 +81,7 @@ where
 
     results
         .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker completed"))
+        .map(|s| s.0.into_inner().expect("worker completed"))
         .collect()
 }
 
@@ -129,5 +158,20 @@ mod tests {
     fn effective_threads_zero_means_all() {
         assert!(effective_threads(0) >= 1);
         assert_eq!(effective_threads(3), 3);
+    }
+
+    #[test]
+    fn moves_non_clone_items_through_the_queue() {
+        // Items are moved out of their cells exactly once — `String` has
+        // no `Copy` escape hatch, so double-takes would fail loudly.
+        let items: Vec<String> = (0..257).map(|i| format!("s{i}")).collect();
+        let ys = parallel_map(items.clone(), 5, |s| s.len());
+        assert_eq!(ys, items.iter().map(|s| s.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let ys = parallel_map(vec![10u64, 20, 30], 64, |x| x + 1);
+        assert_eq!(ys, vec![11, 21, 31]);
     }
 }

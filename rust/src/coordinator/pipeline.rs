@@ -18,12 +18,17 @@ pub use crate::model::Quality;
 pub struct PipelineReport {
     pub dataset: String,
     pub n_examples: usize,
+    /// Rows the full tree actually trained on (the 80% split).
+    pub n_train: usize,
     pub n_features: usize,
     pub n_labels: usize,
     // Full tree.
     pub full_nodes: usize,
     pub full_depth: u16,
     pub full_train_ms: f64,
+    /// Peak bytes of the builder's double-buffered arenas during the
+    /// full-tree fit (see [`crate::tree::frontier::ArenaStats`]).
+    pub peak_arena_bytes: usize,
     // Tuning.
     pub tune_ms: f64,
     pub n_settings: usize,
@@ -60,7 +65,8 @@ pub fn run_pipeline_model(
 
     // Train the full ("full-fledged") tree.
     let timer = Timer::start();
-    let full = Tree::fit_rows(ds, &train, config)?;
+    let (full, arena_stats) =
+        crate::tree::builder::fit_rows_with_stats(ds, &train, config, None)?;
     let full_train_ms = timer.ms();
 
     // Training-Only-Once Tuning + pruning.
@@ -91,11 +97,13 @@ pub fn run_pipeline_model(
     let report = PipelineReport {
         dataset: ds.name.clone(),
         n_examples: ds.n_rows(),
+        n_train: train.len(),
         n_features: ds.n_features(),
         n_labels: ds.labels.n_classes(),
         full_nodes: full.n_nodes(),
         full_depth: full.depth,
         full_train_ms,
+        peak_arena_bytes: arena_stats.peak_bytes,
         tune_ms,
         n_settings: tune_result.n_settings,
         best_max_depth: tune_result.best_max_depth,
@@ -136,6 +144,9 @@ mod tests {
         }
         assert!(rep.n_settings > 100);
         assert!(rep.full_train_ms > 0.0 && rep.tune_ms >= 0.0);
+        assert!(rep.peak_arena_bytes > 0);
+        // Full fit + tuned retrain: the column sort was still paid once.
+        assert_eq!(ds.sort_index_builds(), 1);
     }
 
     #[test]

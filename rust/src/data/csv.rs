@@ -151,7 +151,7 @@ pub fn load_csv_str(name: &str, text: &str, opts: &CsvOptions) -> Result<Dataset
                 Labels::Class { ids, n_classes },
                 interner,
             )?;
-            ds.class_names = names;
+            ds.class_names = std::sync::Arc::new(names);
             return Ok(ds);
         }
         TaskKind::Regression => {
@@ -252,7 +252,7 @@ mod tests {
         assert_eq!(ds.value(0, 0), Value::Num(3.0));
         assert!(ds.value(1, 0).is_cat());
         assert!(ds.value(0, 2).is_missing());
-        assert_eq!(ds.class_names, vec!["yes", "no"]);
+        assert_eq!(*ds.class_names, vec!["yes", "no"]);
     }
 
     #[test]

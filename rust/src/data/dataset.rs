@@ -2,8 +2,11 @@
 
 use super::column::Column;
 use super::interner::Interner;
+use super::sorted_index::SortedIndex;
 use super::value::Value;
 use crate::error::{Result, UdtError};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
 
 /// Classification or regression.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -64,14 +67,25 @@ impl Labels {
 }
 
 /// An in-memory tabular dataset.
+///
+/// The string interner and class names are `Arc`-shared: row-subset
+/// views ([`Dataset::subset`]) and model bundles reference them instead
+/// of deep-cloning per call. The per-feature root sort is memoized in a
+/// [`SortedIndex`] built lazily on first fit (see
+/// [`Dataset::sorted_index`]).
 #[derive(Debug, Clone)]
 pub struct Dataset {
     pub name: String,
     pub columns: Vec<Column>,
     pub labels: Labels,
-    pub interner: Interner,
+    pub interner: Arc<Interner>,
     /// Human-readable class names (classification only, may be empty).
-    pub class_names: Vec<String>,
+    pub class_names: Arc<Vec<String>>,
+    /// Lazily-built per-feature sort cache (see `data/sorted_index.rs`).
+    sorted: OnceLock<Arc<SortedIndex>>,
+    /// How many times this dataset built a `SortedIndex` (test
+    /// instrumentation for the sort-once contract).
+    sort_builds: Arc<AtomicUsize>,
 }
 
 impl Dataset {
@@ -79,7 +93,7 @@ impl Dataset {
         name: impl Into<String>,
         columns: Vec<Column>,
         labels: Labels,
-        interner: Interner,
+        interner: impl Into<Arc<Interner>>,
     ) -> Result<Self> {
         let n = labels.len();
         for c in &columns {
@@ -96,8 +110,10 @@ impl Dataset {
             name: name.into(),
             columns,
             labels,
-            interner,
-            class_names: Vec::new(),
+            interner: interner.into(),
+            class_names: Arc::new(Vec::new()),
+            sorted: OnceLock::new(),
+            sort_builds: Arc::new(AtomicUsize::new(0)),
         })
     }
 
@@ -121,6 +137,37 @@ impl Dataset {
     /// One example as a row of values (allocates; for serving/tests).
     pub fn row(&self, row: usize) -> Vec<Value> {
         self.columns.iter().map(|c| c.values[row]).collect()
+    }
+
+    /// The cached per-feature root sort (UDT Algorithm 5 line 2), built
+    /// on first use and shared by every subsequent fit — forest bags and
+    /// tuning refits filter this order by row membership instead of
+    /// re-sorting.
+    ///
+    /// Contract: the cache mirrors `columns` (and, for regression,
+    /// `labels`) as of the first call. Nothing in this crate mutates a
+    /// dataset after construction, but both fields are public — callers
+    /// that edit cell values (e.g. imputation) **must** call
+    /// [`Dataset::invalidate_sort_cache`] before the next fit, or the
+    /// stale order silently corrupts training.
+    pub fn sorted_index(&self) -> &SortedIndex {
+        self.sorted.get_or_init(|| {
+            self.sort_builds.fetch_add(1, Ordering::Relaxed);
+            Arc::new(SortedIndex::build(&self.columns, &self.labels))
+        })
+    }
+
+    /// Drop the memoized [`SortedIndex`] after mutating `columns` or
+    /// regression `labels`; the next fit re-sorts (and the build counter
+    /// advances again).
+    pub fn invalidate_sort_cache(&mut self) {
+        self.sorted = OnceLock::new();
+    }
+
+    /// How many times [`Dataset::sorted_index`] actually sorted (0 until
+    /// the first fit, then exactly 1 for the lifetime of the dataset).
+    pub fn sort_index_builds(&self) -> usize {
+        self.sort_builds.load(Ordering::Relaxed)
     }
 
     /// Deterministic train/validation/test split by shuffled row ids
@@ -147,6 +194,7 @@ impl Dataset {
 
     /// Materialize a subset of rows as a new dataset (used by tests and
     /// the bench harness; the tree builder itself works on index sets).
+    /// The interner and class names are shared, not deep-cloned.
     pub fn subset(&self, rows: &[u32]) -> Dataset {
         let columns = self
             .columns
@@ -171,8 +219,10 @@ impl Dataset {
             name: self.name.clone(),
             columns,
             labels,
-            interner: self.interner.clone(),
-            class_names: self.class_names.clone(),
+            interner: Arc::clone(&self.interner),
+            class_names: Arc::clone(&self.class_names),
+            sorted: OnceLock::new(),
+            sort_builds: Arc::new(AtomicUsize::new(0)),
         }
     }
 
@@ -240,6 +290,37 @@ mod tests {
         assert_eq!(s.labels.class(0), 0);
         assert!(s.value(0, 0).is_cat());
         assert_eq!(s.value(0, 1), Value::Num(1.0));
+    }
+
+    #[test]
+    fn subset_shares_interner_and_class_names() {
+        let mut d = tiny();
+        d.class_names = Arc::new(vec!["no".into(), "yes".into()]);
+        let s = d.subset(&[0, 1]);
+        assert!(Arc::ptr_eq(&d.interner, &s.interner));
+        assert!(Arc::ptr_eq(&d.class_names, &s.class_names));
+    }
+
+    #[test]
+    fn sorted_index_builds_once() {
+        let d = tiny();
+        assert_eq!(d.sort_index_builds(), 0);
+        let a = d.sorted_index().features[0].num_rows.clone();
+        let b = d.sorted_index().features[0].num_rows.clone();
+        assert_eq!(a, b);
+        assert_eq!(a, vec![0, 1]); // rows 0,1 numeric, ascending
+        assert_eq!(d.sort_index_builds(), 1);
+    }
+
+    #[test]
+    fn invalidation_resorts_after_column_mutation() {
+        let mut d = tiny();
+        assert_eq!(d.sorted_index().features[0].num_rows, vec![0, 1]);
+        // Swap the two numeric cells of f0 and invalidate.
+        d.columns[0].values.swap(0, 1);
+        d.invalidate_sort_cache();
+        assert_eq!(d.sorted_index().features[0].num_rows, vec![1, 0]);
+        assert_eq!(d.sort_index_builds(), 2);
     }
 
     #[test]

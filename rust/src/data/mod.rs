@@ -6,9 +6,11 @@ pub mod column;
 pub mod csv;
 pub mod dataset;
 pub mod interner;
+pub mod sorted_index;
 pub mod synth;
 pub mod value;
 
 pub use dataset::{Dataset, Labels, TaskKind};
+pub use sorted_index::SortedIndex;
 pub use interner::{CatId, Interner};
 pub use value::Value;

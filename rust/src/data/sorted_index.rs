@@ -1,0 +1,139 @@
+//! Dataset-level sort-index cache: the UDT root pre-sort, computed once
+//! per dataset and shared immutably by every fit.
+//!
+//! The paper's `O(M)`-per-feature claim rests on sorting each column once
+//! and *maintaining* sortedness down the tree. Before this cache the
+//! builder re-sorted every column on every `fit_rows` call, so a
+//! `Forest::fit` with `T` trees or a retraining tuning sweep re-paid the
+//! `O(K·M log M)` root sort `T` times. [`crate::data::dataset::Dataset`]
+//! now memoizes one [`SortedIndex`] behind a `OnceLock`; forest bags and
+//! tuned retrains filter the cached order by row membership (an `O(K·M)`
+//! scan) instead of sorting.
+//!
+//! Contract:
+//! * the cache is built lazily on first use and never mutated — columns
+//!   and (for the regression by-target order) label values must not
+//!   change after the first fit (nothing in the crate mutates them;
+//!   `align_labels` only remaps *classification* ids, which the index
+//!   does not store);
+//! * `num_rows` is ascending by `(value, row)` and `cat_rows` is grouped
+//!   by ascending `(category id, row)` — exactly the order the builder's
+//!   in-place partition preserves down the tree;
+//! * the per-dataset build counter ([`Dataset::sort_index_builds`]) lets
+//!   tests assert the "sort each column exactly once" property.
+//!
+//! [`Dataset::sort_index_builds`]: crate::data::dataset::Dataset::sort_index_builds
+
+use super::column::Column;
+use super::dataset::Labels;
+
+/// Root-level sorted artifacts of one feature column.
+#[derive(Debug, Clone, Default)]
+pub struct FeatureSorted {
+    /// Rows holding numeric cells, ascending by `(value, row)`.
+    pub num_rows: Vec<u32>,
+    /// Values parallel to `num_rows`.
+    pub num_vals: Vec<f64>,
+    /// Rows holding categorical cells, grouped by ascending `(id, row)`.
+    pub cat_rows: Vec<u32>,
+    /// Category ids parallel to `cat_rows` (non-decreasing).
+    pub cat_ids: Vec<u32>,
+    /// Whether the column holds any categorical or missing cell (lets
+    /// the selection engine skip its per-node statistics pass on clean
+    /// numeric columns).
+    pub has_nonnum: bool,
+}
+
+/// The cached root pre-sort of a whole dataset (Algorithm 5 line 2).
+#[derive(Debug, Clone)]
+pub struct SortedIndex {
+    /// One entry per feature column.
+    pub features: Vec<FeatureSorted>,
+    /// Regression only: all rows ascending by `(target, row)` — the
+    /// Algorithm 6 label-split order. Empty for classification.
+    pub reg_order: Vec<u32>,
+}
+
+impl SortedIndex {
+    /// Sort every column (and, for regression, the targets). `O(K·M log M)`
+    /// — paid once per dataset; every fit afterwards filters this order.
+    pub fn build(columns: &[Column], labels: &Labels) -> SortedIndex {
+        let features = columns
+            .iter()
+            .map(|c| {
+                let (num_rows, num_vals) = c.sorted_numeric();
+                let (cat_rows, cat_ids) = c.sorted_categorical();
+                let has_nonnum = num_rows.len() != c.len();
+                FeatureSorted {
+                    num_rows,
+                    num_vals,
+                    cat_rows,
+                    cat_ids,
+                    has_nonnum,
+                }
+            })
+            .collect();
+        let reg_order = match labels {
+            Labels::Reg { values } => {
+                let mut idx: Vec<u32> = (0..values.len() as u32).collect();
+                idx.sort_by(|&a, &b| {
+                    values[a as usize]
+                        .partial_cmp(&values[b as usize])
+                        .unwrap()
+                        .then(a.cmp(&b))
+                });
+                idx
+            }
+            Labels::Class { .. } => Vec::new(),
+        };
+        SortedIndex {
+            features,
+            reg_order,
+        }
+    }
+
+    /// Approximate resident bytes of the cached order.
+    pub fn approx_bytes(&self) -> usize {
+        let mut b = self.reg_order.len() * std::mem::size_of::<u32>();
+        for f in &self.features {
+            b += f.num_rows.len() * std::mem::size_of::<u32>()
+                + f.num_vals.len() * std::mem::size_of::<f64>()
+                + f.cat_rows.len() * std::mem::size_of::<u32>()
+                + f.cat_ids.len() * std::mem::size_of::<u32>();
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::value::Value;
+
+    #[test]
+    fn numeric_order_and_nonnum_flag() {
+        let clean = Column::new("c", vec![Value::Num(2.0), Value::Num(1.0)]);
+        let dirty = Column::new("d", vec![Value::Num(5.0), Value::Missing]);
+        let labels = Labels::Class {
+            ids: vec![0, 1],
+            n_classes: 2,
+        };
+        let idx = SortedIndex::build(&[clean, dirty], &labels);
+        assert_eq!(idx.features[0].num_rows, vec![1, 0]);
+        assert_eq!(idx.features[0].num_vals, vec![1.0, 2.0]);
+        assert!(!idx.features[0].has_nonnum);
+        assert!(idx.features[1].has_nonnum);
+        assert!(idx.reg_order.is_empty());
+    }
+
+    #[test]
+    fn regression_order_sorts_by_target_then_row() {
+        let col = Column::new("c", vec![Value::Num(0.0); 4]);
+        let labels = Labels::Reg {
+            values: vec![3.0, 1.0, 3.0, -2.0],
+        };
+        let idx = SortedIndex::build(&[col], &labels);
+        assert_eq!(idx.reg_order, vec![3, 1, 0, 2]);
+        assert!(idx.approx_bytes() > 0);
+    }
+}

@@ -268,7 +268,8 @@ fn generate(spec: &SynthSpec, seed: u64) -> Dataset {
     let mut ds = Dataset::new(spec.name.clone(), columns, labels, interner)
         .expect("synthetic dataset is always well-formed");
     if !spec.is_regression() {
-        ds.class_names = (0..spec.n_classes).map(|c| format!("c{c}")).collect();
+        ds.class_names =
+            std::sync::Arc::new((0..spec.n_classes).map(|c| format!("c{c}")).collect());
     }
     ds
 }

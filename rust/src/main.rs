@@ -262,9 +262,9 @@ fn cmd_predict(raw: &[String]) -> Result<()> {
     // The CSV interned its strings and class labels independently of the
     // model bundle; remap the model's categorical operands into the
     // dataset's id space and the dataset's class ids into the model's.
-    let mut interner = std::mem::take(&mut ds.interner);
-    saved.align_to(&mut interner)?;
-    ds.interner = interner;
+    // The dataset's interner Arc is uniquely owned here, so this mutates
+    // in place (no table copy; clones only if the Arc were shared).
+    saved.align_to(std::sync::Arc::make_mut(&mut ds.interner))?;
     saved.align_labels(&mut ds);
     println!(
         "model: kind={} features={} nodes={}",

@@ -497,7 +497,7 @@ impl SavedModel {
         SavedModel {
             model,
             schema: Schema::of(ds),
-            interner: ds.interner.clone(),
+            interner: (*ds.interner).clone(),
         }
     }
 
@@ -542,7 +542,7 @@ impl SavedModel {
             }
             *n_classes = names.len();
         }
-        ds.class_names = names;
+        ds.class_names = std::sync::Arc::new(names);
     }
 }
 
@@ -661,7 +661,8 @@ mod tests {
                 Interner::new(),
             )
             .unwrap();
-            ds.class_names = names.iter().map(|s| s.to_string()).collect();
+            ds.class_names =
+                std::sync::Arc::new(names.iter().map(|s| s.to_string()).collect());
             ds
         };
         // Trained where "neg"=0, "pos"=1.

@@ -72,7 +72,7 @@ impl Schema {
         Schema {
             feature_names,
             feature_kinds,
-            class_names: ds.class_names.clone(),
+            class_names: (*ds.class_names).clone(),
         }
     }
 

@@ -1,96 +1,64 @@
-//! UDT tree construction (paper Algorithm 5).
+//! UDT tree construction (paper Algorithm 5) on the arena frontier.
 //!
-//! Numeric values of every feature are sorted **once** at the root
-//! (`O(K·M log M)`); every `split_node` then runs Superfast Selection per
-//! feature in `O(M_node + N·C)` and partitions the sorted row lists with
-//! an order-preserving filter (`filter_sorted_nums`), so sortedness is
-//! maintained for free down the whole tree. Regression nodes additionally
+//! Numeric values of every feature are sorted **once per dataset** (the
+//! [`crate::data::sorted_index::SortedIndex`] cache; `O(K·M log M)` paid
+//! on the first fit only — forest bags and tuning refits filter the
+//! cached order by row membership in `O(K·M)`). Every `split_node` runs
+//! Superfast Selection per feature in `O(M_node + N·C)` and partitions
+//! the level's flat arenas **in place** with a stable two-pointer pass
+//! (see [`super::frontier`]), so sortedness is maintained for free down
+//! the whole tree and the builder performs zero per-node heap
+//! allocations for row/value/label lists. Regression nodes additionally
 //! maintain rows sorted by target for the Algorithm 6 label split.
 //!
-//! Hot-path engineering on top of the paper's description (§Perf in
-//! EXPERIMENTS.md):
-//! * sorted lists carry `(row, value)` in parallel arrays, so the prefix
-//!   walk streams values sequentially instead of chasing `Value` cells;
+//! Hot-path engineering on top of the paper's description:
+//! * sorted lists carry `(row, value, label)` in parallel arena arrays,
+//!   so the prefix walk streams sequentially instead of chasing `Value`
+//!   cells;
 //! * node class counts are computed once per node and reused by every
 //!   all-numeric column, eliminating the per-feature statistics pass for
 //!   clean columns;
-//! * partitioning marks positive rows in a reusable bitmask (L2-resident)
-//!   and filters every sorted list by bit tests instead of re-evaluating
-//!   the predicate against the 16-byte column cells.
+//! * partitioning marks positive rows in a level-wide bitmask
+//!   (L2-resident) and every arena range filters by bit tests instead of
+//!   re-evaluating the predicate against the 16-byte column cells.
 //!
-//! The frontier is processed level-synchronously; with `n_threads > 1`
-//! nodes of a level run on a worker pool (and small frontiers fall back
-//! to feature-level parallelism).
+//! The frontier is processed level-synchronously: selection parallelizes
+//! over the level's nodes (small frontiers fall back to feature-level
+//! parallelism), the arena partition parallelizes over features — each
+//! worker owns one feature's arrays, so both phases are lock-free.
 
+use super::frontier::{ArenaStats, Frontier, SplitTask};
 use super::label_split;
 use super::{Backend, Node, NodeLabel, RegStrategy, TrainConfig, Tree};
-use crate::coordinator::parallel::parallel_map_scratch;
+use crate::coordinator::parallel::{effective_threads, parallel_map_scratch};
 use crate::data::dataset::{Dataset, Labels, TaskKind};
+use crate::data::sorted_index::SortedIndex;
+use crate::error::{Result, UdtError};
 use crate::selection::generic::best_split_on_feat_generic;
 use crate::selection::heuristic::Criterion;
 use crate::selection::split::SplitPredicate;
-use crate::error::{Result, UdtError};
 use crate::selection::superfast::{
     best_split_on_feat_with, FeatureView, LabelsView, Scratch, ScoredSplit,
 };
 
-/// Pending node: the row sets Algorithm 5 threads through the queue.
-struct WorkItem {
-    node_id: u32,
-    depth: u16,
-    /// All rows of this node.
-    rows: Vec<u32>,
-    /// Per feature: the node's numeric rows sorted ascending (`X^A`).
-    sorted_num: Vec<Vec<u32>>,
-    /// Per feature: values parallel to `sorted_num`.
-    sorted_vals: Vec<Vec<f64>>,
-    /// Per feature: the node's categorical rows grouped by category id.
-    sorted_cat_rows: Vec<Vec<u32>>,
-    /// Per feature: category ids parallel to `sorted_cat_rows`.
-    sorted_cat_ids: Vec<Vec<u32>>,
-    /// Per feature: class labels parallel to `sorted_num` (classification).
-    sorted_labs: Vec<Vec<u16>>,
-    /// Per feature: class labels parallel to `sorted_cat_rows`.
-    sorted_cat_labs: Vec<Vec<u16>>,
-    /// Regression only: the node's rows sorted ascending by target.
-    sorted_labels: Vec<u32>,
-}
-
-/// Outcome of processing one node.
+/// Outcome of processing one frontier node.
 struct Decision {
+    /// Level slot the decision belongs to.
+    slot: usize,
     node_id: u32,
     depth: u16,
     label: NodeLabel,
     n_samples: u32,
     /// `Some` when the node splits.
-    split: Option<SplitOutcome>,
-}
-
-struct SplitOutcome {
-    predicate: SplitPredicate,
-    pos: WorkPayload,
-    neg: WorkPayload,
-}
-
-struct WorkPayload {
-    rows: Vec<u32>,
-    sorted_num: Vec<Vec<u32>>,
-    sorted_vals: Vec<Vec<f64>>,
-    sorted_cat_rows: Vec<Vec<u32>>,
-    sorted_cat_ids: Vec<Vec<u32>>,
-    sorted_labs: Vec<Vec<u16>>,
-    sorted_cat_labs: Vec<Vec<u16>>,
-    sorted_labels: Vec<u32>,
+    predicate: Option<SplitPredicate>,
 }
 
 /// Per-worker scratch: selection buffers, the pseudo-label buffer for the
-/// regression label-split strategy, class-count buffer, and the positive-
-/// row bitmask used by partitioning.
+/// regression label-split strategy, and the class-count buffer.
 struct BuildScratch {
     selection: Scratch,
     pseudo: Vec<u16>,
     class_counts: Vec<f64>,
-    posmask: Vec<u64>,
 }
 
 impl BuildScratch {
@@ -99,7 +67,6 @@ impl BuildScratch {
             selection: Scratch::new(),
             pseudo: Vec::new(),
             class_counts: Vec::new(),
-            posmask: Vec::new(),
         }
     }
 }
@@ -108,12 +75,37 @@ impl BuildScratch {
 struct FitCtx<'a> {
     ds: &'a Dataset,
     config: &'a TrainConfig,
-    /// Per column: does it contain categorical/missing cells anywhere?
-    col_has_nonnum: Vec<bool>,
+    /// The dataset's cached root sort (also provides per-column
+    /// has-categorical/missing flags).
+    index: &'a SortedIndex,
 }
 
 /// Train a tree over `rows` of `ds`.
 pub fn fit_rows(ds: &Dataset, rows: &[u32], config: &TrainConfig) -> Result<Tree> {
+    fit_rows_masked(ds, rows, config, None)
+}
+
+/// Train a tree over `rows`, optionally restricted to the features whose
+/// `active` flag is true (forest feature bagging). Masked features never
+/// produce split candidates; predicates still index the full feature
+/// space, so the tree predicts over the original dataset shape.
+pub fn fit_rows_masked(
+    ds: &Dataset,
+    rows: &[u32],
+    config: &TrainConfig,
+    active: Option<&[bool]>,
+) -> Result<Tree> {
+    fit_rows_with_stats(ds, rows, config, active).map(|(tree, _)| tree)
+}
+
+/// [`fit_rows_masked`], additionally returning the arena byte accounting
+/// (perf instrumentation for benches and the zero-allocation tests).
+pub fn fit_rows_with_stats(
+    ds: &Dataset,
+    rows: &[u32],
+    config: &TrainConfig,
+    active: Option<&[bool]>,
+) -> Result<(Tree, ArenaStats)> {
     if rows.is_empty() {
         return Err(UdtError::data("cannot fit on an empty row set"));
     }
@@ -123,9 +115,16 @@ pub fn fit_rows(ds: &Dataset, rows: &[u32], config: &TrainConfig) -> Result<Tree
     if config.max_depth < 1 {
         return Err(UdtError::invalid_config("max_depth must be >= 1"));
     }
+    if let Some(mask) = active {
+        if mask.len() != ds.n_features() {
+            return Err(UdtError::invalid_config(format!(
+                "feature mask has {} entries but the dataset has {} features",
+                mask.len(),
+                ds.n_features()
+            )));
+        }
+    }
 
-    // Root pre-sort (Algorithm 5 line 2): numeric (row, value) pairs per
-    // feature, filtered to the requested row subset.
     let member = membership_mask(ds.n_rows(), rows);
     if member.iter().filter(|&&m| m).count() != rows.len() {
         return Err(UdtError::data(
@@ -133,84 +132,30 @@ pub fn fit_rows(ds: &Dataset, rows: &[u32], config: &TrainConfig) -> Result<Tree
         ));
     }
     let full = rows.len() == ds.n_rows();
-    let mut sorted_num = Vec::with_capacity(ds.n_features());
-    let mut sorted_vals = Vec::with_capacity(ds.n_features());
-    let mut sorted_cat_rows = Vec::with_capacity(ds.n_features());
-    let mut sorted_cat_ids = Vec::with_capacity(ds.n_features());
-    for c in &ds.columns {
-        let (r_all, v_all) = c.sorted_numeric();
-        let (cr_all, ci_all) = c.sorted_categorical();
-        if full {
-            sorted_num.push(r_all);
-            sorted_vals.push(v_all);
-            sorted_cat_rows.push(cr_all);
-            sorted_cat_ids.push(ci_all);
-        } else {
-            let mut r_f = Vec::new();
-            let mut v_f = Vec::new();
-            for (r, v) in r_all.into_iter().zip(v_all) {
-                if member[r as usize] {
-                    r_f.push(r);
-                    v_f.push(v);
-                }
-            }
-            sorted_num.push(r_f);
-            sorted_vals.push(v_f);
-            let mut cr_f = Vec::new();
-            let mut ci_f = Vec::new();
-            for (r, i) in cr_all.into_iter().zip(ci_all) {
-                if member[r as usize] {
-                    cr_f.push(r);
-                    ci_f.push(i);
-                }
-            }
-            sorted_cat_rows.push(cr_f);
-            sorted_cat_ids.push(ci_f);
-        }
-    }
-    // Classification: inline label arrays parallel to the sorted lists.
-    let (sorted_labs, sorted_cat_labs) = match &ds.labels {
-        Labels::Class { ids, .. } => (
-            sorted_num
-                .iter()
-                .map(|l| l.iter().map(|&r| ids[r as usize]).collect())
-                .collect(),
-            sorted_cat_rows
-                .iter()
-                .map(|l| l.iter().map(|&r| ids[r as usize]).collect())
-                .collect(),
-        ),
-        Labels::Reg { .. } => (
-            vec![Vec::new(); ds.n_features()],
-            vec![Vec::new(); ds.n_features()],
-        ),
-    };
-    let sorted_labels = match &ds.labels {
-        Labels::Reg { values } => {
-            let mut idx = rows.to_vec();
-            idx.sort_by(|&a, &b| {
-                values[a as usize]
-                    .partial_cmp(&values[b as usize])
-                    .unwrap()
-                    .then(a.cmp(&b))
-            });
-            idx
-        }
-        Labels::Class { .. } => Vec::new(),
+
+    // Root arena build (Algorithm 5 line 2) from the dataset-level sort
+    // cache: the first fit on `ds` sorts, every later fit only filters.
+    let index = ds.sorted_index();
+    let want_bylab = matches!(&ds.labels, Labels::Reg { .. })
+        && config.reg_strategy == RegStrategy::LabelSplit;
+    let mut frontier = Frontier::build_root(
+        ds,
+        index,
+        rows,
+        &member,
+        full,
+        active,
+        want_bylab,
+        Tree::ROOT,
+    );
+    let bytes_at_root = frontier.arena_bytes();
+    let mut stats = ArenaStats {
+        bytes_at_root,
+        peak_bytes: bytes_at_root,
+        final_bytes: bytes_at_root,
     };
 
-    let ctx = FitCtx {
-        ds,
-        config,
-        col_has_nonnum: ds
-            .columns
-            .iter()
-            .map(|c| {
-                let s = c.stats();
-                s.n_cat + s.n_missing > 0
-            })
-            .collect(),
-    };
+    let ctx = FitCtx { ds, config, index };
 
     let mut tree = Tree {
         nodes: Vec::new(),
@@ -220,33 +165,27 @@ pub fn fit_rows(ds: &Dataset, rows: &[u32], config: &TrainConfig) -> Result<Tree
     };
     tree.nodes.push(placeholder_node()); // root slot
 
-    let mut frontier = vec![WorkItem {
-        node_id: Tree::ROOT,
-        depth: 1,
-        rows: rows.to_vec(),
-        sorted_num,
-        sorted_vals,
-        sorted_cat_rows,
-        sorted_cat_ids,
-        sorted_labs,
-        sorted_cat_labs,
-        sorted_labels,
-    }];
+    let n_threads = effective_threads(config.n_threads).max(1);
 
-    let n_threads = crate::coordinator::parallel::effective_threads(config.n_threads).max(1);
-
-    while !frontier.is_empty() {
-        let items = std::mem::take(&mut frontier);
+    loop {
+        let n_level = frontier.n_nodes();
+        if n_level == 0 {
+            break;
+        }
         // Frontier-level parallelism; small frontiers instead parallelize
         // the per-node selection across features.
-        let feature_threads = if items.len() < n_threads { n_threads } else { 1 };
+        let feature_threads = if n_level < n_threads { n_threads } else { 1 };
         let decisions: Vec<Decision> = parallel_map_scratch(
-            items,
+            (0..n_level).collect(),
             n_threads,
             BuildScratch::new,
-            |item, scratch| process_node(&ctx, item, scratch, feature_threads),
+            |slot, scratch| process_node(&ctx, &frontier, slot, scratch, feature_threads),
         );
 
+        // Apply decisions in slot order: node ids stay deterministic
+        // regardless of worker interleaving.
+        let mut splits: Vec<SplitTask> = Vec::new();
+        let mut children: Vec<(u32, u32)> = Vec::new();
         for d in decisions {
             {
                 let node = &mut tree.nodes[d.node_id as usize];
@@ -255,41 +194,34 @@ pub fn fit_rows(ds: &Dataset, rows: &[u32], config: &TrainConfig) -> Result<Tree
                 node.depth = d.depth;
             }
             tree.depth = tree.depth.max(d.depth);
-            if let Some(s) = d.split {
+            if let Some(predicate) = d.predicate {
                 let pos_id = tree.nodes.len() as u32;
                 let neg_id = pos_id + 1;
-                tree.nodes[d.node_id as usize].split = Some(s.predicate);
+                tree.nodes[d.node_id as usize].split = Some(predicate);
                 tree.nodes[d.node_id as usize].children = Some((pos_id, neg_id));
                 tree.nodes.push(placeholder_node());
                 tree.nodes.push(placeholder_node());
-                frontier.push(WorkItem {
-                    node_id: pos_id,
-                    depth: d.depth + 1,
-                    rows: s.pos.rows,
-                    sorted_num: s.pos.sorted_num,
-                    sorted_vals: s.pos.sorted_vals,
-                    sorted_cat_rows: s.pos.sorted_cat_rows,
-                    sorted_cat_ids: s.pos.sorted_cat_ids,
-                    sorted_labs: s.pos.sorted_labs,
-                    sorted_cat_labs: s.pos.sorted_cat_labs,
-                    sorted_labels: s.pos.sorted_labels,
+                splits.push(SplitTask {
+                    slot: d.slot,
+                    predicate,
+                    n_pos: 0,
                 });
-                frontier.push(WorkItem {
-                    node_id: neg_id,
-                    depth: d.depth + 1,
-                    rows: s.neg.rows,
-                    sorted_num: s.neg.sorted_num,
-                    sorted_vals: s.neg.sorted_vals,
-                    sorted_cat_rows: s.neg.sorted_cat_rows,
-                    sorted_cat_ids: s.neg.sorted_cat_ids,
-                    sorted_labs: s.neg.sorted_labs,
-                    sorted_cat_labs: s.neg.sorted_cat_labs,
-                    sorted_labels: s.neg.sorted_labels,
-                });
+                children.push((pos_id, neg_id));
             }
         }
+        if splits.is_empty() {
+            break; // every frontier node became a leaf
+        }
+
+        // In-place stable partition: rows (+ regression by-target order)
+        // sequentially, then all feature arenas in parallel.
+        frontier.partition_rows(ds, &mut splits);
+        frontier.partition_features(&splits, n_threads);
+        frontier.advance(&splits, &children);
+        stats.peak_bytes = stats.peak_bytes.max(frontier.arena_bytes());
     }
-    Ok(tree)
+    stats.final_bytes = frontier.arena_bytes();
+    Ok((tree, stats))
 }
 
 fn placeholder_node() -> Node {
@@ -310,29 +242,33 @@ fn membership_mask(n: usize, rows: &[u32]) -> Vec<bool> {
     mask
 }
 
-/// Paper's `split_node`: label the node, pick the best split, partition.
+/// Paper's `split_node`: label the node and pick the best split. The
+/// partition itself happens arena-wide after the whole level decided.
 fn process_node(
     ctx: &FitCtx,
-    item: WorkItem,
+    frontier: &Frontier,
+    slot: usize,
     scratch: &mut BuildScratch,
     feature_threads: usize,
 ) -> Decision {
     let ds = ctx.ds;
     let config = ctx.config;
-    let (label, pure, reg_stats) = node_label(ds, &item.rows, &mut scratch.class_counts);
-    let n_samples = item.rows.len() as u32;
+    let node = frontier.node(slot);
+    let rows = frontier.node_rows(slot);
+    let (label, pure, reg_stats) = node_label(ds, rows, &mut scratch.class_counts);
     let mut decision = Decision {
-        node_id: item.node_id,
-        depth: item.depth,
+        slot,
+        node_id: node.node_id,
+        depth: node.depth,
         label,
-        n_samples,
-        split: None,
+        n_samples: rows.len() as u32,
+        predicate: None,
     };
 
     // Stopping rules (the "full-fledged" tree only stops on hard limits).
     if pure
-        || item.depth as usize >= config.max_depth
-        || item.rows.len() < config.min_samples_split.max(2)
+        || node.depth as usize >= config.max_depth
+        || rows.len() < config.min_samples_split.max(2)
     {
         return decision;
     }
@@ -341,7 +277,6 @@ fn process_node(
         selection,
         pseudo,
         class_counts,
-        posmask,
     } = scratch;
 
     // Build the label view. Regression with the paper's strategy first
@@ -360,15 +295,15 @@ fn process_node(
             RegStrategy::DirectSse => (LabelsView::Reg { values }, Criterion::Sse),
             RegStrategy::LabelSplit => {
                 let Some((threshold, _)) =
-                    label_split::best_label_split(&item.sorted_labels, values)
+                    label_split::best_label_split(frontier.node_bylab(slot), values)
                 else {
                     return decision; // constant labels — leaf
                 };
                 if pseudo.len() < ds.n_rows() {
                     pseudo.resize(ds.n_rows(), 0);
                 }
-                label_split::binarize(&item.rows, values, threshold, pseudo);
-                for &r in &item.rows {
+                label_split::binarize(rows, values, threshold, pseudo);
+                for &r in rows {
                     pseudo_counts[pseudo[r as usize] as usize] += 1.0;
                 }
                 (
@@ -390,12 +325,14 @@ fn process_node(
     };
 
     // Minimum-gain test reference point.
-    let baseline = baseline_score(&labels_view, criterion, &item.rows);
+    let baseline = baseline_score(&labels_view, criterion, rows);
 
     // Best split across features (Algorithm 4 best_split_on_all_feats).
     let best = best_across_features(
         ctx,
-        &item,
+        frontier,
+        slot,
+        rows,
         &labels_view,
         counts_for_view,
         reg_stats,
@@ -411,167 +348,9 @@ fn process_node(
         return decision; // no informative split
     }
 
-    let predicate = SplitPredicate {
+    decision.predicate = Some(SplitPredicate {
         feature,
         op: best.op,
-    };
-
-    // eval_and_split + filter_sorted_nums: evaluate the predicate once per
-    // node row, marking positives in the bitmask; every sorted list (and
-    // the sorted-labels list) then filters by bit test.
-    let words = ds.n_rows().div_ceil(64);
-    if posmask.len() < words {
-        posmask.resize(words, 0);
-    }
-    let col = &ds.columns[feature];
-    let mut rows_pos = Vec::new();
-    let mut rows_neg = Vec::new();
-    for &r in &item.rows {
-        if predicate.op.eval(col.get(r as usize)) {
-            posmask[(r >> 6) as usize] |= 1u64 << (r & 63);
-            rows_pos.push(r);
-        } else {
-            rows_neg.push(r);
-        }
-    }
-    debug_assert!(!rows_pos.is_empty() && !rows_neg.is_empty());
-
-    let in_pos = |r: u32| posmask[(r >> 6) as usize] >> (r & 63) & 1 == 1;
-    let mut pos_sorted = Vec::with_capacity(ds.n_features());
-    let mut neg_sorted = Vec::with_capacity(ds.n_features());
-    let mut pos_vals = Vec::with_capacity(ds.n_features());
-    let mut neg_vals = Vec::with_capacity(ds.n_features());
-    // Positive fraction of node rows — used to pre-size the filtered
-    // lists so pushes never reallocate.
-    let pos_frac = rows_pos.len() as f64 / item.rows.len() as f64;
-    let cap = |len: usize, frac: f64| ((len as f64 * frac) as usize + 16).min(len);
-    let has_labs = !item.sorted_labs.is_empty() && !item.sorted_labs[0].is_empty()
-        || matches!(&ds.labels, Labels::Class { .. });
-    let mut pos_labs = Vec::with_capacity(ds.n_features());
-    let mut neg_labs = Vec::with_capacity(ds.n_features());
-    for ((f_rows, f_vals), f_labs) in item
-        .sorted_num
-        .iter()
-        .zip(&item.sorted_vals)
-        .zip(&item.sorted_labs)
-    {
-        let mut pr = Vec::with_capacity(cap(f_rows.len(), pos_frac));
-        let mut pv = Vec::with_capacity(cap(f_rows.len(), pos_frac));
-        let mut pl = Vec::with_capacity(if has_labs { cap(f_rows.len(), pos_frac) } else { 0 });
-        let mut nr = Vec::with_capacity(cap(f_rows.len(), 1.0 - pos_frac));
-        let mut nv = Vec::with_capacity(cap(f_rows.len(), 1.0 - pos_frac));
-        let mut nl = Vec::with_capacity(if has_labs { cap(f_rows.len(), 1.0 - pos_frac) } else { 0 });
-        if has_labs {
-            for ((&r, &v), &y) in f_rows.iter().zip(f_vals).zip(f_labs) {
-                if in_pos(r) {
-                    pr.push(r);
-                    pv.push(v);
-                    pl.push(y);
-                } else {
-                    nr.push(r);
-                    nv.push(v);
-                    nl.push(y);
-                }
-            }
-        } else {
-            for (&r, &v) in f_rows.iter().zip(f_vals) {
-                if in_pos(r) {
-                    pr.push(r);
-                    pv.push(v);
-                } else {
-                    nr.push(r);
-                    nv.push(v);
-                }
-            }
-        }
-        pos_sorted.push(pr);
-        pos_vals.push(pv);
-        pos_labs.push(pl);
-        neg_sorted.push(nr);
-        neg_vals.push(nv);
-        neg_labs.push(nl);
-    }
-    let mut pos_cat_rows = Vec::with_capacity(ds.n_features());
-    let mut neg_cat_rows = Vec::with_capacity(ds.n_features());
-    let mut pos_cat_ids = Vec::with_capacity(ds.n_features());
-    let mut neg_cat_ids = Vec::with_capacity(ds.n_features());
-    let mut pos_cat_labs = Vec::with_capacity(ds.n_features());
-    let mut neg_cat_labs = Vec::with_capacity(ds.n_features());
-    for ((f_rows, f_ids), f_labs) in item
-        .sorted_cat_rows
-        .iter()
-        .zip(&item.sorted_cat_ids)
-        .zip(&item.sorted_cat_labs)
-    {
-        let mut pr = Vec::with_capacity(cap(f_rows.len(), pos_frac));
-        let mut pi = Vec::with_capacity(cap(f_rows.len(), pos_frac));
-        let mut pl = Vec::with_capacity(if has_labs { cap(f_rows.len(), pos_frac) } else { 0 });
-        let mut nr = Vec::with_capacity(cap(f_rows.len(), 1.0 - pos_frac));
-        let mut ni = Vec::with_capacity(cap(f_rows.len(), 1.0 - pos_frac));
-        let mut nl = Vec::with_capacity(if has_labs { cap(f_rows.len(), 1.0 - pos_frac) } else { 0 });
-        if has_labs {
-            for ((&r, &id), &y) in f_rows.iter().zip(f_ids).zip(f_labs) {
-                if in_pos(r) {
-                    pr.push(r);
-                    pi.push(id);
-                    pl.push(y);
-                } else {
-                    nr.push(r);
-                    ni.push(id);
-                    nl.push(y);
-                }
-            }
-        } else {
-            for (&r, &id) in f_rows.iter().zip(f_ids) {
-                if in_pos(r) {
-                    pr.push(r);
-                    pi.push(id);
-                } else {
-                    nr.push(r);
-                    ni.push(id);
-                }
-            }
-        }
-        pos_cat_rows.push(pr);
-        pos_cat_ids.push(pi);
-        pos_cat_labs.push(pl);
-        neg_cat_rows.push(nr);
-        neg_cat_ids.push(ni);
-        neg_cat_labs.push(nl);
-    }
-    let (pos_labels, neg_labels) = if item.sorted_labels.is_empty() {
-        (Vec::new(), Vec::new())
-    } else {
-        item.sorted_labels.iter().partition(|&&r| in_pos(r))
-    };
-
-    // Clear only the bits we set (the mask is worker-reused).
-    for &r in &rows_pos {
-        posmask[(r >> 6) as usize] &= !(1u64 << (r & 63));
-    }
-
-    decision.split = Some(SplitOutcome {
-        predicate,
-        pos: WorkPayload {
-            rows: rows_pos,
-            sorted_num: pos_sorted,
-            sorted_vals: pos_vals,
-            sorted_cat_rows: pos_cat_rows,
-            sorted_cat_ids: pos_cat_ids,
-            sorted_labs: pos_labs,
-            sorted_cat_labs: pos_cat_labs,
-            sorted_labels: pos_labels,
-        },
-        neg: WorkPayload {
-            rows: rows_neg,
-            sorted_num: neg_sorted,
-            sorted_vals: neg_vals,
-            sorted_cat_rows: neg_cat_rows,
-            sorted_cat_ids: neg_cat_ids,
-            sorted_labs: neg_labs,
-            sorted_cat_labs: neg_cat_labs,
-            sorted_labels: neg_labels,
-        },
     });
     decision
 }
@@ -637,7 +416,9 @@ fn baseline_score(labels: &LabelsView, criterion: Criterion, rows: &[u32]) -> f6
 #[allow(clippy::too_many_arguments)]
 fn best_across_features(
     ctx: &FitCtx,
-    item: &WorkItem,
+    frontier: &Frontier,
+    slot: usize,
+    rows: &[u32],
     labels: &LabelsView,
     class_counts: &[f64],
     reg_stats: Option<(f64, f64)>,
@@ -647,20 +428,25 @@ fn best_across_features(
 ) -> Option<(usize, ScoredSplit)> {
     let ds = ctx.ds;
     let select = |f: usize, sel: &mut Scratch| -> Option<ScoredSplit> {
+        if !frontier.feature_active(f) {
+            return None; // masked out by a forest bag
+        }
+        let (sorted_num, sorted_vals, sorted_labs) = frontier.num_slices(slot, f);
+        let (sorted_cat_rows, sorted_cat_ids, sorted_cat_labs) = frontier.cat_slices(slot, f);
         let view = FeatureView {
             feature: f,
             col: &ds.columns[f],
-            rows: &item.rows,
-            sorted_num: &item.sorted_num[f],
-            sorted_vals: &item.sorted_vals[f],
+            rows,
+            sorted_num,
+            sorted_vals,
             class_counts,
             reg_stats,
-            col_has_nonnum: ctx.col_has_nonnum[f],
-            sorted_cat_rows: &item.sorted_cat_rows[f],
-            sorted_cat_ids: &item.sorted_cat_ids[f],
+            col_has_nonnum: ctx.index.features[f].has_nonnum,
+            sorted_cat_rows,
+            sorted_cat_ids,
             cat_lists_valid: true,
-            sorted_labs: &item.sorted_labs[f],
-            sorted_cat_labs: &item.sorted_cat_labs[f],
+            sorted_labs,
+            sorted_cat_labs,
         };
         match &ctx.config.backend {
             Backend::Superfast => best_split_on_feat_with(&view, labels, criterion, sel),
@@ -804,7 +590,7 @@ mod tests {
 
     #[test]
     fn sorted_lists_stay_sorted_down_the_tree() {
-        // Production path (filtered sorted lists, skipped stats passes,
+        // Production path (maintained arena lists, skipped stats passes,
         // bitmask partition) must produce the same tree as the oracle
         // generic engine that recomputes everything from the raw column.
         let mut spec = crate::data::synth::SynthSpec::classification("t", 800, 5, 2);
@@ -825,6 +611,78 @@ mod tests {
         assert_eq!(t1.n_nodes(), t2.n_nodes());
         for (a, b) in t1.nodes.iter().zip(&t2.nodes) {
             assert_eq!(a.split, b.split);
+        }
+    }
+
+    #[test]
+    fn arena_never_grows_after_root() {
+        let mut spec = crate::data::synth::SynthSpec::classification("t", 1200, 6, 3);
+        spec.cat_frac = 0.3;
+        spec.missing_frac = 0.05;
+        let ds = crate::data::synth::generate_classification(&spec, 9);
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let (tree, stats) =
+            fit_rows_with_stats(&ds, &rows, &TrainConfig::default(), None).unwrap();
+        assert!(tree.n_nodes() > 1);
+        assert!(stats.bytes_at_root > 0);
+        // Zero per-node heap allocation for row/value/label lists: the
+        // arena footprint is constant from root to finish.
+        assert_eq!(stats.peak_bytes, stats.bytes_at_root);
+        assert_eq!(stats.final_bytes, stats.bytes_at_root);
+    }
+
+    #[test]
+    fn masked_features_are_never_split_on() {
+        let spec = crate::data::synth::SynthSpec::classification("t", 500, 6, 2);
+        let ds = crate::data::synth::generate_classification(&spec, 13);
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let active = vec![true, false, true, false, false, true];
+        let tree = fit_rows_masked(&ds, &rows, &TrainConfig::default(), Some(&active)).unwrap();
+        for n in &tree.nodes {
+            if let Some(s) = &n.split {
+                assert!(active[s.feature], "split on masked feature {}", s.feature);
+            }
+        }
+        // Wrong-arity masks are rejected.
+        assert!(matches!(
+            fit_rows_masked(&ds, &rows, &TrainConfig::default(), Some(&[true])),
+            Err(UdtError::InvalidConfig(_))
+        ));
+    }
+
+    #[test]
+    fn mask_equivalent_to_blanked_columns() {
+        // Masking a feature must build the same tree as materializing the
+        // dataset with that column all-Missing (the pre-arena semantics).
+        let mut spec = crate::data::synth::SynthSpec::classification("t", 400, 5, 2);
+        spec.cat_frac = 0.2;
+        let ds = crate::data::synth::generate_classification(&spec, 17);
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let active = vec![true, true, false, true, false];
+
+        let masked = fit_rows_masked(&ds, &rows, &TrainConfig::default(), Some(&active)).unwrap();
+
+        let mut columns = ds.columns.clone();
+        for (f, col) in columns.iter_mut().enumerate() {
+            if !active[f] {
+                for v in &mut col.values {
+                    *v = Value::Missing;
+                }
+            }
+        }
+        let blanked = Dataset::new(
+            ds.name.clone(),
+            columns,
+            ds.labels.clone(),
+            std::sync::Arc::clone(&ds.interner),
+        )
+        .unwrap();
+        let oracle = fit_rows(&blanked, &rows, &TrainConfig::default()).unwrap();
+
+        assert_eq!(masked.n_nodes(), oracle.n_nodes());
+        for (a, b) in masked.nodes.iter().zip(&oracle.nodes) {
+            assert_eq!(a.split, b.split);
+            assert_eq!(a.n_samples, b.n_samples);
         }
     }
 }

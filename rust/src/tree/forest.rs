@@ -8,8 +8,9 @@
 //! assume unique rows, and subagging is statistically equivalent to
 //! bootstrap bagging at half the sample rate. At prediction time the
 //! ensemble majority-votes (classification) or averages (regression).
-//! Feature masking blanks the masked columns of the per-tree view, so
-//! the single-tree builder is reused untouched.
+//! Feature bagging hands the builder an active-feature mask — masked
+//! features simply produce no split candidates — so all trees share one
+//! dataset (and its sort-index cache) with no per-tree copies.
 
 use super::{require_task, NodeLabel, TrainConfig, Tree};
 use crate::data::dataset::{Dataset, TaskKind};
@@ -77,12 +78,21 @@ pub struct Forest {
 }
 
 impl Forest {
-    /// Train `n_trees` bagged trees.
+    /// Train `n_trees` bagged trees. Every bag trains against the same
+    /// dataset (and therefore the same [`crate::data::SortedIndex`]
+    /// cache — each column is sorted exactly once for the whole
+    /// ensemble); feature bagging passes an active-feature mask to the
+    /// builder instead of materializing a blanked dataset copy per tree.
     pub fn fit(ds: &Dataset, config: &ForestConfig) -> Result<Forest> {
         config.validate()?;
-        let mut rng = Rng::new(config.seed);
         let n = ds.n_rows();
-        let sample_n = ((n as f64 * config.sample_frac) as usize).max(1);
+        if n == 0 {
+            return Err(UdtError::data("cannot fit a forest on an empty dataset"));
+        }
+        let mut rng = Rng::new(config.seed);
+        // Round (not truncate) the subsample size so e.g. 0.7 × 99 draws
+        // 69 rows, not 68.
+        let sample_n = ((n as f64 * config.sample_frac).round() as usize).clamp(1, n);
         let keep_features = ((ds.n_features() as f64 * config.feature_frac).ceil() as usize)
             .clamp(1, ds.n_features());
 
@@ -92,31 +102,18 @@ impl Forest {
             let mut tree_rng = rng.fork(t as u64);
             // Subsample rows without replacement (partial Fisher–Yates).
             tree_rng.shuffle(&mut all_rows);
-            let rows: Vec<u32> = all_rows[..sample_n.min(n)].to_vec();
-            // Feature mask: blank out unused columns in a view copy.
+            let rows: Vec<u32> = all_rows[..sample_n].to_vec();
+            // Feature bag: keep a random subset of columns active.
             let mut feats: Vec<usize> = (0..ds.n_features()).collect();
             tree_rng.shuffle(&mut feats);
-            let masked: std::collections::HashSet<usize> =
-                feats[keep_features..].iter().copied().collect();
-            let tree = if masked.is_empty() {
+            let tree = if keep_features == ds.n_features() {
                 Tree::fit_rows(ds, &rows, &config.tree)?
             } else {
-                let mut columns = ds.columns.clone();
-                for (f, col) in columns.iter_mut().enumerate() {
-                    if masked.contains(&f) {
-                        for v in &mut col.values {
-                            *v = Value::Missing;
-                        }
-                    }
+                let mut active = vec![false; ds.n_features()];
+                for &f in &feats[..keep_features] {
+                    active[f] = true;
                 }
-                let view = Dataset {
-                    name: ds.name.clone(),
-                    columns,
-                    labels: ds.labels.clone(),
-                    interner: ds.interner.clone(),
-                    class_names: ds.class_names.clone(),
-                };
-                Tree::fit_rows(&view, &rows, &config.tree)?
+                Tree::fit_rows_masked(ds, &rows, &config.tree, Some(&active))?
             };
             trees.push(tree);
         }
@@ -345,5 +342,43 @@ mod tests {
             let row = ds.row(r);
             assert_eq!(forest.predict_values(&row), forest.predict_ds(&ds, r));
         }
+    }
+
+    #[test]
+    fn ensemble_sorts_each_column_exactly_once() {
+        let spec = SynthSpec::classification("fo", 600, 6, 2);
+        let ds = generate_any(&spec, 85);
+        assert_eq!(ds.sort_index_builds(), 0);
+        let forest = Forest::fit(
+            &ds,
+            &ForestConfig {
+                n_trees: 6,
+                feature_frac: 0.5,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(forest.trees.len(), 6);
+        // One SortedIndex build for the whole ensemble — every bag
+        // filtered the shared cache instead of re-sorting.
+        assert_eq!(ds.sort_index_builds(), 1);
+    }
+
+    #[test]
+    fn subsample_size_rounds() {
+        // 0.5 × 101 → 51 rows (round-half-up), not 50 (truncation).
+        let spec = SynthSpec::classification("fs", 101, 3, 2);
+        let ds = generate_any(&spec, 87);
+        let forest = Forest::fit(
+            &ds,
+            &ForestConfig {
+                n_trees: 1,
+                sample_frac: 0.5,
+                feature_frac: 1.0,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(forest.trees[0].nodes[0].n_samples, 51);
     }
 }

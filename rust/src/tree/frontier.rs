@@ -1,0 +1,690 @@
+//! Double-buffered arena frontier for the UDT builder.
+//!
+//! The builder used to thread eight owned `Vec` families through its
+//! work queue and clone-filter all of them into fresh allocations at
+//! every split, so allocator churn — not split selection — dominated
+//! deep trees, and peak memory was `O(K·M·live-nodes)`. This module
+//! replaces that with **flat per-feature arenas partitioned in place**:
+//!
+//! * each feature's sorted numeric `(rows, values, labels)` and grouped
+//!   categorical `(rows, ids, labels)` lists for an entire tree level
+//!   live in one contiguous arena, double-buffered (front/back);
+//! * the node row lists (and the regression by-target order) live in a
+//!   row arena with the same discipline;
+//! * a node is just an `(offset, len)` range into every arena — no node
+//!   owns any list;
+//! * `split_node` partitions each range from the front buffer into the
+//!   back buffer with a **stable two-pointer pass** (positives first,
+//!   negatives after, both in original order), then the buffers flip.
+//!
+//! ## Invariants
+//!
+//! 1. **Stability.** The partition writes positives to
+//!    `back[off..off+n_pos]` and negatives to `back[off+n_pos..off+len]`
+//!    preserving the front buffer's relative order on both sides. Since
+//!    the root lists are sorted (numeric ascending by `(value, row)`,
+//!    categorical grouped by id, regression rows by target), every
+//!    node's range **stays sorted for free** down the whole tree — the
+//!    paper's "maintained sortedness" with zero per-node allocation.
+//! 2. **Range disjointness / tiling.** The two children of a split node
+//!    exactly tile the parent's range in every arena: the positive child
+//!    gets `[off, off+n_pos)`, the negative child `[off+n_pos, off+len)`.
+//!    Ranges of distinct nodes are therefore disjoint at every level,
+//!    which is what lets the partition phase run workers over disjoint
+//!    `&mut` arena regions with no locking (parallelism is per feature:
+//!    each worker owns one feature's arrays outright).
+//! 3. **Leaves leave garbage.** Ranges of nodes that became leaves are
+//!    simply not copied to the back buffer; their back-buffer bytes are
+//!    stale and must never be read. No live node references them, so the
+//!    only rule is: a range is valid only in the *current* front buffer.
+//! 4. **Fixed footprint.** Both buffers are allocated once from the root
+//!    lists and never grow: peak arena memory is exactly
+//!    `2 × O(Σ_f |sorted lists_f|)` (≈ `2×O(K·M)`), and after the root
+//!    build the builder performs **zero** heap allocations for
+//!    row/value/label lists ([`Frontier::arena_bytes`] is the
+//!    enforcement hook — see `rust/tests/prop_builder.rs`).
+//!
+//! The level-wide positive-row bitmask is the only shared partition
+//! state; it is filled once per level (node row sets are disjoint) and
+//! read concurrently by the per-feature partition workers.
+
+use crate::coordinator::parallel::parallel_map;
+use crate::data::dataset::{Dataset, Labels};
+use crate::data::sorted_index::SortedIndex;
+use crate::selection::split::SplitPredicate;
+
+/// Byte accounting of the double-buffered arenas (row/value/label lists
+/// only — the lists the old builder cloned per node).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ArenaStats {
+    /// Arena footprint right after the root build.
+    pub bytes_at_root: usize,
+    /// Largest arena footprint observed at any level. Equal to
+    /// `bytes_at_root` when the zero-per-node-allocation contract holds.
+    pub peak_bytes: usize,
+    /// Arena footprint when the build finished.
+    pub final_bytes: usize,
+}
+
+/// One pending node of the current level: tree bookkeeping plus its
+/// range in the row arena (per-feature ranges live in the frontier's
+/// flat range tables).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct LevelNode {
+    pub node_id: u32,
+    /// Depth of this node (root = 1).
+    pub depth: u16,
+    pub row_off: u32,
+    pub row_len: u32,
+}
+
+/// A split decision to apply to the arenas.
+pub(crate) struct SplitTask {
+    /// Index of the splitting node in the current level.
+    pub slot: usize,
+    pub predicate: SplitPredicate,
+    /// Positive-row count of the node; filled by
+    /// [`Frontier::partition_rows`].
+    pub n_pos: u32,
+}
+
+/// Double-buffered per-feature arenas. Inactive features (masked out by
+/// a forest bag) keep empty arenas and are skipped everywhere.
+#[derive(Debug, Default)]
+struct FeatureArena {
+    active: bool,
+    num_rows: [Vec<u32>; 2],
+    num_vals: [Vec<f64>; 2],
+    /// Classification only (empty for regression).
+    num_labs: [Vec<u16>; 2],
+    cat_rows: [Vec<u32>; 2],
+    cat_ids: [Vec<u32>; 2],
+    cat_labs: [Vec<u16>; 2],
+}
+
+/// The arena frontier of one `fit_rows` call.
+pub(crate) struct Frontier {
+    /// Feature count (including inactive features).
+    k: usize,
+    /// Which buffer of every pair is the front (0 or 1).
+    cur: usize,
+    /// Node row lists (root order = caller's row order).
+    rows: [Vec<u32>; 2],
+    /// Regression label-split only: node rows ascending by target.
+    bylab: [Vec<u32>; 2],
+    feats: Vec<FeatureArena>,
+    /// Current level's nodes.
+    nodes: Vec<LevelNode>,
+    next_nodes: Vec<LevelNode>,
+    /// `(offset, len)` into the numeric arenas, indexed `slot * k + f`.
+    num_ranges: Vec<(u32, u32)>,
+    /// `(offset, len)` into the categorical arenas, same indexing.
+    cat_ranges: Vec<(u32, u32)>,
+    next_num_ranges: Vec<(u32, u32)>,
+    next_cat_ranges: Vec<(u32, u32)>,
+    /// Level-wide positive-row bitmask over dataset row ids.
+    posmask: Vec<u64>,
+    /// Per `(feature, split)` positive counts `(n_pos_num, n_pos_cat)`,
+    /// indexed `f * n_splits + s`; filled by the partition workers.
+    pos_counts: Vec<(u32, u32)>,
+}
+
+#[inline]
+fn in_pos(mask: &[u64], r: u32) -> bool {
+    mask[(r >> 6) as usize] >> (r & 63) & 1 == 1
+}
+
+/// Front (shared) and back (exclusive) views of a buffer pair.
+fn split_pair<T>(pair: &mut [Vec<T>; 2], cur: usize) -> (&[T], &mut [T]) {
+    let (a, b) = pair.split_at_mut(1);
+    if cur == 0 {
+        (a[0].as_slice(), b[0].as_mut_slice())
+    } else {
+        (b[0].as_slice(), a[0].as_mut_slice())
+    }
+}
+
+/// Allocate the back buffer for a freshly-built front list.
+fn pair<T: Default + Clone>(front: Vec<T>) -> [Vec<T>; 2] {
+    let back = vec![T::default(); front.len()];
+    [front, back]
+}
+
+/// Stable two-pointer partition of one `(rows, payload, labels)` range
+/// from the front into the back buffer. Returns the positive count.
+fn partition_lists<V: Copy>(
+    rows: &mut [Vec<u32>; 2],
+    vals: &mut [Vec<V>; 2],
+    labs: &mut [Vec<u16>; 2],
+    cur: usize,
+    off: usize,
+    len: usize,
+    mask: &[u64],
+) -> u32 {
+    if len == 0 {
+        return 0;
+    }
+    let mut n_pos = 0usize;
+    for &r in &rows[cur][off..off + len] {
+        n_pos += in_pos(mask, r) as usize;
+    }
+    let has_labs = !labs[cur].is_empty();
+    let (fr, br) = split_pair(rows, cur);
+    let (fv, bv) = split_pair(vals, cur);
+    let (mut p, mut q) = (off, off + n_pos);
+    if has_labs {
+        let (fl, bl) = split_pair(labs, cur);
+        for i in off..off + len {
+            let r = fr[i];
+            let dst = if in_pos(mask, r) {
+                let d = p;
+                p += 1;
+                d
+            } else {
+                let d = q;
+                q += 1;
+                d
+            };
+            br[dst] = r;
+            bv[dst] = fv[i];
+            bl[dst] = fl[i];
+        }
+    } else {
+        for i in off..off + len {
+            let r = fr[i];
+            let dst = if in_pos(mask, r) {
+                let d = p;
+                p += 1;
+                d
+            } else {
+                let d = q;
+                q += 1;
+                d
+            };
+            br[dst] = r;
+            bv[dst] = fv[i];
+        }
+    }
+    n_pos as u32
+}
+
+impl Frontier {
+    /// Build the root arenas by filtering the dataset's cached sort
+    /// order down to `rows` (`member` is the row-membership mask, `full`
+    /// short-circuits the filter when `rows` covers the whole dataset).
+    /// Inactive features (forest feature masking) get empty arenas.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn build_root(
+        ds: &Dataset,
+        index: &SortedIndex,
+        rows: &[u32],
+        member: &[bool],
+        full: bool,
+        active: Option<&[bool]>,
+        want_bylab: bool,
+        root_id: u32,
+    ) -> Frontier {
+        let k = ds.n_features();
+        let class_ids: Option<&[u16]> = match &ds.labels {
+            Labels::Class { ids, .. } => Some(ids),
+            Labels::Reg { .. } => None,
+        };
+
+        let mut feats = Vec::with_capacity(k);
+        let mut num_ranges = Vec::with_capacity(k);
+        let mut cat_ranges = Vec::with_capacity(k);
+        for (f, fs) in index.features.iter().enumerate() {
+            if active.is_some_and(|m| !m[f]) {
+                feats.push(FeatureArena::default());
+                num_ranges.push((0u32, 0u32));
+                cat_ranges.push((0u32, 0u32));
+                continue;
+            }
+            let (nr, nv) = if full {
+                (fs.num_rows.clone(), fs.num_vals.clone())
+            } else {
+                let mut r = Vec::new();
+                let mut v = Vec::new();
+                for (&row, &val) in fs.num_rows.iter().zip(&fs.num_vals) {
+                    if member[row as usize] {
+                        r.push(row);
+                        v.push(val);
+                    }
+                }
+                (r, v)
+            };
+            let (cr, ci) = if full {
+                (fs.cat_rows.clone(), fs.cat_ids.clone())
+            } else {
+                let mut r = Vec::new();
+                let mut i = Vec::new();
+                for (&row, &id) in fs.cat_rows.iter().zip(&fs.cat_ids) {
+                    if member[row as usize] {
+                        r.push(row);
+                        i.push(id);
+                    }
+                }
+                (r, i)
+            };
+            let nl: Vec<u16> = class_ids
+                .map(|ids| nr.iter().map(|&r| ids[r as usize]).collect())
+                .unwrap_or_default();
+            let cl: Vec<u16> = class_ids
+                .map(|ids| cr.iter().map(|&r| ids[r as usize]).collect())
+                .unwrap_or_default();
+            num_ranges.push((0u32, nr.len() as u32));
+            cat_ranges.push((0u32, cr.len() as u32));
+            feats.push(FeatureArena {
+                active: true,
+                num_rows: pair(nr),
+                num_vals: pair(nv),
+                num_labs: pair(nl),
+                cat_rows: pair(cr),
+                cat_ids: pair(ci),
+                cat_labs: pair(cl),
+            });
+        }
+
+        let bylab = if want_bylab {
+            if full {
+                index.reg_order.clone()
+            } else {
+                index
+                    .reg_order
+                    .iter()
+                    .copied()
+                    .filter(|&r| member[r as usize])
+                    .collect()
+            }
+        } else {
+            Vec::new()
+        };
+
+        Frontier {
+            k,
+            cur: 0,
+            rows: pair(rows.to_vec()),
+            bylab: pair(bylab),
+            feats,
+            nodes: vec![LevelNode {
+                node_id: root_id,
+                depth: 1,
+                row_off: 0,
+                row_len: rows.len() as u32,
+            }],
+            next_nodes: Vec::new(),
+            num_ranges,
+            cat_ranges,
+            next_num_ranges: Vec::new(),
+            next_cat_ranges: Vec::new(),
+            posmask: vec![0u64; ds.n_rows().div_ceil(64)],
+            pos_counts: Vec::new(),
+        }
+    }
+
+    pub(crate) fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub(crate) fn node(&self, slot: usize) -> LevelNode {
+        self.nodes[slot]
+    }
+
+    pub(crate) fn feature_active(&self, f: usize) -> bool {
+        self.feats[f].active
+    }
+
+    /// All rows of the node, in maintained (root) order.
+    pub(crate) fn node_rows(&self, slot: usize) -> &[u32] {
+        let n = self.nodes[slot];
+        &self.rows[self.cur][n.row_off as usize..(n.row_off + n.row_len) as usize]
+    }
+
+    /// The node's rows ascending by regression target (empty unless the
+    /// frontier was built with `want_bylab`).
+    pub(crate) fn node_bylab(&self, slot: usize) -> &[u32] {
+        if self.bylab[self.cur].is_empty() {
+            return &[];
+        }
+        let n = self.nodes[slot];
+        &self.bylab[self.cur][n.row_off as usize..(n.row_off + n.row_len) as usize]
+    }
+
+    /// `(rows, values, labels)` of the node's sorted numeric cells for
+    /// feature `f` (labels empty for regression).
+    pub(crate) fn num_slices(&self, slot: usize, f: usize) -> (&[u32], &[f64], &[u16]) {
+        let (off, len) = self.num_ranges[slot * self.k + f];
+        let (off, len) = (off as usize, len as usize);
+        let a = &self.feats[f];
+        let labs: &[u16] = if a.num_labs[self.cur].is_empty() {
+            &[]
+        } else {
+            &a.num_labs[self.cur][off..off + len]
+        };
+        (
+            &a.num_rows[self.cur][off..off + len],
+            &a.num_vals[self.cur][off..off + len],
+            labs,
+        )
+    }
+
+    /// `(rows, ids, labels)` of the node's grouped categorical cells for
+    /// feature `f` (labels empty for regression).
+    pub(crate) fn cat_slices(&self, slot: usize, f: usize) -> (&[u32], &[u32], &[u16]) {
+        let (off, len) = self.cat_ranges[slot * self.k + f];
+        let (off, len) = (off as usize, len as usize);
+        let a = &self.feats[f];
+        let labs: &[u16] = if a.cat_labs[self.cur].is_empty() {
+            &[]
+        } else {
+            &a.cat_labs[self.cur][off..off + len]
+        };
+        (
+            &a.cat_rows[self.cur][off..off + len],
+            &a.cat_ids[self.cur][off..off + len],
+            labs,
+        )
+    }
+
+    /// Phase 1 of a level's partition: evaluate each split's predicate
+    /// once per node row, record positives in the level bitmask, fill
+    /// `SplitTask::n_pos`, and stably partition the row arena (and the
+    /// regression by-target arena) into the back buffer.
+    pub(crate) fn partition_rows(&mut self, ds: &Dataset, splits: &mut [SplitTask]) {
+        self.posmask.fill(0);
+        let cur = self.cur;
+        {
+            let (front, back) = split_pair(&mut self.rows, cur);
+            for t in splits.iter_mut() {
+                let node = self.nodes[t.slot];
+                let off = node.row_off as usize;
+                let len = node.row_len as usize;
+                let col = &ds.columns[t.predicate.feature];
+                let mut n_pos: u32 = 0;
+                for &r in &front[off..off + len] {
+                    if t.predicate.op.eval(col.get(r as usize)) {
+                        self.posmask[(r >> 6) as usize] |= 1u64 << (r & 63);
+                        n_pos += 1;
+                    }
+                }
+                t.n_pos = n_pos;
+                // Selection guarantees both sides non-empty.
+                debug_assert!(n_pos > 0 && (n_pos as usize) < len);
+                let (mut p, mut q) = (off, off + n_pos as usize);
+                for &r in &front[off..off + len] {
+                    if in_pos(&self.posmask, r) {
+                        back[p] = r;
+                        p += 1;
+                    } else {
+                        back[q] = r;
+                        q += 1;
+                    }
+                }
+            }
+        }
+        if !self.bylab[cur].is_empty() {
+            let (front, back) = split_pair(&mut self.bylab, cur);
+            for t in splits.iter() {
+                let node = self.nodes[t.slot];
+                let off = node.row_off as usize;
+                let len = node.row_len as usize;
+                let (mut p, mut q) = (off, off + t.n_pos as usize);
+                for &r in &front[off..off + len] {
+                    if in_pos(&self.posmask, r) {
+                        back[p] = r;
+                        p += 1;
+                    } else {
+                        back[q] = r;
+                        q += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Phase 2: partition every feature arena's split ranges into the
+    /// back buffer. Parallelism is per feature — each worker owns one
+    /// feature's arrays (`&mut FeatureArena`) and a disjoint chunk of
+    /// the count table, so the phase is lock-free by construction.
+    pub(crate) fn partition_features(&mut self, splits: &[SplitTask], n_threads: usize) {
+        if splits.is_empty() {
+            return;
+        }
+        let n_splits = splits.len();
+        self.pos_counts.clear();
+        self.pos_counts.resize(self.k * n_splits, (0u32, 0u32));
+        let cur = self.cur;
+        let k = self.k;
+        let num_ranges = &self.num_ranges;
+        let cat_ranges = &self.cat_ranges;
+        let mask = &self.posmask;
+        let jobs: Vec<(usize, &mut FeatureArena, &mut [(u32, u32)])> = self
+            .feats
+            .iter_mut()
+            .zip(self.pos_counts.chunks_mut(n_splits))
+            .enumerate()
+            .map(|(f, (arena, counts))| (f, arena, counts))
+            .collect();
+        parallel_map(jobs, n_threads, |(f, arena, counts)| {
+            if !arena.active {
+                return;
+            }
+            for (s, t) in splits.iter().enumerate() {
+                let (noff, nlen) = num_ranges[t.slot * k + f];
+                let np = partition_lists(
+                    &mut arena.num_rows,
+                    &mut arena.num_vals,
+                    &mut arena.num_labs,
+                    cur,
+                    noff as usize,
+                    nlen as usize,
+                    mask,
+                );
+                let (coff, clen) = cat_ranges[t.slot * k + f];
+                let cp = partition_lists(
+                    &mut arena.cat_rows,
+                    &mut arena.cat_ids,
+                    &mut arena.cat_labs,
+                    cur,
+                    coff as usize,
+                    clen as usize,
+                    mask,
+                );
+                counts[s] = (np, cp);
+            }
+        });
+    }
+
+    /// Phase 3: derive the children's ranges (they tile the parents'),
+    /// install them as the next level, and flip the buffers.
+    /// `children[s]` is the `(positive, negative)` node-id pair of
+    /// `splits[s]`.
+    pub(crate) fn advance(&mut self, splits: &[SplitTask], children: &[(u32, u32)]) {
+        debug_assert_eq!(splits.len(), children.len());
+        let n_splits = splits.len();
+        self.next_nodes.clear();
+        self.next_num_ranges.clear();
+        self.next_cat_ranges.clear();
+        for (s, t) in splits.iter().enumerate() {
+            let parent = self.nodes[t.slot];
+            let (pos_id, neg_id) = children[s];
+            self.next_nodes.push(LevelNode {
+                node_id: pos_id,
+                depth: parent.depth + 1,
+                row_off: parent.row_off,
+                row_len: t.n_pos,
+            });
+            for f in 0..self.k {
+                let (noff, _) = self.num_ranges[t.slot * self.k + f];
+                let (coff, _) = self.cat_ranges[t.slot * self.k + f];
+                let (np, cp) = self.pos_counts[f * n_splits + s];
+                self.next_num_ranges.push((noff, np));
+                self.next_cat_ranges.push((coff, cp));
+            }
+            self.next_nodes.push(LevelNode {
+                node_id: neg_id,
+                depth: parent.depth + 1,
+                row_off: parent.row_off + t.n_pos,
+                row_len: parent.row_len - t.n_pos,
+            });
+            for f in 0..self.k {
+                let (noff, nlen) = self.num_ranges[t.slot * self.k + f];
+                let (coff, clen) = self.cat_ranges[t.slot * self.k + f];
+                let (np, cp) = self.pos_counts[f * n_splits + s];
+                self.next_num_ranges.push((noff + np, nlen - np));
+                self.next_cat_ranges.push((coff + cp, clen - cp));
+            }
+        }
+        std::mem::swap(&mut self.nodes, &mut self.next_nodes);
+        std::mem::swap(&mut self.num_ranges, &mut self.next_num_ranges);
+        std::mem::swap(&mut self.cat_ranges, &mut self.next_cat_ranges);
+        self.cur ^= 1;
+    }
+
+    /// Allocated bytes of the double-buffered row/value/label arenas.
+    /// Constant from the root build to the end of the fit — the
+    /// zero-per-node-allocation contract.
+    pub(crate) fn arena_bytes(&self) -> usize {
+        use std::mem::size_of;
+        let mut b = 0usize;
+        for buf in &self.rows {
+            b += buf.capacity() * size_of::<u32>();
+        }
+        for buf in &self.bylab {
+            b += buf.capacity() * size_of::<u32>();
+        }
+        for a in &self.feats {
+            for v in &a.num_rows {
+                b += v.capacity() * size_of::<u32>();
+            }
+            for v in &a.num_vals {
+                b += v.capacity() * size_of::<f64>();
+            }
+            for v in &a.num_labs {
+                b += v.capacity() * size_of::<u16>();
+            }
+            for v in &a.cat_rows {
+                b += v.capacity() * size_of::<u32>();
+            }
+            for v in &a.cat_ids {
+                b += v.capacity() * size_of::<u32>();
+            }
+            for v in &a.cat_labs {
+                b += v.capacity() * size_of::<u16>();
+            }
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::column::Column;
+    use crate::data::dataset::{Dataset, Labels};
+    use crate::data::interner::Interner;
+    use crate::data::value::Value;
+    use crate::selection::split::SplitOp;
+
+    fn ds_with_two_features() -> Dataset {
+        // f0: 5 numerics; f1: mixed numeric/missing.
+        let cols = vec![
+            Column::new(
+                "f0",
+                vec![
+                    Value::Num(4.0),
+                    Value::Num(1.0),
+                    Value::Num(3.0),
+                    Value::Num(0.0),
+                    Value::Num(2.0),
+                ],
+            ),
+            Column::new(
+                "f1",
+                vec![
+                    Value::Num(10.0),
+                    Value::Missing,
+                    Value::Num(30.0),
+                    Value::Num(20.0),
+                    Value::Missing,
+                ],
+            ),
+        ];
+        let labels = Labels::Class {
+            ids: vec![0, 1, 0, 1, 0],
+            n_classes: 2,
+        };
+        Dataset::new("fr", cols, labels, Interner::new()).unwrap()
+    }
+
+    #[test]
+    fn stable_partition_preserves_sortedness() {
+        let ds = ds_with_two_features();
+        let rows: Vec<u32> = (0..5).collect();
+        let member = vec![true; 5];
+        let mut fr = Frontier::build_root(
+            &ds,
+            ds.sorted_index(),
+            &rows,
+            &member,
+            true,
+            None,
+            false,
+            0,
+        );
+        // Root f0 sorted rows: values 0,1,2,3,4 → rows 3,1,4,2,0.
+        assert_eq!(fr.num_slices(0, 0).0, &[3, 1, 4, 2, 0]);
+        let bytes = fr.arena_bytes();
+
+        // Split on f0 ≤ 2.0 → positives {3,1,4}, negatives {2,0}.
+        let mut splits = vec![SplitTask {
+            slot: 0,
+            predicate: SplitPredicate {
+                feature: 0,
+                op: SplitOp::Le(2.0),
+            },
+            n_pos: 0,
+        }];
+        fr.partition_rows(&ds, &mut splits);
+        assert_eq!(splits[0].n_pos, 3);
+        fr.partition_features(&splits, 1);
+        fr.advance(&splits, &[(1, 2)]);
+
+        assert_eq!(fr.n_nodes(), 2);
+        // Positive child keeps sorted order of its rows.
+        assert_eq!(fr.num_slices(0, 0).0, &[3, 1, 4]);
+        assert_eq!(fr.num_slices(0, 0).1, &[0.0, 1.0, 2.0]);
+        assert_eq!(fr.num_slices(1, 0).0, &[2, 0]);
+        // f1: positives {3,1,4} have one numeric cell (row 3 → 20.0);
+        // negatives {2,0} have rows 0,2 → values 10.0, 30.0 in order.
+        assert_eq!(fr.num_slices(0, 1).0, &[3]);
+        assert_eq!(fr.num_slices(1, 1).0, &[0, 2]);
+        // Node rows stay in root order on both sides.
+        assert_eq!(fr.node_rows(0), &[1, 3, 4]);
+        assert_eq!(fr.node_rows(1), &[0, 2]);
+        // Zero growth.
+        assert_eq!(fr.arena_bytes(), bytes);
+    }
+
+    #[test]
+    fn inactive_features_have_empty_arenas() {
+        let ds = ds_with_two_features();
+        let rows: Vec<u32> = (0..5).collect();
+        let member = vec![true; 5];
+        let active = vec![true, false];
+        let fr = Frontier::build_root(
+            &ds,
+            ds.sorted_index(),
+            &rows,
+            &member,
+            true,
+            Some(&active),
+            false,
+            0,
+        );
+        assert!(fr.feature_active(0));
+        assert!(!fr.feature_active(1));
+        assert!(fr.num_slices(0, 1).0.is_empty());
+        assert!(fr.cat_slices(0, 1).0.is_empty());
+    }
+}

@@ -3,6 +3,7 @@
 
 pub mod builder;
 pub mod forest;
+pub mod frontier;
 pub mod label_split;
 pub mod predict;
 pub mod prune;
@@ -169,6 +170,17 @@ impl Tree {
     /// Train on a subset of rows.
     pub fn fit_rows(ds: &Dataset, rows: &[u32], config: &TrainConfig) -> Result<Tree> {
         builder::fit_rows(ds, rows, config)
+    }
+
+    /// Train on a subset of rows with a feature mask (see
+    /// [`builder::fit_rows_masked`]); used by forest feature bagging.
+    pub fn fit_rows_masked(
+        ds: &Dataset,
+        rows: &[u32],
+        config: &TrainConfig,
+        active: Option<&[bool]>,
+    ) -> Result<Tree> {
+        builder::fit_rows_masked(ds, rows, config, active)
     }
 
     /// Classification accuracy over a dataset (full-depth predictions).

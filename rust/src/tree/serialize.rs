@@ -190,7 +190,7 @@ mod tests {
         let json = to_json(&tree, &ds.interner);
         let text = json.to_pretty();
 
-        let mut interner2 = ds.interner.clone();
+        let mut interner2 = (*ds.interner).clone();
         let tree2 = from_json(&Json::parse(&text).unwrap(), &mut interner2).unwrap();
         assert_eq!(tree2.n_nodes(), tree.n_nodes());
         for r in (0..ds.n_rows()).step_by(13) {
@@ -207,7 +207,7 @@ mod tests {
         let ds = generate_any(&spec, 29);
         let tree = Tree::fit(&ds, &TrainConfig::default()).unwrap();
         let json = to_json(&tree, &ds.interner);
-        let mut interner2 = ds.interner.clone();
+        let mut interner2 = (*ds.interner).clone();
         let tree2 = from_json(&json, &mut interner2).unwrap();
         for r in (0..ds.n_rows()).step_by(7) {
             let a = predict_ds(&tree, &ds, r, usize::MAX, 0).as_value().unwrap();

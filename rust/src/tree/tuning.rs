@@ -9,7 +9,9 @@
 //!
 //! [`tune_by_retraining`] is the generic baseline (one full training per
 //! setting) used by the `ablation_tuning` bench to reproduce the paper's
-//! "16.8 s vs 10 ms" churn-modeling comparison.
+//! "16.8 s vs 10 ms" churn-modeling comparison. All its retrains hit the
+//! dataset's [`crate::data::SortedIndex`] cache, so even the baseline
+//! sorts each column exactly once per dataset.
 
 use super::predict::path_ds;
 use super::{prune, NodeLabel, TrainConfig, Tree};
@@ -319,6 +321,23 @@ mod tests {
             tune_by_retraining(&ds, &train, &val, &cfg, tree.depth as usize, &grid).unwrap();
         assert!((fast.best_metric - slow.best_metric).abs() < 0.05);
         assert_eq!(fast.n_settings, slow.n_settings);
+    }
+
+    #[test]
+    fn retraining_tuner_sorts_each_column_once() {
+        let mut spec = SynthSpec::classification("ts", 400, 4, 2);
+        spec.noise = 0.1;
+        let ds = generate_classification(&spec, 41);
+        let (train, val, _) = ds.split_indices(0.8, 0.1, 9);
+        let cfg = TrainConfig::default();
+        let tree = Tree::fit_rows(&ds, &train, &cfg).unwrap();
+        let grid = TuneGrid {
+            min_split_steps: 5,
+            ..Default::default()
+        };
+        let _ = tune_by_retraining(&ds, &train, &val, &cfg, tree.depth as usize, &grid).unwrap();
+        // Dozens of retrains, one sort: every fit filtered the cache.
+        assert_eq!(ds.sort_index_builds(), 1);
     }
 
     #[test]

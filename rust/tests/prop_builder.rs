@@ -1,0 +1,256 @@
+//! Property tests for the arena-frontier builder: the in-place-partition
+//! builder must produce **node-for-node identical** trees to the oracle
+//! paths on random hybrid (numeric/categorical/missing) datasets, for
+//! classification and regression, at 1 and N threads, on full and subset
+//! row sets — plus the zero-allocation arena accounting and the
+//! predicate-routing oracle that independently re-derives every node's
+//! sample count from the raw columns.
+
+use udt::data::synth::{generate_any, SynthSpec};
+use udt::data::Dataset;
+use udt::tree::builder;
+use udt::tree::{Backend, RegStrategy, TrainConfig, Tree};
+use udt::util::prop::{check, ensure, Config};
+use udt::util::rng::Rng;
+
+/// Random hybrid dataset spec (classification when `n_classes > 0`).
+fn random_spec(rng: &mut Rng, size: usize, regression: bool) -> SynthSpec {
+    let n_rows = rng.range(60, size.max(80));
+    let n_features = rng.range(2, 7);
+    let mut spec = if regression {
+        SynthSpec::regression("pb", n_rows, n_features)
+    } else {
+        SynthSpec::classification("pb", n_rows, n_features, rng.range(2, 5))
+    };
+    spec.cat_frac = rng.f64() * 0.5;
+    spec.hybrid_frac = rng.f64() * 0.3;
+    spec.missing_frac = rng.f64() * 0.15;
+    spec.numeric_cardinality = rng.range(2, 40);
+    spec.gt_depth = rng.range(2, 7);
+    spec.noise = rng.f64() * 0.2;
+    spec
+}
+
+/// Node-for-node structural equality (splits, children, samples, labels).
+fn same_tree(a: &Tree, b: &Tree) -> Result<(), String> {
+    ensure(
+        a.n_nodes() == b.n_nodes(),
+        format!("node counts differ: {} vs {}", a.n_nodes(), b.n_nodes()),
+    )?;
+    ensure(
+        a.depth == b.depth,
+        format!("depths differ: {} vs {}", a.depth, b.depth),
+    )?;
+    for (i, (x, y)) in a.nodes.iter().zip(&b.nodes).enumerate() {
+        ensure(
+            x.split == y.split,
+            format!("node {i} split: {:?} vs {:?}", x.split, y.split),
+        )?;
+        ensure(
+            x.children == y.children,
+            format!("node {i} children: {:?} vs {:?}", x.children, y.children),
+        )?;
+        ensure(
+            x.n_samples == y.n_samples,
+            format!("node {i} samples: {} vs {}", x.n_samples, y.n_samples),
+        )?;
+        ensure(
+            x.label == y.label,
+            format!("node {i} label: {:?} vs {:?}", x.label, y.label),
+        )?;
+    }
+    Ok(())
+}
+
+/// Independent oracle: route every training row from the root using only
+/// the raw columns and the tree's predicates, counting arrivals per
+/// node. Catches any arena-partition corruption the selection-level
+/// equivalence cannot see.
+fn routed_counts(tree: &Tree, ds: &Dataset, rows: &[u32]) -> Vec<u32> {
+    let mut counts = vec![0u32; tree.n_nodes()];
+    for &r in rows {
+        let mut id = 0usize; // root
+        loop {
+            counts[id] += 1;
+            let node = &tree.nodes[id];
+            match (&node.split, node.children) {
+                (Some(pred), Some((pos, neg))) => {
+                    let v = ds.value(pred.feature, r as usize);
+                    id = if pred.op.eval(v) {
+                        pos as usize
+                    } else {
+                        neg as usize
+                    };
+                }
+                _ => break,
+            }
+        }
+    }
+    counts
+}
+
+fn check_routing(tree: &Tree, ds: &Dataset, rows: &[u32]) -> Result<(), String> {
+    let counts = routed_counts(tree, ds, rows);
+    for (i, node) in tree.nodes.iter().enumerate() {
+        ensure(
+            counts[i] == node.n_samples,
+            format!(
+                "node {i}: routed {} rows but builder recorded {}",
+                counts[i], node.n_samples
+            ),
+        )?;
+    }
+    Ok(())
+}
+
+#[test]
+fn arena_builder_matches_generic_oracle() {
+    // Superfast on maintained arena lists vs the generic engine that
+    // rescans the raw column per candidate: identical trees. Exercised
+    // for classification and both regression strategies.
+    for (regression, strategy) in [
+        (false, RegStrategy::LabelSplit),
+        (true, RegStrategy::LabelSplit),
+        (true, RegStrategy::DirectSse),
+    ] {
+        check(
+            &format!("arena ≡ generic (regression={regression}, {strategy:?})"),
+            Config::default()
+                .cases(25)
+                .max_size(300)
+                .seed(0xA12E_4A00 + regression as u64 + strategy as u64 * 2),
+            |rng, size| {
+                let spec = random_spec(rng, size, regression);
+                let ds = generate_any(&spec, rng.next_u64());
+                let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+                let fast = Tree::fit_rows(
+                    &ds,
+                    &rows,
+                    &TrainConfig {
+                        reg_strategy: strategy,
+                        ..Default::default()
+                    },
+                )
+                .map_err(|e| e.to_string())?;
+                let slow = Tree::fit_rows(
+                    &ds,
+                    &rows,
+                    &TrainConfig {
+                        backend: Backend::Generic,
+                        reg_strategy: strategy,
+                        ..Default::default()
+                    },
+                )
+                .map_err(|e| e.to_string())?;
+                same_tree(&fast, &slow)?;
+                check_routing(&fast, &ds, &rows)
+            },
+        );
+    }
+}
+
+#[test]
+fn thread_count_does_not_change_the_tree() {
+    check(
+        "1-thread ≡ N-thread build",
+        Config::default().cases(20).max_size(300).seed(0x7123_AD01),
+        |rng, size| {
+            let regression = rng.chance(0.3);
+            let spec = random_spec(rng, size, regression);
+            let ds = generate_any(&spec, rng.next_u64());
+            let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+            let seq = Tree::fit_rows(&ds, &rows, &TrainConfig::default())
+                .map_err(|e| e.to_string())?;
+            let par = Tree::fit_rows(
+                &ds,
+                &rows,
+                &TrainConfig {
+                    n_threads: 4,
+                    ..Default::default()
+                },
+            )
+            .map_err(|e| e.to_string())?;
+            same_tree(&seq, &par)
+        },
+    );
+}
+
+#[test]
+fn subset_fits_route_and_account_correctly() {
+    check(
+        "subset fit: routing oracle + zero arena growth",
+        Config::default().cases(25).max_size(300).seed(0x5B5E_7F02),
+        |rng, size| {
+            let regression = rng.chance(0.5);
+            let spec = random_spec(rng, size, regression);
+            let ds = generate_any(&spec, rng.next_u64());
+            let n = ds.n_rows();
+            let mut all: Vec<u32> = (0..n as u32).collect();
+            rng.shuffle(&mut all);
+            let take = rng.range(20, n).min(n);
+            let rows = &all[..take];
+            let (tree, stats) =
+                builder::fit_rows_with_stats(&ds, rows, &TrainConfig::default(), None)
+                    .map_err(|e| e.to_string())?;
+            ensure(
+                stats.bytes_at_root > 0,
+                "root arena accounting reported zero bytes",
+            )?;
+            ensure(
+                stats.peak_bytes == stats.bytes_at_root
+                    && stats.final_bytes == stats.bytes_at_root,
+                format!(
+                    "arena grew after root: root={} peak={} final={}",
+                    stats.bytes_at_root, stats.peak_bytes, stats.final_bytes
+                ),
+            )?;
+            ensure(
+                tree.nodes[0].n_samples as usize == rows.len(),
+                "root sample count != subset size",
+            )?;
+            check_routing(&tree, &ds, rows)
+        },
+    );
+}
+
+#[test]
+fn masked_fit_matches_blanked_column_semantics_on_random_data() {
+    check(
+        "feature mask ≡ blanked columns",
+        Config::default().cases(15).max_size(250).seed(0xFEA7_3A03),
+        |rng, size| {
+            let spec = random_spec(rng, size, false);
+            let ds = generate_any(&spec, rng.next_u64());
+            let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+            // Random mask keeping at least one feature active.
+            let mut active: Vec<bool> = (0..ds.n_features())
+                .map(|_| rng.chance(0.6))
+                .collect();
+            if !active.iter().any(|&a| a) {
+                active[0] = true;
+            }
+            let masked =
+                builder::fit_rows_masked(&ds, &rows, &TrainConfig::default(), Some(&active))
+                    .map_err(|e| e.to_string())?;
+            // Oracle: materialize the mask as all-Missing columns.
+            let mut columns = ds.columns.clone();
+            for (f, col) in columns.iter_mut().enumerate() {
+                if !active[f] {
+                    for v in &mut col.values {
+                        *v = udt::data::Value::Missing;
+                    }
+                }
+            }
+            let blanked = Dataset::new(
+                ds.name.clone(),
+                columns,
+                ds.labels.clone(),
+                std::sync::Arc::clone(&ds.interner),
+            )
+            .map_err(|e| e.to_string())?;
+            let oracle = Tree::fit_rows(&blanked, &rows, &TrainConfig::default())
+                .map_err(|e| e.to_string())?;
+            same_tree(&masked, &oracle)
+        },
+    );
+}
