@@ -1,0 +1,135 @@
+//! Predict-path throughput & latency: boxed node walk vs compiled
+//! struct-of-arrays tables, for a single tree and a bagged forest on
+//! synthetic hybrid data.
+//!
+//! Reports batch rows/sec (full-dataset batches) and single-row p50
+//! latency for both paths, and writes a machine-readable
+//! `BENCH_predict.json` at the repository root so the serving-path perf
+//! trajectory is tracked PR-over-PR alongside `BENCH_table6.json`.
+//!
+//!   cargo bench --bench predict
+//!
+//! UDT_BENCH_SCALE scales the row count (1.0 = 100k rows);
+//! UDT_BENCH_RUNS the repetitions.
+
+use udt::bench_support::{bench, write_bench_json, BenchConfig, Measurement, Table};
+use udt::data::synth::{generate_classification, SynthSpec};
+use udt::data::value::Value;
+use udt::inference::RowFrame;
+use udt::tree::forest::{Forest, ForestConfig};
+use udt::util::json::Json;
+use udt::util::timer::Timer;
+use udt::{Model, SavedModel, Udt};
+
+/// Single-row latency: time each of `reps` one-row predictions and keep
+/// every sample so percentiles are meaningful.
+fn single_row_latency(name: &str, reps: usize, mut f: impl FnMut(usize)) -> Measurement {
+    let mut runs = Vec::with_capacity(reps);
+    for i in 0..reps {
+        let t = Timer::start();
+        f(i);
+        runs.push(t.ms());
+    }
+    Measurement {
+        name: name.to_string(),
+        runs,
+    }
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let n_rows = ((100_000.0 * cfg.scale) as usize).max(1_000);
+    let mut spec = SynthSpec::classification("predict_bench", n_rows, 12, 4);
+    spec.cat_frac = 0.25;
+    spec.hybrid_frac = 0.1;
+    spec.missing_frac = 0.03;
+    let ds = generate_classification(&spec, 42);
+    eprintln!(
+        "predict bench: {} rows × {} features (UDT_BENCH_SCALE to change)",
+        ds.n_rows(),
+        ds.n_features()
+    );
+
+    let tree = Udt::builder().fit(&ds).expect("train tree");
+    let forest = Forest::fit(
+        &ds,
+        &ForestConfig {
+            n_trees: 10,
+            ..Default::default()
+        },
+    )
+    .expect("train forest");
+    let models = [
+        ("single_tree", Model::SingleTree(tree)),
+        ("forest", Model::Forest(forest)),
+    ];
+
+    // Shared inputs: materialized rows for the boxed path, one columnar
+    // frame for the compiled path.
+    let rows: Vec<Vec<Value>> = (0..ds.n_rows()).map(|r| ds.row(r)).collect();
+    let frame = RowFrame::from_dataset(&ds);
+    let single_reps = 2_000usize.min(ds.n_rows());
+
+    let mut table = Table::new(&[
+        "model", "path", "batch(ms)", "rows/sec", "p50 row(µs)",
+    ]);
+    let mut json_rows: Vec<Json> = Vec::new();
+    for (name, model) in &models {
+        let saved = SavedModel::new(model.clone(), &ds);
+        let compiled = saved.compile().expect("compile");
+
+        let boxed_batch = bench(&format!("{name}/boxed"), &cfg, || {
+            let labels = model.predict_batch(&rows).expect("boxed batch");
+            assert_eq!(labels.len(), rows.len());
+        });
+        let compiled_batch = bench(&format!("{name}/compiled"), &cfg, || {
+            let preds = compiled.predict_frame(&frame).expect("compiled batch");
+            assert_eq!(preds.len(), frame.n_rows());
+        });
+        let boxed_single = single_row_latency(name, single_reps, |i| {
+            model.predict_row(&rows[i]).expect("boxed row");
+        });
+        let compiled_single = single_row_latency(name, single_reps, |i| {
+            compiled.predict_row(&rows[i]).expect("compiled row");
+        });
+
+        for (path, batch, single) in [
+            ("boxed", &boxed_batch, &boxed_single),
+            ("compiled", &compiled_batch, &compiled_single),
+        ] {
+            let batch_ms = batch.min_ms();
+            let rows_per_sec = rows.len() as f64 / (batch_ms / 1e3).max(1e-9);
+            let p50_us = single.percentile_ms(0.5) * 1e3;
+            table.row(vec![
+                name.to_string(),
+                path.to_string(),
+                format!("{batch_ms:.1}"),
+                format!("{rows_per_sec:.0}"),
+                format!("{p50_us:.2}"),
+            ]);
+            json_rows.push(Json::obj(vec![
+                ("model", Json::Str(name.to_string())),
+                ("path", Json::Str(path.to_string())),
+                ("batch_ms", Json::Num(batch_ms)),
+                ("rows_per_sec", Json::Num(rows_per_sec)),
+                ("p50_row_us", Json::Num(p50_us)),
+            ]));
+        }
+        eprintln!("done {name}");
+    }
+
+    println!("\n== Predict throughput: boxed vs compiled ==");
+    println!("{}", table.render());
+
+    let artifact = Json::obj(vec![
+        ("bench", Json::Str("predict".into())),
+        ("rows", Json::Num(ds.n_rows() as f64)),
+        ("features", Json::Num(ds.n_features() as f64)),
+        ("measured", Json::Bool(true)),
+        ("cases", Json::Arr(json_rows)),
+    ]);
+    match write_bench_json("predict", &artifact) {
+        Ok(p) => eprintln!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write bench artifact: {e}"),
+    }
+}

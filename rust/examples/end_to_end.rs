@@ -70,9 +70,9 @@ fn main() -> udt::Result<()> {
         rep.tuned_nodes, rep.tuned_depth, acc
     );
 
-    // Serving spot check: the *tuned* model (caps applied at predict
-    // time) answers a prediction request through the server.
-    let server = Server::new(SavedModel::new(model, &ds));
+    // Serving spot check: the *tuned* model (caps baked into the
+    // compiled tables) answers a prediction request through the server.
+    let server = Server::new(SavedModel::new(model, &ds))?;
     let row = ds.row(0);
     let cells: Vec<String> = row
         .iter()

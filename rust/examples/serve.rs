@@ -29,7 +29,9 @@ fn main() -> udt::Result<()> {
         model.n_nodes()
     );
 
-    let server = Server::new(SavedModel::new(model, &ds));
+    // Compiles the model once; every request then runs on the flattened
+    // inference tables (see `udt::inference`).
+    let server = Server::new(SavedModel::new(model, &ds))?;
     let (tx, rx) = mpsc::channel();
     let server2 = server.clone();
     let server_thread = std::thread::spawn(move || {

@@ -26,6 +26,21 @@ impl Measurement {
         self.runs.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Interpolated percentile of the runs (`p` in `[0, 1]`; 0.5 = p50
+    /// median latency). NaN on an empty measurement.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.runs.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.runs.clone();
+        sorted.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = p.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+    }
+
     pub fn stddev_ms(&self) -> f64 {
         let n = self.runs.len();
         if n < 2 {
@@ -230,6 +245,22 @@ mod tests {
         assert!((m.mean_ms() - 2.0).abs() < 1e-12);
         assert_eq!(m.min_ms(), 1.0);
         assert!((m.stddev_ms() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let m = Measurement {
+            name: "p".into(),
+            runs: vec![4.0, 1.0, 3.0, 2.0],
+        };
+        assert_eq!(m.percentile_ms(0.0), 1.0);
+        assert_eq!(m.percentile_ms(1.0), 4.0);
+        assert!((m.percentile_ms(0.5) - 2.5).abs() < 1e-12);
+        let empty = Measurement {
+            name: "e".into(),
+            runs: vec![],
+        };
+        assert!(empty.percentile_ms(0.5).is_nan());
     }
 
     #[test]

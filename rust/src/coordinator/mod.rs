@@ -1,7 +1,9 @@
-//! Training/tuning orchestration: worker pools, the end-to-end pipeline
-//! (train → tune → prune → evaluate), metrics and the prediction server.
+//! Training/tuning orchestration and serving: worker pools, the
+//! end-to-end pipeline (train → tune → prune → evaluate), metrics, the
+//! multi-model registry and the prediction server.
 
 pub mod metrics;
 pub mod parallel;
 pub mod pipeline;
+pub mod registry;
 pub mod serve;

@@ -98,6 +98,27 @@ where
     parallel_map_scratch(items, n_threads, || (), |t, _| f(t))
 }
 
+/// Split `0..n` into `(start, end)` blocks of at most `chunk` items —
+/// the shared scaffolding for block-parallel prediction (rows within a
+/// chunk iterate tightly; chunks fan out over [`parallel_map`]).
+pub fn chunk_ranges(n: usize, chunk: usize) -> Vec<(usize, usize)> {
+    let chunk = chunk.max(1);
+    (0..n).step_by(chunk).map(|s| (s, (s + chunk).min(n))).collect()
+}
+
+/// [`parallel_map`] over the `(start, end)` blocks of `0..n` — the one
+/// chunk-parallel batch loop shared by the boxed and compiled predict
+/// paths. Blocks come back stitched in order, so results are invariant
+/// to the worker count (`n_threads` 0 = all cores, 1 = sequential).
+pub fn parallel_map_chunked<R: Send>(
+    n: usize,
+    chunk: usize,
+    n_threads: usize,
+    f: impl Fn(usize, usize) -> R + Sync,
+) -> Vec<R> {
+    parallel_map(chunk_ranges(n, chunk), effective_threads(n_threads), |(s, e)| f(s, e))
+}
+
 /// Effective worker count: `requested`, or all cores when 0.
 pub fn effective_threads(requested: usize) -> usize {
     if requested == 0 {
@@ -158,6 +179,16 @@ mod tests {
     fn effective_threads_zero_means_all() {
         assert!(effective_threads(0) >= 1);
         assert_eq!(effective_threads(3), 3);
+    }
+
+    #[test]
+    fn chunk_ranges_tile_the_input() {
+        assert_eq!(chunk_ranges(0, 4), Vec::<(usize, usize)>::new());
+        assert_eq!(chunk_ranges(3, 4), vec![(0, 3)]);
+        assert_eq!(chunk_ranges(8, 4), vec![(0, 4), (4, 8)]);
+        assert_eq!(chunk_ranges(9, 4), vec![(0, 4), (4, 8), (8, 9)]);
+        // Degenerate chunk size clamps to 1 instead of looping forever.
+        assert_eq!(chunk_ranges(2, 0), vec![(0, 1), (1, 2)]);
     }
 
     #[test]

@@ -1,0 +1,348 @@
+//! Multi-model serving registry.
+//!
+//! A [`ModelRegistry`] holds any number of named, compiled, serving-ready
+//! models. Loading compiles the [`SavedModel`] once
+//! ([`crate::inference::CompiledModel`]); every prediction after that
+//! runs on the flattened artifact. Names can be aliased (`"prod"` →
+//! `"churn-v3"`), models can be loaded and unloaded while serving, and
+//! each entry keeps its own latency / throughput counters for the
+//! server's `stats` report.
+//!
+//! The first loaded model becomes the **default** — the one legacy
+//! bare-array requests (no `"model"` field) resolve to.
+
+use crate::error::{Result, UdtError};
+use crate::inference::{CompiledModel, Predictions, RowFrame};
+use crate::model::SavedModel;
+use crate::util::timer::Timer;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// One served model: its compiled artifact, the schema / interner needed
+/// for request parsing and label rendering, and serving counters. The
+/// boxed `Model` is **not** retained — after compilation the flattened
+/// tables are the only prediction structure, so a loaded entry costs one
+/// artifact, not two.
+pub struct ModelEntry {
+    name: String,
+    pub schema: crate::model::Schema,
+    pub interner: crate::data::interner::Interner,
+    pub compiled: CompiledModel,
+    predict_requests: AtomicU64,
+    predictions: AtomicU64,
+    /// Total time spent inside the compiled predict, in nanoseconds
+    /// (nanos, not micros: a single-row walk is sub-microsecond, and
+    /// truncating accumulation would report zero latency/throughput).
+    predict_ns: AtomicU64,
+}
+
+impl ModelEntry {
+    fn new(name: &str, saved: SavedModel) -> Result<ModelEntry> {
+        let compiled = saved.compile()?;
+        let SavedModel {
+            schema, interner, ..
+        } = saved;
+        Ok(ModelEntry {
+            name: name.to_string(),
+            schema,
+            interner,
+            compiled,
+            predict_requests: AtomicU64::new(0),
+            predictions: AtomicU64::new(0),
+            predict_ns: AtomicU64::new(0),
+        })
+    }
+
+    /// Canonical name the model was loaded under (aliases resolve here).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Predict a frame on the compiled artifact, accounting the request
+    /// into this entry's latency / throughput counters.
+    pub fn predict_frame(&self, frame: &RowFrame) -> Result<Predictions> {
+        let timer = Timer::start();
+        let preds = self.compiled.predict_frame(frame)?;
+        self.account(preds.len() as u64, &timer);
+        Ok(preds)
+    }
+
+    /// Predict one model-space row on the compiled artifact (the
+    /// single-row serving fast path: no frame, no per-request interner),
+    /// with the same counter accounting as [`Self::predict_frame`].
+    pub fn predict_row(&self, row: &[crate::data::value::Value]) -> Result<crate::tree::NodeLabel> {
+        let timer = Timer::start();
+        let label = self.compiled.predict_row(row)?;
+        self.account(1, &timer);
+        Ok(label)
+    }
+
+    fn account(&self, n_predictions: u64, timer: &Timer) {
+        self.predict_requests.fetch_add(1, Ordering::Relaxed);
+        self.predictions.fetch_add(n_predictions, Ordering::Relaxed);
+        self.predict_ns
+            .fetch_add(timer.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// `(predict_requests, predictions, busy_nanoseconds)`.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        (
+            self.predict_requests.load(Ordering::Relaxed),
+            self.predictions.load(Ordering::Relaxed),
+            self.predict_ns.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// The registry's name tables, all behind **one** lock so every
+/// mutation validates and commits atomically — the shadowing checks in
+/// `load`/`alias` are check-then-act, and the registry is documented
+/// mutable while serving.
+#[derive(Default)]
+struct RegistryState {
+    models: BTreeMap<String, Arc<ModelEntry>>,
+    aliases: BTreeMap<String, String>,
+    default_name: Option<String>,
+}
+
+impl RegistryState {
+    /// Resolve a name or alias (canonical names win) to its entry.
+    fn resolve(&self, name: &str) -> Result<Arc<ModelEntry>> {
+        if let Some(entry) = self.models.get(name) {
+            return Ok(Arc::clone(entry));
+        }
+        if let Some(target) = self.aliases.get(name) {
+            if let Some(entry) = self.models.get(target) {
+                return Ok(Arc::clone(entry));
+            }
+        }
+        Err(UdtError::predict(format!("unknown model `{name}`")))
+    }
+}
+
+/// Named collection of compiled models behind one serving surface.
+#[derive(Default)]
+pub struct ModelRegistry {
+    state: RwLock<RegistryState>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Compile and register a model under `name` (replacing any previous
+    /// model of that name). The first load becomes the default target
+    /// for unaddressed requests. A name may not shadow an existing alias
+    /// — resolution prefers canonical names, so the alias would go
+    /// silently dead while the listing still advertised it.
+    pub fn load(&self, name: &str, saved: SavedModel) -> Result<()> {
+        if name.is_empty() {
+            return Err(UdtError::invalid_config("model name must be non-empty"));
+        }
+        // Compile outside the lock (it can be expensive); validate and
+        // commit atomically under it.
+        let entry = Arc::new(ModelEntry::new(name, saved)?);
+        let mut st = self.state.write().unwrap();
+        if st.aliases.contains_key(name) {
+            return Err(UdtError::invalid_config(format!(
+                "model name `{name}` collides with an existing alias"
+            )));
+        }
+        st.models.insert(name.to_string(), entry);
+        if st.default_name.is_none() {
+            st.default_name = Some(name.to_string());
+        }
+        Ok(())
+    }
+
+    /// Remove a model (and any aliases pointing at it). Returns whether
+    /// a model of that name existed. A removed default falls back to the
+    /// first remaining name.
+    pub fn unload(&self, name: &str) -> bool {
+        let mut st = self.state.write().unwrap();
+        let existed = st.models.remove(name).is_some();
+        if existed {
+            st.aliases.retain(|_, target| target.as_str() != name);
+            if st.default_name.as_deref() == Some(name) {
+                st.default_name = st.models.keys().next().cloned();
+            }
+        }
+        existed
+    }
+
+    /// Register `alias` as another name for the loaded model `target`.
+    /// An alias may not shadow a loaded model's name — `get` resolves
+    /// canonical names first, so such an alias would be silently dead.
+    pub fn alias(&self, alias: &str, target: &str) -> Result<()> {
+        let mut st = self.state.write().unwrap();
+        if !st.models.contains_key(target) {
+            return Err(UdtError::predict(format!("unknown model `{target}`")));
+        }
+        if st.models.contains_key(alias) {
+            return Err(UdtError::invalid_config(format!(
+                "alias `{alias}` collides with a loaded model name"
+            )));
+        }
+        st.aliases.insert(alias.to_string(), target.to_string());
+        Ok(())
+    }
+
+    /// Make `name` (a model or alias) the default for unaddressed
+    /// requests. Stored canonically (an alias resolves to its target's
+    /// name first), so unloading the model always triggers the
+    /// first-remaining-name fallback even when the default was set via
+    /// an alias.
+    pub fn set_default(&self, name: &str) -> Result<()> {
+        let mut st = self.state.write().unwrap();
+        let canonical = st.resolve(name)?.name().to_string();
+        st.default_name = Some(canonical);
+        Ok(())
+    }
+
+    /// Name unaddressed requests currently resolve to.
+    pub fn default_name(&self) -> Option<String> {
+        self.state.read().unwrap().default_name.clone()
+    }
+
+    /// Resolve a request's model reference: a name, an alias, or `None`
+    /// for the default — one consistent snapshot, so a concurrent
+    /// unload cannot strand a default lookup halfway. Unknown names are
+    /// typed predict errors (they surface as protocol `error` responses,
+    /// not panics).
+    pub fn get(&self, name: Option<&str>) -> Result<Arc<ModelEntry>> {
+        let st = self.state.read().unwrap();
+        let name = match name {
+            Some(n) => n,
+            None => st
+                .default_name
+                .as_deref()
+                .ok_or_else(|| UdtError::predict("no models loaded"))?,
+        };
+        st.resolve(name)
+    }
+
+    /// Loaded model names (canonical, sorted; aliases not included).
+    pub fn names(&self) -> Vec<String> {
+        self.state.read().unwrap().models.keys().cloned().collect()
+    }
+
+    /// Alias table as `(alias, target)` pairs, sorted by alias.
+    pub fn aliases_list(&self) -> Vec<(String, String)> {
+        self.state
+            .read()
+            .unwrap()
+            .aliases
+            .iter()
+            .map(|(a, t)| (a.clone(), t.clone()))
+            .collect()
+    }
+
+    /// Snapshot of every loaded entry (stats reporting).
+    pub fn entries(&self) -> Vec<Arc<ModelEntry>> {
+        self.state.read().unwrap().models.values().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.read().unwrap().models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.state.read().unwrap().models.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_classification, SynthSpec};
+    use crate::model::{Model, Udt};
+
+    fn saved(seed: u64) -> SavedModel {
+        let mut spec = SynthSpec::classification("reg", 300, 4, 2);
+        spec.cat_frac = 0.3;
+        let ds = generate_classification(&spec, seed);
+        SavedModel::new(Model::SingleTree(Udt::builder().fit(&ds).unwrap()), &ds)
+    }
+
+    #[test]
+    fn first_load_becomes_default() {
+        let r = ModelRegistry::new();
+        assert!(r.get(None).is_err());
+        r.load("a", saved(1)).unwrap();
+        r.load("b", saved(2)).unwrap();
+        assert_eq!(r.default_name().as_deref(), Some("a"));
+        assert_eq!(r.get(None).unwrap().name(), "a");
+        assert_eq!(r.get(Some("b")).unwrap().name(), "b");
+        assert_eq!(r.names(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn aliases_resolve_and_die_with_their_target() {
+        let r = ModelRegistry::new();
+        r.load("churn-v3", saved(3)).unwrap();
+        r.alias("prod", "churn-v3").unwrap();
+        assert_eq!(r.get(Some("prod")).unwrap().name(), "churn-v3");
+        assert!(r.alias("x", "nope").is_err());
+        // Shadowing a loaded model name would be a silently dead alias —
+        // and loading over an existing alias would be the same hazard in
+        // reverse.
+        assert!(r.alias("churn-v3", "churn-v3").is_err());
+        assert!(r.load("prod", saved(9)).is_err());
+        assert!(r.unload("churn-v3"));
+        assert!(r.get(Some("prod")).is_err());
+        assert!(r.aliases_list().is_empty());
+    }
+
+    #[test]
+    fn unloading_the_default_falls_back() {
+        let r = ModelRegistry::new();
+        r.load("a", saved(4)).unwrap();
+        r.load("b", saved(5)).unwrap();
+        assert!(r.unload("a"));
+        assert_eq!(r.default_name().as_deref(), Some("b"));
+        assert!(!r.unload("a"));
+    }
+
+    #[test]
+    fn set_default_switches_unaddressed_requests() {
+        let r = ModelRegistry::new();
+        r.load("a", saved(6)).unwrap();
+        r.load("b", saved(7)).unwrap();
+        r.set_default("b").unwrap();
+        assert_eq!(r.get(None).unwrap().name(), "b");
+        assert!(r.set_default("missing").is_err());
+    }
+
+    #[test]
+    fn default_set_via_alias_survives_unload_fallback() {
+        let r = ModelRegistry::new();
+        r.load("a", saved(10)).unwrap();
+        r.load("b", saved(11)).unwrap();
+        r.alias("prod", "b").unwrap();
+        r.set_default("prod").unwrap();
+        // Stored canonically, so the unload fallback fires.
+        assert_eq!(r.default_name().as_deref(), Some("b"));
+        assert!(r.unload("b"));
+        assert_eq!(r.default_name().as_deref(), Some("a"));
+        assert_eq!(r.get(None).unwrap().name(), "a");
+    }
+
+    #[test]
+    fn entry_counters_account_predictions() {
+        let r = ModelRegistry::new();
+        let bundle = saved(8);
+        let mut spec = SynthSpec::classification("reg", 300, 4, 2);
+        spec.cat_frac = 0.3;
+        let ds = generate_classification(&spec, 8);
+        r.load("m", bundle).unwrap();
+        let entry = r.get(Some("m")).unwrap();
+        let frame = crate::inference::RowFrame::from_dataset(&ds);
+        let preds = entry.predict_frame(&frame).unwrap();
+        assert_eq!(preds.len(), ds.n_rows());
+        let (reqs, n, _us) = entry.counters();
+        assert_eq!(reqs, 1);
+        assert_eq!(n, ds.n_rows() as u64);
+    }
+}

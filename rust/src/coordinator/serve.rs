@@ -1,76 +1,85 @@
-//! Batch prediction server over any [`Model`] family.
+//! Batch prediction server over a [`ModelRegistry`] of compiled models.
 //!
 //! A small line-oriented TCP protocol (std::net + a worker pool; the
-//! offline image has no tokio): each request line is a JSON array of
-//! feature values (numbers, strings, or null for missing) — or an array
-//! of such arrays for a batch — and the response line is the JSON array
-//! of predictions. Requests parse into rows once, then dispatch through
-//! [`Model::predict_batch`], so the family match is amortized over the
-//! whole batch and tuned trees / forests serve exactly like single trees.
+//! offline image has no tokio). Request lines:
 //!
-//! Control lines: `"ping"` → `"pong"`, `"stats"` → counters + model
-//! identity, `"schema"` → the bundled [`Schema`], `"shutdown"` closes the
-//! listener.
+//! * `[1.0, "red", null]` — one row of feature cells → one prediction
+//!   (legacy form; resolves to the registry's **default** model);
+//! * `[[...], [...]]` — a batch of rows → an array of predictions;
+//! * `{"model": "name", "rows": [[...], ...]}` — named-model addressing:
+//!   predictions come back as `{"model": "name", "labels": [...]}`.
+//!
+//! Batches parse **once** into a columnar [`crate::inference::RowFrame`];
+//! single rows take a leaner path (cells resolve straight through the
+//! bundled interner into model-space values). Either way prediction runs
+//! on the model's flattened [`crate::inference::CompiledModel`] tables —
+//! the boxed trees are never walked at serving time.
+//!
+//! Control lines: `"ping"` → `"pong"`, `"models"` → the registry
+//! listing, `"schema"` → the default model's schema (or
+//! `{"schema": "name"}` for any loaded model), `"stats"` →
+//! control/predict counters plus per-model latency & throughput, and
+//! `"shutdown"` stops the listener (idle connections are reaped within a
+//! read-timeout tick, so `serve` actually returns).
 
+use crate::coordinator::registry::{ModelEntry, ModelRegistry};
 use crate::data::value::Value;
 use crate::error::{Result, UdtError};
-use crate::model::{Model, SavedModel};
+use crate::inference::frame::json_cell;
+use crate::inference::{Cell, RowFrame};
+use crate::model::SavedModel;
 use crate::tree::NodeLabel;
 use crate::util::json::Json;
-use std::io::{BufRead, BufReader, Write};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
-/// Shared server state: the model bundle plus counters.
+/// How long a client read blocks before re-checking the shutdown flag.
+/// Bounds how long an idle connection can pin the accept scope open.
+const READ_TICK: Duration = Duration::from_millis(50);
+
+/// Shared server state: the model registry plus global counters.
 pub struct Server {
-    saved: SavedModel,
-    requests: AtomicU64,
-    predictions: AtomicU64,
+    registry: ModelRegistry,
+    /// Protocol control lines handled (ping / stats / schema / models /
+    /// shutdown) — *not* predictions.
+    control_requests: AtomicU64,
+    /// Prediction request lines handled (single rows and batches alike).
+    predict_requests: AtomicU64,
     shutdown: AtomicBool,
 }
 
 impl Server {
-    /// Serve a model bundle (any family; see [`SavedModel::load`]).
-    pub fn new(saved: SavedModel) -> Arc<Self> {
+    /// Serve a single model bundle under the name `"default"`.
+    /// (Compilation happens here, once.)
+    pub fn new(saved: SavedModel) -> Result<Arc<Self>> {
+        let registry = ModelRegistry::new();
+        registry.load("default", saved)?;
+        Ok(Self::with_registry(registry))
+    }
+
+    /// Serve a pre-populated registry (multiple named models, aliases).
+    pub fn with_registry(registry: ModelRegistry) -> Arc<Self> {
         Arc::new(Self {
-            saved,
-            requests: AtomicU64::new(0),
-            predictions: AtomicU64::new(0),
+            registry,
+            control_requests: AtomicU64::new(0),
+            predict_requests: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
         })
     }
 
-    /// The served model.
-    pub fn model(&self) -> &Model {
-        &self.saved.model
-    }
-
-    /// Parse one JSON value into a feature cell.
-    fn cell(&self, j: &Json) -> Result<Value> {
-        Ok(match j {
-            Json::Null => Value::Missing,
-            Json::Num(x) => Value::Num(*x),
-            Json::Str(s) => match self.saved.interner.get(s) {
-                Some(id) => Value::Cat(id),
-                // Unseen category: behaves like "equal to nothing" — the
-                // comparison semantics route it negative everywhere, which
-                // is exactly what Missing does.
-                None => Value::Missing,
-            },
-            other => return Err(UdtError::predict(format!("bad cell {other:?}"))),
-        })
-    }
-
-    /// Parse one JSON row into feature cells.
-    fn parse_row(&self, arr: &[Json]) -> Result<Vec<Value>> {
-        arr.iter().map(|j| self.cell(j)).collect()
+    /// The live registry (models can be loaded / unloaded while serving).
+    pub fn registry(&self) -> &ModelRegistry {
+        &self.registry
     }
 
     /// Render a prediction: class name when the schema knows one.
-    fn label_json(&self, label: NodeLabel) -> Json {
+    fn label_json(entry: &ModelEntry, label: NodeLabel) -> Json {
         match label {
-            NodeLabel::Class(c) => match self.saved.schema.class_name(c) {
+            NodeLabel::Class(c) => match entry.schema.class_name(c) {
                 Some(name) => Json::Str(name.to_string()),
                 None => Json::Num(c as f64),
             },
@@ -80,71 +89,226 @@ impl Server {
 
     /// Handle one request line; returns the response line.
     pub fn handle(&self, line: &str) -> String {
-        self.requests.fetch_add(1, Ordering::Relaxed);
         let trimmed = line.trim();
-        if trimmed == "\"ping\"" || trimmed == "ping" {
-            return "\"pong\"".to_string();
+        if let Some(resp) = self.handle_control(trimmed) {
+            self.control_requests.fetch_add(1, Ordering::Relaxed);
+            return resp;
         }
-        if trimmed == "\"stats\"" || trimmed == "stats" {
-            return Json::obj(vec![
-                (
-                    "requests",
-                    Json::Num(self.requests.load(Ordering::Relaxed) as f64),
-                ),
-                (
-                    "predictions",
-                    Json::Num(self.predictions.load(Ordering::Relaxed) as f64),
-                ),
-                ("kind", Json::Str(self.saved.model.kind().to_string())),
-                ("nodes", Json::Num(self.saved.model.n_nodes() as f64)),
-                (
-                    "n_features",
-                    Json::Num(self.saved.model.n_features() as f64),
-                ),
-            ])
-            .to_string();
+        let parsed = match Json::parse(trimmed) {
+            Ok(p) => p,
+            Err(e) => {
+                self.predict_requests.fetch_add(1, Ordering::Relaxed);
+                return error_json(&UdtError::predict(e.to_string()));
+            }
+        };
+        // `{"schema": "name"}` — the addressed counterpart of the bare
+        // "schema" control line (any loaded model, not just the default).
+        if parsed.get("schema").is_some() {
+            self.control_requests.fetch_add(1, Ordering::Relaxed);
+            return match self.named_schema(&parsed) {
+                Ok(j) => j.to_string(),
+                Err(e) => error_json(&e),
+            };
         }
-        if trimmed == "\"schema\"" || trimmed == "schema" {
-            return self.saved.schema.to_json().to_string();
-        }
-        if trimmed == "\"shutdown\"" || trimmed == "shutdown" {
-            self.shutdown.store(true, Ordering::SeqCst);
-            return "\"bye\"".to_string();
-        }
-        match self.handle_predict(trimmed) {
+        self.predict_requests.fetch_add(1, Ordering::Relaxed);
+        match self.handle_predict(&parsed) {
             Ok(j) => j.to_string(),
-            Err(e) => Json::obj(vec![("error", Json::Str(e.to_string()))]).to_string(),
+            Err(e) => error_json(&e),
         }
     }
 
-    fn handle_predict(&self, line: &str) -> Result<Json> {
-        let parsed = Json::parse(line).map_err(|e| UdtError::predict(e.to_string()))?;
-        let arr = parsed
-            .as_arr()
-            .ok_or_else(|| UdtError::predict("request must be a JSON array"))?;
-        // Batch if the first element is itself an array.
-        if matches!(arr.first(), Some(Json::Arr(_))) {
-            let rows: Result<Vec<Vec<Value>>> = arr
-                .iter()
-                .map(|row| {
-                    row.as_arr()
-                        .ok_or_else(|| UdtError::predict("batch rows must be arrays"))
-                        .and_then(|r| self.parse_row(r))
-                })
-                .collect();
-            let rows = rows?;
-            let labels = self.saved.model.predict_batch(&rows)?;
-            self.predictions
-                .fetch_add(labels.len() as u64, Ordering::Relaxed);
-            Ok(Json::Arr(
-                labels.into_iter().map(|l| self.label_json(l)).collect(),
-            ))
-        } else {
-            let row = self.parse_row(arr)?;
-            let label = self.saved.model.predict_row(&row)?;
-            self.predictions.fetch_add(1, Ordering::Relaxed);
-            Ok(self.label_json(label))
+    /// Schema of a named model (or alias).
+    fn named_schema(&self, parsed: &Json) -> Result<Json> {
+        let name = parsed
+            .get("schema")
+            .and_then(Json::as_str)
+            .ok_or_else(|| UdtError::predict("`schema` must be a model name string"))?;
+        Ok(self.registry.get(Some(name))?.schema.to_json())
+    }
+
+    /// Control lines; `None` means the line is a prediction request.
+    fn handle_control(&self, trimmed: &str) -> Option<String> {
+        match trimmed {
+            "\"ping\"" | "ping" => Some("\"pong\"".to_string()),
+            "\"stats\"" | "stats" => Some(self.stats_json().to_string()),
+            "\"models\"" | "models" => Some(self.models_json().to_string()),
+            "\"schema\"" | "schema" => Some(match self.registry.get(None) {
+                Ok(entry) => entry.schema.to_json().to_string(),
+                Err(e) => Json::obj(vec![("error", Json::Str(e.to_string()))]).to_string(),
+            }),
+            "\"shutdown\"" | "shutdown" => {
+                self.shutdown.store(true, Ordering::SeqCst);
+                Some("\"bye\"".to_string())
+            }
+            _ => None,
         }
+    }
+
+    /// Registry listing: loaded names, aliases, the default.
+    fn models_json(&self) -> Json {
+        let aliases: BTreeMap<String, Json> = self
+            .registry
+            .aliases_list()
+            .into_iter()
+            .map(|(a, t)| (a, Json::Str(t)))
+            .collect();
+        Json::obj(vec![
+            (
+                "models",
+                Json::Arr(self.registry.names().into_iter().map(Json::Str).collect()),
+            ),
+            ("aliases", Json::Obj(aliases)),
+            (
+                "default",
+                self.registry
+                    .default_name()
+                    .map(Json::Str)
+                    .unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    /// Global + per-model counters. Latency is mean time inside the
+    /// compiled predict per request; throughput is predictions per busy
+    /// second.
+    fn stats_json(&self) -> Json {
+        let mut models: BTreeMap<String, Json> = BTreeMap::new();
+        for entry in self.registry.entries() {
+            let (reqs, preds, ns) = entry.counters();
+            let busy_s = ns as f64 / 1e9;
+            models.insert(
+                entry.name().to_string(),
+                Json::obj(vec![
+                    ("kind", Json::Str(entry.compiled.kind().to_string())),
+                    ("nodes", Json::Num(entry.compiled.n_nodes() as f64)),
+                    (
+                        "n_features",
+                        Json::Num(entry.compiled.n_features() as f64),
+                    ),
+                    ("trees", Json::Num(entry.compiled.n_trees() as f64)),
+                    (
+                        "table_bytes",
+                        Json::Num(entry.compiled.table_bytes() as f64),
+                    ),
+                    ("predict_requests", Json::Num(reqs as f64)),
+                    ("predictions", Json::Num(preds as f64)),
+                    ("busy_ms", Json::Num(ns as f64 / 1e6)),
+                    (
+                        "mean_ms",
+                        Json::Num(if reqs > 0 {
+                            ns as f64 / 1e6 / reqs as f64
+                        } else {
+                            0.0
+                        }),
+                    ),
+                    (
+                        "rows_per_sec",
+                        Json::Num(if busy_s > 0.0 {
+                            preds as f64 / busy_s
+                        } else {
+                            0.0
+                        }),
+                    ),
+                ]),
+            );
+        }
+        Json::obj(vec![
+            (
+                "control_requests",
+                Json::Num(self.control_requests.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "predict_requests",
+                Json::Num(self.predict_requests.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "default",
+                self.registry
+                    .default_name()
+                    .map(Json::Str)
+                    .unwrap_or(Json::Null),
+            ),
+            ("models", Json::Obj(models)),
+        ])
+    }
+
+    fn handle_predict(&self, parsed: &Json) -> Result<Json> {
+        match parsed {
+            // Legacy form: bare row / batch → the default model.
+            Json::Arr(items) => {
+                let entry = self.registry.get(None)?;
+                if matches!(items.first(), Some(Json::Arr(_))) {
+                    let labels = self.predict_rows(&entry, batch_rows(items)?)?;
+                    Ok(Json::Arr(labels))
+                } else {
+                    self.predict_one(&entry, items)
+                }
+            }
+            // Addressed form: {"model": "name", "rows": [...]}.
+            Json::Obj(_) => {
+                let name = match parsed.get("model") {
+                    None => None,
+                    Some(j) => Some(j.as_str().ok_or_else(|| {
+                        UdtError::predict("`model` must be a string")
+                    })?),
+                };
+                let rows = parsed
+                    .get("rows")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| UdtError::predict("request object needs a `rows` array"))?;
+                let entry = self.registry.get(name)?;
+                let labels = if rows.is_empty() {
+                    // A well-formed empty batch (e.g. a proxy flushing an
+                    // empty buffer) gets empty labels, not an arity error.
+                    Vec::new()
+                } else if matches!(rows.first(), Some(Json::Arr(_))) {
+                    self.predict_rows(&entry, batch_rows(rows)?)?
+                } else {
+                    vec![self.predict_one(&entry, rows)?]
+                };
+                Ok(Json::obj(vec![
+                    ("model", Json::Str(entry.name().to_string())),
+                    ("labels", Json::Arr(labels)),
+                ]))
+            }
+            _ => Err(UdtError::predict("request must be a JSON array or object")),
+        }
+    }
+
+    /// Single-row fast path: resolve cells straight into model-space
+    /// values through the bundled interner (unseen category → missing,
+    /// exactly the frame path's routing) and walk the compiled tables —
+    /// no per-request frame, interner or translation tables. Cell
+    /// classification is the frame path's [`json_cell`] rule, so the two
+    /// paths cannot drift apart.
+    fn predict_one(&self, entry: &ModelEntry, cells: &[Json]) -> Result<Json> {
+        let row: Vec<Value> = cells
+            .iter()
+            .map(|j| {
+                Ok(match json_cell(j)? {
+                    Cell::Missing => Value::Missing,
+                    Cell::Num(x) => Value::Num(x),
+                    Cell::Str(s) => match entry.interner.get(s) {
+                        Some(id) => Value::Cat(id),
+                        None => Value::Missing,
+                    },
+                })
+            })
+            .collect::<Result<_>>()?;
+        let label = entry.predict_row(&row)?;
+        Ok(Self::label_json(entry, label))
+    }
+
+    /// Parse a batch of rows into a frame once, predict on the compiled
+    /// artifact, render labels through the entry's schema.
+    fn predict_rows(&self, entry: &ModelEntry, rows: Vec<&[Json]>) -> Result<Vec<Json>> {
+        let frame = RowFrame::from_json_rows(&rows)?;
+        let preds = entry.predict_frame(&frame)?;
+        Ok(preds
+            .labels()
+            .iter()
+            .map(|&l| Self::label_json(entry, l))
+            .collect())
     }
 
     /// Serve until a `shutdown` request arrives. Returns the bound address
@@ -170,46 +334,154 @@ impl Server {
                         });
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
+                        std::thread::sleep(Duration::from_millis(5));
                     }
-                    Err(e) => return Err(e.into()),
+                    Err(e) => {
+                        // Wake every client loop so the scope can join
+                        // before the error propagates — otherwise an idle
+                        // connection would pin serve() open forever with
+                        // the error swallowed.
+                        self.shutdown.store(true, Ordering::SeqCst);
+                        return Err(e.into());
+                    }
                 }
             }
             Ok(())
         })
     }
 
+    /// One connection. Reads tick every [`READ_TICK`] so an **idle**
+    /// client notices `shutdown` and releases the serve scope (the
+    /// pre-registry server blocked forever here); responses go through a
+    /// `BufWriter` and flush once per line (one syscall, not two).
     fn client_loop(&self, stream: TcpStream) -> Result<()> {
-        let mut writer = stream.try_clone()?;
-        let reader = BufReader::new(stream);
-        for line in reader.lines() {
-            let line = line?;
-            if line.is_empty() {
-                continue;
-            }
-            let resp = self.handle(&line);
-            writer.write_all(resp.as_bytes())?;
-            writer.write_all(b"\n")?;
+        // On BSD-likes an accepted socket inherits the listener's
+        // O_NONBLOCK, which would defeat the timeouts below (instant
+        // WouldBlock → busy-spin). Force blocking mode first.
+        stream.set_nonblocking(false)?;
+        stream.set_read_timeout(Some(READ_TICK))?;
+        stream.set_write_timeout(Some(READ_TICK))?;
+        let mut writer = BufWriter::new(stream.try_clone()?);
+        let mut reader = BufReader::new(stream);
+        // Accumulate raw bytes, not a String: `read_line`'s UTF-8 guard
+        // would *discard* bytes already consumed from the socket when a
+        // timeout tick lands inside a multibyte character; `read_until`
+        // keeps every partial read in the buffer across ticks. UTF-8
+        // conversion happens once per complete line.
+        let mut buf: Vec<u8> = Vec::new();
+        loop {
             if self.shutdown.load(Ordering::SeqCst) {
                 break;
+            }
+            match reader.read_until(b'\n', &mut buf) {
+                Ok(0) => {
+                    // Client hung up; a final unterminated line may still
+                    // be buffered (read_until only returns it with the
+                    // EOF read when no timeout tick intervened) — answer
+                    // it like `BufReader::lines` used to.
+                    let line = String::from_utf8_lossy(&buf);
+                    if !line.trim().is_empty() {
+                        let resp = self.handle(&line);
+                        self.write_line(&mut writer, resp)?;
+                    }
+                    break;
+                }
+                Ok(_) => {
+                    let line = String::from_utf8_lossy(&buf);
+                    if !line.trim().is_empty() {
+                        let resp = self.handle(&line);
+                        self.write_line(&mut writer, resp)?;
+                    }
+                    buf.clear();
+                }
+                // Timeout tick: partial data (if any) stays in `buf`;
+                // loop around and re-check the shutdown flag.
+                Err(e) if is_tick(&e) => {}
+                Err(e) => return Err(e.into()),
             }
         }
         Ok(())
     }
+
+    /// Write one response line through the `BufWriter` and flush it once
+    /// (one syscall per response in the common case). Writes carry the
+    /// same tick discipline as reads: a peer that stops draining its
+    /// socket (kernel send buffer full) times out every [`READ_TICK`]
+    /// and the loop then checks the shutdown flag instead of pinning the
+    /// serve scope open forever. The flag is checked only *after* a
+    /// failed attempt — never before the first — so the `"bye"` reply to
+    /// the very request that set it still goes out to a live client.
+    /// Offsets track raw `write` calls, so a timed-out attempt never
+    /// duplicates bytes; abandoning a response mid-shutdown is fine (the
+    /// connection is going away).
+    fn write_line(&self, writer: &mut BufWriter<TcpStream>, resp: String) -> Result<()> {
+        let mut out = resp.into_bytes();
+        out.push(b'\n');
+        let mut off = 0;
+        while off < out.len() {
+            match writer.write(&out[off..]) {
+                Ok(0) => return Err(std::io::Error::from(std::io::ErrorKind::WriteZero).into()),
+                Ok(n) => off += n,
+                Err(e) if is_tick(&e) => {
+                    if self.shutdown.load(Ordering::SeqCst) {
+                        return Ok(());
+                    }
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        loop {
+            match writer.flush() {
+                Ok(()) => return Ok(()),
+                Err(e) if is_tick(&e) => {
+                    if self.shutdown.load(Ordering::SeqCst) {
+                        return Ok(());
+                    }
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+}
+
+/// Render an error as a protocol `{"error": ...}` response line.
+fn error_json(e: &UdtError) -> String {
+    Json::obj(vec![("error", Json::Str(e.to_string()))]).to_string()
+}
+
+/// A retryable socket-timeout tick (vs a real I/O failure).
+fn is_tick(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock
+            | std::io::ErrorKind::TimedOut
+            | std::io::ErrorKind::Interrupted
+    )
+}
+
+/// Borrow a batch request's rows as slices, rejecting non-array rows.
+fn batch_rows(items: &[Json]) -> Result<Vec<&[Json]>> {
+    items
+        .iter()
+        .map(|row| {
+            row.as_arr()
+                .ok_or_else(|| UdtError::predict("batch rows must be arrays"))
+        })
+        .collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synth::{generate_classification, SynthSpec};
-    use crate::model::Udt;
+    use crate::model::{Model, Udt};
 
     fn server() -> Arc<Server> {
         let mut spec = SynthSpec::classification("srv", 500, 4, 2);
         spec.cat_frac = 0.3;
         let ds = generate_classification(&spec, 61);
         let tree = Udt::builder().fit(&ds).unwrap();
-        Server::new(SavedModel::new(Model::SingleTree(tree), &ds))
+        Server::new(SavedModel::new(Model::SingleTree(tree), &ds)).unwrap()
     }
 
     #[test]
@@ -217,8 +489,35 @@ mod tests {
         let s = server();
         assert_eq!(s.handle("\"ping\""), "\"pong\"");
         let stats = Json::parse(&s.handle("stats")).unwrap();
-        assert!(stats.get("requests").unwrap().as_f64().unwrap() >= 1.0);
-        assert_eq!(stats.get("kind").unwrap().as_str().unwrap(), "single_tree");
+        assert!(stats.get("control_requests").unwrap().as_f64().unwrap() >= 1.0);
+        assert_eq!(stats.get("default").unwrap().as_str().unwrap(), "default");
+        let model = stats.get("models").unwrap().get("default").unwrap();
+        assert_eq!(model.get("kind").unwrap().as_str().unwrap(), "single_tree");
+        assert!(model.get("nodes").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn control_lines_do_not_count_as_predictions() {
+        let s = server();
+        s.handle("ping");
+        s.handle("models");
+        s.handle("[1.0, 2.0, 3.0, null]");
+        let stats = Json::parse(&s.handle("stats")).unwrap();
+        // ping + models (stats itself counts after the snapshot).
+        assert_eq!(
+            stats.get("control_requests").unwrap().as_f64().unwrap(),
+            2.0
+        );
+        assert_eq!(
+            stats.get("predict_requests").unwrap().as_f64().unwrap(),
+            1.0
+        );
+        let model = stats.get("models").unwrap().get("default").unwrap();
+        assert_eq!(
+            model.get("predict_requests").unwrap().as_f64().unwrap(),
+            1.0
+        );
+        assert_eq!(model.get("predictions").unwrap().as_f64().unwrap(), 1.0);
     }
 
     #[test]
@@ -237,6 +536,70 @@ mod tests {
         let batch = format!("[{row}, {row}]");
         let rb = Json::parse(&s.handle(&batch)).unwrap();
         assert_eq!(rb.as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn named_model_requests_address_the_registry() {
+        let mut spec = SynthSpec::classification("srv2", 400, 4, 2);
+        spec.cat_frac = 0.3;
+        let ds = generate_classification(&spec, 67);
+        let registry = ModelRegistry::new();
+        registry
+            .load(
+                "a",
+                SavedModel::new(Model::SingleTree(Udt::builder().fit(&ds).unwrap()), &ds),
+            )
+            .unwrap();
+        registry
+            .load(
+                "b",
+                SavedModel::new(
+                    Model::Forest(
+                        crate::tree::forest::Forest::fit(
+                            &ds,
+                            &crate::tree::forest::ForestConfig {
+                                n_trees: 3,
+                                ..Default::default()
+                            },
+                        )
+                        .unwrap(),
+                    ),
+                    &ds,
+                ),
+            )
+            .unwrap();
+        registry.alias("prod", "b").unwrap();
+        let s = Server::with_registry(registry);
+
+        let resp = Json::parse(&s.handle(r#"{"model":"b","rows":[[1,2,3,4],[4,3,2,1]]}"#)).unwrap();
+        assert_eq!(resp.get("model").unwrap().as_str().unwrap(), "b");
+        assert_eq!(resp.get("labels").unwrap().as_arr().unwrap().len(), 2);
+        // Aliases resolve to the canonical name.
+        let resp = Json::parse(&s.handle(r#"{"model":"prod","rows":[1,2,3,4]}"#)).unwrap();
+        assert_eq!(resp.get("model").unwrap().as_str().unwrap(), "b");
+        assert_eq!(resp.get("labels").unwrap().as_arr().unwrap().len(), 1);
+        // A well-formed empty batch yields empty labels, not an error.
+        let resp = Json::parse(&s.handle(r#"{"model":"b","rows":[]}"#)).unwrap();
+        assert_eq!(resp.get("labels").unwrap().as_arr().unwrap().len(), 0);
+        // Any loaded model's schema is reachable by name.
+        let schema = Json::parse(&s.handle(r#"{"schema":"b"}"#)).unwrap();
+        assert_eq!(schema.get("features").unwrap().as_arr().unwrap().len(), 4);
+        let resp = s.handle(r#"{"schema":"gone"}"#);
+        assert!(resp.contains("error"), "{resp}");
+        // Unknown names are protocol errors, not panics.
+        let resp = Json::parse(&s.handle(r#"{"model":"nope","rows":[[1,2,3,4]]}"#)).unwrap();
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("nope"));
+        // Bare arrays still hit the default (first-loaded) model.
+        let legacy = s.handle("[1.0, 2.0, 3.0, 4.0]");
+        assert!(!legacy.contains("error"), "{legacy}");
+        // Both models show in the listing.
+        let models = Json::parse(&s.handle("models")).unwrap();
+        assert_eq!(models.get("models").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(models.get("default").unwrap().as_str().unwrap(), "a");
+        assert_eq!(
+            models.get("aliases").unwrap().get("prod").unwrap().as_str().unwrap(),
+            "b"
+        );
     }
 
     #[test]
@@ -272,5 +635,35 @@ mod tests {
         line.clear();
         reader.read_line(&mut line).unwrap();
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_terminates_despite_idle_connection() {
+        // Regression: an idle client used to pin `serve` open forever
+        // (its blocking read kept the scope thread alive).
+        let s = server();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let (done_tx, done_rx) = std::sync::mpsc::channel();
+        let s2 = Arc::clone(&s);
+        let handle = std::thread::spawn(move || {
+            s2.serve("127.0.0.1:0", |addr| tx.send(addr).unwrap()).unwrap();
+            done_tx.send(()).unwrap();
+        });
+        let addr = rx.recv().unwrap();
+        // A client that connects and then says nothing.
+        let idle = TcpStream::connect(addr).unwrap();
+        // A second client issues the shutdown.
+        let mut ctl = TcpStream::connect(addr).unwrap();
+        ctl.write_all(b"\"shutdown\"\n").unwrap();
+        let mut reader = BufReader::new(ctl.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "\"bye\"");
+        // serve() must return promptly even though `idle` never spoke.
+        done_rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("serve() hung on the idle connection");
+        handle.join().unwrap();
+        drop(idle);
     }
 }

@@ -1,0 +1,867 @@
+//! The compiled prediction artifact: [`CompiledModel`].
+//!
+//! `Model::compile()` flattens every tree of any family into
+//! struct-of-arrays node tables — per node a feature id, a split operand
+//! tag + payload, positive/negative child indices, and the node label —
+//! each table a contiguous `Box<[_]>` with the root at index 0 and the
+//! positive child laid out adjacent to its parent (pre-order), so a
+//! traversal is a handful of sequential array reads with **zero** boxed
+//! pointer chasing or `Option` unwrapping per step.
+//!
+//! Two more things bake in at compile time:
+//!
+//! * **Tuned caps.** A `Model::TunedTree`'s effective
+//!   `(max_depth, min_split)` are applied structurally: any node the
+//!   capped walk would answer from becomes a leaf in the compiled table,
+//!   so the hot loop carries no depth counter and no per-step cap
+//!   comparisons (paper Algorithm 7 semantics, paid once at compile).
+//! * **The interner.** Each feature gets its own categorical lookup
+//!   mapping the category *strings* its `Eq` splits test to their operand
+//!   ids. Resolving a request's string cells never touches the global
+//!   training interner: [`CompiledModel::predict_frame`] translates the
+//!   frame's local id space through the per-feature lookups once per
+//!   frame, and the inner loop compares integers.
+//!
+//! Node table layout (one `CompiledTree` per member tree):
+//!
+//! ```text
+//! index:    0        1        2        3     ...   (root = 0, pos child adjacent)
+//! tag:     [Le]     [Eq]     [Leaf]   [Leaf] ...   u8: Leaf / Le / Gt / Eq
+//! feature: [3]      [0]      [-]      [-]    ...   u32 feature id
+//! operand: [f64bits][cat id] [-]      [-]    ...   u64 payload (threshold bits / cat id)
+//! pos:     [1]      [2]      [-]      [-]    ...   u32 child index (predicate true)
+//! neg:     [9]      [3]      [-]      [-]    ...   u32 child index (false / missing)
+//! label:   [...]    [...]    [c1]     [c0]   ...   u16 class or f64 value
+//! ```
+//!
+//! Prediction over a [`RowFrame`] is block-iterated: rows are split into
+//! fixed-size chunks, chunks fan out over [`parallel_map_chunked`], and
+//! within a chunk the row loop is tight over the tables. Forest chunks aggregate
+//! member votes per row in tree order (bit-identical to the boxed
+//! ensemble path) and return per-class vote counts in [`Predictions`].
+
+use super::frame::{FrameColumn, RowFrame};
+use crate::coordinator::parallel::parallel_map_chunked;
+use crate::data::dataset::{Labels, TaskKind};
+use crate::data::interner::Interner;
+use crate::data::value::Value;
+use crate::error::{Result, UdtError};
+use crate::model::{Model, Quality};
+use crate::selection::split::SplitOp;
+use crate::tree::forest::vote_argmax;
+use crate::tree::{NodeLabel, Tree};
+use std::collections::HashMap;
+
+/// Node tags of the flattened tables.
+const TAG_LEAF: u8 = 0;
+const TAG_LE: u8 = 1;
+const TAG_GT: u8 = 2;
+const TAG_EQ: u8 = 3;
+
+/// Sentinel for "this frame category can never match any operand".
+const NO_MATCH: u32 = u32::MAX;
+
+/// Rows per traversal block (chunks parallelize over the worker pool).
+const CHUNK_ROWS: usize = 512;
+
+/// Leaf payloads of one compiled tree (one task kind per model).
+#[derive(Debug, Clone)]
+enum CompiledLabels {
+    Class(Box<[u16]>),
+    Value(Box<[f64]>),
+}
+
+/// One flattened tree: parallel struct-of-arrays node tables.
+#[derive(Debug, Clone)]
+struct CompiledTree {
+    tag: Box<[u8]>,
+    feature: Box<[u32]>,
+    operand: Box<[u64]>,
+    pos: Box<[u32]>,
+    neg: Box<[u32]>,
+    labels: CompiledLabels,
+}
+
+impl CompiledTree {
+    /// Flatten a boxed tree, baking prediction-time caps structurally:
+    /// nodes the capped walk answers from become leaves. Pre-order with
+    /// the positive child first keeps the common branch adjacent.
+    fn flatten(tree: &Tree, max_depth: usize, min_split: usize) -> CompiledTree {
+        let mut tag: Vec<u8> = Vec::with_capacity(tree.n_nodes());
+        let mut feature: Vec<u32> = Vec::with_capacity(tree.n_nodes());
+        let mut operand: Vec<u64> = Vec::with_capacity(tree.n_nodes());
+        let mut pos: Vec<u32> = Vec::with_capacity(tree.n_nodes());
+        let mut neg: Vec<u32> = Vec::with_capacity(tree.n_nodes());
+        let mut class_labels: Vec<u16> = Vec::new();
+        let mut value_labels: Vec<f64> = Vec::new();
+        let is_class = tree.task == TaskKind::Classification;
+
+        // (source node, patch site in the parent's pos/neg cell).
+        enum Patch {
+            Root,
+            Pos(usize),
+            Neg(usize),
+        }
+        let mut stack: Vec<(u32, Patch)> = vec![(Tree::ROOT, Patch::Root)];
+        while let Some((src, patch)) = stack.pop() {
+            let node = &tree.nodes[src as usize];
+            let slot = tag.len();
+            match patch {
+                Patch::Root => {}
+                Patch::Pos(p) => pos[p] = slot as u32,
+                Patch::Neg(p) => neg[p] = slot as u32,
+            }
+            match node.label {
+                NodeLabel::Class(c) => class_labels.push(c),
+                NodeLabel::Value(v) => value_labels.push(v),
+            }
+            // The boxed walk answers here when the node is a leaf OR the
+            // tuned caps cut it off (walk depth equals the stored node
+            // depth, root = 1) — bake that as a structural leaf.
+            let capped = (node.n_samples as usize) < min_split
+                || node.depth as usize >= max_depth;
+            match (&node.split, node.children) {
+                (Some(split), Some((p, n))) if !capped => {
+                    let (t, op) = match split.op {
+                        SplitOp::Le(x) => (TAG_LE, x.to_bits()),
+                        SplitOp::Gt(x) => (TAG_GT, x.to_bits()),
+                        SplitOp::Eq(c) => (TAG_EQ, c.0 as u64),
+                    };
+                    tag.push(t);
+                    feature.push(split.feature as u32);
+                    operand.push(op);
+                    pos.push(0);
+                    neg.push(0);
+                    // Neg first so the positive child pops (and lays out)
+                    // immediately after its parent.
+                    stack.push((n, Patch::Neg(slot)));
+                    stack.push((p, Patch::Pos(slot)));
+                }
+                _ => {
+                    tag.push(TAG_LEAF);
+                    feature.push(0);
+                    operand.push(0);
+                    pos.push(0);
+                    neg.push(0);
+                }
+            }
+        }
+
+        CompiledTree {
+            tag: tag.into_boxed_slice(),
+            feature: feature.into_boxed_slice(),
+            operand: operand.into_boxed_slice(),
+            pos: pos.into_boxed_slice(),
+            neg: neg.into_boxed_slice(),
+            labels: if is_class {
+                CompiledLabels::Class(class_labels.into_boxed_slice())
+            } else {
+                CompiledLabels::Value(value_labels.into_boxed_slice())
+            },
+        }
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.tag.len()
+    }
+
+    /// Resident size of this tree's node tables, derived from the
+    /// actual element types so it tracks layout changes.
+    fn table_bytes(&self) -> usize {
+        use std::mem::size_of;
+        let labels = match &self.labels {
+            CompiledLabels::Class(ls) => ls.len() * size_of::<u16>(),
+            CompiledLabels::Value(ls) => ls.len() * size_of::<f64>(),
+        };
+        self.tag.len()
+            * (size_of::<u8>() + size_of::<u32>() + size_of::<u64>() + 2 * size_of::<u32>())
+            + labels
+    }
+
+    /// Walk one frame row to its leaf; returns the leaf's table index.
+    /// `cat_maps[f]` translates frame-local category ids into this
+    /// model's operand space (`NO_MATCH` for categories feature `f`
+    /// never tests).
+    #[inline]
+    fn walk_frame(&self, frame: &RowFrame, row: usize, cat_maps: &[Vec<u32>]) -> usize {
+        let mut i = 0usize;
+        loop {
+            let t = self.tag[i];
+            if t == TAG_LEAF {
+                return i;
+            }
+            let f = self.feature[i] as usize;
+            let hit = eval_frame_cell(frame.column(f), row, t, self.operand[i], &cat_maps[f]);
+            i = if hit { self.pos[i] } else { self.neg[i] } as usize;
+        }
+    }
+
+    /// Walk one row of model-space values (`Value::Cat` ids in the
+    /// training interner's space).
+    #[inline]
+    fn walk_values(&self, row: &[Value]) -> usize {
+        let mut i = 0usize;
+        loop {
+            let t = self.tag[i];
+            if t == TAG_LEAF {
+                return i;
+            }
+            let hit = eval_model_cell(row[self.feature[i] as usize], t, self.operand[i]);
+            i = if hit { self.pos[i] } else { self.neg[i] } as usize;
+        }
+    }
+
+    #[inline]
+    fn class_at(&self, leaf: usize) -> u16 {
+        match &self.labels {
+            CompiledLabels::Class(ls) => ls[leaf],
+            CompiledLabels::Value(_) => 0,
+        }
+    }
+
+    #[inline]
+    fn value_at(&self, leaf: usize) -> f64 {
+        match &self.labels {
+            CompiledLabels::Value(ls) => ls[leaf],
+            CompiledLabels::Class(_) => f64::NAN,
+        }
+    }
+
+    #[inline]
+    fn label_at(&self, leaf: usize) -> NodeLabel {
+        match &self.labels {
+            CompiledLabels::Class(ls) => NodeLabel::Class(ls[leaf]),
+            CompiledLabels::Value(ls) => NodeLabel::Value(ls[leaf]),
+        }
+    }
+}
+
+/// Evaluate one compiled predicate against a frame cell (paper Table 3
+/// semantics: cross-type and missing always false → negative branch).
+#[inline]
+fn eval_frame_cell(col: &FrameColumn, row: usize, tag: u8, operand: u64, cat_map: &[u32]) -> bool {
+    match col {
+        FrameColumn::Num { values, valid } => {
+            if tag == TAG_EQ || !valid.get(row) {
+                return false;
+            }
+            let x = values[row];
+            if tag == TAG_LE {
+                x <= f64::from_bits(operand)
+            } else {
+                x > f64::from_bits(operand)
+            }
+        }
+        FrameColumn::Cat { ids, valid } => {
+            tag == TAG_EQ
+                && valid.get(row)
+                && translate(cat_map, ids[row]) as u64 == operand
+        }
+        FrameColumn::Mixed { cells } => match (tag, cells[row]) {
+            (TAG_LE, Value::Num(x)) => x <= f64::from_bits(operand),
+            (TAG_GT, Value::Num(x)) => x > f64::from_bits(operand),
+            (TAG_EQ, Value::Cat(c)) => translate(cat_map, c.0) as u64 == operand,
+            _ => false,
+        },
+    }
+}
+
+#[inline]
+fn translate(cat_map: &[u32], frame_id: u32) -> u32 {
+    cat_map.get(frame_id as usize).copied().unwrap_or(NO_MATCH)
+}
+
+/// Evaluate one compiled predicate against a model-space value.
+#[inline]
+fn eval_model_cell(v: Value, tag: u8, operand: u64) -> bool {
+    match (tag, v) {
+        (TAG_LE, Value::Num(x)) => x <= f64::from_bits(operand),
+        (TAG_GT, Value::Num(x)) => x > f64::from_bits(operand),
+        (TAG_EQ, Value::Cat(c)) => c.0 as u64 == operand,
+        _ => false,
+    }
+}
+
+/// How member predictions combine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Aggregation {
+    /// One tree: the leaf label answers.
+    Single,
+    /// Classification ensemble: majority vote, ties toward the smaller
+    /// class id (identical to `Forest::aggregate`).
+    ForestVote,
+    /// Regression ensemble: mean of member leaf values (tree order).
+    ForestMean,
+}
+
+/// Per-class vote counts of a classification forest, row-major.
+#[derive(Debug, Clone)]
+pub struct VoteCounts {
+    n_classes: usize,
+    n_trees: usize,
+    counts: Vec<u32>,
+}
+
+impl VoteCounts {
+    /// Votes for row `r`, one count per class id.
+    pub fn row(&self, r: usize) -> &[u32] {
+        &self.counts[r * self.n_classes..(r + 1) * self.n_classes]
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.n_trees
+    }
+
+    /// Vote margin of row `r`: (winner − runner-up) / ensemble size, in
+    /// `[0, 1]`. 1.0 for a unanimous ensemble (or a single class).
+    pub fn margin(&self, r: usize) -> f64 {
+        let votes = self.row(r);
+        let mut top = 0u32;
+        let mut second = 0u32;
+        for &v in votes {
+            if v > top {
+                second = top;
+                top = v;
+            } else if v > second {
+                second = v;
+            }
+        }
+        (top - second) as f64 / self.n_trees.max(1) as f64
+    }
+}
+
+/// Rich prediction output of [`CompiledModel::predict_frame`]: one label
+/// per row, plus per-class vote counts when the model is a
+/// classification forest.
+#[derive(Debug, Clone)]
+pub struct Predictions {
+    labels: Vec<NodeLabel>,
+    votes: Option<VoteCounts>,
+}
+
+impl Predictions {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn labels(&self) -> &[NodeLabel] {
+        &self.labels
+    }
+
+    pub fn into_labels(self) -> Vec<NodeLabel> {
+        self.labels
+    }
+
+    pub fn label(&self, r: usize) -> NodeLabel {
+        self.labels[r]
+    }
+
+    /// Ensemble vote counts (classification forests only).
+    pub fn votes(&self) -> Option<&VoteCounts> {
+        self.votes.as_ref()
+    }
+}
+
+/// A compile-once / predict-many artifact of any [`Model`] family. See
+/// the module docs for the flattened layout. Cheap to share across
+/// serving threads (`Sync`, no interior mutability).
+#[derive(Debug, Clone)]
+pub struct CompiledModel {
+    kind: &'static str,
+    task: TaskKind,
+    n_features: usize,
+    /// Classes of the label space (classification forests vote into it;
+    /// 0 for regression and plain trees compiled without one known).
+    n_classes: usize,
+    agg: Aggregation,
+    trees: Box<[CompiledTree]>,
+    /// Per-feature baked categorical lookup: category string → the
+    /// operand id this feature's `Eq` nodes test. Strings absent from a
+    /// feature's table can never satisfy any of its splits.
+    cat_lookup: Box<[HashMap<String, u32>]>,
+}
+
+impl CompiledModel {
+    /// Compile a model with the interner it was trained with (categorical
+    /// operand ids resolve through it into the baked per-feature
+    /// lookups). [`crate::model::SavedModel::compile`] passes the
+    /// bundled interner.
+    pub fn compile(model: &Model, interner: &Interner) -> Result<CompiledModel> {
+        let (trees, agg, n_classes): (Vec<CompiledTree>, Aggregation, usize) = match model {
+            Model::SingleTree(t) => {
+                (vec![CompiledTree::flatten(t, usize::MAX, 0)], Aggregation::Single, 0)
+            }
+            Model::TunedTree {
+                tree,
+                max_depth,
+                min_split,
+            } => (
+                vec![CompiledTree::flatten(tree, *max_depth, *min_split)],
+                Aggregation::Single,
+                0,
+            ),
+            Model::Forest(f) => {
+                let trees = f
+                    .trees
+                    .iter()
+                    .map(|t| CompiledTree::flatten(t, usize::MAX, 0))
+                    .collect();
+                let agg = match f.task {
+                    TaskKind::Classification => Aggregation::ForestVote,
+                    TaskKind::Regression => Aggregation::ForestMean,
+                };
+                (trees, agg, f.n_classes)
+            }
+        };
+
+        // Bake the interner: per feature, the strings its Eq operands
+        // name. An operand id outside the interner is a corrupt model.
+        let n_features = model.n_features();
+        let mut cat_lookup: Vec<HashMap<String, u32>> = vec![HashMap::new(); n_features];
+        for tree in &trees {
+            for i in 0..tree.n_nodes() {
+                if tree.tag[i] == TAG_EQ {
+                    let id = tree.operand[i] as u32;
+                    let name = interner.names().get(id as usize).ok_or_else(|| {
+                        UdtError::model(format!(
+                            "categorical operand {id} out of interner range ({})",
+                            interner.len()
+                        ))
+                    })?;
+                    cat_lookup[tree.feature[i] as usize].insert(name.clone(), id);
+                }
+            }
+        }
+
+        Ok(CompiledModel {
+            kind: model.kind(),
+            task: model.task(),
+            n_features,
+            n_classes,
+            agg,
+            trees: trees.into_boxed_slice(),
+            cat_lookup: cat_lookup.into_boxed_slice(),
+        })
+    }
+
+    /// Family tag of the source model (`single_tree` / `tuned_tree` /
+    /// `forest`).
+    pub fn kind(&self) -> &'static str {
+        self.kind
+    }
+
+    pub fn task(&self) -> TaskKind {
+        self.task
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    /// Total flattened node count across member trees.
+    pub fn n_nodes(&self) -> usize {
+        self.trees.iter().map(CompiledTree::n_nodes).sum()
+    }
+
+    /// Resident size of the flattened node tables, in bytes (reported
+    /// per model in the server's `stats`).
+    pub fn table_bytes(&self) -> usize {
+        self.trees.iter().map(CompiledTree::table_bytes).sum()
+    }
+
+    /// Translate the frame's local category ids into this model's
+    /// operand space, once per feature: `maps[f][frame_id]` is the
+    /// operand id feature `f` knows the string as, or `NO_MATCH`.
+    fn build_cat_maps(&self, frame: &RowFrame) -> Vec<Vec<u32>> {
+        let names = frame.interner().names();
+        self.cat_lookup
+            .iter()
+            .map(|lookup| {
+                if lookup.is_empty() {
+                    return Vec::new();
+                }
+                names
+                    .iter()
+                    .map(|n| lookup.get(n).copied().unwrap_or(NO_MATCH))
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Predict every row of a frame, chunk-parallel over all cores.
+    pub fn predict_frame(&self, frame: &RowFrame) -> Result<Predictions> {
+        self.predict_frame_threads(frame, 0)
+    }
+
+    /// [`predict_frame`](Self::predict_frame) with an explicit worker
+    /// count (0 = all cores, 1 = sequential). Thread count never changes
+    /// the predictions — chunks are independent and stitched in order.
+    pub fn predict_frame_threads(&self, frame: &RowFrame, n_threads: usize) -> Result<Predictions> {
+        if frame.n_features() != self.n_features {
+            return Err(UdtError::predict(format!(
+                "expected {} features, got {}",
+                self.n_features,
+                frame.n_features()
+            )));
+        }
+        let n = frame.n_rows();
+        let cat_maps = self.build_cat_maps(frame);
+        let outs = parallel_map_chunked(n, CHUNK_ROWS, n_threads, |start, end| {
+            self.predict_chunk(frame, start, end, &cat_maps)
+        });
+
+        let mut labels = Vec::with_capacity(n);
+        let mut counts: Vec<u32> = Vec::new();
+        for mut out in outs {
+            labels.append(&mut out.labels);
+            counts.append(&mut out.votes);
+        }
+        let votes = (self.agg == Aggregation::ForestVote).then(|| VoteCounts {
+            n_classes: self.n_classes.max(1),
+            n_trees: self.trees.len(),
+            counts,
+        });
+        Ok(Predictions { labels, votes })
+    }
+
+    /// Predict rows `[start, end)` of the frame: tight block loop, member
+    /// trees aggregated per row in tree order (bit-identical to the boxed
+    /// ensemble path).
+    fn predict_chunk(
+        &self,
+        frame: &RowFrame,
+        start: usize,
+        end: usize,
+        cat_maps: &[Vec<u32>],
+    ) -> ChunkOut {
+        let n = end - start;
+        match self.agg {
+            Aggregation::Single => {
+                let tree = &self.trees[0];
+                let labels = (start..end)
+                    .map(|r| tree.label_at(tree.walk_frame(frame, r, cat_maps)))
+                    .collect();
+                ChunkOut {
+                    labels,
+                    votes: Vec::new(),
+                }
+            }
+            Aggregation::ForestVote => {
+                let n_classes = self.n_classes.max(1);
+                let mut votes = vec![0u32; n * n_classes];
+                for tree in self.trees.iter() {
+                    for (i, r) in (start..end).enumerate() {
+                        let c = tree.class_at(tree.walk_frame(frame, r, cat_maps)) as usize;
+                        if c < n_classes {
+                            votes[i * n_classes + c] += 1;
+                        }
+                    }
+                }
+                let labels = (0..n)
+                    .map(|i| {
+                        let row = &votes[i * n_classes..(i + 1) * n_classes];
+                        NodeLabel::Class(vote_argmax(row) as u16)
+                    })
+                    .collect();
+                ChunkOut { labels, votes }
+            }
+            Aggregation::ForestMean => {
+                let mut sums = vec![0.0f64; n];
+                for tree in self.trees.iter() {
+                    for (i, r) in (start..end).enumerate() {
+                        sums[i] += tree.value_at(tree.walk_frame(frame, r, cat_maps));
+                    }
+                }
+                let t = self.trees.len().max(1) as f64;
+                ChunkOut {
+                    labels: sums.into_iter().map(|s| NodeLabel::Value(s / t)).collect(),
+                    votes: Vec::new(),
+                }
+            }
+        }
+    }
+
+    /// Predict one row of model-space values — the signature-compatible
+    /// shim over the compiled tables (`Value::Cat` ids must be in the
+    /// training interner's space, as with `Estimator::predict_row`).
+    pub fn predict_row(&self, row: &[Value]) -> Result<NodeLabel> {
+        if row.len() != self.n_features {
+            return Err(UdtError::predict(format!(
+                "expected {} features, got {}",
+                self.n_features,
+                row.len()
+            )));
+        }
+        Ok(match self.agg {
+            Aggregation::Single => {
+                let tree = &self.trees[0];
+                tree.label_at(tree.walk_values(row))
+            }
+            Aggregation::ForestVote => {
+                let n_classes = self.n_classes.max(1);
+                let mut votes = vec![0u32; n_classes];
+                for tree in self.trees.iter() {
+                    let c = tree.class_at(tree.walk_values(row)) as usize;
+                    if c < n_classes {
+                        votes[c] += 1;
+                    }
+                }
+                NodeLabel::Class(vote_argmax(&votes) as u16)
+            }
+            Aggregation::ForestMean => {
+                let sum: f64 = self
+                    .trees
+                    .iter()
+                    .map(|t| t.value_at(t.walk_values(row)))
+                    .sum();
+                NodeLabel::Value(sum / self.trees.len().max(1) as f64)
+            }
+        })
+    }
+
+    /// Batch shim over [`predict_row`](Self::predict_row) (model-space
+    /// values; prefer [`predict_frame`](Self::predict_frame) for volume).
+    pub fn predict_batch(&self, rows: &[Vec<Value>]) -> Result<Vec<NodeLabel>> {
+        rows.iter().map(|r| self.predict_row(r)).collect()
+    }
+
+    /// Predict a frame and score against labels (accuracy, or MAE/RMSE).
+    pub fn evaluate_frame(&self, frame: &RowFrame, labels: &Labels) -> Result<Quality> {
+        crate::tree::require_task(self.task, labels.kind())?;
+        if frame.n_rows() != labels.len() {
+            return Err(UdtError::predict(format!(
+                "frame has {} rows but labels have {}",
+                frame.n_rows(),
+                labels.len()
+            )));
+        }
+        let preds = self.predict_frame(frame)?;
+        match labels {
+            Labels::Class { ids, .. } => {
+                let correct = preds
+                    .labels()
+                    .iter()
+                    .zip(ids)
+                    .filter(|(p, &y)| p.as_class() == Some(y))
+                    .count();
+                Ok(Quality::Accuracy(correct as f64 / ids.len().max(1) as f64))
+            }
+            Labels::Reg { values } => {
+                let (mae, rmse) = crate::tree::mae_rmse(
+                    preds
+                        .labels()
+                        .iter()
+                        .zip(values)
+                        .map(|(p, &y)| (p.as_value().unwrap_or(f64::NAN), y)),
+                );
+                Ok(Quality::Regression { mae, rmse })
+            }
+        }
+    }
+}
+
+/// Per-chunk traversal output (votes empty unless `ForestVote`).
+struct ChunkOut {
+    labels: Vec<NodeLabel>,
+    votes: Vec<u32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_any, generate_classification, SynthSpec};
+    use crate::model::Udt;
+    use crate::tree::forest::{Forest, ForestConfig};
+
+    fn hybrid_ds() -> crate::data::dataset::Dataset {
+        let mut spec = SynthSpec::classification("cmp", 800, 6, 3);
+        spec.cat_frac = 0.35;
+        spec.hybrid_frac = 0.15;
+        spec.missing_frac = 0.05;
+        generate_classification(&spec, 2024)
+    }
+
+    #[test]
+    fn compiled_tree_matches_boxed_on_training_rows() {
+        let ds = hybrid_ds();
+        let tree = Udt::builder().fit(&ds).unwrap();
+        let model = Model::SingleTree(tree);
+        let compiled = CompiledModel::compile(&model, &ds.interner).unwrap();
+        assert_eq!(compiled.kind(), "single_tree");
+        assert_eq!(compiled.n_trees(), 1);
+        assert!(compiled.table_bytes() > 0);
+        let frame = RowFrame::from_dataset(&ds);
+        let preds = compiled.predict_frame(&frame).unwrap();
+        assert_eq!(preds.len(), ds.n_rows());
+        assert!(preds.votes().is_none());
+        for r in 0..ds.n_rows() {
+            let expect = model.predict_row(&ds.row(r)).unwrap();
+            assert_eq!(preds.label(r), expect, "row {r}");
+            // The model-space value shim agrees too.
+            assert_eq!(compiled.predict_row(&ds.row(r)).unwrap(), expect);
+        }
+    }
+
+    #[test]
+    fn tuned_caps_are_baked_structurally() {
+        let ds = hybrid_ds();
+        let tree = Udt::builder().fit(&ds).unwrap();
+        let full_nodes = tree.n_nodes();
+        let model = Model::TunedTree {
+            tree,
+            max_depth: 3,
+            min_split: 20,
+        };
+        let compiled = CompiledModel::compile(&model, &ds.interner).unwrap();
+        // Capping prunes the table, not just the walk.
+        assert!(compiled.n_nodes() < full_nodes);
+        let frame = RowFrame::from_dataset(&ds);
+        let preds = compiled.predict_frame(&frame).unwrap();
+        for r in 0..ds.n_rows() {
+            assert_eq!(
+                preds.label(r),
+                model.predict_row(&ds.row(r)).unwrap(),
+                "row {r}"
+            );
+        }
+    }
+
+    #[test]
+    fn forest_votes_sum_to_ensemble_size_and_match_labels() {
+        let ds = hybrid_ds();
+        let forest = Forest::fit(
+            &ds,
+            &ForestConfig {
+                n_trees: 7,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let model = Model::Forest(forest);
+        let compiled = CompiledModel::compile(&model, &ds.interner).unwrap();
+        let frame = RowFrame::from_dataset(&ds);
+        let preds = compiled.predict_frame(&frame).unwrap();
+        let votes = preds.votes().expect("classification forest emits votes");
+        assert_eq!(votes.n_trees(), 7);
+        for r in (0..ds.n_rows()).step_by(23) {
+            assert_eq!(preds.label(r), model.predict_row(&ds.row(r)).unwrap());
+            let row_votes = votes.row(r);
+            assert_eq!(row_votes.iter().sum::<u32>(), 7, "row {r}");
+            let margin = votes.margin(r);
+            assert!((0.0..=1.0).contains(&margin), "margin {margin}");
+            // The label is an argmax of the reported votes.
+            let max = *row_votes.iter().max().unwrap();
+            let label_class = preds.label(r).as_class().unwrap() as usize;
+            assert_eq!(row_votes[label_class], max);
+        }
+    }
+
+    #[test]
+    fn regression_forest_means_match_boxed() {
+        let ds = generate_any(&SynthSpec::regression("cmpreg", 500, 5), 17);
+        let forest = Forest::fit(
+            &ds,
+            &ForestConfig {
+                n_trees: 5,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let model = Model::Forest(forest);
+        let compiled = CompiledModel::compile(&model, &ds.interner).unwrap();
+        let frame = RowFrame::from_dataset(&ds);
+        let preds = compiled.predict_frame(&frame).unwrap();
+        assert!(preds.votes().is_none());
+        for r in (0..ds.n_rows()).step_by(13) {
+            let a = preds.label(r).as_value().unwrap();
+            let b = model.predict_row(&ds.row(r)).unwrap().as_value().unwrap();
+            assert!((a - b).abs() <= 1e-12 * b.abs().max(1.0), "row {r}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn thread_count_never_changes_predictions() {
+        let ds = hybrid_ds();
+        let forest = Forest::fit(
+            &ds,
+            &ForestConfig {
+                n_trees: 4,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let compiled = CompiledModel::compile(&Model::Forest(forest), &ds.interner).unwrap();
+        let frame = RowFrame::from_dataset(&ds);
+        let seq = compiled.predict_frame_threads(&frame, 1).unwrap();
+        let par = compiled.predict_frame_threads(&frame, 8).unwrap();
+        assert_eq!(seq.labels(), par.labels());
+        assert_eq!(
+            seq.votes().unwrap().row(5),
+            par.votes().unwrap().row(5)
+        );
+    }
+
+    #[test]
+    fn unseen_categories_route_like_missing() {
+        let ds = hybrid_ds();
+        let tree = Udt::builder().fit(&ds).unwrap();
+        let model = Model::SingleTree(tree);
+        let compiled = CompiledModel::compile(&model, &ds.interner).unwrap();
+        // A frame whose every cell is an unseen string must predict
+        // exactly like an all-missing row.
+        let mut b = crate::inference::RowFrameBuilder::new(ds.n_features());
+        b.push_row(&vec![
+            crate::inference::Cell::Str("never-seen");
+            ds.n_features()
+        ])
+        .unwrap();
+        let unseen = compiled.predict_frame(&b.finish()).unwrap();
+        let missing_row = vec![Value::Missing; ds.n_features()];
+        assert_eq!(
+            unseen.label(0),
+            model.predict_row(&missing_row).unwrap()
+        );
+    }
+
+    #[test]
+    fn arity_mismatch_is_typed() {
+        let ds = hybrid_ds();
+        let tree = Udt::builder().fit(&ds).unwrap();
+        let compiled = CompiledModel::compile(&Model::SingleTree(tree), &ds.interner).unwrap();
+        let mut b = crate::inference::RowFrameBuilder::new(2);
+        b.push_row(&[crate::inference::Cell::Num(1.0), crate::inference::Cell::Missing])
+            .unwrap();
+        assert!(matches!(
+            compiled.predict_frame(&b.finish()),
+            Err(UdtError::Predict(_))
+        ));
+        assert!(matches!(
+            compiled.predict_row(&[Value::Num(1.0)]),
+            Err(UdtError::Predict(_))
+        ));
+    }
+
+    #[test]
+    fn evaluate_frame_matches_boxed_evaluate() {
+        let ds = hybrid_ds();
+        let tree = Udt::builder().fit(&ds).unwrap();
+        let model = Model::SingleTree(tree);
+        let compiled = CompiledModel::compile(&model, &ds.interner).unwrap();
+        let frame = RowFrame::from_dataset(&ds);
+        let a = compiled.evaluate_frame(&frame, &ds.labels).unwrap().headline();
+        let b = model.evaluate(&ds).unwrap().headline();
+        assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+    }
+}

@@ -1,0 +1,461 @@
+//! Columnar prediction input: the [`RowFrame`].
+//!
+//! Serving parses request batches once into a frame — typed per-feature
+//! columns plus a validity mask — and every model then predicts over the
+//! same columnar view. Columns specialize on content:
+//!
+//! * [`FrameColumn::Num`] — contiguous `f64` payloads + validity bits;
+//! * [`FrameColumn::Cat`] — contiguous frame-local category ids + bits;
+//! * [`FrameColumn::Mixed`] — hybrid columns fall back to tagged cells.
+//!
+//! Categorical cells intern into a **frame-local** id space (the frame
+//! never sees a model's interner); a [`super::CompiledModel`] translates
+//! frame ids into its own baked operand space once per `predict_frame`
+//! call, so the traversal inner loop is pure integer compares.
+//!
+//! Frames build once from rows ([`RowFrameBuilder`]), JSON arrays
+//! ([`RowFrame::from_json_rows`] / [`RowFrame::from_json_lines`]), CSV
+//! text ([`RowFrame::from_csv_str`]) or a [`Dataset`] view
+//! ([`RowFrame::from_dataset`]).
+
+use crate::data::dataset::Dataset;
+use crate::data::interner::{CatId, Interner};
+use crate::data::value::{parse_cell, Value};
+use crate::error::{Result, UdtError};
+use crate::util::json::Json;
+
+/// Bit-per-row validity mask: a set bit means the cell is present, a
+/// clear bit means missing.
+#[derive(Debug, Clone)]
+pub struct ValidityMask {
+    bits: Box<[u64]>,
+    len: usize,
+}
+
+impl ValidityMask {
+    /// Build from per-row validity flags.
+    pub fn from_flags(flags: &[bool]) -> ValidityMask {
+        let mut bits = vec![0u64; flags.len().div_ceil(64)];
+        for (i, &v) in flags.iter().enumerate() {
+            if v {
+                bits[i >> 6] |= 1u64 << (i & 63);
+            }
+        }
+        ValidityMask {
+            bits: bits.into_boxed_slice(),
+            len: flags.len(),
+        }
+    }
+
+    /// Whether row `i` holds a value (false = missing).
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.bits[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of valid (present) rows.
+    pub fn count_valid(&self) -> usize {
+        self.bits.iter().map(|w| w.count_ones() as usize).sum()
+    }
+}
+
+/// One typed feature column of a [`RowFrame`].
+///
+/// `Cat` ids (and `Value::Cat` payloads inside `Mixed` cells) live in the
+/// frame's local interner space, not any model's.
+#[derive(Debug, Clone)]
+pub enum FrameColumn {
+    /// All present cells numeric: values + validity (missing rows hold 0.0).
+    Num { values: Box<[f64]>, valid: ValidityMask },
+    /// All present cells categorical: frame-local ids + validity
+    /// (missing rows hold id 0).
+    Cat { ids: Box<[u32]>, valid: ValidityMask },
+    /// Hybrid column (numeric and categorical cells mixed): tagged cells.
+    Mixed { cells: Box<[Value]> },
+}
+
+impl FrameColumn {
+    /// The cell at `row` as a frame-local [`Value`].
+    #[inline]
+    pub fn cell(&self, row: usize) -> Value {
+        match self {
+            FrameColumn::Num { values, valid } => {
+                if valid.get(row) {
+                    Value::Num(values[row])
+                } else {
+                    Value::Missing
+                }
+            }
+            FrameColumn::Cat { ids, valid } => {
+                if valid.get(row) {
+                    Value::Cat(CatId(ids[row]))
+                } else {
+                    Value::Missing
+                }
+            }
+            FrameColumn::Mixed { cells } => cells[row],
+        }
+    }
+}
+
+/// One raw input cell handed to the [`RowFrameBuilder`].
+#[derive(Debug, Clone, Copy)]
+pub enum Cell<'a> {
+    Num(f64),
+    Str(&'a str),
+    Missing,
+}
+
+/// Row-major accumulator that specializes into a columnar [`RowFrame`].
+#[derive(Debug)]
+pub struct RowFrameBuilder {
+    n_features: usize,
+    columns: Vec<Vec<Value>>,
+    interner: Interner,
+    n_rows: usize,
+}
+
+impl RowFrameBuilder {
+    pub fn new(n_features: usize) -> RowFrameBuilder {
+        RowFrameBuilder {
+            n_features,
+            columns: (0..n_features).map(|_| Vec::new()).collect(),
+            interner: Interner::new(),
+            n_rows: 0,
+        }
+    }
+
+    /// Append one row. Errors on arity mismatch.
+    pub fn push_row(&mut self, cells: &[Cell]) -> Result<()> {
+        if cells.len() != self.n_features {
+            return Err(UdtError::predict(format!(
+                "expected {} features, got {}",
+                self.n_features,
+                cells.len()
+            )));
+        }
+        for (col, cell) in self.columns.iter_mut().zip(cells) {
+            col.push(match cell {
+                Cell::Num(x) => Value::Num(*x),
+                Cell::Str(s) => Value::Cat(self.interner.intern(s)),
+                Cell::Missing => Value::Missing,
+            });
+        }
+        self.n_rows += 1;
+        Ok(())
+    }
+
+    /// Specialize the accumulated cells into typed columns.
+    pub fn finish(self) -> RowFrame {
+        let columns = self.columns.into_iter().map(specialize).collect();
+        RowFrame {
+            n_rows: self.n_rows,
+            columns,
+            interner: self.interner,
+        }
+    }
+}
+
+/// Pick the densest representation a column's content allows.
+fn specialize(cells: Vec<Value>) -> FrameColumn {
+    let any_num = cells.iter().any(Value::is_num);
+    let any_cat = cells.iter().any(Value::is_cat);
+    if any_num && any_cat {
+        return FrameColumn::Mixed {
+            cells: cells.into_boxed_slice(),
+        };
+    }
+    if any_cat {
+        let flags: Vec<bool> = cells.iter().map(|v| !v.is_missing()).collect();
+        let ids: Vec<u32> = cells
+            .iter()
+            .map(|v| v.as_cat().map(|c| c.0).unwrap_or(0))
+            .collect();
+        return FrameColumn::Cat {
+            ids: ids.into_boxed_slice(),
+            valid: ValidityMask::from_flags(&flags),
+        };
+    }
+    // All-numeric (or all-missing, which the Num layout represents fine).
+    let flags: Vec<bool> = cells.iter().map(|v| !v.is_missing()).collect();
+    let values: Vec<f64> = cells
+        .iter()
+        .map(|v| v.as_num().unwrap_or(0.0))
+        .collect();
+    FrameColumn::Num {
+        values: values.into_boxed_slice(),
+        valid: ValidityMask::from_flags(&flags),
+    }
+}
+
+/// A columnar batch of prediction inputs: typed per-feature columns, a
+/// validity mask per column, and a frame-local string interner for
+/// categorical cells. Build once, predict many (see
+/// [`super::CompiledModel::predict_frame`]).
+#[derive(Debug, Clone)]
+pub struct RowFrame {
+    n_rows: usize,
+    columns: Vec<FrameColumn>,
+    interner: Interner,
+}
+
+impl RowFrame {
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.columns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_rows == 0
+    }
+
+    /// The typed column of feature `f`.
+    #[inline]
+    pub fn column(&self, f: usize) -> &FrameColumn {
+        &self.columns[f]
+    }
+
+    /// The frame-local interner (category id `i` ↔ `interner.names()[i]`).
+    pub fn interner(&self) -> &Interner {
+        &self.interner
+    }
+
+    /// Cell `(feature, row)` as a frame-local [`Value`] (tests/debug).
+    pub fn cell(&self, f: usize, row: usize) -> Value {
+        self.columns[f].cell(row)
+    }
+
+    /// Columnar view of a dataset's feature matrix (labels are not
+    /// carried — pair with `ds.labels` for evaluation). Categorical
+    /// cells translate into the frame's local id space through a dense
+    /// id→id table built once from the dataset's interner — one intern
+    /// per distinct string, not one hash lookup per cell.
+    pub fn from_dataset(ds: &Dataset) -> RowFrame {
+        let mut interner = Interner::new();
+        let id_map: Vec<CatId> = ds
+            .interner
+            .names()
+            .iter()
+            .map(|n| interner.intern(n))
+            .collect();
+        let columns = ds
+            .columns
+            .iter()
+            .map(|c| {
+                let cells: Vec<Value> = c
+                    .values
+                    .iter()
+                    .map(|v| match v {
+                        Value::Num(x) => Value::Num(*x),
+                        Value::Cat(id) => Value::Cat(id_map[id.0 as usize]),
+                        Value::Missing => Value::Missing,
+                    })
+                    .collect();
+                specialize(cells)
+            })
+            .collect();
+        RowFrame {
+            n_rows: ds.n_rows(),
+            columns,
+            interner,
+        }
+    }
+
+    /// Build from parsed JSON rows (each row a slice of cells: numbers,
+    /// strings, or `null` for missing). Arity is taken from the first
+    /// row; later rows must match.
+    pub fn from_json_rows(rows: &[&[Json]]) -> Result<RowFrame> {
+        let n_features = rows
+            .first()
+            .map(|r| r.len())
+            .ok_or_else(|| UdtError::predict("empty row batch"))?;
+        let mut b = RowFrameBuilder::new(n_features);
+        for row in rows {
+            let cells: Vec<Cell> = row.iter().map(json_cell).collect::<Result<_>>()?;
+            b.push_row(&cells)?;
+        }
+        Ok(b.finish())
+    }
+
+    /// Build from JSON-lines text: one JSON array of cells per line
+    /// (blank lines skipped).
+    pub fn from_json_lines(text: &str) -> Result<RowFrame> {
+        let mut docs = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let parsed = Json::parse(line)
+                .map_err(|e| UdtError::predict(format!("json line {}: {e}", i + 1)))?;
+            docs.push(parsed);
+        }
+        let rows: Vec<&[Json]> = docs
+            .iter()
+            .map(|d| {
+                d.as_arr()
+                    .ok_or_else(|| UdtError::predict("each json line must be an array of cells"))
+            })
+            .collect::<Result<_>>()?;
+        Self::from_json_rows(&rows)
+    }
+
+    /// Build from CSV text where **every** column is a feature (serving
+    /// input carries no label column). Cells parse numeric-first, fall
+    /// back to categorical; empty / `?` / `NA` are missing.
+    pub fn from_csv_str(text: &str, has_header: bool, delimiter: char) -> Result<RowFrame> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        if has_header {
+            lines.next();
+        }
+        let mut b: Option<RowFrameBuilder> = None;
+        for (i, line) in lines.enumerate() {
+            let fields = crate::data::csv::parse_record(line, delimiter);
+            let builder = b.get_or_insert_with(|| RowFrameBuilder::new(fields.len()));
+            // Classify through the shared hybrid rule (the placeholder id
+            // is discarded — push_row interns into the frame's space).
+            let cells: Vec<Cell> = fields
+                .iter()
+                .map(|raw| match parse_cell(raw, |_| CatId(0)) {
+                    Value::Num(x) => Cell::Num(x),
+                    Value::Missing => Cell::Missing,
+                    Value::Cat(_) => Cell::Str(raw.trim()),
+                })
+                .collect();
+            builder.push_row(&cells).map_err(|_| {
+                UdtError::predict(format!(
+                    "csv row {} has {} fields, expected {}",
+                    i + 1,
+                    fields.len(),
+                    builder.n_features
+                ))
+            })?;
+        }
+        match b {
+            Some(builder) => Ok(builder.finish()),
+            None => Err(UdtError::predict("csv input has no data rows")),
+        }
+    }
+
+    /// Materialize row `r` as frame-local values (tests / slow paths).
+    pub fn row(&self, r: usize) -> Vec<Value> {
+        self.columns.iter().map(|c| c.cell(r)).collect()
+    }
+}
+
+/// Parse one JSON value into a builder cell — the single cell
+/// classification rule shared by the frame path and the server's
+/// single-row fast path (numbers, strings, `null` → missing; anything
+/// else is a typed error).
+pub(crate) fn json_cell(j: &Json) -> Result<Cell<'_>> {
+    Ok(match j {
+        Json::Null => Cell::Missing,
+        Json::Num(x) => Cell::Num(*x),
+        Json::Str(s) => Cell::Str(s),
+        other => return Err(UdtError::predict(format!("bad cell {other:?}"))),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_classification, SynthSpec};
+
+    #[test]
+    fn validity_mask_round_trips() {
+        let flags: Vec<bool> = (0..130).map(|i| i % 3 != 0).collect();
+        let m = ValidityMask::from_flags(&flags);
+        assert_eq!(m.len(), 130);
+        for (i, &f) in flags.iter().enumerate() {
+            assert_eq!(m.get(i), f, "bit {i}");
+        }
+        assert_eq!(m.count_valid(), flags.iter().filter(|&&f| f).count());
+    }
+
+    #[test]
+    fn builder_specializes_column_kinds() {
+        let mut b = RowFrameBuilder::new(3);
+        b.push_row(&[Cell::Num(1.0), Cell::Str("a"), Cell::Num(5.0)]).unwrap();
+        b.push_row(&[Cell::Missing, Cell::Str("b"), Cell::Str("x")]).unwrap();
+        b.push_row(&[Cell::Num(2.0), Cell::Missing, Cell::Num(7.0)]).unwrap();
+        let f = b.finish();
+        assert_eq!(f.n_rows(), 3);
+        assert!(matches!(f.column(0), FrameColumn::Num { .. }));
+        assert!(matches!(f.column(1), FrameColumn::Cat { .. }));
+        assert!(matches!(f.column(2), FrameColumn::Mixed { .. }));
+        // Cells read back with missing preserved.
+        assert_eq!(f.cell(0, 0), Value::Num(1.0));
+        assert!(f.cell(0, 1).is_missing());
+        assert!(f.cell(1, 2).is_missing());
+        assert_eq!(
+            f.interner().name(f.cell(1, 1).as_cat().unwrap()),
+            "b"
+        );
+    }
+
+    #[test]
+    fn builder_rejects_bad_arity() {
+        let mut b = RowFrameBuilder::new(2);
+        assert!(b.push_row(&[Cell::Num(1.0)]).is_err());
+    }
+
+    #[test]
+    fn from_dataset_preserves_cells() {
+        let mut spec = SynthSpec::classification("fr", 300, 5, 2);
+        spec.cat_frac = 0.4;
+        spec.hybrid_frac = 0.2;
+        spec.missing_frac = 0.1;
+        let ds = generate_classification(&spec, 33);
+        let f = RowFrame::from_dataset(&ds);
+        assert_eq!(f.n_rows(), ds.n_rows());
+        assert_eq!(f.n_features(), ds.n_features());
+        for r in (0..ds.n_rows()).step_by(17) {
+            for c in 0..ds.n_features() {
+                match (ds.value(c, r), f.cell(c, r)) {
+                    (Value::Num(a), Value::Num(b)) => assert_eq!(a, b),
+                    (Value::Cat(a), Value::Cat(b)) => {
+                        assert_eq!(ds.interner.name(a), f.interner().name(b))
+                    }
+                    (Value::Missing, Value::Missing) => {}
+                    (a, b) => panic!("cell ({c},{r}): {a:?} vs {b:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn from_json_rows_and_lines_agree() {
+        let lines = "[1.5, \"red\", null]\n[2.0, \"blue\", 7]\n";
+        let f = RowFrame::from_json_lines(lines).unwrap();
+        assert_eq!(f.n_rows(), 2);
+        assert_eq!(f.n_features(), 3);
+        assert_eq!(f.cell(0, 1), Value::Num(2.0));
+        assert!(f.cell(2, 0).is_missing());
+        // Ragged rows are typed errors.
+        assert!(RowFrame::from_json_lines("[1,2]\n[1]\n").is_err());
+        // Non-cell values are typed errors.
+        assert!(RowFrame::from_json_lines("[true]\n").is_err());
+    }
+
+    #[test]
+    fn from_csv_parses_hybrid_cells() {
+        let f = RowFrame::from_csv_str("a,b\n1.5,red\n?,blue\n2,\n", true, ',').unwrap();
+        assert_eq!(f.n_rows(), 3);
+        assert_eq!(f.cell(0, 0), Value::Num(1.5));
+        assert!(f.cell(0, 1).is_missing());
+        assert!(f.cell(1, 0).is_cat());
+        assert!(f.cell(1, 2).is_missing());
+        assert!(RowFrame::from_csv_str("", false, ',').is_err());
+    }
+}

@@ -1,0 +1,45 @@
+//! The compiled inference subsystem: compile-once / predict-many.
+//!
+//! Training produces boxed [`crate::tree::Node`] arenas — flexible to
+//! grow, slow to traverse at serving volume (an `Option<SplitPredicate>`
+//! + `Option<(u32, u32)>` unwrap and a 16-byte tagged [`Value`] read per
+//! step, one `Vec<Value>` allocation per predicted row, and a model
+//! family re-match per request). This module is the other half of the
+//! system: a serving-shaped data path.
+//!
+//! * [`CompiledModel`] — `Model::compile()` flattens every tree into
+//!   struct-of-arrays node tables (tag / feature / operand / pos / neg /
+//!   label, contiguous `Box<[_]>`s, positive child adjacent to its
+//!   parent) and bakes both the Training-Only-Once tuned caps and the
+//!   categorical interner (as per-feature string → operand lookups) into
+//!   the artifact. Traversal is a handful of sequential integer loads
+//!   per step; see [`compiled`] for the exact layout.
+//! * [`RowFrame`] — columnar prediction input: typed per-feature columns
+//!   (`f64` payloads, frame-local category ids, or tagged hybrid cells)
+//!   plus a validity mask, built once from rows, CSV, JSON lines or a
+//!   [`crate::Dataset`] view.
+//! * [`Predictions`] — rich output of
+//!   [`CompiledModel::predict_frame`]: labels plus, for classification
+//!   forests, per-class [`VoteCounts`] and vote margins.
+//!
+//! ```no_run
+//! use udt::data::synth::{generate_classification, SynthSpec};
+//! use udt::inference::RowFrame;
+//! use udt::{Model, SavedModel, Udt};
+//!
+//! # fn main() -> udt::Result<()> {
+//! let ds = generate_classification(&SynthSpec::classification("d", 10_000, 8, 3), 42);
+//! let saved = SavedModel::new(Model::SingleTree(Udt::builder().fit(&ds)?), &ds);
+//! let compiled = saved.compile()?;          // flatten once
+//! let frame = RowFrame::from_dataset(&ds);  // parse inputs once
+//! let preds = compiled.predict_frame(&frame)?; // predict many, in parallel
+//! println!("{} predictions", preds.len());
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod compiled;
+pub mod frame;
+
+pub use compiled::{CompiledModel, Predictions, VoteCounts};
+pub use frame::{Cell, FrameColumn, RowFrame, RowFrameBuilder, ValidityMask};

@@ -27,6 +27,16 @@
 //! User mistakes (bad configs, task mismatches, malformed model JSON,
 //! wrong-arity requests) surface as typed [`UdtError`]s, never panics.
 //!
+//! ## The inference surface
+//!
+//! Serving is compile-once / predict-many: `Model::compile()` flattens
+//! any family into a [`CompiledModel`] (struct-of-arrays node tables,
+//! tuned caps and categorical lookups baked in — see [`inference`]),
+//! inputs parse once into a columnar [`RowFrame`], and
+//! [`CompiledModel::predict_frame`] block-iterates it in parallel,
+//! returning labels plus forest vote margins. The TCP server holds a
+//! [`coordinator::registry::ModelRegistry`] of named compiled models.
+//!
 //! ```no_run
 //! use udt::data::synth::{generate_classification, SynthSpec};
 //! use udt::selection::heuristic::ClassCriterion;
@@ -58,6 +68,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod error;
+pub mod inference;
 pub mod model;
 pub mod runtime;
 pub mod selection;
@@ -66,6 +77,7 @@ pub mod util;
 
 pub use data::dataset::Dataset;
 pub use error::{Result, UdtError};
+pub use inference::{CompiledModel, Predictions, RowFrame, RowFrameBuilder};
 pub use model::{
     Estimator, ForestBuilder, Model, Quality, SavedModel, Schema, Udt, UdtBuilder,
 };

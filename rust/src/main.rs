@@ -7,7 +7,8 @@
 //!   gen-data     materialize a registered synthetic dataset as CSV
 //!   bench-selection  Table 5 (generic vs superfast, single feature)
 //!   bench-suite      Table 6 / Table 7 rows
-//!   serve        prediction server over TCP (any model family)
+//!   serve        TCP prediction server over a registry of compiled
+//!                models (`--model name=path` repeatable)
 //!   artifacts    inspect the AOT artifact manifest
 //!
 //! Run `udt <subcommand> --help` for options. Every training command
@@ -16,6 +17,7 @@
 
 use udt::config::Config;
 use udt::coordinator::pipeline::{run_pipeline_model, Quality};
+use udt::coordinator::registry::ModelRegistry;
 use udt::coordinator::serve::Server;
 use udt::data::csv::{load_csv, CsvOptions};
 use udt::data::dataset::TaskKind;
@@ -72,7 +74,7 @@ fn print_usage() {
            rank-features    Superfast Selection as a feature-selection filter\n\
            bench-selection  Table 5: generic vs superfast on one feature\n\
            bench-suite      Table 6/7 rows over the dataset registry\n\
-           serve            TCP prediction server (tree, tuned tree or forest)\n\
+           serve            TCP server over a registry of compiled models\n\
            artifacts        list AOT artifacts and their shapes\n"
     );
 }
@@ -266,16 +268,30 @@ fn cmd_predict(raw: &[String]) -> Result<()> {
     // in place (no table copy; clones only if the Arc were shared).
     saved.align_to(std::sync::Arc::make_mut(&mut ds.interner))?;
     saved.align_labels(&mut ds);
+    // Evaluation runs on the compiled inference path: flatten once,
+    // parse the dataset into a columnar frame once, then block-predict.
+    let compiled = saved.compile()?;
+    let frame = udt::RowFrame::from_dataset(&ds);
     println!(
-        "model: kind={} features={} nodes={}",
+        "model: kind={} features={} nodes={} (compiled: {} nodes, {} trees)",
         saved.model.kind(),
         saved.model.n_features(),
-        saved.model.n_nodes()
+        saved.model.n_nodes(),
+        compiled.n_nodes(),
+        compiled.n_trees(),
     );
-    match saved.model.evaluate(&ds)? {
+    let timer = Timer::start();
+    let quality = compiled.evaluate_frame(&frame, &ds.labels)?;
+    let ms = timer.ms();
+    match quality {
         Quality::Accuracy(acc) => println!("accuracy = {acc:.4}"),
         Quality::Regression { mae, rmse } => println!("MAE = {mae:.4}, RMSE = {rmse:.4}"),
     }
+    println!(
+        "predicted {} rows in {ms:.1} ms ({:.0} rows/s, compiled path)",
+        ds.n_rows(),
+        ds.n_rows() as f64 / (ms / 1e3).max(1e-9)
+    );
     Ok(())
 }
 
@@ -428,9 +444,22 @@ fn cmd_bench_suite(raw: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Derive a registry name from a model path (`models/churn.json` →
+/// `churn`).
+fn model_name_from_path(path: &str) -> String {
+    std::path::Path::new(path)
+        .file_stem()
+        .map(|s| s.to_string_lossy().to_string())
+        .unwrap_or_else(|| "default".to_string())
+}
+
 fn cmd_serve(raw: &[String]) -> Result<()> {
-    let cmd = Command::new("serve", "TCP prediction server (any model family)")
-        .opt("model", "model JSON (from `train --out` or `pipeline --out`)", None)
+    let cmd = Command::new("serve", "TCP prediction server (multi-model registry)")
+        .opt_multi(
+            "model",
+            "model JSON to load, repeatable: name=path or path (first = default)",
+        )
+        .opt_multi("alias", "extra name for a loaded model: alias=name")
         .opt("dataset", "train on a registry dataset instead", None)
         .opt("scale", "row-count scale", Some("0.1"))
         .opt("forest", "with --dataset: train a forest of N trees", None)
@@ -445,8 +474,25 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
     // silently ignored).
     let cfg = base_config(&a)?;
 
-    let saved = if let Some(model) = a.get("model") {
-        SavedModel::load(model)?
+    let registry = ModelRegistry::new();
+    let specs = a.get_all("model");
+    if !specs.is_empty() {
+        let mut seen = std::collections::BTreeSet::new();
+        for spec in specs {
+            let (name, path) = match spec.split_once('=') {
+                Some((n, p)) => (n.to_string(), p.to_string()),
+                None => (model_name_from_path(spec), spec.clone()),
+            };
+            // A repeated name would silently replace the earlier model in
+            // the registry — make the operator pick distinct names.
+            if !seen.insert(name.clone()) {
+                return Err(UdtError::usage(format!(
+                    "duplicate model name `{name}` (use --model <name>=<path> \
+                     to disambiguate)"
+                )));
+            }
+            registry.load(&name, SavedModel::load(&path)?)?;
+        }
     } else {
         let ds = load_dataset(&a)?;
         let tree_cfg = train_config(&a, &cfg)?;
@@ -461,16 +507,36 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
                 Model::Forest(Forest::fit(&ds, &forest_cfg)?)
             }
         };
-        SavedModel::new(model, &ds)
-    };
+        let name = ds.name.clone();
+        registry.load(&name, SavedModel::new(model, &ds))?;
+    }
+    let mut seen_aliases = std::collections::BTreeSet::new();
+    for alias in a.get_all("alias") {
+        let (al, target) = alias
+            .split_once('=')
+            .ok_or_else(|| UdtError::usage("--alias expects alias=name"))?;
+        // Same contract as --model: a repeated alias would silently
+        // overwrite the earlier mapping.
+        if !seen_aliases.insert(al.to_string()) {
+            return Err(UdtError::usage(format!("duplicate alias `{al}`")));
+        }
+        registry.alias(al, target)?;
+    }
 
-    println!(
-        "serving kind={} nodes={} features={}",
-        saved.model.kind(),
-        saved.model.n_nodes(),
-        saved.model.n_features()
-    );
-    let server = Server::new(saved);
+    for entry in registry.entries() {
+        println!(
+            "loaded {}: kind={} nodes={} trees={} features={}",
+            entry.name(),
+            entry.compiled.kind(),
+            entry.compiled.n_nodes(),
+            entry.compiled.n_trees(),
+            entry.compiled.n_features()
+        );
+    }
+    let server = Server::with_registry(registry);
+    if let Some(default) = server.registry().default_name() {
+        println!("default model: {default}");
+    }
     let addr = a.get_or("addr", "127.0.0.1:7878").to_string();
     println!("serving on {addr} (send \"shutdown\" to stop)");
     server.serve(&addr, |bound| println!("bound {bound}"))

@@ -178,6 +178,16 @@ impl Estimator for Forest {
         Ok(self.predict_values(row))
     }
 
+    /// Chunk-parallel over all cores (thread count never changes the
+    /// predictions; see [`Forest::predict_batch_rows`]).
+    fn predict_batch(&self, rows: &[Vec<Value>]) -> Result<Vec<NodeLabel>> {
+        let n_features = Forest::n_features(self);
+        for row in rows {
+            check_arity(n_features, row.len())?;
+        }
+        Ok(self.predict_batch_rows(rows, 0))
+    }
+
     fn evaluate(&self, ds: &Dataset) -> Result<Quality> {
         check_arity(Forest::n_features(self), ds.n_features())?;
         require_task(self.task, ds.task())?;
@@ -437,8 +447,17 @@ impl Model {
                 .iter()
                 .map(|r| predict::predict_row(tree, r, *max_depth, *min_split))
                 .collect(),
-            Model::Forest(f) => rows.iter().map(|r| f.predict_values(r)).collect(),
+            Model::Forest(f) => f.predict_batch_rows(rows, 0),
         })
+    }
+
+    /// Flatten into a [`CompiledModel`] (struct-of-arrays node tables,
+    /// tuned caps and the interner's categorical lookups baked in — see
+    /// [`crate::inference`]). `interner` must be the one the model's
+    /// categorical operands were interned with;
+    /// [`SavedModel::compile`] passes the bundled one.
+    pub fn compile(&self, interner: &Interner) -> Result<crate::inference::CompiledModel> {
+        crate::inference::CompiledModel::compile(self, interner)
     }
 
     /// Quality over a dataset, honoring tuned caps.
@@ -499,6 +518,12 @@ impl SavedModel {
             schema: Schema::of(ds),
             interner: (*ds.interner).clone(),
         }
+    }
+
+    /// Flatten the bundled model into a serving-ready
+    /// [`crate::inference::CompiledModel`] using the bundled interner.
+    pub fn compile(&self) -> Result<crate::inference::CompiledModel> {
+        self.model.compile(&self.interner)
     }
 
     /// Remap the model's categorical operands into `target`'s id space

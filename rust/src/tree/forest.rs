@@ -13,6 +13,7 @@
 //! dataset (and its sort-index cache) with no per-tree copies.
 
 use super::{require_task, NodeLabel, TrainConfig, Tree};
+use crate::coordinator::parallel::parallel_map_chunked;
 use crate::data::dataset::{Dataset, TaskKind};
 use crate::data::value::Value;
 use crate::error::{Result, UdtError};
@@ -67,6 +68,19 @@ impl ForestConfig {
         }
         Ok(())
     }
+}
+
+/// Majority-vote winner: most votes, ties broken toward the smaller
+/// class id. The single tie-break shared by the boxed ensemble and the
+/// compiled serving path ([`crate::inference::CompiledModel`]), which
+/// must stay prediction-for-prediction identical.
+pub(crate) fn vote_argmax(votes: &[u32]) -> usize {
+    votes
+        .iter()
+        .enumerate()
+        .max_by_key(|&(c, &v)| (v, std::cmp::Reverse(c)))
+        .map(|(c, _)| c)
+        .unwrap_or(0)
 }
 
 /// A trained ensemble. Each member remembers which features it saw.
@@ -147,13 +161,7 @@ impl Forest {
                         }
                     }
                 }
-                let best = votes
-                    .iter()
-                    .enumerate()
-                    .max_by_key(|&(i, &v)| (v, std::cmp::Reverse(i)))
-                    .map(|(i, _)| i)
-                    .unwrap_or(0);
-                NodeLabel::Class(best as u16)
+                NodeLabel::Class(vote_argmax(&votes) as u16)
             }
             TaskKind::Regression => {
                 let mut sum = 0.0f64;
@@ -183,6 +191,27 @@ impl Forest {
                 .iter()
                 .map(|t| super::predict::predict_row(t, row, usize::MAX, 0)),
         )
+    }
+
+    /// Ensemble predictions for a batch of rows, chunk-parallel over the
+    /// worker pool (training parallelizes; serving should too). Rows are
+    /// split into fixed blocks and each block predicts independently, so
+    /// the output is identical for any thread count (0 = all cores,
+    /// 1 = sequential) — member trees still aggregate per row in tree
+    /// order. Arity is the caller's contract (the [`crate::Estimator`]
+    /// impl checks it).
+    pub fn predict_batch_rows(&self, rows: &[Vec<Value>], n_threads: usize) -> Vec<NodeLabel> {
+        // Smaller blocks than the compiled path's 512: boxed rows are
+        // fat (`Vec<Value>` each) and ensemble walks cost more per row,
+        // so finer blocks load-balance better.
+        const CHUNK: usize = 256;
+        let out = parallel_map_chunked(rows.len(), CHUNK, n_threads, |start, end| {
+            rows[start..end]
+                .iter()
+                .map(|r| self.predict_values(r))
+                .collect::<Vec<_>>()
+        });
+        out.into_iter().flatten().collect()
     }
 
     /// Ensemble accuracy over rows.
@@ -362,6 +391,30 @@ mod tests {
         // One SortedIndex build for the whole ensemble — every bag
         // filtered the shared cache instead of re-sorting.
         assert_eq!(ds.sort_index_builds(), 1);
+    }
+
+    #[test]
+    fn batch_prediction_is_thread_count_invariant() {
+        let mut spec = SynthSpec::classification("fb", 900, 6, 3);
+        spec.cat_frac = 0.3;
+        spec.missing_frac = 0.05;
+        let ds = generate_any(&spec, 89);
+        let forest = Forest::fit(
+            &ds,
+            &ForestConfig {
+                n_trees: 6,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let rows: Vec<Vec<Value>> = (0..ds.n_rows()).map(|r| ds.row(r)).collect();
+        let seq = forest.predict_batch_rows(&rows, 1);
+        let par = forest.predict_batch_rows(&rows, 8);
+        assert_eq!(seq, par);
+        // And both agree with the row-at-a-time path.
+        for (r, label) in seq.iter().enumerate() {
+            assert_eq!(*label, forest.predict_values(&rows[r]), "row {r}");
+        }
     }
 
     #[test]

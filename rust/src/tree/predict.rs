@@ -1,15 +1,23 @@
-//! Prediction (paper Algorithm 7).
+//! Prediction over the boxed training arena (paper Algorithm 7).
 //!
 //! Every node carries a label, so prediction can stop early at any inner
 //! node — the mechanism behind Training-Only-Once Tuning: `max_depth`
 //! bounds the walk, and a node with fewer than `min_split` training
 //! samples answers as if it were a leaf.
+//!
+//! This is the *oracle* path: flexible, allocation-per-row, used during
+//! training, tuning and evaluation. Serving volume goes through
+//! [`crate::inference::CompiledModel`], which flattens these nodes into
+//! struct-of-arrays tables (with the caps below baked in structurally)
+//! and is property-tested prediction-for-prediction identical to this
+//! walk (`tests/prop_inference.rs`).
 
 use super::{NodeLabel, Tree};
 use crate::data::dataset::Dataset;
 use crate::data::value::Value;
 
 /// Predict for a materialized row of values.
+#[inline]
 pub fn predict_row(tree: &Tree, row: &[Value], max_depth: usize, min_split: usize) -> NodeLabel {
     let mut node = &tree.nodes[Tree::ROOT as usize];
     let mut depth = 1usize;
@@ -26,6 +34,7 @@ pub fn predict_row(tree: &Tree, row: &[Value], max_depth: usize, min_split: usiz
 }
 
 /// Predict for row `r` of a dataset without materializing the row.
+#[inline]
 pub fn predict_ds(
     tree: &Tree,
     ds: &Dataset,

@@ -108,7 +108,7 @@ fn server_predictions_match_model() {
     let saved = SavedModel::new(Model::SingleTree(tree), &ds);
     let class_names = saved.schema.class_names.clone();
     let model = saved.model.clone();
-    let server = Server::new(saved);
+    let server = Server::new(saved).unwrap();
 
     for r in (0..ds.n_rows()).step_by(29) {
         let row = ds.row(r);

@@ -1,11 +1,13 @@
 //! The unified model surface, end to end: serde round-trips of all three
 //! `Model` variants (schema + interner included), TCP serving of a tuned
-//! tree and a forest (single, batch and stats requests over the wire),
-//! and builder validation (bad configs are typed errors, not panics).
+//! tree and a forest (single, batch, named-registry and stats requests
+//! over the wire), and builder validation (bad configs are typed errors,
+//! not panics). Serving runs on the compiled inference path throughout.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::mpsc;
+use udt::coordinator::registry::ModelRegistry;
 use udt::coordinator::serve::Server;
 use udt::data::synth::{generate_any, generate_classification, SynthSpec};
 use udt::data::value::Value;
@@ -78,7 +80,14 @@ fn all_three_model_variants_round_trip_with_schema_and_interner() {
 
 /// Start a server, run `f` against the live socket, shut down cleanly.
 fn with_tcp_server(saved: SavedModel, f: impl FnOnce(&mut TcpStream, &mut BufReader<TcpStream>)) {
-    let server = Server::new(saved);
+    let server = Server::new(saved).unwrap();
+    with_server(server, f)
+}
+
+fn with_server(
+    server: std::sync::Arc<Server>,
+    f: impl FnOnce(&mut TcpStream, &mut BufReader<TcpStream>),
+) {
     let (tx, rx) = mpsc::channel();
     let s2 = server.clone();
     let handle = std::thread::spawn(move || {
@@ -163,10 +172,13 @@ fn tcp_serving_a_tuned_tree_loaded_from_json() {
         for (&r, got) in rows.iter().zip(arr) {
             assert_eq!(got.to_string(), expected_response(&local, &ds, r));
         }
-        // Stats identify the model family and count the work done.
+        // Stats identify the model family and count the work done —
+        // per-model, and control lines don't pollute predict counters.
         let stats = Json::parse(&request(stream, reader, "\"stats\"")).unwrap();
-        assert_eq!(stats.get("kind").unwrap().as_str().unwrap(), "tuned_tree");
-        assert!(stats.get("predictions").unwrap().as_f64().unwrap() >= 13.0);
+        let model = stats.get("models").unwrap().get("default").unwrap();
+        assert_eq!(model.get("kind").unwrap().as_str().unwrap(), "tuned_tree");
+        assert!(model.get("predictions").unwrap().as_f64().unwrap() >= 13.0);
+        assert!(stats.get("predict_requests").unwrap().as_f64().unwrap() >= 4.0);
     });
 }
 
@@ -186,8 +198,87 @@ fn tcp_serving_a_forest_loaded_from_json() {
         let parsed = Json::parse(&request(stream, reader, &batch)).unwrap();
         assert_eq!(parsed.as_arr().unwrap().len(), 2);
         let stats = Json::parse(&request(stream, reader, "\"stats\"")).unwrap();
-        assert_eq!(stats.get("kind").unwrap().as_str().unwrap(), "forest");
-        assert!(stats.get("nodes").unwrap().as_f64().unwrap() > 0.0);
+        let model = stats.get("models").unwrap().get("default").unwrap();
+        assert_eq!(model.get("kind").unwrap().as_str().unwrap(), "forest");
+        assert!(model.get("nodes").unwrap().as_f64().unwrap() > 0.0);
+    });
+}
+
+#[test]
+fn tcp_registry_serves_named_models_and_legacy_requests() {
+    let ds = hybrid_ds();
+    let tree_saved = SavedModel::new(
+        Model::SingleTree(Udt::builder().fit(&ds).unwrap()),
+        &ds,
+    );
+    let forest_saved = SavedModel::new(
+        Model::Forest(Forest::builder().n_trees(4).fit(&ds).unwrap()),
+        &ds,
+    );
+    let tree_local = tree_saved.clone();
+    let forest_local = forest_saved.clone();
+
+    let registry = ModelRegistry::new();
+    registry.load("churn", tree_saved).unwrap();
+    registry.load("risk", forest_saved).unwrap();
+    registry.alias("prod", "risk").unwrap();
+    let server = Server::with_registry(registry);
+
+    with_server(server, |stream, reader| {
+        // Legacy bare-array requests hit the default (first-loaded) model.
+        for r in [5usize, 71, 301] {
+            let resp = request(stream, reader, &json_cells(&ds, r));
+            assert_eq!(resp, expected_response(&tree_local, &ds, r), "row {r}");
+        }
+        // Named addressing reaches the forest — prediction-for-prediction
+        // equal to the boxed ensemble.
+        let rows: Vec<usize> = (0..8).map(|i| i * 29).collect();
+        let batch = rows
+            .iter()
+            .map(|&r| json_cells(&ds, r))
+            .collect::<Vec<_>>()
+            .join(",");
+        let resp = request(
+            stream,
+            reader,
+            &format!("{{\"model\":\"risk\",\"rows\":[{batch}]}}"),
+        );
+        let parsed = Json::parse(&resp).unwrap();
+        assert_eq!(parsed.get("model").unwrap().as_str().unwrap(), "risk");
+        let labels = parsed.get("labels").unwrap().as_arr().unwrap();
+        assert_eq!(labels.len(), rows.len());
+        for (&r, got) in rows.iter().zip(labels) {
+            assert_eq!(
+                got.to_string(),
+                expected_response(&forest_local, &ds, r),
+                "row {r}"
+            );
+        }
+        // Aliases resolve; single-row object form returns a 1-label array.
+        let resp = request(
+            stream,
+            reader,
+            &format!("{{\"model\":\"prod\",\"rows\":{}}}", json_cells(&ds, 13)),
+        );
+        let parsed = Json::parse(&resp).unwrap();
+        assert_eq!(parsed.get("model").unwrap().as_str().unwrap(), "risk");
+        assert_eq!(parsed.get("labels").unwrap().as_arr().unwrap().len(), 1);
+        // Unknown model names are protocol errors.
+        let resp = request(stream, reader, "{\"model\":\"gone\",\"rows\":[[1,2,3,4,5,6]]}");
+        assert!(resp.contains("error"), "{resp}");
+        // The registry listing and per-model stats see both models.
+        let models = Json::parse(&request(stream, reader, "\"models\"")).unwrap();
+        let names = models.get("models").unwrap().as_arr().unwrap();
+        assert_eq!(names.len(), 2);
+        assert_eq!(models.get("default").unwrap().as_str().unwrap(), "churn");
+        let stats = Json::parse(&request(stream, reader, "\"stats\"")).unwrap();
+        let churn = stats.get("models").unwrap().get("churn").unwrap();
+        let risk = stats.get("models").unwrap().get("risk").unwrap();
+        assert_eq!(churn.get("kind").unwrap().as_str().unwrap(), "single_tree");
+        assert_eq!(risk.get("kind").unwrap().as_str().unwrap(), "forest");
+        assert!(churn.get("predictions").unwrap().as_f64().unwrap() >= 3.0);
+        assert!(risk.get("predictions").unwrap().as_f64().unwrap() >= 9.0);
+        assert!(risk.get("rows_per_sec").unwrap().as_f64().unwrap() >= 0.0);
     });
 }
 

@@ -1,0 +1,227 @@
+//! Property suite for the compiled inference path: on random hybrid
+//! frames (numeric / categorical / missing / **unseen-string** cells),
+//! `CompiledModel::predict_frame` must be prediction-for-prediction
+//! identical to the boxed-node `predict_row` oracle, for all three model
+//! families — and invariant to the worker-thread count.
+
+use udt::data::synth::{generate_any, SynthSpec};
+use udt::data::value::Value;
+use udt::inference::{Cell, RowFrameBuilder};
+use udt::util::prop::{check, ensure, ensure_close, Config};
+use udt::util::rng::Rng;
+use udt::{Forest, Model, SavedModel, Udt};
+
+/// One generated request cell: what goes into the frame, and what the
+/// boxed oracle must see for it (unseen strings behave exactly like
+/// missing: no predicate can match them).
+enum OwnedCell {
+    Num(f64),
+    Str(String),
+    Missing,
+}
+
+impl OwnedCell {
+    fn as_cell(&self) -> Cell<'_> {
+        match self {
+            OwnedCell::Num(x) => Cell::Num(*x),
+            OwnedCell::Str(s) => Cell::Str(s),
+            OwnedCell::Missing => Cell::Missing,
+        }
+    }
+
+    /// The model-space value the boxed oracle predicts from.
+    fn oracle_value(&self, ds: &udt::Dataset) -> Value {
+        match self {
+            OwnedCell::Num(x) => Value::Num(*x),
+            OwnedCell::Str(s) => match ds.interner.get(s) {
+                Some(id) => Value::Cat(id),
+                None => Value::Missing, // unseen category ≡ missing routing
+            },
+            OwnedCell::Missing => Value::Missing,
+        }
+    }
+}
+
+/// Random request rows: dataset cells perturbed with unseen strings,
+/// extra missing cells and fresh numerics.
+fn random_request(
+    rng: &mut Rng,
+    ds: &udt::Dataset,
+    n_rows: usize,
+) -> (Vec<Vec<OwnedCell>>, Vec<Vec<Value>>) {
+    let mut cells_rows = Vec::with_capacity(n_rows);
+    let mut oracle_rows = Vec::with_capacity(n_rows);
+    for _ in 0..n_rows {
+        let src = rng.range(0, ds.n_rows());
+        let mut cells = Vec::with_capacity(ds.n_features());
+        for f in 0..ds.n_features() {
+            let roll = rng.f64();
+            let cell = if roll < 0.10 {
+                OwnedCell::Str(format!("unseen-{}", rng.next_u64()))
+            } else if roll < 0.18 {
+                OwnedCell::Missing
+            } else if roll < 0.26 {
+                OwnedCell::Num(rng.f64_range(-100.0, 100.0))
+            } else {
+                match ds.value(f, src) {
+                    Value::Num(x) => OwnedCell::Num(x),
+                    Value::Cat(id) => OwnedCell::Str(ds.interner.name(id).to_string()),
+                    Value::Missing => OwnedCell::Missing,
+                }
+            };
+            cells.push(cell);
+        }
+        let oracle = cells.iter().map(|c| c.oracle_value(ds)).collect();
+        cells_rows.push(cells);
+        oracle_rows.push(oracle);
+    }
+    (cells_rows, oracle_rows)
+}
+
+fn labels_agree(
+    got: udt::tree::NodeLabel,
+    want: udt::tree::NodeLabel,
+    ctx: &str,
+) -> Result<(), String> {
+    use udt::tree::NodeLabel;
+    match (got, want) {
+        (NodeLabel::Class(a), NodeLabel::Class(b)) => {
+            ensure(a == b, format!("{ctx}: class {a} vs {b}"))
+        }
+        (NodeLabel::Value(a), NodeLabel::Value(b)) => ensure_close(a, b, 1e-9, ctx),
+        (a, b) => Err(format!("{ctx}: label kinds differ ({a:?} vs {b:?})")),
+    }
+}
+
+#[test]
+fn compiled_frame_predictions_match_boxed_oracle_for_all_families() {
+    check(
+        "compiled ≡ boxed on hybrid frames",
+        Config::default().cases(24).max_size(24).seed(0xC0_111),
+        |rng, size| {
+            // A small random hybrid problem (classification or regression).
+            let n_rows = 60 + size * 12;
+            let n_features = rng.range(2, 7);
+            let regression = rng.chance(0.35);
+            let mut spec = if regression {
+                SynthSpec::regression("pi", n_rows, n_features)
+            } else {
+                SynthSpec::classification("pi", n_rows, n_features, rng.range(2, 5))
+            };
+            spec.cat_frac = rng.f64_range(0.0, 0.5);
+            spec.hybrid_frac = rng.f64_range(0.0, 0.3);
+            spec.missing_frac = rng.f64_range(0.0, 0.15);
+            spec.cat_vocab = rng.range(2, 7);
+            let ds = generate_any(&spec, rng.next_u64());
+
+            let tree = Udt::builder()
+                .fit(&ds)
+                .map_err(|e| format!("train tree: {e}"))?;
+            let forest = Forest::builder()
+                .n_trees(rng.range(2, 5))
+                .seed(rng.next_u64())
+                .fit(&ds)
+                .map_err(|e| format!("train forest: {e}"))?;
+            let families = [
+                Model::SingleTree(tree.clone()),
+                Model::TunedTree {
+                    tree,
+                    max_depth: rng.range(1, 8),
+                    min_split: rng.range(0, 40),
+                },
+                Model::Forest(forest),
+            ];
+
+            let (cells_rows, oracle_rows) = random_request(rng, &ds, 40 + size * 4);
+            for model in &families {
+                let kind = model.kind();
+                let compiled = SavedModel::new(model.clone(), &ds)
+                    .compile()
+                    .map_err(|e| format!("{kind}: compile: {e}"))?;
+                let mut b = RowFrameBuilder::new(ds.n_features());
+                for cells in &cells_rows {
+                    let row: Vec<Cell> = cells.iter().map(OwnedCell::as_cell).collect();
+                    b.push_row(&row).map_err(|e| format!("{kind}: {e}"))?;
+                }
+                let frame = b.finish();
+
+                let preds = compiled
+                    .predict_frame_threads(&frame, 1)
+                    .map_err(|e| format!("{kind}: predict_frame: {e}"))?;
+                let oracle = model
+                    .predict_batch(&oracle_rows)
+                    .map_err(|e| format!("{kind}: oracle: {e}"))?;
+                ensure(
+                    preds.len() == oracle.len(),
+                    format!("{kind}: {} vs {} predictions", preds.len(), oracle.len()),
+                )?;
+                for (r, want) in oracle.iter().enumerate() {
+                    labels_agree(preds.label(r), *want, &format!("{kind} row {r}"))?;
+                    // The model-space shim agrees with the oracle too.
+                    let shim = compiled
+                        .predict_row(&oracle_rows[r])
+                        .map_err(|e| format!("{kind}: shim: {e}"))?;
+                    labels_agree(shim, *want, &format!("{kind} shim row {r}"))?;
+                }
+
+                // Thread count never changes predictions (chunk stitching).
+                let par = compiled
+                    .predict_frame_threads(&frame, 4)
+                    .map_err(|e| format!("{kind}: parallel: {e}"))?;
+                ensure(
+                    par.labels() == preds.labels(),
+                    format!("{kind}: parallel ≠ sequential"),
+                )?;
+
+                // Classification forests report votes consistent with the
+                // winning label.
+                if let (Model::Forest(f), Some(votes)) = (model, preds.votes()) {
+                    for r in 0..preds.len() {
+                        let row_votes = votes.row(r);
+                        ensure(
+                            row_votes.iter().sum::<u32>() as usize == f.trees.len(),
+                            format!("{kind} row {r}: votes must sum to ensemble size"),
+                        )?;
+                        let label = preds.label(r).as_class().unwrap_or(0) as usize;
+                        let max = *row_votes.iter().max().unwrap_or(&0);
+                        ensure(
+                            row_votes[label] == max,
+                            format!("{kind} row {r}: label is not an argmax of votes"),
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn forest_batch_prediction_is_thread_invariant_on_random_data() {
+    check(
+        "forest predict_batch 1 ≡ N threads",
+        Config::default().cases(12).max_size(16).seed(0xF0_222),
+        |rng, size| {
+            let mut spec = SynthSpec::classification("fb", 80 + size * 20, 5, 3);
+            spec.cat_frac = rng.f64_range(0.0, 0.4);
+            spec.missing_frac = rng.f64_range(0.0, 0.1);
+            let ds = generate_any(&spec, rng.next_u64());
+            let forest = Forest::builder()
+                .n_trees(rng.range(2, 6))
+                .seed(rng.next_u64())
+                .fit(&ds)
+                .map_err(|e| format!("train: {e}"))?;
+            let rows: Vec<Vec<Value>> = (0..ds.n_rows()).map(|r| ds.row(r)).collect();
+            let seq = forest.predict_batch_rows(&rows, 1);
+            let par = forest.predict_batch_rows(&rows, 8);
+            ensure(seq == par, "thread count changed forest batch predictions")?;
+            for (r, label) in seq.iter().enumerate() {
+                ensure(
+                    *label == forest.predict_values(&rows[r]),
+                    format!("row {r}: batch ≠ row-at-a-time"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
