@@ -43,14 +43,14 @@ fn main() {
             if stats.n_cat > 0 {
                 // Distinct categories in this column.
                 let mut seen = std::collections::BTreeSet::new();
-                for v in &col.values {
+                for v in col.iter() {
                     if let Value::Cat(c) = v {
                         seen.insert(c.0);
                     }
                 }
                 for &cat in &seen {
                     let mut dense = vec![0.0f64; ds.n_rows()];
-                    for (i, v) in col.values.iter().enumerate() {
+                    for (i, v) in col.iter().enumerate() {
                         if matches!(v, Value::Cat(c) if c.0 == cat) {
                             dense[i] = 1.0;
                         }
@@ -60,8 +60,7 @@ fn main() {
                 }
             } else {
                 encoded.push(
-                    col.values
-                        .iter()
+                    col.iter()
                         .map(|v| v.as_num().unwrap_or(f64::NAN))
                         .collect(),
                 );

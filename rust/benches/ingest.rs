@@ -1,0 +1,122 @@
+//! Ingest throughput: legacy row-materializing CSV parsing vs the
+//! streaming chunk-parallel typed path (1 thread and all cores).
+//!
+//! The paper's headline (KDD99-10%, 494K×41, training in under a
+//! second) only holds if the data layer keeps up: the legacy path
+//! materialized every cell as a heap `String` (~20M allocations for
+//! KDD99) before typing anything, while the streaming path parses
+//! borrowed field slices straight into typed column shards. This bench
+//! tracks parse wall-clock, MB/s, rows/sec and resident bytes for both,
+//! and writes `BENCH_ingest.json` at the repo root so the trajectory is
+//! visible PR-over-PR.
+//!
+//!   cargo bench --bench ingest
+
+use udt::bench_support::{bench, write_bench_json, BenchConfig, Table};
+use udt::data::csv::{load_csv_str, load_csv_str_rowwise, to_csv_string, CsvOptions};
+use udt::data::synth::{generate_classification, SynthSpec};
+use udt::util::json::Json;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    // KDD99-10%-shaped workload: ~494K rows × 41 features, hybrid mix.
+    let rows = ((494_021.0 * cfg.scale) as usize).max(5_000);
+    let mut spec = SynthSpec::classification("ingest", rows, 41, 23);
+    spec.cat_frac = 0.17;
+    spec.hybrid_frac = 0.05;
+    spec.missing_frac = 0.01;
+    let ds = generate_classification(&spec, 42);
+    let csv = to_csv_string(&ds);
+    let mb = csv.len() as f64 / 1e6;
+    eprintln!(
+        "ingest: {} rows x {} features, {:.1} MB of CSV (UDT_BENCH_SCALE to change)",
+        ds.n_rows(),
+        ds.n_features(),
+        mb
+    );
+
+    let mut table = Table::new(&["path", "parse(ms)", "MB/s", "rows/s", "dataset(MB)"]);
+    let mut json_cases: Vec<Json> = Vec::new();
+    let n_rows = ds.n_rows();
+    let mut run_case = |name: &str, f: &dyn Fn() -> udt::Dataset| {
+        let parsed = f();
+        let dataset_bytes = parsed.approx_bytes();
+        drop(parsed);
+        let m = bench(name, &cfg, || {
+            let _ = f();
+        });
+        let ms = m.mean_ms();
+        let mbps = mb / (ms / 1000.0).max(1e-9);
+        let rps = n_rows as f64 / (ms / 1000.0).max(1e-9);
+        table.row(vec![
+            name.to_string(),
+            format!("{ms:.1}"),
+            format!("{mbps:.0}"),
+            format!("{rps:.0}"),
+            format!("{:.1}", dataset_bytes as f64 / 1e6),
+        ]);
+        json_cases.push(Json::obj(vec![
+            ("name", Json::Str(name.to_string())),
+            ("parse_ms", Json::Num(ms)),
+            ("mb_per_sec", Json::Num(mbps)),
+            ("rows_per_sec", Json::Num(rps)),
+            ("dataset_bytes", Json::Num(dataset_bytes as f64)),
+        ]));
+        eprintln!("done {name}");
+    };
+    run_case("rowwise (legacy)", &|| {
+        load_csv_str_rowwise("b", &csv, &CsvOptions::default()).unwrap()
+    });
+    run_case("streaming x1", &|| {
+        load_csv_str(
+            "b",
+            &csv,
+            &CsvOptions {
+                n_threads: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    });
+    run_case("streaming xN", &|| {
+        load_csv_str(
+            "b",
+            &csv,
+            &CsvOptions {
+                n_threads: 0,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    });
+
+    // Transient footprint estimate of the legacy path: one `String` per
+    // cell (24-byte header + payload) on top of the raw text — the
+    // allocation storm the streaming path deletes.
+    let width = ds.n_features() + 1;
+    let rowwise_transient = n_rows * width * std::mem::size_of::<String>() + csv.len();
+
+    println!("\n== Ingest: legacy rowwise vs streaming chunk-parallel ==");
+    println!("{}", table.render());
+    println!(
+        "legacy transient estimate: {:.1} MB of cell Strings before any typing",
+        rowwise_transient as f64 / 1e6
+    );
+
+    let artifact = Json::obj(vec![
+        ("bench", Json::Str("ingest".into())),
+        ("scale", Json::Num(cfg.scale)),
+        ("rows", Json::Num(n_rows as f64)),
+        ("features", Json::Num(ds.n_features() as f64)),
+        ("csv_mb", Json::Num(mb)),
+        (
+            "rowwise_transient_bytes_est",
+            Json::Num(rowwise_transient as f64),
+        ),
+        ("cases", Json::Arr(json_cases)),
+    ]);
+    match write_bench_json("ingest", &artifact) {
+        Ok(p) => eprintln!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write bench artifact: {e}"),
+    }
+}

@@ -67,7 +67,7 @@ fn main() -> udt::Result<()> {
                         if f > 0 {
                             req.push(',');
                         }
-                        match col.values[r] {
+                        match col.get(r) {
                             udt::data::value::Value::Num(x) => req.push_str(&format!("{x}")),
                             udt::data::value::Value::Cat(c) => {
                                 req.push_str(&format!("\"{}\"", ds.interner.name(c)))

@@ -1,12 +1,17 @@
-//! A single hybrid feature column with cached summary statistics.
+//! A single hybrid feature column: a name over typed columnar storage.
+//!
+//! Storage is a [`ColumnData`] (dense `f64` / `u32` lanes + kind masks,
+//! `Arc`-shared with inference frames); [`Value`] appears only at the
+//! boundary accessors ([`Column::get`], [`Column::iter`]).
 
+use super::column_data::ColumnData;
 use super::value::Value;
 
 /// Columnar storage for one feature.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct Column {
     pub name: String,
-    pub values: Vec<Value>,
+    pub data: ColumnData,
 }
 
 /// Cheap summary of a column's composition.
@@ -18,36 +23,50 @@ pub struct ColumnStats {
 }
 
 impl Column {
+    /// Build from tagged cells (tests, synthetic generation); ingest and
+    /// frames build typed storage directly through
+    /// [`super::column_data::ColumnShard`].
     pub fn new(name: impl Into<String>, values: Vec<Value>) -> Self {
         Self {
             name: name.into(),
-            values,
+            data: ColumnData::from_cells(&values),
+        }
+    }
+
+    /// Wrap already-typed storage.
+    pub fn from_data(name: impl Into<String>, data: ColumnData) -> Self {
+        Self {
+            name: name.into(),
+            data,
         }
     }
 
     pub fn len(&self) -> usize {
-        self.values.len()
+        self.data.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.values.is_empty()
+        self.data.is_empty()
     }
 
+    /// Boundary accessor: the cell at `row` as a tagged [`Value`].
     #[inline]
     pub fn get(&self, row: usize) -> Value {
-        self.values[row]
+        self.data.get(row)
+    }
+
+    /// Iterate cells as tagged values (boundary / diagnostics).
+    pub fn iter(&self) -> impl Iterator<Item = Value> + '_ {
+        (0..self.len()).map(move |r| self.data.get(r))
     }
 
     pub fn stats(&self) -> ColumnStats {
-        let mut s = ColumnStats::default();
-        for v in &self.values {
-            match v {
-                Value::Num(_) => s.n_num += 1,
-                Value::Cat(_) => s.n_cat += 1,
-                Value::Missing => s.n_missing += 1,
-            }
+        let (n_num, n_cat, n_missing) = self.data.counts();
+        ColumnStats {
+            n_num,
+            n_cat,
+            n_missing,
         }
-        s
     }
 
     /// Row indices holding numeric values, sorted ascending by value
@@ -60,20 +79,9 @@ impl Column {
     /// `(rows, values)` of the numeric cells, sorted ascending by value
     /// (ties by row id). The value array is carried through the builder's
     /// sorted-list filtering so the selection hot loop reads values
-    /// sequentially instead of chasing 16-byte `Value` cells.
+    /// sequentially.
     pub fn sorted_numeric(&self) -> (Vec<u32>, Vec<f64>) {
-        // Sort (value, row) pairs directly — sequential key access beats
-        // sorting indices with indirect loads.
-        let mut pairs: Vec<(f64, u32)> = self
-            .values
-            .iter()
-            .enumerate()
-            .filter_map(|(r, v)| v.as_num().map(|x| (x, r as u32)))
-            .collect();
-        pairs.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
-        let rows = pairs.iter().map(|p| p.1).collect();
-        let vals = pairs.iter().map(|p| p.0).collect();
-        (rows, vals)
+        self.data.sorted_numeric()
     }
 
     /// `(rows, cat_ids)` of the categorical cells, grouped by ascending
@@ -81,25 +89,7 @@ impl Column {
     /// filtering so per-node per-category counts come from a sequential
     /// group walk instead of a hash map over all node rows.
     pub fn sorted_categorical(&self) -> (Vec<u32>, Vec<u32>) {
-        let mut pairs: Vec<(u32, u32)> = self
-            .values
-            .iter()
-            .enumerate()
-            .filter_map(|(r, v)| v.as_cat().map(|c| (c.0, r as u32)))
-            .collect();
-        pairs.sort_unstable();
-        let rows = pairs.iter().map(|p| p.1).collect();
-        let ids = pairs.iter().map(|p| p.0).collect();
-        (rows, ids)
-    }
-
-    /// Number of distinct numeric values (the paper's `N` on the numeric
-    /// side). `O(M log M)`.
-    pub fn unique_numeric_count(&self) -> usize {
-        let mut nums: Vec<f64> = self.values.iter().filter_map(|v| v.as_num()).collect();
-        nums.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
-        nums.dedup();
-        nums.len()
+        self.data.sorted_categorical()
     }
 }
 
@@ -148,8 +138,13 @@ mod tests {
     }
 
     #[test]
-    fn unique_numeric() {
+    fn get_and_iter_read_tagged_cells() {
         let (c, _) = col();
-        assert_eq!(c.unique_numeric_count(), 3);
+        assert_eq!(c.get(0), Value::Num(3.0));
+        assert!(c.get(1).is_cat());
+        assert!(c.get(3).is_missing());
+        let cells: Vec<Value> = c.iter().collect();
+        assert_eq!(cells.len(), 6);
+        assert_eq!(cells[5], Value::Num(2.0));
     }
 }

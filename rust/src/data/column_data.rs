@@ -1,0 +1,641 @@
+//! The one typed columnar store shared by training, inference and ingest.
+//!
+//! A feature column used to exist twice: training walked `Vec<Value>`
+//! (16-byte tagged cells) while serving re-materialized the same data as
+//! a typed `RowFrame` column with a lossy copy at the boundary. This
+//! module is the single replacement: [`ColumnData`] keeps a dense `f64`
+//! numeric lane, a dense `u32` category-id lane, and per-cell kind
+//! bitmasks — and *specializes*:
+//!
+//! * a pure-numeric or pure-categorical column carries **one** lane and,
+//!   when it has no missing cells, no mask at all;
+//! * only a genuinely hybrid column (numeric *and* categorical cells
+//!   mixed) pays for both lanes plus the two kind masks.
+//!
+//! Lanes and masks are `Arc`-shared, so a [`crate::inference::RowFrame`]
+//! built from a [`crate::Dataset`] is a zero-copy view over the same
+//! storage. [`crate::data::value::Value`] survives only as the boundary
+//! accessor type ([`ColumnData::get`]): the selection kernel, the arena
+//! partition and the compiled traversal all read the lanes directly.
+//!
+//! Invariants (upheld by [`ColumnShard`], the only constructor):
+//!
+//! * every present lane has exactly `len()` elements;
+//! * `Num`/`Cat` with `valid: None` means *no* missing cells;
+//! * `Hybrid` has at least one numeric and one categorical cell, and the
+//!   `num`/`cat` masks are disjoint (a cell set in neither is missing);
+//! * lane slots of non-matching kind hold placeholders (`0.0` / `0`)
+//!   that must never be read without consulting the mask.
+
+use super::interner::CatId;
+use super::value::Value;
+use std::sync::Arc;
+
+/// Immutable bit-per-row mask (set = the property holds for the row).
+/// Backed by `Arc<[u64]>` words so column views share it without copies.
+#[derive(Debug, Clone)]
+pub struct Bitmask {
+    bits: Arc<[u64]>,
+    len: usize,
+}
+
+impl Bitmask {
+    /// Build from per-row flags.
+    pub fn from_flags(flags: &[bool]) -> Bitmask {
+        let mut bits = vec![0u64; flags.len().div_ceil(64)];
+        for (i, &v) in flags.iter().enumerate() {
+            if v {
+                bits[i >> 6] |= 1u64 << (i & 63);
+            }
+        }
+        Bitmask {
+            bits: bits.into(),
+            len: flags.len(),
+        }
+    }
+
+    /// Build from raw words (only bits below `len` may be set).
+    pub(crate) fn from_words(words: Vec<u64>, len: usize) -> Bitmask {
+        debug_assert_eq!(words.len(), len.div_ceil(64));
+        Bitmask {
+            bits: words.into(),
+            len,
+        }
+    }
+
+    /// Whether bit `i` is set.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.bits[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of set bits.
+    pub fn count_set(&self) -> usize {
+        self.bits.iter().map(|w| w.count_ones() as usize).sum()
+    }
+}
+
+/// `true` when an optional validity mask allows row `i` (`None` = every
+/// row present).
+#[inline]
+pub fn present(valid: &Option<Bitmask>, i: usize) -> bool {
+    match valid {
+        None => true,
+        Some(m) => m.get(i),
+    }
+}
+
+/// Typed storage of one feature column. See the module docs for the
+/// specialization rules and invariants.
+#[derive(Debug, Clone)]
+pub enum ColumnData {
+    /// Every present cell is numeric. `valid: None` ⇒ no missing cells.
+    Num {
+        vals: Arc<[f64]>,
+        valid: Option<Bitmask>,
+    },
+    /// Every present cell is categorical. `valid: None` ⇒ no missing
+    /// cells. Ids live in the owner's interner space (dataset interner
+    /// for `Dataset` columns, frame interner for `RowFrame` columns).
+    Cat {
+        ids: Arc<[u32]>,
+        valid: Option<Bitmask>,
+    },
+    /// Genuinely hybrid column: both lanes plus disjoint kind masks
+    /// (`num` ∪ `cat` ⊊ rows ⇒ the remainder is missing).
+    Hybrid {
+        vals: Arc<[f64]>,
+        ids: Arc<[u32]>,
+        num: Bitmask,
+        cat: Bitmask,
+    },
+}
+
+impl ColumnData {
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        match self {
+            ColumnData::Num { vals, .. } => vals.len(),
+            ColumnData::Cat { ids, .. } => ids.len(),
+            ColumnData::Hybrid { vals, .. } => vals.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Boundary accessor: the cell at `row` as a tagged [`Value`].
+    #[inline]
+    pub fn get(&self, row: usize) -> Value {
+        match self {
+            ColumnData::Num { vals, valid } => {
+                if present(valid, row) {
+                    Value::Num(vals[row])
+                } else {
+                    Value::Missing
+                }
+            }
+            ColumnData::Cat { ids, valid } => {
+                if present(valid, row) {
+                    Value::Cat(CatId(ids[row]))
+                } else {
+                    Value::Missing
+                }
+            }
+            ColumnData::Hybrid {
+                vals,
+                ids,
+                num,
+                cat,
+            } => {
+                if num.get(row) {
+                    Value::Num(vals[row])
+                } else if cat.get(row) {
+                    Value::Cat(CatId(ids[row]))
+                } else {
+                    Value::Missing
+                }
+            }
+        }
+    }
+
+    /// Specialize a slice of tagged cells into typed storage.
+    pub fn from_cells(cells: &[Value]) -> ColumnData {
+        let mut s = ColumnShard::default();
+        for &v in cells {
+            s.push_value(v);
+        }
+        s.finish()
+    }
+
+    /// Materialize every cell as a tagged [`Value`] (boundary / tests).
+    pub fn cells(&self) -> Vec<Value> {
+        (0..self.len()).map(|r| self.get(r)).collect()
+    }
+
+    /// Extract the given rows as a new column (re-specialized: a hybrid
+    /// column whose subset is pure collapses to a single lane).
+    pub fn gather(&self, rows: &[u32]) -> ColumnData {
+        let mut s = ColumnShard::default();
+        for &r in rows {
+            s.push_value(self.get(r as usize));
+        }
+        s.finish()
+    }
+
+    /// `(n_num, n_cat, n_missing)` cell counts.
+    pub fn counts(&self) -> (usize, usize, usize) {
+        let n = self.len();
+        match self {
+            ColumnData::Num { valid, .. } => {
+                let p = valid.as_ref().map_or(n, Bitmask::count_set);
+                (p, 0, n - p)
+            }
+            ColumnData::Cat { valid, .. } => {
+                let p = valid.as_ref().map_or(n, Bitmask::count_set);
+                (0, p, n - p)
+            }
+            ColumnData::Hybrid { num, cat, .. } => {
+                let (nn, nc) = (num.count_set(), cat.count_set());
+                (nn, nc, n - nn - nc)
+            }
+        }
+    }
+
+    /// `(rows, values)` of the numeric cells, ascending by `(value, row)`
+    /// — the UDT `X^A` root pre-sort, read straight off the lanes.
+    pub fn sorted_numeric(&self) -> (Vec<u32>, Vec<f64>) {
+        let mut pairs: Vec<(f64, u32)> = match self {
+            ColumnData::Num { vals, valid } => (0..vals.len())
+                .filter(|&r| present(valid, r))
+                .map(|r| (vals[r], r as u32))
+                .collect(),
+            ColumnData::Cat { .. } => Vec::new(),
+            ColumnData::Hybrid { vals, num, .. } => (0..vals.len())
+                .filter(|&r| num.get(r))
+                .map(|r| (vals[r], r as u32))
+                .collect(),
+        };
+        pairs.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        (
+            pairs.iter().map(|p| p.1).collect(),
+            pairs.iter().map(|p| p.0).collect(),
+        )
+    }
+
+    /// `(rows, cat_ids)` of the categorical cells, grouped by ascending
+    /// `(id, row)`, read straight off the lanes.
+    pub fn sorted_categorical(&self) -> (Vec<u32>, Vec<u32>) {
+        let mut pairs: Vec<(u32, u32)> = match self {
+            ColumnData::Num { .. } => Vec::new(),
+            ColumnData::Cat { ids, valid } => (0..ids.len())
+                .filter(|&r| present(valid, r))
+                .map(|r| (ids[r], r as u32))
+                .collect(),
+            ColumnData::Hybrid { ids, cat, .. } => (0..ids.len())
+                .filter(|&r| cat.get(r))
+                .map(|r| (ids[r], r as u32))
+                .collect(),
+        };
+        pairs.sort_unstable();
+        (
+            pairs.iter().map(|p| p.1).collect(),
+            pairs.iter().map(|p| p.0).collect(),
+        )
+    }
+
+    /// Resident bytes of the lanes and masks.
+    pub fn approx_bytes(&self) -> usize {
+        let mask_bytes = |m: &Bitmask| m.bits.len() * 8;
+        match self {
+            ColumnData::Num { vals, valid } => {
+                vals.len() * 8 + valid.as_ref().map_or(0, mask_bytes)
+            }
+            ColumnData::Cat { ids, valid } => {
+                ids.len() * 4 + valid.as_ref().map_or(0, mask_bytes)
+            }
+            ColumnData::Hybrid {
+                vals,
+                ids,
+                num,
+                cat,
+            } => vals.len() * 8 + ids.len() * 4 + mask_bytes(num) + mask_bytes(cat),
+        }
+    }
+}
+
+/// Incremental typed column builder: the shared sink of CSV chunk
+/// parsing, [`crate::inference::RowFrameBuilder`] and
+/// [`ColumnData::from_cells`]. Cells append in row order; [`finish`]
+/// picks the densest representation the content allows.
+///
+/// While building, both lanes are kept full-length (placeholders in the
+/// non-matching lane); the lane a pure column does not need is dropped
+/// at [`finish`].
+///
+/// [`finish`]: ColumnShard::finish
+#[derive(Debug, Clone, Default)]
+pub struct ColumnShard {
+    vals: Vec<f64>,
+    ids: Vec<u32>,
+    num_bits: Vec<u64>,
+    cat_bits: Vec<u64>,
+    len: usize,
+    n_num: usize,
+    n_cat: usize,
+}
+
+/// Kind of one appended cell.
+enum CellKind {
+    Num,
+    Cat,
+    Missing,
+}
+
+/// Append the first `n` bits of `src` (a packed bit vector whose bits at
+/// index ≥ `n` are all zero) onto `dst`, which currently holds `dst_len`
+/// bits in exactly `dst_len.div_ceil(64)` words. Preserves both
+/// invariants for the result, so interleaving with per-cell pushes stays
+/// correct.
+fn append_bits(dst: &mut Vec<u64>, dst_len: usize, src: &[u64], n: usize) {
+    debug_assert_eq!(dst.len(), dst_len.div_ceil(64));
+    debug_assert_eq!(src.len(), n.div_ceil(64));
+    if n == 0 {
+        return;
+    }
+    let shift = dst_len & 63;
+    if shift == 0 {
+        dst.extend_from_slice(src);
+        return;
+    }
+    // Each src word contributes its low `64 - shift` bits to the current
+    // last word and (when more of it is live) its high `shift` bits to a
+    // freshly pushed word; the split point is the same for every word.
+    let low = 64 - shift;
+    let mut rem = n;
+    for &w in src {
+        *dst.last_mut().expect("shift != 0 implies a partial word") |= w << shift;
+        if rem > low {
+            dst.push(w >> low);
+        }
+        rem = rem.saturating_sub(64);
+    }
+}
+
+impl ColumnShard {
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn push_cell(&mut self, val: f64, id: u32, kind: CellKind) {
+        if self.len % 64 == 0 {
+            self.num_bits.push(0);
+            self.cat_bits.push(0);
+        }
+        let (w, b) = (self.len >> 6, self.len & 63);
+        match kind {
+            CellKind::Num => {
+                self.num_bits[w] |= 1u64 << b;
+                self.n_num += 1;
+            }
+            CellKind::Cat => {
+                self.cat_bits[w] |= 1u64 << b;
+                self.n_cat += 1;
+            }
+            CellKind::Missing => {}
+        }
+        self.vals.push(val);
+        self.ids.push(id);
+        self.len += 1;
+    }
+
+    /// Append a numeric cell.
+    #[inline]
+    pub fn push_num(&mut self, x: f64) {
+        self.push_cell(x, 0, CellKind::Num);
+    }
+
+    /// Append a categorical cell (id in the owner's interner space).
+    #[inline]
+    pub fn push_cat(&mut self, id: u32) {
+        self.push_cell(0.0, id, CellKind::Cat);
+    }
+
+    /// Append a missing cell.
+    #[inline]
+    pub fn push_missing(&mut self) {
+        self.push_cell(0.0, 0, CellKind::Missing);
+    }
+
+    /// Append a tagged cell.
+    #[inline]
+    pub fn push_value(&mut self, v: Value) {
+        match v {
+            Value::Num(x) => self.push_num(x),
+            Value::Cat(CatId(id)) => self.push_cat(id),
+            Value::Missing => self.push_missing(),
+        }
+    }
+
+    /// Append every cell of `other`, translating its categorical ids
+    /// through `remap` (`remap[local_id] = id in this shard's space`) —
+    /// the per-chunk → global merge step of streaming CSV ingest.
+    ///
+    /// This is the serial section between the parallel chunk parses, so
+    /// it is bulk-wise: lanes append via `extend_from_slice`, masks via
+    /// a shifted word-wise bit append, and only the cells the cat mask
+    /// marks are touched individually (to remap their ids).
+    pub fn append_remapped(&mut self, other: &ColumnShard, remap: &[u32]) {
+        if other.len == 0 {
+            return;
+        }
+        let old_len = self.len;
+        self.vals.extend_from_slice(&other.vals);
+        let id_start = self.ids.len();
+        self.ids.extend_from_slice(&other.ids);
+        // Remap categorical slots only, iterating the set bits of the
+        // cat mask word by word.
+        for (w, &word) in other.cat_bits.iter().enumerate() {
+            let mut word = word;
+            while word != 0 {
+                let i = w * 64 + word.trailing_zeros() as usize;
+                let id = &mut self.ids[id_start + i];
+                *id = remap[*id as usize];
+                word &= word - 1;
+            }
+        }
+        append_bits(&mut self.num_bits, old_len, &other.num_bits, other.len);
+        append_bits(&mut self.cat_bits, old_len, &other.cat_bits, other.len);
+        self.len += other.len;
+        self.n_num += other.n_num;
+        self.n_cat += other.n_cat;
+    }
+
+    /// Specialize into the final typed storage.
+    pub fn finish(self) -> ColumnData {
+        let ColumnShard {
+            vals,
+            ids,
+            num_bits,
+            cat_bits,
+            len,
+            n_num,
+            n_cat,
+        } = self;
+        let any_missing = n_num + n_cat < len;
+        if n_num > 0 && n_cat > 0 {
+            ColumnData::Hybrid {
+                vals: vals.into(),
+                ids: ids.into(),
+                num: Bitmask::from_words(num_bits, len),
+                cat: Bitmask::from_words(cat_bits, len),
+            }
+        } else if n_cat > 0 {
+            ColumnData::Cat {
+                ids: ids.into(),
+                valid: any_missing.then(|| Bitmask::from_words(cat_bits, len)),
+            }
+        } else {
+            // All-numeric, all-missing, or empty — the Num layout
+            // represents each (an all-zero mask marks every row missing).
+            ColumnData::Num {
+                vals: vals.into(),
+                valid: any_missing.then(|| Bitmask::from_words(num_bits, len)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::interner::Interner;
+
+    #[test]
+    fn bitmask_round_trips() {
+        let flags: Vec<bool> = (0..130).map(|i| i % 3 != 0).collect();
+        let m = Bitmask::from_flags(&flags);
+        assert_eq!(m.len(), 130);
+        for (i, &f) in flags.iter().enumerate() {
+            assert_eq!(m.get(i), f, "bit {i}");
+        }
+        assert_eq!(m.count_set(), flags.iter().filter(|&&f| f).count());
+        assert!(!m.is_empty());
+    }
+
+    #[test]
+    fn shard_specializes_representations() {
+        // Pure numeric, no missing → Num with no mask.
+        let d = ColumnData::from_cells(&[Value::Num(1.0), Value::Num(2.0)]);
+        assert!(matches!(&d, ColumnData::Num { valid: None, .. }));
+        assert_eq!(d.counts(), (2, 0, 0));
+
+        // Numeric with a missing cell → Num with a validity mask.
+        let d = ColumnData::from_cells(&[Value::Num(1.0), Value::Missing]);
+        assert!(matches!(&d, ColumnData::Num { valid: Some(_), .. }));
+        assert_eq!(d.counts(), (1, 0, 1));
+
+        // Pure categorical → Cat, single u32 lane.
+        let mut i = Interner::new();
+        let (a, b) = (i.intern("a"), i.intern("b"));
+        let d = ColumnData::from_cells(&[Value::Cat(a), Value::Cat(b)]);
+        assert!(matches!(&d, ColumnData::Cat { valid: None, .. }));
+        assert_eq!(d.counts(), (0, 2, 0));
+
+        // Hybrid → both lanes + kind masks.
+        let d = ColumnData::from_cells(&[Value::Num(1.0), Value::Cat(a), Value::Missing]);
+        assert!(matches!(&d, ColumnData::Hybrid { .. }));
+        assert_eq!(d.counts(), (1, 1, 1));
+
+        // All-missing and empty both take the Num layout.
+        let d = ColumnData::from_cells(&[Value::Missing, Value::Missing]);
+        assert!(matches!(&d, ColumnData::Num { valid: Some(_), .. }));
+        assert_eq!(d.counts(), (0, 0, 2));
+        assert!(ColumnData::from_cells(&[]).is_empty());
+    }
+
+    #[test]
+    fn cells_round_trip_every_kind() {
+        let mut i = Interner::new();
+        let x = i.intern("x");
+        let cells = vec![
+            Value::Num(3.5),
+            Value::Cat(x),
+            Value::Missing,
+            Value::Num(-1.0),
+        ];
+        let d = ColumnData::from_cells(&cells);
+        assert_eq!(d.len(), 4);
+        assert_eq!(d.cells(), cells);
+        for (r, &c) in cells.iter().enumerate() {
+            assert_eq!(d.get(r), c, "row {r}");
+        }
+    }
+
+    #[test]
+    fn gather_respecializes() {
+        let mut i = Interner::new();
+        let x = i.intern("x");
+        let d = ColumnData::from_cells(&[Value::Num(2.0), Value::Cat(x), Value::Num(1.0)]);
+        assert!(matches!(&d, ColumnData::Hybrid { .. }));
+        let g = d.gather(&[2, 0]);
+        // Numeric-only subset collapses to the single-lane layout.
+        assert!(matches!(&g, ColumnData::Num { valid: None, .. }));
+        assert_eq!(g.cells(), vec![Value::Num(1.0), Value::Num(2.0)]);
+    }
+
+    #[test]
+    fn sorted_lanes_match_value_oracle() {
+        let mut i = Interner::new();
+        let (a, b) = (i.intern("a"), i.intern("b"));
+        let cells = vec![
+            Value::Num(3.0),
+            Value::Cat(b),
+            Value::Num(1.0),
+            Value::Missing,
+            Value::Num(1.0),
+            Value::Cat(a),
+        ];
+        let d = ColumnData::from_cells(&cells);
+        let (nr, nv) = d.sorted_numeric();
+        assert_eq!(nr, vec![2, 4, 0]);
+        assert_eq!(nv, vec![1.0, 1.0, 3.0]);
+        let (cr, ci) = d.sorted_categorical();
+        assert_eq!(cr, vec![5, 1]);
+        assert_eq!(ci, vec![a.0, b.0]);
+    }
+
+    #[test]
+    fn append_remapped_translates_ids() {
+        let mut a = ColumnShard::default();
+        a.push_cat(0); // global id 0
+        let mut b = ColumnShard::default();
+        b.push_cat(0); // chunk-local id 0 → global 7
+        b.push_num(5.0);
+        b.push_missing();
+        a.append_remapped(&b, &[7]);
+        let d = a.finish();
+        assert_eq!(d.counts(), (1, 2, 1));
+        assert_eq!(d.get(1), Value::Cat(CatId(7)));
+        assert_eq!(d.get(2), Value::Num(5.0));
+        assert!(d.get(3).is_missing());
+    }
+
+    #[test]
+    fn append_remapped_matches_per_cell_oracle_across_alignments() {
+        // The bulk word-wise merge must agree with sequential pushes for
+        // every mask alignment: below/at/above word boundaries, across
+        // multiple words, and repeated unaligned appends.
+        let kinds = |seed: u64, n: usize| -> Vec<Value> {
+            (0..n)
+                .map(|i| {
+                    match (seed.wrapping_mul(6364136223846793005).wrapping_add(i as u64)
+                        >> 33)
+                        % 3
+                    {
+                        0 => Value::Num(i as f64),
+                        1 => Value::Cat(CatId((i % 5) as u32)),
+                        _ => Value::Missing,
+                    }
+                })
+                .collect()
+        };
+        let identity: Vec<u32> = (0..5).collect();
+        for (base_n, add_ns) in [
+            (0usize, vec![1usize, 63, 64, 65]),
+            (1, vec![63, 64, 130]),
+            (63, vec![1, 64, 2]),
+            (64, vec![64, 63, 65]),
+            (70, vec![130, 1, 200]),
+        ] {
+            let base = kinds(base_n as u64 + 1, base_n);
+            let mut bulk = ColumnShard::default();
+            let mut oracle = ColumnShard::default();
+            for &v in &base {
+                bulk.push_value(v);
+                oracle.push_value(v);
+            }
+            for (k, &n) in add_ns.iter().enumerate() {
+                let cells = kinds(n as u64 * 31 + k as u64, n);
+                let mut chunk = ColumnShard::default();
+                for &v in &cells {
+                    chunk.push_value(v);
+                    oracle.push_value(v);
+                }
+                bulk.append_remapped(&chunk, &identity);
+            }
+            assert_eq!(bulk.len(), oracle.len(), "base {base_n} adds {add_ns:?}");
+            let (a, b) = (bulk.finish(), oracle.finish());
+            assert_eq!(a.cells(), b.cells(), "base {base_n} adds {add_ns:?}");
+            assert_eq!(a.counts(), b.counts(), "base {base_n} adds {add_ns:?}");
+        }
+    }
+
+    #[test]
+    fn approx_bytes_specializes() {
+        let num = ColumnData::from_cells(&vec![Value::Num(1.0); 64]);
+        let mut i = Interner::new();
+        let a = i.intern("a");
+        let cat = ColumnData::from_cells(&vec![Value::Cat(a); 64]);
+        // Pure categorical stores 4-byte ids, not 8-byte values.
+        assert!(cat.approx_bytes() < num.approx_bytes());
+        let mut cells = vec![Value::Num(1.0); 63];
+        cells.push(Value::Cat(a));
+        let hybrid = ColumnData::from_cells(&cells);
+        assert!(hybrid.approx_bytes() > num.approx_bytes());
+    }
+}

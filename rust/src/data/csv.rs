@@ -1,14 +1,34 @@
-//! CSV ingestion with hybrid type inference.
+//! Streaming CSV ingestion with hybrid type inference.
 //!
 //! Cells parse as numbers first and fall back to interned categoricals
 //! (`?`, `NA`, empty → missing) — the paper's no-pre-encoding rule. The
 //! last column is the label by default. Handles quoted fields, embedded
 //! commas/quotes and CRLF line endings.
+//!
+//! ## The streaming pipeline
+//!
+//! The ingest path never materializes the file as rows of `String`s.
+//! Input text is split into **line-aligned byte chunks**; each chunk
+//! parses in parallel straight into typed per-column
+//! [`ColumnShard`]s — on the unquoted fast path fields are borrowed
+//! `&str` slices of the input, so a cell allocates only when it is a
+//! *new* categorical string (interned into a chunk-local
+//! [`Interner`]). Chunks then merge in order: each chunk's interner
+//! (and, for classification, its class-name table) remaps into the
+//! global id space, and shards concatenate. Because every chunk
+//! preserves row order and first-seen order composes across ordered
+//! chunks, the result is **bit-identical** to a sequential parse for
+//! every thread count and chunk size (`rust/tests/prop_ingest.rs`).
+//!
+//! [`load_csv_str_rowwise`] keeps the legacy row-materializing parser as
+//! the equivalence oracle and the baseline of `benches/ingest.rs`.
 
 use super::column::Column;
+use super::column_data::{ColumnData, ColumnShard};
 use super::dataset::{Dataset, Labels, TaskKind};
 use super::interner::Interner;
 use super::value::{parse_cell, Value};
+use crate::coordinator::parallel::{effective_threads, parallel_map};
 use crate::error::{Result, UdtError};
 use std::collections::HashMap;
 use std::path::Path;
@@ -25,6 +45,13 @@ pub struct CsvOptions {
     pub task: TaskKind,
     /// Field delimiter.
     pub delimiter: char,
+    /// Parse worker threads (0 = all cores, 1 = sequential). The parsed
+    /// dataset is bit-identical for every thread count.
+    pub n_threads: usize,
+    /// Target chunk size in bytes for the streaming parser (0 = auto:
+    /// ~4 chunks per worker, at least 64 KiB). Exposed for tests and
+    /// benches; does not affect the parsed result.
+    pub chunk_bytes: usize,
 }
 
 impl Default for CsvOptions {
@@ -34,6 +61,8 @@ impl Default for CsvOptions {
             label_col: None,
             task: TaskKind::Classification,
             delimiter: ',',
+            n_threads: 0,
+            chunk_bytes: 0,
         }
     }
 }
@@ -68,8 +97,397 @@ pub fn parse_record(line: &str, delim: char) -> Vec<String> {
     fields
 }
 
-/// Load a dataset from CSV text.
+/// What the chunk parser does with the label column.
+#[derive(Debug, Clone, Copy)]
+enum LabelMode {
+    /// Every column is a feature (the `RowFrame` CSV path).
+    None,
+    /// Column `i` holds class-name labels.
+    Class(usize),
+    /// Column `i` holds numeric regression targets.
+    Reg(usize),
+}
+
+/// Typed parse output of one line-aligned chunk. Categorical ids (and
+/// classification class ids) are chunk-local; the merge step remaps.
+struct ChunkShard {
+    cols: Vec<ColumnShard>,
+    interner: Interner,
+    class_ids: Vec<u16>,
+    class_names: Vec<String>,
+    reg_vals: Vec<f64>,
+    n_rows: usize,
+}
+
+/// A parse failure local to one chunk; row indices are chunk-relative
+/// and fixed up against the preceding chunks' row counts at merge time.
+struct ChunkError {
+    local_row: usize,
+    kind: ChunkErrorKind,
+}
+
+enum ChunkErrorKind {
+    Ragged { got: usize },
+    BadRegLabel,
+}
+
+impl ChunkError {
+    fn into_error(self, rows_before: usize, width: usize) -> UdtError {
+        match self.kind {
+            ChunkErrorKind::Ragged { got } => UdtError::data(format!(
+                "row {} has {got} fields, expected {width}",
+                rows_before + self.local_row + 1
+            )),
+            ChunkErrorKind::BadRegLabel => UdtError::data(format!(
+                "row {}: non-numeric regression label",
+                rows_before + self.local_row
+            )),
+        }
+    }
+}
+
+/// Split `body` into chunks of roughly `target` bytes, each ending on a
+/// line boundary ('\n' is ASCII, so every cut is a char boundary).
+fn line_aligned_chunks(body: &str, target: usize) -> Vec<&str> {
+    let bytes = body.as_bytes();
+    let target = target.max(1);
+    let mut chunks = Vec::new();
+    let mut start = 0usize;
+    while start < bytes.len() {
+        let mut end = (start + target).min(bytes.len());
+        while end < bytes.len() && bytes[end - 1] != b'\n' {
+            end += 1;
+        }
+        chunks.push(&body[start..end]);
+        start = end;
+    }
+    chunks
+}
+
+/// Parse one chunk into typed shards. `width` is the expected field
+/// count of every record; `n_features` is `width` minus the label
+/// column, if any.
+fn parse_chunk(
+    chunk: &str,
+    width: usize,
+    n_features: usize,
+    label: LabelMode,
+    delim: char,
+) -> std::result::Result<ChunkShard, ChunkError> {
+    let mut shard = ChunkShard {
+        cols: (0..n_features).map(|_| ColumnShard::default()).collect(),
+        interner: Interner::new(),
+        class_ids: Vec::new(),
+        class_names: Vec::new(),
+        reg_vals: Vec::new(),
+        n_rows: 0,
+    };
+    let mut class_map: HashMap<String, u16> = HashMap::new();
+    // Reused across lines on the fast path; holds only `chunk`-borrowed
+    // slices, so one Vec serves the whole chunk without reallocation.
+    let mut fields: Vec<&str> = Vec::with_capacity(width);
+    for line in chunk.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let row = shard.n_rows;
+        // One scan decides the path ('"' and '\r' are ASCII, so a byte
+        // scan is UTF-8-correct).
+        if line.bytes().any(|b| b == b'"' || b == b'\r') {
+            // Slow path: quoted fields / stray carriage returns go
+            // through the one record parser so semantics cannot drift.
+            let owned = parse_record(line, delim);
+            if owned.len() != width {
+                return Err(ChunkError {
+                    local_row: row,
+                    kind: ChunkErrorKind::Ragged { got: owned.len() },
+                });
+            }
+            push_fields(
+                &mut shard,
+                &mut class_map,
+                owned.iter().map(String::as_str),
+                label,
+                row,
+            )?;
+        } else {
+            // Fast path: borrowed `&str` field slices straight off the
+            // input — no per-cell `String`, and the single split pass
+            // both validates the width and feeds the cell parser.
+            fields.clear();
+            fields.extend(line.split(delim));
+            if fields.len() != width {
+                return Err(ChunkError {
+                    local_row: row,
+                    kind: ChunkErrorKind::Ragged { got: fields.len() },
+                });
+            }
+            push_fields(
+                &mut shard,
+                &mut class_map,
+                fields.iter().copied(),
+                label,
+                row,
+            )?;
+        }
+        shard.n_rows += 1;
+    }
+    Ok(shard)
+}
+
+/// Append one validated record's cells to the chunk's typed shards.
+fn push_fields<'x>(
+    shard: &mut ChunkShard,
+    class_map: &mut HashMap<String, u16>,
+    fields: impl Iterator<Item = &'x str>,
+    label: LabelMode,
+    row: usize,
+) -> std::result::Result<(), ChunkError> {
+    let ChunkShard {
+        cols,
+        interner,
+        class_ids,
+        class_names,
+        reg_vals,
+        ..
+    } = shard;
+    let mut slot = 0usize;
+    for (c, raw) in fields.enumerate() {
+        match label {
+            LabelMode::Class(lc) if c == lc => {
+                let name = raw.trim();
+                let id = match class_map.get(name) {
+                    Some(&id) => id,
+                    None => {
+                        let id = class_names.len() as u16;
+                        class_names.push(name.to_string());
+                        class_map.insert(name.to_string(), id);
+                        id
+                    }
+                };
+                class_ids.push(id);
+            }
+            LabelMode::Reg(lc) if c == lc => {
+                let v: f64 = raw.trim().parse().map_err(|_| ChunkError {
+                    local_row: row,
+                    kind: ChunkErrorKind::BadRegLabel,
+                })?;
+                reg_vals.push(v);
+            }
+            _ => {
+                cols[slot].push_value(parse_cell(raw, |s| interner.intern(s)));
+                slot += 1;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Consume the header line (if any); returns the parsed header fields
+/// and the remaining body text.
+fn split_header(text: &str, delim: char, has_header: bool) -> (Option<Vec<String>>, &str) {
+    if !has_header {
+        return (None, text);
+    }
+    let mut offset = 0usize;
+    for raw in text.split_inclusive('\n') {
+        let line = raw.strip_suffix('\n').unwrap_or(raw);
+        offset += raw.len();
+        if line.trim().is_empty() {
+            continue;
+        }
+        let fields = parse_record(line, delim)
+            .into_iter()
+            .map(|f| f.trim().to_string())
+            .collect();
+        return (Some(fields), &text[offset..]);
+    }
+    (None, &text[text.len()..])
+}
+
+/// Field count of the first data record (width source when there is no
+/// header).
+fn first_data_width(body: &str, delim: char) -> Option<usize> {
+    for line in body.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        return Some(if line.contains('"') {
+            parse_record(line, delim).len()
+        } else {
+            line.split(delim).count()
+        });
+    }
+    None
+}
+
+/// Everything the streaming parser produces; shared by the dataset path
+/// ([`load_csv_str`]) and the feature-frame path
+/// ([`crate::inference::RowFrame::from_csv_str`]).
+pub(crate) struct TypedCsv {
+    pub feature_names: Vec<String>,
+    pub columns: Vec<ColumnData>,
+    pub interner: Interner,
+    pub labels: Option<Labels>,
+    pub class_names: Vec<String>,
+    pub n_rows: usize,
+}
+
+/// The streaming chunk-parallel core: split → typed chunk shards →
+/// ordered merge with interner/class remapping. `with_label` selects
+/// dataset semantics (label column split out per `opts`) versus frame
+/// semantics (every column a feature).
+pub(crate) fn parse_typed_csv(
+    name: &str,
+    text: &str,
+    opts: &CsvOptions,
+    with_label: bool,
+) -> Result<TypedCsv> {
+    let delim = opts.delimiter;
+    let (header, body) = split_header(text, delim, opts.has_header);
+
+    // Expected record width: the header's when present (a mismatched
+    // header is an error, not a silent misalignment), else the first
+    // data record's.
+    let width = match header.as_ref().map(Vec::len) {
+        Some(w) => w,
+        None => first_data_width(body, delim)
+            .ok_or_else(|| UdtError::data(format!("csv `{name}` has no data rows")))?,
+    };
+
+    let label = if with_label {
+        if width < 2 {
+            return Err(UdtError::data(format!(
+                "csv `{name}` needs at least one feature column plus a label"
+            )));
+        }
+        let label_col = opts.label_col.unwrap_or(width - 1);
+        if label_col >= width {
+            return Err(UdtError::data(format!(
+                "label column {label_col} out of range (width {width})"
+            )));
+        }
+        match opts.task {
+            TaskKind::Classification => LabelMode::Class(label_col),
+            TaskKind::Regression => LabelMode::Reg(label_col),
+        }
+    } else {
+        LabelMode::None
+    };
+    let n_features = match label {
+        LabelMode::None => width,
+        _ => width - 1,
+    };
+
+    let threads = effective_threads(opts.n_threads).max(1);
+    let target = if opts.chunk_bytes > 0 {
+        opts.chunk_bytes
+    } else if threads <= 1 {
+        body.len().max(1)
+    } else {
+        (body.len() / (threads * 4)).max(1 << 16)
+    };
+    let chunks = line_aligned_chunks(body, target);
+    let shards = parallel_map(chunks, threads, |chunk| {
+        parse_chunk(chunk, width, n_features, label, delim)
+    });
+
+    // Ordered merge: chunk-local id spaces remap into the global ones.
+    // First-seen order composes across ordered chunks, so interner ids
+    // and class ids match a sequential parse exactly.
+    let mut interner = Interner::new();
+    let mut cols: Vec<ColumnShard> = (0..n_features).map(|_| ColumnShard::default()).collect();
+    let mut class_names: Vec<String> = Vec::new();
+    let mut global_class: HashMap<String, u16> = HashMap::new();
+    let mut class_ids: Vec<u16> = Vec::new();
+    let mut reg_vals: Vec<f64> = Vec::new();
+    let mut rows_before = 0usize;
+    for res in shards {
+        let shard = match res {
+            Ok(s) => s,
+            Err(e) => return Err(e.into_error(rows_before, width)),
+        };
+        let remap: Vec<u32> = shard
+            .interner
+            .names()
+            .iter()
+            .map(|n| interner.intern(n).0)
+            .collect();
+        for (dst, src) in cols.iter_mut().zip(&shard.cols) {
+            dst.append_remapped(src, &remap);
+        }
+        if !shard.class_names.is_empty() || !shard.class_ids.is_empty() {
+            let cmap: Vec<u16> = shard
+                .class_names
+                .iter()
+                .map(|n| match global_class.get(n) {
+                    Some(&id) => id,
+                    None => {
+                        let id = class_names.len() as u16;
+                        class_names.push(n.clone());
+                        global_class.insert(n.clone(), id);
+                        id
+                    }
+                })
+                .collect();
+            class_ids.extend(shard.class_ids.iter().map(|&l| cmap[l as usize]));
+        }
+        reg_vals.extend_from_slice(&shard.reg_vals);
+        rows_before += shard.n_rows;
+    }
+    if rows_before == 0 {
+        return Err(UdtError::data(format!("csv `{name}` has no data rows")));
+    }
+
+    let feature_names = (0..width)
+        .filter(|&c| !matches!(label, LabelMode::Class(lc) | LabelMode::Reg(lc) if lc == c))
+        .map(|c| {
+            header
+                .as_ref()
+                .and_then(|h| h.get(c).cloned())
+                .unwrap_or_else(|| format!("f{c}"))
+        })
+        .collect();
+    let labels = match label {
+        LabelMode::None => None,
+        LabelMode::Class(_) => Some(Labels::Class {
+            ids: class_ids,
+            n_classes: class_names.len(),
+        }),
+        LabelMode::Reg(_) => Some(Labels::Reg { values: reg_vals }),
+    };
+    Ok(TypedCsv {
+        feature_names,
+        columns: cols.into_iter().map(ColumnShard::finish).collect(),
+        interner,
+        labels,
+        class_names,
+        n_rows: rows_before,
+    })
+}
+
+/// Load a dataset from CSV text through the streaming chunk-parallel
+/// parser (see the module docs; bit-identical for any
+/// `CsvOptions::n_threads` / `chunk_bytes`).
 pub fn load_csv_str(name: &str, text: &str, opts: &CsvOptions) -> Result<Dataset> {
+    let parsed = parse_typed_csv(name, text, opts, true)?;
+    let columns = parsed
+        .feature_names
+        .into_iter()
+        .zip(parsed.columns)
+        .map(|(n, d)| Column::from_data(n, d))
+        .collect();
+    let labels = parsed.labels.expect("dataset parse always yields labels");
+    let mut ds = Dataset::new(name, columns, labels, parsed.interner)?;
+    ds.class_names = std::sync::Arc::new(parsed.class_names);
+    Ok(ds)
+}
+
+/// The legacy row-materializing parser (every cell a heap `String`
+/// before typing). Kept as the equivalence oracle for
+/// `rust/tests/prop_ingest.rs` and the baseline of `benches/ingest.rs`;
+/// production callers use [`load_csv_str`].
+pub fn load_csv_str_rowwise(name: &str, text: &str, opts: &CsvOptions) -> Result<Dataset> {
     let mut lines = text.lines().filter(|l| !l.trim().is_empty());
     let mut header: Option<Vec<String>> = None;
     if opts.has_header {
@@ -82,13 +500,20 @@ pub fn load_csv_str(name: &str, text: &str, opts: &CsvOptions) -> Result<Dataset
     let mut rows: Vec<Vec<String>> = Vec::new();
     for (i, line) in lines.enumerate() {
         let fields = parse_record(line, opts.delimiter);
-        if let Some(prev) = rows.first() {
-            if fields.len() != prev.len() {
+        // Validate against the header when there is one (a header whose
+        // width disagrees with the data must not silently misalign the
+        // feature names), else against the first data row.
+        let expected = header
+            .as_ref()
+            .map(Vec::len)
+            .or_else(|| rows.first().map(Vec::len));
+        if let Some(expected) = expected {
+            if fields.len() != expected {
                 return Err(UdtError::data(format!(
                     "row {} has {} fields, expected {}",
                     i + 1,
                     fields.len(),
-                    prev.len()
+                    expected
                 )));
             }
         }
@@ -112,23 +537,26 @@ pub fn load_csv_str(name: &str, text: &str, opts: &CsvOptions) -> Result<Dataset
 
     let mut interner = Interner::new();
     let feature_cols: Vec<usize> = (0..width).filter(|&c| c != label_col).collect();
-    let mut columns: Vec<Column> = feature_cols
+    let mut cells: Vec<Vec<Value>> = feature_cols
         .iter()
-        .map(|&c| {
+        .map(|_| Vec::with_capacity(rows.len()))
+        .collect();
+    for row in &rows {
+        for (slot, &c) in feature_cols.iter().enumerate() {
+            cells[slot].push(parse_cell(&row[c], |s| interner.intern(s)));
+        }
+    }
+    let columns: Vec<Column> = feature_cols
+        .iter()
+        .zip(cells)
+        .map(|(&c, vals)| {
             let col_name = header
                 .as_ref()
                 .and_then(|h| h.get(c).cloned())
                 .unwrap_or_else(|| format!("f{c}"));
-            Column::new(col_name, Vec::with_capacity(rows.len()))
+            Column::new(col_name, vals)
         })
         .collect();
-
-    for row in &rows {
-        for (slot, &c) in feature_cols.iter().enumerate() {
-            let v = parse_cell(&row[c], |s| interner.intern(s));
-            columns[slot].values.push(v);
-        }
-    }
 
     let labels = match opts.task {
         TaskKind::Classification => {
@@ -192,7 +620,7 @@ pub fn to_csv_string(ds: &Dataset) -> String {
     out.push_str("label\n");
     for row in 0..ds.n_rows() {
         for c in &ds.columns {
-            match c.values[row] {
+            match c.get(row) {
                 Value::Num(x) => out.push_str(&format_num(x)),
                 Value::Cat(id) => {
                     let name = ds.interner.name(id);
@@ -253,6 +681,8 @@ mod tests {
         assert!(ds.value(1, 0).is_cat());
         assert!(ds.value(0, 2).is_missing());
         assert_eq!(*ds.class_names, vec!["yes", "no"]);
+        assert_eq!(ds.columns[0].name, "age");
+        assert_eq!(ds.columns[1].name, "color");
     }
 
     #[test]
@@ -275,12 +705,34 @@ mod tests {
             ..Default::default()
         };
         assert!(load_csv_str("r", text, &opts).is_err());
+        assert!(load_csv_str_rowwise("r", text, &opts).is_err());
     }
 
     #[test]
     fn ragged_rows_rejected() {
         let text = "a,b,label\n1,2,x\n1,x\n";
         assert!(load_csv_str("t", text, &CsvOptions::default()).is_err());
+        assert!(load_csv_str_rowwise("t", text, &CsvOptions::default()).is_err());
+    }
+
+    #[test]
+    fn header_width_mismatch_rejected() {
+        // Regression test: a header narrower (or wider) than the data
+        // used to be silently accepted, misaligning feature names.
+        let narrow = "a,b\n1,2,x\n3,4,y\n";
+        let wide = "a,b,c,label\n1,2,x\n3,4,y\n";
+        for text in [narrow, wide] {
+            assert!(
+                load_csv_str("t", text, &CsvOptions::default()).is_err(),
+                "accepted mismatched header: {text:?}"
+            );
+            assert!(
+                load_csv_str_rowwise("t", text, &CsvOptions::default()).is_err(),
+                "rowwise accepted mismatched header: {text:?}"
+            );
+        }
+        // A consistent header still loads.
+        assert!(load_csv_str("t", "a,label\n1,x\n", &CsvOptions::default()).is_ok());
     }
 
     #[test]
@@ -313,5 +765,73 @@ mod tests {
         let ds = load_csv_str("t", text, &opts).unwrap();
         assert_eq!(ds.n_features(), 1);
         assert_eq!(ds.value(0, 1), Value::Num(2.0));
+        assert_eq!(ds.columns[0].name, "f");
+    }
+
+    #[test]
+    fn chunked_parse_matches_sequential_exactly() {
+        // Tiny chunk size forces many chunks through the merge path;
+        // interner ids and class ids must still match the sequential
+        // parse bit-for-bit.
+        let text = "f,g,label\nzebra,1,y\napple,2,n\nzebra,pear,y\n,3,n\napple,4,y\n";
+        let seq = load_csv_str("t", text, &CsvOptions::default()).unwrap();
+        let chunked = load_csv_str(
+            "t",
+            text,
+            &CsvOptions {
+                n_threads: 3,
+                chunk_bytes: 8,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(seq.n_rows(), chunked.n_rows());
+        assert_eq!(seq.interner.names(), chunked.interner.names());
+        assert_eq!(*seq.class_names, *chunked.class_names);
+        for f in 0..seq.n_features() {
+            for r in 0..seq.n_rows() {
+                assert_eq!(seq.value(f, r), chunked.value(f, r), "cell ({f},{r})");
+            }
+        }
+        for r in 0..seq.n_rows() {
+            assert_eq!(seq.labels.class(r), chunked.labels.class(r));
+        }
+    }
+
+    #[test]
+    fn line_aligned_chunks_tile_the_input() {
+        let body = "aa\nbbbb\nc\n";
+        for target in 1..=body.len() + 1 {
+            let chunks = line_aligned_chunks(body, target);
+            let joined: String = chunks.concat();
+            assert_eq!(joined, body, "target {target}");
+            for c in &chunks[..chunks.len().saturating_sub(1)] {
+                assert!(c.ends_with('\n'), "chunk {c:?} not line-aligned");
+            }
+        }
+        assert!(line_aligned_chunks("", 8).is_empty());
+    }
+
+    #[test]
+    fn crlf_and_quotes_survive_streaming() {
+        let text = "a,b,label\r\n\"x,1\",2,yes\r\n\"say \"\"hi\"\"\",3,no\r\n";
+        for opts in [
+            CsvOptions::default(),
+            CsvOptions {
+                n_threads: 2,
+                chunk_bytes: 4,
+                ..Default::default()
+            },
+        ] {
+            let ds = load_csv_str("t", text, &opts).unwrap();
+            assert_eq!(ds.n_rows(), 2);
+            assert_eq!(ds.interner.name(ds.value(0, 0).as_cat().unwrap()), "x,1");
+            assert_eq!(
+                ds.interner.name(ds.value(0, 1).as_cat().unwrap()),
+                "say \"hi\""
+            );
+            assert_eq!(ds.value(1, 1), Value::Num(3.0));
+            assert_eq!(*ds.class_names, vec!["yes", "no"]);
+        }
     }
 }

@@ -131,12 +131,19 @@ impl Dataset {
 
     #[inline]
     pub fn value(&self, feature: usize, row: usize) -> Value {
-        self.columns[feature].values[row]
+        self.columns[feature].get(row)
     }
 
     /// One example as a row of values (allocates; for serving/tests).
     pub fn row(&self, row: usize) -> Vec<Value> {
-        self.columns.iter().map(|c| c.values[row]).collect()
+        self.columns.iter().map(|c| c.get(row)).collect()
+    }
+
+    /// Number of distinct numeric values of feature `f` — the paper's `N`
+    /// on the numeric side — memoized alongside the sort-index cache
+    /// (derived from the sorted value lane, never re-sorted per call).
+    pub fn unique_numeric_count(&self, f: usize) -> usize {
+        self.sorted_index().features[f].n_unique_num
     }
 
     /// The cached per-feature root sort (UDT Algorithm 5 line 2), built
@@ -199,12 +206,7 @@ impl Dataset {
         let columns = self
             .columns
             .iter()
-            .map(|c| {
-                Column::new(
-                    c.name.clone(),
-                    rows.iter().map(|&r| c.values[r as usize]).collect(),
-                )
-            })
+            .map(|c| Column::from_data(c.name.clone(), c.data.gather(rows)))
             .collect();
         let labels = match &self.labels {
             Labels::Class { ids, n_classes } => Labels::Class {
@@ -226,9 +228,14 @@ impl Dataset {
         }
     }
 
-    /// Approximate resident memory of the feature matrix, in bytes.
+    /// Approximate resident memory of the feature matrix, in bytes
+    /// (typed lanes + kind masks — pure columns carry one lane, only
+    /// hybrid columns pay for both).
     pub fn approx_bytes(&self) -> usize {
-        self.n_rows() * self.n_features() * std::mem::size_of::<Value>()
+        self.columns
+            .iter()
+            .map(|c| c.data.approx_bytes())
+            .sum::<usize>()
             + match &self.labels {
                 Labels::Class { ids, .. } => ids.len() * 2,
                 Labels::Reg { values } => values.len() * 8,
@@ -317,10 +324,23 @@ mod tests {
         let mut d = tiny();
         assert_eq!(d.sorted_index().features[0].num_rows, vec![0, 1]);
         // Swap the two numeric cells of f0 and invalidate.
-        d.columns[0].values.swap(0, 1);
+        let mut cells = d.columns[0].data.cells();
+        cells.swap(0, 1);
+        let name = d.columns[0].name.clone();
+        d.columns[0] = Column::new(name, cells);
         d.invalidate_sort_cache();
         assert_eq!(d.sorted_index().features[0].num_rows, vec![1, 0]);
         assert_eq!(d.sort_index_builds(), 2);
+    }
+
+    #[test]
+    fn unique_numeric_count_is_memoized_with_the_index() {
+        let d = tiny();
+        // f0 has numeric cells {1.0, 2.0}; f1 has {0.5, 0.1}.
+        assert_eq!(d.unique_numeric_count(0), 2);
+        assert_eq!(d.unique_numeric_count(1), 2);
+        // Derived from the cached index: no extra sort builds.
+        assert_eq!(d.sort_index_builds(), 1);
     }
 
     #[test]

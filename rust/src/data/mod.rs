@@ -1,8 +1,10 @@
 //! Tabular data substrate: hybrid values (numeric + categorical + missing),
-//! string interning, columnar datasets, CSV ingestion and the synthetic
+//! string interning, the typed columnar store ([`column_data`]) shared by
+//! training and inference, streaming CSV ingestion and the synthetic
 //! dataset registry substituting for the paper's UCI/Kaggle downloads.
 
 pub mod column;
+pub mod column_data;
 pub mod csv;
 pub mod dataset;
 pub mod interner;
@@ -10,6 +12,7 @@ pub mod sorted_index;
 pub mod synth;
 pub mod value;
 
+pub use column_data::{Bitmask, ColumnData, ColumnShard};
 pub use dataset::{Dataset, Labels, TaskKind};
 pub use sorted_index::SortedIndex;
 pub use interner::{CatId, Interner};

@@ -42,6 +42,10 @@ pub struct FeatureSorted {
     /// the selection engine skip its per-node statistics pass on clean
     /// numeric columns).
     pub has_nonnum: bool,
+    /// Number of distinct numeric values — the paper's `N` — derived in
+    /// one `O(M)` pass over the already-sorted value lane and memoized
+    /// here (see [`crate::data::dataset::Dataset::unique_numeric_count`]).
+    pub n_unique_num: usize,
 }
 
 /// The cached root pre-sort of a whole dataset (Algorithm 5 line 2).
@@ -61,15 +65,23 @@ impl SortedIndex {
         let features = columns
             .iter()
             .map(|c| {
+                // Both orders come straight off the typed lanes — no
+                // tagged-cell scan, no re-classification.
                 let (num_rows, num_vals) = c.sorted_numeric();
                 let (cat_rows, cat_ids) = c.sorted_categorical();
                 let has_nonnum = num_rows.len() != c.len();
+                let n_unique_num = num_vals
+                    .windows(2)
+                    .filter(|w| w[0] != w[1])
+                    .count()
+                    + usize::from(!num_vals.is_empty());
                 FeatureSorted {
                     num_rows,
                     num_vals,
                     cat_rows,
                     cat_ids,
                     has_nonnum,
+                    n_unique_num,
                 }
             })
             .collect();
@@ -124,6 +136,36 @@ mod tests {
         assert!(!idx.features[0].has_nonnum);
         assert!(idx.features[1].has_nonnum);
         assert!(idx.reg_order.is_empty());
+        assert_eq!(idx.features[0].n_unique_num, 2);
+        assert_eq!(idx.features[1].n_unique_num, 1);
+    }
+
+    #[test]
+    fn unique_count_deduplicates_ties() {
+        let col = Column::new(
+            "c",
+            vec![
+                Value::Num(2.0),
+                Value::Num(1.0),
+                Value::Num(2.0),
+                Value::Num(1.0),
+                Value::Missing,
+            ],
+        );
+        let labels = Labels::Class {
+            ids: vec![0; 5],
+            n_classes: 1,
+        };
+        let idx = SortedIndex::build(&[col], &labels);
+        assert_eq!(idx.features[0].n_unique_num, 2);
+        // Empty numeric lane → zero distinct values.
+        let empty = Column::new("e", vec![Value::Missing; 3]);
+        let labels = Labels::Class {
+            ids: vec![0; 3],
+            n_classes: 1,
+        };
+        let idx = SortedIndex::build(&[empty], &labels);
+        assert_eq!(idx.features[0].n_unique_num, 0);
     }
 
     #[test]

@@ -204,10 +204,9 @@ fn generate(spec: &SynthSpec, seed: u64) -> Dataset {
 
     let gt = build_gt(&mut rng.fork(1), spec.gt_depth, &kinds, spec, -100.0, 100.0);
 
-    let mut columns: Vec<Column> = kinds
+    let mut cell_cols: Vec<Vec<Value>> = kinds
         .iter()
-        .enumerate()
-        .map(|(i, _)| Column::new(format!("f{i}"), Vec::with_capacity(spec.n_rows)))
+        .map(|_| Vec::with_capacity(spec.n_rows))
         .collect();
     let mut class_ids: Vec<u16> = Vec::new();
     let mut reg_values: Vec<f64> = Vec::new();
@@ -242,7 +241,7 @@ fn generate(spec: &SynthSpec, seed: u64) -> Dataset {
                 }
             };
             row_buf[f] = v;
-            columns[f].values.push(v);
+            cell_cols[f].push(v);
         }
         let (class, value) = gt.eval(&row_buf);
         if spec.is_regression() {
@@ -265,6 +264,11 @@ fn generate(spec: &SynthSpec, seed: u64) -> Dataset {
             n_classes: spec.n_classes,
         }
     };
+    let columns: Vec<Column> = cell_cols
+        .into_iter()
+        .enumerate()
+        .map(|(i, cells)| Column::new(format!("f{i}"), cells))
+        .collect();
     let mut ds = Dataset::new(spec.name.clone(), columns, labels, interner)
         .expect("synthetic dataset is always well-formed");
     if !spec.is_regression() {
@@ -370,8 +374,8 @@ mod tests {
         spec.hybrid_frac = 0.0;
         spec.missing_frac = 0.0;
         let ds = generate_classification(&spec, 5);
-        for c in &ds.columns {
-            assert!(c.unique_numeric_count() <= 32);
+        for f in 0..ds.n_features() {
+            assert!(ds.unique_numeric_count(f) <= 32);
         }
     }
 

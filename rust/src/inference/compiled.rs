@@ -42,6 +42,7 @@
 
 use super::frame::{FrameColumn, RowFrame};
 use crate::coordinator::parallel::parallel_map_chunked;
+use crate::data::column_data::{present, ColumnData};
 use crate::data::dataset::{Labels, TaskKind};
 use crate::data::interner::Interner;
 use crate::data::value::Value;
@@ -236,31 +237,38 @@ impl CompiledTree {
     }
 }
 
-/// Evaluate one compiled predicate against a frame cell (paper Table 3
-/// semantics: cross-type and missing always false → negative branch).
+/// Evaluate one compiled predicate against a frame cell, straight off
+/// the shared typed lanes (paper Table 3 semantics: cross-type and
+/// missing always false → negative branch). No tagged `Value` is
+/// constructed anywhere in the traversal.
 #[inline]
 fn eval_frame_cell(col: &FrameColumn, row: usize, tag: u8, operand: u64, cat_map: &[u32]) -> bool {
     match col {
-        FrameColumn::Num { values, valid } => {
-            if tag == TAG_EQ || !valid.get(row) {
+        ColumnData::Num { vals, valid } => {
+            if tag == TAG_EQ || !present(valid, row) {
                 return false;
             }
-            let x = values[row];
+            let x = vals[row];
             if tag == TAG_LE {
                 x <= f64::from_bits(operand)
             } else {
                 x > f64::from_bits(operand)
             }
         }
-        FrameColumn::Cat { ids, valid } => {
+        ColumnData::Cat { ids, valid } => {
             tag == TAG_EQ
-                && valid.get(row)
+                && present(valid, row)
                 && translate(cat_map, ids[row]) as u64 == operand
         }
-        FrameColumn::Mixed { cells } => match (tag, cells[row]) {
-            (TAG_LE, Value::Num(x)) => x <= f64::from_bits(operand),
-            (TAG_GT, Value::Num(x)) => x > f64::from_bits(operand),
-            (TAG_EQ, Value::Cat(c)) => translate(cat_map, c.0) as u64 == operand,
+        ColumnData::Hybrid {
+            vals,
+            ids,
+            num,
+            cat,
+        } => match tag {
+            TAG_LE if num.get(row) => vals[row] <= f64::from_bits(operand),
+            TAG_GT if num.get(row) => vals[row] > f64::from_bits(operand),
+            TAG_EQ if cat.get(row) => translate(cat_map, ids[row]) as u64 == operand,
             _ => false,
         },
     }

@@ -1,111 +1,38 @@
 //! Columnar prediction input: the [`RowFrame`].
 //!
-//! Serving parses request batches once into a frame — typed per-feature
-//! columns plus a validity mask — and every model then predicts over the
-//! same columnar view. Columns specialize on content:
+//! A frame is a thin view over the same typed columnar store training
+//! uses — each feature column is a
+//! [`ColumnData`](crate::data::column_data::ColumnData) (dense `f64` /
+//! `u32` lanes + kind masks, specialized per content) plus a frame-local
+//! string interner for categorical cells. There is no frame-specific
+//! cell representation left: [`RowFrame::from_dataset`] **shares** the
+//! dataset's `Arc` lanes and interner outright (zero copy), while the
+//! builder / JSON / CSV constructors assemble fresh lanes through the
+//! same [`ColumnShard`] sink the ingest pipeline uses.
 //!
-//! * [`FrameColumn::Num`] — contiguous `f64` payloads + validity bits;
-//! * [`FrameColumn::Cat`] — contiguous frame-local category ids + bits;
-//! * [`FrameColumn::Mixed`] — hybrid columns fall back to tagged cells.
-//!
-//! Categorical cells intern into a **frame-local** id space (the frame
-//! never sees a model's interner); a [`super::CompiledModel`] translates
-//! frame ids into its own baked operand space once per `predict_frame`
-//! call, so the traversal inner loop is pure integer compares.
+//! A [`super::CompiledModel`] translates frame-local category ids into
+//! its own baked operand space once per `predict_frame` call, so the
+//! traversal inner loop is pure integer compares.
 //!
 //! Frames build once from rows ([`RowFrameBuilder`]), JSON arrays
 //! ([`RowFrame::from_json_rows`] / [`RowFrame::from_json_lines`]), CSV
-//! text ([`RowFrame::from_csv_str`]) or a [`Dataset`] view
+//! text ([`RowFrame::from_csv_str`], routed through the one streaming
+//! parser in `data/csv.rs`) or a [`Dataset`] view
 //! ([`RowFrame::from_dataset`]).
 
+use crate::data::column_data::{ColumnData, ColumnShard};
 use crate::data::dataset::Dataset;
-use crate::data::interner::{CatId, Interner};
-use crate::data::value::{parse_cell, Value};
+use crate::data::interner::Interner;
+use crate::data::value::Value;
 use crate::error::{Result, UdtError};
 use crate::util::json::Json;
+use std::sync::Arc;
 
-/// Bit-per-row validity mask: a set bit means the cell is present, a
-/// clear bit means missing.
-#[derive(Debug, Clone)]
-pub struct ValidityMask {
-    bits: Box<[u64]>,
-    len: usize,
-}
+/// The typed column storage frames share with the training data layer.
+pub type FrameColumn = ColumnData;
 
-impl ValidityMask {
-    /// Build from per-row validity flags.
-    pub fn from_flags(flags: &[bool]) -> ValidityMask {
-        let mut bits = vec![0u64; flags.len().div_ceil(64)];
-        for (i, &v) in flags.iter().enumerate() {
-            if v {
-                bits[i >> 6] |= 1u64 << (i & 63);
-            }
-        }
-        ValidityMask {
-            bits: bits.into_boxed_slice(),
-            len: flags.len(),
-        }
-    }
-
-    /// Whether row `i` holds a value (false = missing).
-    #[inline]
-    pub fn get(&self, i: usize) -> bool {
-        debug_assert!(i < self.len);
-        (self.bits[i >> 6] >> (i & 63)) & 1 == 1
-    }
-
-    pub fn len(&self) -> usize {
-        self.len
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len == 0
-    }
-
-    /// Number of valid (present) rows.
-    pub fn count_valid(&self) -> usize {
-        self.bits.iter().map(|w| w.count_ones() as usize).sum()
-    }
-}
-
-/// One typed feature column of a [`RowFrame`].
-///
-/// `Cat` ids (and `Value::Cat` payloads inside `Mixed` cells) live in the
-/// frame's local interner space, not any model's.
-#[derive(Debug, Clone)]
-pub enum FrameColumn {
-    /// All present cells numeric: values + validity (missing rows hold 0.0).
-    Num { values: Box<[f64]>, valid: ValidityMask },
-    /// All present cells categorical: frame-local ids + validity
-    /// (missing rows hold id 0).
-    Cat { ids: Box<[u32]>, valid: ValidityMask },
-    /// Hybrid column (numeric and categorical cells mixed): tagged cells.
-    Mixed { cells: Box<[Value]> },
-}
-
-impl FrameColumn {
-    /// The cell at `row` as a frame-local [`Value`].
-    #[inline]
-    pub fn cell(&self, row: usize) -> Value {
-        match self {
-            FrameColumn::Num { values, valid } => {
-                if valid.get(row) {
-                    Value::Num(values[row])
-                } else {
-                    Value::Missing
-                }
-            }
-            FrameColumn::Cat { ids, valid } => {
-                if valid.get(row) {
-                    Value::Cat(CatId(ids[row]))
-                } else {
-                    Value::Missing
-                }
-            }
-            FrameColumn::Mixed { cells } => cells[row],
-        }
-    }
-}
+/// Bit-per-row validity/kind mask (re-exported from the data layer).
+pub type ValidityMask = crate::data::column_data::Bitmask;
 
 /// One raw input cell handed to the [`RowFrameBuilder`].
 #[derive(Debug, Clone, Copy)]
@@ -115,11 +42,14 @@ pub enum Cell<'a> {
     Missing,
 }
 
-/// Row-major accumulator that specializes into a columnar [`RowFrame`].
+/// Row-major accumulator that builds typed columns directly (no
+/// intermediate tagged-cell buffer): numeric cells stream into the `f64`
+/// lane, strings intern into the frame-local id space and stream into
+/// the `u32` lane.
 #[derive(Debug)]
 pub struct RowFrameBuilder {
     n_features: usize,
-    columns: Vec<Vec<Value>>,
+    columns: Vec<ColumnShard>,
     interner: Interner,
     n_rows: usize,
 }
@@ -128,7 +58,7 @@ impl RowFrameBuilder {
     pub fn new(n_features: usize) -> RowFrameBuilder {
         RowFrameBuilder {
             n_features,
-            columns: (0..n_features).map(|_| Vec::new()).collect(),
+            columns: (0..n_features).map(|_| ColumnShard::default()).collect(),
             interner: Interner::new(),
             n_rows: 0,
         }
@@ -143,69 +73,38 @@ impl RowFrameBuilder {
                 cells.len()
             )));
         }
-        for (col, cell) in self.columns.iter_mut().zip(cells) {
-            col.push(match cell {
-                Cell::Num(x) => Value::Num(*x),
-                Cell::Str(s) => Value::Cat(self.interner.intern(s)),
-                Cell::Missing => Value::Missing,
-            });
+        let RowFrameBuilder {
+            columns, interner, ..
+        } = self;
+        for (col, cell) in columns.iter_mut().zip(cells) {
+            match cell {
+                Cell::Num(x) => col.push_num(*x),
+                Cell::Str(s) => col.push_cat(interner.intern(s).0),
+                Cell::Missing => col.push_missing(),
+            }
         }
         self.n_rows += 1;
         Ok(())
     }
 
-    /// Specialize the accumulated cells into typed columns.
+    /// Specialize the accumulated lanes into typed columns.
     pub fn finish(self) -> RowFrame {
-        let columns = self.columns.into_iter().map(specialize).collect();
         RowFrame {
             n_rows: self.n_rows,
-            columns,
-            interner: self.interner,
+            columns: self.columns.into_iter().map(ColumnShard::finish).collect(),
+            interner: Arc::new(self.interner),
         }
     }
 }
 
-/// Pick the densest representation a column's content allows.
-fn specialize(cells: Vec<Value>) -> FrameColumn {
-    let any_num = cells.iter().any(Value::is_num);
-    let any_cat = cells.iter().any(Value::is_cat);
-    if any_num && any_cat {
-        return FrameColumn::Mixed {
-            cells: cells.into_boxed_slice(),
-        };
-    }
-    if any_cat {
-        let flags: Vec<bool> = cells.iter().map(|v| !v.is_missing()).collect();
-        let ids: Vec<u32> = cells
-            .iter()
-            .map(|v| v.as_cat().map(|c| c.0).unwrap_or(0))
-            .collect();
-        return FrameColumn::Cat {
-            ids: ids.into_boxed_slice(),
-            valid: ValidityMask::from_flags(&flags),
-        };
-    }
-    // All-numeric (or all-missing, which the Num layout represents fine).
-    let flags: Vec<bool> = cells.iter().map(|v| !v.is_missing()).collect();
-    let values: Vec<f64> = cells
-        .iter()
-        .map(|v| v.as_num().unwrap_or(0.0))
-        .collect();
-    FrameColumn::Num {
-        values: values.into_boxed_slice(),
-        valid: ValidityMask::from_flags(&flags),
-    }
-}
-
-/// A columnar batch of prediction inputs: typed per-feature columns, a
-/// validity mask per column, and a frame-local string interner for
-/// categorical cells. Build once, predict many (see
-/// [`super::CompiledModel::predict_frame`]).
+/// A columnar batch of prediction inputs: typed per-feature columns and
+/// a frame-local string interner for categorical cells. Build once,
+/// predict many (see [`super::CompiledModel::predict_frame`]).
 #[derive(Debug, Clone)]
 pub struct RowFrame {
     n_rows: usize,
-    columns: Vec<FrameColumn>,
-    interner: Interner,
+    columns: Vec<ColumnData>,
+    interner: Arc<Interner>,
 }
 
 impl RowFrame {
@@ -234,42 +133,18 @@ impl RowFrame {
 
     /// Cell `(feature, row)` as a frame-local [`Value`] (tests/debug).
     pub fn cell(&self, f: usize, row: usize) -> Value {
-        self.columns[f].cell(row)
+        self.columns[f].get(row)
     }
 
     /// Columnar view of a dataset's feature matrix (labels are not
-    /// carried — pair with `ds.labels` for evaluation). Categorical
-    /// cells translate into the frame's local id space through a dense
-    /// id→id table built once from the dataset's interner — one intern
-    /// per distinct string, not one hash lookup per cell.
+    /// carried — pair with `ds.labels` for evaluation). **Zero copy**:
+    /// the frame shares the dataset's `Arc` column lanes and interner,
+    /// so frame-local category ids are the dataset's ids.
     pub fn from_dataset(ds: &Dataset) -> RowFrame {
-        let mut interner = Interner::new();
-        let id_map: Vec<CatId> = ds
-            .interner
-            .names()
-            .iter()
-            .map(|n| interner.intern(n))
-            .collect();
-        let columns = ds
-            .columns
-            .iter()
-            .map(|c| {
-                let cells: Vec<Value> = c
-                    .values
-                    .iter()
-                    .map(|v| match v {
-                        Value::Num(x) => Value::Num(*x),
-                        Value::Cat(id) => Value::Cat(id_map[id.0 as usize]),
-                        Value::Missing => Value::Missing,
-                    })
-                    .collect();
-                specialize(cells)
-            })
-            .collect();
         RowFrame {
             n_rows: ds.n_rows(),
-            columns,
-            interner,
+            columns: ds.columns.iter().map(|c| c.data.clone()).collect(),
+            interner: Arc::clone(&ds.interner),
         }
     }
 
@@ -312,45 +187,30 @@ impl RowFrame {
     }
 
     /// Build from CSV text where **every** column is a feature (serving
-    /// input carries no label column). Cells parse numeric-first, fall
-    /// back to categorical; empty / `?` / `NA` are missing.
+    /// input carries no label column). Routed through the streaming
+    /// parser in `data/csv.rs` — quoting/CRLF semantics and the hybrid
+    /// numeric-first cell rule cannot drift from the training path.
     pub fn from_csv_str(text: &str, has_header: bool, delimiter: char) -> Result<RowFrame> {
-        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
-        if has_header {
-            lines.next();
-        }
-        let mut b: Option<RowFrameBuilder> = None;
-        for (i, line) in lines.enumerate() {
-            let fields = crate::data::csv::parse_record(line, delimiter);
-            let builder = b.get_or_insert_with(|| RowFrameBuilder::new(fields.len()));
-            // Classify through the shared hybrid rule (the placeholder id
-            // is discarded — push_row interns into the frame's space).
-            let cells: Vec<Cell> = fields
-                .iter()
-                .map(|raw| match parse_cell(raw, |_| CatId(0)) {
-                    Value::Num(x) => Cell::Num(x),
-                    Value::Missing => Cell::Missing,
-                    Value::Cat(_) => Cell::Str(raw.trim()),
-                })
-                .collect();
-            builder.push_row(&cells).map_err(|_| {
-                UdtError::predict(format!(
-                    "csv row {} has {} fields, expected {}",
-                    i + 1,
-                    fields.len(),
-                    builder.n_features
-                ))
+        let opts = crate::data::csv::CsvOptions {
+            has_header,
+            delimiter,
+            ..Default::default()
+        };
+        let parsed = crate::data::csv::parse_typed_csv("input", text, &opts, false)
+            .map_err(|e| match e {
+                UdtError::Data(msg) => UdtError::predict(msg),
+                other => other,
             })?;
-        }
-        match b {
-            Some(builder) => Ok(builder.finish()),
-            None => Err(UdtError::predict("csv input has no data rows")),
-        }
+        Ok(RowFrame {
+            n_rows: parsed.n_rows,
+            columns: parsed.columns,
+            interner: Arc::new(parsed.interner),
+        })
     }
 
     /// Materialize row `r` as frame-local values (tests / slow paths).
     pub fn row(&self, r: usize) -> Vec<Value> {
-        self.columns.iter().map(|c| c.cell(r)).collect()
+        self.columns.iter().map(|c| c.get(r)).collect()
     }
 }
 
@@ -373,17 +233,6 @@ mod tests {
     use crate::data::synth::{generate_classification, SynthSpec};
 
     #[test]
-    fn validity_mask_round_trips() {
-        let flags: Vec<bool> = (0..130).map(|i| i % 3 != 0).collect();
-        let m = ValidityMask::from_flags(&flags);
-        assert_eq!(m.len(), 130);
-        for (i, &f) in flags.iter().enumerate() {
-            assert_eq!(m.get(i), f, "bit {i}");
-        }
-        assert_eq!(m.count_valid(), flags.iter().filter(|&&f| f).count());
-    }
-
-    #[test]
     fn builder_specializes_column_kinds() {
         let mut b = RowFrameBuilder::new(3);
         b.push_row(&[Cell::Num(1.0), Cell::Str("a"), Cell::Num(5.0)]).unwrap();
@@ -393,7 +242,7 @@ mod tests {
         assert_eq!(f.n_rows(), 3);
         assert!(matches!(f.column(0), FrameColumn::Num { .. }));
         assert!(matches!(f.column(1), FrameColumn::Cat { .. }));
-        assert!(matches!(f.column(2), FrameColumn::Mixed { .. }));
+        assert!(matches!(f.column(2), FrameColumn::Hybrid { .. }));
         // Cells read back with missing preserved.
         assert_eq!(f.cell(0, 0), Value::Num(1.0));
         assert!(f.cell(0, 1).is_missing());
@@ -435,6 +284,38 @@ mod tests {
     }
 
     #[test]
+    fn from_dataset_shares_storage() {
+        let mut spec = SynthSpec::classification("share", 200, 4, 2);
+        spec.cat_frac = 0.3;
+        spec.hybrid_frac = 0.2;
+        let ds = generate_classification(&spec, 7);
+        let f = RowFrame::from_dataset(&ds);
+        // The interner is the dataset's Arc, not a re-interned copy.
+        assert!(Arc::ptr_eq(&ds.interner, &f.interner));
+        // Column lanes are Arc-shared, byte for byte.
+        for (c, col) in ds.columns.iter().enumerate() {
+            match (&col.data, f.column(c)) {
+                (
+                    ColumnData::Num { vals: a, .. },
+                    ColumnData::Num { vals: b, .. },
+                ) => assert!(Arc::ptr_eq(a, b), "col {c} num lane copied"),
+                (
+                    ColumnData::Cat { ids: a, .. },
+                    ColumnData::Cat { ids: b, .. },
+                ) => assert!(Arc::ptr_eq(a, b), "col {c} cat lane copied"),
+                (
+                    ColumnData::Hybrid { vals: a, ids: ai, .. },
+                    ColumnData::Hybrid { vals: b, ids: bi, .. },
+                ) => {
+                    assert!(Arc::ptr_eq(a, b), "col {c} num lane copied");
+                    assert!(Arc::ptr_eq(ai, bi), "col {c} cat lane copied");
+                }
+                _ => panic!("col {c}: representation changed across the view"),
+            }
+        }
+    }
+
+    #[test]
     fn from_json_rows_and_lines_agree() {
         let lines = "[1.5, \"red\", null]\n[2.0, \"blue\", 7]\n";
         let f = RowFrame::from_json_lines(lines).unwrap();
@@ -457,5 +338,10 @@ mod tests {
         assert!(f.cell(1, 0).is_cat());
         assert!(f.cell(1, 2).is_missing());
         assert!(RowFrame::from_csv_str("", false, ',').is_err());
+        // Errors surface as Predict, matching the serving contract.
+        assert!(matches!(
+            RowFrame::from_csv_str("", false, ','),
+            Err(UdtError::Predict(_))
+        ));
     }
 }

@@ -14,10 +14,10 @@
 //!   categorical interner (as per-feature string → operand lookups) into
 //!   the artifact. Traversal is a handful of sequential integer loads
 //!   per step; see [`compiled`] for the exact layout.
-//! * [`RowFrame`] — columnar prediction input: typed per-feature columns
-//!   (`f64` payloads, frame-local category ids, or tagged hybrid cells)
-//!   plus a validity mask, built once from rows, CSV, JSON lines or a
-//!   [`crate::Dataset`] view.
+//! * [`RowFrame`] — columnar prediction input: a thin view over the same
+//!   typed [`crate::data::column_data::ColumnData`] store training uses
+//!   (dense `f64`/`u32` lanes + kind masks), built once from rows, CSV,
+//!   JSON lines — or **shared zero-copy** from a [`crate::Dataset`].
 //! * [`Predictions`] — rich output of
 //!   [`CompiledModel::predict_frame`]: labels plus, for classification
 //!   forests, per-class [`VoteCounts`] and vote margins.

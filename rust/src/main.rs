@@ -146,6 +146,7 @@ fn load_dataset(a: &Args) -> Result<udt::Dataset> {
             path,
             &CsvOptions {
                 task,
+                n_threads: a.get_usize("parse-threads", 0)?,
                 ..Default::default()
             },
         );
@@ -163,6 +164,7 @@ fn cmd_train(raw: &[String]) -> Result<()> {
         .opt("max-depth", "maximum depth", None)
         .opt("min-split", "minimum samples to split", None)
         .opt("threads", "worker threads (0 = all cores)", None)
+        .opt("parse-threads", "CSV ingest worker threads (0 = all cores)", Some("0"))
         .opt("forest", "train a bagged forest of N trees instead", None)
         .opt("seed", "rng seed", Some("42"))
         .opt("out", "write the trained model as JSON", None)
@@ -217,6 +219,7 @@ fn cmd_pipeline(raw: &[String]) -> Result<()> {
         .opt("max-depth", "maximum depth", None)
         .opt("min-split", "minimum samples to split", None)
         .opt("threads", "worker threads", None)
+        .opt("parse-threads", "CSV ingest worker threads (0 = all cores)", Some("0"))
         .opt("seed", "rng seed", Some("42"))
         .opt("out", "write the tuned model as JSON", None)
         .opt("config", "config file", None)
@@ -253,6 +256,7 @@ fn cmd_predict(raw: &[String]) -> Result<()> {
         .opt("dataset", "registry dataset name (alternative to CSV)", None)
         .opt("scale", "row-count scale", Some("1.0"))
         .opt("task", "classification|regression", Some("classification"))
+        .opt("parse-threads", "CSV ingest worker threads (0 = all cores)", Some("0"))
         .opt("seed", "rng seed", Some("42"))
         .positional("input.csv");
     let a = cmd.parse(raw)?;
@@ -338,6 +342,7 @@ fn cmd_rank_features(raw: &[String]) -> Result<()> {
     .opt("task", "classification|regression (CSV input)", Some("classification"))
     .opt("criterion", "info_gain|gini|chi2", None)
     .opt("top", "print only the top K features", None)
+    .opt("parse-threads", "CSV ingest worker threads (0 = all cores)", Some("0"))
     .opt("seed", "rng seed", Some("42"))
     .opt("config", "config file", None)
     .opt_multi("set", "config override key=value")

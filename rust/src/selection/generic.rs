@@ -6,6 +6,13 @@
 //! with Superfast Selection on every candidate's score — that equivalence
 //! is the core correctness property of the paper and is enforced by the
 //! property tests in `rust/tests/prop_selection.rs`.
+//!
+//! Unlike the production engine, this oracle deliberately reads cells
+//! through the tagged-[`Value`] boundary accessor ([`Column::get`] via
+//! `view.col`) instead of the typed lanes — an independent code path is
+//! exactly what makes the equivalence tests meaningful.
+//!
+//! [`Column::get`]: crate::data::column::Column::get
 
 use super::heuristic::{sse_score, Criterion};
 use super::split::SplitOp;

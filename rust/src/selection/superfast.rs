@@ -10,8 +10,8 @@
 use super::heuristic::{sse_score, Criterion};
 use super::split::SplitOp;
 use crate::data::column::Column;
+use crate::data::column_data::{present, ColumnData};
 use crate::data::interner::CatId;
-use crate::data::value::Value;
 use std::collections::BTreeMap;
 
 /// Label access for selection: class ids or regression targets.
@@ -218,18 +218,52 @@ fn classification(
             scratch.rest[y] = view.class_counts[y] - scratch.tot_num[y];
         }
     } else {
-        for &r in view.rows {
-            let y = ids[r as usize] as usize;
-            match view.col.get(r as usize) {
-                Value::Num(_) => scratch.tot_num[y] += 1.0,
-                Value::Cat(CatId(id)) => {
-                    scratch.rest[y] += 1.0;
-                    scratch
-                        .cat
-                        .entry(id)
-                        .or_insert_with(|| vec![0.0; c])[y] += 1.0;
+        // Statistics fallback (no maintained lists / node stats): stream
+        // the column's typed lanes — one representation branch per call,
+        // no tagged cell reads in the per-row loop.
+        match &view.col.data {
+            ColumnData::Num { valid, .. } => {
+                for &r in view.rows {
+                    let y = ids[r as usize] as usize;
+                    if present(valid, r as usize) {
+                        scratch.tot_num[y] += 1.0;
+                    } else {
+                        scratch.rest[y] += 1.0;
+                    }
                 }
-                Value::Missing => scratch.rest[y] += 1.0,
+            }
+            ColumnData::Cat { ids: cat_ids, valid } => {
+                for &r in view.rows {
+                    let y = ids[r as usize] as usize;
+                    scratch.rest[y] += 1.0;
+                    if present(valid, r as usize) {
+                        scratch
+                            .cat
+                            .entry(cat_ids[r as usize])
+                            .or_insert_with(|| vec![0.0; c])[y] += 1.0;
+                    }
+                }
+            }
+            ColumnData::Hybrid {
+                ids: cat_ids,
+                num,
+                cat,
+                ..
+            } => {
+                for &r in view.rows {
+                    let y = ids[r as usize] as usize;
+                    if num.get(r as usize) {
+                        scratch.tot_num[y] += 1.0;
+                    } else {
+                        scratch.rest[y] += 1.0;
+                        if cat.get(r as usize) {
+                            scratch
+                                .cat
+                                .entry(cat_ids[r as usize])
+                                .or_insert_with(|| vec![0.0; c])[y] += 1.0;
+                        }
+                    }
+                }
             }
         }
     }
@@ -361,23 +395,59 @@ fn regression(view: &FeatureView, values: &[f64], scratch: &mut Scratch) -> Opti
             sum_rest = sum_all_s - sum_num;
         }
         _ => {
-            for &r in view.rows {
-                let y = values[r as usize];
-                match view.col.get(r as usize) {
-                    Value::Num(_) => {
-                        n_num += 1.0;
-                        sum_num += y;
+            // Statistics fallback: stream the typed lanes (see the
+            // classification pass for the representation contract).
+            match &view.col.data {
+                ColumnData::Num { valid, .. } => {
+                    for &r in view.rows {
+                        let y = values[r as usize];
+                        if present(valid, r as usize) {
+                            n_num += 1.0;
+                            sum_num += y;
+                        } else {
+                            n_rest += 1.0;
+                            sum_rest += y;
+                        }
                     }
-                    Value::Cat(CatId(id)) => {
+                }
+                ColumnData::Cat { ids: cat_ids, valid } => {
+                    for &r in view.rows {
+                        let y = values[r as usize];
                         n_rest += 1.0;
                         sum_rest += y;
-                        let e = scratch.cat_reg.entry(id).or_insert((0.0, 0.0));
-                        e.0 += 1.0;
-                        e.1 += y;
+                        if present(valid, r as usize) {
+                            let e = scratch
+                                .cat_reg
+                                .entry(cat_ids[r as usize])
+                                .or_insert((0.0, 0.0));
+                            e.0 += 1.0;
+                            e.1 += y;
+                        }
                     }
-                    Value::Missing => {
-                        n_rest += 1.0;
-                        sum_rest += y;
+                }
+                ColumnData::Hybrid {
+                    ids: cat_ids,
+                    num,
+                    cat,
+                    ..
+                } => {
+                    for &r in view.rows {
+                        let y = values[r as usize];
+                        if num.get(r as usize) {
+                            n_num += 1.0;
+                            sum_num += y;
+                        } else {
+                            n_rest += 1.0;
+                            sum_rest += y;
+                            if cat.get(r as usize) {
+                                let e = scratch
+                                    .cat_reg
+                                    .entry(cat_ids[r as usize])
+                                    .or_insert((0.0, 0.0));
+                                e.0 += 1.0;
+                                e.1 += y;
+                            }
+                        }
                     }
                 }
             }
@@ -515,6 +585,7 @@ mod tests {
     use super::*;
     use crate::data::column::Column;
     use crate::data::interner::Interner;
+    use crate::data::value::Value;
     use crate::selection::heuristic::ClassCriterion;
 
     fn view_of<'a>(

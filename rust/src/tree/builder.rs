@@ -18,9 +18,10 @@
 //! * node class counts are computed once per node and reused by every
 //!   all-numeric column, eliminating the per-feature statistics pass for
 //!   clean columns;
-//! * partitioning marks positive rows in a level-wide bitmask
-//!   (L2-resident) and every arena range filters by bit tests instead of
-//!   re-evaluating the predicate against the 16-byte column cells.
+//! * partitioning evaluates the split predicate straight off the
+//!   column's typed lanes (`f64`/`u32` + kind masks — no tagged `Value`
+//!   cells anywhere in the loop), marks positive rows in a level-wide
+//!   bitmask (L2-resident), and every arena range filters by bit tests.
 //!
 //! The frontier is processed level-synchronously: selection parallelizes
 //! over the level's nodes (small frontiers fall back to feature-level
@@ -665,9 +666,8 @@ mod tests {
         let mut columns = ds.columns.clone();
         for (f, col) in columns.iter_mut().enumerate() {
             if !active[f] {
-                for v in &mut col.values {
-                    *v = Value::Missing;
-                }
+                let blank = Column::new(col.name.clone(), vec![Value::Missing; col.len()]);
+                *col = blank;
             }
         }
         let blanked = Dataset::new(

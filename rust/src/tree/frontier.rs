@@ -49,9 +49,10 @@
 //! read concurrently by the per-feature partition workers.
 
 use crate::coordinator::parallel::parallel_map;
+use crate::data::column_data::{present, ColumnData};
 use crate::data::dataset::{Dataset, Labels};
 use crate::data::sorted_index::SortedIndex;
-use crate::selection::split::SplitPredicate;
+use crate::selection::split::{SplitOp, SplitPredicate};
 
 /// Byte accounting of the double-buffered arenas (row/value/label lists
 /// only — the lists the old builder cloned per node).
@@ -132,6 +133,74 @@ pub(crate) struct Frontier {
 #[inline]
 fn in_pos(mask: &[u64], r: u32) -> bool {
     mask[(r >> 6) as usize] >> (r & 63) & 1 == 1
+}
+
+#[inline]
+fn set_pos(mask: &mut [u64], r: u32) {
+    mask[(r >> 6) as usize] |= 1u64 << (r & 63);
+}
+
+/// Evaluate a split predicate over the node's rows straight off the
+/// column's typed lanes, recording positives in the level bitmask and
+/// returning their count. One representation/operator branch per *call*
+/// — the per-row loop never constructs a tagged `Value` (Table 3
+/// semantics fall out of the lane layout: a `≤`/`>` can only match a
+/// numeric cell, an `=` only a categorical one, missing matches nothing).
+fn mark_matches(data: &ColumnData, op: SplitOp, rows: &[u32], mask: &mut [u64]) -> u32 {
+    let mut n_pos = 0u32;
+    match (data, op) {
+        (ColumnData::Num { vals, valid }, SplitOp::Le(t)) => {
+            for &r in rows {
+                if present(valid, r as usize) && vals[r as usize] <= t {
+                    set_pos(mask, r);
+                    n_pos += 1;
+                }
+            }
+        }
+        (ColumnData::Num { vals, valid }, SplitOp::Gt(t)) => {
+            for &r in rows {
+                if present(valid, r as usize) && vals[r as usize] > t {
+                    set_pos(mask, r);
+                    n_pos += 1;
+                }
+            }
+        }
+        (ColumnData::Num { .. }, SplitOp::Eq(_)) => {}
+        (ColumnData::Cat { ids, valid }, SplitOp::Eq(c)) => {
+            for &r in rows {
+                if present(valid, r as usize) && ids[r as usize] == c.0 {
+                    set_pos(mask, r);
+                    n_pos += 1;
+                }
+            }
+        }
+        (ColumnData::Cat { .. }, _) => {}
+        (ColumnData::Hybrid { vals, num, .. }, SplitOp::Le(t)) => {
+            for &r in rows {
+                if num.get(r as usize) && vals[r as usize] <= t {
+                    set_pos(mask, r);
+                    n_pos += 1;
+                }
+            }
+        }
+        (ColumnData::Hybrid { vals, num, .. }, SplitOp::Gt(t)) => {
+            for &r in rows {
+                if num.get(r as usize) && vals[r as usize] > t {
+                    set_pos(mask, r);
+                    n_pos += 1;
+                }
+            }
+        }
+        (ColumnData::Hybrid { ids, cat, .. }, SplitOp::Eq(c)) => {
+            for &r in rows {
+                if cat.get(r as usize) && ids[r as usize] == c.0 {
+                    set_pos(mask, r);
+                    n_pos += 1;
+                }
+            }
+        }
+    }
+    n_pos
 }
 
 /// Front (shared) and back (exclusive) views of a buffer pair.
@@ -399,14 +468,12 @@ impl Frontier {
                 let node = self.nodes[t.slot];
                 let off = node.row_off as usize;
                 let len = node.row_len as usize;
-                let col = &ds.columns[t.predicate.feature];
-                let mut n_pos: u32 = 0;
-                for &r in &front[off..off + len] {
-                    if t.predicate.op.eval(col.get(r as usize)) {
-                        self.posmask[(r >> 6) as usize] |= 1u64 << (r & 63);
-                        n_pos += 1;
-                    }
-                }
+                let n_pos = mark_matches(
+                    &ds.columns[t.predicate.feature].data,
+                    t.predicate.op,
+                    &front[off..off + len],
+                    &mut self.posmask,
+                );
                 t.n_pos = n_pos;
                 // Selection guarantees both sides non-empty.
                 debug_assert!(n_pos > 0 && (n_pos as usize) < len);
@@ -664,6 +731,41 @@ mod tests {
         assert_eq!(fr.node_rows(1), &[0, 2]);
         // Zero growth.
         assert_eq!(fr.arena_bytes(), bytes);
+    }
+
+    #[test]
+    fn mark_matches_agrees_with_value_oracle() {
+        // Lane-specialized predicate marking ≡ Table 3 `op.eval` over
+        // tagged cells, for every representation.
+        let mut interner = Interner::new();
+        let (a, b) = (interner.intern("a"), interner.intern("b"));
+        let columns = vec![
+            Column::new("num", vec![Value::Num(1.0), Value::Num(3.0), Value::Num(2.0)]),
+            Column::new("nummiss", vec![Value::Num(1.0), Value::Missing, Value::Num(9.0)]),
+            Column::new("cat", vec![Value::Cat(a), Value::Cat(b), Value::Cat(a)]),
+            Column::new("catmiss", vec![Value::Cat(b), Value::Missing, Value::Cat(a)]),
+            Column::new("hyb", vec![Value::Num(2.0), Value::Cat(a), Value::Missing]),
+        ];
+        let ops = [
+            SplitOp::Le(2.0),
+            SplitOp::Gt(1.0),
+            SplitOp::Eq(a),
+            SplitOp::Eq(b),
+        ];
+        let rows: Vec<u32> = vec![2, 0, 1];
+        for col in &columns {
+            for op in ops {
+                let mut mask = vec![0u64; 1];
+                let n = mark_matches(&col.data, op, &rows, &mut mask);
+                let mut expect = 0u32;
+                for &r in &rows {
+                    let hit = op.eval(col.get(r as usize));
+                    assert_eq!(in_pos(&mask, r), hit, "{} {op:?} row {r}", col.name);
+                    expect += hit as u32;
+                }
+                assert_eq!(n, expect, "{} {op:?}", col.name);
+            }
+        }
     }
 
     #[test]

@@ -190,9 +190,11 @@ fn failure_injection_empty_and_degenerate_inputs() {
 
     // All-missing feature column still trains (on the other columns).
     let mut columns = ds.columns.clone();
-    for v in &mut columns[0].values {
-        *v = udt::data::value::Value::Missing;
-    }
+    let blank = udt::data::column::Column::new(
+        columns[0].name.clone(),
+        vec![udt::data::value::Value::Missing; columns[0].len()],
+    );
+    columns[0] = blank;
     let ds2 = udt::Dataset::new("fi2", columns, ds.labels.clone(), ds.interner.clone()).unwrap();
     let t2 = Udt::builder().fit(&ds2).unwrap();
     assert!(t2.n_nodes() >= 1);

@@ -236,9 +236,11 @@ fn masked_fit_matches_blanked_column_semantics_on_random_data() {
             let mut columns = ds.columns.clone();
             for (f, col) in columns.iter_mut().enumerate() {
                 if !active[f] {
-                    for v in &mut col.values {
-                        *v = udt::data::Value::Missing;
-                    }
+                    let blank = udt::data::column::Column::new(
+                        col.name.clone(),
+                        vec![udt::data::Value::Missing; col.len()],
+                    );
+                    *col = blank;
                 }
             }
             let blanked = Dataset::new(

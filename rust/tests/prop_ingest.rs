@@ -1,0 +1,239 @@
+//! Property suite for streaming CSV ingest: the chunk-parallel typed
+//! parser must produce a dataset **bit-identical** to the legacy
+//! row-materializing reference path — values (including interner ids),
+//! labels, class-name order, and interner-resolved strings — on random
+//! hybrid CSVs with quotes, CRLF line endings, missing cells, and for
+//! 1 ≡ N parse threads at any chunk size.
+
+use udt::data::csv::{load_csv_str, load_csv_str_rowwise, CsvOptions};
+use udt::data::dataset::{Dataset, Labels, TaskKind};
+use udt::data::value::Value;
+use udt::util::prop::{check, Config};
+use udt::util::rng::Rng;
+
+/// Random cell text: numeric, categorical (sometimes needing quotes),
+/// or missing. Returns the field as it should appear in the CSV.
+fn random_field(rng: &mut Rng) -> String {
+    match rng.below(10) {
+        0 => String::new(),                       // missing: empty
+        1 => "?".to_string(),                     // missing: sentinel
+        2 | 3 => format!("s{}", rng.below(6)),    // plain categorical
+        4 => {
+            // Categorical requiring quoting (embedded comma / quote).
+            match rng.below(3) {
+                0 => format!("\"a,{}\"", rng.below(4)),
+                1 => "\"say \"\"hi\"\"\"".to_string(),
+                _ => format!("\"{} sp\"", rng.below(4)),
+            }
+        }
+        5 => format!("{}", rng.below(50) as f64 / 4.0), // small float grid
+        _ => format!("{}", rng.below(100)),             // integer
+    }
+}
+
+/// Generate random hybrid CSV text plus the options to parse it.
+fn random_csv(rng: &mut Rng, size: usize) -> (String, CsvOptions) {
+    let n_rows = rng.range(1, size.max(2));
+    let n_cols = rng.range(2, 6);
+    let regression = rng.chance(0.3);
+    let has_header = rng.chance(0.7);
+    let crlf = rng.chance(0.4);
+    let eol = if crlf { "\r\n" } else { "\n" };
+
+    let mut text = String::new();
+    if has_header {
+        for c in 0..n_cols {
+            if c > 0 {
+                text.push(',');
+            }
+            text.push_str(&format!("col{c}"));
+        }
+        text.push_str(eol);
+    }
+    for _ in 0..n_rows {
+        for c in 0..n_cols {
+            if c > 0 {
+                text.push(',');
+            }
+            if c == n_cols - 1 {
+                // Label column.
+                if regression {
+                    text.push_str(&format!("{}", rng.below(1000) as f64 / 8.0));
+                } else {
+                    text.push_str(&format!("cls{}", rng.below(4)));
+                }
+            } else {
+                text.push_str(&random_field(rng));
+            }
+        }
+        text.push_str(eol);
+        if rng.chance(0.1) {
+            text.push_str(eol); // interspersed blank line
+        }
+    }
+
+    let opts = CsvOptions {
+        has_header,
+        task: if regression {
+            TaskKind::Regression
+        } else {
+            TaskKind::Classification
+        },
+        ..Default::default()
+    };
+    (text, opts)
+}
+
+/// Bit-identity check: shapes, names, per-cell values *including*
+/// categorical ids, interner-resolved strings, labels and class-name
+/// order.
+fn datasets_identical(a: &Dataset, b: &Dataset) -> Result<(), String> {
+    if a.n_rows() != b.n_rows() || a.n_features() != b.n_features() {
+        return Err(format!(
+            "shape mismatch: {}x{} vs {}x{}",
+            a.n_rows(),
+            a.n_features(),
+            b.n_rows(),
+            b.n_features()
+        ));
+    }
+    if a.interner.names() != b.interner.names() {
+        return Err(format!(
+            "interner order diverged: {:?} vs {:?}",
+            a.interner.names(),
+            b.interner.names()
+        ));
+    }
+    if *a.class_names != *b.class_names {
+        return Err(format!(
+            "class-name order diverged: {:?} vs {:?}",
+            a.class_names, b.class_names
+        ));
+    }
+    for f in 0..a.n_features() {
+        if a.columns[f].name != b.columns[f].name {
+            return Err(format!(
+                "feature {f} name: {} vs {}",
+                a.columns[f].name, b.columns[f].name
+            ));
+        }
+        for r in 0..a.n_rows() {
+            let (va, vb) = (a.value(f, r), b.value(f, r));
+            let same = match (va, vb) {
+                (Value::Num(x), Value::Num(y)) => x == y,
+                // Ids must match exactly, not just resolve to the same
+                // string — downstream model bundles bake the id order.
+                (Value::Cat(x), Value::Cat(y)) => {
+                    x == y && a.interner.name(x) == b.interner.name(y)
+                }
+                (Value::Missing, Value::Missing) => true,
+                _ => false,
+            };
+            if !same {
+                return Err(format!("cell ({f},{r}): {va:?} vs {vb:?}"));
+            }
+        }
+    }
+    match (&a.labels, &b.labels) {
+        (
+            Labels::Class { ids: x, n_classes: nx },
+            Labels::Class { ids: y, n_classes: ny },
+        ) => {
+            if x != y || nx != ny {
+                return Err("class labels diverged".into());
+            }
+        }
+        (Labels::Reg { values: x }, Labels::Reg { values: y }) => {
+            if x != y {
+                return Err("regression labels diverged".into());
+            }
+        }
+        _ => return Err("label kind diverged".into()),
+    }
+    Ok(())
+}
+
+#[test]
+fn streaming_ingest_is_bit_identical_to_rowwise_reference() {
+    check(
+        "streaming csv ≡ rowwise reference",
+        Config::default().cases(60).max_size(120).seed(0x1_C5F_2024),
+        |rng, size| {
+            let (text, base) = random_csv(rng, size);
+            let reference = load_csv_str_rowwise("ref", &text, &base)
+                .map_err(|e| format!("reference parse failed: {e}\n{text}"))?;
+            for (threads, chunk) in [(1, 0), (1, 13), (4, 0), (4, 7), (7, 1)] {
+                let opts = CsvOptions {
+                    n_threads: threads,
+                    chunk_bytes: chunk,
+                    ..base.clone()
+                };
+                let streamed = load_csv_str("ref", &text, &opts)
+                    .map_err(|e| format!("streaming parse failed (t={threads} c={chunk}): {e}\n{text}"))?;
+                datasets_identical(&reference, &streamed).map_err(|m| {
+                    format!("t={threads} chunk={chunk}: {m}\ncsv:\n{text}")
+                })?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn streaming_ingest_rejects_what_the_reference_rejects() {
+    check(
+        "streaming csv error parity",
+        Config::default().cases(30).max_size(60).seed(0xBAD_C5F),
+        |rng, size| {
+            let (mut text, base) = random_csv(rng, size);
+            // Corrupt the input: append a ragged row.
+            text.push_str("only-one-field\n");
+            let r = load_csv_str_rowwise("bad", &text, &base);
+            for threads in [1, 5] {
+                let s = load_csv_str(
+                    "bad",
+                    &text,
+                    &CsvOptions {
+                        n_threads: threads,
+                        chunk_bytes: 11,
+                        ..base.clone()
+                    },
+                );
+                if r.is_err() != s.is_err() {
+                    return Err(format!(
+                        "error parity broke (t={threads}): rowwise {:?} vs streaming {:?}\n{text}",
+                        r.as_ref().err().map(|e| e.to_string()),
+                        s.err().map(|e| e.to_string()),
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn frame_csv_and_dataset_csv_classify_cells_identically() {
+    // The serving CSV path routes through the same streaming parser; a
+    // feature-only parse of the feature columns must classify every cell
+    // exactly like dataset ingest does.
+    let text = "a,b,label\n1.5,red,x\n?,\"b,lue\",y\n2,,x\ncat,3,y\n";
+    let ds = load_csv_str("t", text, &CsvOptions::default()).unwrap();
+    // Drop the label column to build the serving-side input.
+    let feature_text = "a,b\n1.5,red\n?,\"b,lue\"\n2,\ncat,3\n";
+    let frame = udt::inference::RowFrame::from_csv_str(feature_text, true, ',').unwrap();
+    assert_eq!(frame.n_rows(), ds.n_rows());
+    assert_eq!(frame.n_features(), ds.n_features());
+    for f in 0..ds.n_features() {
+        for r in 0..ds.n_rows() {
+            match (ds.value(f, r), frame.cell(f, r)) {
+                (Value::Num(a), Value::Num(b)) => assert_eq!(a, b),
+                (Value::Cat(a), Value::Cat(b)) => {
+                    assert_eq!(ds.interner.name(a), frame.interner().name(b))
+                }
+                (Value::Missing, Value::Missing) => {}
+                (a, b) => panic!("cell ({f},{r}): {a:?} vs {b:?}"),
+            }
+        }
+    }
+}
