@@ -1,0 +1,120 @@
+//! Gradient-boosted training throughput on the shared sort cache.
+//!
+//! The boosting claim worth measuring: residual labels change every
+//! round but feature order does not, so all N rounds filter one cached
+//! `SortedIndex` — training cost per round is the split-finding pass,
+//! not a re-sort. This bench trains a boosted ensemble on a regression
+//! and a binary-classification workload, reports wall-clock, row-visits
+//! per second (`rows × rounds / s`) and rounds per second against a
+//! single full-tree baseline on the same dataset, and asserts that the
+//! whole run sorted each column exactly once.
+//!
+//! Writes a machine-readable `BENCH_boost.json` at the repository root
+//! so the boosting-path perf trajectory is tracked PR-over-PR alongside
+//! `BENCH_table6.json` / `BENCH_predict.json` / `BENCH_ingest.json`.
+//!
+//!   cargo bench --bench boost
+//!
+//! UDT_BENCH_SCALE scales the row count (1.0 = 100k rows);
+//! UDT_BENCH_RUNS the repetitions.
+
+use udt::bench_support::{bench, write_bench_json, BenchConfig, Table};
+use udt::data::synth::{generate_any, SynthSpec};
+use udt::tree::boost::{Boosted, BoostedConfig};
+use udt::util::json::Json;
+use udt::{Tree, Udt};
+
+const ROUNDS: usize = 50;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let n_rows = ((100_000.0 * cfg.scale) as usize).max(2_000);
+
+    let reg = generate_any(&SynthSpec::regression("boost_reg", n_rows, 10), 42);
+    let mut cls_spec = SynthSpec::classification("boost_cls", n_rows, 10, 2);
+    cls_spec.cat_frac = 0.2;
+    cls_spec.noise = 0.1;
+    let cls = generate_any(&cls_spec, 43);
+    eprintln!(
+        "boost bench: {} rows x 10 features, {ROUNDS} rounds (UDT_BENCH_SCALE to change)",
+        n_rows
+    );
+
+    let boost_cfg = BoostedConfig {
+        n_rounds: ROUNDS,
+        learning_rate: 0.1,
+        max_depth: 4,
+        subsample: 1.0,
+        n_threads: 0,
+        ..Default::default()
+    };
+    let tree_cfg = Udt::builder().threads(0).build().expect("tree config");
+
+    let mut table = Table::new(&[
+        "workload", "rows", "rounds", "tree(ms)", "boost(ms)", "row-visits/s", "rounds/s",
+        "boost/tree",
+    ]);
+    let mut json_cases: Vec<Json> = Vec::new();
+    for (name, ds) in [("regression", &reg), ("binary", &cls)] {
+        // Single full-tree baseline on the same dataset (also warms the
+        // sort cache, mirroring production: sort once, fit many).
+        let tree_m = bench(&format!("{name}/tree"), &cfg, || {
+            let t = Tree::fit(ds, &tree_cfg).expect("train tree");
+            assert!(t.n_nodes() >= 1);
+        });
+        let boost_m = bench(&format!("{name}/boost"), &cfg, || {
+            let b = Boosted::fit(ds, &boost_cfg).expect("train boosted");
+            assert_eq!(b.n_rounds(), ROUNDS);
+        });
+        // The whole bench — baseline, warmup and every timed run — must
+        // have sorted each column exactly once.
+        assert_eq!(
+            ds.sort_index_builds(),
+            1,
+            "{name}: boosting re-sorted the dataset"
+        );
+
+        let tree_ms = tree_m.min_ms();
+        let boost_ms = boost_m.min_ms();
+        let row_visits_per_sec =
+            (ds.n_rows() * ROUNDS) as f64 / (boost_ms / 1e3).max(1e-9);
+        let rounds_per_sec = ROUNDS as f64 / (boost_ms / 1e3).max(1e-9);
+        table.row(vec![
+            name.to_string(),
+            ds.n_rows().to_string(),
+            ROUNDS.to_string(),
+            format!("{tree_ms:.1}"),
+            format!("{boost_ms:.1}"),
+            format!("{row_visits_per_sec:.0}"),
+            format!("{rounds_per_sec:.1}"),
+            format!("{:.2}x", boost_ms / tree_ms.max(1e-9)),
+        ]);
+        json_cases.push(Json::obj(vec![
+            ("workload", Json::Str(name.to_string())),
+            ("rows", Json::Num(ds.n_rows() as f64)),
+            ("rounds", Json::Num(ROUNDS as f64)),
+            ("tree_train_ms", Json::Num(tree_ms)),
+            ("boost_train_ms", Json::Num(boost_ms)),
+            ("row_visits_per_sec", Json::Num(row_visits_per_sec)),
+            ("rounds_per_sec", Json::Num(rounds_per_sec)),
+            ("boost_vs_tree", Json::Num(boost_ms / tree_ms.max(1e-9))),
+            ("sort_index_builds", Json::Num(ds.sort_index_builds() as f64)),
+        ]));
+        eprintln!("done {name}");
+    }
+
+    println!("\n== Boosted training on the shared sort cache ({ROUNDS} rounds) ==");
+    println!("{}", table.render());
+
+    let artifact = Json::obj(vec![
+        ("bench", Json::Str("boost".into())),
+        ("rows", Json::Num(n_rows as f64)),
+        ("rounds", Json::Num(ROUNDS as f64)),
+        ("measured", Json::Bool(true)),
+        ("cases", Json::Arr(json_cases)),
+    ]);
+    match write_bench_json("boost", &artifact) {
+        Ok(p) => eprintln!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write bench artifact: {e}"),
+    }
+}

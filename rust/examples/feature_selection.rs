@@ -27,7 +27,7 @@ fn main() -> udt::Result<()> {
 
     let criterion = Criterion::Class(ClassCriterion::InfoGain);
     let t = Timer::start();
-    let ranked = rank_features(&ds, criterion);
+    let ranked = rank_features(&ds, criterion)?;
     println!(
         "\nranked all {} features in {:.1} ms (Superfast, one O(M + N·C) pass each)",
         ranked.len(),
@@ -46,7 +46,7 @@ fn main() -> udt::Result<()> {
     let full_ms = t.ms();
     let full_acc = full.accuracy_rows(&ds, &test)?;
 
-    let (filtered, kept) = top_k(&ds, criterion, 32);
+    let (filtered, kept) = top_k(&ds, criterion, 32)?;
     let t = Timer::start();
     let slim = Tree::fit_rows(&filtered, &train, &cfg)?;
     let slim_ms = t.ms();

@@ -12,8 +12,12 @@
 //! * `tune.min_split_max_frac`, `tune.min_split_steps` — the
 //!   Training-Only-Once hyper-parameter grid ([`TuneGrid`]);
 //! * `forest.n_trees`, `forest.feature_frac`, `forest.sample_frac`,
-//!   `forest.seed` — ensemble knobs ([`ForestConfig`]).
+//!   `forest.seed` — ensemble knobs ([`ForestConfig`]);
+//! * `boost.n_rounds`, `boost.learning_rate`, `boost.max_depth`,
+//!   `boost.subsample`, `boost.seed` — gradient-boosting knobs
+//!   ([`BoostedConfig`]).
 
+use crate::tree::boost::BoostedConfig;
 use crate::tree::forest::ForestConfig;
 use crate::tree::tuning::TuneGrid;
 use crate::tree::TrainConfig;
@@ -174,6 +178,21 @@ impl Config {
             tree,
         })
     }
+
+    /// Gradient-boosting knobs from the `boost.*` keys. `n_threads`
+    /// follows the per-tree training threads (the rounds fit through the
+    /// same builder).
+    pub fn boost_config(&self, n_threads: usize) -> Result<BoostedConfig, ConfigError> {
+        let defaults = BoostedConfig::default();
+        Ok(BoostedConfig {
+            n_rounds: self.get_usize("boost.n_rounds", defaults.n_rounds)?,
+            learning_rate: self.get_f64("boost.learning_rate", defaults.learning_rate)?,
+            max_depth: self.get_usize("boost.max_depth", defaults.max_depth)?,
+            subsample: self.get_f64("boost.subsample", defaults.subsample)?,
+            seed: self.get_u64("boost.seed", defaults.seed)?,
+            n_threads,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -259,5 +278,24 @@ mod tests {
         assert!((fc.sample_frac - 0.5).abs() < 1e-12);
         // Untouched knobs keep their defaults.
         assert!((fc.feature_frac - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn boost_config_from_keys() {
+        let mut cfg = Config::new();
+        cfg.set_kv("boost.n_rounds=120").unwrap();
+        cfg.set_kv("boost.learning_rate=0.05").unwrap();
+        cfg.set_kv("boost.max_depth=6").unwrap();
+        let bc = cfg.boost_config(4).unwrap();
+        assert_eq!(bc.n_rounds, 120);
+        assert!((bc.learning_rate - 0.05).abs() < 1e-12);
+        assert_eq!(bc.max_depth, 6);
+        assert_eq!(bc.n_threads, 4);
+        // Untouched knobs keep their defaults.
+        assert!((bc.subsample - 1.0).abs() < 1e-12);
+        // Bad values are typed config errors.
+        let mut bad = Config::new();
+        bad.set_kv("boost.learning_rate=fast").unwrap();
+        assert!(bad.boost_config(1).is_err());
     }
 }

@@ -142,7 +142,15 @@ mod tests {
             Quality::Accuracy(a) => assert!(a > 0.6, "acc={a}"),
             _ => panic!("expected accuracy"),
         }
-        assert!(rep.n_settings > 100);
+        // Settings = the depth sweep + the distinct min_split grid
+        // values (duplicate grid points are counted once).
+        assert_eq!(
+            rep.n_settings,
+            rep.full_depth as usize
+                + crate::tree::tuning::distinct_split_grid(rep.n_train, &TuneGrid::default())
+                    .len()
+        );
+        assert!(rep.n_settings > 90);
         assert!(rep.full_train_ms > 0.0 && rep.tune_ms >= 0.0);
         assert!(rep.peak_arena_bytes > 0);
         // Full fit + tuned retrain: the column sort was still paid once.

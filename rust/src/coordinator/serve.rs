@@ -186,6 +186,8 @@ impl Server {
                         Json::Num(entry.compiled.n_features() as f64),
                     ),
                     ("trees", Json::Num(entry.compiled.n_trees() as f64)),
+                    // Boosting rounds (0 for non-boosted families).
+                    ("rounds", Json::Num(entry.compiled.n_rounds() as f64)),
                     (
                         "table_bytes",
                         Json::Num(entry.compiled.table_bytes() as f64),

@@ -38,7 +38,11 @@
 //! fixed-size chunks, chunks fan out over [`parallel_map_chunked`], and
 //! within a chunk the row loop is tight over the tables. Forest chunks aggregate
 //! member votes per row in tree order (bit-identical to the boxed
-//! ensemble path) and return per-class vote counts in [`Predictions`].
+//! ensemble path) and return per-class vote counts in [`Predictions`];
+//! boosted chunks accumulate per-channel leaf sums in the same storage
+//! order as the boxed path and score them through the one shared
+//! [`crate::tree::boost::decide_scores`] rule (sum of leaf values +
+//! sigmoid/argmax), so boosted predictions are bit-identical too.
 
 use super::frame::{FrameColumn, RowFrame};
 use crate::coordinator::parallel::parallel_map_chunked;
@@ -300,6 +304,10 @@ enum Aggregation {
     ForestVote,
     /// Regression ensemble: mean of member leaf values (tree order).
     ForestMean,
+    /// Gradient-boosted ensemble: per-channel leaf sums scored through
+    /// the shared [`crate::tree::boost::decide_scores`] rule (identical
+    /// float operations to the boxed path — bit-identical predictions).
+    Boosted,
 }
 
 /// Per-class vote counts of a classification forest, row-major.
@@ -395,6 +403,12 @@ pub struct CompiledModel {
     /// operand id this feature's `Eq` nodes test. Strings absent from a
     /// feature's table can never satisfy any of its splits.
     cat_lookup: Box<[HashMap<String, u32>]>,
+    /// Boosted only: shrinkage applied to every leaf contribution.
+    learning_rate: f64,
+    /// Boosted only: initial score per channel (empty otherwise).
+    base: Box<[f64]>,
+    /// Boosted only: boosting rounds (0 otherwise).
+    rounds: usize,
 }
 
 impl CompiledModel {
@@ -403,6 +417,10 @@ impl CompiledModel {
     /// lookups). [`crate::model::SavedModel::compile`] passes the
     /// bundled interner.
     pub fn compile(model: &Model, interner: &Interner) -> Result<CompiledModel> {
+        // Boosted-only scoring state; filled by the Boosted arm below.
+        let mut learning_rate = 0.0f64;
+        let mut base: Box<[f64]> = Box::default();
+        let mut rounds = 0usize;
         let (trees, agg, n_classes): (Vec<CompiledTree>, Aggregation, usize) = match model {
             Model::SingleTree(t) => {
                 (vec![CompiledTree::flatten(t, usize::MAX, 0)], Aggregation::Single, 0)
@@ -427,6 +445,17 @@ impl CompiledModel {
                     TaskKind::Regression => Aggregation::ForestMean,
                 };
                 (trees, agg, f.n_classes)
+            }
+            Model::Boosted(b) => {
+                let trees = b
+                    .trees
+                    .iter()
+                    .map(|t| CompiledTree::flatten(t, usize::MAX, 0))
+                    .collect();
+                learning_rate = b.learning_rate;
+                base = b.base.clone().into_boxed_slice();
+                rounds = b.n_rounds();
+                (trees, Aggregation::Boosted, b.n_classes)
             }
         };
 
@@ -457,11 +486,14 @@ impl CompiledModel {
             agg,
             trees: trees.into_boxed_slice(),
             cat_lookup: cat_lookup.into_boxed_slice(),
+            learning_rate,
+            base,
+            rounds,
         })
     }
 
     /// Family tag of the source model (`single_tree` / `tuned_tree` /
-    /// `forest`).
+    /// `forest` / `boosted`).
     pub fn kind(&self) -> &'static str {
         self.kind
     }
@@ -476,6 +508,18 @@ impl CompiledModel {
 
     pub fn n_trees(&self) -> usize {
         self.trees.len()
+    }
+
+    /// Boosting rounds of a boosted model (0 for every other family) —
+    /// surfaced in the server's per-model `stats`.
+    pub fn n_rounds(&self) -> usize {
+        self.rounds
+    }
+
+    /// Score channels of a boosted model (1 for regression/binary,
+    /// `n_classes` for one-vs-rest).
+    fn boost_group(&self) -> usize {
+        crate::tree::boost::group_of(self.task, self.n_classes).max(1)
     }
 
     /// Total flattened node count across member trees.
@@ -598,6 +642,34 @@ impl CompiledModel {
                     votes: Vec::new(),
                 }
             }
+            Aggregation::Boosted => {
+                // Per-channel leaf sums accumulated in storage order
+                // (round-major, class-minor) — exactly the boxed path's
+                // accumulation order, then the one shared scoring rule:
+                // bit-identical predictions.
+                let group = self.boost_group();
+                let mut sums = vec![0.0f64; n * group];
+                for (t, tree) in self.trees.iter().enumerate() {
+                    let k = t % group;
+                    for (i, r) in (start..end).enumerate() {
+                        sums[i * group + k] += tree.value_at(tree.walk_frame(frame, r, cat_maps));
+                    }
+                }
+                let labels = (0..n)
+                    .map(|i| {
+                        crate::tree::boost::decide_scores(
+                            self.task,
+                            &self.base,
+                            self.learning_rate,
+                            &sums[i * group..(i + 1) * group],
+                        )
+                    })
+                    .collect();
+                ChunkOut {
+                    labels,
+                    votes: Vec::new(),
+                }
+            }
         }
     }
 
@@ -635,6 +707,19 @@ impl CompiledModel {
                     .map(|t| t.value_at(t.walk_values(row)))
                     .sum();
                 NodeLabel::Value(sum / self.trees.len().max(1) as f64)
+            }
+            Aggregation::Boosted => {
+                let group = self.boost_group();
+                let mut sums = vec![0.0f64; group];
+                for (t, tree) in self.trees.iter().enumerate() {
+                    sums[t % group] += tree.value_at(tree.walk_values(row));
+                }
+                crate::tree::boost::decide_scores(
+                    self.task,
+                    &self.base,
+                    self.learning_rate,
+                    &sums,
+                )
             }
         })
     }
@@ -797,6 +882,48 @@ mod tests {
             let b = model.predict_row(&ds.row(r)).unwrap().as_value().unwrap();
             assert!((a - b).abs() <= 1e-12 * b.abs().max(1.0), "row {r}: {a} vs {b}");
         }
+    }
+
+    #[test]
+    fn boosted_predictions_are_bit_identical_to_boxed() {
+        use crate::tree::boost::{Boosted, BoostedConfig};
+        let cfg = BoostedConfig {
+            n_rounds: 8,
+            ..Default::default()
+        };
+        // Multiclass (one-vs-rest) on hybrid data.
+        let ds = hybrid_ds();
+        let boosted = Boosted::fit(&ds, &cfg).unwrap();
+        let model = Model::Boosted(boosted);
+        let compiled = CompiledModel::compile(&model, &ds.interner).unwrap();
+        assert_eq!(compiled.kind(), "boosted");
+        assert_eq!(compiled.n_rounds(), 8);
+        assert_eq!(compiled.n_trees(), 8 * 3);
+        let frame = RowFrame::from_dataset(&ds);
+        let preds = compiled.predict_frame(&frame).unwrap();
+        assert!(preds.votes().is_none());
+        for r in 0..ds.n_rows() {
+            let expect = model.predict_row(&ds.row(r)).unwrap();
+            assert_eq!(preds.label(r), expect, "row {r}");
+            assert_eq!(compiled.predict_row(&ds.row(r)).unwrap(), expect);
+        }
+
+        // Regression: NodeLabel::Value compares with `==`, so this is a
+        // bit-identity assertion, not an approximate one.
+        let reg = generate_any(&SynthSpec::regression("cmpboost", 400, 5), 23);
+        let boosted = Boosted::fit(&reg, &cfg).unwrap();
+        let model = Model::Boosted(boosted);
+        let compiled = CompiledModel::compile(&model, &reg.interner).unwrap();
+        let frame = RowFrame::from_dataset(&reg);
+        let preds = compiled.predict_frame(&frame).unwrap();
+        for r in 0..reg.n_rows() {
+            let expect = model.predict_row(&reg.row(r)).unwrap();
+            assert_eq!(preds.label(r), expect, "row {r}");
+        }
+        // And thread count never changes boosted predictions either.
+        let seq = compiled.predict_frame_threads(&frame, 1).unwrap();
+        let par = compiled.predict_frame_threads(&frame, 8).unwrap();
+        assert_eq!(seq.labels(), par.labels());
     }
 
     #[test]

@@ -19,11 +19,13 @@
 //! ## The model surface
 //!
 //! Training goes through the fluent [`Udt::builder`] / [`Forest::builder`]
-//! API; every trained family implements [`Estimator`]
+//! API (boosting through [`Boosted::fit`] with a [`BoostedConfig`]);
+//! every trained family implements [`Estimator`]
 //! (`fit` / `predict_row` / `predict_batch` / `evaluate`); a trained
 //! artifact ships as a [`Model`] — single tree, Training-Only-Once tuned
-//! tree, or bagged forest — bundled with its schema and interner in a
-//! [`SavedModel`], which `udt serve` and `udt predict` round-trip.
+//! tree, bagged forest, or gradient-boosted ensemble — bundled with its
+//! schema and interner in a [`SavedModel`], which `udt serve` and
+//! `udt predict` round-trip.
 //! User mistakes (bad configs, task mismatches, malformed model JSON,
 //! wrong-arity requests) surface as typed [`UdtError`]s, never panics.
 //!
@@ -82,5 +84,6 @@ pub use model::{
     Estimator, ForestBuilder, Model, Quality, SavedModel, Schema, Udt, UdtBuilder,
 };
 pub use selection::split::SplitPredicate;
+pub use tree::boost::{Boosted, BoostedConfig};
 pub use tree::forest::{Forest, ForestConfig};
 pub use tree::{Backend, NodeLabel, RegStrategy, TrainConfig, Tree};

@@ -26,7 +26,7 @@ use udt::selection::heuristic::ClassCriterion;
 use udt::tree::Backend;
 use udt::util::cli::{Args, Command};
 use udt::util::timer::Timer;
-use udt::{Forest, Model, Result, SavedModel, Tree, Udt, UdtError};
+use udt::{Boosted, Forest, Model, Result, SavedModel, Tree, Udt, UdtError};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -67,7 +67,7 @@ fn print_usage() {
         "udt — Ultrafast Decision Tree (Superfast Selection reproduction)\n\
          \n\
          subcommands:\n\
-           train            train a tree or forest (CSV or --dataset)\n\
+           train            train a tree, forest or boosted ensemble (CSV or --dataset)\n\
            pipeline         train → tune (once) → prune → evaluate\n\
            predict          evaluate a serialized model over a CSV\n\
            gen-data         write a registry dataset to CSV\n\
@@ -115,6 +115,50 @@ fn train_config(a: &Args, cfg: &Config) -> Result<udt::TrainConfig> {
     builder.build()
 }
 
+/// Boosting knobs: `boost.*` config keys overridden by the dedicated
+/// CLI flags (`--boosted` sets the round count at the call site;
+/// `--max-depth` caps the per-round trees).
+fn boost_config(a: &Args, cfg: &Config, n_threads: usize) -> Result<udt::BoostedConfig> {
+    let mut bc = cfg.boost_config(n_threads)?;
+    bc.learning_rate = a.get_f64("learning-rate", bc.learning_rate)?;
+    bc.subsample = a.get_f64("subsample", bc.subsample)?;
+    bc.max_depth = a.get_usize("max-depth", bc.max_depth)?;
+    bc.validate()?;
+    Ok(bc)
+}
+
+/// Train the family selected by `--forest N` / `--boosted N` (mutually
+/// exclusive), or a single tree — shared by `train` and `serve`.
+fn fit_model_from_flags(
+    a: &Args,
+    cfg: &Config,
+    ds: &udt::Dataset,
+    train_cfg: udt::TrainConfig,
+) -> Result<Model> {
+    match (a.get("forest"), a.get("boosted")) {
+        (Some(_), Some(_)) => Err(UdtError::usage(
+            "--forest and --boosted are mutually exclusive",
+        )),
+        (None, None) => Ok(Model::SingleTree(Tree::fit(ds, &train_cfg)?)),
+        (Some(n), None) => {
+            let n: usize = n
+                .parse()
+                .map_err(|_| UdtError::usage(format!("--forest expects an integer, got `{n}`")))?;
+            let mut forest_cfg = cfg.forest_config(train_cfg)?;
+            forest_cfg.n_trees = n;
+            Ok(Model::Forest(Forest::fit(ds, &forest_cfg)?))
+        }
+        (None, Some(n)) => {
+            let n: usize = n.parse().map_err(|_| {
+                UdtError::usage(format!("--boosted expects an integer, got `{n}`"))
+            })?;
+            let mut boost_cfg = boost_config(a, cfg, train_cfg.n_threads)?;
+            boost_cfg.n_rounds = n;
+            Ok(Model::Boosted(Boosted::fit(ds, &boost_cfg)?))
+        }
+    }
+}
+
 /// Config file + `--set key=value` overrides.
 fn base_config(a: &Args) -> Result<Config> {
     let mut cfg = Config::new();
@@ -155,7 +199,7 @@ fn load_dataset(a: &Args) -> Result<udt::Dataset> {
 }
 
 fn cmd_train(raw: &[String]) -> Result<()> {
-    let cmd = Command::new("train", "train a decision tree or forest")
+    let cmd = Command::new("train", "train a decision tree, bagged forest or boosted ensemble")
         .opt("dataset", "registry dataset name (alternative to CSV)", None)
         .opt("scale", "row-count scale for registry datasets", Some("1.0"))
         .opt("task", "classification|regression (CSV input)", Some("classification"))
@@ -166,6 +210,9 @@ fn cmd_train(raw: &[String]) -> Result<()> {
         .opt("threads", "worker threads (0 = all cores)", None)
         .opt("parse-threads", "CSV ingest worker threads (0 = all cores)", Some("0"))
         .opt("forest", "train a bagged forest of N trees instead", None)
+        .opt("boosted", "train a gradient-boosted ensemble of N rounds instead", None)
+        .opt("learning-rate", "boosting shrinkage (with --boosted)", None)
+        .opt("subsample", "per-round row subsample in (0,1] (with --boosted)", None)
         .opt("seed", "rng seed", Some("42"))
         .opt("out", "write the trained model as JSON", None)
         .opt("config", "config file", None)
@@ -177,17 +224,7 @@ fn cmd_train(raw: &[String]) -> Result<()> {
     let train_cfg = train_config(&a, &cfg)?;
 
     let timer = Timer::start();
-    let model = match a.get("forest") {
-        None => Model::SingleTree(Tree::fit(&ds, &train_cfg)?),
-        Some(n) => {
-            let n: usize = n
-                .parse()
-                .map_err(|_| UdtError::usage(format!("--forest expects an integer, got `{n}`")))?;
-            let mut forest_cfg = cfg.forest_config(train_cfg)?;
-            forest_cfg.n_trees = n;
-            Model::Forest(Forest::fit(&ds, &forest_cfg)?)
-        }
-    };
+    let model = fit_model_from_flags(&a, &cfg, &ds, train_cfg)?;
     let ms = timer.ms();
     println!(
         "dataset={} rows={} features={} | kind={} nodes={} train={:.1}ms",
@@ -198,6 +235,15 @@ fn cmd_train(raw: &[String]) -> Result<()> {
         model.n_nodes(),
         ms
     );
+    if let Model::Boosted(b) = &model {
+        println!(
+            "boosted: {} rounds x {} score channel(s), learning_rate={}, {} member trees",
+            b.n_rounds(),
+            b.group(),
+            b.learning_rate,
+            b.trees.len()
+        );
+    }
     match model.evaluate(&ds)? {
         Quality::Accuracy(acc) => println!("train accuracy = {acc:.4}"),
         Quality::Regression { mae, rmse } => println!("train MAE = {mae:.4}, RMSE = {rmse:.4}"),
@@ -353,7 +399,7 @@ fn cmd_rank_features(raw: &[String]) -> Result<()> {
     let train_cfg = train_config(&a, &cfg)?;
     let criterion = udt::selection::feature_rank::default_criterion(&ds, &train_cfg);
     let timer = Timer::start();
-    let ranked = udt::selection::feature_rank::rank_features(&ds, criterion);
+    let ranked = udt::selection::feature_rank::rank_features(&ds, criterion)?;
     let ms = timer.ms();
     let top = a.get_usize("top", ranked.len())?;
     println!("ranked {} features in {ms:.1} ms (criterion {:?}):", ranked.len(), criterion);
@@ -468,6 +514,10 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         .opt("dataset", "train on a registry dataset instead", None)
         .opt("scale", "row-count scale", Some("0.1"))
         .opt("forest", "with --dataset: train a forest of N trees", None)
+        .opt("boosted", "with --dataset: train a boosted ensemble of N rounds", None)
+        .opt("learning-rate", "boosting shrinkage (with --boosted)", None)
+        .opt("subsample", "per-round row subsample (with --boosted)", None)
+        .opt("max-depth", "maximum depth (per-round cap with --boosted)", None)
         .opt("seed", "rng seed", Some("42"))
         .opt("addr", "listen address", Some("127.0.0.1:7878"))
         .opt("config", "config file", None)
@@ -501,17 +551,7 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
     } else {
         let ds = load_dataset(&a)?;
         let tree_cfg = train_config(&a, &cfg)?;
-        let model = match a.get("forest") {
-            None => Model::SingleTree(Tree::fit(&ds, &tree_cfg)?),
-            Some(n) => {
-                let n: usize = n.parse().map_err(|_| {
-                    UdtError::usage(format!("--forest expects an integer, got `{n}`"))
-                })?;
-                let mut forest_cfg = cfg.forest_config(tree_cfg)?;
-                forest_cfg.n_trees = n;
-                Model::Forest(Forest::fit(&ds, &forest_cfg)?)
-            }
-        };
+        let model = fit_model_from_flags(&a, &cfg, &ds, tree_cfg)?;
         let name = ds.name.clone();
         registry.load(&name, SavedModel::new(model, &ds))?;
     }

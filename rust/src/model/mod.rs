@@ -41,6 +41,7 @@ use crate::data::value::Value;
 use crate::error::{Result, UdtError};
 use crate::selection::heuristic::ClassCriterion;
 use crate::selection::split::SplitOp;
+use crate::tree::boost::{Boosted, BoostedConfig};
 use crate::tree::forest::{Forest, ForestConfig};
 use crate::tree::{predict, require_task, Backend, NodeLabel, RegStrategy, TrainConfig, Tree};
 
@@ -202,6 +203,52 @@ impl Estimator for Forest {
                     ds.labels.target(r),
                 )
             }))),
+        }
+    }
+}
+
+impl Estimator for Boosted {
+    type Config = BoostedConfig;
+
+    fn fit(ds: &Dataset, config: &BoostedConfig) -> Result<Boosted> {
+        Boosted::fit(ds, config)
+    }
+
+    fn task(&self) -> TaskKind {
+        self.task
+    }
+
+    fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    fn predict_row(&self, row: &[Value]) -> Result<NodeLabel> {
+        check_arity(self.n_features, row.len())?;
+        Ok(self.predict_values(row))
+    }
+
+    /// Chunk-parallel over all cores (thread count never changes the
+    /// predictions; see [`Boosted::predict_batch_rows`]).
+    fn predict_batch(&self, rows: &[Vec<Value>]) -> Result<Vec<NodeLabel>> {
+        for row in rows {
+            check_arity(self.n_features, row.len())?;
+        }
+        Ok(self.predict_batch_rows(rows, 0))
+    }
+
+    fn evaluate(&self, ds: &Dataset) -> Result<Quality> {
+        check_arity(self.n_features, ds.n_features())?;
+        require_task(self.task, ds.task())?;
+        match ds.task() {
+            TaskKind::Classification => {
+                let all: Vec<u32> = (0..ds.n_rows() as u32).collect();
+                Ok(Quality::Accuracy(self.accuracy_rows(ds, &all)?))
+            }
+            TaskKind::Regression => {
+                let all: Vec<u32> = (0..ds.n_rows() as u32).collect();
+                let (mae, rmse) = self.regression_error(ds, &all)?;
+                Ok(Quality::Regression { mae, rmse })
+            }
         }
     }
 }
@@ -376,6 +423,8 @@ pub enum Model {
     },
     /// A bagged ensemble.
     Forest(Forest),
+    /// A gradient-boosted ensemble (see [`crate::tree::boost`]).
+    Boosted(Boosted),
 }
 
 impl Model {
@@ -385,6 +434,7 @@ impl Model {
             Model::SingleTree(_) => "single_tree",
             Model::TunedTree { .. } => "tuned_tree",
             Model::Forest(_) => "forest",
+            Model::Boosted(_) => "boosted",
         }
     }
 
@@ -393,6 +443,7 @@ impl Model {
             Model::SingleTree(t) => t.task,
             Model::TunedTree { tree, .. } => tree.task,
             Model::Forest(f) => f.task,
+            Model::Boosted(b) => b.task,
         }
     }
 
@@ -401,15 +452,17 @@ impl Model {
             Model::SingleTree(t) => t.n_features,
             Model::TunedTree { tree, .. } => tree.n_features,
             Model::Forest(f) => f.n_features(),
+            Model::Boosted(b) => b.n_features,
         }
     }
 
-    /// Total node count (across all member trees for a forest).
+    /// Total node count (across all member trees for an ensemble).
     pub fn n_nodes(&self) -> usize {
         match self {
             Model::SingleTree(t) => t.n_nodes(),
             Model::TunedTree { tree, .. } => tree.n_nodes(),
             Model::Forest(f) => f.n_nodes(),
+            Model::Boosted(b) => b.n_nodes(),
         }
     }
 
@@ -424,6 +477,7 @@ impl Model {
                 min_split,
             } => predict::predict_row(tree, row, *max_depth, *min_split),
             Model::Forest(f) => f.predict_values(row),
+            Model::Boosted(b) => b.predict_values(row),
         })
     }
 
@@ -448,6 +502,7 @@ impl Model {
                 .map(|r| predict::predict_row(tree, r, *max_depth, *min_split))
                 .collect(),
             Model::Forest(f) => f.predict_batch_rows(rows, 0),
+            Model::Boosted(b) => b.predict_batch_rows(rows, 0),
         })
     }
 
@@ -470,6 +525,7 @@ impl Model {
                 min_split,
             } => evaluate_tree(tree, ds, *max_depth, *min_split),
             Model::Forest(f) => f.evaluate(ds),
+            Model::Boosted(b) => b.evaluate(ds),
         }
     }
 
@@ -478,6 +534,7 @@ impl Model {
             Model::SingleTree(t) => vec![t],
             Model::TunedTree { tree, .. } => vec![tree],
             Model::Forest(f) => f.trees.iter_mut().collect(),
+            Model::Boosted(b) => b.trees.iter_mut().collect(),
         }
     }
 

@@ -12,7 +12,10 @@
 //!   "interner": ["str0", "str1", ...],          // id i == names[i]
 //!   "tree":     {...},                          // single_tree / tuned_tree
 //!   "tuned":    {"max_depth": 7, "min_split": 40},  // tuned_tree only
-//!   "trees":    [{...}, ...], "n_classes": 3    // forest only
+//!   "trees":    [{...}, ...],                   // forest / boosted members
+//!   "n_classes": 3,                             // forest only
+//!   "boost":    {"task": "classification", "n_classes": 3,
+//!                "learning_rate": 0.1, "base": [...]}  // boosted only
 //! }
 //! ```
 //!
@@ -76,6 +79,35 @@ impl SavedModel {
                     .collect();
                 fields.push(("trees", Json::Arr(trees)));
                 fields.push(("n_classes", Json::Num(forest.n_classes as f64)));
+            }
+            Model::Boosted(boosted) => {
+                let trees: Vec<Json> = boosted
+                    .trees
+                    .iter()
+                    .map(|t| tree_serialize::to_json(t, &self.interner))
+                    .collect();
+                fields.push(("trees", Json::Arr(trees)));
+                fields.push((
+                    "boost",
+                    Json::obj(vec![
+                        (
+                            "task",
+                            Json::Str(
+                                match boosted.task {
+                                    TaskKind::Classification => "classification",
+                                    TaskKind::Regression => "regression",
+                                }
+                                .to_string(),
+                            ),
+                        ),
+                        ("n_classes", Json::Num(boosted.n_classes as f64)),
+                        ("learning_rate", Json::Num(boosted.learning_rate)),
+                        (
+                            "base",
+                            Json::Arr(boosted.base.iter().map(|&b| Json::Num(b)).collect()),
+                        ),
+                    ]),
+                ));
             }
         }
         Json::obj(fields)
@@ -193,6 +225,103 @@ impl SavedModel {
                     trees,
                     task,
                     n_classes,
+                })
+            }
+            "boosted" => {
+                let tree_docs = json
+                    .get("trees")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| UdtError::model("boosted: missing `trees`"))?;
+                if tree_docs.is_empty() {
+                    return Err(UdtError::model("boosted: must contain at least one tree"));
+                }
+                let boost = json
+                    .get("boost")
+                    .ok_or_else(|| UdtError::model("boosted: missing `boost`"))?;
+                let task = match boost.get("task").and_then(Json::as_str) {
+                    Some("classification") => TaskKind::Classification,
+                    Some("regression") => TaskKind::Regression,
+                    other => {
+                        return Err(UdtError::model(format!("boosted: bad task {other:?}")))
+                    }
+                };
+                let n_classes = boost
+                    .get("n_classes")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| UdtError::model("boosted: missing `boost.n_classes`"))?;
+                let learning_rate = boost
+                    .get("learning_rate")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| UdtError::model("boosted: missing `boost.learning_rate`"))?;
+                if !learning_rate.is_finite() || learning_rate <= 0.0 {
+                    return Err(UdtError::model(format!(
+                        "boosted: learning_rate must be finite and > 0, got {learning_rate}"
+                    )));
+                }
+                let base: Vec<f64> = boost
+                    .get("base")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| UdtError::model("boosted: missing `boost.base`"))?
+                    .iter()
+                    .enumerate()
+                    .map(|(i, b)| {
+                        b.as_f64().filter(|x| x.is_finite()).ok_or_else(|| {
+                            UdtError::model(format!(
+                                "boosted: base entry {i} must be a finite number"
+                            ))
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                match task {
+                    TaskKind::Classification if n_classes < 2 => {
+                        return Err(UdtError::model(format!(
+                            "boosted: classification needs n_classes >= 2, got {n_classes}"
+                        )));
+                    }
+                    TaskKind::Regression if n_classes != 0 => {
+                        return Err(UdtError::model(
+                            "boosted: regression carries no classes (n_classes must be 0)",
+                        ));
+                    }
+                    _ => {}
+                }
+                let group = crate::tree::boost::group_of(task, n_classes);
+                if base.len() != group {
+                    return Err(UdtError::model(format!(
+                        "boosted: base has {} entries but the model has {group} score \
+                         channel(s)",
+                        base.len()
+                    )));
+                }
+                if tree_docs.len() % group != 0 {
+                    return Err(UdtError::model(format!(
+                        "boosted: {} trees do not tile {group} score channel(s)",
+                        tree_docs.len()
+                    )));
+                }
+                let mut trees = Vec::with_capacity(tree_docs.len());
+                for (i, doc) in tree_docs.iter().enumerate() {
+                    let tree = tree_serialize::from_json(doc, &mut interner)
+                        .map_err(|e| UdtError::model(format!("boosted tree {i}: {e}")))?;
+                    trees.push(tree);
+                }
+                let n_features = trees[0].n_features;
+                if trees
+                    .iter()
+                    .any(|t| t.task != TaskKind::Regression || t.n_features != n_features)
+                {
+                    return Err(UdtError::model(
+                        "boosted: member trees must all be regression trees over the same \
+                         feature space",
+                    ));
+                }
+                Model::Boosted(crate::tree::boost::Boosted {
+                    trees,
+                    task,
+                    n_features,
+                    n_classes,
+                    learning_rate,
+                    base,
                 })
             }
             other => return Err(UdtError::model(format!("unknown model kind `{other}`"))),
@@ -363,6 +492,116 @@ mod tests {
             back.model.predict_row(&row).unwrap(),
             saved.model.predict_row(&row).unwrap()
         );
+    }
+
+    #[test]
+    fn boosted_round_trip_preserves_predictions_for_both_tasks() {
+        use crate::tree::boost::{Boosted, BoostedConfig};
+        let cfg = BoostedConfig {
+            n_rounds: 6,
+            ..Default::default()
+        };
+        // Classification (one-vs-rest: 3 classes → 18 member trees).
+        let ds = cat_ds();
+        let boosted = Boosted::fit(&ds, &cfg).unwrap();
+        let saved = SavedModel::new(Model::Boosted(boosted), &ds);
+        let back = round_trip(&saved);
+        assert_eq!(back.model.kind(), "boosted");
+        match (&back.model, &saved.model) {
+            (Model::Boosted(b), Model::Boosted(a)) => {
+                assert_eq!(b.n_classes, a.n_classes);
+                assert_eq!(b.n_rounds(), a.n_rounds());
+                assert_eq!(b.base, a.base);
+                assert_eq!(b.learning_rate, a.learning_rate);
+            }
+            _ => panic!("expected boosted"),
+        }
+        for r in (0..ds.n_rows()).step_by(17) {
+            let row = ds.row(r);
+            assert_eq!(
+                back.model.predict_row(&row).unwrap(),
+                saved.model.predict_row(&row).unwrap()
+            );
+        }
+        // Regression.
+        let reg = generate_any(&SynthSpec::regression("serboost", 300, 4), 11);
+        let boosted = Boosted::fit(&reg, &cfg).unwrap();
+        let saved = SavedModel::new(Model::Boosted(boosted), &reg);
+        let back = round_trip(&saved);
+        for r in (0..reg.n_rows()).step_by(13) {
+            let row = reg.row(r);
+            assert_eq!(
+                back.model.predict_row(&row).unwrap(),
+                saved.model.predict_row(&row).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn malformed_boosted_documents_are_typed_model_errors() {
+        let tree = r#"{"task":"regression","n_features":1,"depth":1,
+                       "nodes":[{"n":3,"d":1,"label":0.5}]}"#;
+        for (name, doc) in [
+            // Missing the boost block entirely.
+            (
+                "no boost block",
+                format!(
+                    r#"{{"format":"udt-model","version":1,"kind":"boosted",
+                         "schema":{{"features":[{{"name":"f0","kind":"numeric"}}],"classes":[]}},
+                         "interner":[],"trees":[{tree}]}}"#
+                ),
+            ),
+            // Base arity disagrees with the class count.
+            (
+                "base arity",
+                format!(
+                    r#"{{"format":"udt-model","version":1,"kind":"boosted",
+                         "schema":{{"features":[{{"name":"f0","kind":"numeric"}}],"classes":[]}},
+                         "interner":[],"trees":[{tree},{tree},{tree}],
+                         "boost":{{"task":"classification","n_classes":3,
+                                   "learning_rate":0.1,"base":[0.0]}}}}"#
+                ),
+            ),
+            // Tree count does not tile the score channels.
+            (
+                "tree tiling",
+                format!(
+                    r#"{{"format":"udt-model","version":1,"kind":"boosted",
+                         "schema":{{"features":[{{"name":"f0","kind":"numeric"}}],"classes":[]}},
+                         "interner":[],"trees":[{tree},{tree}],
+                         "boost":{{"task":"classification","n_classes":3,
+                                   "learning_rate":0.1,"base":[0.0,0.0,0.0]}}}}"#
+                ),
+            ),
+            // Regression must carry no classes.
+            (
+                "regression classes",
+                format!(
+                    r#"{{"format":"udt-model","version":1,"kind":"boosted",
+                         "schema":{{"features":[{{"name":"f0","kind":"numeric"}}],"classes":[]}},
+                         "interner":[],"trees":[{tree}],
+                         "boost":{{"task":"regression","n_classes":2,
+                                   "learning_rate":0.1,"base":[0.0]}}}}"#
+                ),
+            ),
+            // Non-positive learning rate.
+            (
+                "learning rate",
+                format!(
+                    r#"{{"format":"udt-model","version":1,"kind":"boosted",
+                         "schema":{{"features":[{{"name":"f0","kind":"numeric"}}],"classes":[]}},
+                         "interner":[],"trees":[{tree}],
+                         "boost":{{"task":"regression","n_classes":0,
+                                   "learning_rate":0.0,"base":[0.0]}}}}"#
+                ),
+            ),
+        ] {
+            let parsed = Json::parse(&doc).unwrap();
+            assert!(
+                matches!(SavedModel::from_json(&parsed), Err(UdtError::Model(_))),
+                "{name}"
+            );
+        }
     }
 
     #[test]

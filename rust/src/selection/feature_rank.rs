@@ -9,7 +9,8 @@
 use super::heuristic::Criterion;
 use super::superfast::{best_split_on_feat, FeatureView, LabelsView, ScoredSplit};
 use crate::data::dataset::{Dataset, Labels, TaskKind};
-use crate::tree::TrainConfig;
+use crate::error::Result;
+use crate::tree::{require_task, TrainConfig};
 
 /// One ranked feature.
 #[derive(Debug, Clone)]
@@ -24,25 +25,42 @@ pub struct FeatureScore {
 }
 
 /// Rank all features of a dataset by best-split gain (descending).
-pub fn rank_features(ds: &Dataset, criterion: Criterion) -> Vec<FeatureScore> {
+///
+/// Returns [`crate::error::UdtError::TaskMismatch`] when the criterion's
+/// task does not match the dataset's labels (e.g. an SSE ranking over
+/// classification labels) — the public-surface contract, never a panic.
+pub fn rank_features(ds: &Dataset, criterion: Criterion) -> Result<Vec<FeatureScore>> {
+    // Typed criterion/labels guard before any work.
+    let criterion_task = match criterion {
+        Criterion::Class(_) => TaskKind::Classification,
+        Criterion::Sse => TaskKind::Regression,
+    };
+    require_task(criterion_task, ds.task())?;
+
     let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
     let labels = LabelsView::from_labels(&ds.labels);
 
-    // No-split baseline under the same criterion.
-    let baseline = match (&ds.labels, criterion) {
-        (Labels::Class { ids, n_classes }, Criterion::Class(crit)) => {
-            let mut counts = vec![0.0f64; *n_classes];
-            for &r in &rows {
-                counts[ids[r as usize] as usize] += 1.0;
+    // No-split baseline under the same criterion. A row-less dataset has
+    // nothing to score — baseline 0.0 (the `sum·sum/n` form would divide
+    // by zero and poison every gain with NaN).
+    let baseline = if rows.is_empty() {
+        0.0
+    } else {
+        match (&ds.labels, criterion) {
+            (Labels::Class { ids, n_classes }, Criterion::Class(crit)) => {
+                let mut counts = vec![0.0f64; *n_classes];
+                for &r in &rows {
+                    counts[ids[r as usize] as usize] += 1.0;
+                }
+                crit.score(&counts, &vec![0.0; *n_classes])
             }
-            crit.score(&counts, &vec![0.0; *n_classes])
+            (Labels::Reg { values }, Criterion::Sse) => {
+                let n = rows.len() as f64;
+                let sum: f64 = values.iter().sum();
+                sum * sum / n
+            }
+            _ => unreachable!("criterion/labels kind checked above"),
         }
-        (Labels::Reg { values }, Criterion::Sse) => {
-            let n = rows.len() as f64;
-            let sum: f64 = values.iter().sum();
-            sum * sum / n
-        }
-        _ => panic!("criterion/labels kind mismatch"),
     };
 
     let mut scores: Vec<FeatureScore> = ds
@@ -62,14 +80,19 @@ pub fn rank_features(ds: &Dataset, criterion: Criterion) -> Vec<FeatureScore> {
             }
         })
         .collect();
-    scores.sort_by(|a, b| b.gain.partial_cmp(&a.gain).unwrap().then(a.feature.cmp(&b.feature)));
-    scores
+    // `total_cmp`, not `partial_cmp().unwrap()`: the IEEE total order
+    // never aborts, so a NaN gain sneaking through degenerate score
+    // arithmetic can cost at most its own rank — not the whole
+    // `rank-features` run.
+    scores.sort_by(|a, b| b.gain.total_cmp(&a.gain).then(a.feature.cmp(&b.feature)));
+    Ok(scores)
 }
 
 /// Keep the `k` highest-gain features; returns the filtered dataset and
-/// the kept original feature indices (ascending).
-pub fn top_k(ds: &Dataset, criterion: Criterion, k: usize) -> (Dataset, Vec<usize>) {
-    let ranked = rank_features(ds, criterion);
+/// the kept original feature indices (ascending). Propagates
+/// [`crate::error::UdtError::TaskMismatch`] from the ranking.
+pub fn top_k(ds: &Dataset, criterion: Criterion, k: usize) -> Result<(Dataset, Vec<usize>)> {
+    let ranked = rank_features(ds, criterion)?;
     let mut keep: Vec<usize> = ranked.iter().take(k.max(1)).map(|s| s.feature).collect();
     keep.sort_unstable();
     let columns = keep.iter().map(|&f| ds.columns[f].clone()).collect();
@@ -81,7 +104,7 @@ pub fn top_k(ds: &Dataset, criterion: Criterion, k: usize) -> (Dataset, Vec<usiz
     )
     .expect("columns already validated");
     filtered.class_names = ds.class_names.clone();
-    (filtered, keep)
+    Ok((filtered, keep))
 }
 
 /// Convenience: criterion matching a dataset's task under a config.
@@ -134,7 +157,7 @@ mod tests {
     #[test]
     fn ranks_planted_signal_first() {
         let ds = dataset_with_planted_signal();
-        let ranked = rank_features(&ds, Criterion::Class(ClassCriterion::InfoGain));
+        let ranked = rank_features(&ds, Criterion::Class(ClassCriterion::InfoGain)).unwrap();
         assert_eq!(ranked[0].name, "signal");
         assert_eq!(ranked[1].name, "weak");
         assert_eq!(ranked[2].name, "noise");
@@ -152,7 +175,7 @@ mod tests {
             ClassCriterion::Gini,
             ClassCriterion::ChiSquare,
         ] {
-            for s in rank_features(&ds, Criterion::Class(crit)) {
+            for s in rank_features(&ds, Criterion::Class(crit)).unwrap() {
                 assert!(s.gain >= 0.0, "{}: {}", crit.name(), s.gain);
             }
         }
@@ -161,7 +184,7 @@ mod tests {
     #[test]
     fn top_k_filters_and_preserves_rows() {
         let ds = dataset_with_planted_signal();
-        let (filtered, keep) = top_k(&ds, Criterion::Class(ClassCriterion::InfoGain), 2);
+        let (filtered, keep) = top_k(&ds, Criterion::Class(ClassCriterion::InfoGain), 2).unwrap();
         assert_eq!(filtered.n_features(), 2);
         assert_eq!(filtered.n_rows(), ds.n_rows());
         assert!(keep.contains(&1)); // the planted signal survives
@@ -171,10 +194,70 @@ mod tests {
     }
 
     #[test]
+    fn empty_dataset_ranks_without_panicking() {
+        // Regression guard: zero rows used to make the SSE baseline
+        // `sum·sum/n` divide by zero (NaN), and the descending gain sort
+        // aborted on `partial_cmp().unwrap()`. Both paths must now
+        // produce a finite, complete ranking.
+        use crate::data::column::Column;
+        use crate::data::interner::Interner;
+        let reg = Dataset::new(
+            "empty_reg",
+            vec![Column::new("f0", vec![]), Column::new("f1", vec![])],
+            Labels::Reg { values: vec![] },
+            Interner::new(),
+        )
+        .unwrap();
+        let ranked = rank_features(&reg, Criterion::Sse).unwrap();
+        assert_eq!(ranked.len(), 2);
+        for s in &ranked {
+            assert!(s.gain.is_finite(), "{}: gain {}", s.name, s.gain);
+            assert_eq!(s.gain, 0.0);
+            assert!(s.best.is_none());
+        }
+        let cls = Dataset::new(
+            "empty_cls",
+            vec![Column::new("f0", vec![])],
+            Labels::Class {
+                ids: vec![],
+                n_classes: 2,
+            },
+            Interner::new(),
+        )
+        .unwrap();
+        let ranked = rank_features(&cls, Criterion::Class(ClassCriterion::InfoGain)).unwrap();
+        assert_eq!(ranked.len(), 1);
+        assert!(ranked[0].gain.is_finite());
+    }
+
+    #[test]
+    fn criterion_labels_mismatch_is_a_typed_error() {
+        // Regression guard: a criterion/labels kind mismatch used to
+        // `panic!` from the public surface; it must be a typed
+        // `TaskMismatch`, propagated through `top_k` too.
+        use crate::error::UdtError;
+        let cls = dataset_with_planted_signal();
+        assert!(matches!(
+            rank_features(&cls, Criterion::Sse),
+            Err(UdtError::TaskMismatch { .. })
+        ));
+        assert!(matches!(
+            top_k(&cls, Criterion::Sse, 2),
+            Err(UdtError::TaskMismatch { .. })
+        ));
+        let spec = crate::data::synth::SynthSpec::regression("mm", 50, 3);
+        let reg = crate::data::synth::generate_regression(&spec, 9);
+        assert!(matches!(
+            rank_features(&reg, Criterion::Class(ClassCriterion::Gini)),
+            Err(UdtError::TaskMismatch { .. })
+        ));
+    }
+
+    #[test]
     fn regression_ranking_works() {
         let spec = crate::data::synth::SynthSpec::regression("r", 500, 5);
         let ds = crate::data::synth::generate_regression(&spec, 3);
-        let ranked = rank_features(&ds, Criterion::Sse);
+        let ranked = rank_features(&ds, Criterion::Sse).unwrap();
         assert_eq!(ranked.len(), 5);
         for s in &ranked {
             assert!(s.gain >= 0.0);

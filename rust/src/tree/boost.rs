@@ -1,0 +1,659 @@
+//! Gradient-boosted UDT ensembles on the shared sort cache.
+//!
+//! Boosting is the workload the dataset-level
+//! [`crate::data::sorted_index::SortedIndex`] cache was built for:
+//! residual targets change every round but **feature order does not**,
+//! so every round's shallow regression tree filters the same root
+//! pre-sort instead of re-sorting (`Dataset::sort_index_builds()` stays
+//! at 1 across an entire boost run, regardless of round count — see the
+//! tests). Residual labels are supplied to the builder as a per-round
+//! [`Labels`] view via [`crate::tree::builder::fit_rows_with_labels`];
+//! they are never copied into the dataset.
+//!
+//! Three loss regimes, all fitting plain SSE regression trees on
+//! gradient residuals ([`RegStrategy::DirectSse`] — the label-split
+//! strategy is unavailable because the cached by-target order reflects
+//! the dataset's original labels, not the residuals):
+//!
+//! * **Regression** — squared error: residual `y − F(x)`, prediction
+//!   `base + η · Σ leaf`.
+//! * **Binary classification** — logistic loss on a single score:
+//!   residual `y − σ(F(x))` with `y ∈ {0, 1}`, prediction class 1 iff
+//!   the final logit is positive.
+//! * **Multiclass** — one-vs-rest: one score (and one tree per round)
+//!   per class, each boosted with the binary rule; prediction is the
+//!   argmax score, ties toward the smaller class id (the crate-wide
+//!   tie-break).
+//!
+//! The boxed ([`Boosted::predict_values`]) and compiled
+//! ([`crate::inference::CompiledModel`]) paths share one scoring rule,
+//! [`decide_scores`], and accumulate member leaves in the same storage
+//! order (round-major, class-minor), so compiled predictions are
+//! bit-identical to boxed ones.
+
+use super::{predict, require_task, NodeLabel, RegStrategy, TrainConfig, Tree};
+use crate::coordinator::parallel::parallel_map_chunked;
+use crate::data::dataset::{Dataset, Labels, TaskKind};
+use crate::data::value::Value;
+use crate::error::{Result, UdtError};
+use crate::util::rng::Rng;
+
+/// Gradient-boosting configuration. Fill the fields directly (or start
+/// from [`BoostedConfig::default`]) and call
+/// [`BoostedConfig::validate`]; [`Boosted::fit`] validates too.
+#[derive(Debug, Clone)]
+pub struct BoostedConfig {
+    /// Boosting rounds (trees per score channel).
+    pub n_rounds: usize,
+    /// Shrinkage `η` applied to every leaf contribution.
+    pub learning_rate: f64,
+    /// Depth cap of each round's tree (shallow trees are the point).
+    pub max_depth: usize,
+    /// Per-round row subsample (without replacement) in (0, 1];
+    /// 1.0 = every round sees all rows (stochastic gradient boosting
+    /// below that).
+    pub subsample: f64,
+    /// Subsampling seed.
+    pub seed: u64,
+    /// Worker threads for each round's fit (0 = all cores).
+    pub n_threads: usize,
+}
+
+impl Default for BoostedConfig {
+    fn default() -> Self {
+        Self {
+            n_rounds: 50,
+            learning_rate: 0.1,
+            max_depth: 4,
+            subsample: 1.0,
+            seed: 0xB0_0575,
+            n_threads: 1,
+        }
+    }
+}
+
+impl BoostedConfig {
+    /// Validate the boosting knobs ([`UdtError::InvalidConfig`] on bad ones).
+    pub fn validate(&self) -> Result<()> {
+        if self.n_rounds == 0 {
+            return Err(UdtError::invalid_config("n_rounds must be >= 1"));
+        }
+        if !(self.learning_rate.is_finite() && self.learning_rate > 0.0) {
+            return Err(UdtError::invalid_config(format!(
+                "learning_rate must be finite and > 0, got {}",
+                self.learning_rate
+            )));
+        }
+        if self.max_depth < 1 {
+            return Err(UdtError::invalid_config("max_depth must be >= 1"));
+        }
+        if !(self.subsample > 0.0 && self.subsample <= 1.0) {
+            return Err(UdtError::invalid_config(format!(
+                "subsample must be in (0, 1], got {}",
+                self.subsample
+            )));
+        }
+        Ok(())
+    }
+
+    /// The per-round tree configuration this boost run trains with.
+    fn round_config(&self) -> TrainConfig {
+        TrainConfig {
+            max_depth: self.max_depth,
+            reg_strategy: RegStrategy::DirectSse,
+            n_threads: self.n_threads,
+            ..Default::default()
+        }
+    }
+}
+
+/// A trained gradient-boosted ensemble.
+///
+/// `trees` is stored round-major, class-minor: regression and binary
+/// classification keep one tree per round; an `n_classes > 2` model
+/// keeps `n_classes` one-vs-rest trees per round
+/// (`trees[round * n_classes + class]`). Every member is a shallow
+/// regression tree over the training dataset's feature space.
+#[derive(Debug, Clone)]
+pub struct Boosted {
+    pub trees: Vec<Tree>,
+    pub task: TaskKind,
+    pub n_features: usize,
+    /// Label-space classes (0 for regression, ≥ 2 for classification).
+    pub n_classes: usize,
+    /// Shrinkage applied to every leaf contribution.
+    pub learning_rate: f64,
+    /// Initial score per channel: the target mean (regression) or the
+    /// class-prior log-odds (classification; one entry for binary,
+    /// `n_classes` for one-vs-rest).
+    pub base: Vec<f64>,
+}
+
+/// Logistic sigmoid.
+#[inline]
+pub(crate) fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Prior probability → finite log-odds (clamped away from 0/1 so a
+/// single-class training set still yields a finite base score).
+fn prior_logit(p: f64) -> f64 {
+    let p = p.clamp(1e-6, 1.0 - 1e-6);
+    (p / (1.0 - p)).ln()
+}
+
+/// The single scoring rule shared by the boxed and compiled prediction
+/// paths: per-channel leaf sums → final label. `sums[k]` is the plain
+/// sum of channel `k`'s member leaf values (storage order); the scale
+/// and base apply here, once, so both paths perform identical float
+/// operations.
+#[inline]
+pub(crate) fn decide_scores(
+    task: TaskKind,
+    base: &[f64],
+    learning_rate: f64,
+    sums: &[f64],
+) -> NodeLabel {
+    match task {
+        TaskKind::Regression => NodeLabel::Value(base[0] + learning_rate * sums[0]),
+        TaskKind::Classification => {
+            if sums.len() == 1 {
+                // Binary: class 1 iff the logit is strictly positive
+                // (σ(0) = 0.5 ties toward the smaller class id).
+                let score = base[0] + learning_rate * sums[0];
+                NodeLabel::Class(u16::from(score > 0.0))
+            } else {
+                // One-vs-rest: argmax score, ties toward the smaller id
+                // (strict `>` keeps the first maximum).
+                let mut best = 0usize;
+                let mut best_score = f64::NEG_INFINITY;
+                for (k, &s) in sums.iter().enumerate() {
+                    let score = base[k] + learning_rate * s;
+                    if score > best_score {
+                        best_score = score;
+                        best = k;
+                    }
+                }
+                NodeLabel::Class(best as u16)
+            }
+        }
+    }
+}
+
+impl Boosted {
+    /// Trees per round: one score channel for regression/binary, one per
+    /// class for one-vs-rest multiclass.
+    pub fn group(&self) -> usize {
+        group_of(self.task, self.n_classes)
+    }
+
+    /// Boosting rounds this model trained for.
+    pub fn n_rounds(&self) -> usize {
+        self.trees.len() / self.group().max(1)
+    }
+
+    /// Total node count across all member trees.
+    pub fn n_nodes(&self) -> usize {
+        self.trees.iter().map(Tree::n_nodes).sum()
+    }
+
+    /// Train a boosted ensemble. Every round fits a shallow SSE
+    /// regression tree on the current residuals through the arena
+    /// frontier builder, reusing the dataset's cached
+    /// [`crate::data::sorted_index::SortedIndex`] — the root sort is
+    /// paid exactly once for the whole run.
+    pub fn fit(ds: &Dataset, config: &BoostedConfig) -> Result<Boosted> {
+        config.validate()?;
+        let n = ds.n_rows();
+        if n == 0 {
+            return Err(UdtError::data("cannot boost on an empty dataset"));
+        }
+        let round_cfg = config.round_config();
+        let mut rng = Rng::new(config.seed);
+        let sample_n = ((n as f64 * config.subsample).round() as usize).clamp(1, n);
+        let mut all_rows: Vec<u32> = (0..n as u32).collect();
+        let mut round_rows = |rng: &mut Rng, round: usize| -> Vec<u32> {
+            if sample_n == n {
+                all_rows.clone()
+            } else {
+                let mut round_rng = rng.fork(round as u64);
+                round_rng.shuffle(&mut all_rows);
+                all_rows[..sample_n].to_vec()
+            }
+        };
+
+        match &ds.labels {
+            Labels::Reg { values } => {
+                let base = values.iter().sum::<f64>() / n as f64;
+                let mut score = vec![base; n];
+                let mut residual = Labels::Reg {
+                    values: vec![0.0; n],
+                };
+                let mut trees = Vec::with_capacity(config.n_rounds);
+                for round in 0..config.n_rounds {
+                    if let Labels::Reg { values: res } = &mut residual {
+                        for ((res, &y), &s) in res.iter_mut().zip(values).zip(&score) {
+                            *res = y - s;
+                        }
+                    }
+                    let rows = round_rows(&mut rng, round);
+                    let tree =
+                        super::builder::fit_rows_with_labels(ds, &rows, &round_cfg, &residual)?;
+                    for (i, s) in score.iter_mut().enumerate() {
+                        *s += config.learning_rate * leaf_value_ds(&tree, ds, i);
+                    }
+                    trees.push(tree);
+                }
+                Ok(Boosted {
+                    trees,
+                    task: TaskKind::Regression,
+                    n_features: ds.n_features(),
+                    n_classes: 0,
+                    learning_rate: config.learning_rate,
+                    base: vec![base],
+                })
+            }
+            Labels::Class { ids, n_classes } => {
+                if *n_classes < 2 {
+                    return Err(UdtError::data(format!(
+                        "boosted classification needs >= 2 classes, got {n_classes}"
+                    )));
+                }
+                let group = group_of(TaskKind::Classification, *n_classes);
+                // Score channel k targets class k (the single binary
+                // channel targets class 1).
+                let target = |k: usize| if group == 1 { 1u16 } else { k as u16 };
+                let base: Vec<f64> = (0..group)
+                    .map(|k| {
+                        let pos = ids.iter().filter(|&&c| c == target(k)).count();
+                        prior_logit(pos as f64 / n as f64)
+                    })
+                    .collect();
+                let mut score: Vec<Vec<f64>> = base.iter().map(|&b| vec![b; n]).collect();
+                let mut residual = Labels::Reg {
+                    values: vec![0.0; n],
+                };
+                let mut trees = Vec::with_capacity(config.n_rounds * group);
+                for round in 0..config.n_rounds {
+                    // One subsample per round, shared by all class
+                    // channels (the one-vs-rest trees of a round see the
+                    // same rows).
+                    let rows = round_rows(&mut rng, round);
+                    for k in 0..group {
+                        if let Labels::Reg { values: res } = &mut residual {
+                            for ((res, &c), &s) in res.iter_mut().zip(ids).zip(&score[k]) {
+                                let y = if c == target(k) { 1.0 } else { 0.0 };
+                                *res = y - sigmoid(s);
+                            }
+                        }
+                        let tree = super::builder::fit_rows_with_labels(
+                            ds, &rows, &round_cfg, &residual,
+                        )?;
+                        for (i, s) in score[k].iter_mut().enumerate() {
+                            *s += config.learning_rate * leaf_value_ds(&tree, ds, i);
+                        }
+                        trees.push(tree);
+                    }
+                }
+                Ok(Boosted {
+                    trees,
+                    task: TaskKind::Classification,
+                    n_features: ds.n_features(),
+                    n_classes: *n_classes,
+                    learning_rate: config.learning_rate,
+                    base,
+                })
+            }
+        }
+    }
+
+    /// Per-channel leaf sums for one materialized row, in storage order
+    /// (the accumulation order the compiled path replicates exactly).
+    fn sums_values(&self, row: &[Value]) -> Vec<f64> {
+        let group = self.group().max(1);
+        let mut sums = vec![0.0f64; group];
+        for (t, tree) in self.trees.iter().enumerate() {
+            sums[t % group] += predict::predict_row(tree, row, usize::MAX, 0)
+                .as_value()
+                .unwrap_or(f64::NAN);
+        }
+        sums
+    }
+
+    /// Boosted prediction for one materialized row of values.
+    pub fn predict_values(&self, row: &[Value]) -> NodeLabel {
+        decide_scores(
+            self.task,
+            &self.base,
+            self.learning_rate,
+            &self.sums_values(row),
+        )
+    }
+
+    /// Boosted prediction for row `r` of a dataset (no materialization).
+    pub fn predict_ds(&self, ds: &Dataset, r: usize) -> NodeLabel {
+        let group = self.group().max(1);
+        let mut sums = vec![0.0f64; group];
+        for (t, tree) in self.trees.iter().enumerate() {
+            sums[t % group] += leaf_value_ds(tree, ds, r);
+        }
+        decide_scores(self.task, &self.base, self.learning_rate, &sums)
+    }
+
+    /// Batch predictions, chunk-parallel over the worker pool (thread
+    /// count never changes the output — chunks are independent and
+    /// stitched in order). Arity is the caller's contract (the
+    /// [`crate::Estimator`] impl checks it).
+    pub fn predict_batch_rows(&self, rows: &[Vec<Value>], n_threads: usize) -> Vec<NodeLabel> {
+        const CHUNK: usize = 256;
+        let out = parallel_map_chunked(rows.len(), CHUNK, n_threads, |start, end| {
+            rows[start..end]
+                .iter()
+                .map(|r| self.predict_values(r))
+                .collect::<Vec<_>>()
+        });
+        out.into_iter().flatten().collect()
+    }
+
+    /// Ensemble accuracy over rows (classification).
+    pub fn accuracy_rows(&self, ds: &Dataset, rows: &[u32]) -> Result<f64> {
+        require_task(TaskKind::Classification, self.task)?;
+        require_task(TaskKind::Classification, ds.task())?;
+        let correct = rows
+            .iter()
+            .filter(|&&r| {
+                self.predict_ds(ds, r as usize).as_class() == Some(ds.labels.class(r as usize))
+            })
+            .count();
+        Ok(correct as f64 / rows.len().max(1) as f64)
+    }
+
+    /// Ensemble (MAE, RMSE) over rows (regression).
+    pub fn regression_error(&self, ds: &Dataset, rows: &[u32]) -> Result<(f64, f64)> {
+        require_task(TaskKind::Regression, self.task)?;
+        require_task(TaskKind::Regression, ds.task())?;
+        Ok(super::mae_rmse(rows.iter().map(|&r| {
+            (
+                self.predict_ds(ds, r as usize)
+                    .as_value()
+                    .unwrap_or(f64::NAN),
+                ds.labels.target(r as usize),
+            )
+        })))
+    }
+}
+
+/// Trees per round for a task/class-count pair (shared with the
+/// compiled path so the two can never disagree on the layout).
+#[inline]
+pub(crate) fn group_of(task: TaskKind, n_classes: usize) -> usize {
+    if task == TaskKind::Classification && n_classes > 2 {
+        n_classes
+    } else {
+        1
+    }
+}
+
+/// A member tree's leaf value for dataset row `r` (members are always
+/// regression trees; NaN mirrors the compiled table's corrupt-label
+/// sentinel and is unreachable for a well-formed model).
+#[inline]
+fn leaf_value_ds(tree: &Tree, ds: &Dataset, r: usize) -> f64 {
+    predict::predict_ds(tree, ds, r, usize::MAX, 0)
+        .as_value()
+        .unwrap_or(f64::NAN)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_any, generate_classification, SynthSpec};
+
+    fn reg_ds() -> Dataset {
+        generate_any(&SynthSpec::regression("boostr", 1200, 6), 71)
+    }
+
+    fn binary_ds() -> Dataset {
+        let mut spec = SynthSpec::classification("boostb", 1200, 6, 2);
+        spec.cat_frac = 0.25;
+        spec.missing_frac = 0.05;
+        generate_classification(&spec, 73)
+    }
+
+    #[test]
+    fn regression_boosting_improves_with_rounds() {
+        let ds = reg_ds();
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let few = Boosted::fit(
+            &ds,
+            &BoostedConfig {
+                n_rounds: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let many = Boosted::fit(
+            &ds,
+            &BoostedConfig {
+                n_rounds: 40,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let (_, rmse_few) = few.regression_error(&ds, &rows).unwrap();
+        let (_, rmse_many) = many.regression_error(&ds, &rows).unwrap();
+        assert!(
+            rmse_many < rmse_few,
+            "40 rounds ({rmse_many}) must beat 1 round ({rmse_few})"
+        );
+        assert_eq!(many.n_rounds(), 40);
+        assert_eq!(many.trees.len(), 40);
+    }
+
+    #[test]
+    fn binary_boosting_learns() {
+        let ds = binary_ds();
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let model = Boosted::fit(
+            &ds,
+            &BoostedConfig {
+                n_rounds: 40,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let acc = model.accuracy_rows(&ds, &rows).unwrap();
+        assert!(acc > 0.8, "train accuracy {acc}");
+        assert_eq!(model.group(), 1);
+        assert_eq!(model.base.len(), 1);
+    }
+
+    #[test]
+    fn multiclass_ovr_learns_and_lays_out_round_major() {
+        let spec = SynthSpec::classification("boostm", 900, 5, 4);
+        let ds = generate_classification(&spec, 79);
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let model = Boosted::fit(
+            &ds,
+            &BoostedConfig {
+                n_rounds: 20,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(model.group(), 4);
+        assert_eq!(model.trees.len(), 20 * 4);
+        assert_eq!(model.n_rounds(), 20);
+        assert_eq!(model.base.len(), 4);
+        let acc = model.accuracy_rows(&ds, &rows).unwrap();
+        assert!(acc > 0.5, "train accuracy {acc}");
+    }
+
+    #[test]
+    fn boost_run_sorts_each_column_exactly_once() {
+        let ds = reg_ds();
+        assert_eq!(ds.sort_index_builds(), 0);
+        let model = Boosted::fit(
+            &ds,
+            &BoostedConfig {
+                n_rounds: 25,
+                subsample: 0.8,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(model.trees.len(), 25);
+        // 25 rounds of residual fits, one root sort: every round
+        // filtered the dataset's cached SortedIndex.
+        assert_eq!(ds.sort_index_builds(), 1);
+
+        // Same property through the classification (one-vs-rest) path.
+        let cds = generate_classification(&SynthSpec::classification("bsi", 500, 4, 3), 83);
+        Boosted::fit(
+            &cds,
+            &BoostedConfig {
+                n_rounds: 10,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(cds.sort_index_builds(), 1);
+    }
+
+    #[test]
+    fn member_trees_respect_the_depth_cap() {
+        let ds = binary_ds();
+        let model = Boosted::fit(
+            &ds,
+            &BoostedConfig {
+                n_rounds: 8,
+                max_depth: 3,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for tree in &model.trees {
+            assert!(tree.depth <= 3, "member depth {}", tree.depth);
+            assert_eq!(tree.task, TaskKind::Regression);
+        }
+    }
+
+    #[test]
+    fn subsampled_boosting_is_deterministic_per_seed() {
+        let ds = binary_ds();
+        let cfg = BoostedConfig {
+            n_rounds: 6,
+            subsample: 0.6,
+            ..Default::default()
+        };
+        let a = Boosted::fit(&ds, &cfg).unwrap();
+        let b = Boosted::fit(&ds, &cfg).unwrap();
+        assert_eq!(a.trees.len(), b.trees.len());
+        for (ta, tb) in a.trees.iter().zip(&b.trees) {
+            assert_eq!(ta.n_nodes(), tb.n_nodes());
+            for (na, nb) in ta.nodes.iter().zip(&tb.nodes) {
+                assert_eq!(na.split, nb.split);
+                assert_eq!(na.label, nb.label);
+            }
+        }
+        // Each round subsampled, not trained on everything.
+        assert_eq!(a.trees[0].nodes[0].n_samples, 720);
+    }
+
+    #[test]
+    fn ds_and_row_predictions_agree() {
+        let ds = binary_ds();
+        let model = Boosted::fit(
+            &ds,
+            &BoostedConfig {
+                n_rounds: 10,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for r in (0..ds.n_rows()).step_by(37) {
+            assert_eq!(model.predict_values(&ds.row(r)), model.predict_ds(&ds, r));
+        }
+        // Batch path is thread-count invariant and agrees row-for-row.
+        let rows: Vec<Vec<Value>> = (0..ds.n_rows()).map(|r| ds.row(r)).collect();
+        let seq = model.predict_batch_rows(&rows, 1);
+        let par = model.predict_batch_rows(&rows, 8);
+        assert_eq!(seq, par);
+        for (r, label) in seq.iter().enumerate() {
+            assert_eq!(*label, model.predict_values(&rows[r]), "row {r}");
+        }
+    }
+
+    #[test]
+    fn invalid_configs_are_rejected() {
+        let ds = binary_ds();
+        for cfg in [
+            BoostedConfig {
+                n_rounds: 0,
+                ..Default::default()
+            },
+            BoostedConfig {
+                learning_rate: 0.0,
+                ..Default::default()
+            },
+            BoostedConfig {
+                learning_rate: f64::NAN,
+                ..Default::default()
+            },
+            BoostedConfig {
+                max_depth: 0,
+                ..Default::default()
+            },
+            BoostedConfig {
+                subsample: 1.5,
+                ..Default::default()
+            },
+        ] {
+            assert!(matches!(
+                Boosted::fit(&ds, &cfg),
+                Err(UdtError::InvalidConfig(_))
+            ));
+        }
+    }
+
+    #[test]
+    fn single_class_training_set_stays_finite() {
+        // All rows carry class 0: the prior logit is clamped, residuals
+        // are near-constant, and prediction is the majority class.
+        let spec = SynthSpec::classification("bone", 120, 3, 2);
+        let mut ds = generate_classification(&spec, 91);
+        if let Labels::Class { ids, .. } = &mut ds.labels {
+            ids.iter_mut().for_each(|c| *c = 0);
+        }
+        let model = Boosted::fit(
+            &ds,
+            &BoostedConfig {
+                n_rounds: 3,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(model.base[0].is_finite());
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        assert_eq!(model.accuracy_rows(&ds, &rows).unwrap(), 1.0);
+    }
+
+    #[test]
+    fn decide_scores_tie_breaks_toward_smaller_class() {
+        // Binary: a zero logit is class 0 (σ(0) = 0.5, not > 0.5).
+        assert_eq!(
+            decide_scores(TaskKind::Classification, &[0.0], 0.1, &[0.0]),
+            NodeLabel::Class(0)
+        );
+        // Multiclass: equal scores pick the smallest id.
+        assert_eq!(
+            decide_scores(TaskKind::Classification, &[1.0, 1.0, 1.0], 0.1, &[2.0, 2.0, 2.0]),
+            NodeLabel::Class(0)
+        );
+        // Regression passes the scaled sum through.
+        assert_eq!(
+            decide_scores(TaskKind::Regression, &[10.0], 0.5, &[4.0]),
+            NodeLabel::Value(12.0)
+        );
+    }
+}

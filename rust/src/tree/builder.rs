@@ -79,6 +79,10 @@ struct FitCtx<'a> {
     /// The dataset's cached root sort (also provides per-column
     /// has-categorical/missing flags).
     index: &'a SortedIndex,
+    /// The fit's label view — `&ds.labels` for a plain fit, or a
+    /// caller-supplied override (gradient-boosting residuals) indexed by
+    /// the same global row ids.
+    labels: &'a Labels,
 }
 
 /// Train a tree over `rows` of `ds`.
@@ -99,6 +103,29 @@ pub fn fit_rows_masked(
     fit_rows_with_stats(ds, rows, config, active).map(|(tree, _)| tree)
 }
 
+/// Train a tree over `rows` against an external label view: `labels`
+/// replaces the dataset's own labels for every label read, while the
+/// feature columns, the membership filter and — crucially — the cached
+/// [`SortedIndex`] still come from `ds`. This is the gradient-boosting
+/// entry point: residual targets change every round but feature order
+/// does not, so every round filters the same root sort (the dataset's
+/// sort is still built exactly once across an entire boost run) and the
+/// residuals are never copied into the dataset.
+///
+/// `labels` must be indexed by global row id (`labels.len() ==
+/// ds.n_rows()`). Regression overrides must use
+/// [`RegStrategy::DirectSse`]: the cached by-target order reflects the
+/// dataset's own labels, not the override, so the label-split strategy
+/// would silently mis-sort.
+pub fn fit_rows_with_labels(
+    ds: &Dataset,
+    rows: &[u32],
+    config: &TrainConfig,
+    labels: &Labels,
+) -> Result<Tree> {
+    fit_rows_core(ds, rows, config, None, Some(labels)).map(|(tree, _)| tree)
+}
+
 /// [`fit_rows_masked`], additionally returning the arena byte accounting
 /// (perf instrumentation for benches and the zero-allocation tests).
 pub fn fit_rows_with_stats(
@@ -107,6 +134,17 @@ pub fn fit_rows_with_stats(
     config: &TrainConfig,
     active: Option<&[bool]>,
 ) -> Result<(Tree, ArenaStats)> {
+    fit_rows_core(ds, rows, config, active, None)
+}
+
+fn fit_rows_core(
+    ds: &Dataset,
+    rows: &[u32],
+    config: &TrainConfig,
+    active: Option<&[bool]>,
+    labels_override: Option<&Labels>,
+) -> Result<(Tree, ArenaStats)> {
+    let labels = labels_override.unwrap_or(&ds.labels);
     if rows.is_empty() {
         return Err(UdtError::data("cannot fit on an empty row set"));
     }
@@ -125,6 +163,21 @@ pub fn fit_rows_with_stats(
             )));
         }
     }
+    if let Some(over) = labels_override {
+        if over.len() != ds.n_rows() {
+            return Err(UdtError::data(format!(
+                "label override has {} entries but the dataset has {} rows",
+                over.len(),
+                ds.n_rows()
+            )));
+        }
+        if matches!(over, Labels::Reg { .. }) && config.reg_strategy == RegStrategy::LabelSplit {
+            return Err(UdtError::invalid_config(
+                "label override requires RegStrategy::DirectSse (the cached \
+                 by-target order reflects the dataset's own labels)",
+            ));
+        }
+    }
 
     let member = membership_mask(ds.n_rows(), rows);
     if member.iter().filter(|&&m| m).count() != rows.len() {
@@ -137,8 +190,8 @@ pub fn fit_rows_with_stats(
     // Root arena build (Algorithm 5 line 2) from the dataset-level sort
     // cache: the first fit on `ds` sorts, every later fit only filters.
     let index = ds.sorted_index();
-    let want_bylab = matches!(&ds.labels, Labels::Reg { .. })
-        && config.reg_strategy == RegStrategy::LabelSplit;
+    let want_bylab =
+        matches!(labels, Labels::Reg { .. }) && config.reg_strategy == RegStrategy::LabelSplit;
     let mut frontier = Frontier::build_root(
         ds,
         index,
@@ -148,6 +201,7 @@ pub fn fit_rows_with_stats(
         active,
         want_bylab,
         Tree::ROOT,
+        labels,
     );
     let bytes_at_root = frontier.arena_bytes();
     let mut stats = ArenaStats {
@@ -156,11 +210,16 @@ pub fn fit_rows_with_stats(
         final_bytes: bytes_at_root,
     };
 
-    let ctx = FitCtx { ds, config, index };
+    let ctx = FitCtx {
+        ds,
+        config,
+        index,
+        labels,
+    };
 
     let mut tree = Tree {
         nodes: Vec::new(),
-        task: ds.task(),
+        task: labels.kind(),
         n_features: ds.n_features(),
         depth: 0,
     };
@@ -256,7 +315,7 @@ fn process_node(
     let config = ctx.config;
     let node = frontier.node(slot);
     let rows = frontier.node_rows(slot);
-    let (label, pure, reg_stats) = node_label(ds, rows, &mut scratch.class_counts);
+    let (label, pure, reg_stats) = node_label(ctx.labels, rows, &mut scratch.class_counts);
     let mut decision = Decision {
         slot,
         node_id: node.node_id,
@@ -284,7 +343,7 @@ fn process_node(
     // binarizes the node's targets at the best SSE threshold
     // (Algorithm 6), then proceeds as 2-class classification.
     let mut pseudo_counts = [0.0f64; 2];
-    let (labels_view, criterion): (LabelsView, Criterion) = match &ds.labels {
+    let (labels_view, criterion): (LabelsView, Criterion) = match ctx.labels {
         Labels::Class { ids, n_classes } => (
             LabelsView::Class {
                 ids,
@@ -319,7 +378,7 @@ fn process_node(
     };
     // Class counts aligned with the labels view (pseudo-labels for the
     // regression label-split strategy).
-    let counts_for_view: &[f64] = match (&ds.labels, config.reg_strategy) {
+    let counts_for_view: &[f64] = match (ctx.labels, config.reg_strategy) {
         (Labels::Class { .. }, _) => class_counts,
         (Labels::Reg { .. }, RegStrategy::LabelSplit) => &pseudo_counts,
         (Labels::Reg { .. }, RegStrategy::DirectSse) => &[],
@@ -359,11 +418,11 @@ fn process_node(
 /// Majority class (ties → smallest id) or mean target; plus purity flag
 /// and regression `(n, sum)` stats. Class counts land in `counts_buf`.
 fn node_label(
-    ds: &Dataset,
+    labels: &Labels,
     rows: &[u32],
     counts_buf: &mut Vec<f64>,
 ) -> (NodeLabel, bool, Option<(f64, f64)>) {
-    match &ds.labels {
+    match labels {
         Labels::Class { ids, n_classes } => {
             counts_buf.clear();
             counts_buf.resize(*n_classes, 0.0);
@@ -630,6 +689,62 @@ mod tests {
         // arena footprint is constant from root to finish.
         assert_eq!(stats.peak_bytes, stats.bytes_at_root);
         assert_eq!(stats.final_bytes, stats.bytes_at_root);
+    }
+
+    #[test]
+    fn label_override_matches_in_dataset_labels() {
+        // Fitting against an override that equals the dataset's own
+        // labels must build the identical tree (DirectSse path), and the
+        // label-split strategy is rejected for overrides (the cached
+        // by-target order reflects the dataset's labels).
+        let spec = crate::data::synth::SynthSpec::regression("lo", 600, 5);
+        let ds = crate::data::synth::generate_regression(&spec, 47);
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let cfg = TrainConfig {
+            reg_strategy: RegStrategy::DirectSse,
+            ..Default::default()
+        };
+        let direct = fit_rows(&ds, &rows, &cfg).unwrap();
+        let over = ds.labels.clone();
+        let via_override = fit_rows_with_labels(&ds, &rows, &cfg, &over).unwrap();
+        assert_eq!(direct.n_nodes(), via_override.n_nodes());
+        for (a, b) in direct.nodes.iter().zip(&via_override.nodes) {
+            assert_eq!(a.split, b.split);
+            assert_eq!(a.label, b.label);
+        }
+        assert!(matches!(
+            fit_rows_with_labels(&ds, &rows, &TrainConfig::default(), &over),
+            Err(UdtError::InvalidConfig(_))
+        ));
+        // Wrong-length overrides are rejected.
+        let short = Labels::Reg { values: vec![0.0] };
+        assert!(matches!(
+            fit_rows_with_labels(&ds, &rows, &cfg, &short),
+            Err(UdtError::Data(_))
+        ));
+    }
+
+    #[test]
+    fn regression_override_on_classification_dataset_builds_reg_tree() {
+        // A classification dataset + regression residual override (the
+        // logistic-boosting regime): the fitted tree is a regression tree
+        // over the dataset's features, labeled by the override values.
+        let spec = crate::data::synth::SynthSpec::classification("loc", 400, 4, 2);
+        let ds = crate::data::synth::generate_classification(&spec, 53);
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let residuals: Vec<f64> = (0..ds.n_rows())
+            .map(|r| ds.labels.class(r) as f64 - 0.5)
+            .collect();
+        let over = Labels::Reg { values: residuals };
+        let cfg = TrainConfig {
+            reg_strategy: RegStrategy::DirectSse,
+            max_depth: 4,
+            ..Default::default()
+        };
+        let tree = fit_rows_with_labels(&ds, &rows, &cfg, &over).unwrap();
+        assert_eq!(tree.task, crate::data::dataset::TaskKind::Regression);
+        assert!(tree.nodes[0].label.as_value().is_some());
+        assert!(tree.depth <= 4);
     }
 
     #[test]

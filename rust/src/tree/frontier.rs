@@ -282,6 +282,10 @@ impl Frontier {
     /// order down to `rows` (`member` is the row-membership mask, `full`
     /// short-circuits the filter when `rows` covers the whole dataset).
     /// Inactive features (forest feature masking) get empty arenas.
+    /// `labels` is the fit's label view — usually `&ds.labels`, but a
+    /// boosting round passes its per-round residuals instead (the arena
+    /// label lists and the bylab order are derived from it, never from
+    /// the dataset).
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn build_root(
         ds: &Dataset,
@@ -292,9 +296,10 @@ impl Frontier {
         active: Option<&[bool]>,
         want_bylab: bool,
         root_id: u32,
+        labels: &Labels,
     ) -> Frontier {
         let k = ds.n_features();
-        let class_ids: Option<&[u16]> = match &ds.labels {
+        let class_ids: Option<&[u16]> = match labels {
             Labels::Class { ids, .. } => Some(ids),
             Labels::Reg { .. } => None,
         };
@@ -698,6 +703,7 @@ mod tests {
             None,
             false,
             0,
+            &ds.labels,
         );
         // Root f0 sorted rows: values 0,1,2,3,4 → rows 3,1,4,2,0.
         assert_eq!(fr.num_slices(0, 0).0, &[3, 1, 4, 2, 0]);
@@ -783,6 +789,7 @@ mod tests {
             Some(&active),
             false,
             0,
+            &ds.labels,
         );
         assert!(fr.feature_active(0));
         assert!(!fr.feature_active(1));

@@ -1,6 +1,7 @@
 //! Ultrafast Decision Tree (paper §3): CART driven by Superfast Selection
 //! with an amortized pre-sort, Training-Only-Once Tuning and pruning.
 
+pub mod boost;
 pub mod builder;
 pub mod forest;
 pub mod frontier;

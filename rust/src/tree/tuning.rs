@@ -5,7 +5,10 @@
 //! examples' root-to-leaf *paths* — no retraining. The tuner walks each
 //! validation path once, then sweeps the paper's grid:
 //! `max_depth ∈ 1..=full_depth` first, then `min_split` from 0 to 4% of
-//! the training-set size in 0.02% steps (200 settings).
+//! the training-set size in 0.02% steps (up to 200 *distinct* settings —
+//! grid points that collapse to the same integer `min_split`, and the
+//! `min_split = 0` point phase 1 already evaluated, are swept and
+//! counted once; see [`distinct_split_grid`]).
 //!
 //! [`tune_by_retraining`] is the generic baseline (one full training per
 //! setting) used by the `ablation_tuning` bench to reproduce the paper's
@@ -85,12 +88,14 @@ pub fn tune(
         }
     }
 
-    // Phase 2: sweep min_split at the chosen depth.
+    // Phase 2: sweep min_split at the chosen depth, over the *distinct*
+    // grid values only. `max_split·i/steps` collapses to a handful of
+    // values when `max_split < steps` (hundreds of duplicate settings),
+    // and `i = 0` repeats the phase-1 winner `(best_depth, 0)` — both
+    // used to inflate `n_settings` (the paper's "214.8 sets" headline
+    // metric) without evaluating anything new.
     let mut best_split = 0usize;
-    let max_split = (n_train as f64 * grid.min_split_max_frac) as usize;
-    let steps = grid.min_split_steps.max(1);
-    for i in 0..=steps {
-        let s = max_split * i / steps;
+    for s in distinct_split_grid(n_train, grid) {
         let metric = eval_setting(tree, ds, val_rows, &paths, best_depth, s);
         n_settings += 1;
         if metric > best_metric {
@@ -106,6 +111,26 @@ pub fn tune(
         n_settings,
         tune_ms: timer.ms(),
     })
+}
+
+/// The paper grid's *distinct* phase-2 `min_split` values, ascending:
+/// `max_split·i/steps` for `i ∈ 0..=steps` with duplicates and the `0`
+/// entry removed (`(depth, 0)` is already evaluated by the phase-1 depth
+/// sweep). The values are non-decreasing in `i`, so adjacent
+/// deduplication is exact.
+pub fn distinct_split_grid(n_train: usize, grid: &TuneGrid) -> Vec<usize> {
+    let max_split = (n_train as f64 * grid.min_split_max_frac) as usize;
+    let steps = grid.min_split_steps.max(1);
+    let mut out = Vec::new();
+    let mut prev = 0usize;
+    for i in 0..=steps {
+        let s = max_split * i / steps;
+        if s > 0 && s != prev {
+            out.push(s);
+            prev = s;
+        }
+    }
+    out
 }
 
 /// Metric of one `(max_depth, min_split)` setting using the cached paths.
@@ -204,10 +229,10 @@ pub fn tune_by_retraining(
             best = (depth, 0, m);
         }
     }
-    let max_split = (train_rows.len() as f64 * grid.min_split_max_frac) as usize;
-    let steps = grid.min_split_steps.max(1);
-    for i in 0..=steps {
-        let s = max_split * i / steps;
+    // Same deduplicated grid as `tune` — the two tuners must evaluate
+    // (and count) identical setting lists for the bench comparison to be
+    // apples-to-apples.
+    for s in distinct_split_grid(train_rows.len(), grid) {
         let m = eval(best.0, s)?;
         n_settings += 1;
         if m > best.2 {
@@ -241,14 +266,21 @@ mod tests {
         let (train, val, _) = ds.split_indices(0.8, 0.1, 3);
         let tree = Tree::fit_rows(&ds, &train, &TrainConfig::default()).unwrap();
         let full_acc = tree.accuracy_rows(&ds, &val).unwrap();
-        let r = tune(&tree, &ds, &val, train.len(), &TuneGrid::default()).unwrap();
+        let grid = TuneGrid::default();
+        let r = tune(&tree, &ds, &val, train.len(), &grid).unwrap();
         assert!(
             r.best_metric >= full_acc - 1e-12,
             "tuned {} < full {full_acc}",
             r.best_metric
         );
-        // The grid includes the full tree's own setting, so this is exact.
-        assert!(r.n_settings > 100);
+        // The grid includes the full tree's own setting, so this is
+        // exact; settings = the depth sweep + the distinct min_split
+        // values (duplicates and the re-evaluated 0 are not counted).
+        assert_eq!(
+            r.n_settings,
+            tree.depth as usize + distinct_split_grid(train.len(), &grid).len()
+        );
+        assert!(r.n_settings > 50);
     }
 
     #[test]
@@ -338,6 +370,47 @@ mod tests {
         let _ = tune_by_retraining(&ds, &train, &val, &cfg, tree.depth as usize, &grid).unwrap();
         // Dozens of retrains, one sort: every fit filtered the cache.
         assert_eq!(ds.sort_index_builds(), 1);
+    }
+
+    #[test]
+    fn phase2_grid_counts_only_distinct_settings() {
+        // Regression guard for the duplicate-grid bug: with 100 training
+        // rows and the default 200-step grid, `max_split = 4` and the
+        // old sweep evaluated 201 phase-2 settings — 197 of them
+        // duplicates of {0, 1, 2, 3, 4}, with i = 0 re-evaluating the
+        // phase-1 winner. The deduplicated sweep pins n_settings to
+        // depth + 4 exactly.
+        let spec = SynthSpec::classification("dedup", 125, 4, 2);
+        let ds = generate_classification(&spec, 61);
+        let train: Vec<u32> = (0..100).collect();
+        let val: Vec<u32> = (100..125).collect();
+        let tree = Tree::fit_rows(&ds, &train, &TrainConfig::default()).unwrap();
+        let grid = TuneGrid::default();
+        // 100 train rows × 4% = max_split 4 → distinct values {1, 2, 3, 4}.
+        assert_eq!(distinct_split_grid(train.len(), &grid), vec![1, 2, 3, 4]);
+        let r = tune(&tree, &ds, &val, train.len(), &grid).unwrap();
+        assert_eq!(r.n_settings, tree.depth as usize + 4);
+
+        // The retraining baseline counts the identical grid.
+        let slow = tune_by_retraining(
+            &ds,
+            &train,
+            &val,
+            &TrainConfig::default(),
+            tree.depth as usize,
+            &grid,
+        )
+        .unwrap();
+        assert_eq!(slow.n_settings, r.n_settings);
+
+        // A grid finer than max_split keeps every distinct value once; a
+        // coarser one subsamples without duplicates.
+        let coarse = TuneGrid {
+            min_split_steps: 2,
+            ..Default::default()
+        };
+        assert_eq!(distinct_split_grid(train.len(), &coarse), vec![2, 4]);
+        assert_eq!(distinct_split_grid(0, &grid), Vec::<usize>::new());
     }
 
     #[test]

@@ -35,7 +35,15 @@ fn pipeline_on_scaled_registry_datasets() {
             _ => panic!("classification expected"),
         }
         assert!(rep.tuned_nodes <= rep.full_nodes, "{name}");
-        assert!(rep.n_settings > 100, "{name}");
+        // Settings = depth sweep + distinct min_split grid values (the
+        // duplicate grid points of small training sets count once).
+        assert_eq!(
+            rep.n_settings,
+            rep.full_depth as usize
+                + udt::tree::tuning::distinct_split_grid(rep.n_train, &TuneGrid::default()).len(),
+            "{name}"
+        );
+        assert!(rep.n_settings > rep.full_depth as usize, "{name}");
     }
 }
 
@@ -66,10 +74,22 @@ fn pipeline_honors_a_custom_tune_grid() {
     };
     let rep_small = run_pipeline(&ds, &cfg, &small_grid, 1).unwrap();
     let rep_default = run_pipeline(&ds, &cfg, &TuneGrid::default(), 1).unwrap();
-    // Settings = depth sweep + (steps + 1) min_split probes.
+    // Grid size drives the number of evaluated settings — but only up
+    // to the distinct integer min_split values it can reach (duplicate
+    // grid points are swept once, so a 200-step grid over a small
+    // training set no longer inflates the count).
+    let small_probes = udt::tree::tuning::distinct_split_grid(rep_small.n_train, &small_grid);
+    let default_probes =
+        udt::tree::tuning::distinct_split_grid(rep_default.n_train, &TuneGrid::default());
+    assert!(
+        default_probes.len() > small_probes.len(),
+        "finer grid must probe more distinct settings ({} vs {})",
+        default_probes.len(),
+        small_probes.len()
+    );
     assert_eq!(
         rep_default.n_settings - rep_small.n_settings,
-        200 - 10,
+        default_probes.len() - small_probes.len(),
         "grid size must drive the number of evaluated settings"
     );
 }

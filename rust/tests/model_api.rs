@@ -1,8 +1,9 @@
-//! The unified model surface, end to end: serde round-trips of all three
+//! The unified model surface, end to end: serde round-trips of all four
 //! `Model` variants (schema + interner included), TCP serving of a tuned
-//! tree and a forest (single, batch, named-registry and stats requests
-//! over the wire), and builder validation (bad configs are typed errors,
-//! not panics). Serving runs on the compiled inference path throughout.
+//! tree, a forest and a boosted ensemble (single, batch, named-registry
+//! and stats requests over the wire), and builder validation (bad
+//! configs are typed errors, not panics). Serving runs on the compiled
+//! inference path throughout.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -13,7 +14,7 @@ use udt::data::synth::{generate_any, generate_classification, SynthSpec};
 use udt::data::value::Value;
 use udt::tree::tuning::{tune, TuneGrid};
 use udt::util::json::Json;
-use udt::{Estimator, Forest, Model, SavedModel, Tree, Udt, UdtError};
+use udt::{Boosted, BoostedConfig, Estimator, Forest, Model, SavedModel, Tree, Udt, UdtError};
 
 fn hybrid_ds() -> udt::Dataset {
     let mut spec = SynthSpec::classification("mapi", 1200, 6, 3);
@@ -39,13 +40,21 @@ fn round_trip(saved: &SavedModel) -> SavedModel {
 }
 
 #[test]
-fn all_three_model_variants_round_trip_with_schema_and_interner() {
+fn all_four_model_variants_round_trip_with_schema_and_interner() {
     let ds = hybrid_ds();
     let tree = Udt::builder().fit(&ds).unwrap();
     let (train, val, _) = ds.split_indices(0.8, 0.1, 7);
     let full = Tree::fit_rows(&ds, &train, &Udt::builder().build().unwrap()).unwrap();
     let tuned = tune(&full, &ds, &val, train.len(), &TuneGrid::default()).unwrap();
     let forest = Forest::builder().n_trees(4).fit(&ds).unwrap();
+    let boosted = Boosted::fit(
+        &ds,
+        &BoostedConfig {
+            n_rounds: 5,
+            ..Default::default()
+        },
+    )
+    .unwrap();
 
     let variants = [
         SavedModel::new(Model::SingleTree(tree), &ds),
@@ -58,6 +67,7 @@ fn all_three_model_variants_round_trip_with_schema_and_interner() {
             &ds,
         ),
         SavedModel::new(Model::Forest(forest), &ds),
+        SavedModel::new(Model::Boosted(boosted), &ds),
     ];
 
     for saved in &variants {
@@ -201,6 +211,44 @@ fn tcp_serving_a_forest_loaded_from_json() {
         let model = stats.get("models").unwrap().get("default").unwrap();
         assert_eq!(model.get("kind").unwrap().as_str().unwrap(), "forest");
         assert!(model.get("nodes").unwrap().as_f64().unwrap() > 0.0);
+    });
+}
+
+#[test]
+fn tcp_serving_a_boosted_ensemble_loaded_from_json() {
+    let ds = hybrid_ds();
+    assert_eq!(ds.sort_index_builds(), 0);
+    let boosted = Boosted::fit(
+        &ds,
+        &BoostedConfig {
+            n_rounds: 6,
+            subsample: 0.9,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // A full multi-round (6 × 3 one-vs-rest channels = 18 trees) boost
+    // run sorts each column exactly once.
+    assert_eq!(ds.sort_index_builds(), 1);
+    assert_eq!(boosted.trees.len(), 18);
+    let saved = round_trip(&SavedModel::new(Model::Boosted(boosted), &ds));
+    let local = saved.clone();
+
+    with_tcp_server(saved, |stream, reader| {
+        for r in [2usize, 55, 431] {
+            let resp = request(stream, reader, &json_cells(&ds, r));
+            assert_eq!(resp, expected_response(&local, &ds, r), "row {r}");
+        }
+        let batch = format!("[{},{}]", json_cells(&ds, 4), json_cells(&ds, 5));
+        let parsed = Json::parse(&request(stream, reader, &batch)).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 2);
+        // Stats identify the boosted family and its round count.
+        let stats = Json::parse(&request(stream, reader, "\"stats\"")).unwrap();
+        let model = stats.get("models").unwrap().get("default").unwrap();
+        assert_eq!(model.get("kind").unwrap().as_str().unwrap(), "boosted");
+        assert_eq!(model.get("rounds").unwrap().as_f64().unwrap(), 6.0);
+        assert_eq!(model.get("trees").unwrap().as_f64().unwrap(), 18.0);
+        assert!(model.get("predictions").unwrap().as_f64().unwrap() >= 5.0);
     });
 }
 

@@ -1,15 +1,16 @@
 //! Property suite for the compiled inference path: on random hybrid
 //! frames (numeric / categorical / missing / **unseen-string** cells),
 //! `CompiledModel::predict_frame` must be prediction-for-prediction
-//! identical to the boxed-node `predict_row` oracle, for all three model
-//! families — and invariant to the worker-thread count.
+//! identical to the boxed-node `predict_row` oracle, for all four model
+//! families (single tree, tuned tree, forest, boosted) — and invariant
+//! to the worker-thread count.
 
 use udt::data::synth::{generate_any, SynthSpec};
 use udt::data::value::Value;
 use udt::inference::{Cell, RowFrameBuilder};
 use udt::util::prop::{check, ensure, ensure_close, Config};
 use udt::util::rng::Rng;
-use udt::{Forest, Model, SavedModel, Udt};
+use udt::{Boosted, BoostedConfig, Forest, Model, SavedModel, Udt};
 
 /// One generated request cell: what goes into the frame, and what the
 /// boxed oracle must see for it (unseen strings behave exactly like
@@ -122,6 +123,17 @@ fn compiled_frame_predictions_match_boxed_oracle_for_all_families() {
                 .seed(rng.next_u64())
                 .fit(&ds)
                 .map_err(|e| format!("train forest: {e}"))?;
+            let boosted = Boosted::fit(
+                &ds,
+                &BoostedConfig {
+                    n_rounds: rng.range(2, 6),
+                    max_depth: rng.range(2, 5),
+                    subsample: rng.f64_range(0.5, 1.0),
+                    seed: rng.next_u64(),
+                    ..Default::default()
+                },
+            )
+            .map_err(|e| format!("train boosted: {e}"))?;
             let families = [
                 Model::SingleTree(tree.clone()),
                 Model::TunedTree {
@@ -130,6 +142,7 @@ fn compiled_frame_predictions_match_boxed_oracle_for_all_families() {
                     min_split: rng.range(0, 40),
                 },
                 Model::Forest(forest),
+                Model::Boosted(boosted),
             ];
 
             let (cells_rows, oracle_rows) = random_request(rng, &ds, 40 + size * 4);
