@@ -1,0 +1,215 @@
+//! Serving-layer latency & throughput under mostly-idle connection load:
+//! the epoll reactor backend vs the thread-per-connection fallback.
+//!
+//! For each backend × connection tier (1, 100, 10k by default), the
+//! bench starts a fresh server, ramps up `tier − 1` idle-but-live
+//! connections (each ping-verified, so the server has really registered
+//! it), then measures sequential single-row request latency on one
+//! active connection: p50/p99 per request plus req/s over the whole run.
+//! The point of the idle crowd is that it is *not* free on the threads
+//! backend (one parked OS thread each) while the reactor carries it as
+//! a few hundred bytes of state per connection.
+//!
+//! Writes `BENCH_serve.json` at the repository root (or
+//! `$UDT_BENCH_DIR`) so the serve-path trajectory is tracked
+//! PR-over-PR:
+//!
+//!   cargo bench --bench serve
+//!
+//! UDT_BENCH_SCALE scales the connection tiers and the request count
+//! (CI smoke runs tiny tiers); the fd rlimit is raised best-effort
+//! before the 10k tier.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+use udt::bench_support::{write_bench_json, BenchConfig, Measurement, Table};
+use udt::coordinator::reactor;
+use udt::coordinator::serve::{ServeBackend, ServeConfig, Server};
+use udt::data::synth::{generate_classification, SynthSpec};
+use udt::util::json::Json;
+use udt::util::timer::Timer;
+use udt::{Model, SavedModel, Udt};
+
+const TIERS: [usize; 3] = [1, 100, 10_000];
+const REQUEST_LINE: &str = "[1.0, 2.0, 3.0, 4.0]";
+
+fn saved_model() -> SavedModel {
+    let mut spec = SynthSpec::classification("serve_bench", 2_000, 4, 3);
+    spec.cat_frac = 0.25;
+    let ds = generate_classification(&spec, 42);
+    let tree = Udt::builder().fit(&ds).expect("train tree");
+    SavedModel::new(Model::SingleTree(tree), &ds)
+}
+
+struct Case {
+    backend: &'static str,
+    tier: usize,
+    achieved: usize,
+    requests: usize,
+    p50_ms: f64,
+    p99_ms: f64,
+    req_per_sec: f64,
+}
+
+/// Ping-verified connection: the server has accepted and registered it.
+fn connect_verified(addr: std::net::SocketAddr) -> std::io::Result<TcpStream> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    stream.write_all(b"ping\n")?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    if line.trim() != "\"pong\"" {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("bad ping reply: {line:?}"),
+        ));
+    }
+    Ok(stream)
+}
+
+fn run_case(backend: ServeBackend, tier: usize, n_requests: usize) -> Case {
+    let server = Server::new(saved_model()).expect("server");
+    let cfg = ServeConfig {
+        backend,
+        max_connections: tier + 64,
+        ..Default::default()
+    };
+    let (tx, rx) = mpsc::channel();
+    let s2 = Arc::clone(&server);
+    let handle = std::thread::spawn(move || {
+        s2.serve_with(cfg, "127.0.0.1:0", |addr| tx.send(addr).unwrap())
+            .expect("serve");
+    });
+    let addr = rx.recv().unwrap();
+
+    // The idle crowd. Failures (fd limits, kernel backlog) degrade the
+    // tier rather than killing the bench; the achieved count is reported
+    // so a partial ramp is visible in the artifact, never silent.
+    let mut idle = Vec::with_capacity(tier.saturating_sub(1));
+    for _ in 1..tier {
+        match connect_verified(addr) {
+            Ok(s) => idle.push(s),
+            Err(e) => {
+                eprintln!(
+                    "  ramp stopped at {} connections: {e}",
+                    idle.len() + 1
+                );
+                break;
+            }
+        }
+    }
+
+    // The one active connection, measured request-by-request.
+    let achieved = idle.len() + 1;
+    let mut active = connect_verified(addr).expect("active connection");
+    let mut reader = BufReader::new(active.try_clone().expect("clone"));
+    let mut line = String::new();
+    let mut runs = Vec::with_capacity(n_requests);
+    let total = Timer::start();
+    for _ in 0..n_requests {
+        let t = Timer::start();
+        active.write_all(REQUEST_LINE.as_bytes()).expect("write");
+        active.write_all(b"\n").expect("write");
+        line.clear();
+        reader.read_line(&mut line).expect("read");
+        runs.push(t.ms());
+        assert!(!line.contains("error"), "request failed: {line}");
+    }
+    let total_ms = total.ms();
+
+    active.write_all(b"\"shutdown\"\n").expect("shutdown");
+    line.clear();
+    reader.read_line(&mut line).expect("bye");
+    handle.join().expect("serve thread");
+    drop(idle);
+
+    let m = Measurement {
+        name: format!("{}@{}", backend.name(), tier),
+        runs,
+    };
+    Case {
+        backend: backend.name(),
+        tier,
+        achieved,
+        requests: n_requests,
+        p50_ms: m.percentile_ms(0.5),
+        p99_ms: m.percentile_ms(0.99),
+        req_per_sec: n_requests as f64 / (total_ms / 1e3).max(1e-9),
+    }
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    match reactor::raise_nofile_limit() {
+        Ok(lim) => eprintln!("serve bench: fd limit {lim}"),
+        Err(e) => eprintln!("serve bench: could not raise fd limit ({e})"),
+    }
+    let backends: Vec<ServeBackend> = if reactor::SUPPORTED {
+        vec![ServeBackend::Threads, ServeBackend::Reactor]
+    } else {
+        vec![ServeBackend::Threads]
+    };
+    let tiers: Vec<usize> = TIERS
+        .iter()
+        .map(|&t| ((t as f64 * cfg.scale).round() as usize).max(1))
+        .collect();
+    let n_requests = ((2_000.0 * cfg.scale) as usize).max(200);
+    eprintln!(
+        "serve bench: tiers {tiers:?}, {n_requests} requests per case \
+         (UDT_BENCH_SCALE to change)"
+    );
+
+    let mut table = Table::new(&[
+        "backend",
+        "conns",
+        "achieved",
+        "p50(ms)",
+        "p99(ms)",
+        "req/s",
+    ]);
+    let mut json_rows: Vec<Json> = Vec::new();
+    for &backend in &backends {
+        for &tier in &tiers {
+            eprintln!("case {} @ {} connections...", backend.name(), tier);
+            let case = run_case(backend, tier, n_requests);
+            table.row(vec![
+                case.backend.to_string(),
+                case.tier.to_string(),
+                case.achieved.to_string(),
+                format!("{:.3}", case.p50_ms),
+                format!("{:.3}", case.p99_ms),
+                format!("{:.0}", case.req_per_sec),
+            ]);
+            json_rows.push(Json::obj(vec![
+                ("backend", Json::Str(case.backend.to_string())),
+                ("idle_conns", Json::Num(case.tier as f64)),
+                ("achieved_conns", Json::Num(case.achieved as f64)),
+                ("requests", Json::Num(case.requests as f64)),
+                ("p50_ms", Json::Num(case.p50_ms)),
+                ("p99_ms", Json::Num(case.p99_ms)),
+                ("req_per_sec", Json::Num(case.req_per_sec)),
+            ]));
+        }
+    }
+
+    println!("\n== Serve latency under idle connection load ==");
+    println!("{}", table.render());
+
+    let artifact = Json::obj(vec![
+        ("bench", Json::Str("serve".into())),
+        (
+            "tiers",
+            Json::Arr(tiers.iter().map(|&t| Json::Num(t as f64)).collect()),
+        ),
+        ("requests_per_case", Json::Num(n_requests as f64)),
+        ("measured", Json::Bool(true)),
+        ("cases", Json::Arr(json_rows)),
+    ]);
+    match write_bench_json("serve", &artifact) {
+        Ok(p) => eprintln!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write bench artifact: {e}"),
+    }
+}

@@ -15,8 +15,12 @@
 //!   `forest.seed` — ensemble knobs ([`ForestConfig`]);
 //! * `boost.n_rounds`, `boost.learning_rate`, `boost.max_depth`,
 //!   `boost.subsample`, `boost.seed` — gradient-boosting knobs
-//!   ([`BoostedConfig`]).
+//!   ([`BoostedConfig`]);
+//! * `serve.backend`, `serve.max_connections`, `serve.max_request_bytes`,
+//!   `serve.max_write_buffer_bytes` — prediction-server backend and
+//!   limits ([`ServeConfig`]).
 
+use crate::coordinator::serve::{ServeBackend, ServeConfig};
 use crate::tree::boost::BoostedConfig;
 use crate::tree::forest::ForestConfig;
 use crate::tree::tuning::TuneGrid;
@@ -193,6 +197,32 @@ impl Config {
             n_threads,
         })
     }
+
+    /// Prediction-server backend and limits from the `serve.*` keys.
+    /// (Zero-value limits are rejected later by `ServeConfig::validate`,
+    /// at serve time, alongside CLI overrides.)
+    pub fn serve_config(&self) -> Result<ServeConfig, ConfigError> {
+        let defaults = ServeConfig::default();
+        let backend = match self.get("serve.backend") {
+            None => defaults.backend,
+            Some(v) => ServeBackend::parse(v).ok_or_else(|| {
+                ConfigError(format!(
+                    "serve.backend: `{v}` is not a backend (expected `reactor` or `threads`)"
+                ))
+            })?,
+        };
+        Ok(ServeConfig {
+            backend,
+            max_connections: self
+                .get_usize("serve.max_connections", defaults.max_connections)?,
+            max_request_bytes: self
+                .get_usize("serve.max_request_bytes", defaults.max_request_bytes)?,
+            max_write_buffer_bytes: self.get_usize(
+                "serve.max_write_buffer_bytes",
+                defaults.max_write_buffer_bytes,
+            )?,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -297,5 +327,33 @@ mod tests {
         let mut bad = Config::new();
         bad.set_kv("boost.learning_rate=fast").unwrap();
         assert!(bad.boost_config(1).is_err());
+    }
+
+    #[test]
+    fn serve_config_from_keys() {
+        let mut cfg = Config::new();
+        cfg.set_kv("serve.backend=threads").unwrap();
+        cfg.set_kv("serve.max_connections=77").unwrap();
+        cfg.set_kv("serve.max_request_bytes=4096").unwrap();
+        let sc = cfg.serve_config().unwrap();
+        assert_eq!(sc.backend, ServeBackend::Threads);
+        assert_eq!(sc.max_connections, 77);
+        assert_eq!(sc.max_request_bytes, 4096);
+        // Untouched knobs keep their defaults.
+        assert_eq!(sc.max_write_buffer_bytes, 8 << 20);
+        // Defaults pick the platform backend.
+        let d = Config::new().serve_config().unwrap();
+        assert_eq!(d.backend, ServeBackend::default_for_platform());
+        assert_eq!(d.max_connections, 10_240);
+    }
+
+    #[test]
+    fn serve_config_rejects_bad_values() {
+        let mut cfg = Config::new();
+        cfg.set_kv("serve.backend=tokio").unwrap();
+        assert!(cfg.serve_config().is_err());
+        let mut cfg = Config::new();
+        cfg.set_kv("serve.max_connections=lots").unwrap();
+        assert!(cfg.serve_config().is_err());
     }
 }

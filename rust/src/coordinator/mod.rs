@@ -5,5 +5,6 @@
 pub mod metrics;
 pub mod parallel;
 pub mod pipeline;
+pub mod reactor;
 pub mod registry;
 pub mod serve;

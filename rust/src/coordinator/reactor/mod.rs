@@ -1,0 +1,522 @@
+//! Epoll readiness-loop serving backend ([`ServeBackend::Reactor`]).
+//!
+//! One thread, one `epoll` instance, 10k+ connections: the reactor
+//! drives nonblocking accept plus a per-connection state machine
+//! (read buffer → line framing → [`Server::handle`] → write buffer)
+//! instead of parking one OS thread per client the way the portable
+//! threads backend does. The protocol brain is shared — both backends
+//! call the same [`Server::handle`] — so responses are byte-identical
+//! across backends (enforced by `tests/serve_parity.rs`).
+//!
+//! Design points, in the order they bite people:
+//!
+//! * **Zero dependencies.** The crate has no `libc`/`mio`/`tokio`, so
+//!   the epoll/pipe/prlimit syscalls are issued directly via
+//!   `core::arch::asm!` in [`sys`]. Sockets stay `std::net` types; raw
+//!   syscalls cover only what `std` cannot express (readiness
+//!   notification, the wakeup pipe, the fd rlimit).
+//! * **Level-triggered discipline.** Interest is recomputed after every
+//!   I/O burst: `EPOLLIN|EPOLLRDHUP` only while the peer's read side is
+//!   open, `EPOLLOUT` only while the write buffer is non-empty. Dropping
+//!   read interest after EOF and write interest after a drain is what
+//!   keeps a level-triggered loop from spinning.
+//! * **Pipelining.** Every complete newline-terminated line in a read
+//!   burst is dispatched; responses accumulate in the write buffer and
+//!   flush together.
+//! * **Backpressure.** Writes go to a per-connection buffer with partial
+//!   -write resumption; a transition from "draining" to "stalled"
+//!   (EPOLLOUT interest added) counts a `backpressure_stalls` stat, and
+//!   a peer that lets the buffer grow past
+//!   [`ServeConfig::max_write_buffer_bytes`] is judged abusive and
+//!   closed.
+//! * **Connection budget.** Accepts past
+//!   [`ServeConfig::max_connections`] get one typed JSON error line and
+//!   an immediate close; fd exhaustion (`EMFILE`/`ENFILE`) pauses the
+//!   listener's interest until a connection closes, instead of
+//!   busy-looping on an accept that can never succeed.
+//! * **Wakeup, not timeouts.** `epoll_pwait` blocks indefinitely; a
+//!   self-wakeup pipe registered in the interest set lets
+//!   [`Server::request_shutdown`] (or the protocol `shutdown` line)
+//!   interrupt it immediately — shutdown latency is syscall-scale, not
+//!   tick-scale.
+//!
+//! [`ServeBackend::Reactor`]: crate::coordinator::serve::ServeBackend
+//! [`Server::handle`]: crate::coordinator::serve::Server::handle
+//! [`Server::request_shutdown`]: crate::coordinator::serve::Server::request_shutdown
+//! [`ServeConfig::max_write_buffer_bytes`]: crate::coordinator::serve::ServeConfig
+//! [`ServeConfig::max_connections`]: crate::coordinator::serve::ServeConfig
+
+use crate::coordinator::serve::{Server, ServeConfig};
+use crate::error::Result;
+use std::net::TcpListener;
+use std::sync::Arc;
+
+/// Whether the reactor backend exists on this target. Gates the default
+/// backend choice and every platform-specific module below.
+pub const SUPPORTED: bool = cfg!(all(
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+));
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub mod sys;
+
+/// Run the epoll event loop until shutdown. On unsupported targets this
+/// returns a typed error directing the caller to `--backend threads`.
+pub fn run(server: &Arc<Server>, listener: TcpListener, cfg: &ServeConfig) -> Result<()> {
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        imp::run(server, listener, cfg)
+    }
+    #[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+    {
+        let _ = (server, listener, cfg);
+        Err(crate::error::UdtError::runtime(
+            "the reactor serve backend requires Linux on x86_64/aarch64; use --backend threads",
+        ))
+    }
+}
+
+/// Raise the process's soft fd limit to its hard limit (the serve bench
+/// calls this before opening 10k+ sockets). `Unsupported` off-Linux.
+pub fn raise_nofile_limit() -> std::io::Result<u64> {
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        sys::raise_nofile_limit()
+    }
+    #[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+    {
+        Err(std::io::Error::from(std::io::ErrorKind::Unsupported))
+    }
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod imp {
+    use super::sys;
+    use crate::coordinator::serve::{over_budget_line, oversize_line, Server, ServeConfig};
+    use crate::error::Result;
+    use std::collections::HashMap;
+    use std::io::{self, Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::AsRawFd;
+    use std::sync::Arc;
+
+    const TOKEN_LISTENER: u64 = 0;
+    const TOKEN_WAKE: u64 = 1;
+    /// First token handed to an accepted connection.
+    const TOKEN_BASE: u64 = 2;
+    /// Readiness reports drained per `epoll_pwait`.
+    const EVENTS_CAP: usize = 256;
+    /// Read scratch size; also the per-`read` ceiling.
+    const SCRATCH_BYTES: usize = 16 * 1024;
+    /// Fairness bounds: how much one readiness report may consume before
+    /// the loop moves on (level-triggered epoll re-reports leftovers).
+    const MAX_READS_PER_EVENT: usize = 16;
+    const MAX_ACCEPTS_PER_EVENT: usize = 1024;
+
+    /// Per-connection state machine.
+    struct Conn {
+        stream: TcpStream,
+        /// Bytes received but not yet framed into a complete line.
+        read_buf: Vec<u8>,
+        /// Queued response bytes; `written` of them are already on the
+        /// wire (partial-write resumption).
+        write_buf: Vec<u8>,
+        written: usize,
+        /// Interest bits currently registered with epoll.
+        registered: u32,
+        /// False once the peer EOFs — read interest is dropped so the
+        /// level-triggered loop stops reporting a readability it would
+        /// never consume.
+        read_open: bool,
+    }
+
+    impl Conn {
+        fn pending(&self) -> usize {
+            self.write_buf.len() - self.written
+        }
+
+        fn queue(&mut self, resp: String) {
+            self.write_buf.extend_from_slice(resp.as_bytes());
+            self.write_buf.push(b'\n');
+        }
+
+        /// Nothing left to do: peer done sending, buffer drained.
+        fn done(&self) -> bool {
+            !self.read_open && self.pending() == 0
+        }
+    }
+
+    enum LineOutcome {
+        Ok,
+        /// An oversized line was answered with a typed error; stop
+        /// reading and close once the response flushes.
+        CloseAfterFlush,
+    }
+
+    pub fn run(server: &Arc<Server>, listener: TcpListener, cfg: &ServeConfig) -> Result<()> {
+        listener.set_nonblocking(true)?;
+        let ep = sys::Epoll::new()?;
+        let wake = sys::WakePipe::new()?;
+        ep.add(listener.as_raw_fd(), sys::EPOLLIN, TOKEN_LISTENER)?;
+        ep.add(wake.read_fd(), sys::EPOLLIN, TOKEN_WAKE)?;
+        let writer = wake.writer();
+        server.set_waker(Box::new(move || writer.wake()));
+        Reactor {
+            server,
+            cfg,
+            listener,
+            ep,
+            wake,
+            conns: HashMap::new(),
+            next_token: TOKEN_BASE,
+            listener_paused: false,
+            closed_since_pause: false,
+            scratch: vec![0u8; SCRATCH_BYTES],
+        }
+        .event_loop()
+    }
+
+    struct Reactor<'a> {
+        server: &'a Arc<Server>,
+        cfg: &'a ServeConfig,
+        listener: TcpListener,
+        ep: sys::Epoll,
+        wake: sys::WakePipe,
+        conns: HashMap<u64, Conn>,
+        next_token: u64,
+        /// Listener interest withdrawn after `EMFILE`/`ENFILE`.
+        listener_paused: bool,
+        /// At least one connection closed since the pause, so an accept
+        /// can succeed again.
+        closed_since_pause: bool,
+        scratch: Vec<u8>,
+    }
+
+    impl Reactor<'_> {
+        fn event_loop(&mut self) -> Result<()> {
+            let mut events = [sys::EpollEvent::zeroed(); EVENTS_CAP];
+            loop {
+                let n = self.ep.wait(&mut events, -1)?;
+                for ev in events.iter().take(n) {
+                    // Copy out of the (possibly packed) kernel struct.
+                    let (bits, token) = (ev.events, ev.data);
+                    match token {
+                        TOKEN_LISTENER => self.accept_burst()?,
+                        TOKEN_WAKE => self.wake.drain(),
+                        token => self.conn_event(token, bits),
+                    }
+                    if self.server.shutting_down() {
+                        break;
+                    }
+                }
+                if self.server.shutting_down() {
+                    self.final_flush();
+                    return Ok(());
+                }
+                self.maybe_resume_listener()?;
+            }
+        }
+
+        /// Accept until the backlog is drained (or a fairness bound).
+        fn accept_burst(&mut self) -> Result<()> {
+            for _ in 0..MAX_ACCEPTS_PER_EVENT {
+                match self.listener.accept() {
+                    Ok((stream, _)) => {
+                        self.server.net().inc_accepted();
+                        if self.conns.len() >= self.cfg.max_connections {
+                            self.server.net().inc_rejected();
+                            self.reject(stream);
+                            continue;
+                        }
+                        // Registration failure (e.g. a racing close of
+                        // the fd) just drops this one connection.
+                        let _ = self.register(stream);
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(()),
+                    Err(e)
+                        if e.kind() == io::ErrorKind::Interrupted
+                            || e.kind() == io::ErrorKind::ConnectionAborted =>
+                    {
+                        continue
+                    }
+                    Err(e) if is_fd_exhaustion(&e) => {
+                        // Nothing to accept *with*: withdraw listener
+                        // interest until some fd frees up, or the
+                        // level-triggered report would spin the loop.
+                        self.pause_listener()?;
+                        return Ok(());
+                    }
+                    Err(e) => {
+                        // A structurally broken listener: shut down so
+                        // serve_with() surfaces the error instead of
+                        // leaving clients wedged on a dead loop.
+                        self.server.request_shutdown();
+                        return Err(e.into());
+                    }
+                }
+            }
+            Ok(())
+        }
+
+        /// Over-budget rejection: one best-effort typed error line, then
+        /// the socket drops. Nonblocking, so a peer that never reads
+        /// cannot stall the accept loop.
+        fn reject(&self, stream: TcpStream) {
+            let _ = stream.set_nonblocking(true);
+            let mut line = over_budget_line(self.cfg.max_connections).into_bytes();
+            line.push(b'\n');
+            if let Ok(n) = (&mut &stream).write(&line) {
+                self.server.net().add_bytes_out(n as u64);
+            }
+        }
+
+        fn register(&mut self, stream: TcpStream) -> io::Result<()> {
+            stream.set_nonblocking(true)?;
+            // Response lines are small; don't let Nagle hold them back.
+            let _ = stream.set_nodelay(true);
+            let token = self.next_token;
+            self.next_token += 1;
+            let want = sys::EPOLLIN | sys::EPOLLRDHUP;
+            self.ep.add(stream.as_raw_fd(), want, token)?;
+            self.server.net().conn_opened();
+            self.conns.insert(
+                token,
+                Conn {
+                    stream,
+                    read_buf: Vec::new(),
+                    write_buf: Vec::new(),
+                    written: 0,
+                    registered: want,
+                    read_open: true,
+                },
+            );
+            Ok(())
+        }
+
+        fn conn_event(&mut self, token: u64, bits: u32) {
+            // Taking the connection out of the map sidesteps aliasing
+            // with the reactor's own fields and makes close the default.
+            let Some(mut conn) = self.conns.remove(&token) else {
+                return;
+            };
+            let alive = self.drive(&mut conn, bits);
+            if !alive || conn.done() {
+                self.close_conn(conn);
+                return;
+            }
+            match self.update_interest(token, &mut conn) {
+                Ok(()) => {
+                    self.conns.insert(token, conn);
+                }
+                Err(_) => self.close_conn(conn),
+            }
+        }
+
+        /// One readiness report: read burst, then flush. Returns false
+        /// when the connection should close now.
+        fn drive(&mut self, conn: &mut Conn, bits: u32) -> bool {
+            if bits & (sys::EPOLLERR | sys::EPOLLHUP) != 0 {
+                return false;
+            }
+            if conn.read_open
+                && bits & (sys::EPOLLIN | sys::EPOLLRDHUP) != 0
+                && !self.conn_readable(conn)
+            {
+                return false;
+            }
+            if conn.pending() > 0 && !self.try_flush(conn) {
+                return false;
+            }
+            // The backpressure cap: a peer that won't drain its socket
+            // while this much output is queued is abusive — close (the
+            // stat that observes the stall itself is counted at the
+            // EPOLLOUT transition in `update_interest`).
+            conn.pending() <= self.cfg.max_write_buffer_bytes
+        }
+
+        /// Bounded read burst. Returns false on a fatal connection error.
+        fn conn_readable(&mut self, conn: &mut Conn) -> bool {
+            for _ in 0..MAX_READS_PER_EVENT {
+                match conn.stream.read(&mut self.scratch) {
+                    Ok(0) => {
+                        conn.read_open = false;
+                        // Peer EOF: a final unterminated line may remain.
+                        self.finish_trailing_line(conn);
+                        return true;
+                    }
+                    Ok(n) => {
+                        self.server.net().add_bytes_in(n as u64);
+                        conn.read_buf.extend_from_slice(&self.scratch[..n]);
+                        match self.process_lines(conn) {
+                            LineOutcome::Ok => {}
+                            LineOutcome::CloseAfterFlush => {
+                                conn.read_open = false;
+                                return true;
+                            }
+                        }
+                        if self.server.shutting_down() {
+                            return true;
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => return true,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => return false,
+                }
+            }
+            // Fairness bound hit mid-stream; level-triggered epoll will
+            // re-report the leftover readability next iteration.
+            true
+        }
+
+        /// Dispatch every complete line in `read_buf` (pipelining),
+        /// leaving any trailing partial line — which may end mid-UTF-8
+        /// sequence — buffered for the next read.
+        fn process_lines(&mut self, conn: &mut Conn) -> LineOutcome {
+            let mut start = 0usize;
+            while let Some(pos) = conn.read_buf[start..].iter().position(|&b| b == b'\n') {
+                let end = start + pos;
+                if end - start > self.cfg.max_request_bytes {
+                    conn.read_buf.clear();
+                    conn.queue(oversize_line(self.cfg.max_request_bytes));
+                    return LineOutcome::CloseAfterFlush;
+                }
+                let line = String::from_utf8_lossy(&conn.read_buf[start..end]).into_owned();
+                start = end + 1;
+                if !line.trim().is_empty() {
+                    let resp = self.server.handle(&line);
+                    conn.queue(resp);
+                }
+                // Stop dispatching once a shutdown (this line or another
+                // thread) is in flight, or the peer is already abusive.
+                if self.server.shutting_down()
+                    || conn.pending() > self.cfg.max_write_buffer_bytes
+                {
+                    break;
+                }
+            }
+            conn.read_buf.drain(..start);
+            if conn.read_buf.len() > self.cfg.max_request_bytes {
+                // The partial line alone already exceeds the cap — no
+                // need to wait for its newline to reject it.
+                conn.read_buf.clear();
+                conn.queue(oversize_line(self.cfg.max_request_bytes));
+                return LineOutcome::CloseAfterFlush;
+            }
+            LineOutcome::Ok
+        }
+
+        /// Peer EOF with an unterminated final line buffered: answer it,
+        /// matching the threads backend byte-for-byte.
+        fn finish_trailing_line(&mut self, conn: &mut Conn) {
+            if conn.read_buf.is_empty() {
+                return;
+            }
+            if conn.read_buf.len() > self.cfg.max_request_bytes {
+                conn.read_buf.clear();
+                conn.queue(oversize_line(self.cfg.max_request_bytes));
+                return;
+            }
+            let line = String::from_utf8_lossy(&conn.read_buf).into_owned();
+            conn.read_buf.clear();
+            if !line.trim().is_empty() {
+                let resp = self.server.handle(&line);
+                conn.queue(resp);
+            }
+        }
+
+        /// Write until drained or the kernel buffer fills. Returns false
+        /// on a fatal connection error.
+        fn try_flush(&mut self, conn: &mut Conn) -> bool {
+            while conn.pending() > 0 {
+                match conn.stream.write(&conn.write_buf[conn.written..]) {
+                    Ok(0) => return false,
+                    Ok(n) => {
+                        conn.written += n;
+                        self.server.net().add_bytes_out(n as u64);
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => return false,
+                }
+            }
+            if conn.pending() == 0 {
+                conn.write_buf.clear();
+                conn.written = 0;
+            } else if conn.written > SCRATCH_BYTES {
+                // Compact occasionally so a long-lived slow peer doesn't
+                // pin already-sent bytes forever.
+                conn.write_buf.drain(..conn.written);
+                conn.written = 0;
+            }
+            true
+        }
+
+        /// Recompute the level-triggered interest set after I/O: read
+        /// interest while the peer may still send, write interest only
+        /// while output is queued. The no-write-interest-when-drained
+        /// rule is what makes backpressure observable — adding EPOLLOUT
+        /// *is* the stall transition, and it's counted.
+        fn update_interest(&mut self, token: u64, conn: &mut Conn) -> io::Result<()> {
+            let mut want = 0u32;
+            if conn.read_open {
+                want |= sys::EPOLLIN | sys::EPOLLRDHUP;
+            }
+            if conn.pending() > 0 {
+                want |= sys::EPOLLOUT;
+            }
+            if want != conn.registered {
+                if want & sys::EPOLLOUT != 0 && conn.registered & sys::EPOLLOUT == 0 {
+                    self.server.net().inc_backpressure_stalls();
+                }
+                self.ep.modify(conn.stream.as_raw_fd(), want, token)?;
+                conn.registered = want;
+            }
+            Ok(())
+        }
+
+        fn close_conn(&mut self, conn: Conn) {
+            // Dropping the stream closes the fd, which also deregisters
+            // it from epoll (the fd was never duplicated).
+            drop(conn);
+            self.server.net().conn_closed();
+            self.closed_since_pause = true;
+        }
+
+        fn pause_listener(&mut self) -> io::Result<()> {
+            if !self.listener_paused {
+                self.ep.del(self.listener.as_raw_fd())?;
+                self.listener_paused = true;
+                self.closed_since_pause = false;
+            }
+            Ok(())
+        }
+
+        /// Re-arm the paused listener once a close has freed an fd slot.
+        /// Any backlog still pending is level-triggered-reported on the
+        /// next `epoll_pwait`.
+        fn maybe_resume_listener(&mut self) -> io::Result<()> {
+            if self.listener_paused && self.closed_since_pause {
+                self.ep
+                    .add(self.listener.as_raw_fd(), sys::EPOLLIN, TOKEN_LISTENER)?;
+                self.listener_paused = false;
+            }
+            Ok(())
+        }
+
+        /// Shutdown teardown: one best-effort nonblocking flush per
+        /// connection (so "bye" and already-queued responses reach live
+        /// peers), then everything closes.
+        fn final_flush(&mut self) {
+            let conns = std::mem::take(&mut self.conns);
+            for (_, mut conn) in conns {
+                let _ = self.try_flush(&mut conn);
+                self.server.net().conn_closed();
+            }
+        }
+    }
+
+    fn is_fd_exhaustion(e: &io::Error) -> bool {
+        matches!(e.raw_os_error(), Some(sys::EMFILE) | Some(sys::ENFILE))
+    }
+}

@@ -1,0 +1,426 @@
+//! Thin `unsafe` wrappers over the handful of Linux syscalls the reactor
+//! needs: `epoll_create1` / `epoll_ctl` / `epoll_pwait`, `pipe2` for the
+//! self-wakeup channel, and `prlimit64` so the serve bench can lift the
+//! fd ceiling before opening 10k+ sockets.
+//!
+//! The crate is dependency-free (no `libc`), so syscalls are issued with
+//! raw `syscall`/`svc` instructions through `core::arch::asm!` using the
+//! kernel's stable ABI. Only the Linux x86_64 and aarch64 ABIs are wired
+//! up; [`super::SUPPORTED`] gates everything else to the portable
+//! thread-per-connection backend. Sockets themselves stay `std::net`
+//! types — raw syscalls cover exactly what `std` cannot express
+//! (readiness notification and the wakeup pipe).
+//!
+//! Every wrapper returns `std::io::Result`, mapping the kernel's
+//! negative-errno convention through [`std::io::Error::from_raw_os_error`]
+//! so callers match on `ErrorKind` exactly as they do for `std` I/O.
+
+use std::io;
+
+#[cfg(target_arch = "x86_64")]
+mod nr {
+    pub const READ: i64 = 0;
+    pub const WRITE: i64 = 1;
+    pub const CLOSE: i64 = 3;
+    pub const EPOLL_CTL: i64 = 233;
+    pub const EPOLL_PWAIT: i64 = 281;
+    pub const EPOLL_CREATE1: i64 = 291;
+    pub const PIPE2: i64 = 293;
+    pub const PRLIMIT64: i64 = 302;
+}
+
+#[cfg(target_arch = "aarch64")]
+mod nr {
+    pub const EPOLL_CREATE1: i64 = 20;
+    pub const EPOLL_CTL: i64 = 21;
+    pub const EPOLL_PWAIT: i64 = 22;
+    pub const CLOSE: i64 = 57;
+    pub const PIPE2: i64 = 59;
+    pub const READ: i64 = 63;
+    pub const WRITE: i64 = 64;
+    pub const PRLIMIT64: i64 = 261;
+}
+
+/// Issue a raw 6-argument syscall (unused trailing arguments are 0).
+///
+/// # Safety
+/// The caller must uphold the invariants of the specific syscall: valid
+/// pointers with correct lengths, owned fds, etc. The asm block itself
+/// only clobbers what the kernel ABI documents.
+#[cfg(target_arch = "x86_64")]
+unsafe fn syscall6(n: i64, a1: i64, a2: i64, a3: i64, a4: i64, a5: i64, a6: i64) -> i64 {
+    let ret: i64;
+    core::arch::asm!(
+        "syscall",
+        inlateout("rax") n => ret,
+        in("rdi") a1,
+        in("rsi") a2,
+        in("rdx") a3,
+        in("r10") a4,
+        in("r8") a5,
+        in("r9") a6,
+        lateout("rcx") _,
+        lateout("r11") _,
+        options(nostack),
+    );
+    ret
+}
+
+/// Issue a raw 6-argument syscall (unused trailing arguments are 0).
+///
+/// # Safety
+/// See the x86_64 variant; same contract under the aarch64 `svc 0` ABI.
+#[cfg(target_arch = "aarch64")]
+unsafe fn syscall6(n: i64, a1: i64, a2: i64, a3: i64, a4: i64, a5: i64, a6: i64) -> i64 {
+    let ret: i64;
+    core::arch::asm!(
+        "svc 0",
+        in("x8") n,
+        inlateout("x0") a1 => ret,
+        in("x1") a2,
+        in("x2") a3,
+        in("x3") a4,
+        in("x4") a5,
+        in("x5") a6,
+        options(nostack),
+    );
+    ret
+}
+
+/// Map the kernel's `-errno` return convention to `io::Result`.
+fn check(ret: i64) -> io::Result<i64> {
+    if ret < 0 {
+        Err(io::Error::from_raw_os_error((-ret) as i32))
+    } else {
+        Ok(ret)
+    }
+}
+
+// Readiness bits (linux/eventpoll.h).
+pub const EPOLLIN: u32 = 0x001;
+pub const EPOLLOUT: u32 = 0x004;
+pub const EPOLLERR: u32 = 0x008;
+pub const EPOLLHUP: u32 = 0x010;
+pub const EPOLLRDHUP: u32 = 0x2000;
+
+const EPOLL_CTL_ADD: i64 = 1;
+const EPOLL_CTL_DEL: i64 = 2;
+const EPOLL_CTL_MOD: i64 = 3;
+const EPOLL_CLOEXEC: i64 = 0o2000000;
+const O_NONBLOCK: i64 = 0o4000;
+const O_CLOEXEC: i64 = 0o2000000;
+
+/// Process-table-full / fd-table-full errnos, surfaced to the accept
+/// loop so it can pause the listener instead of spinning on a
+/// level-triggered readiness it cannot consume.
+pub const ENFILE: i32 = 23;
+pub const EMFILE: i32 = 24;
+
+/// `struct epoll_event`. The kernel packs it on x86_64 only (the
+/// `EPOLL_PACKED` attribute in the UAPI header), so the layout attribute
+/// is arch-conditional to match the ABI byte-for-byte.
+#[derive(Clone, Copy)]
+#[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+#[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+pub struct EpollEvent {
+    pub events: u32,
+    /// Caller-chosen token identifying the registered fd.
+    pub data: u64,
+}
+
+impl EpollEvent {
+    pub const fn zeroed() -> EpollEvent {
+        EpollEvent { events: 0, data: 0 }
+    }
+}
+
+/// An owned epoll instance (closed on drop).
+pub struct Epoll {
+    fd: i32,
+}
+
+impl Epoll {
+    pub fn new() -> io::Result<Epoll> {
+        let fd = check(unsafe { syscall6(nr::EPOLL_CREATE1, EPOLL_CLOEXEC, 0, 0, 0, 0, 0) })?;
+        Ok(Epoll { fd: fd as i32 })
+    }
+
+    /// Register `fd` for `events`, tagging readiness reports with `token`.
+    pub fn add(&self, fd: i32, events: u32, token: u64) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, events, token)
+    }
+
+    /// Change the interest set of an already-registered `fd`.
+    pub fn modify(&self, fd: i32, events: u32, token: u64) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, events, token)
+    }
+
+    /// Deregister `fd` (closing an fd deregisters it implicitly; this is
+    /// for keeping a still-open fd out of the interest set).
+    pub fn del(&self, fd: i32) -> io::Result<()> {
+        check(unsafe {
+            syscall6(nr::EPOLL_CTL, self.fd as i64, EPOLL_CTL_DEL, fd as i64, 0, 0, 0)
+        })?;
+        Ok(())
+    }
+
+    fn ctl(&self, op: i64, fd: i32, events: u32, token: u64) -> io::Result<()> {
+        let mut ev = EpollEvent { events, data: token };
+        check(unsafe {
+            syscall6(
+                nr::EPOLL_CTL,
+                self.fd as i64,
+                op,
+                fd as i64,
+                &mut ev as *mut EpollEvent as i64,
+                0,
+                0,
+            )
+        })?;
+        Ok(())
+    }
+
+    /// Block until readiness (`timeout_ms < 0` = indefinitely; the
+    /// reactor relies on the wakeup pipe, not timeouts, to interrupt
+    /// this). Retries transparently on `EINTR`. Returns how many
+    /// leading entries of `events` were filled.
+    pub fn wait(&self, events: &mut [EpollEvent], timeout_ms: i32) -> io::Result<usize> {
+        loop {
+            let ret = unsafe {
+                syscall6(
+                    nr::EPOLL_PWAIT,
+                    self.fd as i64,
+                    events.as_mut_ptr() as i64,
+                    events.len() as i64,
+                    timeout_ms as i64,
+                    0, // no sigmask
+                    8, // sizeof(sigset_t); ignored when the mask is null
+                )
+            };
+            match check(ret) {
+                Ok(n) => return Ok(n as usize),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe {
+            syscall6(nr::CLOSE, self.fd as i64, 0, 0, 0, 0, 0);
+        }
+    }
+}
+
+/// The write end of the self-wakeup pipe. Held (via `Arc`) by the
+/// server's shutdown hook so any thread can interrupt a blocked
+/// [`Epoll::wait`].
+pub struct PipeWriter {
+    fd: i32,
+}
+
+impl PipeWriter {
+    /// Wake the reactor. Best-effort by design: a full pipe means a wake
+    /// is already pending, which is all a waker needs to guarantee.
+    pub fn wake(&self) {
+        let byte = [1u8];
+        unsafe {
+            syscall6(nr::WRITE, self.fd as i64, byte.as_ptr() as i64, 1, 0, 0, 0);
+        }
+    }
+}
+
+impl Drop for PipeWriter {
+    fn drop(&mut self) {
+        unsafe {
+            syscall6(nr::CLOSE, self.fd as i64, 0, 0, 0, 0, 0);
+        }
+    }
+}
+
+/// A nonblocking self-wakeup pipe: the read end lives in the epoll
+/// interest set, the write end is shared with whoever may need to
+/// interrupt the event loop (the server's `shutdown` path).
+pub struct WakePipe {
+    read_fd: i32,
+    writer: std::sync::Arc<PipeWriter>,
+}
+
+impl WakePipe {
+    pub fn new() -> io::Result<WakePipe> {
+        let mut fds = [0i32; 2];
+        check(unsafe {
+            syscall6(
+                nr::PIPE2,
+                fds.as_mut_ptr() as i64,
+                O_NONBLOCK | O_CLOEXEC,
+                0,
+                0,
+                0,
+                0,
+            )
+        })?;
+        Ok(WakePipe {
+            read_fd: fds[0],
+            writer: std::sync::Arc::new(PipeWriter { fd: fds[1] }),
+        })
+    }
+
+    pub fn read_fd(&self) -> i32 {
+        self.read_fd
+    }
+
+    /// A shareable handle to the write end.
+    pub fn writer(&self) -> std::sync::Arc<PipeWriter> {
+        std::sync::Arc::clone(&self.writer)
+    }
+
+    /// Drain pending wake bytes so a level-triggered epoll stops
+    /// reporting the pipe readable.
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        loop {
+            let ret = unsafe {
+                syscall6(
+                    nr::READ,
+                    self.read_fd as i64,
+                    buf.as_mut_ptr() as i64,
+                    buf.len() as i64,
+                    0,
+                    0,
+                    0,
+                )
+            };
+            if ret <= 0 {
+                break;
+            }
+        }
+    }
+}
+
+impl Drop for WakePipe {
+    fn drop(&mut self) {
+        unsafe {
+            syscall6(nr::CLOSE, self.read_fd as i64, 0, 0, 0, 0, 0);
+        }
+    }
+}
+
+const RLIMIT_NOFILE: i64 = 7;
+
+#[repr(C)]
+struct RLimit64 {
+    cur: u64,
+    max: u64,
+}
+
+/// Raise this process's soft open-file limit to its hard limit and
+/// return the resulting soft limit. The serve bench calls this before
+/// opening 10k+ client sockets; failure is non-fatal (the bench then
+/// reports how many connections it actually achieved).
+pub fn raise_nofile_limit() -> io::Result<u64> {
+    let mut old = RLimit64 { cur: 0, max: 0 };
+    check(unsafe {
+        syscall6(
+            nr::PRLIMIT64,
+            0, // self
+            RLIMIT_NOFILE,
+            0, // no new limit: read the current one
+            &mut old as *mut RLimit64 as i64,
+            0,
+            0,
+        )
+    })?;
+    if old.cur >= old.max {
+        return Ok(old.cur);
+    }
+    let new = RLimit64 {
+        cur: old.max,
+        max: old.max,
+    };
+    check(unsafe {
+        syscall6(
+            nr::PRLIMIT64,
+            0,
+            RLIMIT_NOFILE,
+            &new as *const RLimit64 as i64,
+            0,
+            0,
+            0,
+        )
+    })?;
+    Ok(new.cur)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoll_reports_pipe_readability() {
+        let ep = Epoll::new().unwrap();
+        let pipe = WakePipe::new().unwrap();
+        ep.add(pipe.read_fd(), EPOLLIN, 7).unwrap();
+
+        let mut events = [EpollEvent::zeroed(); 8];
+        // Nothing written yet: an immediate poll sees no readiness.
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+
+        pipe.writer().wake();
+        let n = ep.wait(&mut events, 1000).unwrap();
+        assert_eq!(n, 1);
+        let (bits, token) = (events[0].events, events[0].data);
+        assert_eq!(token, 7);
+        assert_ne!(bits & EPOLLIN, 0);
+
+        // Draining clears the level-triggered readiness.
+        pipe.drain();
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn modify_and_del_change_the_interest_set() {
+        let ep = Epoll::new().unwrap();
+        let pipe = WakePipe::new().unwrap();
+        ep.add(pipe.read_fd(), EPOLLIN, 1).unwrap();
+        pipe.writer().wake();
+
+        // Interest moved to a token we can recognize.
+        ep.modify(pipe.read_fd(), EPOLLIN, 2).unwrap();
+        let mut events = [EpollEvent::zeroed(); 8];
+        let n = ep.wait(&mut events, 1000).unwrap();
+        assert_eq!(n, 1);
+        // Copy out of the (possibly packed) struct before asserting:
+        // `assert_eq!` would otherwise take a reference to a packed field.
+        let token = events[0].data;
+        assert_eq!(token, 2);
+
+        // Deregistered: readable but never reported.
+        ep.del(pipe.read_fd()).unwrap();
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn wake_is_best_effort_when_pipe_is_full() {
+        let pipe = WakePipe::new().unwrap();
+        // Saturate the pipe; further wakes must not block or panic.
+        for _ in 0..100_000 {
+            pipe.writer().wake();
+        }
+        pipe.drain();
+        let ep = Epoll::new().unwrap();
+        ep.add(pipe.read_fd(), EPOLLIN, 1).unwrap();
+        let mut events = [EpollEvent::zeroed(); 4];
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn nofile_limit_is_reported() {
+        let lim = raise_nofile_limit().unwrap();
+        assert!(lim > 0);
+        // Idempotent: already at the hard limit.
+        assert_eq!(raise_nofile_limit().unwrap(), lim);
+    }
+}

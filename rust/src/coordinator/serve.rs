@@ -1,7 +1,7 @@
 //! Batch prediction server over a [`ModelRegistry`] of compiled models.
 //!
-//! A small line-oriented TCP protocol (std::net + a worker pool; the
-//! offline image has no tokio). Request lines:
+//! A small line-oriented TCP protocol (std::net only; the offline image
+//! has no tokio). Request lines:
 //!
 //! * `[1.0, "red", null]` — one row of feature cells → one prediction
 //!   (legacy form; resolves to the registry's **default** model);
@@ -18,10 +18,34 @@
 //! Control lines: `"ping"` → `"pong"`, `"models"` → the registry
 //! listing, `"schema"` → the default model's schema (or
 //! `{"schema": "name"}` for any loaded model), `"stats"` →
-//! control/predict counters plus per-model latency & throughput, and
-//! `"shutdown"` stops the listener (idle connections are reaped within a
-//! read-timeout tick, so `serve` actually returns).
+//! control/predict counters, per-model latency & throughput, and the
+//! per-server connection/byte counters, and `"shutdown"` stops the
+//! listener.
+//!
+//! ## Backends
+//!
+//! Two [`ServeBackend`]s sit behind one protocol implementation
+//! ([`Server::handle`]), selected by [`ServeConfig::backend`]
+//! (`serve --backend reactor|threads` on the CLI):
+//!
+//! * [`ServeBackend::Reactor`] — the default on Linux: a single-threaded
+//!   epoll readiness loop ([`crate::coordinator::reactor`]) driving
+//!   nonblocking accept and per-connection state machines. Scales to
+//!   10k+ mostly-idle connections without 10k threads.
+//! * [`ServeBackend::Threads`] — the portable fallback and behavioral
+//!   oracle: one OS thread per connection, blocking I/O with short
+//!   timeout ticks. Byte-identical protocol behavior (enforced by
+//!   `tests/serve_parity.rs`).
+//!
+//! Both backends share the same limits ([`ServeConfig`]): a connection
+//! budget with graceful over-limit rejection, and a per-line
+//! `max_request_bytes` cap answered with a typed JSON error before the
+//! connection closes. Shutdown is wakeup-based in both: the reactor owns
+//! a self-wakeup pipe, the threads backend force-wakes every blocked
+//! client read by shutting its socket down — no multi-tick polling on
+//! the exit path.
 
+use crate::coordinator::reactor;
 use crate::coordinator::registry::{ModelEntry, ModelRegistry};
 use crate::data::value::Value;
 use crate::error::{Result, UdtError};
@@ -30,16 +54,186 @@ use crate::inference::{Cell, RowFrame};
 use crate::model::SavedModel;
 use crate::tree::NodeLabel;
 use crate::util::json::Json;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
-/// How long a client read blocks before re-checking the shutdown flag.
-/// Bounds how long an idle connection can pin the accept scope open.
+/// How long a threads-backend client read blocks before re-checking the
+/// shutdown flag. Since shutdown force-wakes blocked reads, the tick is
+/// only a backstop against missed wakeups, not the shutdown latency.
 const READ_TICK: Duration = Duration::from_millis(50);
+
+/// How a [`Server`] drives its sockets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeBackend {
+    /// One OS thread per connection (portable; the behavioral oracle).
+    Threads,
+    /// Single-threaded epoll readiness loop (Linux; the scalable default).
+    Reactor,
+}
+
+impl ServeBackend {
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Option<ServeBackend> {
+        match s {
+            "threads" => Some(ServeBackend::Threads),
+            "reactor" => Some(ServeBackend::Reactor),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ServeBackend::Threads => "threads",
+            ServeBackend::Reactor => "reactor",
+        }
+    }
+
+    /// The reactor where the platform supports it, threads elsewhere.
+    pub fn default_for_platform() -> ServeBackend {
+        if reactor::SUPPORTED {
+            ServeBackend::Reactor
+        } else {
+            ServeBackend::Threads
+        }
+    }
+}
+
+/// Serving limits and backend selection, shared by both backends.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub backend: ServeBackend,
+    /// Connection budget: accepts past this are answered with a typed
+    /// JSON error line and closed immediately.
+    pub max_connections: usize,
+    /// Per-request-line byte cap (newline excluded). An oversized line
+    /// gets a typed JSON error and the connection is closed.
+    pub max_request_bytes: usize,
+    /// Reactor-only: per-connection pending-write cap. A peer that stops
+    /// draining its socket while this much output is buffered is judged
+    /// abusive and closed (the threads backend blocks the one connection
+    /// thread instead, which is its inherent backpressure).
+    pub max_write_buffer_bytes: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            backend: ServeBackend::default_for_platform(),
+            max_connections: 10_240,
+            max_request_bytes: 1 << 20,
+            max_write_buffer_bytes: 8 << 20,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.max_connections == 0 {
+            return Err(UdtError::invalid_config("serve.max_connections must be >= 1"));
+        }
+        if self.max_request_bytes == 0 {
+            return Err(UdtError::invalid_config("serve.max_request_bytes must be >= 1"));
+        }
+        if self.max_write_buffer_bytes == 0 {
+            return Err(UdtError::invalid_config(
+                "serve.max_write_buffer_bytes must be >= 1",
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Per-server connection & byte counters, reported under `"server"` in
+/// the `stats` response and updated by both backends.
+#[derive(Default)]
+pub struct NetStats {
+    active: AtomicU64,
+    peak: AtomicU64,
+    accepted: AtomicU64,
+    rejected: AtomicU64,
+    closed: AtomicU64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+    backpressure_stalls: AtomicU64,
+}
+
+/// A point-in-time copy of [`NetStats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NetSnapshot {
+    pub active: u64,
+    pub peak: u64,
+    pub accepted: u64,
+    pub rejected: u64,
+    pub closed: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub backpressure_stalls: u64,
+}
+
+impl NetStats {
+    pub(crate) fn conn_opened(&self) {
+        let now = self.active.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    pub(crate) fn conn_closed(&self) {
+        self.active.fetch_sub(1, Ordering::Relaxed);
+        self.closed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn inc_accepted(&self) {
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn inc_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn inc_backpressure_stalls(&self) {
+        self.backpressure_stalls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn add_bytes_in(&self, n: u64) {
+        self.bytes_in.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub(crate) fn add_bytes_out(&self, n: u64) {
+        self.bytes_out.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> NetSnapshot {
+        NetSnapshot {
+            active: self.active.load(Ordering::Relaxed),
+            peak: self.peak.load(Ordering::Relaxed),
+            accepted: self.accepted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            closed: self.closed.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+            backpressure_stalls: self.backpressure_stalls.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The typed error line an over-budget connection receives before being
+/// closed. Shared by both backends so rejection is byte-identical.
+pub(crate) fn over_budget_line(max_connections: usize) -> String {
+    error_json(&UdtError::predict(format!(
+        "connection budget exhausted (max {max_connections} connections)"
+    )))
+}
+
+/// The typed error line an oversized request line receives before its
+/// connection is closed. Shared by both backends.
+pub(crate) fn oversize_line(max_request_bytes: usize) -> String {
+    error_json(&UdtError::predict(format!(
+        "request line exceeds max_request_bytes ({max_request_bytes} bytes)"
+    )))
+}
 
 /// Shared server state: the model registry plus global counters.
 pub struct Server {
@@ -50,6 +244,15 @@ pub struct Server {
     /// Prediction request lines handled (single rows and batches alike).
     predict_requests: AtomicU64,
     shutdown: AtomicBool,
+    net: NetStats,
+    /// Limits in force (set by [`Server::serve_with`]; defaults before).
+    serve_cfg: RwLock<ServeConfig>,
+    /// Which backend is currently serving, for the `stats` report.
+    backend: RwLock<Option<ServeBackend>>,
+    /// Backend-installed hook that interrupts blocked I/O so a shutdown
+    /// takes effect immediately (reactor: self-wakeup pipe; threads:
+    /// force-shutdown of every client socket).
+    waker: Mutex<Option<Box<dyn Fn() + Send + Sync>>>,
 }
 
 impl Server {
@@ -68,12 +271,48 @@ impl Server {
             control_requests: AtomicU64::new(0),
             predict_requests: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
+            net: NetStats::default(),
+            serve_cfg: RwLock::new(ServeConfig::default()),
+            backend: RwLock::new(None),
+            waker: Mutex::new(None),
         })
     }
 
     /// The live registry (models can be loaded / unloaded while serving).
     pub fn registry(&self) -> &ModelRegistry {
         &self.registry
+    }
+
+    /// Per-server connection & byte counters.
+    pub fn net(&self) -> &NetStats {
+        &self.net
+    }
+
+    /// Whether a shutdown has been requested (via the protocol or
+    /// [`Server::request_shutdown`]).
+    pub fn shutting_down(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Stop the server from any thread: sets the flag and fires the
+    /// backend's wakeup hook so blocked I/O notices immediately.
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.wake();
+    }
+
+    pub(crate) fn set_waker(&self, waker: Box<dyn Fn() + Send + Sync>) {
+        *self.waker.lock().unwrap() = Some(waker);
+    }
+
+    pub(crate) fn clear_waker(&self) {
+        *self.waker.lock().unwrap() = None;
+    }
+
+    pub(crate) fn wake(&self) {
+        if let Some(w) = self.waker.lock().unwrap().as_ref() {
+            w();
+        }
     }
 
     /// Render a prediction: class name when the schema knows one.
@@ -137,6 +376,9 @@ impl Server {
                 Err(e) => Json::obj(vec![("error", Json::Str(e.to_string()))]).to_string(),
             }),
             "\"shutdown\"" | "shutdown" => {
+                // Only the flag here: the backend fires its wakeup hook
+                // *after* the "bye" reply is flushed, so the requester
+                // still gets its response before sockets start closing.
                 self.shutdown.store(true, Ordering::SeqCst);
                 Some("\"bye\"".to_string())
             }
@@ -164,6 +406,37 @@ impl Server {
                     .default_name()
                     .map(Json::Str)
                     .unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    /// The `"server"` section of `stats`: backend, limits, connection
+    /// and byte counters.
+    fn server_json(&self) -> Json {
+        let cfg = self.serve_cfg.read().unwrap().clone();
+        let backend = *self.backend.read().unwrap();
+        let net = self.net.snapshot();
+        Json::obj(vec![
+            (
+                "backend",
+                backend.map(|b| Json::Str(b.name().to_string())).unwrap_or(Json::Null),
+            ),
+            ("max_connections", Json::Num(cfg.max_connections as f64)),
+            ("max_request_bytes", Json::Num(cfg.max_request_bytes as f64)),
+            (
+                "max_write_buffer_bytes",
+                Json::Num(cfg.max_write_buffer_bytes as f64),
+            ),
+            ("active_connections", Json::Num(net.active as f64)),
+            ("peak_connections", Json::Num(net.peak as f64)),
+            ("accepted", Json::Num(net.accepted as f64)),
+            ("rejected", Json::Num(net.rejected as f64)),
+            ("closed", Json::Num(net.closed as f64)),
+            ("bytes_in", Json::Num(net.bytes_in as f64)),
+            ("bytes_out", Json::Num(net.bytes_out as f64)),
+            (
+                "backpressure_stalls",
+                Json::Num(net.backpressure_stalls as f64),
             ),
         ])
     }
@@ -230,6 +503,7 @@ impl Server {
                     .map(Json::Str)
                     .unwrap_or(Json::Null),
             ),
+            ("server", self.server_json()),
             ("models", Json::Obj(models)),
         ])
     }
@@ -313,26 +587,81 @@ impl Server {
             .collect())
     }
 
-    /// Serve until a `shutdown` request arrives. Returns the bound address
-    /// through `on_bound` (useful with port 0 in tests).
+    /// Serve with default limits on the platform-default backend until a
+    /// `shutdown` request arrives. Returns the bound address through
+    /// `on_bound` (useful with port 0 in tests).
     pub fn serve(
         self: &Arc<Self>,
         addr: &str,
         on_bound: impl FnOnce(std::net::SocketAddr),
     ) -> Result<()> {
+        self.serve_with(ServeConfig::default(), addr, on_bound)
+    }
+
+    /// Serve on the configured [`ServeBackend`] with explicit limits.
+    pub fn serve_with(
+        self: &Arc<Self>,
+        cfg: ServeConfig,
+        addr: &str,
+        on_bound: impl FnOnce(std::net::SocketAddr),
+    ) -> Result<()> {
+        cfg.validate()?;
         let listener = TcpListener::bind(addr)?;
         on_bound(listener.local_addr()?);
+        *self.serve_cfg.write().unwrap() = cfg.clone();
+        *self.backend.write().unwrap() = Some(cfg.backend);
+        let result = match cfg.backend {
+            ServeBackend::Reactor => reactor::run(self, listener, &cfg),
+            ServeBackend::Threads => self.serve_threads(listener, &cfg),
+        };
+        self.clear_waker();
+        result
+    }
+
+    /// The thread-per-connection backend: nonblocking accept loop plus
+    /// one scoped thread per client.
+    fn serve_threads(self: &Arc<Self>, listener: TcpListener, cfg: &ServeConfig) -> Result<()> {
         listener.set_nonblocking(true)?;
+        // Live client sockets, keyed by connection id. The waker closure
+        // force-shuts every one of them so blocked reads return
+        // immediately on shutdown instead of waiting out a READ_TICK.
+        let conns: Arc<Mutex<HashMap<u64, TcpStream>>> = Arc::default();
+        {
+            let conns = Arc::clone(&conns);
+            self.set_waker(Box::new(move || {
+                for stream in conns.lock().unwrap().values() {
+                    let _ = stream.shutdown(std::net::Shutdown::Both);
+                }
+            }));
+        }
+        let mut next_id = 0u64;
         std::thread::scope(|scope| -> Result<()> {
             loop {
-                if self.shutdown.load(Ordering::SeqCst) {
+                if self.shutting_down() {
                     break;
                 }
                 match listener.accept() {
                     Ok((stream, _)) => {
+                        self.net.inc_accepted();
+                        if self.net.snapshot().active as usize >= cfg.max_connections {
+                            self.net.inc_rejected();
+                            let _ = reject_over_budget(&stream, cfg.max_connections, &self.net);
+                            continue;
+                        }
+                        let Ok(handle) = stream.try_clone() else {
+                            continue;
+                        };
+                        let id = next_id;
+                        next_id += 1;
+                        self.net.conn_opened();
+                        conns.lock().unwrap().insert(id, handle);
                         let server = Arc::clone(self);
+                        let conns = Arc::clone(&conns);
+                        let max_request_bytes = cfg.max_request_bytes;
                         scope.spawn(move || {
-                            let _ = server.client_loop(stream);
+                            let _ = server.client_loop(stream, max_request_bytes);
+                            conns.lock().unwrap().remove(&id);
+                            server.net.conn_closed();
                         });
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -343,7 +672,7 @@ impl Server {
                         // before the error propagates — otherwise an idle
                         // connection would pin serve() open forever with
                         // the error swallowed.
-                        self.shutdown.store(true, Ordering::SeqCst);
+                        self.request_shutdown();
                         return Err(e.into());
                     }
                 }
@@ -352,11 +681,12 @@ impl Server {
         })
     }
 
-    /// One connection. Reads tick every [`READ_TICK`] so an **idle**
-    /// client notices `shutdown` and releases the serve scope (the
-    /// pre-registry server blocked forever here); responses go through a
-    /// `BufWriter` and flush once per line (one syscall, not two).
-    fn client_loop(&self, stream: TcpStream) -> Result<()> {
+    /// One threads-backend connection. Reads are capped at
+    /// `max_request_bytes` per line; responses go through a `BufWriter`
+    /// and flush once per line (one syscall, not two). An **idle** client
+    /// is woken by the shutdown waker (socket force-shutdown → EOF), with
+    /// [`READ_TICK`] as the backstop.
+    fn client_loop(&self, stream: TcpStream, max_request_bytes: usize) -> Result<()> {
         // On BSD-likes an accepted socket inherits the listener's
         // O_NONBLOCK, which would defeat the timeouts below (instant
         // WouldBlock → busy-spin). Force blocking mode first.
@@ -365,22 +695,26 @@ impl Server {
         stream.set_write_timeout(Some(READ_TICK))?;
         let mut writer = BufWriter::new(stream.try_clone()?);
         let mut reader = BufReader::new(stream);
-        // Accumulate raw bytes, not a String: `read_line`'s UTF-8 guard
-        // would *discard* bytes already consumed from the socket when a
-        // timeout tick lands inside a multibyte character; `read_until`
-        // keeps every partial read in the buffer across ticks. UTF-8
-        // conversion happens once per complete line.
+        // Accumulate raw bytes, not a String: a UTF-8 guard would
+        // *discard* bytes already consumed from the socket when a
+        // timeout tick lands inside a multibyte character; the byte
+        // buffer keeps every partial read across ticks. UTF-8 conversion
+        // happens once per complete line.
         let mut buf: Vec<u8> = Vec::new();
         loop {
-            if self.shutdown.load(Ordering::SeqCst) {
+            if self.shutting_down() {
                 break;
             }
-            match reader.read_until(b'\n', &mut buf) {
-                Ok(0) => {
+            match read_step(&mut reader, &mut buf, &self.net)? {
+                ReadStep::Tick => {}
+                ReadStep::Eof => {
                     // Client hung up; a final unterminated line may still
-                    // be buffered (read_until only returns it with the
-                    // EOF read when no timeout tick intervened) — answer
-                    // it like `BufReader::lines` used to.
+                    // be buffered — answer it like `BufReader::lines`
+                    // used to.
+                    if buf.len() > max_request_bytes {
+                        let _ = self.write_line(&mut writer, oversize_line(max_request_bytes));
+                        break;
+                    }
                     let line = String::from_utf8_lossy(&buf);
                     if !line.trim().is_empty() {
                         let resp = self.handle(&line);
@@ -388,18 +722,32 @@ impl Server {
                     }
                     break;
                 }
-                Ok(_) => {
+                ReadStep::Line => {
+                    // buf ends with the newline; the cap is on the line
+                    // bytes proper.
+                    if buf.len() - 1 > max_request_bytes {
+                        let _ = self.write_line(&mut writer, oversize_line(max_request_bytes));
+                        break;
+                    }
                     let line = String::from_utf8_lossy(&buf);
                     if !line.trim().is_empty() {
                         let resp = self.handle(&line);
                         self.write_line(&mut writer, resp)?;
                     }
                     buf.clear();
+                    if self.shutting_down() {
+                        // This line's response (e.g. "bye") is flushed;
+                        // now wake every other blocked client.
+                        self.wake();
+                        break;
+                    }
                 }
-                // Timeout tick: partial data (if any) stays in `buf`;
-                // loop around and re-check the shutdown flag.
-                Err(e) if is_tick(&e) => {}
-                Err(e) => return Err(e.into()),
+                ReadStep::Partial => {
+                    if buf.len() > max_request_bytes {
+                        let _ = self.write_line(&mut writer, oversize_line(max_request_bytes));
+                        break;
+                    }
+                }
             }
         }
         Ok(())
@@ -425,7 +773,7 @@ impl Server {
                 Ok(0) => return Err(std::io::Error::from(std::io::ErrorKind::WriteZero).into()),
                 Ok(n) => off += n,
                 Err(e) if is_tick(&e) => {
-                    if self.shutdown.load(Ordering::SeqCst) {
+                    if self.shutting_down() {
                         return Ok(());
                     }
                 }
@@ -434,9 +782,12 @@ impl Server {
         }
         loop {
             match writer.flush() {
-                Ok(()) => return Ok(()),
+                Ok(()) => {
+                    self.net.add_bytes_out(out.len() as u64);
+                    return Ok(());
+                }
                 Err(e) if is_tick(&e) => {
-                    if self.shutdown.load(Ordering::SeqCst) {
+                    if self.shutting_down() {
                         return Ok(());
                     }
                 }
@@ -444,6 +795,62 @@ impl Server {
             }
         }
     }
+}
+
+/// What one bounded read step produced.
+enum ReadStep {
+    /// `buf` now ends with a complete, newline-terminated line.
+    Line,
+    /// More bytes arrived but no newline yet.
+    Partial,
+    /// Read timeout tick (partial data, if any, stays in `buf`).
+    Tick,
+    /// Peer closed its write side.
+    Eof,
+}
+
+/// Pull the next chunk out of the reader into `buf`, stopping at the
+/// first newline. Bounded by the `BufReader` buffer per call, so the
+/// caller can enforce `max_request_bytes` between steps instead of
+/// handing `read_until` an unbounded allocation.
+fn read_step(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+    net: &NetStats,
+) -> Result<ReadStep> {
+    let available = match reader.fill_buf() {
+        Ok(a) => a,
+        Err(e) if is_tick(&e) => return Ok(ReadStep::Tick),
+        Err(e) => return Err(e.into()),
+    };
+    if available.is_empty() {
+        return Ok(ReadStep::Eof);
+    }
+    let (take, complete) = match available.iter().position(|&b| b == b'\n') {
+        Some(pos) => (pos + 1, true),
+        None => (available.len(), false),
+    };
+    buf.extend_from_slice(&available[..take]);
+    reader.consume(take);
+    net.add_bytes_in(take as u64);
+    Ok(if complete {
+        ReadStep::Line
+    } else {
+        ReadStep::Partial
+    })
+}
+
+/// Best-effort rejection of an over-budget connection: one typed error
+/// line, then the socket drops. The write is bounded by a tick so a
+/// malicious non-reading peer cannot stall the accept loop.
+fn reject_over_budget(stream: &TcpStream, max_connections: usize, net: &NetStats) -> Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_write_timeout(Some(READ_TICK))?;
+    let mut line = over_budget_line(max_connections).into_bytes();
+    line.push(b'\n');
+    (&mut &*stream).write_all(&line)?;
+    net.add_bytes_out(line.len() as u64);
+    Ok(())
 }
 
 /// Render an error as a protocol `{"error": ...}` response line.
@@ -477,6 +884,7 @@ mod tests {
     use super::*;
     use crate::data::synth::{generate_classification, SynthSpec};
     use crate::model::{Model, Udt};
+    use std::time::Instant;
 
     fn server() -> Arc<Server> {
         let mut spec = SynthSpec::classification("srv", 500, 4, 2);
@@ -484,6 +892,51 @@ mod tests {
         let ds = generate_classification(&spec, 61);
         let tree = Udt::builder().fit(&ds).unwrap();
         Server::new(SavedModel::new(Model::SingleTree(tree), &ds)).unwrap()
+    }
+
+    fn backends() -> Vec<ServeBackend> {
+        if reactor::SUPPORTED {
+            vec![ServeBackend::Threads, ServeBackend::Reactor]
+        } else {
+            vec![ServeBackend::Threads]
+        }
+    }
+
+    #[test]
+    fn backend_parses_and_names_round_trip() {
+        assert_eq!(ServeBackend::parse("threads"), Some(ServeBackend::Threads));
+        assert_eq!(ServeBackend::parse("reactor"), Some(ServeBackend::Reactor));
+        assert_eq!(ServeBackend::parse("tokio"), None);
+        for b in [ServeBackend::Threads, ServeBackend::Reactor] {
+            assert_eq!(ServeBackend::parse(b.name()), Some(b));
+        }
+        if reactor::SUPPORTED {
+            assert_eq!(ServeBackend::default_for_platform(), ServeBackend::Reactor);
+        }
+    }
+
+    #[test]
+    fn serve_config_validates_limits() {
+        assert!(ServeConfig::default().validate().is_ok());
+        for field in 0..3 {
+            let mut cfg = ServeConfig::default();
+            match field {
+                0 => cfg.max_connections = 0,
+                1 => cfg.max_request_bytes = 0,
+                _ => cfg.max_write_buffer_bytes = 0,
+            }
+            assert!(cfg.validate().is_err(), "field {field}");
+        }
+    }
+
+    #[test]
+    fn shared_error_lines_are_typed_json() {
+        for line in [over_budget_line(7), oversize_line(64)] {
+            let doc = Json::parse(&line).unwrap();
+            assert!(doc.get("error").unwrap().as_str().is_some(), "{line}");
+        }
+        assert!(over_budget_line(7).contains("max 7 connections"));
+        assert!(oversize_line(64).contains("64 bytes"));
     }
 
     #[test]
@@ -496,6 +949,10 @@ mod tests {
         let model = stats.get("models").unwrap().get("default").unwrap();
         assert_eq!(model.get("kind").unwrap().as_str().unwrap(), "single_tree");
         assert!(model.get("nodes").unwrap().as_f64().unwrap() > 0.0);
+        // The per-server section is present even before serving starts.
+        let srv = stats.get("server").unwrap();
+        assert_eq!(srv.get("active_connections").unwrap().as_f64().unwrap(), 0.0);
+        assert!(srv.get("max_connections").unwrap().as_f64().unwrap() >= 1.0);
     }
 
     #[test]
@@ -619,53 +1076,89 @@ mod tests {
     }
 
     #[test]
-    fn tcp_round_trip() {
-        let s = server();
-        let (tx, rx) = std::sync::mpsc::channel();
-        let s2 = Arc::clone(&s);
-        let handle = std::thread::spawn(move || {
-            s2.serve("127.0.0.1:0", |addr| tx.send(addr).unwrap()).unwrap();
-        });
-        let addr = rx.recv().unwrap();
-        let mut stream = TcpStream::connect(addr).unwrap();
-        stream.write_all(b"\"ping\"\n").unwrap();
-        let mut reader = BufReader::new(stream.try_clone().unwrap());
-        let mut line = String::new();
-        reader.read_line(&mut line).unwrap();
-        assert_eq!(line.trim(), "\"pong\"");
-        stream.write_all(b"\"shutdown\"\n").unwrap();
-        line.clear();
-        reader.read_line(&mut line).unwrap();
-        handle.join().unwrap();
+    fn tcp_round_trip_on_every_backend() {
+        for backend in backends() {
+            let s = server();
+            let cfg = ServeConfig {
+                backend,
+                ..Default::default()
+            };
+            let (tx, rx) = std::sync::mpsc::channel();
+            let s2 = Arc::clone(&s);
+            let handle = std::thread::spawn(move || {
+                s2.serve_with(cfg, "127.0.0.1:0", |addr| tx.send(addr).unwrap())
+                    .unwrap();
+            });
+            let addr = rx.recv().unwrap();
+            let mut stream = TcpStream::connect(addr).unwrap();
+            stream.write_all(b"\"ping\"\n").unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert_eq!(line.trim(), "\"pong\"", "{}", backend.name());
+            // The live stats report names the serving backend.
+            stream.write_all(b"stats\n").unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            let stats = Json::parse(&line).unwrap();
+            assert_eq!(
+                stats.get("server").unwrap().get("backend").unwrap().as_str().unwrap(),
+                backend.name()
+            );
+            stream.write_all(b"\"shutdown\"\n").unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            assert_eq!(line.trim(), "\"bye\"", "{}", backend.name());
+            handle.join().unwrap();
+        }
     }
 
     #[test]
     fn shutdown_terminates_despite_idle_connection() {
-        // Regression: an idle client used to pin `serve` open forever
-        // (its blocking read kept the scope thread alive).
-        let s = server();
-        let (tx, rx) = std::sync::mpsc::channel();
-        let (done_tx, done_rx) = std::sync::mpsc::channel();
-        let s2 = Arc::clone(&s);
-        let handle = std::thread::spawn(move || {
-            s2.serve("127.0.0.1:0", |addr| tx.send(addr).unwrap()).unwrap();
-            done_tx.send(()).unwrap();
-        });
-        let addr = rx.recv().unwrap();
-        // A client that connects and then says nothing.
-        let idle = TcpStream::connect(addr).unwrap();
-        // A second client issues the shutdown.
-        let mut ctl = TcpStream::connect(addr).unwrap();
-        ctl.write_all(b"\"shutdown\"\n").unwrap();
-        let mut reader = BufReader::new(ctl.try_clone().unwrap());
-        let mut line = String::new();
-        reader.read_line(&mut line).unwrap();
-        assert_eq!(line.trim(), "\"bye\"");
-        // serve() must return promptly even though `idle` never spoke.
-        done_rx
-            .recv_timeout(Duration::from_secs(10))
-            .expect("serve() hung on the idle connection");
-        handle.join().unwrap();
-        drop(idle);
+        // Regression: an idle client used to pin `serve` open forever,
+        // then (pre-waker) for up to a READ_TICK. Shutdown is now
+        // wakeup-driven in both backends, so the whole teardown —
+        // including the idle connection — finishes in well under one
+        // 50 ms tick.
+        for backend in backends() {
+            let s = server();
+            let cfg = ServeConfig {
+                backend,
+                ..Default::default()
+            };
+            let (tx, rx) = std::sync::mpsc::channel();
+            let (done_tx, done_rx) = std::sync::mpsc::channel();
+            let s2 = Arc::clone(&s);
+            let handle = std::thread::spawn(move || {
+                s2.serve_with(cfg, "127.0.0.1:0", |addr| tx.send(addr).unwrap())
+                    .unwrap();
+                done_tx.send(()).unwrap();
+            });
+            let addr = rx.recv().unwrap();
+            // A client that connects and then says nothing.
+            let idle = TcpStream::connect(addr).unwrap();
+            // A second client issues the shutdown.
+            let mut ctl = TcpStream::connect(addr).unwrap();
+            ctl.write_all(b"\"shutdown\"\n").unwrap();
+            let mut reader = BufReader::new(ctl.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert_eq!(line.trim(), "\"bye\"");
+            // Sub-tick: serve() must return without waiting out a
+            // READ_TICK on the idle connection.
+            let start = Instant::now();
+            done_rx
+                .recv_timeout(Duration::from_secs(10))
+                .expect("serve() hung on the idle connection");
+            assert!(
+                start.elapsed() < READ_TICK,
+                "{} backend shutdown took {:?} (>= one {:?} tick)",
+                backend.name(),
+                start.elapsed(),
+                READ_TICK
+            );
+            handle.join().unwrap();
+            drop(idle);
+        }
     }
 }

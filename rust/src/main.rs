@@ -18,7 +18,7 @@
 use udt::config::Config;
 use udt::coordinator::pipeline::{run_pipeline_model, Quality};
 use udt::coordinator::registry::ModelRegistry;
-use udt::coordinator::serve::Server;
+use udt::coordinator::serve::{ServeBackend, Server};
 use udt::data::csv::{load_csv, CsvOptions};
 use udt::data::dataset::TaskKind;
 use udt::data::synth::{generate_any, registry};
@@ -520,6 +520,18 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         .opt("max-depth", "maximum depth (per-round cap with --boosted)", None)
         .opt("seed", "rng seed", Some("42"))
         .opt("addr", "listen address", Some("127.0.0.1:7878"))
+        .opt(
+            "backend",
+            "serve backend: reactor|threads (default: reactor on Linux)",
+            None,
+        )
+        .opt("max-connections", "connection budget (reject above)", None)
+        .opt("max-request-bytes", "per-line request size cap", None)
+        .opt(
+            "max-write-buffer-bytes",
+            "reactor per-connection write buffer cap",
+            None,
+        )
         .opt("config", "config file", None)
         .opt_multi("set", "config override key=value")
         .positional("input.csv (when training from CSV)");
@@ -528,6 +540,27 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
     // --model path too (they only affect training, but should never be
     // silently ignored).
     let cfg = base_config(&a)?;
+
+    // `serve --backend` selects the *serve* backend; the shared training
+    // option of the same name (superfast|generic|xla) must not see it.
+    // Training-from-dataset under `serve` picks its training backend from
+    // the `train.backend` config key instead.
+    let mut serve_cfg = cfg.serve_config()?;
+    if let Some(v) = a.get("backend") {
+        serve_cfg.backend = ServeBackend::parse(v).ok_or_else(|| {
+            UdtError::usage(format!(
+                "unknown serve backend `{v}` (expected `reactor` or `threads`)"
+            ))
+        })?;
+    }
+    serve_cfg.max_connections =
+        a.get_usize("max-connections", serve_cfg.max_connections)?;
+    serve_cfg.max_request_bytes =
+        a.get_usize("max-request-bytes", serve_cfg.max_request_bytes)?;
+    serve_cfg.max_write_buffer_bytes =
+        a.get_usize("max-write-buffer-bytes", serve_cfg.max_write_buffer_bytes)?;
+    let mut train_args = a.clone();
+    train_args.options.remove("backend");
 
     let registry = ModelRegistry::new();
     let specs = a.get_all("model");
@@ -549,9 +582,9 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             registry.load(&name, SavedModel::load(&path)?)?;
         }
     } else {
-        let ds = load_dataset(&a)?;
-        let tree_cfg = train_config(&a, &cfg)?;
-        let model = fit_model_from_flags(&a, &cfg, &ds, tree_cfg)?;
+        let ds = load_dataset(&train_args)?;
+        let tree_cfg = train_config(&train_args, &cfg)?;
+        let model = fit_model_from_flags(&train_args, &cfg, &ds, tree_cfg)?;
         let name = ds.name.clone();
         registry.load(&name, SavedModel::new(model, &ds))?;
     }
@@ -583,8 +616,12 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         println!("default model: {default}");
     }
     let addr = a.get_or("addr", "127.0.0.1:7878").to_string();
-    println!("serving on {addr} (send \"shutdown\" to stop)");
-    server.serve(&addr, |bound| println!("bound {bound}"))
+    println!(
+        "serving on {addr} via {} backend (max {} connections; send \"shutdown\" to stop)",
+        serve_cfg.backend.name(),
+        serve_cfg.max_connections
+    );
+    server.serve_with(serve_cfg, &addr, |bound| println!("bound {bound}"))
 }
 
 fn cmd_artifacts(raw: &[String]) -> Result<()> {

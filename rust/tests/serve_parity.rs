@@ -1,0 +1,473 @@
+//! Cross-backend protocol parity and stress suite for the prediction
+//! server: the reactor backend must answer byte-for-byte what the
+//! thread-per-connection oracle answers, across the full wire protocol
+//! and under hostile conditions — pipelined segments, reads split
+//! mid-UTF-8, malformed JSON, oversized lines, over-budget connects and
+//! peers that refuse to drain their socket.
+
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use udt::coordinator::reactor;
+use udt::coordinator::serve::{ServeBackend, ServeConfig, Server};
+use udt::data::synth::{generate_classification, SynthSpec};
+use udt::util::json::Json;
+use udt::{Model, SavedModel, Udt};
+
+/// Every backend that exists on this platform (threads always; reactor
+/// on Linux).
+fn backends() -> Vec<ServeBackend> {
+    if reactor::SUPPORTED {
+        vec![ServeBackend::Threads, ServeBackend::Reactor]
+    } else {
+        vec![ServeBackend::Threads]
+    }
+}
+
+/// One model document for the whole suite: trained once, then
+/// rehydrated per server, so every server (and the in-process oracle)
+/// holds a bit-identical model and responses can be compared as bytes.
+fn saved_model() -> SavedModel {
+    static DOC: std::sync::OnceLock<String> = std::sync::OnceLock::new();
+    let text = DOC.get_or_init(|| {
+        let mut spec = SynthSpec::classification("parity", 600, 4, 3);
+        spec.cat_frac = 0.3;
+        let ds = generate_classification(&spec, 4242);
+        let tree = Udt::builder().fit(&ds).unwrap();
+        SavedModel::new(Model::SingleTree(tree), &ds)
+            .to_json()
+            .to_string()
+    });
+    SavedModel::from_json(&Json::parse(text).unwrap()).unwrap()
+}
+
+struct Live {
+    server: Arc<Server>,
+    addr: SocketAddr,
+    handle: std::thread::JoinHandle<()>,
+}
+
+impl Live {
+    fn start(cfg: ServeConfig) -> Live {
+        let server = Server::new(saved_model()).unwrap();
+        let (tx, rx) = mpsc::channel();
+        let s2 = Arc::clone(&server);
+        let handle = std::thread::spawn(move || {
+            s2.serve_with(cfg, "127.0.0.1:0", |addr| tx.send(addr).unwrap())
+                .unwrap();
+        });
+        let addr = rx.recv().unwrap();
+        Live {
+            server,
+            addr,
+            handle,
+        }
+    }
+
+    fn connect(&self) -> (TcpStream, BufReader<TcpStream>) {
+        let stream = TcpStream::connect(self.addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        (stream, reader)
+    }
+
+    /// Shut down via the protocol and join the serve thread.
+    fn stop(self) {
+        let (mut stream, mut reader) = self.connect();
+        stream.write_all(b"\"shutdown\"\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "\"bye\"");
+        self.handle.join().unwrap();
+    }
+}
+
+fn request(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str) -> String {
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    assert!(resp.ends_with('\n'), "truncated response to {line:?}");
+    resp.trim_end_matches('\n').to_string()
+}
+
+/// The full protocol surface (minus `stats`, whose counters depend on
+/// request history): control lines, single rows, batches, named models,
+/// schema addressing, and the whole error taxonomy.
+const PROTOCOL_LINES: &[&str] = &[
+    "ping",
+    "\"ping\"",
+    "schema",
+    "models",
+    "[1.0, 2.0, 3.0, 4.0]",
+    "[\"never-seen\", 2.0, null, 4.0]",
+    "[[1.0, 2.0, 3.0, 4.0], [4.0, 3.0, 2.0, 1.0]]",
+    "{\"model\":\"default\",\"rows\":[[1.0, 2.0, 3.0, 4.0]]}",
+    "{\"model\":\"default\",\"rows\":[1.0, 2.0, 3.0, 4.0]}",
+    "{\"model\":\"default\",\"rows\":[]}",
+    "{\"schema\":\"default\"}",
+    "{\"schema\":\"gone\"}",
+    "{\"model\":\"nope\",\"rows\":[[1.0, 2.0, 3.0, 4.0]]}",
+    "{\"rows\":[[1.0, 2.0, 3.0, 4.0]]}",
+    "{\"model\":7,\"rows\":[[1.0]]}",
+    "{\"no_rows\":true}",
+    "[1.0]",
+    "[1.0, 2.0,",
+    "hello",
+    "42",
+];
+
+#[test]
+fn backends_answer_the_full_protocol_byte_identically() {
+    // The in-process handler is the ground truth both backends must
+    // reproduce over the wire. Models train deterministically, so the
+    // oracle transcript is identical across the per-backend servers.
+    let oracle = Server::new(saved_model()).unwrap();
+    for backend in backends() {
+        let live = Live::start(ServeConfig {
+            backend,
+            ..Default::default()
+        });
+        let (mut stream, mut reader) = live.connect();
+        for line in PROTOCOL_LINES {
+            let wire = request(&mut stream, &mut reader, line);
+            assert_eq!(
+                wire,
+                oracle.handle(line),
+                "{} backend diverges on {line:?}",
+                backend.name()
+            );
+        }
+        live.stop();
+    }
+}
+
+#[test]
+fn pipelined_requests_in_one_segment_answer_in_order() {
+    for backend in backends() {
+        let live = Live::start(ServeConfig {
+            backend,
+            ..Default::default()
+        });
+        let (mut stream, mut reader) = live.connect();
+        // One write_all, three requests — responses must come back in
+        // request order, one line each.
+        stream
+            .write_all(b"ping\n[1.0, 2.0, 3.0, 4.0]\nmodels\n")
+            .unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "\"pong\"", "{}", backend.name());
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(!line.contains("error"), "{}: {line}", backend.name());
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"models\""), "{}: {line}", backend.name());
+        live.stop();
+    }
+}
+
+#[test]
+fn requests_split_mid_utf8_survive_read_boundaries() {
+    // "é" is 0xC3 0xA9; splitting between the two bytes lands a read
+    // boundary (and, on the threads backend, at least one 50 ms timeout
+    // tick) inside a UTF-8 sequence. A backend that converted partial
+    // buffers to text eagerly would corrupt or drop the category.
+    let line = "[\"caf\u{e9}-cat\", 2.0, 3.0, 4.0]";
+    let bytes = line.as_bytes();
+    let cut = line.find('\u{e9}').unwrap() + 1; // inside the é sequence
+    for backend in backends() {
+        let live = Live::start(ServeConfig {
+            backend,
+            ..Default::default()
+        });
+        let (mut stream, mut reader) = live.connect();
+        let whole = request(&mut stream, &mut reader, line);
+
+        stream.write_all(&bytes[..cut]).unwrap();
+        stream.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(120));
+        stream.write_all(&bytes[cut..]).unwrap();
+        stream.write_all(b"\n").unwrap();
+        let mut split = String::new();
+        reader.read_line(&mut split).unwrap();
+        assert_eq!(
+            split.trim_end_matches('\n'),
+            whole,
+            "{} backend corrupts split reads",
+            backend.name()
+        );
+        live.stop();
+    }
+}
+
+#[test]
+fn trailing_unterminated_line_is_answered_at_eof() {
+    for backend in backends() {
+        let live = Live::start(ServeConfig {
+            backend,
+            ..Default::default()
+        });
+        let (mut stream, mut reader) = live.connect();
+        stream.write_all(b"ping").unwrap(); // no newline
+        stream.shutdown(Shutdown::Write).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "\"pong\"", "{}", backend.name());
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0, "{}", backend.name());
+        live.stop();
+    }
+}
+
+#[test]
+fn oversized_lines_get_a_typed_error_then_close() {
+    for backend in backends() {
+        let live = Live::start(ServeConfig {
+            backend,
+            max_request_bytes: 64,
+            ..Default::default()
+        });
+        // A terminated line over the cap.
+        let (mut stream, mut reader) = live.connect();
+        let big = format!("[{}]\n", "1.0, ".repeat(40));
+        assert!(big.len() > 65);
+        stream.write_all(big.as_bytes()).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let err = Json::parse(&line).unwrap();
+        let msg = err.get("error").unwrap().as_str().unwrap().to_string();
+        assert!(
+            msg.contains("max_request_bytes") && msg.contains("64"),
+            "{}: {msg}",
+            backend.name()
+        );
+        // ... and the connection is closed.
+        line.clear();
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0, "{}", backend.name());
+
+        // A never-terminated flood over the cap must not buffer forever:
+        // the partial line alone triggers the same typed error + close.
+        let (mut stream, mut reader) = live.connect();
+        stream.write_all(&[b'x'; 200]).unwrap();
+        stream.flush().unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("max_request_bytes"), "{}: {line}", backend.name());
+        line.clear();
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0, "{}", backend.name());
+
+        // The server survives both abusive clients.
+        let (mut stream, mut reader) = live.connect();
+        assert_eq!(request(&mut stream, &mut reader, "ping"), "\"pong\"");
+        live.stop();
+    }
+}
+
+#[test]
+fn over_budget_connections_are_rejected_then_recover() {
+    for backend in backends() {
+        let live = Live::start(ServeConfig {
+            backend,
+            max_connections: 2,
+            ..Default::default()
+        });
+        // Fill the budget, with a round-trip on each so the server has
+        // definitely registered both (connect() succeeding only proves
+        // the kernel finished the handshake, not that accept() ran).
+        let (mut c1, mut r1) = live.connect();
+        assert_eq!(request(&mut c1, &mut r1, "ping"), "\"pong\"");
+        let (mut c2, mut r2) = live.connect();
+        assert_eq!(request(&mut c2, &mut r2, "ping"), "\"pong\"");
+
+        // Third connect: typed rejection line, then close.
+        let (_c3, mut r3) = live.connect();
+        let mut line = String::new();
+        r3.read_line(&mut line).unwrap();
+        let err = Json::parse(&line).unwrap();
+        let msg = err.get("error").unwrap().as_str().unwrap().to_string();
+        assert!(
+            msg.contains("connection budget") && msg.contains("2"),
+            "{}: {msg}",
+            backend.name()
+        );
+        line.clear();
+        assert_eq!(r3.read_line(&mut line).unwrap(), 0, "{}", backend.name());
+
+        // Freeing a slot lets the next connect through.
+        drop(c2);
+        drop(r2);
+        std::thread::sleep(Duration::from_millis(150));
+        let (mut c4, mut r4) = live.connect();
+        assert_eq!(
+            request(&mut c4, &mut r4, "ping"),
+            "\"pong\"",
+            "{} backend did not recover a freed slot",
+            backend.name()
+        );
+
+        let stats = Json::parse(&request(&mut c4, &mut r4, "stats")).unwrap();
+        let srv = stats.get("server").unwrap();
+        assert!(srv.get("rejected").unwrap().as_f64().unwrap() >= 1.0);
+
+        // Free both slots before stop(), which needs a connection of its
+        // own to issue the protocol shutdown.
+        drop((c1, r1, c4, r4));
+        std::thread::sleep(Duration::from_millis(150));
+        live.stop();
+    }
+}
+
+#[test]
+fn a_slow_reader_does_not_stall_other_clients() {
+    for backend in backends() {
+        let live = Live::start(ServeConfig {
+            backend,
+            ..Default::default()
+        });
+        // The slow reader requests a real batch and then never reads.
+        let (mut slow, _slow_reader) = live.connect();
+        let row = "[1.0, 2.0, 3.0, 4.0]";
+        let batch = format!("[{}]\n", vec![row; 500].join(", "));
+        slow.write_all(batch.as_bytes()).unwrap();
+
+        // A well-behaved client must still get sub-second answers.
+        let (mut fast, mut fast_reader) = live.connect();
+        for _ in 0..5 {
+            let t = Instant::now();
+            assert_eq!(request(&mut fast, &mut fast_reader, "ping"), "\"pong\"");
+            assert!(
+                t.elapsed() < Duration::from_secs(1),
+                "{} backend stalled behind a slow reader",
+                backend.name()
+            );
+        }
+        live.stop();
+    }
+}
+
+#[test]
+fn reactor_closes_abusive_peers_at_the_write_buffer_cap() {
+    if !reactor::SUPPORTED {
+        return;
+    }
+    let live = Live::start(ServeConfig {
+        backend: ServeBackend::Reactor,
+        // Tiny cap so the test fills kernel buffers + user buffer fast.
+        max_write_buffer_bytes: 64 * 1024,
+        ..Default::default()
+    });
+    let (mut abusive, _abusive_reader) = live.connect();
+    abusive
+        .set_write_timeout(Some(Duration::from_secs(2)))
+        .unwrap();
+    let row = "[1.0, 2.0, 3.0, 4.0]";
+    let batch = format!("[{}]\n", vec![row; 2000].join(", "));
+    // Pipeline batches without ever reading. Kernel buffers absorb the
+    // first responses; once they fill, the server's write buffer grows
+    // past the cap and the reactor closes us — our writes then fail.
+    let mut server_closed_us = false;
+    for _ in 0..1000 {
+        match abusive.write_all(batch.as_bytes()) {
+            Ok(()) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::BrokenPipe
+                        | ErrorKind::ConnectionReset
+                        | ErrorKind::WouldBlock
+                        | ErrorKind::TimedOut
+                ) =>
+            {
+                server_closed_us = true;
+                break;
+            }
+            Err(e) => panic!("unexpected write error: {e}"),
+        }
+    }
+    assert!(
+        server_closed_us,
+        "reactor never applied the write-buffer cap"
+    );
+
+    // The reactor itself is fine, and it observed the stall.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let (mut c, mut r) = live.connect();
+        let stats = Json::parse(&request(&mut c, &mut r, "stats")).unwrap();
+        let srv = stats.get("server").unwrap();
+        let stalls = srv.get("backpressure_stalls").unwrap().as_f64().unwrap();
+        let closed = srv.get("closed").unwrap().as_f64().unwrap();
+        if stalls >= 1.0 && closed >= 1.0 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "stats never recorded the backpressure close: {stats:?}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    live.stop();
+}
+
+#[test]
+fn stats_report_connection_counters_per_server() {
+    for backend in backends() {
+        let live = Live::start(ServeConfig {
+            backend,
+            ..Default::default()
+        });
+        // A crowd of idle connections, round-tripped so they're all
+        // registered before the stats snapshot.
+        let idle: Vec<_> = (0..50)
+            .map(|_| {
+                let (mut s, mut r) = live.connect();
+                assert_eq!(request(&mut s, &mut r, "ping"), "\"pong\"");
+                (s, r)
+            })
+            .collect();
+        let (mut c, mut r) = live.connect();
+        let stats = Json::parse(&request(&mut c, &mut r, "stats")).unwrap();
+        let srv = stats.get("server").unwrap();
+        assert_eq!(
+            srv.get("backend").unwrap().as_str().unwrap(),
+            backend.name()
+        );
+        let active = srv.get("active_connections").unwrap().as_f64().unwrap();
+        assert_eq!(active, 51.0, "{}", backend.name());
+        assert!(srv.get("peak_connections").unwrap().as_f64().unwrap() >= 51.0);
+        assert!(srv.get("accepted").unwrap().as_f64().unwrap() >= 51.0);
+        assert!(srv.get("bytes_in").unwrap().as_f64().unwrap() >= 51.0 * 5.0);
+        assert!(srv.get("bytes_out").unwrap().as_f64().unwrap() >= 51.0 * 7.0);
+        for key in ["rejected", "closed", "backpressure_stalls"] {
+            assert!(srv.get(key).is_some(), "{} missing {key}", backend.name());
+        }
+        drop(idle);
+        live.stop();
+    }
+}
+
+#[test]
+fn shutdown_disconnects_idle_clients_promptly() {
+    // The serve-side latency assertion lives in the serve.rs unit tests;
+    // this covers the client's view: an idle connection sees EOF (not a
+    // hang) once another client shuts the server down.
+    for backend in backends() {
+        let live = Live::start(ServeConfig {
+            backend,
+            ..Default::default()
+        });
+        let (idle, mut idle_reader) = live.connect();
+        let (mut s, mut r) = live.connect();
+        assert_eq!(request(&mut s, &mut r, "ping"), "\"pong\"");
+        live.stop();
+        let mut buf = [0u8; 16];
+        let n = idle_reader.read(&mut buf).unwrap_or(0);
+        assert_eq!(n, 0, "{} backend left idle client dangling", backend.name());
+        drop(idle);
+    }
+}
