@@ -1,0 +1,133 @@
+//! Exact vs histogram-binned split selection on the table6-style
+//! synthetic workload.
+//!
+//! The binned backend's claim worth measuring: quantizing every numeric
+//! column once into at most `B` dataset-level bins turns per-node split
+//! selection into an O(rows) histogram accumulation plus an O(B) scan,
+//! and parent-minus-sibling subtraction halves (or better) the rows that
+//! ever feed a histogram — at the price of thresholds snapped to bin
+//! edges. This bench trains the exact Superfast baseline and the binned
+//! backend at B ∈ {32, 256} on the same high-cardinality classification
+//! table, reporting train wall-clock, training rows per second, the
+//! accumulated histogram rows per second (root + smaller children only —
+//! the subtraction witness), the histogram scratch footprint and the
+//! test-accuracy delta against exact.
+//!
+//! Writes a machine-readable `BENCH_binned.json` at the repository root
+//! so the binned-path perf trajectory is tracked PR-over-PR alongside
+//! the other BENCH_*.json artifacts.
+//!
+//!   cargo bench --bench binned
+//!
+//! UDT_BENCH_SCALE scales the row count (1.0 = 200k rows);
+//! UDT_BENCH_RUNS the repetitions.
+
+use udt::bench_support::{bench, write_bench_json, BenchConfig, Table};
+use udt::data::synth::{generate_any, SynthSpec};
+use udt::tree::builder::fit_rows_with_stats;
+use udt::tree::{Backend, TrainConfig};
+use udt::util::json::Json;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let n_rows = ((200_000.0 * cfg.scale) as usize).max(4_000);
+    let mut spec = SynthSpec::classification("binned_t6", n_rows, 12, 5);
+    spec.cat_frac = 0.15;
+    spec.hybrid_frac = 0.05;
+    spec.missing_frac = 0.02;
+    spec.noise = 0.05;
+    // Deep numeric grids so both bin budgets genuinely coarsen the
+    // threshold set instead of binning losslessly.
+    spec.numeric_cardinality = (n_rows / 10).max(1_000);
+    eprintln!(
+        "binned bench: {n_rows} rows x 12 features, numeric cardinality {} \
+         (UDT_BENCH_SCALE to change)",
+        spec.numeric_cardinality
+    );
+
+    let mut table = Table::new(&[
+        "case", "rows", "B", "train(ms)", "train-rows/s", "acc", "Δacc", "hist-rows/s",
+        "scratch(KiB)",
+    ]);
+    let mut json_cases: Vec<Json> = Vec::new();
+    let mut exact_acc = 0.0;
+    for (case, max_bins) in [("exact", None), ("binned_32", Some(32)), ("binned_256", Some(256))] {
+        // A fresh dataset instance per case (same seed, identical data)
+        // so each one carries its own sort/bin caches and the
+        // quantize-once assertions below stay per-budget.
+        let ds = generate_any(&spec, 42);
+        let (train, _val, test) = ds.split_indices(0.8, 0.1, 1);
+        let tc = TrainConfig {
+            backend: match max_bins {
+                Some(b) => Backend::Binned { max_bins: b },
+                None => Backend::Superfast,
+            },
+            n_threads: 0,
+            ..Default::default()
+        };
+        // Un-timed fit: warms the sort + bin caches (mirroring
+        // production: quantize once, fit many) and yields the tree
+        // quality plus the subtraction counters.
+        let (tree, stats) = fit_rows_with_stats(&ds, &train, &tc, None).expect("train");
+        let acc = tree.accuracy_rows(&ds, &test).expect("accuracy");
+        if max_bins.is_none() {
+            exact_acc = acc;
+        }
+        let m = bench(case, &cfg, || {
+            let (t, _) = fit_rows_with_stats(&ds, &train, &tc, None).expect("train");
+            assert!(t.n_nodes() >= 1);
+        });
+        // The whole case — warmup and every timed run — must have sorted
+        // each column exactly once and (binned only) quantized once.
+        assert_eq!(ds.sort_index_builds(), 1, "{case}: re-sorted the dataset");
+        assert_eq!(
+            ds.bin_index_builds(),
+            usize::from(max_bins.is_some()),
+            "{case}: re-quantized the dataset"
+        );
+
+        let train_ms = m.min_ms();
+        let train_s = (train_ms / 1e3).max(1e-9);
+        let rows_per_sec = train.len() as f64 / train_s;
+        let hist_rows_per_sec = stats.hist_rows_accumulated as f64 / train_s;
+        table.row(vec![
+            case.to_string(),
+            ds.n_rows().to_string(),
+            max_bins.map_or_else(|| "-".to_string(), |b| b.to_string()),
+            format!("{train_ms:.1}"),
+            format!("{rows_per_sec:.0}"),
+            format!("{acc:.3}"),
+            format!("{:+.4}", acc - exact_acc),
+            format!("{hist_rows_per_sec:.0}"),
+            (stats.hist_scratch_bytes / 1024).to_string(),
+        ]);
+        json_cases.push(Json::obj(vec![
+            ("case", Json::Str(case.to_string())),
+            ("max_bins", Json::Num(max_bins.unwrap_or(0) as f64)),
+            ("train_rows", Json::Num(train.len() as f64)),
+            ("train_ms", Json::Num(train_ms)),
+            ("train_rows_per_sec", Json::Num(rows_per_sec)),
+            ("accuracy", Json::Num(acc)),
+            ("accuracy_delta", Json::Num(acc - exact_acc)),
+            ("hist_rows_accumulated", Json::Num(stats.hist_rows_accumulated as f64)),
+            ("hist_rows_per_sec", Json::Num(hist_rows_per_sec)),
+            ("hist_scratch_bytes", Json::Num(stats.hist_scratch_bytes as f64)),
+        ]));
+        eprintln!("done {case}");
+    }
+
+    println!("\n== Exact vs histogram-binned training ({n_rows} rows) ==");
+    println!("{}", table.render());
+
+    let artifact = Json::obj(vec![
+        ("bench", Json::Str("binned".into())),
+        ("rows", Json::Num(n_rows as f64)),
+        ("numeric_cardinality", Json::Num(spec.numeric_cardinality as f64)),
+        ("measured", Json::Bool(true)),
+        ("cases", Json::Arr(json_cases)),
+    ]);
+    match write_bench_json("binned", &artifact) {
+        Ok(p) => eprintln!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write bench artifact: {e}"),
+    }
+}

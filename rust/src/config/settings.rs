@@ -8,7 +8,9 @@
 //!
 //! Recognized key groups:
 //!
-//! * `train.criterion`, `train.backend`, `train.threads` — builder defaults;
+//! * `train.criterion`, `train.backend`, `train.max_bins`,
+//!   `train.threads` — builder defaults (`train.max_bins` is the bin
+//!   budget of the histogram-binned backend, bounds-checked here);
 //! * `tune.min_split_max_frac`, `tune.min_split_steps` — the
 //!   Training-Only-Once hyper-parameter grid ([`TuneGrid`]);
 //! * `forest.n_trees`, `forest.feature_frac`, `forest.sample_frac`,
@@ -149,6 +151,17 @@ impl Config {
         self.values.keys().map(|s| s.as_str())
     }
 
+    /// The `train.max_bins` bin budget for the histogram-binned backend
+    /// (default 256), bounds-checked at this config boundary: a budget
+    /// below 2 cannot host a split, one above 65535 overflows the `u16`
+    /// bin-id lanes.
+    pub fn max_bins(&self) -> Result<usize, ConfigError> {
+        let v = self.get_usize("train.max_bins", 256)?;
+        crate::tree::validate_max_bins(v)
+            .map_err(|e| ConfigError(format!("train.max_bins: {e}")))?;
+        Ok(v)
+    }
+
     /// The Training-Only-Once tuning grid from the `tune.*` keys.
     pub fn tune_grid(&self) -> Result<TuneGrid, ConfigError> {
         let defaults = TuneGrid::default();
@@ -195,6 +208,7 @@ impl Config {
             subsample: self.get_f64("boost.subsample", defaults.subsample)?,
             seed: self.get_u64("boost.seed", defaults.seed)?,
             n_threads,
+            backend: defaults.backend,
         })
     }
 
@@ -296,6 +310,26 @@ mod tests {
         let mut cfg = Config::new();
         cfg.set_kv("tune.min_split_steps=0").unwrap();
         assert!(cfg.tune_grid().is_err());
+    }
+
+    #[test]
+    fn max_bins_from_keys_is_validated() {
+        assert_eq!(Config::new().max_bins().unwrap(), 256);
+        let mut cfg = Config::new();
+        cfg.set_kv("train.max_bins=64").unwrap();
+        assert_eq!(cfg.max_bins().unwrap(), 64);
+        // Out-of-range and non-numeric budgets are typed config errors.
+        for bad in ["0", "1", "65536", "lots"] {
+            let mut cfg = Config::new();
+            cfg.set_kv(&format!("train.max_bins={bad}")).unwrap();
+            assert!(cfg.max_bins().is_err(), "train.max_bins={bad} accepted");
+        }
+        // The extremes of the valid range pass.
+        for good in ["2", "65535"] {
+            let mut cfg = Config::new();
+            cfg.set_kv(&format!("train.max_bins={good}")).unwrap();
+            assert!(cfg.max_bins().is_ok(), "train.max_bins={good} rejected");
+        }
     }
 
     #[test]

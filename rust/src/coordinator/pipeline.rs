@@ -29,6 +29,9 @@ pub struct PipelineReport {
     /// Peak bytes of the builder's double-buffered arenas during the
     /// full-tree fit (see [`crate::tree::frontier::ArenaStats`]).
     pub peak_arena_bytes: usize,
+    /// Peak bytes of the binned backend's per-node histogram buffers
+    /// during the full-tree fit; 0 for the exact backends.
+    pub hist_scratch_bytes: usize,
     // Tuning.
     pub tune_ms: f64,
     pub n_settings: usize,
@@ -104,6 +107,7 @@ pub fn run_pipeline_model(
         full_depth: full.depth,
         full_train_ms,
         peak_arena_bytes: arena_stats.peak_bytes,
+        hist_scratch_bytes: arena_stats.hist_scratch_bytes,
         tune_ms,
         n_settings: tune_result.n_settings,
         best_max_depth: tune_result.best_max_depth,
@@ -153,8 +157,27 @@ mod tests {
         assert!(rep.n_settings > 90);
         assert!(rep.full_train_ms > 0.0 && rep.tune_ms >= 0.0);
         assert!(rep.peak_arena_bytes > 0);
+        // Exact backend: no histogram scratch.
+        assert_eq!(rep.hist_scratch_bytes, 0);
         // Full fit + tuned retrain: the column sort was still paid once.
         assert_eq!(ds.sort_index_builds(), 1);
+    }
+
+    #[test]
+    fn binned_pipeline_reports_histogram_scratch() {
+        let mut spec = SynthSpec::classification("bpipe", 2500, 6, 3);
+        spec.numeric_cardinality = 32;
+        let ds = generate_any(&spec, 54);
+        let cfg = TrainConfig {
+            backend: crate::tree::Backend::Binned { max_bins: 32 },
+            ..TrainConfig::default()
+        };
+        let rep = run_pipeline(&ds, &cfg, &TuneGrid::default(), 4).unwrap();
+        assert!(rep.hist_scratch_bytes > 0);
+        assert!(rep.full_nodes >= 3);
+        // Full fit + tuned retrain share one bin-lane build, just like
+        // they share one root sort.
+        assert_eq!(ds.bin_index_builds(), 1);
     }
 
     #[test]

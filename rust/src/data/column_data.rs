@@ -274,6 +274,114 @@ impl ColumnData {
     }
 }
 
+/// Bin-id lane of a pre-quantized numeric column: `u8` when the binning
+/// used ≤ 256 bins, `u16` otherwise (the config boundary caps `max_bins`
+/// at 65535). `Arc`-shared like the f64/u32 lanes so every fit, forest
+/// bag and boosting round reads the same quantization.
+#[derive(Debug, Clone)]
+pub enum BinIds {
+    U8(Arc<[u8]>),
+    U16(Arc<[u16]>),
+}
+
+impl BinIds {
+    /// Bin id of row `i`. Only meaningful for rows holding numeric
+    /// cells; other slots carry placeholder 0 and must not be read
+    /// (callers iterate the sorted numeric row lists, which contain
+    /// numeric rows only).
+    #[inline]
+    pub fn get(&self, i: usize) -> u32 {
+        match self {
+            BinIds::U8(v) => v[i] as u32,
+            BinIds::U16(v) => v[i] as u32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            BinIds::U8(v) => v.len(),
+            BinIds::U16(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident bytes of the id lane.
+    pub fn approx_bytes(&self) -> usize {
+        match self {
+            BinIds::U8(v) => v.len(),
+            BinIds::U16(v) => v.len() * 2,
+        }
+    }
+}
+
+/// Dataset-level quantile binning of one numeric column: a row-indexed
+/// bin-id lane plus the bin-edge table. Built once next to the
+/// `SortedIndex` cache (see `Dataset::binned_index`) and shared by every
+/// binned fit. Edges are actual data values, so `value ≤ edges[b]` is a
+/// valid split predicate at every bin boundary.
+#[derive(Debug, Clone)]
+pub struct BinLane {
+    /// Bin id per row (placeholder 0 at non-numeric rows).
+    pub ids: BinIds,
+    /// Upper edge value of each bin, ascending.
+    pub edges: Arc<[f64]>,
+    /// Whether the binning is lossless (distinct values ≤ `max_bins`):
+    /// each bin holds exactly one distinct value and its edge *is* that
+    /// value, so a binned scan scores exactly the exact-path candidates.
+    pub is_exact: bool,
+}
+
+impl BinLane {
+    /// Quantize a column's sorted numeric lane (`num_rows`/`num_vals`
+    /// from the `SortedIndex`) into at most `max_bins` bins, scattered
+    /// back to row order. `None` when the column has no numeric cells.
+    pub fn build(
+        num_rows: &[u32],
+        num_vals: &[f64],
+        n_rows: usize,
+        max_bins: usize,
+    ) -> Option<BinLane> {
+        let binning = crate::runtime::binning::quantile_bins(num_vals, max_bins)?;
+        let n_bins = binning.n_bins();
+        let ids = if n_bins <= 256 {
+            let mut lane = vec![0u8; n_rows];
+            for (i, &r) in num_rows.iter().enumerate() {
+                lane[r as usize] = binning.bin_of_sorted[i] as u8;
+            }
+            BinIds::U8(lane.into())
+        } else {
+            let mut lane = vec![0u16; n_rows];
+            for (i, &r) in num_rows.iter().enumerate() {
+                lane[r as usize] = binning.bin_of_sorted[i] as u16;
+            }
+            BinIds::U16(lane.into())
+        };
+        Some(BinLane {
+            ids,
+            edges: binning.edges.into(),
+            is_exact: binning.is_exact,
+        })
+    }
+
+    /// Bin id of `row` (which must hold a numeric cell).
+    #[inline]
+    pub fn bin_of_row(&self, row: usize) -> usize {
+        self.ids.get(row) as usize
+    }
+
+    pub fn n_bins(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Resident bytes of the id lane plus the edge table.
+    pub fn approx_bytes(&self) -> usize {
+        self.ids.approx_bytes() + self.edges.len() * std::mem::size_of::<f64>()
+    }
+}
+
 /// Incremental typed column builder: the shared sink of CSV chunk
 /// parsing, [`crate::inference::RowFrameBuilder`] and
 /// [`ColumnData::from_cells`]. Cells append in row order; [`finish`]
@@ -623,6 +731,59 @@ mod tests {
             assert_eq!(a.cells(), b.cells(), "base {base_n} adds {add_ns:?}");
             assert_eq!(a.counts(), b.counts(), "base {base_n} adds {add_ns:?}");
         }
+    }
+
+    #[test]
+    fn bin_lane_scatters_to_row_order() {
+        // Rows: 3.0, cat, 1.0, missing, 1.0 — numeric lane sorted is
+        // rows [2, 4, 0] with values [1.0, 1.0, 3.0].
+        let mut i = Interner::new();
+        let a = i.intern("a");
+        let d = ColumnData::from_cells(&[
+            Value::Num(3.0),
+            Value::Cat(a),
+            Value::Num(1.0),
+            Value::Missing,
+            Value::Num(1.0),
+        ]);
+        let (nr, nv) = d.sorted_numeric();
+        let lane = BinLane::build(&nr, &nv, d.len(), 8).unwrap();
+        assert!(lane.is_exact);
+        assert_eq!(lane.n_bins(), 2);
+        assert_eq!(lane.edges.as_ref(), &[1.0, 3.0]);
+        assert_eq!(lane.bin_of_row(2), 0);
+        assert_eq!(lane.bin_of_row(4), 0);
+        assert_eq!(lane.bin_of_row(0), 1);
+        assert!(matches!(lane.ids, BinIds::U8(_)));
+        assert_eq!(lane.approx_bytes(), 5 + 2 * 8);
+        // No numeric cells → no lane.
+        let cat = ColumnData::from_cells(&[Value::Cat(a)]);
+        let (nr, nv) = cat.sorted_numeric();
+        assert!(BinLane::build(&nr, &nv, 1, 8).is_none());
+    }
+
+    #[test]
+    fn bin_lane_widens_past_256_bins() {
+        let cells: Vec<Value> = (0..600).map(|i| Value::Num(i as f64)).collect();
+        let d = ColumnData::from_cells(&cells);
+        let (nr, nv) = d.sorted_numeric();
+        let lane = BinLane::build(&nr, &nv, d.len(), 512).unwrap();
+        assert!(lane.n_bins() > 256, "{}", lane.n_bins());
+        assert!(matches!(lane.ids, BinIds::U16(_)));
+        // Every row's value ≤ its bin edge, > previous edge.
+        for r in 0..600 {
+            let v = r as f64;
+            let b = lane.bin_of_row(r);
+            assert!(v <= lane.edges[b]);
+            if b > 0 {
+                assert!(v > lane.edges[b - 1]);
+            }
+        }
+        // At u8 capacity the narrow lane is kept.
+        let lane = BinLane::build(&nr, &nv, d.len(), 256).unwrap();
+        assert!(lane.n_bins() <= 256);
+        assert!(matches!(lane.ids, BinIds::U8(_)));
+        assert!(!lane.is_exact);
     }
 
     #[test]

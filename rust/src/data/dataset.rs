@@ -1,6 +1,7 @@
 //! Dataset container: hybrid feature columns + labels + interner.
 
 use super::column::Column;
+use super::column_data::BinLane;
 use super::interner::Interner;
 use super::sorted_index::SortedIndex;
 use super::value::Value;
@@ -66,6 +67,45 @@ impl Labels {
     }
 }
 
+/// Dataset-level quantization for binned training: one [`BinLane`] per
+/// numeric-bearing column, all built from the cached [`SortedIndex`] at
+/// a single `max_bins`. Memoized on the dataset next to the sort cache
+/// (see [`Dataset::binned_index`]) so forest bags and boosting rounds
+/// quantize each column exactly once.
+#[derive(Debug, Clone)]
+pub struct BinnedIndex {
+    /// The bin budget the lanes were built with.
+    pub max_bins: usize,
+    /// One entry per feature; `None` when the column has no numeric
+    /// cells (pure categorical / all missing).
+    pub lanes: Vec<Option<BinLane>>,
+}
+
+impl BinnedIndex {
+    /// Quantize every numeric lane of the cached root sort. `O(K·M)` —
+    /// each column's sorted value lane is walked once.
+    pub fn build(index: &SortedIndex, n_rows: usize, max_bins: usize) -> BinnedIndex {
+        let lanes = index
+            .features
+            .iter()
+            .map(|f| BinLane::build(&f.num_rows, &f.num_vals, n_rows, max_bins))
+            .collect();
+        BinnedIndex { max_bins, lanes }
+    }
+
+    /// True when every built lane binned losslessly (each column's
+    /// distinct numeric count ≤ `max_bins`), i.e. binned selection is
+    /// exact-equivalent to the Superfast path.
+    pub fn all_exact(&self) -> bool {
+        self.lanes.iter().flatten().all(|l| l.is_exact)
+    }
+
+    /// Resident bytes of all bin-id lanes and edge tables.
+    pub fn approx_bytes(&self) -> usize {
+        self.lanes.iter().flatten().map(BinLane::approx_bytes).sum()
+    }
+}
+
 /// An in-memory tabular dataset.
 ///
 /// The string interner and class names are `Arc`-shared: row-subset
@@ -86,6 +126,12 @@ pub struct Dataset {
     /// How many times this dataset built a `SortedIndex` (test
     /// instrumentation for the sort-once contract).
     sort_builds: Arc<AtomicUsize>,
+    /// Lazily-built quantization cache for binned training (see
+    /// [`Dataset::binned_index`]).
+    binned: OnceLock<Arc<BinnedIndex>>,
+    /// How many times this dataset built a `BinnedIndex` (test
+    /// instrumentation for the quantize-once contract).
+    bin_builds: Arc<AtomicUsize>,
 }
 
 impl Dataset {
@@ -114,6 +160,8 @@ impl Dataset {
             class_names: Arc::new(Vec::new()),
             sorted: OnceLock::new(),
             sort_builds: Arc::new(AtomicUsize::new(0)),
+            binned: OnceLock::new(),
+            bin_builds: Arc::new(AtomicUsize::new(0)),
         })
     }
 
@@ -164,17 +212,51 @@ impl Dataset {
         })
     }
 
-    /// Drop the memoized [`SortedIndex`] after mutating `columns` or
-    /// regression `labels`; the next fit re-sorts (and the build counter
-    /// advances again).
+    /// Drop the memoized [`SortedIndex`] (and the [`BinnedIndex`]
+    /// derived from it) after mutating `columns` or regression `labels`;
+    /// the next fit re-sorts (and the build counters advance again).
     pub fn invalidate_sort_cache(&mut self) {
         self.sorted = OnceLock::new();
+        self.binned = OnceLock::new();
     }
 
     /// How many times [`Dataset::sorted_index`] actually sorted (0 until
     /// the first fit, then exactly 1 for the lifetime of the dataset).
     pub fn sort_index_builds(&self) -> usize {
         self.sort_builds.load(Ordering::Relaxed)
+    }
+
+    /// The cached dataset-level quantization at `max_bins`, built on
+    /// first use from the sorted index and shared by every binned fit —
+    /// forest bags and boosting rounds reuse the same bin lanes. A call
+    /// with a *different* `max_bins` than the cached one builds a fresh
+    /// uncached instance (the common paths — one configured B per
+    /// training run — always hit the cache).
+    pub fn binned_index(&self, max_bins: usize) -> Arc<BinnedIndex> {
+        let cached = self.binned.get_or_init(|| {
+            self.bin_builds.fetch_add(1, Ordering::Relaxed);
+            Arc::new(BinnedIndex::build(
+                self.sorted_index(),
+                self.n_rows(),
+                max_bins,
+            ))
+        });
+        if cached.max_bins == max_bins {
+            Arc::clone(cached)
+        } else {
+            self.bin_builds.fetch_add(1, Ordering::Relaxed);
+            Arc::new(BinnedIndex::build(
+                self.sorted_index(),
+                self.n_rows(),
+                max_bins,
+            ))
+        }
+    }
+
+    /// How many times [`Dataset::binned_index`] actually quantized (test
+    /// instrumentation for the quantize-once contract).
+    pub fn bin_index_builds(&self) -> usize {
+        self.bin_builds.load(Ordering::Relaxed)
     }
 
     /// Deterministic train/validation/test split by shuffled row ids
@@ -225,12 +307,15 @@ impl Dataset {
             class_names: Arc::clone(&self.class_names),
             sorted: OnceLock::new(),
             sort_builds: Arc::new(AtomicUsize::new(0)),
+            binned: OnceLock::new(),
+            bin_builds: Arc::new(AtomicUsize::new(0)),
         }
     }
 
     /// Approximate resident memory of the feature matrix, in bytes
     /// (typed lanes + kind masks — pure columns carry one lane, only
-    /// hybrid columns pay for both).
+    /// hybrid columns pay for both — plus the bin-id lanes and edge
+    /// tables of the quantization cache when it has been built).
     pub fn approx_bytes(&self) -> usize {
         self.columns
             .iter()
@@ -240,6 +325,7 @@ impl Dataset {
                 Labels::Class { ids, .. } => ids.len() * 2,
                 Labels::Reg { values } => values.len() * 8,
             }
+            + self.binned.get().map_or(0, |b| b.approx_bytes())
     }
 }
 
@@ -341,6 +427,46 @@ mod tests {
         assert_eq!(d.unique_numeric_count(1), 2);
         // Derived from the cached index: no extra sort builds.
         assert_eq!(d.sort_index_builds(), 1);
+    }
+
+    #[test]
+    fn binned_index_builds_once_per_bin_budget() {
+        let d = tiny();
+        assert_eq!(d.bin_index_builds(), 0);
+        let a = d.binned_index(8);
+        let b = d.binned_index(8);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(d.bin_index_builds(), 1);
+        // tiny() columns have ≤ 2 distinct numeric values each → exact.
+        assert!(a.all_exact());
+        assert_eq!(a.lanes.len(), 2);
+        assert!(a.lanes.iter().all(Option::is_some));
+        // A different budget rebuilds (uncached) without disturbing the
+        // cached instance.
+        let c = d.binned_index(4);
+        assert_eq!(c.max_bins, 4);
+        assert_eq!(d.bin_index_builds(), 2);
+        assert!(Arc::ptr_eq(&d.binned_index(8), &a));
+        assert_eq!(d.bin_index_builds(), 2);
+    }
+
+    #[test]
+    fn approx_bytes_counts_built_bin_lanes() {
+        let d = tiny();
+        let before = d.approx_bytes();
+        let idx = d.binned_index(8);
+        assert_eq!(d.approx_bytes(), before + idx.approx_bytes());
+        assert!(idx.approx_bytes() > 0);
+    }
+
+    #[test]
+    fn invalidation_drops_binned_cache_too() {
+        let mut d = tiny();
+        d.binned_index(8);
+        assert_eq!(d.bin_index_builds(), 1);
+        d.invalidate_sort_cache();
+        d.binned_index(8);
+        assert_eq!(d.bin_index_builds(), 2);
     }
 
     #[test]

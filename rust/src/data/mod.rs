@@ -12,8 +12,8 @@ pub mod sorted_index;
 pub mod synth;
 pub mod value;
 
-pub use column_data::{Bitmask, ColumnData, ColumnShard};
-pub use dataset::{Dataset, Labels, TaskKind};
+pub use column_data::{BinIds, BinLane, Bitmask, ColumnData, ColumnShard};
+pub use dataset::{BinnedIndex, Dataset, Labels, TaskKind};
 pub use sorted_index::SortedIndex;
 pub use interner::{CatId, Interner};
 pub use value::Value;

@@ -99,6 +99,13 @@ fn train_config(a: &Args, cfg: &Config) -> Result<udt::TrainConfig> {
                 })?;
             Backend::Xla(std::sync::Arc::new(xla))
         }
+        "binned" => {
+            // Bin budget: `--max-bins` over the `train.max_bins` config
+            // key (both bounds-checked).
+            let max_bins = a.get_usize("max-bins", cfg.max_bins()?)?;
+            udt::tree::validate_max_bins(max_bins)?;
+            Backend::Binned { max_bins }
+        }
         other => return Err(UdtError::usage(format!("unknown backend `{other}`"))),
     };
     let mut builder = Udt::builder()
@@ -204,7 +211,8 @@ fn cmd_train(raw: &[String]) -> Result<()> {
         .opt("scale", "row-count scale for registry datasets", Some("1.0"))
         .opt("task", "classification|regression (CSV input)", Some("classification"))
         .opt("criterion", "info_gain|gini|chi2", None)
-        .opt("backend", "superfast|generic|xla", None)
+        .opt("backend", "superfast|generic|xla|binned", None)
+        .opt("max-bins", "bin budget for --backend binned (2..=65535)", None)
         .opt("max-depth", "maximum depth", None)
         .opt("min-split", "minimum samples to split", None)
         .opt("threads", "worker threads (0 = all cores)", None)
@@ -261,7 +269,8 @@ fn cmd_pipeline(raw: &[String]) -> Result<()> {
         .opt("scale", "row-count scale", Some("1.0"))
         .opt("task", "classification|regression (CSV input)", Some("classification"))
         .opt("criterion", "info_gain|gini|chi2", None)
-        .opt("backend", "superfast|generic|xla", None)
+        .opt("backend", "superfast|generic|xla|binned", None)
+        .opt("max-bins", "bin budget for --backend binned (2..=65535)", None)
         .opt("max-depth", "maximum depth", None)
         .opt("min-split", "minimum samples to split", None)
         .opt("threads", "worker threads", None)
@@ -289,6 +298,11 @@ fn cmd_pipeline(raw: &[String]) -> Result<()> {
         Quality::Accuracy(acc) => println!("  test accuracy = {acc:.4}"),
         Quality::Regression { mae, rmse } => println!("  test MAE = {mae:.4}, RMSE = {rmse:.4}"),
     }
+    println!(
+        "  memory: arena peak {} KiB, histogram scratch {} KiB",
+        rep.peak_arena_bytes / 1024,
+        rep.hist_scratch_bytes / 1024
+    );
     if let Some(out) = a.get("out") {
         SavedModel::new(model, &ds).save(out)?;
         println!("wrote {out} (tuned tree, servable)");
@@ -542,7 +556,8 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
     let cfg = base_config(&a)?;
 
     // `serve --backend` selects the *serve* backend; the shared training
-    // option of the same name (superfast|generic|xla) must not see it.
+    // option of the same name (superfast|generic|xla|binned) must not
+    // see it.
     // Training-from-dataset under `serve` picks its training backend from
     // the `train.backend` config key instead.
     let mut serve_cfg = cfg.serve_config()?;

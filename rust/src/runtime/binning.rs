@@ -1,19 +1,25 @@
-//! Equal-frequency (quantile) binning of a node's numeric rows.
+//! Equal-frequency (quantile) binning of a sorted numeric lane.
 //!
-//! The accelerator path works on fixed-width histograms (B bins), the
-//! standard way to map a per-unique-value scan onto fixed VMEM tiles
-//! (DESIGN.md §2 Hardware-Adaptation). Bin edges are actual data values,
-//! so a bin-boundary split is a valid `≤ edge` predicate; when the node
-//! has ≤ B distinct values the binning is exact and the XLA path scores
+//! Two consumers share this helper: the accelerator path maps a
+//! per-unique-value scan onto fixed VMEM tiles (DESIGN.md §2
+//! Hardware-Adaptation), and the binned training backend
+//! (`selection/binned.rs`) quantizes whole dataset columns once into
+//! `u8`/`u16` bin-id lanes. Bin edges are actual data values, so a
+//! bin-boundary split is a valid `≤ edge` predicate; when the lane has
+//! ≤ B distinct values the binning is exact and a binned scan scores
 //! exactly the candidates the native path does.
 
-/// Binning of one feature at one node.
+/// Binning of one ascending value lane.
 #[derive(Debug, Clone)]
 pub struct Binning {
     /// Upper edge value of each used bin (ascending). `edges.len() ≤ B`.
     pub edges: Vec<f64>,
-    /// Bin id of every input row, aligned with the `sorted_rows` input.
+    /// Bin id of every input row, aligned with the sorted input.
     pub bin_of_sorted: Vec<u32>,
+    /// True when every distinct-value run got its own bin (distinct
+    /// values ≤ `max_bins`), so a binned scan is lossless: each bin is
+    /// one distinct value and its edge *is* that value.
+    pub is_exact: bool,
 }
 
 impl Binning {
@@ -30,13 +36,17 @@ pub fn quantile_bins(values: &[f64], max_bins: usize) -> Option<Binning> {
     if n == 0 || max_bins == 0 {
         return None;
     }
-    let mut edges: Vec<f64> = Vec::new();
-    let mut bin_of_sorted: Vec<u32> = Vec::with_capacity(n);
+    // Pre-sized: at most min(max_bins, n) edges, exactly n bin ids. The
+    // id lane is bulk-filled one equal-value run at a time instead of
+    // pushed per row.
+    let mut edges: Vec<f64> = Vec::with_capacity(max_bins.min(n));
+    let mut bin_of_sorted: Vec<u32> = vec![0; n];
 
     // Distinct-value runs, assigned to bins by a target per-bin count.
     let target = (n as f64 / max_bins as f64).max(1.0);
     let mut current_bin = 0u32;
     let mut in_bin = 0usize; // rows already placed in current bin
+    let mut n_runs = 0usize; // distinct-value runs seen
     let mut i = 0usize;
     while i < n {
         // Find the run of equal values.
@@ -46,6 +56,7 @@ pub fn quantile_bins(values: &[f64], max_bins: usize) -> Option<Binning> {
             j += 1;
         }
         let run = j - i;
+        n_runs += 1;
         // Close the current bin if adding this run overshoots the target
         // (and the bin is non-empty, and more bins are available).
         if in_bin > 0
@@ -60,15 +71,15 @@ pub fn quantile_bins(values: &[f64], max_bins: usize) -> Option<Binning> {
         } else {
             *edges.last_mut().unwrap() = v;
         }
-        for _ in 0..run {
-            bin_of_sorted.push(current_bin);
-        }
+        bin_of_sorted[i..j].fill(current_bin);
         in_bin += run;
         i = j;
     }
+    let is_exact = edges.len() == n_runs;
     Some(Binning {
         edges,
         bin_of_sorted,
+        is_exact,
     })
 }
 
@@ -87,6 +98,7 @@ mod tests {
         let b = bin_values(&vals, 8);
         assert_eq!(b.edges, vec![1.0, 2.0, 3.0, 4.0]);
         assert_eq!(b.bin_of_sorted, vec![0, 1, 2, 3]);
+        assert!(b.is_exact);
     }
 
     #[test]
@@ -96,6 +108,7 @@ mod tests {
         assert_eq!(b.edges, vec![1.0, 2.0]);
         assert_eq!(&b.bin_of_sorted[..4], &[0, 0, 0, 0]);
         assert_eq!(&b.bin_of_sorted[4..], &[1, 1, 1, 1]);
+        assert!(b.is_exact);
     }
 
     #[test]
@@ -103,6 +116,7 @@ mod tests {
         let vals: Vec<f64> = (0..1000).map(|i| i as f64).collect();
         let b = bin_values(&vals, 16);
         assert!(b.n_bins() <= 16);
+        assert!(!b.is_exact);
         // Equal-frequency: bins are balanced within a factor of ~2.
         let mut counts = vec![0usize; b.n_bins()];
         for &bin in &b.bin_of_sorted {
@@ -142,5 +156,17 @@ mod tests {
         let b = bin_values(&[7.0, 7.0, 7.0], 4);
         assert_eq!(b.edges, vec![7.0]);
         assert_eq!(b.bin_of_sorted, vec![0, 0, 0]);
+        assert!(b.is_exact);
+    }
+
+    #[test]
+    fn exact_flag_tracks_distinct_run_count() {
+        // 4 distinct runs, 4 bins available → exact.
+        let vals = [1.0, 1.0, 2.0, 3.0, 3.0, 4.0];
+        assert!(bin_values(&vals, 4).is_exact);
+        // Same data, 3 bins → at least one bin merges runs → lossy.
+        let b = bin_values(&vals, 3);
+        assert!(!b.is_exact);
+        assert!(b.n_bins() <= 3);
     }
 }

@@ -1,0 +1,433 @@
+//! Histogram-binned split selection over pre-quantized bin lanes.
+//!
+//! The Superfast engine pays `O(M_node)` per feature per node to walk
+//! the sorted numeric rows. The binned engine replaces that walk with a
+//! per-node per-feature *label histogram* — `n_bins × C` class counts
+//! (or `n_bins × (count, sum)` for regression) accumulated in `O(rows)`
+//! by the builder — and scans it in `O(B)` for the best `≤ edge` /
+//! `> edge` candidate. Because the builder derives the larger child's
+//! histograms by parent-minus-sibling subtraction (see
+//! `tree/builder.rs::BinnedState`), the amortized accumulate cost per
+//! level is the *smaller* side of every split.
+//!
+//! Scoring replicates the Superfast formulas and tie-breaking exactly
+//! (same `score_with_totals` closures, same empty-side guards, same
+//! strictly-greater `Consider`), so when the dataset's bin lanes are
+//! lossless (`BinLane::is_exact`: every column's distinct count ≤
+//! `max_bins`) the chosen predicate, gain and partition are identical to
+//! the exact engine — the property suite in `tests/prop_binned.rs`
+//! enforces this. Categorical `= c` candidates carry no histogram; they
+//! reuse the grouped walk over the maintained categorical lists, same
+//! as the exact engine's pass 3.
+
+use super::heuristic::{sse_score, Criterion};
+use super::split::SplitOp;
+use super::superfast::{Consider, FeatureView, LabelsView, ScoredSplit, Scratch};
+use crate::data::interner::CatId;
+
+/// Histogram layout width per bin: one slot per class, or `(count, sum)`
+/// for regression.
+pub fn hist_width(labels: &LabelsView) -> usize {
+    match labels {
+        LabelsView::Class { n_classes, .. } => *n_classes,
+        LabelsView::Reg { .. } => 2,
+    }
+}
+
+/// Best split on one feature from its node histogram.
+///
+/// `hist` is the node's label histogram for this feature
+/// (`edges.len() * hist_width` slots); `edges` is the column's bin-edge
+/// table (actual data values, so every candidate is a valid predicate).
+/// Builder contract: `view.class_counts` holds the node's class counts
+/// (classification), `view.reg_stats` the node `(n, sum)` (regression),
+/// and the categorical lists are maintained (`cat_lists_valid`).
+pub fn best_split_on_feat_binned(
+    view: &FeatureView,
+    labels: &LabelsView,
+    criterion: Criterion,
+    hist: &[f64],
+    edges: &[f64],
+    scratch: &mut Scratch,
+) -> Option<ScoredSplit> {
+    match (labels, criterion) {
+        (LabelsView::Class { ids, n_classes }, Criterion::Class(crit)) => {
+            classification(view, ids, *n_classes, crit, hist, edges, scratch)
+        }
+        (LabelsView::Reg { values }, Criterion::Sse) => {
+            regression(view, values, hist, edges)
+        }
+        _ => panic!("criterion/labels kind mismatch"),
+    }
+}
+
+fn classification(
+    view: &FeatureView,
+    ids: &[u16],
+    n_classes: usize,
+    crit: super::heuristic::ClassCriterion,
+    hist: &[f64],
+    edges: &[f64],
+    scratch: &mut Scratch,
+) -> Option<ScoredSplit> {
+    let c = n_classes;
+    let n_bins = edges.len();
+    debug_assert_eq!(hist.len(), n_bins * c);
+    debug_assert_eq!(view.class_counts.len(), c, "builder provides node stats");
+    scratch.reset_class(c);
+
+    // Totals: numeric per-class counts from the histogram, the rest
+    // (categorical + missing rows — false under every numeric candidate)
+    // by subtraction from the node's class counts.
+    for row in hist.chunks_exact(c) {
+        for y in 0..c {
+            scratch.tot_num[y] += row[y];
+        }
+    }
+    for y in 0..c {
+        scratch.rest[y] = view.class_counts[y] - scratch.tot_num[y];
+    }
+    let n_num_total: f64 = scratch.tot_num.iter().sum();
+    let rest_total: f64 = scratch.rest.iter().sum();
+
+    let mut best: Option<ScoredSplit> = None;
+
+    // `O(B)` prefix walk over the bins. Bins empty *in this node* are
+    // skipped: their candidates induce the same partition as the last
+    // non-empty bin's (never strictly better), and skipping keeps the
+    // candidate set identical to the exact engine's distinct-value walk
+    // when the lane is lossless.
+    let mut cum_total = 0.0f64;
+    for (b, row) in hist.chunks_exact(c).enumerate() {
+        let bin_n: f64 = row.iter().sum();
+        if bin_n == 0.0 {
+            continue;
+        }
+        for y in 0..c {
+            scratch.cum[y] += row[y];
+        }
+        cum_total += bin_n;
+        let x = edges[b];
+        let (cum, tot_num, rest) = (&scratch.cum, &scratch.tot_num, &scratch.rest);
+        // `≤ x`: pos = prefix counts; neg = remaining numerics + rest.
+        let pos_total = cum_total;
+        let neg_total = n_num_total - cum_total + rest_total;
+        if pos_total > 0.0 && neg_total > 0.0 {
+            let score = crit.score_with_totals(c, pos_total, neg_total, |y| {
+                (cum[y], tot_num[y] - cum[y] + rest[y])
+            });
+            best.consider(score, SplitOp::Le(x));
+        }
+        // `> x`: pos = suffix numerics; neg = prefix + rest.
+        let pos_total = n_num_total - cum_total;
+        let neg_total = cum_total + rest_total;
+        if pos_total > 0.0 && neg_total > 0.0 {
+            let score = crit.score_with_totals(c, pos_total, neg_total, |y| {
+                (tot_num[y] - cum[y], cum[y] + rest[y])
+            });
+            best.consider(score, SplitOp::Gt(x));
+        }
+    }
+
+    // Categorical `= x` candidates: no histogram — grouped walk over the
+    // maintained categorical lists, exactly the exact engine's pass 3.
+    let all_total = n_num_total + rest_total;
+    let cat_ids = view.sorted_cat_ids;
+    let cat_rows = view.sorted_cat_rows;
+    let inline_cat_labs = view.sorted_cat_labs.len() == cat_ids.len();
+    let mut i = 0;
+    while i < cat_ids.len() {
+        let id = cat_ids[i];
+        for y in 0..c {
+            scratch.pos[y] = 0.0;
+        }
+        let mut pos_total = 0.0f64;
+        while i < cat_ids.len() && cat_ids[i] == id {
+            let y = if inline_cat_labs {
+                view.sorted_cat_labs[i] as usize
+            } else {
+                ids[cat_rows[i] as usize] as usize
+            };
+            scratch.pos[y] += 1.0;
+            pos_total += 1.0;
+            i += 1;
+        }
+        let neg_total = all_total - pos_total;
+        if pos_total > 0.0 && neg_total > 0.0 {
+            for y in 0..c {
+                scratch.neg[y] = scratch.tot_num[y] + scratch.rest[y] - scratch.pos[y];
+            }
+            let score = crit.score(&scratch.pos, &scratch.neg);
+            best.consider(score, SplitOp::Eq(CatId(id)));
+        }
+    }
+
+    best
+}
+
+fn regression(
+    view: &FeatureView,
+    values: &[f64],
+    hist: &[f64],
+    edges: &[f64],
+) -> Option<ScoredSplit> {
+    let n_bins = edges.len();
+    debug_assert_eq!(hist.len(), n_bins * 2);
+    // Totals: numeric (count, sum) from the histogram, the rest by
+    // subtraction from the node stats — same sequence as the exact
+    // engine's fast path.
+    let (mut n_num, mut sum_num) = (0.0f64, 0.0f64);
+    for pair in hist.chunks_exact(2) {
+        n_num += pair[0];
+        sum_num += pair[1];
+    }
+    let (n_all_s, sum_all_s) = view.reg_stats.expect("builder provides node reg stats");
+    let n_rest = n_all_s - n_num;
+    let sum_rest = sum_all_s - sum_num;
+    let (n_all, sum_all) = (n_num + n_rest, sum_num + sum_rest);
+
+    let mut best: Option<ScoredSplit> = None;
+
+    // `O(B)` prefix walk (empty-in-node bins skipped, as above).
+    let (mut cum_n, mut cum_sum) = (0.0f64, 0.0f64);
+    for (b, pair) in hist.chunks_exact(2).enumerate() {
+        if pair[0] == 0.0 {
+            continue;
+        }
+        cum_n += pair[0];
+        cum_sum += pair[1];
+        let x = edges[b];
+        // `≤ x`
+        let score = sse_score(cum_n, cum_sum, n_all - cum_n, sum_all - cum_sum);
+        best.consider(score, SplitOp::Le(x));
+        // `> x`
+        let score = sse_score(
+            n_num - cum_n,
+            sum_num - cum_sum,
+            cum_n + n_rest,
+            cum_sum + sum_rest,
+        );
+        best.consider(score, SplitOp::Gt(x));
+    }
+
+    // Categorical candidates: grouped walk, exact engine's pass 3.
+    let cat_ids = view.sorted_cat_ids;
+    let cat_rows = view.sorted_cat_rows;
+    let mut i = 0;
+    while i < cat_ids.len() {
+        let id = cat_ids[i];
+        let (mut cn, mut cs) = (0.0f64, 0.0f64);
+        while i < cat_ids.len() && cat_ids[i] == id {
+            cn += 1.0;
+            cs += values[cat_rows[i] as usize];
+            i += 1;
+        }
+        let score = sse_score(cn, cs, n_all - cn, sum_all - cs);
+        best.consider(score, SplitOp::Eq(CatId(id)));
+    }
+
+    best
+}
+
+/// Accumulate one node's rows into a feature histogram (classification:
+/// `+1` at `[bin · C + class]`; regression: `(count, sum)` at
+/// `[bin · 2]`). `rows` is the node's numeric row list for the feature;
+/// `bin_of_row` is the column's dataset-level bin lane. `labs` is the
+/// builder-maintained label list parallel to `rows` (may be empty —
+/// labels are then looked up through the row ids).
+pub fn accumulate(
+    hist: &mut [f64],
+    rows: &[u32],
+    labs: &[u16],
+    labels: &LabelsView,
+    bin_of_row: impl Fn(usize) -> usize,
+) {
+    match labels {
+        LabelsView::Class { ids, n_classes } => {
+            let c = *n_classes;
+            if labs.len() == rows.len() {
+                for (i, &r) in rows.iter().enumerate() {
+                    hist[bin_of_row(r as usize) * c + labs[i] as usize] += 1.0;
+                }
+            } else {
+                for &r in rows {
+                    hist[bin_of_row(r as usize) * c + ids[r as usize] as usize] += 1.0;
+                }
+            }
+        }
+        LabelsView::Reg { values } => {
+            for &r in rows {
+                let b = bin_of_row(r as usize) * 2;
+                hist[b] += 1.0;
+                hist[b + 1] += values[r as usize];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::column::Column;
+    use crate::data::column_data::BinLane;
+    use crate::data::value::Value;
+    use crate::selection::heuristic::ClassCriterion;
+    use crate::selection::superfast::best_split_on_feat;
+
+    /// Build a lossless lane + node histogram for the whole column and
+    /// check the binned scorer against the exact engine.
+    fn assert_matches_exact(col: &Column, labels: LabelsView, criterion: Criterion) {
+        let n = col.len();
+        let rows: Vec<u32> = (0..n as u32).collect();
+        let (sorted_rows, sorted_vals) = col.sorted_numeric();
+        let lane = BinLane::build(&sorted_rows, &sorted_vals, n, 1 << 16);
+        let (cat_rows, cat_ids) = col.sorted_categorical();
+
+        // Exact oracle (conservative view: stats pass recomputes totals).
+        let view = FeatureView::new(0, col, &rows, &sorted_rows, &sorted_vals);
+        let exact = best_split_on_feat(&view, &labels, criterion);
+
+        // Binned view needs the builder-contract fields filled in.
+        let mut class_counts = Vec::new();
+        let mut reg_stats = None;
+        match &labels {
+            LabelsView::Class { ids, n_classes } => {
+                class_counts.resize(*n_classes, 0.0);
+                for &r in &rows {
+                    class_counts[ids[r as usize] as usize] += 1.0;
+                }
+            }
+            LabelsView::Reg { values } => {
+                let sum: f64 = rows.iter().map(|&r| values[r as usize]).sum();
+                reg_stats = Some((n as f64, sum));
+            }
+        }
+        let mut view = FeatureView::new(0, col, &rows, &sorted_rows, &sorted_vals);
+        view.class_counts = &class_counts;
+        view.reg_stats = reg_stats;
+        view.sorted_cat_rows = &cat_rows;
+        view.sorted_cat_ids = &cat_ids;
+        view.cat_lists_valid = true;
+
+        let binned = match &lane {
+            Some(lane) => {
+                assert!(lane.is_exact);
+                let width = hist_width(&labels);
+                let mut hist = vec![0.0; lane.n_bins() * width];
+                accumulate(&mut hist, &sorted_rows, &[], &labels, |r| {
+                    lane.bin_of_row(r)
+                });
+                let mut scratch = Scratch::new();
+                best_split_on_feat_binned(
+                    &view,
+                    &labels,
+                    criterion,
+                    &hist,
+                    &lane.edges,
+                    &mut scratch,
+                )
+            }
+            None => {
+                // No numeric cells: empty histogram, empty edge table.
+                let mut scratch = Scratch::new();
+                best_split_on_feat_binned(&view, &labels, criterion, &[], &[], &mut scratch)
+            }
+        };
+        assert_eq!(
+            binned.map(|s| s.op),
+            exact.map(|s| s.op),
+            "op mismatch on {}",
+            col.name
+        );
+        if let (Some(b), Some(e)) = (binned, exact) {
+            assert!((b.score - e.score).abs() < 1e-12, "{} vs {}", b.score, e.score);
+        }
+    }
+
+    #[test]
+    fn matches_exact_on_paper_example() {
+        let (col, labels, _) = crate::selection::superfast::testdata::paper_example();
+        assert_matches_exact(
+            &col,
+            LabelsView::Class {
+                ids: &labels,
+                n_classes: 3,
+            },
+            Criterion::Class(ClassCriterion::InfoGain),
+        );
+    }
+
+    #[test]
+    fn matches_exact_on_every_criterion() {
+        let (col, labels, _) = crate::selection::superfast::testdata::paper_example();
+        for crit in [
+            ClassCriterion::InfoGain,
+            ClassCriterion::Gini,
+            ClassCriterion::ChiSquare,
+        ] {
+            assert_matches_exact(
+                &col,
+                LabelsView::Class {
+                    ids: &labels,
+                    n_classes: 3,
+                },
+                Criterion::Class(crit),
+            );
+        }
+    }
+
+    #[test]
+    fn matches_exact_on_regression_with_missing() {
+        let col = Column::new(
+            "f",
+            vec![
+                Value::Num(1.0),
+                Value::Num(2.0),
+                Value::Num(2.0),
+                Value::Missing,
+                Value::Num(10.0),
+            ],
+        );
+        let targets = vec![5.0, 5.5, 4.5, 30.0, 50.0];
+        assert_matches_exact(&col, LabelsView::Reg { values: &targets }, Criterion::Sse);
+    }
+
+    #[test]
+    fn lossy_bins_pick_a_valid_edge() {
+        // 100 distinct values, 4 bins: the binned scorer must return one
+        // of the bin edges (a real data value) with both sides non-empty.
+        let cells: Vec<Value> = (0..100).map(|i| Value::Num(i as f64)).collect();
+        let col = Column::new("f", cells);
+        let ids: Vec<u16> = (0..100).map(|i| (i >= 50) as u16).collect();
+        let labels = LabelsView::Class {
+            ids: &ids,
+            n_classes: 2,
+        };
+        let rows: Vec<u32> = (0..100).collect();
+        let (sorted_rows, sorted_vals) = col.sorted_numeric();
+        let lane = BinLane::build(&sorted_rows, &sorted_vals, 100, 4).unwrap();
+        assert!(!lane.is_exact);
+        let mut hist = vec![0.0; lane.n_bins() * 2];
+        accumulate(&mut hist, &sorted_rows, &[], &labels, |r| lane.bin_of_row(r));
+        let class_counts = [50.0, 50.0];
+        let mut view = FeatureView::new(0, &col, &rows, &sorted_rows, &sorted_vals);
+        view.class_counts = &class_counts;
+        view.cat_lists_valid = true;
+        let mut scratch = Scratch::new();
+        let best = best_split_on_feat_binned(
+            &view,
+            &labels,
+            Criterion::Class(ClassCriterion::Gini),
+            &hist,
+            &lane.edges,
+            &mut scratch,
+        )
+        .unwrap();
+        match best.op {
+            SplitOp::Le(x) | SplitOp::Gt(x) => {
+                assert!(lane.edges.contains(&x), "edge {x} not in table");
+            }
+            SplitOp::Eq(_) => panic!("numeric column produced Eq"),
+        }
+    }
+}

@@ -4,10 +4,14 @@
 //! * [`heuristic`] — split criteria (information gain, Gini, χ², SSE).
 //! * [`superfast`] — Superfast Selection: `O(M + N·C)` per feature via a
 //!   single statistics pass + prefix sums (paper Algorithms 2 & 4).
+//! * [`binned`] — histogram-binned selection: `O(B)` scans over
+//!   pre-quantized bin lanes with parent-minus-sibling subtraction in
+//!   the builder.
 //! * [`generic`] — the `O(M·N)` baseline (paper Algorithm 1).
 //! * [`xla_backend`] — alternate large-node backend that executes the
 //!   AOT-compiled JAX/Pallas kernels through PJRT.
 
+pub mod binned;
 pub mod feature_rank;
 pub mod generic;
 pub mod heuristic;

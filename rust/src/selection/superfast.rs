@@ -109,8 +109,9 @@ pub struct ScoredSplit {
 }
 
 /// `Option<ScoredSplit>` upgrade helper: keep the strictly-better
-/// candidate; ignore non-finite scores (empty-side sentinels).
-trait Consider {
+/// candidate; ignore non-finite scores (empty-side sentinels). Shared
+/// with the binned engine so both tie-break identically.
+pub(crate) trait Consider {
     fn consider(&mut self, score: f64, op: SplitOp);
 }
 
@@ -132,11 +133,11 @@ impl Consider for Option<ScoredSplit> {
 /// hot loop.
 #[derive(Debug, Default)]
 pub struct Scratch {
-    cum: Vec<f64>,
-    tot_num: Vec<f64>,
-    rest: Vec<f64>,
-    pos: Vec<f64>,
-    neg: Vec<f64>,
+    pub(crate) cum: Vec<f64>,
+    pub(crate) tot_num: Vec<f64>,
+    pub(crate) rest: Vec<f64>,
+    pub(crate) pos: Vec<f64>,
+    pub(crate) neg: Vec<f64>,
     cat: BTreeMap<u32, Vec<f64>>,
     cat_reg: BTreeMap<u32, (f64, f64)>,
 }
@@ -146,7 +147,7 @@ impl Scratch {
         Self::default()
     }
 
-    fn reset_class(&mut self, c: usize) {
+    pub(crate) fn reset_class(&mut self, c: usize) {
         for v in [&mut self.cum, &mut self.tot_num, &mut self.rest, &mut self.pos, &mut self.neg]
         {
             v.clear();

@@ -31,7 +31,7 @@
 //! order (round-major, class-minor), so compiled predictions are
 //! bit-identical to boxed ones.
 
-use super::{predict, require_task, NodeLabel, RegStrategy, TrainConfig, Tree};
+use super::{predict, require_task, Backend, NodeLabel, RegStrategy, TrainConfig, Tree};
 use crate::coordinator::parallel::parallel_map_chunked;
 use crate::data::dataset::{Dataset, Labels, TaskKind};
 use crate::data::value::Value;
@@ -57,6 +57,12 @@ pub struct BoostedConfig {
     pub seed: u64,
     /// Worker threads for each round's fit (0 = all cores).
     pub n_threads: usize,
+    /// Selection engine for every round's tree. [`Backend::Binned`] is
+    /// the natural fit for boosting (many shallow trees over the same
+    /// quantize-once bin lanes); residual fits always run
+    /// [`RegStrategy::DirectSse`], which is exactly the regression mode
+    /// the binned engine supports.
+    pub backend: Backend,
 }
 
 impl Default for BoostedConfig {
@@ -68,6 +74,7 @@ impl Default for BoostedConfig {
             subsample: 1.0,
             seed: 0xB0_0575,
             n_threads: 1,
+            backend: Backend::Superfast,
         }
     }
 }
@@ -93,6 +100,9 @@ impl BoostedConfig {
                 self.subsample
             )));
         }
+        if let Backend::Binned { max_bins } = &self.backend {
+            super::validate_max_bins(*max_bins)?;
+        }
         Ok(())
     }
 
@@ -102,6 +112,7 @@ impl BoostedConfig {
             max_depth: self.max_depth,
             reg_strategy: RegStrategy::DirectSse,
             n_threads: self.n_threads,
+            backend: self.backend.clone(),
             ..Default::default()
         }
     }
@@ -518,6 +529,29 @@ mod tests {
         )
         .unwrap();
         assert_eq!(cds.sort_index_builds(), 1);
+    }
+
+    #[test]
+    fn binned_backend_boosts_and_quantizes_once() {
+        let ds = reg_ds();
+        let cfg = |n_rounds| BoostedConfig {
+            n_rounds,
+            backend: Backend::Binned { max_bins: 64 },
+            ..Default::default()
+        };
+        let few = Boosted::fit(&ds, &cfg(1)).unwrap();
+        let many = Boosted::fit(&ds, &cfg(25)).unwrap();
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let (_, rmse_few) = few.regression_error(&ds, &rows).unwrap();
+        let (_, rmse_many) = many.regression_error(&ds, &rows).unwrap();
+        assert!(
+            rmse_many < rmse_few,
+            "25 binned rounds ({rmse_many}) must beat 1 ({rmse_few})"
+        );
+        // Quantize once: 26 residual fits across both runs share a
+        // single bin-lane build, just like they share one root sort.
+        assert_eq!(ds.bin_index_builds(), 1);
+        assert_eq!(ds.sort_index_builds(), 1);
     }
 
     #[test]

@@ -28,19 +28,21 @@
 //! parallelism), the arena partition parallelizes over features — each
 //! worker owns one feature's arrays, so both phases are lock-free.
 
-use super::frontier::{ArenaStats, Frontier, SplitTask};
+use super::frontier::{ArenaStats, Frontier, LevelNode, SplitTask};
 use super::label_split;
 use super::{Backend, Node, NodeLabel, RegStrategy, TrainConfig, Tree};
 use crate::coordinator::parallel::{effective_threads, parallel_map_scratch};
-use crate::data::dataset::{Dataset, Labels, TaskKind};
+use crate::data::dataset::{BinnedIndex, Dataset, Labels, TaskKind};
 use crate::data::sorted_index::SortedIndex;
 use crate::error::{Result, UdtError};
+use crate::selection::binned::{accumulate, best_split_on_feat_binned, hist_width};
 use crate::selection::generic::best_split_on_feat_generic;
 use crate::selection::heuristic::Criterion;
 use crate::selection::split::SplitPredicate;
 use crate::selection::superfast::{
     best_split_on_feat_with, FeatureView, LabelsView, Scratch, ScoredSplit,
 };
+use std::sync::Arc;
 
 /// Outcome of processing one frontier node.
 struct Decision {
@@ -163,6 +165,16 @@ fn fit_rows_core(
             )));
         }
     }
+    if let Backend::Binned { max_bins } = &config.backend {
+        super::validate_max_bins(*max_bins)?;
+        if matches!(labels, Labels::Reg { .. }) && config.reg_strategy == RegStrategy::LabelSplit {
+            return Err(UdtError::invalid_config(
+                "the binned backend requires RegStrategy::DirectSse for regression \
+                 (the label-split strategy re-labels every node, which defeats \
+                 parent-minus-sibling histogram subtraction)",
+            ));
+        }
+    }
     if let Some(over) = labels_override {
         if over.len() != ds.n_rows() {
             return Err(UdtError::data(format!(
@@ -208,6 +220,27 @@ fn fit_rows_core(
         bytes_at_root,
         peak_bytes: bytes_at_root,
         final_bytes: bytes_at_root,
+        hist_scratch_bytes: 0,
+        hist_rows_accumulated: 0,
+    };
+
+    // Binned backend: the dataset-level bin lanes are built once (and
+    // cached on the dataset, like the sort itself); the per-node
+    // histogram state below pays one full accumulation at the root and
+    // from then on only ever walks the *smaller* child of each split —
+    // the larger sibling's histograms come from parent-minus-sibling
+    // subtraction.
+    let mut binned_state = if let Backend::Binned { max_bins } = &config.backend {
+        let view = LabelsView::from_labels(labels);
+        let mut st = BinnedState::new(
+            ds.binned_index(*max_bins),
+            hist_width(&view),
+            config.max_depth,
+        );
+        st.begin_root(&frontier, &view);
+        Some(st)
+    } else {
+        None
     };
 
     let ctx = FitCtx {
@@ -239,7 +272,16 @@ fn fit_rows_core(
             (0..n_level).collect(),
             n_threads,
             BuildScratch::new,
-            |slot, scratch| process_node(&ctx, &frontier, slot, scratch, feature_threads),
+            |slot, scratch| {
+                process_node(
+                    &ctx,
+                    &frontier,
+                    slot,
+                    scratch,
+                    binned_state.as_ref(),
+                    feature_threads,
+                )
+            },
         );
 
         // Apply decisions in slot order: node ids stay deterministic
@@ -278,10 +320,246 @@ fn fit_rows_core(
         frontier.partition_rows(ds, &mut splits);
         frontier.partition_features(&splits, n_threads);
         frontier.advance(&splits, &children);
+        if let Some(st) = binned_state.as_mut() {
+            st.advance_level(&frontier, &splits, &LabelsView::from_labels(labels));
+        }
         stats.peak_bytes = stats.peak_bytes.max(frontier.arena_bytes());
     }
     stats.final_bytes = frontier.arena_bytes();
+    if let Some(st) = &binned_state {
+        stats.hist_scratch_bytes = st.peak_bytes;
+        stats.hist_rows_accumulated = st.rows_accumulated;
+    }
     Ok((tree, stats))
+}
+
+/// Per-fit histogram state of the binned backend.
+///
+/// One contiguous f64 block per *tracked* node holds all its per-feature
+/// label histograms: feature `f`'s histogram occupies
+/// `feat_off[f]..feat_off[f + 1]` within the block (`n_bins_f × width`
+/// slots; zero-sized for lane-less features). Blocks are double-buffered
+/// across levels like the arenas. A node is tracked only while it can
+/// still split (`depth < max_depth`) and is large enough that the `O(B)`
+/// histogram scan beats the exact engine's direct walk
+/// (`row_len ≥ max_bins`); untracked nodes — and every descendant of an
+/// untracked node — fall back to exact Superfast selection.
+///
+/// The subtraction invariant: after a split, only the **smaller** child
+/// is ever accumulated (`O(rows_small)`); a tracked larger sibling is
+/// derived as `parent − smaller` in `O(block)`. When the smaller child
+/// is itself untracked it is accumulated into `temp` just for the
+/// derivation — still strictly cheaper than walking the larger side.
+struct BinnedState {
+    binned: Arc<BinnedIndex>,
+    /// Block-relative histogram offsets per feature; `feat_off[k]` is
+    /// the block length.
+    feat_off: Vec<usize>,
+    /// Minimum tracked node size (`= max_bins`).
+    min_rows: usize,
+    max_depth: usize,
+    /// Block index per current-level slot (`None` = untracked).
+    slot_block: Vec<Option<usize>>,
+    hists: Vec<f64>,
+    next_slot_block: Vec<Option<usize>>,
+    next_hists: Vec<f64>,
+    /// Scratch block for smaller children that are themselves untracked
+    /// but whose sibling is derived by subtraction.
+    temp: Vec<f64>,
+    /// Total per-feature numeric row entries walked by `accumulate` —
+    /// the subtraction witness (root + smaller children only).
+    rows_accumulated: usize,
+    /// Peak bytes of the histogram buffers.
+    peak_bytes: usize,
+}
+
+impl BinnedState {
+    fn new(binned: Arc<BinnedIndex>, width: usize, max_depth: usize) -> Self {
+        let mut feat_off = Vec::with_capacity(binned.lanes.len() + 1);
+        let mut off = 0usize;
+        for lane in &binned.lanes {
+            feat_off.push(off);
+            if let Some(lane) = lane {
+                off += lane.n_bins() * width;
+            }
+        }
+        feat_off.push(off);
+        BinnedState {
+            min_rows: binned.max_bins,
+            binned,
+            feat_off,
+            max_depth,
+            slot_block: Vec::new(),
+            hists: Vec::new(),
+            next_slot_block: Vec::new(),
+            next_hists: Vec::new(),
+            temp: Vec::new(),
+            rows_accumulated: 0,
+            peak_bytes: 0,
+        }
+    }
+
+    fn block_len(&self) -> usize {
+        *self.feat_off.last().unwrap()
+    }
+
+    fn tracks(&self, node: &LevelNode) -> bool {
+        (node.row_len as usize) >= self.min_rows && (node.depth as usize) < self.max_depth
+    }
+
+    /// Block index of a current-level slot, `None` when untracked.
+    fn block_of(&self, slot: usize) -> Option<usize> {
+        self.slot_block[slot]
+    }
+
+    /// Feature `f`'s histogram within a current-level block.
+    fn hist(&self, block: usize, f: usize) -> &[f64] {
+        let base = block * self.block_len();
+        &self.hists[base + self.feat_off[f]..base + self.feat_off[f + 1]]
+    }
+
+    /// Accumulate the root node — the only full-node accumulation of the
+    /// whole fit.
+    fn begin_root(&mut self, frontier: &Frontier, labels: &LabelsView) {
+        let block = self.block_len();
+        self.slot_block.clear();
+        self.slot_block.push(None);
+        if self.tracks(&frontier.node(0)) {
+            self.slot_block[0] = Some(0);
+            self.hists.clear();
+            self.hists.resize(block, 0.0);
+            let walked = accumulate_node_hists(
+                &self.binned,
+                &self.feat_off,
+                frontier,
+                0,
+                labels,
+                &mut self.hists,
+            );
+            self.rows_accumulated += walked;
+        }
+        self.update_peak();
+    }
+
+    /// Advance to the level the frontier just switched to: accumulate
+    /// the smaller child of every split, derive tracked larger siblings
+    /// by parent-minus-sibling subtraction. Call right after
+    /// [`Frontier::advance`] (split `s`'s children sit at new-level
+    /// slots `2s`/`2s+1`; `splits[s].slot` still names the parent's old
+    /// slot).
+    fn advance_level(&mut self, frontier: &Frontier, splits: &[SplitTask], labels: &LabelsView) {
+        let block = self.block_len();
+        self.next_slot_block.clear();
+        self.next_slot_block.resize(frontier.n_nodes(), None);
+
+        struct Plan {
+            parent_block: usize,
+            small_slot: usize,
+            small_block: Option<usize>,
+            large_block: Option<usize>,
+        }
+        let mut plans: Vec<Plan> = Vec::with_capacity(splits.len());
+        let mut n_blocks = 0usize;
+        for (s, t) in splits.iter().enumerate() {
+            let Some(parent_block) = self.slot_block[t.slot] else {
+                continue; // untracked parents beget untracked children
+            };
+            let (pos, neg) = (frontier.node(2 * s), frontier.node(2 * s + 1));
+            let (small_slot, large_slot) = if pos.row_len <= neg.row_len {
+                (2 * s, 2 * s + 1)
+            } else {
+                (2 * s + 1, 2 * s)
+            };
+            let small_block = if self.tracks(&frontier.node(small_slot)) {
+                n_blocks += 1;
+                Some(n_blocks - 1)
+            } else {
+                None
+            };
+            let large_block = if self.tracks(&frontier.node(large_slot)) {
+                n_blocks += 1;
+                Some(n_blocks - 1)
+            } else {
+                None
+            };
+            if small_block.is_none() && large_block.is_none() {
+                continue;
+            }
+            self.next_slot_block[small_slot] = small_block;
+            self.next_slot_block[large_slot] = large_block;
+            plans.push(Plan {
+                parent_block,
+                small_slot,
+                small_block,
+                large_block,
+            });
+        }
+
+        self.next_hists.clear();
+        self.next_hists.resize(n_blocks * block, 0.0);
+
+        let mut walked = 0usize;
+        for p in &plans {
+            // The smaller child is the only side ever accumulated; it
+            // lands in `temp` first so an untracked smaller child can
+            // still feed the sibling derivation.
+            self.temp.clear();
+            self.temp.resize(block, 0.0);
+            walked += accumulate_node_hists(
+                &self.binned,
+                &self.feat_off,
+                frontier,
+                p.small_slot,
+                labels,
+                &mut self.temp,
+            );
+            if let Some(sb) = p.small_block {
+                self.next_hists[sb * block..(sb + 1) * block].copy_from_slice(&self.temp);
+            }
+            if let Some(lb) = p.large_block {
+                let parent = &self.hists[p.parent_block * block..(p.parent_block + 1) * block];
+                let dst = &mut self.next_hists[lb * block..(lb + 1) * block];
+                for (d, (&pa, &sm)) in dst.iter_mut().zip(parent.iter().zip(self.temp.iter())) {
+                    *d = pa - sm;
+                }
+            }
+        }
+        self.rows_accumulated += walked;
+        std::mem::swap(&mut self.hists, &mut self.next_hists);
+        std::mem::swap(&mut self.slot_block, &mut self.next_slot_block);
+        self.update_peak();
+    }
+
+    fn update_peak(&mut self) {
+        let bytes = (self.hists.capacity() + self.next_hists.capacity() + self.temp.capacity())
+            * std::mem::size_of::<f64>();
+        self.peak_bytes = self.peak_bytes.max(bytes);
+    }
+}
+
+/// Accumulate one node's per-feature histograms from its maintained
+/// numeric arena lists; returns the number of row entries walked.
+fn accumulate_node_hists(
+    binned: &BinnedIndex,
+    feat_off: &[usize],
+    frontier: &Frontier,
+    slot: usize,
+    labels: &LabelsView,
+    dst: &mut [f64],
+) -> usize {
+    let mut walked = 0usize;
+    for (f, lane) in binned.lanes.iter().enumerate() {
+        let Some(lane) = lane else { continue };
+        if !frontier.feature_active(f) {
+            continue;
+        }
+        let (rows, _vals, labs) = frontier.num_slices(slot, f);
+        accumulate(&mut dst[feat_off[f]..feat_off[f + 1]], rows, labs, labels, |r| {
+            lane.bin_of_row(r)
+        });
+        walked += rows.len();
+    }
+    walked
 }
 
 fn placeholder_node() -> Node {
@@ -309,6 +587,7 @@ fn process_node(
     frontier: &Frontier,
     slot: usize,
     scratch: &mut BuildScratch,
+    binned: Option<&BinnedState>,
     feature_threads: usize,
 ) -> Decision {
     let ds = ctx.ds;
@@ -398,6 +677,7 @@ fn process_node(
         reg_stats,
         criterion,
         selection,
+        binned,
         feature_threads,
     );
 
@@ -484,6 +764,7 @@ fn best_across_features(
     reg_stats: Option<(f64, f64)>,
     criterion: Criterion,
     selection: &mut Scratch,
+    binned: Option<&BinnedState>,
     feature_threads: usize,
 ) -> Option<(usize, ScoredSplit)> {
     let ds = ctx.ds;
@@ -512,6 +793,23 @@ fn best_across_features(
             Backend::Superfast => best_split_on_feat_with(&view, labels, criterion, sel),
             Backend::Generic => best_split_on_feat_generic(&view, labels, criterion),
             Backend::Xla(xla) => xla.best_split_on_feat(&view, labels, criterion, sel),
+            Backend::Binned { .. } => {
+                match binned.and_then(|st| st.block_of(slot).map(|b| (st, b))) {
+                    Some((st, block)) => {
+                        // Lane-less features (no numeric cells) score
+                        // with an empty histogram: only the categorical
+                        // grouped walk runs.
+                        let (hist, edges): (&[f64], &[f64]) = match &st.binned.lanes[f] {
+                            Some(lane) => (st.hist(block, f), &lane.edges),
+                            None => (&[], &[]),
+                        };
+                        best_split_on_feat_binned(&view, labels, criterion, hist, edges, sel)
+                    }
+                    // Untracked (small / depth-capped) node: the exact
+                    // engine's direct walk is cheaper than a histogram.
+                    None => best_split_on_feat_with(&view, labels, criterion, sel),
+                }
+            }
         }
     };
 
@@ -797,6 +1095,123 @@ mod tests {
         assert_eq!(masked.n_nodes(), oracle.n_nodes());
         for (a, b) in masked.nodes.iter().zip(&oracle.nodes) {
             assert_eq!(a.split, b.split);
+            assert_eq!(a.n_samples, b.n_samples);
+        }
+    }
+
+    #[test]
+    fn binned_accumulates_only_the_smaller_child() {
+        // One numeric feature, 50 distinct values × 4 rows each; class 0
+        // for values < 10 (40 rows), class 1 otherwise (160 rows). The
+        // root splits at Le(9) into two pure children, so the whole fit
+        // is: accumulate the root (200 row entries), then accumulate
+        // only the 40-row child and derive the 160-row sibling by
+        // parent-minus-sibling subtraction — the 160 rows are never
+        // walked.
+        let cells: Vec<Value> = (0..200).map(|i| Value::Num((i / 4) as f64)).collect();
+        let ids: Vec<u16> = (0..200).map(|i| ((i / 4) >= 10) as u16).collect();
+        let ds = Dataset::new(
+            "witness",
+            vec![Column::new("f", cells)],
+            Labels::Class { ids, n_classes: 2 },
+            Interner::new(),
+        )
+        .unwrap();
+        let rows: Vec<u32> = (0..200).collect();
+        let cfg = TrainConfig {
+            backend: Backend::Binned { max_bins: 64 },
+            max_depth: 3,
+            ..Default::default()
+        };
+        let (tree, stats) = fit_rows_with_stats(&ds, &rows, &cfg, None).unwrap();
+        assert_eq!(tree.accuracy(&ds).unwrap(), 1.0);
+        assert_eq!(tree.n_nodes(), 3);
+        // Root (200) + smaller child (40): subtraction spares the large
+        // sibling. A both-children accumulation would read 360.
+        assert_eq!(stats.hist_rows_accumulated, 240);
+        assert!(stats.hist_scratch_bytes > 0);
+    }
+
+    #[test]
+    fn binned_backend_validates_config() {
+        let ds = xor_dataset();
+        let rows: Vec<u32> = (0..40).collect();
+        for bad in [0usize, 1, 100_000] {
+            let cfg = TrainConfig {
+                backend: Backend::Binned { max_bins: bad },
+                ..Default::default()
+            };
+            assert!(
+                matches!(fit_rows(&ds, &rows, &cfg), Err(UdtError::InvalidConfig(_))),
+                "max_bins {bad} accepted"
+            );
+        }
+        // Regression + label-split re-labels every node, which defeats
+        // histogram subtraction — rejected; DirectSse is the binned path.
+        let spec = crate::data::synth::SynthSpec::regression("r", 120, 3);
+        let rds = crate::data::synth::generate_regression(&spec, 3);
+        let rrows: Vec<u32> = (0..rds.n_rows() as u32).collect();
+        let cfg = TrainConfig {
+            backend: Backend::Binned { max_bins: 32 },
+            reg_strategy: RegStrategy::LabelSplit,
+            ..Default::default()
+        };
+        assert!(matches!(
+            fit_rows(&rds, &rrows, &cfg),
+            Err(UdtError::InvalidConfig(_))
+        ));
+        let cfg = TrainConfig {
+            backend: Backend::Binned { max_bins: 32 },
+            reg_strategy: RegStrategy::DirectSse,
+            ..Default::default()
+        };
+        assert!(fit_rows(&rds, &rrows, &cfg).is_ok());
+    }
+
+    #[test]
+    fn binned_regression_matches_direct_sse_on_dyadic_targets() {
+        // Quarter-rounded targets make every histogram, prefix and
+        // subtraction sum exactly representable, so the binned engine
+        // must reproduce the exact DirectSse tree bit-for-bit even
+        // though it sums in a different order.
+        let mut spec = crate::data::synth::SynthSpec::regression("rb", 400, 4);
+        spec.numeric_cardinality = 16;
+        let ds0 = crate::data::synth::generate_regression(&spec, 19);
+        let values: Vec<f64> = (0..ds0.n_rows())
+            .map(|r| (ds0.labels.target(r) * 4.0).round() / 4.0)
+            .collect();
+        let ds = Dataset::new(
+            "rb",
+            ds0.columns.clone(),
+            Labels::Reg { values },
+            std::sync::Arc::clone(&ds0.interner),
+        )
+        .unwrap();
+        let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+        let exact = fit_rows(
+            &ds,
+            &rows,
+            &TrainConfig {
+                reg_strategy: RegStrategy::DirectSse,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let binned = fit_rows(
+            &ds,
+            &rows,
+            &TrainConfig {
+                backend: Backend::Binned { max_bins: 16 },
+                reg_strategy: RegStrategy::DirectSse,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(ds.binned_index(16).all_exact());
+        assert_eq!(exact.n_nodes(), binned.n_nodes());
+        for (a, b) in exact.nodes.iter().zip(&binned.nodes) {
+            assert_eq!(a.split, b.split);
+            assert_eq!(a.label, b.label);
             assert_eq!(a.n_samples, b.n_samples);
         }
     }

@@ -65,6 +65,14 @@ pub struct ArenaStats {
     pub peak_bytes: usize,
     /// Arena footprint when the build finished.
     pub final_bytes: usize,
+    /// Peak bytes of the binned backend's per-node histogram buffers
+    /// (tracked separately from the arenas; 0 for the exact backends).
+    pub hist_scratch_bytes: usize,
+    /// Per-feature numeric row entries accumulated into histograms
+    /// across the whole fit — the parent-minus-sibling subtraction
+    /// witness: the root plus only the *smaller* child of every split
+    /// (0 for the exact backends).
+    pub hist_rows_accumulated: usize,
 }
 
 /// One pending node of the current level: tree bookkeeping plus its

@@ -28,6 +28,36 @@ pub enum Backend {
     /// (binned; falls back to native for small nodes — see
     /// [`crate::runtime::xla_split`]).
     Xla(std::sync::Arc<crate::runtime::xla_split::XlaSelection>),
+    /// Histogram-binned selection over dataset-level quantile bin lanes
+    /// (see [`crate::selection::binned`]): `O(rows)` accumulate +
+    /// `O(max_bins)` scan per node per feature, with parent-minus-sibling
+    /// subtraction so only the smaller child of every split is
+    /// accumulated. Exact-equivalent to Superfast whenever every column's
+    /// distinct numeric count ≤ `max_bins`; approximate (bin-edge
+    /// candidates only) beyond that. Nodes smaller than `max_bins` rows
+    /// fall back to the exact engine, where the direct walk is cheaper
+    /// than a histogram scan.
+    Binned {
+        /// Bin budget per column; must satisfy [`validate_max_bins`].
+        max_bins: usize,
+    },
+}
+
+/// Validate a binned-backend bin budget: at least 2 (a one-bin lane
+/// cannot host a split on both sides) and at most 65535 (the `u16`
+/// bin-id lane limit).
+pub fn validate_max_bins(max_bins: usize) -> Result<()> {
+    if max_bins < 2 {
+        return Err(UdtError::invalid_config(format!(
+            "max_bins must be >= 2, got {max_bins}"
+        )));
+    }
+    if max_bins > 65535 {
+        return Err(UdtError::invalid_config(format!(
+            "max_bins must be <= 65535 (u16 bin-id lane limit), got {max_bins}"
+        )));
+    }
+    Ok(())
 }
 
 /// How regression nodes select feature splits.
@@ -298,6 +328,42 @@ mod tests {
         )
         .unwrap();
         assert!(limited.n_nodes() < full.n_nodes());
+    }
+
+    #[test]
+    fn binned_backend_builds_same_tree_when_bins_are_exact() {
+        // Cap the numeric grid below the bin budget so every lane is
+        // exact: the binned engine must then reproduce Superfast
+        // node-for-node (same predicates, labels and sample counts).
+        let mut spec = SynthSpec::classification("t", 600, 5, 3);
+        spec.numeric_cardinality = 32;
+        let ds = generate_classification(&spec, 7);
+        let exact = Tree::fit(&ds, &TrainConfig::default()).unwrap();
+        let binned = Tree::fit(
+            &ds,
+            &TrainConfig {
+                backend: Backend::Binned { max_bins: 32 },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(ds.binned_index(32).all_exact());
+        assert_eq!(exact.n_nodes(), binned.n_nodes());
+        assert_eq!(exact.depth, binned.depth);
+        for (a, b) in exact.nodes.iter().zip(&binned.nodes) {
+            assert_eq!(a.split, b.split);
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.n_samples, b.n_samples);
+        }
+    }
+
+    #[test]
+    fn max_bins_bounds_are_enforced() {
+        for bad in [0usize, 1, 65536] {
+            assert!(validate_max_bins(bad).is_err(), "max_bins {bad}");
+        }
+        assert!(validate_max_bins(2).is_ok());
+        assert!(validate_max_bins(65535).is_ok());
     }
 
     #[test]

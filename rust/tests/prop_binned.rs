@@ -1,0 +1,168 @@
+//! Property tests for the histogram-binned backend: on random hybrid
+//! (numeric/categorical/missing) datasets whose per-column distinct
+//! numeric counts fit inside the bin budget, binned selection must
+//! produce **node-for-node identical** trees to the exact Superfast
+//! engine, at 1 and N threads — and when the budget genuinely coarsens
+//! the threshold set, the tree must stay thread-count invariant and the
+//! accuracy loss bounded. Forest bags over the binned backend must share
+//! a single dataset-level quantization.
+
+use udt::data::synth::{generate_any, SynthSpec};
+use udt::tree::forest::{Forest, ForestConfig};
+use udt::tree::{Backend, TrainConfig, Tree};
+use udt::util::prop::{check, ensure, Config};
+use udt::util::rng::Rng;
+
+/// Random hybrid classification spec whose numeric grids stay at or
+/// below 32 distinct levels, so a bin budget of 64 is always lossless.
+fn random_exactable_spec(rng: &mut Rng, size: usize) -> SynthSpec {
+    let n_rows = rng.range(60, size.max(80));
+    let n_features = rng.range(2, 7);
+    let mut spec = SynthSpec::classification("pbin", n_rows, n_features, rng.range(2, 5));
+    spec.cat_frac = rng.f64() * 0.5;
+    spec.hybrid_frac = rng.f64() * 0.3;
+    spec.missing_frac = rng.f64() * 0.15;
+    spec.numeric_cardinality = rng.range(2, 33);
+    spec.gt_depth = rng.range(2, 7);
+    spec.noise = rng.f64() * 0.2;
+    spec
+}
+
+/// Node-for-node structural equality (splits, children, samples, labels).
+fn same_tree(a: &Tree, b: &Tree) -> Result<(), String> {
+    ensure(
+        a.n_nodes() == b.n_nodes(),
+        format!("node counts differ: {} vs {}", a.n_nodes(), b.n_nodes()),
+    )?;
+    ensure(
+        a.depth == b.depth,
+        format!("depths differ: {} vs {}", a.depth, b.depth),
+    )?;
+    for (i, (x, y)) in a.nodes.iter().zip(&b.nodes).enumerate() {
+        ensure(
+            x.split == y.split,
+            format!("node {i} split: {:?} vs {:?}", x.split, y.split),
+        )?;
+        ensure(
+            x.children == y.children,
+            format!("node {i} children: {:?} vs {:?}", x.children, y.children),
+        )?;
+        ensure(
+            x.n_samples == y.n_samples,
+            format!("node {i} samples: {} vs {}", x.n_samples, y.n_samples),
+        )?;
+        ensure(
+            x.label == y.label,
+            format!("node {i} label: {:?} vs {:?}", x.label, y.label),
+        )?;
+    }
+    Ok(())
+}
+
+#[test]
+fn binned_matches_exact_when_bins_cover_the_distincts() {
+    check(
+        "binned ≡ superfast on lossless lanes (1 and 4 threads)",
+        Config::default().cases(25).max_size(300).seed(0xB144_ED01),
+        |rng, size| {
+            let spec = random_exactable_spec(rng, size);
+            let ds = generate_any(&spec, rng.next_u64());
+            let exact = Tree::fit(&ds, &TrainConfig::default()).map_err(|e| e.to_string())?;
+            for n_threads in [1, 4] {
+                let binned = Tree::fit(
+                    &ds,
+                    &TrainConfig {
+                        backend: Backend::Binned { max_bins: 64 },
+                        n_threads,
+                        ..Default::default()
+                    },
+                )
+                .map_err(|e| e.to_string())?;
+                same_tree(&exact, &binned)?;
+            }
+            ensure(
+                ds.binned_index(64).all_exact(),
+                "expected lossless lanes at B=64",
+            )?;
+            ensure(
+                ds.bin_index_builds() == 1,
+                format!("bin lanes built {} times, expected 1", ds.bin_index_builds()),
+            )
+        },
+    );
+}
+
+#[test]
+fn lossy_binned_tree_is_thread_count_invariant() {
+    check(
+        "binned B=16 on coarsened grids: 1-thread ≡ 4-thread build",
+        Config::default().cases(20).max_size(300).seed(0xB144_ED02),
+        |rng, size| {
+            let mut spec = random_exactable_spec(rng, size);
+            // Well above the budget, so thresholds genuinely snap to
+            // bin edges and the histogram path (not the small-node
+            // exact fallback alone) decides real splits.
+            spec.numeric_cardinality = rng.range(64, 400);
+            let ds = generate_any(&spec, rng.next_u64());
+            let cfg = |n_threads| TrainConfig {
+                backend: Backend::Binned { max_bins: 16 },
+                n_threads,
+                ..Default::default()
+            };
+            let seq = Tree::fit(&ds, &cfg(1)).map_err(|e| e.to_string())?;
+            let par = Tree::fit(&ds, &cfg(4)).map_err(|e| e.to_string())?;
+            same_tree(&seq, &par)
+        },
+    );
+}
+
+#[test]
+fn small_bin_budget_stays_within_accuracy_tolerance() {
+    // B=16 over a 1000-level grid is deliberately lossy; the held-out
+    // accuracy may dip but must stay close to the exact tree's.
+    for seed in [3u64, 11, 29] {
+        let mut spec = SynthSpec::classification("btol", 2_000, 8, 4);
+        spec.numeric_cardinality = 1_000;
+        spec.noise = 0.05;
+        let ds = generate_any(&spec, seed);
+        let (train, _val, test) = ds.split_indices(0.8, 0.1, seed);
+        let exact = Tree::fit_rows(&ds, &train, &TrainConfig::default()).unwrap();
+        let binned = Tree::fit_rows(
+            &ds,
+            &train,
+            &TrainConfig {
+                backend: Backend::Binned { max_bins: 16 },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let acc_exact = exact.accuracy_rows(&ds, &test).unwrap();
+        let acc_binned = binned.accuracy_rows(&ds, &test).unwrap();
+        assert!(
+            acc_binned >= acc_exact - 0.1,
+            "seed {seed}: B=16 accuracy {acc_binned} fell too far below exact {acc_exact}"
+        );
+    }
+}
+
+#[test]
+fn forest_bags_share_one_quantization() {
+    let mut spec = SynthSpec::classification("bforest", 1_500, 6, 3);
+    spec.numeric_cardinality = 500;
+    let ds = generate_any(&spec, 17);
+    let cfg = ForestConfig {
+        n_trees: 8,
+        tree: TrainConfig {
+            backend: Backend::Binned { max_bins: 32 },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let forest = Forest::fit(&ds, &cfg).unwrap();
+    let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+    let acc = forest.accuracy_rows(&ds, &rows).unwrap();
+    assert!(acc > 0.6, "binned forest accuracy {acc}");
+    // Eight bags, one sort, one quantization.
+    assert_eq!(ds.sort_index_builds(), 1);
+    assert_eq!(ds.bin_index_builds(), 1);
+}
