@@ -1,0 +1,165 @@
+//! Out-of-core sharded training vs in-memory binned training.
+//!
+//! Measures the three numbers the shard subsystem promises: (1) the
+//! streaming CSV → shard-directory write rate (MB/s of source CSV), (2)
+//! the wall-clock cost of training through bounded-RAM shard windows
+//! relative to the same binned fit with the whole dataset resident, and
+//! (3) the memory headline itself — `peak_shard_window_bytes` (the
+//! largest decoded window ever resident) against the full in-memory
+//! dataset footprint.
+//!
+//! Writes a machine-readable `BENCH_shard.json` at the repository root
+//! so the out-of-core trajectory is tracked PR-over-PR alongside the
+//! other BENCH_*.json artifacts.
+//!
+//!   cargo bench --bench shard
+//!
+//! UDT_BENCH_SCALE scales the row count (1.0 = 120k rows);
+//! UDT_BENCH_RUNS the repetitions.
+
+use udt::bench_support::{bench, write_bench_json, BenchConfig, Table};
+use udt::data::csv::{load_csv_str, to_csv_string, CsvOptions};
+use udt::data::shard::shard_csv_str;
+use udt::data::synth::{generate_any, SynthSpec};
+use udt::data::ShardedDataset;
+use udt::tree::sharded::fit_sharded;
+use udt::tree::{Backend, TrainConfig, Tree};
+use udt::util::json::Json;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let n_rows = ((120_000.0 * cfg.scale) as usize).max(4_000);
+    let mut spec = SynthSpec::classification("shard_t6", n_rows, 12, 5);
+    spec.cat_frac = 0.15;
+    spec.hybrid_frac = 0.05;
+    spec.missing_frac = 0.02;
+    spec.noise = 0.05;
+    spec.numeric_cardinality = (n_rows / 10).max(1_000);
+    eprintln!(
+        "shard bench: {n_rows} rows x 12 features, numeric cardinality {} \
+         (UDT_BENCH_SCALE to change)",
+        spec.numeric_cardinality
+    );
+
+    let csv = to_csv_string(&generate_any(&spec, 42));
+    let csv_bytes = csv.len();
+    let opts = CsvOptions::default();
+    let dir = std::env::temp_dir().join(format!("udt-bench-shard-{}", std::process::id()));
+    // 8 shards: windows genuinely cycle and the bins sidecar pass is
+    // exercised shard by shard.
+    let rows_per_shard = (n_rows / 8).max(1);
+
+    // (1) Streaming shard write: CSV text → shard directory, never
+    // materializing the dataset.
+    let m_write = bench("shard_write", &cfg, || {
+        let _ = std::fs::remove_dir_all(&dir);
+        let manifest =
+            shard_csv_str("shard_t6", &csv, &dir, &opts, rows_per_shard).expect("shard write");
+        assert!(manifest.shards.len() >= 2);
+    });
+    let write_ms = m_write.min_ms();
+    let write_mb_s = csv_bytes as f64 / 1e6 / (write_ms / 1e3).max(1e-9);
+
+    let ds = load_csv_str("shard_t6", &csv, &opts).expect("parse csv");
+    let sds = ShardedDataset::open(&dir).expect("open shards");
+    let tc = TrainConfig {
+        backend: Backend::Binned { max_bins: 256 },
+        n_threads: 0,
+        ..Default::default()
+    };
+
+    // Un-timed warmups: the sharded fit builds the bin sidecars once
+    // (quantize once, fit many — the same contract as the in-memory
+    // backend's dataset-level caches), the in-memory fit sorts + bins.
+    let (_, shard_stats) = fit_sharded(&sds, &tc).expect("sharded fit");
+    Tree::fit(&ds, &tc).expect("in-memory fit");
+
+    // (2) Train wall-clock, both engines on identical bits.
+    let m_shard = bench("train_sharded", &cfg, || {
+        let (t, _) = fit_sharded(&sds, &tc).expect("sharded fit");
+        assert!(t.n_nodes() >= 1);
+    });
+    let m_mem = bench("train_in_memory", &cfg, || {
+        let t = Tree::fit(&ds, &tc).expect("in-memory fit");
+        assert!(t.n_nodes() >= 1);
+    });
+    let shard_ms = m_shard.min_ms();
+    let mem_ms = m_mem.min_ms();
+
+    // (3) The memory headline.
+    let dataset_bytes = ds.approx_bytes();
+    let window_bytes = shard_stats.peak_shard_window_bytes;
+    assert!(window_bytes > 0 && window_bytes < dataset_bytes);
+
+    let mut table = Table::new(&[
+        "case", "rows", "ms", "csv MB/s", "peak window(KiB)", "dataset(KiB)", "passes",
+    ]);
+    table.row(vec![
+        "shard_write".into(),
+        n_rows.to_string(),
+        format!("{write_ms:.1}"),
+        format!("{write_mb_s:.1}"),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+    table.row(vec![
+        "train_sharded".into(),
+        n_rows.to_string(),
+        format!("{shard_ms:.1}"),
+        "-".into(),
+        (window_bytes / 1024).to_string(),
+        (dataset_bytes / 1024).to_string(),
+        shard_stats.shard_passes.to_string(),
+    ]);
+    table.row(vec![
+        "train_in_memory".into(),
+        n_rows.to_string(),
+        format!("{mem_ms:.1}"),
+        "-".into(),
+        "-".into(),
+        (dataset_bytes / 1024).to_string(),
+        "-".into(),
+    ]);
+    println!("\n== Out-of-core sharded vs in-memory binned training ({n_rows} rows) ==");
+    println!("{}", table.render());
+
+    let artifact = Json::obj(vec![
+        ("bench", Json::Str("shard".into())),
+        ("rows", Json::Num(n_rows as f64)),
+        ("csv_bytes", Json::Num(csv_bytes as f64)),
+        ("rows_per_shard", Json::Num(rows_per_shard as f64)),
+        ("measured", Json::Bool(true)),
+        (
+            "cases",
+            Json::Arr(vec![
+                Json::obj(vec![
+                    ("case", Json::Str("shard_write".into())),
+                    ("ms", Json::Num(write_ms)),
+                    ("csv_mb_per_sec", Json::Num(write_mb_s)),
+                ]),
+                Json::obj(vec![
+                    ("case", Json::Str("train_sharded".into())),
+                    ("ms", Json::Num(shard_ms)),
+                    ("peak_shard_window_bytes", Json::Num(window_bytes as f64)),
+                    ("dataset_bytes", Json::Num(dataset_bytes as f64)),
+                    (
+                        "window_over_dataset",
+                        Json::Num(window_bytes as f64 / dataset_bytes as f64),
+                    ),
+                    ("shard_passes", Json::Num(shard_stats.shard_passes as f64)),
+                ]),
+                Json::obj(vec![
+                    ("case", Json::Str("train_in_memory".into())),
+                    ("ms", Json::Num(mem_ms)),
+                    ("sharded_over_in_memory", Json::Num(shard_ms / mem_ms.max(1e-9))),
+                ]),
+            ]),
+        ),
+    ]);
+    match write_bench_json("shard", &artifact) {
+        Ok(p) => eprintln!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write bench artifact: {e}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -2,4 +2,4 @@
 
 mod settings;
 
-pub use settings::{Config, ConfigError};
+pub use settings::{Config, ConfigError, ShardConfig};

@@ -20,7 +20,10 @@
 //!   ([`BoostedConfig`]);
 //! * `serve.backend`, `serve.max_connections`, `serve.max_request_bytes`,
 //!   `serve.max_write_buffer_bytes` — prediction-server backend and
-//!   limits ([`ServeConfig`]).
+//!   limits ([`ServeConfig`]);
+//! * `shard.rows`, `shard.sample_rows` — out-of-core shard size and the
+//!   edge-pass reservoir of `udt shard` / `train --shards`
+//!   ([`ShardConfig`]).
 
 use crate::coordinator::serve::{ServeBackend, ServeConfig};
 use crate::tree::boost::BoostedConfig;
@@ -42,6 +45,26 @@ impl fmt::Display for ConfigError {
 }
 
 impl std::error::Error for ConfigError {}
+
+/// Out-of-core sharding knobs (`shard.*` keys): rows per on-disk shard
+/// for `udt shard`, and the per-(shard, column) reservoir size of the
+/// quantile edge pass for `train --shards` (0 = exact edges, which is
+/// what makes sharded training node-for-node identical to in-memory
+/// binned training).
+#[derive(Debug, Clone, Copy)]
+pub struct ShardConfig {
+    pub rows_per_shard: usize,
+    pub sample_rows: usize,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        Self {
+            rows_per_shard: 65536,
+            sample_rows: 0,
+        }
+    }
+}
 
 /// A flat typed view over string settings.
 #[derive(Debug, Clone, Default)]
@@ -237,6 +260,19 @@ impl Config {
             )?,
         })
     }
+
+    /// Out-of-core sharding knobs from the `shard.*` keys.
+    pub fn shard_config(&self) -> Result<ShardConfig, ConfigError> {
+        let defaults = ShardConfig::default();
+        let rows_per_shard = self.get_usize("shard.rows", defaults.rows_per_shard)?;
+        if rows_per_shard == 0 {
+            return Err(ConfigError("shard.rows: must be >= 1".to_string()));
+        }
+        Ok(ShardConfig {
+            rows_per_shard,
+            sample_rows: self.get_usize("shard.sample_rows", defaults.sample_rows)?,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -379,6 +415,25 @@ mod tests {
         let d = Config::new().serve_config().unwrap();
         assert_eq!(d.backend, ServeBackend::default_for_platform());
         assert_eq!(d.max_connections, 10_240);
+    }
+
+    #[test]
+    fn shard_config_from_keys() {
+        let d = Config::new().shard_config().unwrap();
+        assert_eq!(d.rows_per_shard, 65536);
+        assert_eq!(d.sample_rows, 0);
+        let mut cfg = Config::new();
+        cfg.set_kv("shard.rows=1000").unwrap();
+        cfg.set_kv("shard.sample_rows=5000").unwrap();
+        let sc = cfg.shard_config().unwrap();
+        assert_eq!(sc.rows_per_shard, 1000);
+        assert_eq!(sc.sample_rows, 5000);
+        // Zero rows per shard and non-numeric values are typed errors.
+        for bad in ["shard.rows=0", "shard.rows=many", "shard.sample_rows=x"] {
+            let mut cfg = Config::new();
+            cfg.set_kv(bad).unwrap();
+            assert!(cfg.shard_config().is_err(), "{bad} accepted");
+        }
     }
 
     #[test]

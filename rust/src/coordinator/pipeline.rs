@@ -32,6 +32,13 @@ pub struct PipelineReport {
     /// Peak bytes of the binned backend's per-node histogram buffers
     /// during the full-tree fit; 0 for the exact backends.
     pub hist_scratch_bytes: usize,
+    /// Out-of-core training only (`train --shards`): largest decoded
+    /// shard window resident at any point — the bounded-RAM witness of
+    /// [`crate::tree::sharded::ShardedStats`]. 0 for in-memory training.
+    pub peak_shard_window_bytes: usize,
+    /// Out-of-core training only: sequential passes over the shard
+    /// directory. 0 for in-memory training.
+    pub shard_passes: usize,
     // Tuning.
     pub tune_ms: f64,
     pub n_settings: usize,
@@ -108,6 +115,8 @@ pub fn run_pipeline_model(
         full_train_ms,
         peak_arena_bytes: arena_stats.peak_bytes,
         hist_scratch_bytes: arena_stats.hist_scratch_bytes,
+        peak_shard_window_bytes: 0,
+        shard_passes: 0,
         tune_ms,
         n_settings: tune_result.n_settings,
         best_max_depth: tune_result.best_max_depth,

@@ -82,6 +82,30 @@ impl Bitmask {
     pub fn count_set(&self) -> usize {
         self.bits.iter().map(|w| w.count_ones() as usize).sum()
     }
+
+    /// The packed words (only bits below `len()` may be set) — the shard
+    /// serializer writes these verbatim.
+    pub(crate) fn words(&self) -> &[u64] {
+        &self.bits
+    }
+
+    /// Mask bytes, counted once per allocation: 0 when this mask's word
+    /// allocation was already recorded in `seen`.
+    fn bytes_dedup(&self, seen: &mut std::collections::HashSet<usize>) -> usize {
+        count_lane(self.bits.as_ptr(), self.bits.len() * 8, seen)
+    }
+}
+
+/// `bytes` if the lane allocation at `ptr` has not been counted into
+/// `seen` yet, else 0. `Arc`-shared lanes (dataset clones, forest bags,
+/// zero-copy `RowFrame` views) alias the same allocation, so resident
+/// byte accounting must dedupe by data pointer.
+fn count_lane<T>(ptr: *const T, bytes: usize, seen: &mut std::collections::HashSet<usize>) -> usize {
+    if seen.insert(ptr as usize) {
+        bytes
+    } else {
+        0
+    }
 }
 
 /// `true` when an optional validity mask allows row `i` (`None` = every
@@ -256,20 +280,34 @@ impl ColumnData {
 
     /// Resident bytes of the lanes and masks.
     pub fn approx_bytes(&self) -> usize {
-        let mask_bytes = |m: &Bitmask| m.bits.len() * 8;
+        self.approx_bytes_dedup(&mut std::collections::HashSet::new())
+    }
+
+    /// Resident bytes, counting each lane/mask allocation at most once
+    /// across every column threaded through the same `seen` set —
+    /// `Arc`-shared lanes alias one allocation and must not be summed
+    /// per clone.
+    pub fn approx_bytes_dedup(&self, seen: &mut std::collections::HashSet<usize>) -> usize {
         match self {
             ColumnData::Num { vals, valid } => {
-                vals.len() * 8 + valid.as_ref().map_or(0, mask_bytes)
+                count_lane(vals.as_ptr(), vals.len() * 8, seen)
+                    + valid.as_ref().map_or(0, |m| m.bytes_dedup(seen))
             }
             ColumnData::Cat { ids, valid } => {
-                ids.len() * 4 + valid.as_ref().map_or(0, mask_bytes)
+                count_lane(ids.as_ptr(), ids.len() * 4, seen)
+                    + valid.as_ref().map_or(0, |m| m.bytes_dedup(seen))
             }
             ColumnData::Hybrid {
                 vals,
                 ids,
                 num,
                 cat,
-            } => vals.len() * 8 + ids.len() * 4 + mask_bytes(num) + mask_bytes(cat),
+            } => {
+                count_lane(vals.as_ptr(), vals.len() * 8, seen)
+                    + count_lane(ids.as_ptr(), ids.len() * 4, seen)
+                    + num.bytes_dedup(seen)
+                    + cat.bytes_dedup(seen)
+            }
         }
     }
 }
@@ -313,6 +351,15 @@ impl BinIds {
         match self {
             BinIds::U8(v) => v.len(),
             BinIds::U16(v) => v.len() * 2,
+        }
+    }
+
+    /// Resident bytes, counted once per allocation (see
+    /// [`ColumnData::approx_bytes_dedup`]).
+    pub fn approx_bytes_dedup(&self, seen: &mut std::collections::HashSet<usize>) -> usize {
+        match self {
+            BinIds::U8(v) => count_lane(v.as_ptr(), v.len(), seen),
+            BinIds::U16(v) => count_lane(v.as_ptr(), v.len() * 2, seen),
         }
     }
 }
@@ -379,6 +426,17 @@ impl BinLane {
     /// Resident bytes of the id lane plus the edge table.
     pub fn approx_bytes(&self) -> usize {
         self.ids.approx_bytes() + self.edges.len() * std::mem::size_of::<f64>()
+    }
+
+    /// Resident bytes, counted once per allocation (see
+    /// [`ColumnData::approx_bytes_dedup`]).
+    pub fn approx_bytes_dedup(&self, seen: &mut std::collections::HashSet<usize>) -> usize {
+        self.ids.approx_bytes_dedup(seen)
+            + count_lane(
+                self.edges.as_ptr(),
+                self.edges.len() * std::mem::size_of::<f64>(),
+                seen,
+            )
     }
 }
 
@@ -784,6 +842,20 @@ mod tests {
         assert!(lane.n_bins() <= 256);
         assert!(matches!(lane.ids, BinIds::U8(_)));
         assert!(!lane.is_exact);
+    }
+
+    #[test]
+    fn approx_bytes_dedup_counts_shared_lanes_once() {
+        let d = ColumnData::from_cells(&vec![Value::Num(1.0); 64]);
+        let clone = d.clone(); // Arc-shared lanes, same allocation
+        let mut seen = std::collections::HashSet::new();
+        let first = d.approx_bytes_dedup(&mut seen);
+        assert_eq!(first, d.approx_bytes());
+        // The clone aliases every lane — nothing new to count.
+        assert_eq!(clone.approx_bytes_dedup(&mut seen), 0);
+        // An equal-content but distinct allocation counts fully.
+        let other = ColumnData::from_cells(&vec![Value::Num(1.0); 64]);
+        assert_eq!(other.approx_bytes_dedup(&mut seen), first);
     }
 
     #[test]

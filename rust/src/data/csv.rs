@@ -99,7 +99,7 @@ pub fn parse_record(line: &str, delim: char) -> Vec<String> {
 
 /// What the chunk parser does with the label column.
 #[derive(Debug, Clone, Copy)]
-enum LabelMode {
+pub(crate) enum LabelMode {
     /// Every column is a feature (the `RowFrame` CSV path).
     None,
     /// Column `i` holds class-name labels.
@@ -110,18 +110,18 @@ enum LabelMode {
 
 /// Typed parse output of one line-aligned chunk. Categorical ids (and
 /// classification class ids) are chunk-local; the merge step remaps.
-struct ChunkShard {
-    cols: Vec<ColumnShard>,
-    interner: Interner,
-    class_ids: Vec<u16>,
-    class_names: Vec<String>,
-    reg_vals: Vec<f64>,
-    n_rows: usize,
+pub(crate) struct ChunkShard {
+    pub(crate) cols: Vec<ColumnShard>,
+    pub(crate) interner: Interner,
+    pub(crate) class_ids: Vec<u16>,
+    pub(crate) class_names: Vec<String>,
+    pub(crate) reg_vals: Vec<f64>,
+    pub(crate) n_rows: usize,
 }
 
 /// A parse failure local to one chunk; row indices are chunk-relative
 /// and fixed up against the preceding chunks' row counts at merge time.
-struct ChunkError {
+pub(crate) struct ChunkError {
     local_row: usize,
     kind: ChunkErrorKind,
 }
@@ -132,7 +132,7 @@ enum ChunkErrorKind {
 }
 
 impl ChunkError {
-    fn into_error(self, rows_before: usize, width: usize) -> UdtError {
+    pub(crate) fn into_error(self, rows_before: usize, width: usize) -> UdtError {
         match self.kind {
             ChunkErrorKind::Ragged { got } => UdtError::data(format!(
                 "row {} has {got} fields, expected {width}",
@@ -148,7 +148,7 @@ impl ChunkError {
 
 /// Split `body` into chunks of roughly `target` bytes, each ending on a
 /// line boundary ('\n' is ASCII, so every cut is a char boundary).
-fn line_aligned_chunks(body: &str, target: usize) -> Vec<&str> {
+pub(crate) fn line_aligned_chunks(body: &str, target: usize) -> Vec<&str> {
     let bytes = body.as_bytes();
     let target = target.max(1);
     let mut chunks = Vec::new();
@@ -167,7 +167,7 @@ fn line_aligned_chunks(body: &str, target: usize) -> Vec<&str> {
 /// Parse one chunk into typed shards. `width` is the expected field
 /// count of every record; `n_features` is `width` minus the label
 /// column, if any.
-fn parse_chunk(
+pub(crate) fn parse_chunk(
     chunk: &str,
     width: usize,
     n_features: usize,
@@ -285,7 +285,7 @@ fn push_fields<'x>(
 
 /// Consume the header line (if any); returns the parsed header fields
 /// and the remaining body text.
-fn split_header(text: &str, delim: char, has_header: bool) -> (Option<Vec<String>>, &str) {
+pub(crate) fn split_header(text: &str, delim: char, has_header: bool) -> (Option<Vec<String>>, &str) {
     if !has_header {
         return (None, text);
     }
@@ -307,7 +307,7 @@ fn split_header(text: &str, delim: char, has_header: bool) -> (Option<Vec<String
 
 /// Field count of the first data record (width source when there is no
 /// header).
-fn first_data_width(body: &str, delim: char) -> Option<usize> {
+pub(crate) fn first_data_width(body: &str, delim: char) -> Option<usize> {
     for line in body.lines() {
         if line.trim().is_empty() {
             continue;

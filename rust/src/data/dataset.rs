@@ -104,6 +104,16 @@ impl BinnedIndex {
     pub fn approx_bytes(&self) -> usize {
         self.lanes.iter().flatten().map(BinLane::approx_bytes).sum()
     }
+
+    /// Resident bytes, counting each lane allocation at most once across
+    /// every index threaded through the same `seen` set.
+    pub fn approx_bytes_dedup(&self, seen: &mut std::collections::HashSet<usize>) -> usize {
+        self.lanes
+            .iter()
+            .flatten()
+            .map(|l| l.approx_bytes_dedup(seen))
+            .sum()
+    }
 }
 
 /// An in-memory tabular dataset.
@@ -316,16 +326,29 @@ impl Dataset {
     /// (typed lanes + kind masks — pure columns carry one lane, only
     /// hybrid columns pay for both — plus the bin-id lanes and edge
     /// tables of the quantization cache when it has been built).
+    ///
+    /// `Arc`-shared lane allocations are counted once even when several
+    /// columns alias the same storage; to sum multiple datasets that
+    /// share lanes (forest bags, subsets holding clones), thread one
+    /// `seen` set through [`Dataset::approx_bytes_dedup`] instead of
+    /// adding the per-dataset numbers.
     pub fn approx_bytes(&self) -> usize {
+        self.approx_bytes_dedup(&mut std::collections::HashSet::new())
+    }
+
+    /// [`Dataset::approx_bytes`] with caller-owned dedup state: lane
+    /// allocations already recorded in `seen` contribute 0 bytes, so
+    /// summing clones over one set counts shared storage exactly once.
+    pub fn approx_bytes_dedup(&self, seen: &mut std::collections::HashSet<usize>) -> usize {
         self.columns
             .iter()
-            .map(|c| c.data.approx_bytes())
+            .map(|c| c.data.approx_bytes_dedup(seen))
             .sum::<usize>()
             + match &self.labels {
                 Labels::Class { ids, .. } => ids.len() * 2,
                 Labels::Reg { values } => values.len() * 8,
             }
-            + self.binned.get().map_or(0, |b| b.approx_bytes())
+            + self.binned.get().map_or(0, |b| b.approx_bytes_dedup(seen))
     }
 }
 
@@ -467,6 +490,69 @@ mod tests {
         d.invalidate_sort_cache();
         d.binned_index(8);
         assert_eq!(d.bin_index_builds(), 2);
+    }
+
+    #[test]
+    fn retrain_after_mutation_rebuilds_binned_index_exactly_once() {
+        // Regression: `invalidate_sort_cache` drops the BinnedIndex, and
+        // the *training path* (not just a direct `binned_index` call)
+        // must rebuild it exactly once on the next fit — no stale reuse,
+        // no double build.
+        use crate::tree::{Backend, TrainConfig, Tree};
+        let mut d = tiny();
+        let tc = TrainConfig {
+            backend: Backend::Binned { max_bins: 8 },
+            ..Default::default()
+        };
+        Tree::fit(&d, &tc).unwrap();
+        assert_eq!(d.bin_index_builds(), 1);
+        // Refit without mutation: cache hit, no rebuild.
+        Tree::fit(&d, &tc).unwrap();
+        assert_eq!(d.bin_index_builds(), 1);
+        // Mutate a column, invalidate, retrain: exactly one rebuild.
+        let mut cells = d.columns[0].data.cells();
+        cells.swap(0, 1);
+        let name = d.columns[0].name.clone();
+        d.columns[0] = Column::new(name, cells);
+        d.invalidate_sort_cache();
+        Tree::fit(&d, &tc).unwrap();
+        assert_eq!(d.bin_index_builds(), 2);
+        Tree::fit(&d, &tc).unwrap();
+        assert_eq!(d.bin_index_builds(), 2);
+    }
+
+    #[test]
+    fn approx_bytes_does_not_double_count_shared_lanes() {
+        // Regression: two columns aliasing one `ColumnData` (Arc-shared
+        // lanes) must contribute their lane bytes once, not per column.
+        let d = tiny();
+        let shared = d.columns[0].data.clone();
+        let cols = vec![
+            Column::from_data("f0".to_string(), shared.clone()),
+            Column::from_data("f0_alias".to_string(), shared.clone()),
+        ];
+        let labels = Labels::Class {
+            ids: vec![0, 1, 0],
+            n_classes: 2,
+        };
+        let two = Dataset::new("aliased", cols, labels.clone(), Interner::new()).unwrap();
+        let one = Dataset::new(
+            "single",
+            vec![Column::from_data("f0".to_string(), shared.clone())],
+            labels,
+            Interner::new(),
+        )
+        .unwrap();
+        assert_eq!(two.approx_bytes(), one.approx_bytes());
+
+        // Summing clones through one seen set counts shared lanes once.
+        let clone = d.clone();
+        let mut seen = std::collections::HashSet::new();
+        let first = d.approx_bytes_dedup(&mut seen);
+        assert_eq!(first, d.approx_bytes());
+        let second = clone.approx_bytes_dedup(&mut seen);
+        // Only the (deep-cloned) label vector remains to count.
+        assert_eq!(second, clone.labels.len() * 2);
     }
 
     #[test]

@@ -8,12 +8,14 @@ pub mod column_data;
 pub mod csv;
 pub mod dataset;
 pub mod interner;
+pub mod shard;
 pub mod sorted_index;
 pub mod synth;
 pub mod value;
 
 pub use column_data::{BinIds, BinLane, Bitmask, ColumnData, ColumnShard};
 pub use dataset::{BinnedIndex, Dataset, Labels, TaskKind};
+pub use shard::{ShardBins, ShardManifest, ShardedDataset};
 pub use sorted_index::SortedIndex;
 pub use interner::{CatId, Interner};
 pub use value::Value;

@@ -1,0 +1,567 @@
+//! `ShardedDataset`: the windowed reader over a shard directory.
+//!
+//! Opening a directory loads only `manifest.json`; shard lanes come and
+//! go one window at a time through [`ShardedDataset::read_shard`] /
+//! [`ShardBins::read_window`], each read verified against the
+//! manifest's byte count and FNV-1a checksum before decoding. The
+//! global quantile bin edges and per-shard bin-id sidecars are built
+//! (or reloaded) by [`ShardedDataset::ensure_bins`]; the edge pass
+//! merges per-column distinct-value runs across shards and feeds the
+//! *same* bin-assignment loop as in-memory binning
+//! ([`crate::runtime::binning::quantile_bins_from_runs`]), so the edge
+//! tables are bit-identical to `Dataset::binned_index` on the
+//! assembled data.
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::parallel::parallel_map;
+use crate::data::column_data::ColumnData;
+use crate::data::dataset::TaskKind;
+use crate::data::value::Value;
+use crate::error::{Result, UdtError};
+use crate::runtime::binning::quantile_bins_from_runs;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::format::{
+    bins_json, decode_bin_window, decode_edges, decode_shard, encode_bin_window, encode_edges,
+    fnv1a64, parse_bins_json, BinIdLane, BinWindow, BinsMeta, LabelLane, ShardManifest,
+    NO_BIN_U16, NO_BIN_U8, NO_CAT,
+};
+
+/// A shard directory opened for windowed reading. Holds the manifest
+/// only — never more than one shard's lanes are resident at a time.
+#[derive(Debug, Clone)]
+pub struct ShardedDataset {
+    dir: PathBuf,
+    manifest: ShardManifest,
+}
+
+impl ShardedDataset {
+    /// Open a shard directory by parsing and validating its
+    /// `manifest.json`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<ShardedDataset> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path).map_err(|e| {
+            UdtError::data(format!(
+                "cannot read shard manifest `{}`: {e}",
+                path.display()
+            ))
+        })?;
+        let json = Json::parse(&text)
+            .map_err(|e| UdtError::data(format!("manifest.json: {e}")))?;
+        let manifest = ShardManifest::from_json(&json)?;
+        Ok(ShardedDataset { dir, manifest })
+    }
+
+    pub fn manifest(&self) -> &ShardManifest {
+        &self.manifest
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.manifest.shards.len()
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.manifest.n_rows
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.manifest.n_features()
+    }
+
+    pub fn task(&self) -> TaskKind {
+        self.manifest.task
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.manifest.class_names.len()
+    }
+
+    /// Read, verify and decode raw shard `i` (typed f64/u32 lanes).
+    pub fn read_shard(&self, i: usize) -> Result<(Vec<ColumnData>, LabelLane)> {
+        let entry = &self.manifest.shards[i];
+        let bytes = read_verified(
+            &self.dir.join(&entry.file),
+            entry.bytes,
+            entry.checksum,
+            &entry.file,
+        )?;
+        let (cols, labels) = decode_shard(&bytes, self.n_features())?;
+        if labels.len() != entry.n_rows {
+            return Err(UdtError::data(format!(
+                "shard `{}` holds {} rows but the manifest says {}",
+                entry.file,
+                labels.len(),
+                entry.n_rows
+            )));
+        }
+        if labels.kind() != self.manifest.task {
+            return Err(UdtError::data(format!(
+                "shard `{}` label lane does not match the manifest task",
+                entry.file
+            )));
+        }
+        Ok((cols, labels))
+    }
+
+    fn bins_dir(&self, max_bins: usize, sample_rows: usize) -> PathBuf {
+        if sample_rows == 0 {
+            self.dir.join(format!("bins-{max_bins}"))
+        } else {
+            self.dir.join(format!("bins-{max_bins}-s{sample_rows}"))
+        }
+    }
+
+    /// Load the bin sidecars for (`max_bins`, `sample_rows`), building
+    /// them if absent or stale. Building costs two passes over the raw
+    /// shards (edge/cardinality statistics, then bin-id lane writes);
+    /// reloading costs none. `sample_rows > 0` reservoir-samples that
+    /// many numeric values per (shard, column) during the edge pass —
+    /// approximate edges, bounded edge-pass memory.
+    pub fn ensure_bins(
+        &self,
+        max_bins: usize,
+        sample_rows: usize,
+        n_threads: usize,
+    ) -> Result<ShardBins> {
+        let dir = self.bins_dir(max_bins, sample_rows);
+        if let Some(bins) = self.try_load_bins(&dir, max_bins, sample_rows)? {
+            return Ok(bins);
+        }
+        self.build_bins(&dir, max_bins, sample_rows, n_threads)
+    }
+
+    /// Reload an existing sidecar directory; `Ok(None)` when absent or
+    /// written for different parameters (stale sidecars rebuild).
+    fn try_load_bins(
+        &self,
+        dir: &Path,
+        max_bins: usize,
+        sample_rows: usize,
+    ) -> Result<Option<ShardBins>> {
+        let meta_path = dir.join("bins.json");
+        let Ok(text) = fs::read_to_string(&meta_path) else {
+            return Ok(None);
+        };
+        let json =
+            Json::parse(&text).map_err(|e| UdtError::data(format!("bins.json: {e}")))?;
+        let (got_bins, got_sample, edges_sum, files) = parse_bins_json(&json)?;
+        if got_bins != max_bins || got_sample != sample_rows || files.len() != self.n_shards() {
+            return Ok(None);
+        }
+        let edge_bytes = read_verified(&dir.join("edges.bin"), usize::MAX, edges_sum, "edges.bin")?;
+        let mut meta = decode_edges(&edge_bytes, self.n_features())?;
+        meta.shard_files = files;
+        if meta.max_bins != max_bins || meta.sample_rows != sample_rows {
+            return Ok(None);
+        }
+        Ok(Some(ShardBins {
+            dir: dir.to_path_buf(),
+            n_features: self.n_features(),
+            meta,
+            built: false,
+        }))
+    }
+
+    /// Two-pass sidecar build: (1) merge per-column distinct-value runs
+    /// (or reservoir samples) and categorical cardinalities across
+    /// shards, fix global bin edges; (2) re-read each shard, scatter
+    /// its cells into bin-id / cat-id lanes, write the `.udb` file.
+    fn build_bins(
+        &self,
+        dir: &Path,
+        max_bins: usize,
+        sample_rows: usize,
+        n_threads: usize,
+    ) -> Result<ShardBins> {
+        fs::create_dir_all(dir)?;
+        let n_features = self.n_features();
+
+        // Pass 1: per-column value statistics. Exact mode keeps one
+        // (value-bits → count) map per column; sampling keeps one
+        // bounded reservoir per column instead.
+        let mut counts: Vec<HashMap<u64, usize>> = vec![HashMap::new(); n_features];
+        let mut reservoirs: Vec<Reservoir> = (0..n_features)
+            .map(|c| Reservoir::new(sample_rows, c as u64))
+            .collect();
+        let mut cat_card = vec![0u32; n_features];
+        for i in 0..self.n_shards() {
+            let (cols, _) = self.read_shard(i)?;
+            for (c, col) in cols.iter().enumerate() {
+                for r in 0..col.len() {
+                    match col.get(r) {
+                        Value::Num(v) => {
+                            // -0.0 and 0.0 are equal values; key them as
+                            // one run like the in-memory `==` scan does.
+                            let v = if v == 0.0 { 0.0 } else { v };
+                            if sample_rows == 0 {
+                                *counts[c].entry(v.to_bits()).or_insert(0) += 1;
+                            } else {
+                                reservoirs[c].offer(v);
+                            }
+                        }
+                        Value::Cat(id) => cat_card[c] = cat_card[c].max(id.0 + 1),
+                        Value::Missing => {}
+                    }
+                }
+            }
+            // Sampling mode: each shard contributes at most
+            // `sample_rows` values per column.
+            if sample_rows > 0 {
+                for res in &mut reservoirs {
+                    res.commit(&mut counts);
+                }
+            }
+        }
+
+        let mut edges: Vec<Option<Vec<f64>>> = Vec::with_capacity(n_features);
+        for map in &mut counts {
+            if map.is_empty() {
+                edges.push(None);
+                continue;
+            }
+            let mut runs: Vec<(f64, usize)> = map
+                .drain()
+                .map(|(bits, n)| (f64::from_bits(bits), n))
+                .collect();
+            runs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            edges.push(quantile_bins_from_runs(&runs, max_bins).map(|rb| rb.edges));
+        }
+
+        let mut meta = BinsMeta {
+            max_bins,
+            sample_rows,
+            edges,
+            cat_card,
+            shard_files: Vec::new(),
+        };
+
+        // Pass 2: scatter every shard into bin-id / cat-id lanes.
+        for i in 0..self.n_shards() {
+            let (cols, labels) = self.read_shard(i)?;
+            let n_rows = labels.len();
+            let lanes = parallel_map(
+                (0..n_features).collect(),
+                n_threads,
+                |c| build_lanes(&cols[c], &meta.edges[c], meta.cat_card[c], n_rows),
+            );
+            let mut window = BinWindow {
+                n_rows,
+                bins: Vec::with_capacity(n_features),
+                cats: Vec::with_capacity(n_features),
+                labels,
+            };
+            for (bin, cat) in lanes {
+                window.bins.push(bin);
+                window.cats.push(cat);
+            }
+            let bytes = encode_bin_window(&window);
+            let file = format!("shard-{i:05}.udb");
+            fs::write(dir.join(&file), &bytes)?;
+            meta.shard_files.push((file, fnv1a64(&bytes)));
+        }
+
+        let edge_bytes = encode_edges(&meta);
+        let edges_sum = fnv1a64(&edge_bytes);
+        fs::write(dir.join("edges.bin"), &edge_bytes)?;
+        fs::write(
+            dir.join("bins.json"),
+            bins_json(&meta, edges_sum).to_pretty() + "\n",
+        )?;
+        Ok(ShardBins {
+            dir: dir.to_path_buf(),
+            n_features,
+            meta,
+            built: true,
+        })
+    }
+}
+
+/// One column's bounded reservoir for the sampled edge pass, reseeded
+/// deterministically per shard in [`Reservoir::commit`].
+struct Reservoir {
+    cap: usize,
+    col: u64,
+    shard: u64,
+    seen: usize,
+    vals: Vec<f64>,
+    rng: Rng,
+}
+
+impl Reservoir {
+    fn new(cap: usize, col: u64) -> Reservoir {
+        Reservoir {
+            cap,
+            col,
+            shard: 0,
+            seen: 0,
+            vals: Vec::new(),
+            rng: Rng::new(0x5eed_0000 ^ col),
+        }
+    }
+
+    /// Algorithm R over this shard's numeric values of the column.
+    fn offer(&mut self, v: f64) {
+        self.seen += 1;
+        if self.vals.len() < self.cap {
+            self.vals.push(v);
+        } else {
+            let j = self.rng.below(self.seen as u64) as usize;
+            if j < self.cap {
+                self.vals[j] = v;
+            }
+        }
+    }
+
+    /// Fold the shard's sample into the global per-column run counts
+    /// and reset for the next shard.
+    fn commit(&mut self, counts: &mut [HashMap<u64, usize>]) {
+        for &v in &self.vals {
+            *counts[self.col as usize].entry(v.to_bits()).or_insert(0) += 1;
+        }
+        self.vals.clear();
+        self.seen = 0;
+        self.shard += 1;
+        self.rng = Rng::new(0x5eed_0000 ^ self.col ^ (self.shard << 32));
+    }
+}
+
+/// Build one column's bin-id and cat-id lanes for one shard.
+fn build_lanes(
+    col: &ColumnData,
+    edges: &Option<Vec<f64>>,
+    cat_card: u32,
+    n_rows: usize,
+) -> (Option<BinIdLane>, Option<Vec<u32>>) {
+    let bins = edges.as_ref().map(|edges| {
+        let last = edges.len().saturating_sub(1);
+        let bin_of = |r: usize| -> Option<usize> {
+            match col.get(r) {
+                Value::Num(v) => {
+                    // First edge ≥ v is v's bin (edges are bin maxima);
+                    // sampled edge tables may not cover the extremes, so
+                    // clamp overshoot into the last bin.
+                    Some(edges.partition_point(|e| *e < v).min(last))
+                }
+                _ => None,
+            }
+        };
+        if edges.len() <= NO_BIN_U8 as usize {
+            BinIdLane::U8(
+                (0..n_rows)
+                    .map(|r| bin_of(r).map_or(NO_BIN_U8, |b| b as u8))
+                    .collect(),
+            )
+        } else {
+            BinIdLane::U16(
+                (0..n_rows)
+                    .map(|r| bin_of(r).map_or(NO_BIN_U16, |b| b as u16))
+                    .collect(),
+            )
+        }
+    });
+    let cats = (cat_card > 0).then(|| {
+        (0..n_rows)
+            .map(|r| match col.get(r) {
+                Value::Cat(id) => id.0,
+                _ => NO_CAT,
+            })
+            .collect()
+    });
+    (bins, cats)
+}
+
+/// A loaded (or freshly built) sidecar directory: global edges +
+/// cardinalities plus the per-shard `.udb` window files.
+#[derive(Debug, Clone)]
+pub struct ShardBins {
+    dir: PathBuf,
+    n_features: usize,
+    meta: BinsMeta,
+    /// True when this call built the sidecars (two raw-shard passes),
+    /// false when they were reloaded from disk (zero passes).
+    pub built: bool,
+}
+
+impl ShardBins {
+    pub fn meta(&self) -> &BinsMeta {
+        &self.meta
+    }
+
+    /// Read, verify and decode shard `i`'s training window.
+    pub fn read_window(&self, i: usize) -> Result<BinWindow> {
+        let (file, checksum) = &self.meta.shard_files[i];
+        let bytes = read_verified(&self.dir.join(file), usize::MAX, *checksum, file)?;
+        decode_bin_window(&bytes, self.n_features)
+    }
+}
+
+/// Read a file and verify its size (`usize::MAX` skips the size check)
+/// and FNV-1a checksum before handing the bytes to a decoder.
+fn read_verified(path: &Path, expect_bytes: usize, checksum: u64, label: &str) -> Result<Vec<u8>> {
+    let bytes = fs::read(path).map_err(|e| {
+        UdtError::data(format!("cannot read shard file `{label}`: {e}"))
+    })?;
+    if expect_bytes != usize::MAX && bytes.len() != expect_bytes {
+        return Err(UdtError::data(format!(
+            "shard file `{label}` is {} bytes but the manifest says {expect_bytes} \
+             (truncated or overwritten?)",
+            bytes.len()
+        )));
+    }
+    if fnv1a64(&bytes) != checksum {
+        return Err(UdtError::data(format!(
+            "checksum mismatch in shard file `{label}` (corrupt data?)"
+        )));
+    }
+    Ok(bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::csv::{load_csv_str, CsvOptions};
+    use crate::data::shard::writer::write_dataset_shards;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "udt-shard-ds-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn sample_dataset() -> crate::data::dataset::Dataset {
+        let mut csv = String::from("a,b,c,label\n");
+        for i in 0..90 {
+            let a = format!("{}", (i * 7 % 23) as f64 * 0.5);
+            let b = if i % 4 == 0 { "red".into() } else { format!("{}", i % 6) };
+            let c = if i % 9 == 0 { "?".into() } else { format!("{}", i % 13) };
+            let y = ["u", "v", "w"][i % 3];
+            csv.push_str(&format!("{a},{b},{c},{y}\n"));
+        }
+        load_csv_str("t", &csv, &CsvOptions::default()).unwrap()
+    }
+
+    #[test]
+    fn edges_match_in_memory_binning() {
+        let ds = sample_dataset();
+        let dir = temp_dir("edges");
+        write_dataset_shards(&ds, &dir, 17).unwrap();
+        let sds = ShardedDataset::open(&dir).unwrap();
+        let bins = sds.ensure_bins(8, 0, 2).unwrap();
+        assert!(bins.built);
+
+        let idx = ds.binned_index(8);
+        for (c, lane) in idx.lanes.iter().enumerate() {
+            match (lane, &bins.meta().edges[c]) {
+                (Some(l), Some(e)) => {
+                    assert_eq!(l.edges.len(), e.len(), "col {c}");
+                    for (a, b) in l.edges.iter().zip(e) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "col {c}");
+                    }
+                }
+                (None, None) => {}
+                (a, b) => panic!("col {c}: lane {:?} vs edges {:?}", a.is_some(), b.is_some()),
+            }
+        }
+
+        // Window bin ids match the in-memory lane row for row.
+        let mut row = 0usize;
+        for i in 0..sds.n_shards() {
+            let w = bins.read_window(i).unwrap();
+            for r in 0..w.n_rows {
+                for c in 0..sds.n_features() {
+                    let mem = idx.lanes[c].as_ref().and_then(|l| {
+                        ds.columns[c].data.get(row).is_num().then(|| l.bin_of_row(row) as u32)
+                    });
+                    assert_eq!(
+                        w.bins[c].as_ref().and_then(|lane| lane.get(r)),
+                        mem,
+                        "row {row} col {c}"
+                    );
+                }
+                row += 1;
+            }
+        }
+        assert_eq!(row, 90);
+
+        // Second call reloads instead of rebuilding.
+        let again = sds.ensure_bins(8, 0, 2).unwrap();
+        assert!(!again.built);
+        assert_eq!(again.meta().edges, bins.meta().edges);
+        assert_eq!(again.meta().shard_files, bins.meta().shard_files);
+        // Different parameters build a separate sidecar directory.
+        let other = sds.ensure_bins(4, 0, 2).unwrap();
+        assert!(other.built);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sampled_edges_are_bounded_and_usable() {
+        let ds = sample_dataset();
+        let dir = temp_dir("sampled");
+        write_dataset_shards(&ds, &dir, 30).unwrap();
+        let sds = ShardedDataset::open(&dir).unwrap();
+        let bins = sds.ensure_bins(8, 5, 1).unwrap();
+        let e = bins.meta().edges[0].as_ref().unwrap();
+        assert!(!e.is_empty() && e.len() <= 8);
+        // Every numeric cell lands in a valid bin even if the sample
+        // missed the extremes.
+        let w = bins.read_window(0).unwrap();
+        for r in 0..w.n_rows {
+            if let Some(b) = w.bins[0].as_ref().unwrap().get(r) {
+                assert!((b as usize) < e.len());
+            }
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_and_truncated_files_are_typed_data_errors() {
+        let ds = sample_dataset();
+        let dir = temp_dir("corrupt");
+        write_dataset_shards(&ds, &dir, 40).unwrap();
+
+        // Corrupt manifest JSON.
+        let mpath = dir.join("manifest.json");
+        let good = fs::read_to_string(&mpath).unwrap();
+        fs::write(&mpath, good.replace("udt-shards", "nonsense")).unwrap();
+        assert!(matches!(ShardedDataset::open(&dir), Err(UdtError::Data(_))));
+        fs::write(&mpath, "{not json").unwrap();
+        assert!(matches!(ShardedDataset::open(&dir), Err(UdtError::Data(_))));
+        fs::write(&mpath, &good).unwrap();
+
+        let sds = ShardedDataset::open(&dir).unwrap();
+        assert!(sds.read_shard(0).is_ok());
+
+        // Truncated lane file: size check fires.
+        let spath = dir.join(&sds.manifest().shards[0].file);
+        let bytes = fs::read(&spath).unwrap();
+        fs::write(&spath, &bytes[..bytes.len() - 9]).unwrap();
+        assert!(matches!(sds.read_shard(0), Err(UdtError::Data(_))));
+
+        // Same size, flipped byte: checksum fires.
+        let mut flipped = bytes.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0xff;
+        fs::write(&spath, &flipped).unwrap();
+        assert!(matches!(sds.read_shard(0), Err(UdtError::Data(_))));
+        fs::write(&spath, &bytes).unwrap();
+        assert!(sds.read_shard(0).is_ok());
+
+        // Missing shard file.
+        fs::remove_file(&spath).unwrap();
+        assert!(matches!(sds.read_shard(0), Err(UdtError::Data(_))));
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,1016 @@
+//! Binary (de)serialization of shard files and the JSON manifests.
+//!
+//! Everything on disk is little-endian and versioned behind a 4-byte
+//! magic; every decode error (bad magic, truncated lane, trailing
+//! bytes, checksum mismatch at the reader layer) surfaces as a typed
+//! [`UdtError::Data`]. See the module docs in [`super`] for the full
+//! layout diagram.
+
+use crate::data::column_data::{Bitmask, ColumnData};
+use crate::data::dataset::TaskKind;
+use crate::error::{Result, UdtError};
+use crate::util::json::Json;
+
+/// Raw shard file magic (`shard-*.uds`).
+pub const SHARD_MAGIC: &[u8; 4] = b"UDSH";
+/// Bin-lane sidecar file magic (`bins-*/shard-*.udb`).
+pub const BINS_MAGIC: &[u8; 4] = b"UDSB";
+/// Edge-table file magic (`bins-*/edges.bin`).
+pub const EDGES_MAGIC: &[u8; 4] = b"UDSE";
+/// On-disk format version, bumped on any layout change.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// FNV-1a 64-bit checksum of a byte stream — recorded per file in the
+/// manifests and verified on every windowed read.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// One shard's label lane (class ids are already in the global class
+/// space, regression targets verbatim).
+#[derive(Debug, Clone)]
+pub enum LabelLane {
+    Class(Vec<u16>),
+    Reg(Vec<f64>),
+}
+
+impl LabelLane {
+    pub fn len(&self) -> usize {
+        match self {
+            LabelLane::Class(v) => v.len(),
+            LabelLane::Reg(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn kind(&self) -> TaskKind {
+        match self {
+            LabelLane::Class(_) => TaskKind::Classification,
+            LabelLane::Reg(_) => TaskKind::Regression,
+        }
+    }
+
+    /// Resident bytes of the lane.
+    pub fn approx_bytes(&self) -> usize {
+        match self {
+            LabelLane::Class(v) => v.len() * 2,
+            LabelLane::Reg(v) => v.len() * 8,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Little-endian write helpers.
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64s(out: &mut Vec<u8>, vs: &[f64]) {
+    for &v in vs {
+        put_f64(out, v);
+    }
+}
+
+fn put_u32s(out: &mut Vec<u8>, vs: &[u32]) {
+    for &v in vs {
+        put_u32(out, v);
+    }
+}
+
+fn put_u64s(out: &mut Vec<u8>, vs: &[u64]) {
+    for &v in vs {
+        put_u64(out, v);
+    }
+}
+
+fn put_u16s(out: &mut Vec<u8>, vs: &[u16]) {
+    for &v in vs {
+        put_u16(out, v);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bounds-checked little-endian reader: every premature end is a typed
+// `Data` error naming what was being read — the truncated-lane tests
+// exercise these paths.
+
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cur { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            return Err(UdtError::data(format!(
+                "truncated shard file: expected {n} bytes of {what} at offset {}, {} left",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn counted(&mut self, what: &str) -> Result<usize> {
+        let v = self.u64(what)?;
+        usize::try_from(v)
+            .ok()
+            .filter(|&n| n <= self.buf.len().max(1 << 32))
+            .ok_or_else(|| UdtError::data(format!("implausible {what} count {v} in shard file")))
+    }
+
+    fn f64s(&mut self, n: usize, what: &str) -> Result<Vec<f64>> {
+        let b = self.take(n * 8, what)?;
+        Ok(b.chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn u64s(&mut self, n: usize, what: &str) -> Result<Vec<u64>> {
+        let b = self.take(n * 8, what)?;
+        Ok(b.chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn u32s(&mut self, n: usize, what: &str) -> Result<Vec<u32>> {
+        let b = self.take(n * 4, what)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn u16s(&mut self, n: usize, what: &str) -> Result<Vec<u16>> {
+        let b = self.take(n * 2, what)?;
+        Ok(b.chunks_exact(2)
+            .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn bytes(&mut self, n: usize, what: &str) -> Result<Vec<u8>> {
+        Ok(self.take(n, what)?.to_vec())
+    }
+
+    fn magic(&mut self, expect: &[u8; 4], kind: &str) -> Result<()> {
+        let got = self.take(4, "magic")?;
+        if got != expect {
+            return Err(UdtError::data(format!(
+                "not a {kind} file (magic {:?}, expected {:?})",
+                got, expect
+            )));
+        }
+        let version = self.u32("version")?;
+        if version != FORMAT_VERSION {
+            return Err(UdtError::data(format!(
+                "unsupported {kind} format version {version} (this build reads {FORMAT_VERSION})"
+            )));
+        }
+        Ok(())
+    }
+
+    fn finish(&self, kind: &str) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(UdtError::data(format!(
+                "{} trailing bytes after {kind} payload (corrupt file?)",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Raw shard files (`.uds`): per-column typed lanes mirroring ColumnData.
+
+const KIND_NUM: u8 = 0;
+const KIND_CAT: u8 = 1;
+const KIND_HYBRID: u8 = 2;
+const FLAG_VALID: u8 = 1;
+
+fn mask_words(n_rows: usize) -> usize {
+    n_rows.div_ceil(64)
+}
+
+/// Serialize one shard's columns + label lane to the `.uds` byte layout.
+pub fn encode_shard(columns: &[ColumnData], labels: &LabelLane) -> Vec<u8> {
+    let n_rows = labels.len();
+    debug_assert!(columns.iter().all(|c| c.len() == n_rows));
+    let mut out = Vec::new();
+    out.extend_from_slice(SHARD_MAGIC);
+    put_u32(&mut out, FORMAT_VERSION);
+    put_u64(&mut out, n_rows as u64);
+    put_u64(&mut out, columns.len() as u64);
+    for col in columns {
+        match col {
+            ColumnData::Num { vals, valid } => {
+                out.push(KIND_NUM);
+                out.push(if valid.is_some() { FLAG_VALID } else { 0 });
+                put_f64s(&mut out, vals);
+                if let Some(m) = valid {
+                    put_u64s(&mut out, m.words());
+                }
+            }
+            ColumnData::Cat { ids, valid } => {
+                out.push(KIND_CAT);
+                out.push(if valid.is_some() { FLAG_VALID } else { 0 });
+                put_u32s(&mut out, ids);
+                if let Some(m) = valid {
+                    put_u64s(&mut out, m.words());
+                }
+            }
+            ColumnData::Hybrid {
+                vals,
+                ids,
+                num,
+                cat,
+            } => {
+                out.push(KIND_HYBRID);
+                out.push(0);
+                put_f64s(&mut out, vals);
+                put_u32s(&mut out, ids);
+                put_u64s(&mut out, num.words());
+                put_u64s(&mut out, cat.words());
+            }
+        }
+    }
+    match labels {
+        LabelLane::Class(ids) => {
+            out.push(0);
+            put_u16s(&mut out, ids);
+        }
+        LabelLane::Reg(values) => {
+            out.push(1);
+            put_f64s(&mut out, values);
+        }
+    }
+    out
+}
+
+/// Parse a `.uds` byte buffer back into typed columns + label lane.
+/// `expect_cols` comes from the manifest; a mismatch is a `Data` error.
+pub fn decode_shard(bytes: &[u8], expect_cols: usize) -> Result<(Vec<ColumnData>, LabelLane)> {
+    let mut cur = Cur::new(bytes);
+    cur.magic(SHARD_MAGIC, "shard")?;
+    let n_rows = cur.counted("row")?;
+    let n_cols = cur.counted("column")?;
+    if n_cols != expect_cols {
+        return Err(UdtError::data(format!(
+            "shard has {n_cols} columns but the manifest says {expect_cols}"
+        )));
+    }
+    let words = mask_words(n_rows);
+    let mut columns = Vec::with_capacity(n_cols);
+    for c in 0..n_cols {
+        let kind = cur.u8("column kind")?;
+        let flags = cur.u8("column flags")?;
+        let col = match kind {
+            KIND_NUM => {
+                let vals = cur.f64s(n_rows, "numeric lane")?;
+                let valid = if flags & FLAG_VALID != 0 {
+                    Some(Bitmask::from_words(cur.u64s(words, "validity mask")?, n_rows))
+                } else {
+                    None
+                };
+                ColumnData::Num {
+                    vals: vals.into(),
+                    valid,
+                }
+            }
+            KIND_CAT => {
+                let ids = cur.u32s(n_rows, "categorical lane")?;
+                let valid = if flags & FLAG_VALID != 0 {
+                    Some(Bitmask::from_words(cur.u64s(words, "validity mask")?, n_rows))
+                } else {
+                    None
+                };
+                ColumnData::Cat {
+                    ids: ids.into(),
+                    valid,
+                }
+            }
+            KIND_HYBRID => {
+                let vals = cur.f64s(n_rows, "numeric lane")?;
+                let ids = cur.u32s(n_rows, "categorical lane")?;
+                let num = Bitmask::from_words(cur.u64s(words, "numeric kind mask")?, n_rows);
+                let cat = Bitmask::from_words(cur.u64s(words, "categorical kind mask")?, n_rows);
+                ColumnData::Hybrid {
+                    vals: vals.into(),
+                    ids: ids.into(),
+                    num,
+                    cat,
+                }
+            }
+            k => {
+                return Err(UdtError::data(format!(
+                    "unknown column kind tag {k} for column {c}"
+                )))
+            }
+        };
+        columns.push(col);
+    }
+    let labels = match cur.u8("label kind")? {
+        0 => LabelLane::Class(cur.u16s(n_rows, "class-id lane")?),
+        1 => LabelLane::Reg(cur.f64s(n_rows, "target lane")?),
+        k => return Err(UdtError::data(format!("unknown label kind tag {k}"))),
+    };
+    cur.finish("shard")?;
+    Ok((columns, labels))
+}
+
+// ---------------------------------------------------------------------
+// Bin-lane sidecar files (`.udb`): the training window. Numeric cells
+// carry their dataset-level bin id, categorical cells their interner
+// id; sentinels mark the other kinds so routing and accumulation never
+// touch the f64 lanes again.
+
+/// Sentinel bin id: the row holds no numeric cell for this column.
+pub const NO_BIN_U8: u8 = u8::MAX;
+/// Sentinel bin id (wide lane).
+pub const NO_BIN_U16: u16 = u16::MAX;
+/// Sentinel categorical id: the row holds no categorical cell.
+pub const NO_CAT: u32 = u32::MAX;
+
+/// Bin-id lane of one column in one shard. `U8` when the edge table has
+/// ≤ 255 bins (255 is the sentinel), `U16` otherwise (`max_bins` is
+/// capped at 65535, so 65535 is free for the sentinel).
+#[derive(Debug, Clone)]
+pub enum BinIdLane {
+    U8(Vec<u8>),
+    U16(Vec<u16>),
+}
+
+impl BinIdLane {
+    /// Bin id of row `i`, `None` for non-numeric cells.
+    #[inline]
+    pub fn get(&self, i: usize) -> Option<u32> {
+        match self {
+            BinIdLane::U8(v) => (v[i] != NO_BIN_U8).then(|| v[i] as u32),
+            BinIdLane::U16(v) => (v[i] != NO_BIN_U16).then(|| v[i] as u32),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            BinIdLane::U8(v) => v.len(),
+            BinIdLane::U16(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident bytes of the lane.
+    pub fn approx_bytes(&self) -> usize {
+        match self {
+            BinIdLane::U8(v) => v.len(),
+            BinIdLane::U16(v) => v.len() * 2,
+        }
+    }
+}
+
+/// One shard's decoded training window: bin-id + cat-id lanes and the
+/// label lane. This — not the raw f64 columns — is what every training
+/// pass holds in memory, one shard at a time (read → accumulate →
+/// drop).
+#[derive(Debug, Clone)]
+pub struct BinWindow {
+    pub n_rows: usize,
+    /// Per feature: bin-id lane, `None` when the column has no numeric
+    /// cells anywhere in the dataset.
+    pub bins: Vec<Option<BinIdLane>>,
+    /// Per feature: categorical-id lane (sentinel [`NO_CAT`]), `None`
+    /// when the column has no categorical cells anywhere.
+    pub cats: Vec<Option<Vec<u32>>>,
+    pub labels: LabelLane,
+}
+
+impl BinWindow {
+    /// Resident bytes of every lane in the window — the quantity the
+    /// `peak_shard_window_bytes` witness tracks.
+    pub fn approx_bytes(&self) -> usize {
+        self.bins
+            .iter()
+            .flatten()
+            .map(BinIdLane::approx_bytes)
+            .sum::<usize>()
+            + self
+                .cats
+                .iter()
+                .flatten()
+                .map(|v| v.len() * 4)
+                .sum::<usize>()
+            + self.labels.approx_bytes()
+    }
+}
+
+/// Serialize one shard's training window to the `.udb` byte layout.
+pub fn encode_bin_window(w: &BinWindow) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(BINS_MAGIC);
+    put_u32(&mut out, FORMAT_VERSION);
+    put_u64(&mut out, w.n_rows as u64);
+    put_u64(&mut out, w.bins.len() as u64);
+    for (bin, cat) in w.bins.iter().zip(&w.cats) {
+        match bin {
+            None => out.push(0),
+            Some(BinIdLane::U8(v)) => {
+                out.push(1);
+                out.extend_from_slice(v);
+            }
+            Some(BinIdLane::U16(v)) => {
+                out.push(2);
+                put_u16s(&mut out, v);
+            }
+        }
+        match cat {
+            None => out.push(0),
+            Some(ids) => {
+                out.push(1);
+                put_u32s(&mut out, ids);
+            }
+        }
+    }
+    match &w.labels {
+        LabelLane::Class(ids) => {
+            out.push(0);
+            put_u16s(&mut out, ids);
+        }
+        LabelLane::Reg(values) => {
+            out.push(1);
+            put_f64s(&mut out, values);
+        }
+    }
+    out
+}
+
+/// Parse a `.udb` byte buffer back into a training window.
+pub fn decode_bin_window(bytes: &[u8], expect_cols: usize) -> Result<BinWindow> {
+    let mut cur = Cur::new(bytes);
+    cur.magic(BINS_MAGIC, "bin-lane sidecar")?;
+    let n_rows = cur.counted("row")?;
+    let n_cols = cur.counted("column")?;
+    if n_cols != expect_cols {
+        return Err(UdtError::data(format!(
+            "bin sidecar has {n_cols} columns but the manifest says {expect_cols}"
+        )));
+    }
+    let mut bins = Vec::with_capacity(n_cols);
+    let mut cats = Vec::with_capacity(n_cols);
+    for _ in 0..n_cols {
+        bins.push(match cur.u8("bin lane tag")? {
+            0 => None,
+            1 => Some(BinIdLane::U8(cur.bytes(n_rows, "u8 bin lane")?)),
+            2 => Some(BinIdLane::U16(cur.u16s(n_rows, "u16 bin lane")?)),
+            t => return Err(UdtError::data(format!("unknown bin lane tag {t}"))),
+        });
+        cats.push(match cur.u8("cat lane tag")? {
+            0 => None,
+            1 => Some(cur.u32s(n_rows, "cat-id lane")?),
+            t => return Err(UdtError::data(format!("unknown cat lane tag {t}"))),
+        });
+    }
+    let labels = match cur.u8("label kind")? {
+        0 => LabelLane::Class(cur.u16s(n_rows, "class-id lane")?),
+        1 => LabelLane::Reg(cur.f64s(n_rows, "target lane")?),
+        k => return Err(UdtError::data(format!("unknown label kind tag {k}"))),
+    };
+    cur.finish("bin sidecar")?;
+    Ok(BinWindow {
+        n_rows,
+        bins,
+        cats,
+        labels,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Edge tables (`edges.bin`): the global quantile bin edges + per-column
+// categorical cardinality, stored in binary so every f64 round-trips
+// bit-exactly (node-for-node identity with in-memory training depends
+// on it).
+
+/// Global binning metadata of one `bins-<B>` directory.
+#[derive(Debug, Clone)]
+pub struct BinsMeta {
+    pub max_bins: usize,
+    /// Per-shard reservoir size used by the edge pass (0 = exact).
+    pub sample_rows: usize,
+    /// Per feature: ascending bin-edge table (actual data values);
+    /// `None` when the column has no numeric cells.
+    pub edges: Vec<Option<Vec<f64>>>,
+    /// Per feature: number of distinct categorical ids (max id + 1);
+    /// 0 when the column has no categorical cells.
+    pub cat_card: Vec<u32>,
+    /// Sidecar file name + FNV-1a checksum, aligned with the manifest's
+    /// shard list.
+    pub shard_files: Vec<(String, u64)>,
+}
+
+/// Serialize edge tables + cardinalities to the `edges.bin` layout.
+pub fn encode_edges(meta: &BinsMeta) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(EDGES_MAGIC);
+    put_u32(&mut out, FORMAT_VERSION);
+    put_u64(&mut out, meta.max_bins as u64);
+    put_u64(&mut out, meta.sample_rows as u64);
+    put_u64(&mut out, meta.edges.len() as u64);
+    for (edges, &card) in meta.edges.iter().zip(&meta.cat_card) {
+        match edges {
+            None => out.push(0),
+            Some(e) => {
+                out.push(1);
+                put_u64(&mut out, e.len() as u64);
+                put_f64s(&mut out, e);
+            }
+        }
+        put_u32(&mut out, card);
+    }
+    out
+}
+
+/// Parse an `edges.bin` buffer; `shard_files` is filled by the caller
+/// from `bins.json`.
+pub fn decode_edges(bytes: &[u8], expect_cols: usize) -> Result<BinsMeta> {
+    let mut cur = Cur::new(bytes);
+    cur.magic(EDGES_MAGIC, "edge table")?;
+    let max_bins = cur.counted("max_bins")?;
+    let sample_rows = cur.counted("sample_rows")?;
+    let n_cols = cur.counted("column")?;
+    if n_cols != expect_cols {
+        return Err(UdtError::data(format!(
+            "edge table has {n_cols} columns but the manifest says {expect_cols}"
+        )));
+    }
+    let mut edges = Vec::with_capacity(n_cols);
+    let mut cat_card = Vec::with_capacity(n_cols);
+    for _ in 0..n_cols {
+        edges.push(match cur.u8("edge tag")? {
+            0 => None,
+            1 => {
+                let n = cur.counted("edge")?;
+                Some(cur.f64s(n, "edge values")?)
+            }
+            t => return Err(UdtError::data(format!("unknown edge tag {t}"))),
+        });
+        cat_card.push(cur.u32("categorical cardinality")?);
+    }
+    cur.finish("edge table")?;
+    Ok(BinsMeta {
+        max_bins,
+        sample_rows,
+        edges,
+        cat_card,
+        shard_files: Vec::new(),
+    })
+}
+
+// ---------------------------------------------------------------------
+// Manifests.
+
+/// One shard's entry in `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ShardEntry {
+    pub file: String,
+    pub n_rows: usize,
+    /// Global row id of this shard's first row.
+    pub row_offset: usize,
+    /// File size in bytes (verified before decode).
+    pub bytes: usize,
+    /// FNV-1a 64 of the file contents (verified before decode).
+    pub checksum: u64,
+}
+
+/// The `manifest.json` of a shard directory: schema (feature names,
+/// interner, class names), task kind, row counts and the shard list.
+#[derive(Debug, Clone)]
+pub struct ShardManifest {
+    pub name: String,
+    pub task: TaskKind,
+    pub n_rows: usize,
+    pub feature_names: Vec<String>,
+    /// The merged interner's names in id order — re-interning them in
+    /// order reproduces every categorical id on the lanes.
+    pub cat_names: Vec<String>,
+    /// Class names in class-id order (classification; empty for
+    /// regression).
+    pub class_names: Vec<String>,
+    pub shards: Vec<ShardEntry>,
+}
+
+fn hex_u64(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+fn parse_hex_u64(s: &str, what: &str) -> Result<u64> {
+    u64::from_str_radix(s, 16)
+        .map_err(|_| UdtError::data(format!("manifest: bad {what} checksum `{s}`")))
+}
+
+fn str_array(j: &Json, key: &str) -> Result<Vec<String>> {
+    let arr = j
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| UdtError::data(format!("manifest: missing array `{key}`")))?;
+    arr.iter()
+        .map(|v| {
+            v.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| UdtError::data(format!("manifest: `{key}` holds a non-string")))
+        })
+        .collect()
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| UdtError::data(format!("manifest: missing number `{key}`")))
+}
+
+fn str_field<'j>(j: &'j Json, key: &str) -> Result<&'j str> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| UdtError::data(format!("manifest: missing string `{key}`")))
+}
+
+impl ShardManifest {
+    pub fn n_features(&self) -> usize {
+        self.feature_names.len()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let task = match self.task {
+            TaskKind::Classification => "classification",
+            TaskKind::Regression => "regression",
+        };
+        Json::obj(vec![
+            ("format", Json::Str("udt-shards".into())),
+            ("version", Json::Num(FORMAT_VERSION as f64)),
+            ("name", Json::Str(self.name.clone())),
+            ("task", Json::Str(task.into())),
+            ("n_rows", Json::Num(self.n_rows as f64)),
+            (
+                "feature_names",
+                Json::Arr(self.feature_names.iter().map(|s| Json::Str(s.clone())).collect()),
+            ),
+            (
+                "cat_names",
+                Json::Arr(self.cat_names.iter().map(|s| Json::Str(s.clone())).collect()),
+            ),
+            (
+                "class_names",
+                Json::Arr(self.class_names.iter().map(|s| Json::Str(s.clone())).collect()),
+            ),
+            (
+                "shards",
+                Json::Arr(
+                    self.shards
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("file", Json::Str(s.file.clone())),
+                                ("n_rows", Json::Num(s.n_rows as f64)),
+                                ("row_offset", Json::Num(s.row_offset as f64)),
+                                ("bytes", Json::Num(s.bytes as f64)),
+                                ("checksum", Json::Str(hex_u64(s.checksum))),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ShardManifest> {
+        if str_field(j, "format")? != "udt-shards" {
+            return Err(UdtError::data("manifest: not a udt-shards manifest"));
+        }
+        let version = usize_field(j, "version")?;
+        if version != FORMAT_VERSION as usize {
+            return Err(UdtError::data(format!(
+                "manifest: unsupported version {version} (this build reads {FORMAT_VERSION})"
+            )));
+        }
+        let task = match str_field(j, "task")? {
+            "classification" => TaskKind::Classification,
+            "regression" => TaskKind::Regression,
+            t => return Err(UdtError::data(format!("manifest: unknown task `{t}`"))),
+        };
+        let n_rows = usize_field(j, "n_rows")?;
+        let shards_json = j
+            .get("shards")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| UdtError::data("manifest: missing array `shards`"))?;
+        let mut shards = Vec::with_capacity(shards_json.len());
+        let mut expect_offset = 0usize;
+        for s in shards_json {
+            let entry = ShardEntry {
+                file: str_field(s, "file")?.to_string(),
+                n_rows: usize_field(s, "n_rows")?,
+                row_offset: usize_field(s, "row_offset")?,
+                bytes: usize_field(s, "bytes")?,
+                checksum: parse_hex_u64(str_field(s, "checksum")?, "shard")?,
+            };
+            if entry.row_offset != expect_offset {
+                return Err(UdtError::data(format!(
+                    "manifest: shard `{}` starts at row {} but the previous shards \
+                     cover {} rows",
+                    entry.file, entry.row_offset, expect_offset
+                )));
+            }
+            expect_offset += entry.n_rows;
+            shards.push(entry);
+        }
+        if expect_offset != n_rows {
+            return Err(UdtError::data(format!(
+                "manifest: shards cover {expect_offset} rows but n_rows is {n_rows}"
+            )));
+        }
+        let manifest = ShardManifest {
+            name: str_field(j, "name")?.to_string(),
+            task,
+            n_rows,
+            feature_names: str_array(j, "feature_names")?,
+            cat_names: str_array(j, "cat_names")?,
+            class_names: str_array(j, "class_names")?,
+            shards,
+        };
+        if manifest.feature_names.is_empty() {
+            return Err(UdtError::data("manifest: no feature columns"));
+        }
+        Ok(manifest)
+    }
+}
+
+/// Serialize the `bins.json` document for a sidecar directory.
+pub fn bins_json(meta: &BinsMeta, edges_checksum: u64) -> Json {
+    Json::obj(vec![
+        ("format", Json::Str("udt-bins".into())),
+        ("version", Json::Num(FORMAT_VERSION as f64)),
+        ("max_bins", Json::Num(meta.max_bins as f64)),
+        ("sample_rows", Json::Num(meta.sample_rows as f64)),
+        ("edges_checksum", Json::Str(hex_u64(edges_checksum))),
+        (
+            "shards",
+            Json::Arr(
+                meta.shard_files
+                    .iter()
+                    .map(|(file, sum)| {
+                        Json::obj(vec![
+                            ("file", Json::Str(file.clone())),
+                            ("checksum", Json::Str(hex_u64(*sum))),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Parse a `bins.json` document: `(max_bins, sample_rows,
+/// edges_checksum, shard files)`.
+pub fn parse_bins_json(j: &Json) -> Result<(usize, usize, u64, Vec<(String, u64)>)> {
+    if str_field(j, "format")? != "udt-bins" {
+        return Err(UdtError::data("bins.json: not a udt-bins manifest"));
+    }
+    let version = usize_field(j, "version")?;
+    if version != FORMAT_VERSION as usize {
+        return Err(UdtError::data(format!(
+            "bins.json: unsupported version {version} (this build reads {FORMAT_VERSION})"
+        )));
+    }
+    let max_bins = usize_field(j, "max_bins")?;
+    let sample_rows = usize_field(j, "sample_rows")?;
+    let edges_checksum = parse_hex_u64(str_field(j, "edges_checksum")?, "edge table")?;
+    let shards_json = j
+        .get("shards")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| UdtError::data("bins.json: missing array `shards`"))?;
+    let mut files = Vec::with_capacity(shards_json.len());
+    for s in shards_json {
+        files.push((
+            str_field(s, "file")?.to_string(),
+            parse_hex_u64(str_field(s, "checksum")?, "sidecar")?,
+        ));
+    }
+    Ok((max_bins, sample_rows, edges_checksum, files))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::value::Value;
+
+    fn hybrid_cols() -> Vec<ColumnData> {
+        vec![
+            ColumnData::from_cells(&[Value::Num(1.5), Value::Num(-2.0), Value::Missing]),
+            ColumnData::from_cells(&[
+                Value::Cat(crate::data::interner::CatId(3)),
+                Value::Num(7.0),
+                Value::Cat(crate::data::interner::CatId(0)),
+            ]),
+        ]
+    }
+
+    #[test]
+    fn shard_round_trips_every_column_kind() {
+        let cols = hybrid_cols();
+        let labels = LabelLane::Class(vec![0, 1, 0]);
+        let bytes = encode_shard(&cols, &labels);
+        let (back, lab) = decode_shard(&bytes, 2).unwrap();
+        assert_eq!(back.len(), 2);
+        for (a, b) in cols.iter().zip(&back) {
+            assert_eq!(a.cells(), b.cells());
+        }
+        match lab {
+            LabelLane::Class(ids) => assert_eq!(ids, vec![0, 1, 0]),
+            LabelLane::Reg(_) => panic!("wrong label kind"),
+        }
+
+        let reg = LabelLane::Reg(vec![0.25, -1.5, 9.0]);
+        let bytes = encode_shard(&cols, &reg);
+        let (_, lab) = decode_shard(&bytes, 2).unwrap();
+        match lab {
+            LabelLane::Reg(v) => assert_eq!(v, vec![0.25, -1.5, 9.0]),
+            LabelLane::Class(_) => panic!("wrong label kind"),
+        }
+    }
+
+    #[test]
+    fn truncated_and_corrupt_shards_are_typed_data_errors() {
+        let cols = hybrid_cols();
+        let bytes = encode_shard(&cols, &LabelLane::Class(vec![0, 1, 0]));
+        // Truncation at any prefix is a Data error, never a panic.
+        for cut in [0, 3, 4, 8, 16, bytes.len() / 2, bytes.len() - 1] {
+            match decode_shard(&bytes[..cut], 2) {
+                Err(UdtError::Data(_)) => {}
+                other => panic!("cut at {cut}: expected Data error, got {other:?}"),
+            }
+        }
+        // Trailing garbage is detected too.
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(matches!(decode_shard(&padded, 2), Err(UdtError::Data(_))));
+        // Wrong magic.
+        let mut wrong = bytes.clone();
+        wrong[0] = b'X';
+        assert!(matches!(decode_shard(&wrong, 2), Err(UdtError::Data(_))));
+        // Column-count mismatch against the manifest.
+        assert!(matches!(decode_shard(&bytes, 3), Err(UdtError::Data(_))));
+    }
+
+    #[test]
+    fn bin_window_round_trips() {
+        let w = BinWindow {
+            n_rows: 3,
+            bins: vec![
+                Some(BinIdLane::U8(vec![0, 2, NO_BIN_U8])),
+                None,
+                Some(BinIdLane::U16(vec![300, NO_BIN_U16, 1])),
+            ],
+            cats: vec![
+                None,
+                Some(vec![1, NO_CAT, 0]),
+                Some(vec![NO_CAT, 2, NO_CAT]),
+            ],
+            labels: LabelLane::Reg(vec![1.0, 2.0, 3.0]),
+        };
+        let bytes = encode_bin_window(&w);
+        let back = decode_bin_window(&bytes, 3).unwrap();
+        assert_eq!(back.n_rows, 3);
+        assert_eq!(back.approx_bytes(), w.approx_bytes());
+        assert_eq!(back.bins[0].as_ref().unwrap().get(0), Some(0));
+        assert_eq!(back.bins[0].as_ref().unwrap().get(2), None);
+        assert_eq!(back.bins[2].as_ref().unwrap().get(0), Some(300));
+        assert_eq!(back.bins[2].as_ref().unwrap().get(1), None);
+        assert!(back.bins[1].is_none());
+        assert_eq!(back.cats[1].as_ref().unwrap(), &vec![1, NO_CAT, 0]);
+        // Truncated sidecar → typed Data error.
+        assert!(matches!(
+            decode_bin_window(&bytes[..bytes.len() - 2], 3),
+            Err(UdtError::Data(_))
+        ));
+    }
+
+    #[test]
+    fn edges_round_trip_bit_exactly() {
+        let meta = BinsMeta {
+            max_bins: 256,
+            sample_rows: 0,
+            edges: vec![
+                Some(vec![0.1, 0.30000000000000004, 1e300, -0.0]),
+                None,
+            ],
+            cat_card: vec![0, 7],
+            shard_files: Vec::new(),
+        };
+        let bytes = encode_edges(&meta);
+        let back = decode_edges(&bytes, 2).unwrap();
+        assert_eq!(back.max_bins, 256);
+        let e = back.edges[0].as_ref().unwrap();
+        for (a, b) in meta.edges[0].as_ref().unwrap().iter().zip(e) {
+            assert_eq!(a.to_bits(), b.to_bits(), "edge must round-trip bit-exactly");
+        }
+        assert!(back.edges[1].is_none());
+        assert_eq!(back.cat_card, vec![0, 7]);
+    }
+
+    #[test]
+    fn manifest_round_trips_and_rejects_corruption() {
+        let m = ShardManifest {
+            name: "t".into(),
+            task: TaskKind::Classification,
+            n_rows: 10,
+            feature_names: vec!["a".into(), "b".into()],
+            cat_names: vec!["x".into()],
+            class_names: vec!["no".into(), "yes".into()],
+            shards: vec![
+                ShardEntry {
+                    file: "shard-00000.uds".into(),
+                    n_rows: 6,
+                    row_offset: 0,
+                    bytes: 100,
+                    checksum: 0xdeadbeef,
+                },
+                ShardEntry {
+                    file: "shard-00001.uds".into(),
+                    n_rows: 4,
+                    row_offset: 6,
+                    bytes: 80,
+                    checksum: 1,
+                },
+            ],
+        };
+        let text = m.to_json().to_pretty();
+        let back = ShardManifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.n_rows, 10);
+        assert_eq!(back.feature_names, m.feature_names);
+        assert_eq!(back.shards[1].checksum, 1);
+        assert_eq!(back.shards[1].row_offset, 6);
+        assert_eq!(back.task, TaskKind::Classification);
+
+        // Row-coverage mismatches are rejected.
+        let mut bad = m.clone();
+        bad.shards[1].n_rows = 5;
+        let j = Json::parse(&bad.to_json().to_string()).unwrap();
+        assert!(matches!(ShardManifest::from_json(&j), Err(UdtError::Data(_))));
+        let mut bad = m.clone();
+        bad.shards[1].row_offset = 7;
+        let j = Json::parse(&bad.to_json().to_string()).unwrap();
+        assert!(matches!(ShardManifest::from_json(&j), Err(UdtError::Data(_))));
+        // Missing fields are rejected.
+        let j = Json::parse(r#"{"format":"udt-shards","version":1}"#).unwrap();
+        assert!(matches!(ShardManifest::from_json(&j), Err(UdtError::Data(_))));
+        // Wrong format string.
+        let j = Json::parse(r#"{"format":"something-else"}"#).unwrap();
+        assert!(matches!(ShardManifest::from_json(&j), Err(UdtError::Data(_))));
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_ne!(fnv1a64(b"ab"), fnv1a64(b"ba"));
+    }
+}

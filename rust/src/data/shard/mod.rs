@@ -1,0 +1,77 @@
+//! Out-of-core columnar shards: a versioned on-disk dataset format for
+//! training far beyond RAM.
+//!
+//! A shard directory is produced by `udt shard` (streaming CSV, never
+//! materializing the dataset) or [`writer::write_dataset_shards`], and
+//! consumed by [`dataset::ShardedDataset`] +
+//! [`crate::tree::sharded::fit_sharded`], which trains with one shard
+//! window resident at a time.
+//!
+//! # On-disk layout
+//!
+//! ```text
+//! mydata.shards/
+//! ├── manifest.json            schema + shard list (see below)
+//! ├── shard-00000.uds          raw typed lanes, rows [0, n0)
+//! ├── shard-00001.uds          rows [n0, n0+n1)   …
+//! └── bins-256/                sidecars for max_bins=256 (built lazily)
+//!     ├── bins.json            parameters + checksums
+//!     ├── edges.bin            global quantile bin edges (binary f64)
+//!     ├── shard-00000.udb      bin-id/cat-id training window
+//!     └── shard-00001.udb      …
+//!
+//! shard-NNNNN.uds  ("UDSH", version u32, n_rows u64, n_cols u64, LE)
+//!   per column:
+//!     kind u8 (0=Num 1=Cat 2=Hybrid) · flags u8 (bit0: validity mask)
+//!     Num:    vals f64×n  [+ mask u64×⌈n/64⌉]
+//!     Cat:    ids  u32×n  [+ mask]
+//!     Hybrid: vals f64×n · ids u32×n · num-mask · cat-mask
+//!   label lane: tag u8 (0=class u16×n, 1=target f64×n)
+//!
+//! shard-NNNNN.udb  ("UDSB", header as above)
+//!   per column:
+//!     bin tag u8 (0=none, 1=u8 lane sentinel 255, 2=u16 lane
+//!     sentinel 65535) · lane, then cat tag u8 (0=none, 1=u32 lane
+//!     sentinel 2³²−1) · lane
+//!   label lane duplicated, so training passes touch only this file
+//!
+//! edges.bin  ("UDSE", version, max_bins u64, sample_rows u64, n_cols)
+//!   per column: tag u8 (0=no numeric lane, 1=edges) ·
+//!   [n_edges u64 · edges f64×n] · cat_card u32
+//! ```
+//!
+//! `manifest.json` fields: `format`/`version`, dataset `name`, `task`,
+//! total `n_rows`, `feature_names`, `cat_names` (the merged interner's
+//! names in id order — re-interning them in order reproduces every
+//! categorical id), `class_names`, and `shards` (per shard: `file`,
+//! `n_rows`, `row_offset`, `bytes`, FNV-1a-64 `checksum` as hex).
+//! Every file read is verified against its recorded size/checksum
+//! before decoding; any mismatch, truncation, bad magic, version skew
+//! or trailing garbage is a typed [`crate::error::UdtError::Data`].
+//!
+//! # RAM model
+//!
+//! Training memory is bounded by **one** shard's decoded window plus
+//! per-node histogram scratch, independent of total dataset size:
+//!
+//! * edge pass — per-column distinct-value run maps (or bounded
+//!   reservoirs with `shard.sample_rows`), one raw shard resident;
+//! * histogram passes — one decoded `.udb` window (u8/u16 bin ids +
+//!   u32 cat ids + labels) resident at a time: read → accumulate →
+//!   drop; per-node histograms use parent-minus-sibling subtraction so
+//!   only the smaller child is ever accumulated;
+//! * a `peak_shard_window_bytes` witness tracks the largest resident
+//!   window and is asserted in tests and surfaced in the pipeline
+//!   report.
+//!
+//! Bin edges are computed by the same run-based quantile loop as
+//! in-memory binning, so sharded training is node-for-node identical
+//! to `--backend binned` on the same `max_bins` (property-tested).
+
+pub mod dataset;
+pub mod format;
+pub mod writer;
+
+pub use dataset::{ShardBins, ShardedDataset};
+pub use format::{BinWindow, BinsMeta, LabelLane, ShardEntry, ShardManifest};
+pub use writer::{shard_csv_file, shard_csv_str, write_dataset_shards};

@@ -1,0 +1,564 @@
+//! Streaming CSV → shard conversion and `Dataset` → shard export.
+//!
+//! The CSV path never materializes the full dataset: file bytes stream
+//! through a line-aligned [`BlockReader`], each block runs through the
+//! chunk-parallel typed parser in [`crate::data::csv`], and typed rows
+//! accumulate in `ColumnShard`s that flush to a `.uds` file whenever
+//! they reach `rows_per_shard`. Chunk-local categorical/class ids remap
+//! into the global id space in arrival order — first-seen order
+//! composes across blocks and chunks, so the manifest's interner and
+//! class map are byte-identical to an in-memory `load_csv_str` of the
+//! same file, at any thread count or block size.
+
+use std::collections::HashMap;
+use std::fs;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::parallel::{effective_threads, parallel_map};
+use crate::data::column_data::{ColumnData, ColumnShard};
+use crate::data::csv::{
+    first_data_width, line_aligned_chunks, parse_chunk, split_header, ChunkShard, CsvOptions,
+    LabelMode,
+};
+use crate::data::dataset::{Dataset, Labels, TaskKind};
+use crate::data::interner::Interner;
+use crate::error::{Result, UdtError};
+
+use super::format::{encode_shard, fnv1a64, LabelLane, ShardEntry, ShardManifest};
+
+/// Default streaming block size (bytes); each block is cut on a line
+/// boundary before parsing.
+const DEFAULT_BLOCK_BYTES: usize = 8 << 20;
+
+/// Reads line-aligned UTF-8 blocks of roughly `target` bytes from any
+/// byte stream. A block always ends on a `'\n'` (except the final one),
+/// so chunking and cell parsing never see a split line or a split
+/// multi-byte character.
+struct BlockReader<R: Read> {
+    src: R,
+    target: usize,
+    /// Bytes read but not yet emitted (tail after the last newline).
+    carry: Vec<u8>,
+    done: bool,
+}
+
+impl<R: Read> BlockReader<R> {
+    fn new(src: R, target: usize) -> Self {
+        BlockReader {
+            src,
+            target: target.max(1),
+            carry: Vec::new(),
+            done: false,
+        }
+    }
+
+    /// Next line-aligned block, `Ok(None)` at end of stream.
+    fn next_block(&mut self, name: &str) -> Result<Option<String>> {
+        if self.done && self.carry.is_empty() {
+            return Ok(None);
+        }
+        let mut buf = std::mem::take(&mut self.carry);
+        let mut scratch = vec![0u8; 64 << 10];
+        while !self.done && buf.len() < self.target {
+            let n = self.src.read(&mut scratch)?;
+            if n == 0 {
+                self.done = true;
+            } else {
+                buf.extend_from_slice(&scratch[..n]);
+            }
+        }
+        // Keep reading until the block can end on a newline (a line
+        // longer than `target` extends the block rather than splitting).
+        while !self.done && !buf.contains(&b'\n') {
+            let n = self.src.read(&mut scratch)?;
+            if n == 0 {
+                self.done = true;
+            } else {
+                buf.extend_from_slice(&scratch[..n]);
+            }
+        }
+        if buf.is_empty() {
+            return Ok(None);
+        }
+        let cut = if self.done {
+            buf.len()
+        } else {
+            match buf.iter().rposition(|&b| b == b'\n') {
+                Some(i) => i + 1,
+                None => buf.len(),
+            }
+        };
+        self.carry = buf.split_off(cut);
+        String::from_utf8(buf)
+            .map(Some)
+            .map_err(|_| UdtError::data(format!("csv `{name}` is not valid UTF-8")))
+    }
+}
+
+/// Accumulates merged typed rows and flushes them to numbered `.uds`
+/// files; owns the global interner / class map and the manifest under
+/// construction.
+struct ShardSink {
+    dir: PathBuf,
+    rows_per_shard: usize,
+    n_features: usize,
+    task: TaskKind,
+    interner: Interner,
+    class_names: Vec<String>,
+    global_class: HashMap<String, u16>,
+    cols: Vec<ColumnShard>,
+    class_ids: Vec<u16>,
+    reg_vals: Vec<f64>,
+    pending_rows: usize,
+    rows_flushed: usize,
+    shards: Vec<ShardEntry>,
+}
+
+impl ShardSink {
+    fn new(dir: &Path, rows_per_shard: usize, n_features: usize, task: TaskKind) -> Self {
+        ShardSink {
+            dir: dir.to_path_buf(),
+            rows_per_shard,
+            n_features,
+            task,
+            interner: Interner::new(),
+            class_names: Vec::new(),
+            global_class: HashMap::new(),
+            cols: (0..n_features).map(|_| ColumnShard::default()).collect(),
+            class_ids: Vec::new(),
+            reg_vals: Vec::new(),
+            pending_rows: 0,
+            rows_flushed: 0,
+            shards: Vec::new(),
+        }
+    }
+
+    fn rows_seen(&self) -> usize {
+        self.rows_flushed + self.pending_rows
+    }
+
+    /// Ordered merge of one chunk's typed shard — the same remap idiom
+    /// as `parse_typed_csv`, against sink-global id spaces.
+    fn merge_chunk(&mut self, shard: &ChunkShard) {
+        let remap: Vec<u32> = shard
+            .interner
+            .names()
+            .iter()
+            .map(|n| self.interner.intern(n).0)
+            .collect();
+        for (dst, src) in self.cols.iter_mut().zip(&shard.cols) {
+            dst.append_remapped(src, &remap);
+        }
+        if !shard.class_names.is_empty() || !shard.class_ids.is_empty() {
+            let cmap: Vec<u16> = shard
+                .class_names
+                .iter()
+                .map(|n| match self.global_class.get(n) {
+                    Some(&id) => id,
+                    None => {
+                        let id = self.class_names.len() as u16;
+                        self.class_names.push(n.clone());
+                        self.global_class.insert(n.clone(), id);
+                        id
+                    }
+                })
+                .collect();
+            self.class_ids
+                .extend(shard.class_ids.iter().map(|&l| cmap[l as usize]));
+        }
+        self.reg_vals.extend_from_slice(&shard.reg_vals);
+        self.pending_rows += shard.n_rows;
+    }
+
+    /// Write all pending rows as one shard file.
+    fn flush(&mut self) -> Result<()> {
+        if self.pending_rows == 0 {
+            return Ok(());
+        }
+        let cols: Vec<ColumnData> = std::mem::replace(
+            &mut self.cols,
+            (0..self.n_features).map(|_| ColumnShard::default()).collect(),
+        )
+        .into_iter()
+        .map(ColumnShard::finish)
+        .collect();
+        let labels = match self.task {
+            TaskKind::Classification => LabelLane::Class(std::mem::take(&mut self.class_ids)),
+            TaskKind::Regression => LabelLane::Reg(std::mem::take(&mut self.reg_vals)),
+        };
+        let bytes = encode_shard(&cols, &labels);
+        let file = format!("shard-{:05}.uds", self.shards.len());
+        fs::write(self.dir.join(&file), &bytes)?;
+        self.shards.push(ShardEntry {
+            file,
+            n_rows: self.pending_rows,
+            row_offset: self.rows_flushed,
+            bytes: bytes.len(),
+            checksum: fnv1a64(&bytes),
+        });
+        self.rows_flushed += self.pending_rows;
+        self.pending_rows = 0;
+        Ok(())
+    }
+
+    fn into_manifest(self, name: &str, feature_names: Vec<String>) -> ShardManifest {
+        ShardManifest {
+            name: name.to_string(),
+            task: self.task,
+            n_rows: self.rows_flushed,
+            feature_names,
+            cat_names: self.interner.names().to_vec(),
+            class_names: self.class_names,
+            shards: self.shards,
+        }
+    }
+}
+
+/// Per-file parse state fixed by the first block that carries data:
+/// record width, label placement and feature names.
+struct CsvShape {
+    width: usize,
+    n_features: usize,
+    label: LabelMode,
+    feature_names: Vec<String>,
+}
+
+fn resolve_shape(
+    name: &str,
+    header: Option<&[String]>,
+    body: &str,
+    opts: &CsvOptions,
+) -> Result<Option<CsvShape>> {
+    let width = match header.map(<[String]>::len) {
+        Some(w) => w,
+        None => match first_data_width(body, opts.delimiter) {
+            Some(w) => w,
+            None => return Ok(None),
+        },
+    };
+    if width < 2 {
+        return Err(UdtError::data(format!(
+            "csv `{name}` needs at least one feature column plus a label"
+        )));
+    }
+    let label_col = opts.label_col.unwrap_or(width - 1);
+    if label_col >= width {
+        return Err(UdtError::data(format!(
+            "label column {label_col} out of range (width {width})"
+        )));
+    }
+    let label = match opts.task {
+        TaskKind::Classification => LabelMode::Class(label_col),
+        TaskKind::Regression => LabelMode::Reg(label_col),
+    };
+    let feature_names = (0..width)
+        .filter(|&c| c != label_col)
+        .map(|c| {
+            header
+                .and_then(|h| h.get(c).cloned())
+                .unwrap_or_else(|| format!("f{c}"))
+        })
+        .collect();
+    Ok(Some(CsvShape {
+        width,
+        n_features: width - 1,
+        label,
+        feature_names,
+    }))
+}
+
+fn shard_stream<R: Read>(
+    name: &str,
+    src: R,
+    dir: &Path,
+    opts: &CsvOptions,
+    rows_per_shard: usize,
+    block_bytes: usize,
+) -> Result<ShardManifest> {
+    if rows_per_shard == 0 {
+        return Err(UdtError::invalid_config("shard.rows must be >= 1"));
+    }
+    fs::create_dir_all(dir)?;
+    let threads = effective_threads(opts.n_threads).max(1);
+    let mut reader = BlockReader::new(src, block_bytes);
+
+    let mut shape: Option<CsvShape> = None;
+    let mut sink: Option<ShardSink> = None;
+    let mut header: Option<Vec<String>> = None;
+    let mut need_header = opts.has_header;
+    while let Some(block) = reader.next_block(name)? {
+        let body: &str = if need_header {
+            // Keep scanning blocks until the header line shows up (a
+            // block of nothing but blank lines yields an empty body).
+            let (h, b) = split_header(&block, opts.delimiter, true);
+            if h.is_some() {
+                header = h;
+                need_header = false;
+            }
+            b
+        } else {
+            &block
+        };
+        if shape.is_none() {
+            shape = resolve_shape(name, header.as_deref(), body, opts)?;
+        }
+        let Some(sh) = shape.as_ref() else { continue };
+        let sink = sink.get_or_insert_with(|| {
+            ShardSink::new(dir, rows_per_shard, sh.n_features, opts.task)
+        });
+        let target = if opts.chunk_bytes > 0 {
+            opts.chunk_bytes
+        } else if threads <= 1 {
+            body.len().max(1)
+        } else {
+            (body.len() / (threads * 4)).max(1 << 16)
+        };
+        let chunks = line_aligned_chunks(body, target);
+        let parsed = parallel_map(chunks, threads, |chunk| {
+            parse_chunk(chunk, sh.width, sh.n_features, sh.label, opts.delimiter)
+        });
+        for res in parsed {
+            let chunk = match res {
+                Ok(c) => c,
+                Err(e) => return Err(e.into_error(sink.rows_seen(), sh.width)),
+            };
+            sink.merge_chunk(&chunk);
+            if sink.pending_rows >= rows_per_shard {
+                sink.flush()?;
+            }
+        }
+    }
+    let (Some(shape), Some(mut sink)) = (shape, sink) else {
+        return Err(UdtError::data(format!("csv `{name}` has no data rows")));
+    };
+    sink.flush()?;
+    if sink.rows_flushed == 0 {
+        return Err(UdtError::data(format!("csv `{name}` has no data rows")));
+    }
+    let manifest = sink.into_manifest(name, shape.feature_names);
+    write_manifest(dir, &manifest)?;
+    Ok(manifest)
+}
+
+fn write_manifest(dir: &Path, manifest: &ShardManifest) -> Result<()> {
+    fs::write(
+        dir.join("manifest.json"),
+        manifest.to_json().to_pretty() + "\n",
+    )?;
+    Ok(())
+}
+
+/// Stream a CSV file into a shard directory without materializing the
+/// dataset; returns the written manifest.
+pub fn shard_csv_file(
+    path: impl AsRef<Path>,
+    dir: impl AsRef<Path>,
+    opts: &CsvOptions,
+    rows_per_shard: usize,
+) -> Result<ShardManifest> {
+    let path = path.as_ref();
+    let name = path
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("dataset")
+        .to_string();
+    let file = fs::File::open(path)?;
+    shard_stream(
+        &name,
+        file,
+        dir.as_ref(),
+        opts,
+        rows_per_shard,
+        DEFAULT_BLOCK_BYTES,
+    )
+}
+
+/// Shard CSV text through the same streaming path (tests, small data).
+pub fn shard_csv_str(
+    name: &str,
+    text: &str,
+    dir: impl AsRef<Path>,
+    opts: &CsvOptions,
+    rows_per_shard: usize,
+) -> Result<ShardManifest> {
+    shard_stream(
+        name,
+        text.as_bytes(),
+        dir.as_ref(),
+        opts,
+        rows_per_shard,
+        DEFAULT_BLOCK_BYTES,
+    )
+}
+
+/// Export an in-memory [`Dataset`] as a shard directory (row order
+/// preserved; interner and class map copied verbatim).
+pub fn write_dataset_shards(
+    ds: &Dataset,
+    dir: impl AsRef<Path>,
+    rows_per_shard: usize,
+) -> Result<ShardManifest> {
+    if rows_per_shard == 0 {
+        return Err(UdtError::invalid_config("shard.rows must be >= 1"));
+    }
+    let dir = dir.as_ref();
+    fs::create_dir_all(dir)?;
+    let n_rows = ds.labels.len();
+    if n_rows == 0 {
+        return Err(UdtError::data("cannot shard an empty dataset"));
+    }
+    let mut shards = Vec::new();
+    let mut offset = 0usize;
+    while offset < n_rows {
+        let end = (offset + rows_per_shard).min(n_rows);
+        let rows: Vec<u32> = (offset as u32..end as u32).collect();
+        let cols: Vec<ColumnData> = ds.columns.iter().map(|c| c.data.gather(&rows)).collect();
+        let labels = match &ds.labels {
+            Labels::Class { ids, .. } => {
+                LabelLane::Class(rows.iter().map(|&r| ids[r as usize]).collect())
+            }
+            Labels::Reg { values } => {
+                LabelLane::Reg(rows.iter().map(|&r| values[r as usize]).collect())
+            }
+        };
+        let bytes = encode_shard(&cols, &labels);
+        let file = format!("shard-{:05}.uds", shards.len());
+        fs::write(dir.join(&file), &bytes)?;
+        shards.push(ShardEntry {
+            file,
+            n_rows: end - offset,
+            row_offset: offset,
+            bytes: bytes.len(),
+            checksum: fnv1a64(&bytes),
+        });
+        offset = end;
+    }
+    let manifest = ShardManifest {
+        name: ds.name.clone(),
+        task: ds.task(),
+        n_rows,
+        feature_names: ds.columns.iter().map(|c| c.name.clone()).collect(),
+        cat_names: ds.interner.names().to_vec(),
+        class_names: ds.class_names.as_ref().clone(),
+        shards,
+    };
+    write_manifest(dir, &manifest)?;
+    Ok(manifest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::csv::load_csv_str;
+    use crate::data::shard::dataset::ShardedDataset;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "udt-shard-writer-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn sample_csv() -> String {
+        let mut s = String::from("a,b,label\n");
+        for i in 0..100 {
+            let a = if i % 7 == 0 {
+                "?".to_string()
+            } else {
+                format!("{}", (i * 13 % 29) as f64 / 2.0)
+            };
+            let b = if i % 3 == 0 {
+                format!("cat{}", i % 5)
+            } else {
+                format!("{}", i % 11)
+            };
+            let y = if i % 2 == 0 { "yes" } else { "no" };
+            s.push_str(&format!("{a},{b},{y}\n"));
+        }
+        s
+    }
+
+    #[test]
+    fn streamed_shards_match_in_memory_parse() {
+        let csv = sample_csv();
+        let dir = temp_dir("match");
+        // Tiny blocks + tiny chunks + multiple shards: every boundary in
+        // one test.
+        let opts = CsvOptions {
+            chunk_bytes: 64,
+            n_threads: 2,
+            ..CsvOptions::default()
+        };
+        let manifest =
+            shard_stream("t", csv.as_bytes(), &dir, &opts, 17, 128).unwrap();
+        assert!(manifest.shards.len() > 1, "want multiple shards");
+        assert_eq!(manifest.n_rows, 100);
+
+        let ds = load_csv_str("t", &csv, &CsvOptions::default()).unwrap();
+        let sds = ShardedDataset::open(&dir).unwrap();
+        assert_eq!(sds.manifest().cat_names, ds.interner.names());
+        assert_eq!(sds.manifest().class_names, *ds.class_names);
+        assert_eq!(
+            sds.manifest().feature_names,
+            ds.columns.iter().map(|c| c.name.clone()).collect::<Vec<_>>()
+        );
+        // Reassembled cells equal the in-memory parse row for row.
+        let mut row = 0usize;
+        for i in 0..sds.n_shards() {
+            let (cols, labels) = sds.read_shard(i).unwrap();
+            for r in 0..labels.len() {
+                for (c, col) in cols.iter().enumerate() {
+                    assert_eq!(col.get(r), ds.columns[c].data.get(row), "row {row} col {c}");
+                }
+                match &labels {
+                    LabelLane::Class(ids) => assert_eq!(ids[r], ds.labels.class(row)),
+                    LabelLane::Reg(_) => panic!("classification expected"),
+                }
+                row += 1;
+            }
+        }
+        assert_eq!(row, 100);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dataset_export_round_trips() {
+        let csv = sample_csv();
+        let ds = load_csv_str("t", &csv, &CsvOptions::default()).unwrap();
+        let dir = temp_dir("export");
+        let manifest = write_dataset_shards(&ds, &dir, 33).unwrap();
+        assert_eq!(manifest.shards.len(), 4);
+        assert_eq!(manifest.shards[3].n_rows, 1);
+        let sds = ShardedDataset::open(&dir).unwrap();
+        let (cols, _) = sds.read_shard(3).unwrap();
+        assert_eq!(cols[0].get(0), ds.columns[0].data.get(99));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bad_csv_errors_are_typed() {
+        let dir = temp_dir("bad");
+        let opts = CsvOptions::default();
+        // No data rows.
+        let err = shard_csv_str("t", "a,label\n", &dir, &opts, 10).unwrap_err();
+        assert!(matches!(err, UdtError::Data(_)), "{err:?}");
+        // Ragged row, with the global row index fixed up across shards.
+        let mut csv = String::from("a,label\n");
+        for i in 0..40 {
+            csv.push_str(&format!("{i},x\n"));
+        }
+        csv.push_str("1,2,3\n");
+        let err = shard_csv_str("t", &csv, &dir, &opts, 8).unwrap_err();
+        match err {
+            UdtError::Data(m) => assert!(m.contains("row 41"), "{m}"),
+            other => panic!("expected Data, got {other:?}"),
+        }
+        // rows_per_shard = 0 is a config error.
+        let err = shard_csv_str("t", "a,label\n1,x\n", &dir, &opts, 0).unwrap_err();
+        assert!(matches!(err, UdtError::InvalidConfig(_)));
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   train        train a tree or forest on a CSV or registered dataset
+//!                (or out-of-core from a shard directory via --shards)
+//!   shard        stream a CSV into an on-disk columnar shard directory
 //!   pipeline     the paper's full train→tune→prune→evaluate pipeline
 //!   predict      load a serialized model and evaluate it over a CSV
 //!   gen-data     materialize a registered synthetic dataset as CSV
@@ -44,6 +46,7 @@ fn run(args: &[String]) -> Result<()> {
     let rest = &args[1..];
     match sub.as_str() {
         "train" => cmd_train(rest),
+        "shard" => cmd_shard(rest),
         "pipeline" => cmd_pipeline(rest),
         "predict" => cmd_predict(rest),
         "gen-data" => cmd_gen_data(rest),
@@ -68,6 +71,7 @@ fn print_usage() {
          \n\
          subcommands:\n\
            train            train a tree, forest or boosted ensemble (CSV or --dataset)\n\
+           shard            stream a CSV into an on-disk shard directory (out-of-core)\n\
            pipeline         train → tune (once) → prune → evaluate\n\
            predict          evaluate a serialized model over a CSV\n\
            gen-data         write a registry dataset to CSV\n\
@@ -217,6 +221,11 @@ fn cmd_train(raw: &[String]) -> Result<()> {
         .opt("min-split", "minimum samples to split", None)
         .opt("threads", "worker threads (0 = all cores)", None)
         .opt("parse-threads", "CSV ingest worker threads (0 = all cores)", Some("0"))
+        .opt(
+            "shards",
+            "train out-of-core from a shard directory (see `udt shard`); forces --backend binned",
+            None,
+        )
         .opt("forest", "train a bagged forest of N trees instead", None)
         .opt("boosted", "train a gradient-boosted ensemble of N rounds instead", None)
         .opt("learning-rate", "boosting shrinkage (with --boosted)", None)
@@ -228,6 +237,9 @@ fn cmd_train(raw: &[String]) -> Result<()> {
         .positional("input.csv");
     let a = cmd.parse(raw)?;
     let cfg = base_config(&a)?;
+    if let Some(dir) = a.get("shards") {
+        return cmd_train_sharded(&a, &cfg, dir);
+    }
     let ds = load_dataset(&a)?;
     let train_cfg = train_config(&a, &cfg)?;
 
@@ -260,6 +272,121 @@ fn cmd_train(raw: &[String]) -> Result<()> {
         SavedModel::new(model, &ds).save(out)?;
         println!("wrote {out}");
     }
+    Ok(())
+}
+
+/// `train --shards DIR`: out-of-core training over an on-disk shard
+/// directory (see `udt shard`). Histogram-only, so the binned backend is
+/// forced; regression uses DirectSse (the only strategy the binned
+/// engine supports).
+fn cmd_train_sharded(a: &Args, cfg: &Config, dir: &str) -> Result<()> {
+    if a.get("forest").is_some() || a.get("boosted").is_some() {
+        return Err(UdtError::usage(
+            "--forest/--boosted are not supported with --shards (single binned tree only)",
+        ));
+    }
+    if a.get("out").is_some() {
+        return Err(UdtError::usage(
+            "--out is not supported with --shards (sharded training has no in-memory \
+             dataset to bundle the model schema from)",
+        ));
+    }
+    let sds = udt::data::ShardedDataset::open(dir)?;
+    let mut train_cfg = train_config(a, cfg)?;
+    if !matches!(train_cfg.backend, Backend::Binned { .. }) {
+        let max_bins = a.get_usize("max-bins", cfg.max_bins()?)?;
+        udt::tree::validate_max_bins(max_bins)?;
+        train_cfg.backend = Backend::Binned { max_bins };
+    }
+    if sds.task() == TaskKind::Regression {
+        train_cfg.reg_strategy = udt::tree::RegStrategy::DirectSse;
+    }
+    let sample_rows = cfg.shard_config()?.sample_rows;
+
+    let timer = Timer::start();
+    let (tree, stats) =
+        udt::tree::sharded::fit_sharded_sampled(&sds, &train_cfg, sample_rows)?;
+    let ms = timer.ms();
+    println!(
+        "dataset={} rows={} features={} shards={} | nodes={} depth={} train={:.1}ms",
+        sds.manifest().name,
+        sds.n_rows(),
+        sds.n_features(),
+        sds.n_shards(),
+        tree.n_nodes(),
+        tree.depth,
+        ms
+    );
+    println!(
+        "  out-of-core: peak shard window {} KiB, hist blocks {} KiB, row assignment \
+         {} KiB, {} shard passes over {} levels",
+        stats.peak_shard_window_bytes / 1024,
+        stats.peak_hist_bytes / 1024,
+        stats.assignment_bytes / 1024,
+        stats.shard_passes,
+        stats.n_levels
+    );
+    Ok(())
+}
+
+fn cmd_shard(raw: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "shard",
+        "stream a CSV into an on-disk columnar shard directory",
+    )
+    .opt("out", "output shard directory (default: <input>.shards)", None)
+    .opt("task", "classification|regression", Some("classification"))
+    .opt(
+        "rows-per-shard",
+        "rows per shard file (default: the shard.rows config key, 65536)",
+        None,
+    )
+    .opt("parse-threads", "CSV parse worker threads (0 = all cores)", Some("0"))
+    .opt("config", "config file", None)
+    .opt_multi("set", "config override key=value (e.g. shard.rows=…)")
+    .positional("input.csv");
+    let a = cmd.parse(raw)?;
+    let cfg = base_config(&a)?;
+    let path = a
+        .positional
+        .first()
+        .ok_or_else(|| UdtError::usage("provide a CSV path to shard"))?;
+    let task = match a.get_or("task", "classification") {
+        "classification" => TaskKind::Classification,
+        "regression" => TaskKind::Regression,
+        other => return Err(UdtError::usage(format!("unknown task `{other}`"))),
+    };
+    let rows_per_shard = a.get_usize("rows-per-shard", cfg.shard_config()?.rows_per_shard)?;
+    let out = match a.get("out") {
+        Some(o) => std::path::PathBuf::from(o),
+        None => std::path::Path::new(path).with_extension("shards"),
+    };
+    let opts = CsvOptions {
+        task,
+        n_threads: a.get_usize("parse-threads", 0)?,
+        ..Default::default()
+    };
+    let input_bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+
+    let timer = Timer::start();
+    let manifest = udt::data::shard::shard_csv_file(path, &out, &opts, rows_per_shard)?;
+    let ms = timer.ms();
+    let shard_bytes: usize = manifest.shards.iter().map(|s| s.bytes).sum();
+    println!(
+        "wrote {}: {} rows → {} shards ({:.1} MiB on disk) in {ms:.1} ms ({:.1} MB/s csv)",
+        out.display(),
+        manifest.n_rows,
+        manifest.shards.len(),
+        shard_bytes as f64 / (1u64 << 20) as f64,
+        input_bytes as f64 / 1e6 / (ms / 1e3).max(1e-9)
+    );
+    println!(
+        "  task={:?} features={} classes={}; train with `udt train --shards {}`",
+        manifest.task,
+        manifest.feature_names.len(),
+        manifest.class_names.len(),
+        out.display()
+    );
     Ok(())
 }
 

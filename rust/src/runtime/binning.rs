@@ -28,35 +28,40 @@ impl Binning {
     }
 }
 
-/// Bin `values` (ascending) into at most `max_bins` equal-frequency bins
-/// whose boundaries never split a run of equal values. Returns `None`
-/// when `values` is empty.
-pub fn quantile_bins(values: &[f64], max_bins: usize) -> Option<Binning> {
-    let n = values.len();
-    if n == 0 || max_bins == 0 {
+/// Binning computed from distinct-value runs alone (no per-row lane):
+/// the edge table plus, per run, the bin it landed in. This is the
+/// shard-training entry point — out-of-core edge building merges
+/// per-shard `(value, count)` run lists and never materializes a sorted
+/// row lane.
+#[derive(Debug, Clone)]
+pub struct RunBinning {
+    /// Upper edge value of each used bin (ascending). `edges.len() ≤ B`.
+    pub edges: Vec<f64>,
+    /// Bin id of each input run, aligned with the run list.
+    pub bin_of_run: Vec<u32>,
+    /// True when every run got its own bin (see [`Binning::is_exact`]).
+    pub is_exact: bool,
+}
+
+/// Bin a list of distinct-value `(value, count)` runs (values strictly
+/// ascending) into at most `max_bins` equal-frequency bins. This is the
+/// one bin-assignment loop: [`quantile_bins`] delegates here after
+/// collapsing its sorted lane into runs, so in-memory and sharded edge
+/// building are bit-identical by construction. Returns `None` when the
+/// run list is empty.
+pub fn quantile_bins_from_runs(runs: &[(f64, usize)], max_bins: usize) -> Option<RunBinning> {
+    if runs.is_empty() || max_bins == 0 {
         return None;
     }
-    // Pre-sized: at most min(max_bins, n) edges, exactly n bin ids. The
-    // id lane is bulk-filled one equal-value run at a time instead of
-    // pushed per row.
-    let mut edges: Vec<f64> = Vec::with_capacity(max_bins.min(n));
-    let mut bin_of_sorted: Vec<u32> = vec![0; n];
+    let n: usize = runs.iter().map(|&(_, c)| c).sum();
+    let mut edges: Vec<f64> = Vec::with_capacity(max_bins.min(runs.len()));
+    let mut bin_of_run: Vec<u32> = Vec::with_capacity(runs.len());
 
     // Distinct-value runs, assigned to bins by a target per-bin count.
     let target = (n as f64 / max_bins as f64).max(1.0);
     let mut current_bin = 0u32;
     let mut in_bin = 0usize; // rows already placed in current bin
-    let mut n_runs = 0usize; // distinct-value runs seen
-    let mut i = 0usize;
-    while i < n {
-        // Find the run of equal values.
-        let v = values[i];
-        let mut j = i;
-        while j < n && values[j] == v {
-            j += 1;
-        }
-        let run = j - i;
-        n_runs += 1;
+    for &(v, run) in runs {
         // Close the current bin if adding this run overshoots the target
         // (and the bin is non-empty, and more bins are available).
         if in_bin > 0
@@ -71,15 +76,49 @@ pub fn quantile_bins(values: &[f64], max_bins: usize) -> Option<Binning> {
         } else {
             *edges.last_mut().unwrap() = v;
         }
-        bin_of_sorted[i..j].fill(current_bin);
+        bin_of_run.push(current_bin);
         in_bin += run;
+    }
+    let is_exact = edges.len() == runs.len();
+    Some(RunBinning {
+        edges,
+        bin_of_run,
+        is_exact,
+    })
+}
+
+/// Bin `values` (ascending) into at most `max_bins` equal-frequency bins
+/// whose boundaries never split a run of equal values. Returns `None`
+/// when `values` is empty.
+pub fn quantile_bins(values: &[f64], max_bins: usize) -> Option<Binning> {
+    let n = values.len();
+    if n == 0 || max_bins == 0 {
+        return None;
+    }
+    // Collapse the sorted lane into distinct-value runs, delegate the
+    // bin assignment, then expand run bins back over the row lane.
+    let mut runs: Vec<(f64, usize)> = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        let v = values[i];
+        let mut j = i;
+        while j < n && values[j] == v {
+            j += 1;
+        }
+        runs.push((v, j - i));
         i = j;
     }
-    let is_exact = edges.len() == n_runs;
+    let rb = quantile_bins_from_runs(&runs, max_bins)?;
+    let mut bin_of_sorted: Vec<u32> = vec![0; n];
+    let mut at = 0usize;
+    for (&(_, run), &bin) in runs.iter().zip(&rb.bin_of_run) {
+        bin_of_sorted[at..at + run].fill(bin);
+        at += run;
+    }
     Some(Binning {
-        edges,
+        edges: rb.edges,
         bin_of_sorted,
-        is_exact,
+        is_exact: rb.is_exact,
     })
 }
 
@@ -157,6 +196,27 @@ mod tests {
         assert_eq!(b.edges, vec![7.0]);
         assert_eq!(b.bin_of_sorted, vec![0, 0, 0]);
         assert!(b.is_exact);
+    }
+
+    #[test]
+    fn runs_entry_point_matches_lane_entry_point() {
+        // The same data presented as a sorted lane and as (value, count)
+        // runs must produce identical edges and bin assignments — the
+        // sharded edge pass relies on this.
+        let vals = [0.5, 0.5, 1.5, 2.0, 2.0, 2.0, 3.0, 9.0, 9.0];
+        let runs = [(0.5, 2), (1.5, 1), (2.0, 3), (3.0, 1), (9.0, 2)];
+        for max_bins in [1, 2, 3, 4, 8] {
+            let a = quantile_bins(&vals, max_bins).unwrap();
+            let b = quantile_bins_from_runs(&runs, max_bins).unwrap();
+            assert_eq!(a.edges, b.edges, "B={max_bins}");
+            assert_eq!(a.is_exact, b.is_exact, "B={max_bins}");
+            let mut expanded = Vec::new();
+            for (&(_, c), &bin) in runs.iter().zip(&b.bin_of_run) {
+                expanded.extend(std::iter::repeat(bin).take(c));
+            }
+            assert_eq!(a.bin_of_sorted, expanded, "B={max_bins}");
+        }
+        assert!(quantile_bins_from_runs(&[], 4).is_none());
     }
 
     #[test]

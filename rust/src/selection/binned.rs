@@ -229,6 +229,152 @@ fn regression(
     best
 }
 
+/// Best classification split on one feature from histograms alone — the
+/// out-of-core twin of the view-based scorer above. Sharded training
+/// has no `FeatureView` (no sorted lanes, no categorical lists); the
+/// categorical candidates come from `cat`, a dense `cat_card × C` label
+/// table accumulated shard-by-shard, walked in ascending-id order —
+/// the same group order as the in-memory categorical lists, so the
+/// candidate sequence (and therefore strictly-greater tie-breaking) is
+/// identical. `class_counts` is the node's per-class row count.
+pub(crate) fn best_split_class_stats(
+    class_counts: &[f64],
+    crit: super::heuristic::ClassCriterion,
+    hist: &[f64],
+    edges: &[f64],
+    cat: &[f64],
+    scratch: &mut Scratch,
+) -> Option<ScoredSplit> {
+    let c = class_counts.len();
+    let n_bins = edges.len();
+    debug_assert_eq!(hist.len(), n_bins * c);
+    debug_assert_eq!(cat.len() % c.max(1), 0);
+    scratch.reset_class(c);
+
+    // Totals: numeric per-class counts from the histogram, the rest by
+    // subtraction from the node's class counts (same arithmetic as the
+    // view-based path, so every intermediate is bit-identical).
+    for row in hist.chunks_exact(c) {
+        for y in 0..c {
+            scratch.tot_num[y] += row[y];
+        }
+    }
+    for y in 0..c {
+        scratch.rest[y] = class_counts[y] - scratch.tot_num[y];
+    }
+    let n_num_total: f64 = scratch.tot_num.iter().sum();
+    let rest_total: f64 = scratch.rest.iter().sum();
+
+    let mut best: Option<ScoredSplit> = None;
+
+    // `O(B)` prefix walk, empty-in-node bins skipped (see above).
+    let mut cum_total = 0.0f64;
+    for (b, row) in hist.chunks_exact(c).enumerate() {
+        let bin_n: f64 = row.iter().sum();
+        if bin_n == 0.0 {
+            continue;
+        }
+        for y in 0..c {
+            scratch.cum[y] += row[y];
+        }
+        cum_total += bin_n;
+        let x = edges[b];
+        let (cum, tot_num, rest) = (&scratch.cum, &scratch.tot_num, &scratch.rest);
+        let pos_total = cum_total;
+        let neg_total = n_num_total - cum_total + rest_total;
+        if pos_total > 0.0 && neg_total > 0.0 {
+            let score = crit.score_with_totals(c, pos_total, neg_total, |y| {
+                (cum[y], tot_num[y] - cum[y] + rest[y])
+            });
+            best.consider(score, SplitOp::Le(x));
+        }
+        let pos_total = n_num_total - cum_total;
+        let neg_total = cum_total + rest_total;
+        if pos_total > 0.0 && neg_total > 0.0 {
+            let score = crit.score_with_totals(c, pos_total, neg_total, |y| {
+                (tot_num[y] - cum[y], cum[y] + rest[y])
+            });
+            best.consider(score, SplitOp::Gt(x));
+        }
+    }
+
+    // Categorical `= id` candidates from the dense table. Ids with no
+    // rows in this node are skipped — they are exactly the ids the
+    // grouped-list walk never visits.
+    let all_total = n_num_total + rest_total;
+    for (id, row) in cat.chunks_exact(c.max(1)).enumerate() {
+        let pos_total: f64 = row.iter().sum();
+        if pos_total == 0.0 {
+            continue;
+        }
+        let neg_total = all_total - pos_total;
+        if neg_total > 0.0 {
+            for y in 0..c {
+                scratch.pos[y] = row[y];
+                scratch.neg[y] = scratch.tot_num[y] + scratch.rest[y] - row[y];
+            }
+            let score = crit.score(&scratch.pos, &scratch.neg);
+            best.consider(score, SplitOp::Eq(CatId(id as u32)));
+        }
+    }
+
+    best
+}
+
+/// Best regression (SSE) split from histograms alone — out-of-core twin
+/// of the view-based `regression` scorer. `cat` is a dense
+/// `cat_card × 2` `(count, sum)` table; `reg_stats` the node `(n, sum)`.
+pub(crate) fn best_split_reg_stats(
+    reg_stats: (f64, f64),
+    hist: &[f64],
+    edges: &[f64],
+    cat: &[f64],
+) -> Option<ScoredSplit> {
+    let n_bins = edges.len();
+    debug_assert_eq!(hist.len(), n_bins * 2);
+    let (mut n_num, mut sum_num) = (0.0f64, 0.0f64);
+    for pair in hist.chunks_exact(2) {
+        n_num += pair[0];
+        sum_num += pair[1];
+    }
+    let (n_all_s, sum_all_s) = reg_stats;
+    let n_rest = n_all_s - n_num;
+    let sum_rest = sum_all_s - sum_num;
+    let (n_all, sum_all) = (n_num + n_rest, sum_num + sum_rest);
+
+    let mut best: Option<ScoredSplit> = None;
+
+    let (mut cum_n, mut cum_sum) = (0.0f64, 0.0f64);
+    for (b, pair) in hist.chunks_exact(2).enumerate() {
+        if pair[0] == 0.0 {
+            continue;
+        }
+        cum_n += pair[0];
+        cum_sum += pair[1];
+        let x = edges[b];
+        let score = sse_score(cum_n, cum_sum, n_all - cum_n, sum_all - cum_sum);
+        best.consider(score, SplitOp::Le(x));
+        let score = sse_score(
+            n_num - cum_n,
+            sum_num - cum_sum,
+            cum_n + n_rest,
+            cum_sum + sum_rest,
+        );
+        best.consider(score, SplitOp::Gt(x));
+    }
+
+    for (id, pair) in cat.chunks_exact(2).enumerate() {
+        if pair[0] == 0.0 {
+            continue;
+        }
+        let (cn, cs) = (pair[0], pair[1]);
+        let score = sse_score(cn, cs, n_all - cn, sum_all - cs);
+        best.consider(score, SplitOp::Eq(CatId(id as u32)));
+    }
+
+    best
+}
+
 /// Accumulate one node's rows into a feature histogram (classification:
 /// `+1` at `[bin · C + class]`; regression: `(count, sum)` at
 /// `[bin · 2]`). `rows` is the node's numeric row list for the feature;
@@ -390,6 +536,123 @@ mod tests {
         );
         let targets = vec![5.0, 5.5, 4.5, 30.0, 50.0];
         assert_matches_exact(&col, LabelsView::Reg { values: &targets }, Criterion::Sse);
+    }
+
+    /// The stats-based twins must agree with the view-based scorers —
+    /// same op, bit-identical score — given the same histograms and a
+    /// dense cat table built from the same rows.
+    fn assert_stats_twin_matches(col: &Column, labels: LabelsView, criterion: Criterion) {
+        let n = col.len();
+        let rows: Vec<u32> = (0..n as u32).collect();
+        let (sorted_rows, sorted_vals) = col.sorted_numeric();
+        let (cat_rows, cat_ids) = col.sorted_categorical();
+        let lane = BinLane::build(&sorted_rows, &sorted_vals, n, 64);
+        let (hist, edges): (Vec<f64>, Vec<f64>) = match &lane {
+            Some(lane) => {
+                let mut h = vec![0.0; lane.n_bins() * hist_width(&labels)];
+                accumulate(&mut h, &sorted_rows, &[], &labels, |r| lane.bin_of_row(r));
+                (h, lane.edges.to_vec())
+            }
+            None => (Vec::new(), Vec::new()),
+        };
+        let width = hist_width(&labels);
+        let cat_card = cat_ids.iter().copied().max().map_or(0, |m| m as usize + 1);
+        let mut cat = vec![0.0; cat_card * width];
+        for (&id, &r) in cat_ids.iter().zip(&cat_rows) {
+            match &labels {
+                LabelsView::Class { ids, .. } => {
+                    cat[id as usize * width + ids[r as usize] as usize] += 1.0;
+                }
+                LabelsView::Reg { values } => {
+                    cat[id as usize * 2] += 1.0;
+                    cat[id as usize * 2 + 1] += values[r as usize];
+                }
+            }
+        }
+
+        let mut class_counts = Vec::new();
+        let mut reg_stats = None;
+        match &labels {
+            LabelsView::Class { ids, n_classes } => {
+                class_counts.resize(*n_classes, 0.0);
+                for &r in &rows {
+                    class_counts[ids[r as usize] as usize] += 1.0;
+                }
+            }
+            LabelsView::Reg { values } => {
+                let sum: f64 = rows.iter().map(|&r| values[r as usize]).sum();
+                reg_stats = Some((n as f64, sum));
+            }
+        }
+        let mut view = FeatureView::new(0, col, &rows, &sorted_rows, &sorted_vals);
+        view.class_counts = &class_counts;
+        view.reg_stats = reg_stats;
+        view.sorted_cat_rows = &cat_rows;
+        view.sorted_cat_ids = &cat_ids;
+        view.cat_lists_valid = true;
+        let mut scratch = Scratch::new();
+        let via_view =
+            best_split_on_feat_binned(&view, &labels, criterion, &hist, &edges, &mut scratch);
+        let via_stats = match (&labels, criterion) {
+            (LabelsView::Class { .. }, Criterion::Class(crit)) => {
+                let mut scratch = Scratch::new();
+                best_split_class_stats(&class_counts, crit, &hist, &edges, &cat, &mut scratch)
+            }
+            (LabelsView::Reg { .. }, Criterion::Sse) => {
+                best_split_reg_stats(reg_stats.unwrap(), &hist, &edges, &cat)
+            }
+            _ => unreachable!(),
+        };
+        assert_eq!(via_stats.as_ref().map(|s| s.op), via_view.as_ref().map(|s| s.op));
+        if let (Some(a), Some(b)) = (via_stats, via_view) {
+            assert_eq!(a.score.to_bits(), b.score.to_bits(), "score must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn stats_twins_match_view_scorers() {
+        // Hybrid column: numerics, two categorical groups, a missing.
+        let mut i = crate::data::interner::Interner::new();
+        let (red, blue) = (i.intern("red"), i.intern("blue"));
+        let col = Column::new(
+            "h",
+            vec![
+                Value::Num(1.0),
+                Value::Cat(red),
+                Value::Num(2.0),
+                Value::Cat(blue),
+                Value::Missing,
+                Value::Num(2.0),
+                Value::Cat(red),
+                Value::Num(5.0),
+            ],
+        );
+        let ids: Vec<u16> = vec![0, 1, 0, 2, 1, 1, 1, 2];
+        for crit in [
+            ClassCriterion::InfoGain,
+            ClassCriterion::Gini,
+            ClassCriterion::ChiSquare,
+        ] {
+            assert_stats_twin_matches(
+                &col,
+                LabelsView::Class { ids: &ids, n_classes: 3 },
+                Criterion::Class(crit),
+            );
+        }
+        let targets = vec![5.0, 9.0, 4.5, -2.0, 30.0, 5.5, 8.0, 50.0];
+        assert_stats_twin_matches(&col, LabelsView::Reg { values: &targets }, Criterion::Sse);
+
+        // Pure categorical (no numeric lane at all).
+        let col = Column::new(
+            "c",
+            vec![Value::Cat(red), Value::Cat(blue), Value::Cat(red), Value::Cat(blue)],
+        );
+        let ids: Vec<u16> = vec![0, 1, 0, 1];
+        assert_stats_twin_matches(
+            &col,
+            LabelsView::Class { ids: &ids, n_classes: 2 },
+            Criterion::Class(ClassCriterion::Gini),
+        );
     }
 
     #[test]

@@ -9,6 +9,7 @@ pub mod label_split;
 pub mod predict;
 pub mod prune;
 pub mod serialize;
+pub mod sharded;
 pub mod tuning;
 
 use crate::data::dataset::{Dataset, TaskKind};

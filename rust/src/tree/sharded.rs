@@ -1,0 +1,794 @@
+//! Out-of-core tree training over a shard directory.
+//!
+//! [`fit_sharded`] is a second, streaming driver for the binned
+//! selection engine: the level-synchronous loop, stop rules, label /
+//! purity computation, baseline and tie-breaking all mirror
+//! `tree/builder.rs` statement for statement, but node state lives in
+//! per-node histogram blocks fed shard-by-shard instead of an in-RAM
+//! row arena. Resident memory is bounded by one decoded shard window
+//! plus the frontier's histogram blocks plus one `u32` per row
+//! (the node-assignment lane) — independent of dataset size.
+//!
+//! Each level costs two sequential passes over the bin-lane sidecars:
+//!
+//! 1. **route** — every live row evaluates its node's freshly chosen
+//!    predicate on the bin-id/cat-id lanes (a `≤ x` threshold becomes a
+//!    `bin ≤ bin(x)` comparison) and moves to a child slot; child label
+//!    stats (class counts / regression `n, Σy, min, max`) accumulate in
+//!    the same pass in ascending row order;
+//! 2. **accumulate** — only the *smaller* child of every split
+//!    accumulates histograms from the lanes; the larger child derives
+//!    its block by parent-minus-sibling subtraction, exactly like the
+//!    in-memory `BinnedState`.
+//!
+//! Scoring uses the histogram-only twins in `selection/binned.rs`
+//! (`best_split_class_stats` / `best_split_reg_stats`), which replicate
+//! the view-based scorers' candidate order and arithmetic, so on
+//! lossless bin lanes the resulting tree is node-for-node identical to
+//! in-memory `--backend binned` training on the same `max_bins`
+//! (property-tested in `tests/prop_shard.rs`).
+
+use crate::coordinator::parallel::parallel_map_scratch;
+use crate::data::dataset::TaskKind;
+use crate::data::shard::dataset::{ShardBins, ShardedDataset};
+use crate::data::shard::format::{BinsMeta, LabelLane, NO_CAT};
+use crate::error::{Result, UdtError};
+use crate::selection::binned::{best_split_class_stats, best_split_reg_stats};
+use crate::selection::split::{SplitOp, SplitPredicate};
+use crate::selection::superfast::{ScoredSplit, Scratch};
+
+use super::{validate_max_bins, Backend, Node, NodeLabel, RegStrategy, TrainConfig, Tree};
+
+/// Witnesses of the bounded-RAM contract, returned alongside the tree
+/// and surfaced in the pipeline report.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardedStats {
+    /// Largest decoded shard window resident at any point (bytes).
+    /// Windows are read → accumulated → dropped one at a time, so this
+    /// is `max` over shards, never a sum.
+    pub peak_shard_window_bytes: usize,
+    /// Sequential passes over the shard directory: 2 if the bin
+    /// sidecars were built (edge pass + lane pass), 1 for the root
+    /// histogram, then 2 per split level (route + accumulate).
+    pub shard_passes: usize,
+    /// Peak bytes held in per-node histogram blocks (incl. the
+    /// accumulation scratch of the current level).
+    pub peak_hist_bytes: usize,
+    /// Bytes of the per-row node-assignment lane (`4 · n_rows`).
+    pub assignment_bytes: usize,
+    /// Histogram add operations ((row, numeric-feature) and
+    /// (row, categorical-feature) entries actually accumulated).
+    pub hist_rows_accumulated: u64,
+    /// Frontier levels processed (root = 1).
+    pub n_levels: usize,
+}
+
+/// Per-feature offsets into a node's flat histogram block: numeric
+/// histogram (`n_edges × width`) then dense categorical table
+/// (`cat_card × width`), per feature, concatenated. One block per
+/// scoreable node; subtraction runs over the whole block at once.
+struct Layout {
+    width: usize,
+    hist_off: Vec<usize>,
+    n_edges: Vec<usize>,
+    cat_off: Vec<usize>,
+    cat_card: Vec<usize>,
+    block_len: usize,
+}
+
+impl Layout {
+    fn new(meta: &BinsMeta, width: usize) -> Layout {
+        let nf = meta.edges.len();
+        let mut l = Layout {
+            width,
+            hist_off: Vec::with_capacity(nf),
+            n_edges: Vec::with_capacity(nf),
+            cat_off: Vec::with_capacity(nf),
+            cat_card: Vec::with_capacity(nf),
+            block_len: 0,
+        };
+        for f in 0..nf {
+            let ne = meta.edges[f].as_ref().map_or(0, Vec::len);
+            l.hist_off.push(l.block_len);
+            l.n_edges.push(ne);
+            l.block_len += ne * width;
+            l.cat_off.push(l.block_len);
+            l.cat_card.push(meta.cat_card[f] as usize);
+            l.block_len += meta.cat_card[f] as usize * width;
+        }
+        l
+    }
+
+    fn hist<'b>(&self, block: &'b [f64], f: usize) -> &'b [f64] {
+        &block[self.hist_off[f]..self.hist_off[f] + self.n_edges[f] * self.width]
+    }
+
+    fn cat<'b>(&self, block: &'b [f64], f: usize) -> &'b [f64] {
+        &block[self.cat_off[f]..self.cat_off[f] + self.cat_card[f] * self.width]
+    }
+}
+
+/// Node label statistics, accumulated in ascending global row order so
+/// regression sums (and therefore means) are bit-identical to the
+/// in-memory builder's ascending-row walks.
+#[derive(Debug, Clone)]
+enum NodeStats {
+    Class(Vec<f64>),
+    Reg { n: f64, sum: f64, min: f64, max: f64 },
+}
+
+impl NodeStats {
+    fn new(task: TaskKind, n_classes: usize) -> NodeStats {
+        match task {
+            TaskKind::Classification => NodeStats::Class(vec![0.0; n_classes]),
+            TaskKind::Regression => NodeStats::Reg {
+                n: 0.0,
+                sum: 0.0,
+                min: f64::INFINITY,
+                max: f64::NEG_INFINITY,
+            },
+        }
+    }
+
+    #[inline]
+    fn add(&mut self, labels: &LabelLane, r: usize) {
+        match (self, labels) {
+            (NodeStats::Class(counts), LabelLane::Class(ids)) => {
+                counts[ids[r] as usize] += 1.0;
+            }
+            (NodeStats::Reg { n, sum, min, max }, LabelLane::Reg(values)) => {
+                let v = values[r];
+                *n += 1.0;
+                *sum += v;
+                *min = min.min(v);
+                *max = max.max(v);
+            }
+            _ => unreachable!("label lane kind mismatch"),
+        }
+    }
+}
+
+/// One frontier node of the current level.
+struct LevelNode {
+    tree_id: u32,
+    depth: u16,
+    n_rows: usize,
+    stats: NodeStats,
+    /// Histogram block; `None` for nodes that can never split (the
+    /// depth/size stop rules already fired when the level was formed).
+    block: Option<Vec<f64>>,
+}
+
+/// Scoring outcome for one frontier node (applied in slot order, like
+/// the in-memory builder's decisions).
+struct Decision {
+    slot: usize,
+    label: NodeLabel,
+    depth: u16,
+    predicate: Option<SplitPredicate>,
+}
+
+/// A split predicate translated onto the bin-id / cat-id lanes.
+#[derive(Clone, Copy)]
+enum RouteOp {
+    /// Numeric `≤ x` ⇔ `bin ≤ bin(x)` (edges are bin maxima).
+    LeBin(u32),
+    /// Numeric `> x` ⇔ `bin > bin(x)`.
+    GtBin(u32),
+    /// Categorical `= id`.
+    EqCat(u32),
+}
+
+#[derive(Clone, Copy)]
+struct Route {
+    feature: usize,
+    op: RouteOp,
+}
+
+/// Row slot sentinel: the row's node is settled (leaf), stop tracking.
+const SETTLED: u32 = u32::MAX;
+
+fn placeholder_node() -> Node {
+    Node {
+        split: None,
+        children: None,
+        label: NodeLabel::Class(0),
+        n_samples: 0,
+        depth: 0,
+    }
+}
+
+/// Train a binned tree out-of-core over a shard directory. Requires
+/// `Backend::Binned`; bin sidecars for the configured `max_bins` are
+/// built on first use and reused afterwards.
+pub fn fit_sharded(sds: &ShardedDataset, config: &TrainConfig) -> Result<(Tree, ShardedStats)> {
+    fit_sharded_sampled(sds, config, 0)
+}
+
+/// [`fit_sharded`] with a per-(shard, column) reservoir size for the
+/// quantile edge pass. `sample_rows == 0` computes exact edges (and
+/// node-for-node identity with in-memory binned training on lossless
+/// lanes); `> 0` bounds edge-pass memory at the cost of approximate
+/// bin boundaries.
+pub fn fit_sharded_sampled(
+    sds: &ShardedDataset,
+    config: &TrainConfig,
+    sample_rows: usize,
+) -> Result<(Tree, ShardedStats)> {
+    let n_rows = sds.n_rows();
+    let n_features = sds.n_features();
+    if n_rows == 0 {
+        return Err(UdtError::data("cannot fit on an empty row set"));
+    }
+    if n_features == 0 {
+        return Err(UdtError::data("dataset has no features"));
+    }
+    if config.max_depth < 1 {
+        return Err(UdtError::invalid_config("max_depth must be >= 1"));
+    }
+    let Backend::Binned { max_bins } = &config.backend else {
+        return Err(UdtError::invalid_config(
+            "sharded training requires the binned backend (set backend = binned)",
+        ));
+    };
+    let max_bins = *max_bins;
+    validate_max_bins(max_bins)?;
+    let task = sds.task();
+    if task == TaskKind::Regression && config.reg_strategy == RegStrategy::LabelSplit {
+        return Err(UdtError::invalid_config(
+            "the binned backend requires RegStrategy::DirectSse for regression \
+             (the label-split strategy re-labels every node, which defeats \
+             parent-minus-sibling histogram subtraction)",
+        ));
+    }
+
+    let mut stats = ShardedStats {
+        assignment_bytes: n_rows * 4,
+        ..ShardedStats::default()
+    };
+    let bins = sds.ensure_bins(max_bins, sample_rows, config.n_threads)?;
+    if bins.built {
+        stats.shard_passes += 2;
+    }
+    let meta = bins.meta();
+    let n_classes = sds.n_classes().max(1);
+    let width = match task {
+        TaskKind::Classification => n_classes,
+        TaskKind::Regression => 2,
+    };
+    let layout = Layout::new(meta, width);
+
+    let mut tree = Tree {
+        nodes: vec![placeholder_node()],
+        task,
+        n_features,
+        depth: 0,
+    };
+
+    // Root pass: label stats + root histogram block in one sweep.
+    let mut root_stats = NodeStats::new(task, n_classes);
+    let mut root_block = vec![0.0f64; layout.block_len];
+    for i in 0..sds.n_shards() {
+        let w = read_window(&bins, i, &mut stats)?;
+        for r in 0..w.n_rows {
+            root_stats.add(&w.labels, r);
+            accumulate_row(&w, r, &layout, &mut root_block, &mut stats);
+        }
+    }
+    stats.shard_passes += 1;
+
+    let mut assign: Vec<u32> = vec![0; n_rows];
+    let mut level: Vec<LevelNode> = vec![LevelNode {
+        tree_id: 0,
+        depth: 1,
+        n_rows,
+        stats: root_stats,
+        block: Some(root_block),
+    }];
+
+    loop {
+        stats.n_levels += 1;
+        track_hist_peak(&mut stats, &level, &layout, 0);
+
+        // Score every frontier node (order-preserving parallel map, so
+        // decisions are invariant to the thread count).
+        let decisions: Vec<Decision> = parallel_map_scratch(
+            (0..level.len()).collect(),
+            config.n_threads,
+            Scratch::new,
+            |slot, scratch| score_node(&level[slot], slot, config, meta, &layout, scratch),
+        );
+
+        // Apply decisions in slot order — same arena order as the
+        // in-memory builder (positive child first, then negative).
+        let mut splits: Vec<(usize, SplitPredicate)> = Vec::new();
+        for d in &decisions {
+            let node = &level[d.slot];
+            let id = node.tree_id as usize;
+            tree.nodes[id].label = d.label;
+            tree.nodes[id].n_samples = node.n_rows as u32;
+            tree.nodes[id].depth = d.depth;
+            tree.depth = tree.depth.max(d.depth);
+            if let Some(pred) = d.predicate {
+                let pos_id = tree.nodes.len() as u32;
+                tree.nodes[id].split = Some(pred);
+                tree.nodes[id].children = Some((pos_id, pos_id + 1));
+                tree.nodes.push(placeholder_node());
+                tree.nodes.push(placeholder_node());
+                splits.push((d.slot, pred));
+            }
+        }
+        if splits.is_empty() {
+            break;
+        }
+
+        // Translate predicates onto the bin/cat lanes.
+        let mut split_of_slot: Vec<Option<u32>> = vec![None; level.len()];
+        let routes: Vec<Route> = splits
+            .iter()
+            .enumerate()
+            .map(|(s, &(slot, pred))| {
+                split_of_slot[slot] = Some(s as u32);
+                let f = pred.feature;
+                let bin_of = |t: f64| {
+                    let edges = meta.edges[f]
+                        .as_ref()
+                        .expect("numeric split on a column with bin edges");
+                    edges.partition_point(|e| *e < t) as u32
+                };
+                let op = match pred.op {
+                    SplitOp::Le(t) => RouteOp::LeBin(bin_of(t)),
+                    SplitOp::Gt(t) => RouteOp::GtBin(bin_of(t)),
+                    SplitOp::Eq(c) => RouteOp::EqCat(c.0),
+                };
+                Route { feature: f, op }
+            })
+            .collect();
+
+        // Pass 1 — route rows to child slots, accumulate child label
+        // stats (ascending row order) and child row counts.
+        let n_children = 2 * splits.len();
+        let mut child_counts = vec![0usize; n_children];
+        let mut child_stats: Vec<NodeStats> = (0..n_children)
+            .map(|_| NodeStats::new(task, n_classes))
+            .collect();
+        for i in 0..sds.n_shards() {
+            let w = read_window(&bins, i, &mut stats)?;
+            let offset = sds.manifest().shards[i].row_offset;
+            for r in 0..w.n_rows {
+                let slot = assign[offset + r];
+                if slot == SETTLED {
+                    continue;
+                }
+                let Some(s) = split_of_slot[slot as usize] else {
+                    assign[offset + r] = SETTLED;
+                    continue;
+                };
+                let route = routes[s as usize];
+                let pos = match route.op {
+                    RouteOp::LeBin(bt) => w.bins[route.feature]
+                        .as_ref()
+                        .and_then(|lane| lane.get(r))
+                        .is_some_and(|b| b <= bt),
+                    RouteOp::GtBin(bt) => w.bins[route.feature]
+                        .as_ref()
+                        .and_then(|lane| lane.get(r))
+                        .is_some_and(|b| b > bt),
+                    RouteOp::EqCat(id) => w.cats[route.feature]
+                        .as_ref()
+                        .is_some_and(|ids| ids[r] == id),
+                };
+                let child = 2 * s + if pos { 0 } else { 1 };
+                assign[offset + r] = child;
+                child_counts[child as usize] += 1;
+                child_stats[child as usize].add(&w.labels, r);
+            }
+        }
+        stats.shard_passes += 1;
+
+        // Which children need histogram blocks next level? Only those
+        // the depth/size stop rules cannot settle (purity is discovered
+        // at scoring time; a pure child's block goes unused, same as
+        // the in-memory builder's tracked-but-pure nodes).
+        let min_split = config.min_samples_split.max(2);
+        let child_needs: Vec<bool> = (0..n_children)
+            .map(|cslot| {
+                let depth = level[splits[cslot / 2].0].depth as usize + 1;
+                depth < config.max_depth && child_counts[cslot] >= min_split
+            })
+            .collect();
+
+        // Pass 2 — accumulate only the smaller child of each split
+        // (when either side needs a block); the larger side is derived
+        // by subtraction afterwards.
+        let mut acc_of_slot: Vec<Option<u32>> = vec![None; n_children];
+        let mut acc_blocks: Vec<Vec<f64>> = Vec::new();
+        let mut small_of_split: Vec<u32> = Vec::with_capacity(splits.len());
+        for s in 0..splits.len() {
+            let (pos, neg) = (2 * s, 2 * s + 1);
+            let small = if child_counts[pos] <= child_counts[neg] {
+                pos
+            } else {
+                neg
+            };
+            small_of_split.push(small as u32);
+            if child_needs[pos] || child_needs[neg] {
+                acc_of_slot[small] = Some(acc_blocks.len() as u32);
+                acc_blocks.push(vec![0.0f64; layout.block_len]);
+            }
+        }
+        track_hist_peak(&mut stats, &level, &layout, acc_blocks.len());
+        if !acc_blocks.is_empty() {
+            for i in 0..sds.n_shards() {
+                let w = read_window(&bins, i, &mut stats)?;
+                let offset = sds.manifest().shards[i].row_offset;
+                for r in 0..w.n_rows {
+                    let slot = assign[offset + r];
+                    if slot == SETTLED {
+                        continue;
+                    }
+                    if let Some(a) = acc_of_slot[slot as usize] {
+                        accumulate_row(&w, r, &layout, &mut acc_blocks[a as usize], &mut stats);
+                    }
+                }
+            }
+        }
+        stats.shard_passes += 1;
+
+        // Assemble the next level: smaller child takes its accumulated
+        // block, larger child takes parent − smaller.
+        let mut next: Vec<LevelNode> = Vec::with_capacity(n_children);
+        for (s, &(slot, _)) in splits.iter().enumerate() {
+            let parent_block = level[slot].block.take();
+            let parent_depth = level[slot].depth;
+            let (pos_id, neg_id) = tree.nodes[level[slot].tree_id as usize]
+                .children
+                .expect("split node has children");
+            let small = small_of_split[s] as usize;
+            let large = small ^ 1;
+            let small_block = acc_of_slot[small].map(|a| std::mem::take(&mut acc_blocks[a as usize]));
+            let mut blocks: [Option<Vec<f64>>; 2] = [None, None];
+            if child_needs[large] {
+                let mut pb = parent_block.expect("scored node keeps its block until split");
+                let sm = small_block
+                    .as_ref()
+                    .expect("smaller child accumulated when sibling needs a block");
+                for (d, sv) in pb.iter_mut().zip(sm) {
+                    *d -= sv;
+                }
+                blocks[large & 1] = Some(pb);
+            }
+            if child_needs[small] {
+                blocks[small & 1] = small_block;
+            }
+            let [pos_block, neg_block] = blocks;
+            for (cslot, tree_id, block) in [
+                (2 * s, pos_id, pos_block),
+                (2 * s + 1, neg_id, neg_block),
+            ] {
+                next.push(LevelNode {
+                    tree_id,
+                    depth: parent_depth + 1,
+                    n_rows: child_counts[cslot],
+                    stats: std::mem::replace(
+                        &mut child_stats[cslot],
+                        NodeStats::Class(Vec::new()),
+                    ),
+                    block,
+                });
+            }
+        }
+        level = next;
+    }
+
+    Ok((tree, stats))
+}
+
+/// Read one shard's training window, updating the resident-window
+/// witness.
+fn read_window(
+    bins: &ShardBins,
+    i: usize,
+    stats: &mut ShardedStats,
+) -> Result<crate::data::shard::format::BinWindow> {
+    let w = bins.read_window(i)?;
+    stats.peak_shard_window_bytes = stats.peak_shard_window_bytes.max(w.approx_bytes());
+    Ok(w)
+}
+
+/// Add one row's lanes into a histogram block.
+#[inline]
+fn accumulate_row(
+    w: &crate::data::shard::format::BinWindow,
+    r: usize,
+    layout: &Layout,
+    block: &mut [f64],
+    stats: &mut ShardedStats,
+) {
+    let width = layout.width;
+    let (lab, target) = match &w.labels {
+        LabelLane::Class(ids) => (ids[r] as usize, 0.0),
+        LabelLane::Reg(values) => (0, values[r]),
+    };
+    let class = matches!(&w.labels, LabelLane::Class(_));
+    for f in 0..layout.hist_off.len() {
+        if let Some(lane) = &w.bins[f] {
+            if let Some(b) = lane.get(r) {
+                let at = layout.hist_off[f] + b as usize * width;
+                if class {
+                    block[at + lab] += 1.0;
+                } else {
+                    block[at] += 1.0;
+                    block[at + 1] += target;
+                }
+                stats.hist_rows_accumulated += 1;
+            }
+        }
+        if let Some(ids) = &w.cats[f] {
+            let id = ids[r];
+            if id != NO_CAT {
+                let at = layout.cat_off[f] + id as usize * width;
+                if class {
+                    block[at + lab] += 1.0;
+                } else {
+                    block[at] += 1.0;
+                    block[at + 1] += target;
+                }
+                stats.hist_rows_accumulated += 1;
+            }
+        }
+    }
+}
+
+/// Update the histogram-block memory witness for the current frontier
+/// plus `extra` accumulation scratch blocks.
+fn track_hist_peak(stats: &mut ShardedStats, level: &[LevelNode], layout: &Layout, extra: usize) {
+    let live = level.iter().filter(|n| n.block.is_some()).count() + extra;
+    stats.peak_hist_bytes = stats.peak_hist_bytes.max(live * layout.block_len * 8);
+}
+
+/// Label, purity, stop rules, per-feature scoring, baseline and
+/// minimum-gain test for one frontier node — the statement-for-
+/// statement mirror of the in-memory builder's `process_node`, driven
+/// by accumulated statistics instead of row slices.
+fn score_node(
+    node: &LevelNode,
+    slot: usize,
+    config: &TrainConfig,
+    meta: &BinsMeta,
+    layout: &Layout,
+    scratch: &mut Scratch,
+) -> Decision {
+    let (label, pure) = match &node.stats {
+        NodeStats::Class(counts) => {
+            let (best, &max) = counts
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
+                .unwrap();
+            (NodeLabel::Class(best as u16), max as usize == node.n_rows)
+        }
+        NodeStats::Reg { n, sum, min, max } => {
+            let mean = sum / n;
+            // Equivalent to the all-rows `|y − mean| < 1e-12` scan:
+            // the deviation is maximized at the extremes.
+            let pure = (min - mean).abs() < 1e-12 && (max - mean).abs() < 1e-12;
+            (NodeLabel::Value(mean), pure)
+        }
+    };
+    let mut decision = Decision {
+        slot,
+        label,
+        depth: node.depth,
+        predicate: None,
+    };
+    if pure
+        || node.depth as usize >= config.max_depth
+        || node.n_rows < config.min_samples_split.max(2)
+    {
+        return decision;
+    }
+    let block = node
+        .block
+        .as_ref()
+        .expect("scoreable node carries a histogram block");
+
+    // Winner fold across features: strictly greater, feature order —
+    // identical tie-breaking to `best_across_features`.
+    let mut best: Option<(usize, ScoredSplit)> = None;
+    for f in 0..layout.hist_off.len() {
+        let hist = layout.hist(block, f);
+        let edges = meta.edges[f].as_deref().unwrap_or(&[]);
+        let cat = layout.cat(block, f);
+        let scored = match &node.stats {
+            NodeStats::Class(counts) => {
+                best_split_class_stats(counts, config.criterion, hist, edges, cat, scratch)
+            }
+            NodeStats::Reg { n, sum, .. } => best_split_reg_stats((*n, *sum), hist, edges, cat),
+        };
+        if let Some(s) = scored {
+            let better = match &best {
+                None => true,
+                Some((_, b)) => s.score > b.score,
+            };
+            if better {
+                best = Some((f, s));
+            }
+        }
+    }
+    let Some((feature, best)) = best else {
+        return decision;
+    };
+    let baseline = match &node.stats {
+        NodeStats::Class(counts) => {
+            let zeros = vec![0.0f64; counts.len()];
+            config.criterion.score(counts, &zeros)
+        }
+        NodeStats::Reg { n, sum, .. } => sum * sum / n,
+    };
+    if !(best.score - baseline > config.min_gain) {
+        return decision;
+    }
+    decision.predicate = Some(SplitPredicate {
+        feature,
+        op: best.op,
+    });
+    decision
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::csv::{load_csv_str, CsvOptions};
+    use crate::data::shard::writer::write_dataset_shards;
+    use crate::selection::heuristic::ClassCriterion;
+
+    fn temp_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "udt-sharded-fit-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    pub(crate) fn assert_same_tree(a: &Tree, b: &Tree) {
+        assert_eq!(a.n_nodes(), b.n_nodes(), "node count");
+        assert_eq!(a.depth, b.depth, "depth");
+        for (i, (x, y)) in a.nodes.iter().zip(&b.nodes).enumerate() {
+            assert_eq!(x.split, y.split, "node {i} split");
+            assert_eq!(x.children, y.children, "node {i} children");
+            assert_eq!(x.label, y.label, "node {i} label");
+            assert_eq!(x.n_samples, y.n_samples, "node {i} n_samples");
+            assert_eq!(x.depth, y.depth, "node {i} depth");
+        }
+    }
+
+    fn mixed_csv() -> String {
+        let mut s = String::from("num,mix,cat,label\n");
+        for i in 0..120usize {
+            let num = format!("{}", (i * 17 % 23) as f64 * 0.5);
+            let mix = match i % 5 {
+                0 => "?".to_string(),
+                1 | 2 => format!("m{}", i % 3),
+                _ => format!("{}", i % 7),
+            };
+            let cat = format!("c{}", i * 11 % 4);
+            let y = ["a", "b", "c"][(i * 7 + i / 13) % 3];
+            s.push_str(&format!("{num},{mix},{cat},{y}\n"));
+        }
+        s
+    }
+
+    #[test]
+    fn sharded_matches_in_memory_binned_classification() {
+        let csv = mixed_csv();
+        let ds = load_csv_str("t", &csv, &CsvOptions::default()).unwrap();
+        let dir = temp_dir("cls");
+        write_dataset_shards(&ds, &dir, 26).unwrap();
+        let sds = ShardedDataset::open(&dir).unwrap();
+
+        for criterion in [ClassCriterion::InfoGain, ClassCriterion::Gini] {
+            for threads in [1, 4] {
+                let config = TrainConfig {
+                    backend: Backend::Binned { max_bins: 64 },
+                    criterion,
+                    n_threads: threads,
+                    ..TrainConfig::default()
+                };
+                let mem = Tree::fit(&ds, &config).unwrap();
+                let (shd, st) = fit_sharded(&sds, &config).unwrap();
+                assert_same_tree(&shd, &mem);
+                assert!(st.peak_shard_window_bytes > 0);
+                assert!(st.shard_passes >= 3, "{}", st.shard_passes);
+                assert_eq!(st.assignment_bytes, 120 * 4);
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sharded_matches_in_memory_binned_regression() {
+        // Dyadic targets: every sum is exact, so histogram subtraction
+        // and accumulation order cannot perturb the arithmetic.
+        let mut csv = String::from("x,g,y\n");
+        for i in 0..80usize {
+            let x = format!("{}", (i * 13 % 17) as f64);
+            let g = format!("g{}", i % 3);
+            let y = ((i * 29 % 31) as f64 * 4.0).round() / 4.0;
+            csv.push_str(&format!("{x},{g},{y}\n"));
+        }
+        let opts = CsvOptions {
+            task: TaskKind::Regression,
+            ..CsvOptions::default()
+        };
+        let ds = load_csv_str("t", &csv, &opts).unwrap();
+        let dir = temp_dir("reg");
+        write_dataset_shards(&ds, &dir, 19).unwrap();
+        let sds = ShardedDataset::open(&dir).unwrap();
+        let config = TrainConfig {
+            backend: Backend::Binned { max_bins: 64 },
+            reg_strategy: RegStrategy::DirectSse,
+            ..TrainConfig::default()
+        };
+        let mem = Tree::fit(&ds, &config).unwrap();
+        let (shd, _) = fit_sharded(&sds, &config).unwrap();
+        assert_same_tree(&shd, &mem);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn config_validation_mirrors_in_memory_builder() {
+        let csv = mixed_csv();
+        let ds = load_csv_str("t", &csv, &CsvOptions::default()).unwrap();
+        let dir = temp_dir("val");
+        write_dataset_shards(&ds, &dir, 60).unwrap();
+        let sds = ShardedDataset::open(&dir).unwrap();
+
+        // Non-binned backend.
+        let err = fit_sharded(&sds, &TrainConfig::default()).unwrap_err();
+        assert!(matches!(err, UdtError::InvalidConfig(_)), "{err:?}");
+        // Bad max_bins.
+        let config = TrainConfig {
+            backend: Backend::Binned { max_bins: 1 },
+            ..TrainConfig::default()
+        };
+        assert!(matches!(
+            fit_sharded(&sds, &config),
+            Err(UdtError::InvalidConfig(_))
+        ));
+        // max_depth 0.
+        let config = TrainConfig {
+            backend: Backend::Binned { max_bins: 16 },
+            max_depth: 0,
+            ..TrainConfig::default()
+        };
+        assert!(matches!(
+            fit_sharded(&sds, &config),
+            Err(UdtError::InvalidConfig(_))
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn depth_limit_and_min_samples_respected() {
+        let csv = mixed_csv();
+        let ds = load_csv_str("t", &csv, &CsvOptions::default()).unwrap();
+        let dir = temp_dir("depth");
+        write_dataset_shards(&ds, &dir, 26).unwrap();
+        let sds = ShardedDataset::open(&dir).unwrap();
+        for (max_depth, min_split) in [(1, 2), (2, 2), (3, 25), (4, 2)] {
+            let config = TrainConfig {
+                backend: Backend::Binned { max_bins: 64 },
+                max_depth,
+                min_samples_split: min_split,
+                ..TrainConfig::default()
+            };
+            let mem = Tree::fit(&ds, &config).unwrap();
+            let (shd, _) = fit_sharded(&sds, &config).unwrap();
+            assert_same_tree(&shd, &mem);
+            assert!(shd.depth as usize <= max_depth);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,210 @@
+//! Property tests for out-of-core sharded training: stream a CSV into
+//! an on-disk shard directory, train with [`udt::tree::sharded`] through
+//! bounded-RAM shard windows, and the tree must be **node-for-node
+//! identical** to in-memory `--backend binned` training on the same
+//! `max_bins` — at 1 and 4 threads, across hybrid and missing-heavy
+//! columns — with the `peak_shard_window_bytes` witness staying below
+//! the full in-memory dataset footprint.
+
+use udt::data::csv::{load_csv_str, to_csv_string, CsvOptions};
+use udt::data::dataset::{Labels, TaskKind};
+use udt::data::shard::{shard_csv_str, write_dataset_shards};
+use udt::data::synth::{generate_any, SynthSpec};
+use udt::data::ShardedDataset;
+use udt::tree::sharded::fit_sharded;
+use udt::tree::{Backend, RegStrategy, TrainConfig, Tree};
+use udt::util::prop::{check, ensure, Config};
+use udt::util::rng::Rng;
+
+/// Random hybrid classification spec whose numeric grids stay at or
+/// below 32 distinct levels, so a bin budget of 64 is always lossless
+/// (the regime where sharded ≡ in-memory binned is exact).
+fn random_exactable_spec(rng: &mut Rng, size: usize) -> SynthSpec {
+    let n_rows = rng.range(60, size.max(80));
+    let n_features = rng.range(2, 7);
+    let mut spec = SynthSpec::classification("pshard", n_rows, n_features, rng.range(2, 5));
+    spec.cat_frac = rng.f64() * 0.5;
+    spec.hybrid_frac = rng.f64() * 0.3;
+    spec.missing_frac = rng.f64() * 0.15;
+    spec.numeric_cardinality = rng.range(2, 33);
+    spec.gt_depth = rng.range(2, 7);
+    spec.noise = rng.f64() * 0.2;
+    spec
+}
+
+/// Node-for-node structural equality (splits, children, samples, labels).
+fn same_tree(a: &Tree, b: &Tree) -> Result<(), String> {
+    ensure(
+        a.n_nodes() == b.n_nodes(),
+        format!("node counts differ: {} vs {}", a.n_nodes(), b.n_nodes()),
+    )?;
+    ensure(
+        a.depth == b.depth,
+        format!("depths differ: {} vs {}", a.depth, b.depth),
+    )?;
+    for (i, (x, y)) in a.nodes.iter().zip(&b.nodes).enumerate() {
+        ensure(
+            x.split == y.split,
+            format!("node {i} split: {:?} vs {:?}", x.split, y.split),
+        )?;
+        ensure(
+            x.children == y.children,
+            format!("node {i} children: {:?} vs {:?}", x.children, y.children),
+        )?;
+        ensure(
+            x.n_samples == y.n_samples,
+            format!("node {i} samples: {} vs {}", x.n_samples, y.n_samples),
+        )?;
+        ensure(
+            x.label == y.label,
+            format!("node {i} label: {:?} vs {:?}", x.label, y.label),
+        )?;
+    }
+    Ok(())
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("udt-prop-shard-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn sharded_training_matches_in_memory_binned() {
+    let dir = temp_dir("cls");
+    check(
+        "csv → shards → sharded fit ≡ in-memory binned (1 and 4 threads)",
+        Config::default().cases(25).max_size(300).seed(0x5AAD_0001),
+        |rng, size| {
+            let spec = random_exactable_spec(rng, size);
+            let csv = to_csv_string(&generate_any(&spec, rng.next_u64()));
+            let opts = CsvOptions::default();
+            let ds = load_csv_str("pshard", &csv, &opts).map_err(|e| e.to_string())?;
+
+            // 3–5 shards, so windows genuinely cycle and at least one
+            // subtraction level crosses shard boundaries.
+            let rows_per_shard = (ds.n_rows() / rng.range(3, 6)).max(1);
+            let _ = std::fs::remove_dir_all(&dir);
+            shard_csv_str("pshard", &csv, &dir, &opts, rows_per_shard)
+                .map_err(|e| e.to_string())?;
+            let sds = ShardedDataset::open(&dir).map_err(|e| e.to_string())?;
+            ensure(
+                sds.n_shards() >= 2,
+                format!("expected ≥ 2 shards, got {}", sds.n_shards()),
+            )?;
+
+            for n_threads in [1, 4] {
+                let cfg = TrainConfig {
+                    backend: Backend::Binned { max_bins: 64 },
+                    n_threads,
+                    ..Default::default()
+                };
+                let mem = Tree::fit(&ds, &cfg).map_err(|e| e.to_string())?;
+                let (shd, stats) = fit_sharded(&sds, &cfg).map_err(|e| e.to_string())?;
+                same_tree(&mem, &shd)?;
+                // Bounded-RAM witnesses: some window was resident, and
+                // it was strictly smaller than the full in-memory
+                // dataset the equivalent binned fit holds.
+                ensure(
+                    stats.peak_shard_window_bytes > 0,
+                    "peak_shard_window_bytes is 0",
+                )?;
+                ensure(
+                    stats.peak_shard_window_bytes < ds.approx_bytes(),
+                    format!(
+                        "window {} B did not undercut the dataset's {} B",
+                        stats.peak_shard_window_bytes,
+                        ds.approx_bytes()
+                    ),
+                )?;
+                ensure(
+                    stats.shard_passes >= 3,
+                    format!("expected ≥ 3 shard passes, got {}", stats.shard_passes),
+                )?;
+            }
+            Ok(())
+        },
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sharded_regression_matches_in_memory_binned() {
+    let dir = temp_dir("reg");
+    check(
+        "sharded regression ≡ in-memory binned DirectSse (1 and 4 threads)",
+        Config::default().cases(15).max_size(240).seed(0x5AAD_0002),
+        |rng, size| {
+            let n_rows = rng.range(60, size.max(80));
+            let mut spec = SynthSpec::regression("pshard-r", n_rows, rng.range(2, 6));
+            spec.cat_frac = rng.f64() * 0.4;
+            spec.missing_frac = rng.f64() * 0.1;
+            spec.numeric_cardinality = rng.range(2, 33);
+            let mut ds = generate_any(&spec, rng.next_u64());
+            // Quarter-round the targets so every histogram sum is a
+            // dyadic rational: accumulation order (sorted in-memory vs
+            // ascending-row sharded) cannot perturb a single bit.
+            if let Labels::Reg { values } = &mut ds.labels {
+                for v in values.iter_mut() {
+                    *v = (*v * 4.0).round() / 4.0;
+                }
+            }
+            let rows_per_shard = (ds.n_rows() / rng.range(3, 6)).max(1);
+            let _ = std::fs::remove_dir_all(&dir);
+            write_dataset_shards(&ds, &dir, rows_per_shard).map_err(|e| e.to_string())?;
+            let sds = ShardedDataset::open(&dir).map_err(|e| e.to_string())?;
+            ensure(
+                sds.task() == TaskKind::Regression,
+                "manifest lost the regression task",
+            )?;
+
+            for n_threads in [1, 4] {
+                let cfg = TrainConfig {
+                    backend: Backend::Binned { max_bins: 64 },
+                    reg_strategy: RegStrategy::DirectSse,
+                    n_threads,
+                    ..Default::default()
+                };
+                let mem = Tree::fit(&ds, &cfg).map_err(|e| e.to_string())?;
+                let (shd, stats) = fit_sharded(&sds, &cfg).map_err(|e| e.to_string())?;
+                same_tree(&mem, &shd)?;
+                ensure(
+                    stats.peak_shard_window_bytes > 0
+                        && stats.peak_shard_window_bytes < ds.approx_bytes(),
+                    format!(
+                        "window witness {} B out of range (dataset {} B)",
+                        stats.peak_shard_window_bytes,
+                        ds.approx_bytes()
+                    ),
+                )?;
+            }
+            Ok(())
+        },
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn shard_directory_round_trips_csv_schema() {
+    // One deterministic mixed dataset end-to-end: the shard manifest
+    // must reproduce the parsed CSV's schema exactly.
+    let mut spec = SynthSpec::classification("pshard-s", 200, 5, 3);
+    spec.cat_frac = 0.4;
+    spec.hybrid_frac = 0.3;
+    spec.missing_frac = 0.1;
+    spec.numeric_cardinality = 16;
+    let csv = to_csv_string(&generate_any(&spec, 7));
+    let opts = CsvOptions::default();
+    let ds = load_csv_str("pshard-s", &csv, &opts).unwrap();
+    let dir = temp_dir("schema");
+    shard_csv_str("pshard-s", &csv, &dir, &opts, 64).unwrap();
+    let sds = ShardedDataset::open(&dir).unwrap();
+    assert_eq!(sds.n_rows(), ds.n_rows());
+    assert_eq!(sds.n_features(), ds.n_features());
+    assert_eq!(
+        sds.manifest().feature_names,
+        ds.columns.iter().map(|c| c.name.clone()).collect::<Vec<_>>()
+    );
+    assert_eq!(sds.manifest().class_names, *ds.class_names);
+    let _ = std::fs::remove_dir_all(&dir);
+}
