@@ -1,0 +1,179 @@
+//! Spawn-per-call vs the persistent worker pool.
+//!
+//! Before this runtime existed, every `parallel_map*` call paid
+//! `std::thread::scope` spawn + join for a fresh set of OS threads —
+//! once per tree level, per boost round × level, per predict batch, per
+//! CSV parse. This bench measures exactly that tax: a faithful private
+//! copy of the old scoped implementation against the pool, at 16 / 1k /
+//! 100k trivial tasks per batch (the 16-task tier is the shallow-
+//! frontier shape where spawn overhead dominated), plus an end-to-end
+//! table6-style training run on the pool with its batch count — from
+//! which the per-train spawn overhead the pool removed is estimated as
+//! `batches × (scoped µs/batch − pool µs/batch)` at the small tier.
+//!
+//! Writes a machine-readable `BENCH_parallel.json` at the repository
+//! root so the runtime's perf trajectory is tracked PR-over-PR
+//! alongside the other BENCH_*.json artifacts.
+//!
+//!   cargo bench --bench parallel
+//!
+//! UDT_BENCH_SCALE scales the training rows (1.0 = 200k);
+//! UDT_BENCH_RUNS the repetitions.
+
+use std::cell::UnsafeCell;
+use std::hint::black_box;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use udt::bench_support::{bench, write_bench_json, BenchConfig, Table};
+use udt::coordinator::parallel::parallel_map;
+use udt::data::synth::{generate_any, SynthSpec};
+use udt::tree::TrainConfig;
+use udt::util::json::Json;
+
+/// The pre-pool implementation, kept verbatim as the comparator:
+/// `thread::scope` spawns a fresh worker set per call, items pulled
+/// one-by-one from an atomic cursor.
+fn scoped_map<T: Send, R: Send>(
+    items: Vec<T>,
+    n_threads: usize,
+    f: impl Fn(T) -> R + Sync,
+) -> Vec<R> {
+    struct Slot<V>(UnsafeCell<Option<V>>);
+    unsafe impl<V: Send> Sync for Slot<V> {}
+
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = n_threads.max(1).min(n);
+    if workers == 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let slots: Vec<Slot<T>> = items.into_iter().map(|t| Slot(UnsafeCell::new(Some(t)))).collect();
+    let results: Vec<Slot<R>> = (0..n).map(|_| Slot(UnsafeCell::new(None))).collect();
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // SAFETY: `fetch_add` handed index `i` to this worker
+                // alone; the scope join publishes the writes.
+                let item = unsafe { (*slots[i].0.get()).take() }.expect("item present");
+                let r = f(item);
+                unsafe { *results[i].0.get() = Some(r) };
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|s| s.0.into_inner().expect("worker completed"))
+        .collect()
+}
+
+/// The trivial task: cheap enough that per-batch runtime overhead (not
+/// the work) is what gets measured.
+fn task(x: usize) -> usize {
+    x.wrapping_mul(2654435761) ^ (x >> 7)
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let threads = udt::runtime::cores();
+    eprintln!(
+        "parallel bench: spawn-per-call vs persistent pool on {threads} cores \
+         (UDT_BENCH_SCALE scales the training tier)"
+    );
+
+    let mut table = Table::new(&["case", "tasks", "scoped(us)", "pool(us)", "speedup"]);
+    let mut json_cases: Vec<Json> = Vec::new();
+    let mut small_tier_saving_us = 0.0;
+    for &tasks in &[16usize, 1_000, 100_000] {
+        let scoped = bench(&format!("scoped_{tasks}"), &cfg, || {
+            let items: Vec<usize> = (0..tasks).collect();
+            black_box(scoped_map(items, threads, task));
+        });
+        let pooled = bench(&format!("pool_{tasks}"), &cfg, || {
+            let items: Vec<usize> = (0..tasks).collect();
+            black_box(parallel_map(items, 0, task));
+        });
+        let scoped_us = scoped.min_ms() * 1e3;
+        let pool_us = pooled.min_ms() * 1e3;
+        if tasks == 16 {
+            small_tier_saving_us = (scoped_us - pool_us).max(0.0);
+        }
+        table.row(vec![
+            format!("batch_{tasks}"),
+            tasks.to_string(),
+            format!("{scoped_us:.1}"),
+            format!("{pool_us:.1}"),
+            format!("{:.2}x", scoped_us / pool_us.max(1e-9)),
+        ]);
+        json_cases.push(Json::obj(vec![
+            ("case", Json::Str(format!("batch_{tasks}"))),
+            ("tasks", Json::Num(tasks as f64)),
+            ("scoped_us_per_batch", Json::Num(scoped_us)),
+            ("pool_us_per_batch", Json::Num(pool_us)),
+        ]));
+        eprintln!("done batch_{tasks}");
+    }
+
+    // End-to-end: a table6-style training run on the pool, with the
+    // batch count the old runtime would have paid a spawn set for.
+    let n_rows = ((200_000.0 * cfg.scale) as usize).max(4_000);
+    let mut spec = SynthSpec::classification("parallel_t6", n_rows, 12, 5);
+    spec.cat_frac = 0.15;
+    spec.noise = 0.05;
+    let ds = generate_any(&spec, 42);
+    let tc = TrainConfig {
+        n_threads: 0,
+        ..Default::default()
+    };
+    // Un-timed warm fit: builds the sort cache so the timed runs
+    // measure training, and warms the pool.
+    let warm = udt::Tree::fit(&ds, &tc).expect("train");
+    assert!(warm.n_nodes() >= 3);
+    let before = udt::runtime::pool_stats();
+    let m = bench("train_table6", &cfg, || {
+        let t = udt::Tree::fit(&ds, &tc).expect("train");
+        assert!(t.n_nodes() >= 3);
+    });
+    let delta = udt::runtime::pool_stats().delta_since(&before);
+    // The closure ran warmup + timed times inside the delta window.
+    let fits = (cfg.warmup + cfg.runs).max(1);
+    let batches_per_train = delta.batches_submitted as f64 / fits as f64;
+    let est_saved_ms = batches_per_train * small_tier_saving_us / 1e3;
+    let train_ms = m.min_ms();
+    eprintln!("done train_table6");
+
+    println!("\n== Spawn-per-call vs persistent pool ({threads} cores) ==");
+    println!("{}", table.render());
+    println!(
+        "train_table6: {n_rows} rows, {train_ms:.1} ms/train, {batches_per_train:.0} pool \
+         batches/train, est. spawn overhead removed {est_saved_ms:.2} ms/train"
+    );
+
+    let artifact = Json::obj(vec![
+        ("bench", Json::Str("parallel".into())),
+        ("cores", Json::Num(threads as f64)),
+        ("measured", Json::Bool(true)),
+        ("cases", Json::Arr(json_cases)),
+        (
+            "train",
+            Json::obj(vec![
+                ("rows", Json::Num(n_rows as f64)),
+                ("train_ms", Json::Num(train_ms)),
+                ("pool_batches_per_train", Json::Num(batches_per_train)),
+                ("pool_tasks", Json::Num(delta.tasks_executed as f64)),
+                ("threads_spawned_during_train", Json::Num(delta.threads_spawned_total as f64)),
+                ("est_spawn_overhead_removed_ms", Json::Num(est_saved_ms)),
+            ]),
+        ),
+    ]);
+    match write_bench_json("parallel", &artifact) {
+        Ok(p) => eprintln!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write bench artifact: {e}"),
+    }
+}

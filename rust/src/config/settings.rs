@@ -11,6 +11,8 @@
 //! * `train.criterion`, `train.backend`, `train.max_bins`,
 //!   `train.threads` — builder defaults (`train.max_bins` is the bin
 //!   budget of the histogram-binned backend, bounds-checked here);
+//! * `runtime.threads` — pool-wide default thread count when
+//!   `train.threads` is absent; 0 = all cores ([`Config::runtime_threads`]);
 //! * `tune.min_split_max_frac`, `tune.min_split_steps` — the
 //!   Training-Only-Once hyper-parameter grid ([`TuneGrid`]);
 //! * `forest.n_trees`, `forest.feature_frac`, `forest.sample_frac`,
@@ -261,6 +263,15 @@ impl Config {
         })
     }
 
+    /// Training thread count: `train.threads`, falling back to the
+    /// pool-wide `runtime.threads` key, then 1 (sequential). The value
+    /// is a *requested* count resolved by [`crate::runtime::threads`]
+    /// at use sites — 0 means "all cores" everywhere.
+    pub fn runtime_threads(&self) -> Result<usize, ConfigError> {
+        let pool_default = self.get_usize("runtime.threads", 1)?;
+        self.get_usize("train.threads", pool_default)
+    }
+
     /// Out-of-core sharding knobs from the `shard.*` keys.
     pub fn shard_config(&self) -> Result<ShardConfig, ConfigError> {
         let defaults = ShardConfig::default();
@@ -415,6 +426,23 @@ mod tests {
         let d = Config::new().serve_config().unwrap();
         assert_eq!(d.backend, ServeBackend::default_for_platform());
         assert_eq!(d.max_connections, 10_240);
+    }
+
+    #[test]
+    fn runtime_threads_fallback_chain() {
+        // Default: sequential.
+        assert_eq!(Config::new().runtime_threads().unwrap(), 1);
+        // runtime.threads is the pool-wide default...
+        let mut cfg = Config::new();
+        cfg.set_kv("runtime.threads=0").unwrap();
+        assert_eq!(cfg.runtime_threads().unwrap(), 0);
+        // ...which train.threads overrides.
+        cfg.set_kv("train.threads=4").unwrap();
+        assert_eq!(cfg.runtime_threads().unwrap(), 4);
+        // Non-numeric values are typed errors.
+        let mut bad = Config::new();
+        bad.set_kv("runtime.threads=many").unwrap();
+        assert!(bad.runtime_threads().is_err());
     }
 
     #[test]

@@ -1,37 +1,20 @@
-//! Scoped worker-pool primitives built on `std::thread` (the offline
-//! image ships no rayon). Work is pulled from an atomic cursor so uneven
-//! item costs balance automatically; each worker owns a scratch value to
-//! keep hot loops allocation-free.
+//! Parallel-map entry points, now thin wrappers over the persistent
+//! worker pool in [`crate::runtime::pool`].
 //!
-//! The queue is lock-free: items and results live in index-addressed
-//! cells, and the cursor's `fetch_add` hands every index to exactly one
-//! worker, so the hot loop takes zero locks per item (the previous
-//! design paid two `Mutex` acquisitions per item — a measurable tax when
-//! the tree frontier fans out to thousands of small nodes).
+//! The signatures and semantics are unchanged from the scoped-thread
+//! era — order-preserving, thread-count-invariant, per-worker scratch —
+//! but no call spawns OS threads anymore: the pool spawns its workers
+//! lazily once per process (capped at [`crate::runtime::cores`]) and
+//! parks them between batches. `n_threads` semantics are now uniform
+//! across all three entry points: `0` = all cores, `1` = inline
+//! sequential, `k` = at most `k` executors (the submitting thread plus
+//! `k - 1` pool workers).
 
-use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::runtime::pool;
 
-/// One item/result cell of the work queue.
-///
-/// Access is externally synchronized: the atomic cursor returns each
-/// index exactly once, so at most one worker ever touches a given cell,
-/// and `thread::scope` join publishes all writes back to the caller.
-struct Slot<V>(UnsafeCell<Option<V>>);
-
-// SAFETY: a `Slot` is only accessed by the single worker that claimed
-// its index from the cursor (see `parallel_map_scratch`); the scope join
-// provides the happens-before edge for the caller's reads.
-unsafe impl<V: Send> Sync for Slot<V> {}
-
-impl<V> Slot<V> {
-    fn new(v: Option<V>) -> Self {
-        Slot(UnsafeCell::new(v))
-    }
-}
-
-/// Map `f` over `items`, preserving order, with `n_threads` workers and a
-/// per-worker scratch created by `make_scratch`.
+/// Map `f` over `items`, preserving order, with up to
+/// [`crate::runtime::threads`]`(n_threads)` executors and a per-executor
+/// scratch created by `make_scratch` (never one per item).
 pub fn parallel_map_scratch<T, R, S>(
     items: Vec<T>,
     n_threads: usize,
@@ -42,47 +25,7 @@ where
     T: Send,
     R: Send,
 {
-    let n = items.len();
-    if n == 0 {
-        return Vec::new();
-    }
-    let workers = n_threads.max(1).min(n);
-    if workers == 1 {
-        let mut scratch = make_scratch();
-        return items.into_iter().map(|it| f(it, &mut scratch)).collect();
-    }
-
-    // Index-addressed cells + one shared cursor: the only synchronization
-    // in the hot loop is the cursor's `fetch_add`.
-    let slots: Vec<Slot<T>> = items.into_iter().map(|t| Slot::new(Some(t))).collect();
-    let results: Vec<Slot<R>> = (0..n).map(|_| Slot::new(None)).collect();
-    let cursor = AtomicUsize::new(0);
-
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| {
-                let mut scratch = make_scratch();
-                loop {
-                    let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    // SAFETY: `fetch_add` handed index `i` to this worker
-                    // alone; nobody else reads or writes slot `i` until
-                    // the scope joins.
-                    let item = unsafe { (*slots[i].0.get()).take() }.expect("item present");
-                    let r = f(item, &mut scratch);
-                    // SAFETY: same exclusive claim on index `i`.
-                    unsafe { *results[i].0.get() = Some(r) };
-                }
-            });
-        }
-    });
-
-    results
-        .into_iter()
-        .map(|s| s.0.into_inner().expect("worker completed"))
-        .collect()
+    pool::map_scratch(items, n_threads, make_scratch, f)
 }
 
 /// Map without scratch.
@@ -95,7 +38,7 @@ where
     T: Send,
     R: Send,
 {
-    parallel_map_scratch(items, n_threads, || (), |t, _| f(t))
+    pool::map_scratch(items, n_threads, || (), |t, _| f(t))
 }
 
 /// Split `0..n` into `(start, end)` blocks of at most `chunk` items —
@@ -116,18 +59,7 @@ pub fn parallel_map_chunked<R: Send>(
     n_threads: usize,
     f: impl Fn(usize, usize) -> R + Sync,
 ) -> Vec<R> {
-    parallel_map(chunk_ranges(n, chunk), effective_threads(n_threads), |(s, e)| f(s, e))
-}
-
-/// Effective worker count: `requested`, or all cores when 0.
-pub fn effective_threads(requested: usize) -> usize {
-    if requested == 0 {
-        std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
-    } else {
-        requested
-    }
+    parallel_map(chunk_ranges(n, chunk), n_threads, |(s, e)| f(s, e))
 }
 
 #[cfg(test)]
@@ -176,9 +108,21 @@ mod tests {
     }
 
     #[test]
-    fn effective_threads_zero_means_all() {
-        assert!(effective_threads(0) >= 1);
-        assert_eq!(effective_threads(3), 3);
+    fn zero_threads_resolves_to_all_cores_in_every_entry_point() {
+        // Regression for the old inconsistency where map/map_scratch
+        // clamped 0 → 1 (sequential) while chunked resolved 0 → cores.
+        // All three now route through runtime::threads, so 0-thread
+        // calls must produce the same (order-preserving) results as 1.
+        let xs: Vec<usize> = (0..512).collect();
+        let seq = parallel_map(xs.clone(), 1, |x| x * 7 + 1);
+        assert_eq!(parallel_map(xs.clone(), 0, |x| x * 7 + 1), seq);
+        assert_eq!(
+            parallel_map_scratch(xs, 0, || (), |x, _| x * 7 + 1),
+            seq
+        );
+        let chunked = parallel_map_chunked(512, 64, 0, |s, e| (e - s) * 7);
+        assert_eq!(chunked.iter().sum::<usize>(), 512 * 7);
+        assert_eq!(crate::runtime::threads(0), crate::runtime::cores());
     }
 
     #[test]

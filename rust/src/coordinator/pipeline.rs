@@ -39,6 +39,17 @@ pub struct PipelineReport {
     /// Out-of-core training only: sequential passes over the shard
     /// directory. 0 for in-memory training.
     pub shard_passes: usize,
+    /// Batches handed to the persistent worker pool during this
+    /// pipeline run (full fit + tune + tuned retrain). 0 when the run
+    /// was sequential (`n_threads == 1` or a 1-core machine).
+    pub pool_batches: u64,
+    /// Items executed on the pool during this run.
+    pub pool_tasks: u64,
+    /// Pool worker threads spawned *during* this run. At most
+    /// [`crate::runtime::cores`]` - 1` on the first parallel batch of
+    /// the process, 0 on every run after — the per-level/per-round
+    /// spawn tax is gone (see [`crate::runtime::pool`]).
+    pub pool_threads_spawned: u64,
     // Tuning.
     pub tune_ms: f64,
     pub n_settings: usize,
@@ -72,6 +83,7 @@ pub fn run_pipeline_model(
     split_seed: u64,
 ) -> Result<(PipelineReport, Model)> {
     let (train, val, test) = ds.split_indices(0.8, 0.1, split_seed);
+    let pool_before = crate::runtime::pool_stats();
 
     // Train the full ("full-fledged") tree.
     let timer = Timer::start();
@@ -104,6 +116,7 @@ pub fn run_pipeline_model(
     let retrained = Tree::fit_rows(ds, &train, &tuned_cfg)?;
     let tuned_train_ms = t_retrain.ms();
 
+    let pool_delta = crate::runtime::pool_stats().delta_since(&pool_before);
     let report = PipelineReport {
         dataset: ds.name.clone(),
         n_examples: ds.n_rows(),
@@ -117,6 +130,9 @@ pub fn run_pipeline_model(
         hist_scratch_bytes: arena_stats.hist_scratch_bytes,
         peak_shard_window_bytes: 0,
         shard_passes: 0,
+        pool_batches: pool_delta.batches_submitted,
+        pool_tasks: pool_delta.tasks_executed,
+        pool_threads_spawned: pool_delta.threads_spawned_total,
         tune_ms,
         n_settings: tune_result.n_settings,
         best_max_depth: tune_result.best_max_depth,
@@ -170,6 +186,9 @@ mod tests {
         assert_eq!(rep.hist_scratch_bytes, 0);
         // Full fit + tuned retrain: the column sort was still paid once.
         assert_eq!(ds.sort_index_builds(), 1);
+        // Pool counters are deltas over this run; the spawn count can
+        // never exceed the process-wide cap of cores() - 1.
+        assert!(rep.pool_threads_spawned <= crate::runtime::cores() as u64);
     }
 
     #[test]

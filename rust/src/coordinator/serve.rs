@@ -504,6 +504,7 @@ impl Server {
                     .unwrap_or(Json::Null),
             ),
             ("server", self.server_json()),
+            ("pool", pool_json()),
             ("models", Json::Obj(models)),
         ])
     }
@@ -853,6 +854,23 @@ fn reject_over_budget(stream: &TcpStream, max_connections: usize, net: &NetStats
     Ok(())
 }
 
+/// The persistent worker pool's process-wide counters (see
+/// [`crate::runtime::pool`]) — the `stats` witness that concurrent
+/// predict batches reuse one set of threads instead of spawning.
+fn pool_json() -> Json {
+    let s = crate::runtime::pool_stats();
+    Json::obj(vec![
+        ("cores", Json::Num(crate::runtime::cores() as f64)),
+        (
+            "threads_spawned_total",
+            Json::Num(s.threads_spawned_total as f64),
+        ),
+        ("batches_submitted", Json::Num(s.batches_submitted as f64)),
+        ("tasks_executed", Json::Num(s.tasks_executed as f64)),
+        ("park_wakeups", Json::Num(s.park_wakeups as f64)),
+    ])
+}
+
 /// Render an error as a protocol `{"error": ...}` response line.
 fn error_json(e: &UdtError) -> String {
     Json::obj(vec![("error", Json::Str(e.to_string()))]).to_string()
@@ -953,6 +971,14 @@ mod tests {
         let srv = stats.get("server").unwrap();
         assert_eq!(srv.get("active_connections").unwrap().as_f64().unwrap(), 0.0);
         assert!(srv.get("max_connections").unwrap().as_f64().unwrap() >= 1.0);
+        // The worker-pool section reports the process-wide counters;
+        // the spawn total can never exceed the cores() - 1 cap.
+        let pool = stats.get("pool").unwrap();
+        let cores = pool.get("cores").unwrap().as_f64().unwrap();
+        assert!(cores >= 1.0);
+        let spawned = pool.get("threads_spawned_total").unwrap().as_f64().unwrap();
+        assert!(spawned <= cores, "spawned {spawned} > cores {cores}");
+        assert!(pool.get("batches_submitted").unwrap().as_f64().unwrap() >= 0.0);
     }
 
     #[test]

@@ -28,7 +28,7 @@ use super::column_data::{ColumnData, ColumnShard};
 use super::dataset::{Dataset, Labels, TaskKind};
 use super::interner::Interner;
 use super::value::{parse_cell, Value};
-use crate::coordinator::parallel::{effective_threads, parallel_map};
+use crate::coordinator::parallel::parallel_map;
 use crate::error::{Result, UdtError};
 use std::collections::HashMap;
 use std::path::Path;
@@ -379,7 +379,7 @@ pub(crate) fn parse_typed_csv(
         _ => width - 1,
     };
 
-    let threads = effective_threads(opts.n_threads).max(1);
+    let threads = crate::runtime::threads(opts.n_threads);
     let target = if opts.chunk_bytes > 0 {
         opts.chunk_bytes
     } else if threads <= 1 {

@@ -15,7 +15,7 @@ use std::fs;
 use std::io::Read;
 use std::path::{Path, PathBuf};
 
-use crate::coordinator::parallel::{effective_threads, parallel_map};
+use crate::coordinator::parallel::parallel_map;
 use crate::data::column_data::{ColumnData, ColumnShard};
 use crate::data::csv::{
     first_data_width, line_aligned_chunks, parse_chunk, split_header, ChunkShard, CsvOptions,
@@ -280,7 +280,7 @@ fn shard_stream<R: Read>(
         return Err(UdtError::invalid_config("shard.rows must be >= 1"));
     }
     fs::create_dir_all(dir)?;
-    let threads = effective_threads(opts.n_threads).max(1);
+    let threads = crate::runtime::threads(opts.n_threads);
     let mut reader = BlockReader::new(src, block_bytes);
 
     let mut shape: Option<CsvShape> = None;

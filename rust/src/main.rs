@@ -116,7 +116,7 @@ fn train_config(a: &Args, cfg: &Config) -> Result<udt::TrainConfig> {
         .criterion(criterion)
         .backend(backend)
         .min_samples_split(a.get_usize("min-split", 2)?)
-        .threads(a.get_usize("threads", cfg.get_usize("train.threads", 1)?)?);
+        .threads(a.get_usize("threads", cfg.runtime_threads()?)?);
     if let Some(depth) = a.get("max-depth") {
         let depth: usize = depth
             .parse()
@@ -429,6 +429,13 @@ fn cmd_pipeline(raw: &[String]) -> Result<()> {
         "  memory: arena peak {} KiB, histogram scratch {} KiB",
         rep.peak_arena_bytes / 1024,
         rep.hist_scratch_bytes / 1024
+    );
+    println!(
+        "  runtime: {} pool batches, {} tasks, {} threads spawned ({} cores)",
+        rep.pool_batches,
+        rep.pool_tasks,
+        rep.pool_threads_spawned,
+        udt::runtime::cores()
     );
     if let Some(out) = a.get("out") {
         SavedModel::new(model, &ds).save(out)?;

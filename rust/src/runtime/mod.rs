@@ -1,14 +1,24 @@
-//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
-//! Rust request path (Python is build-time only).
+//! Process-wide runtime services.
 //!
-//! The PJRT execution engine needs the external `xla` crate, which the
-//! offline build image does not carry — it compiles only under the `xla`
-//! cargo feature. Without it, [`xla_split::XlaSelection`] is a stub whose
-//! loader reports "no artifacts" and whose selection falls back to the
-//! exact native engine, so every caller keeps working.
+//! Two halves live here:
+//!
+//! - [`pool`]: the persistent worker pool behind every `parallel_map*`
+//!   call (see [`crate::coordinator::parallel`]), plus the memoized
+//!   [`cores`] count and the uniform [`threads`] resolver (`0` = all
+//!   cores) used by every `n_threads` knob in the crate.
+//! - The PJRT runtime: load AOT-compiled HLO artifacts and execute them
+//!   from the Rust request path (Python is build-time only). The PJRT
+//!   execution engine needs the external `xla` crate, which the offline
+//!   build image does not carry — it compiles only under the `xla`
+//!   cargo feature. Without it, [`xla_split::XlaSelection`] is a stub
+//!   whose loader reports "no artifacts" and whose selection falls back
+//!   to the exact native engine, so every caller keeps working.
 
 pub mod binning;
 #[cfg(feature = "xla")]
 pub mod engine;
 pub mod manifest;
+pub mod pool;
 pub mod xla_split;
+
+pub use pool::{cores, stats as pool_stats, threads, PoolStats};

@@ -1,0 +1,530 @@
+//! Persistent worker-pool runtime.
+//!
+//! Every `parallel_map*` call used to pay `std::thread::scope` spawn +
+//! join for a fresh set of OS threads — once per tree level in the
+//! arena builder, once per round × level in boosting, once per batch in
+//! compiled predict, once per parse in CSV ingest. On the shallow, wide
+//! frontiers Superfast selection produces (thousands of sub-millisecond
+//! node tasks) that spawn/join is a constant tax on exactly the hot
+//! paths. This module replaces it with one process-wide pool: workers
+//! are spawned lazily **once** (capped at [`cores`]` - 1` — the
+//! submitting thread is always executor 0), park on a condvar when
+//! idle, and are handed batches through a queue under one mutex.
+//!
+//! # Invariants
+//!
+//! - **Ordering**: results are written by item index into pre-sized
+//!   slots; the output `Vec` is in input order regardless of which
+//!   thread ran which item.
+//! - **Thread-count invariance**: the mapping closure runs exactly once
+//!   per item; nothing about the result depends on `n_threads`, block
+//!   boundaries, or scheduling. The existing 1≡N property suites
+//!   (`prop_builder`, `prop_binned`, `prop_inference`, `prop_ingest`)
+//!   hold unchanged on the pooled runtime.
+//! - **Block claiming**: executors claim contiguous *blocks* of indices
+//!   per `fetch_add` (block size ≈ `n / (workers * 4)`, min 1) so
+//!   tiny-task frontiers don't serialize on the cursor cache line.
+//! - **Per-worker scratch**: `make_scratch` runs once per participating
+//!   executor, never per item.
+//! - **Bounded width**: at most `threads(n_threads)` executors touch a
+//!   batch — the submitter plus up to `workers - 1` pool workers
+//!   (enforced by the `extra_cap` pick condition).
+//! - **Nested submission**: a batch task may itself submit a batch (the
+//!   builder's small-frontier path parallelizes across features from
+//!   inside level tasks). The submitter always participates and drives
+//!   its own cursor to exhaustion, so progress never depends on a free
+//!   pool worker — no deadlock, even with zero workers.
+//! - **Panic contract**: a panicking task is caught by its executor;
+//!   the first payload is re-raised on the *submitting* caller after
+//!   the batch fully retires. The pool itself never wedges — no pool
+//!   lock is held while user code runs, so no lock is ever poisoned,
+//!   and the next batch runs normally.
+//!
+//! # Safety of the lifetime erasure
+//!
+//! The per-batch closure lives on the submitter's stack but is stored
+//! in the global queue as `&'static (dyn Fn() + Sync)`. That transmute
+//! is sound because of the retire protocol: a worker may only obtain
+//! the job reference by incrementing `running` *under the pool lock*;
+//! before `run_batch` returns, the submitter removes the queue entry
+//! and waits under that same lock until `running == 0`. After that, no
+//! worker holds or can ever re-acquire the reference, so it never
+//! outlives the frame it points into.
+
+use std::any::Any;
+use std::cell::UnsafeCell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Number of logical CPUs, queried once per process and memoized.
+///
+/// `std::thread::available_parallelism` takes a syscall on most
+/// platforms; the chunked predict path used to re-query it per batch.
+pub fn cores() -> usize {
+    static CORES: OnceLock<usize> = OnceLock::new();
+    *CORES.get_or_init(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
+
+/// Resolve a requested thread count: `0` means "all cores"
+/// ([`cores`]), anything else is taken literally. Always ≥ 1.
+///
+/// This is the single resolver for every `n_threads` knob in the crate
+/// (builder, ingest, shard writer, predict, serve) — previously
+/// `parallel_map_chunked` resolved 0 → all cores while
+/// `parallel_map`/`parallel_map_scratch` clamped 0 → 1.
+pub fn threads(requested: usize) -> usize {
+    if requested == 0 {
+        cores()
+    } else {
+        requested
+    }
+}
+
+/// Snapshot of the pool's monotonic counters (see [`stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// OS threads ever spawned by the pool. At most `cores() - 1` for
+    /// the lifetime of the process — the witness that a forest fit or
+    /// boost run no longer spawns per level/round.
+    pub threads_spawned_total: u64,
+    /// Batches handed to the pool (sequential fast paths not counted).
+    pub batches_submitted: u64,
+    /// Items executed by any executor, pool worker or submitter.
+    pub tasks_executed: u64,
+    /// Times an idle worker woke from its park to re-scan the queue.
+    pub park_wakeups: u64,
+}
+
+impl PoolStats {
+    /// Counter increments since an earlier snapshot.
+    pub fn delta_since(&self, earlier: &PoolStats) -> PoolStats {
+        PoolStats {
+            threads_spawned_total: self
+                .threads_spawned_total
+                .saturating_sub(earlier.threads_spawned_total),
+            batches_submitted: self.batches_submitted.saturating_sub(earlier.batches_submitted),
+            tasks_executed: self.tasks_executed.saturating_sub(earlier.tasks_executed),
+            park_wakeups: self.park_wakeups.saturating_sub(earlier.park_wakeups),
+        }
+    }
+}
+
+/// Current values of the pool's monotonic counters.
+pub fn stats() -> PoolStats {
+    PoolStats {
+        threads_spawned_total: POOL.threads_spawned_total.load(Ordering::Relaxed),
+        batches_submitted: POOL.batches_submitted.load(Ordering::Relaxed),
+        tasks_executed: POOL.tasks_executed.load(Ordering::Relaxed),
+        park_wakeups: POOL.park_wakeups.load(Ordering::Relaxed),
+    }
+}
+
+/// A cell written by exactly one executor (index ownership via the
+/// batch cursor) and read only after the batch retires.
+struct Slot<V>(UnsafeCell<Option<V>>);
+
+// SAFETY: the cursor hands each index to exactly one executor, so no
+// two threads ever touch the same slot concurrently; the submitter
+// reads results only after observing `running == 0` under the pool
+// mutex, which orders all writes before the reads.
+unsafe impl<V: Send> Sync for Slot<V> {}
+
+impl<V> Slot<V> {
+    fn new(v: Option<V>) -> Self {
+        Slot(UnsafeCell::new(v))
+    }
+}
+
+/// Lifetime-erased per-batch job. Points into the submitting frame;
+/// validity is guaranteed by the retire protocol (module docs).
+type Job = &'static (dyn Fn() + Sync);
+
+/// Shared state of one in-flight batch.
+struct BatchCore {
+    /// Next unclaimed item index; `fetch_add(block)` claims a block.
+    cursor: AtomicUsize,
+    n: usize,
+    block: usize,
+    /// Max *pool workers* that may join (the submitter is not counted),
+    /// i.e. `workers - 1`. Enforces the caller's `n_threads` cap.
+    extra_cap: usize,
+    /// Pool workers currently inside the job. Modified only under the
+    /// pool mutex so `done_cv` waits are sound.
+    running: AtomicUsize,
+    /// First panic payload from any executor of this batch.
+    panic: Mutex<Option<Box<dyn Any + Send + 'static>>>,
+}
+
+struct Entry {
+    core: Arc<BatchCore>,
+    job: Job,
+}
+
+struct State {
+    queue: Vec<Entry>,
+}
+
+struct Pool {
+    state: Mutex<State>,
+    /// Workers park here; notified on every submission.
+    work_cv: Condvar,
+    /// Submitters wait here for `running == 0`; notified when a worker
+    /// leaves a job.
+    done_cv: Condvar,
+    /// Set once to the number of workers actually spawned.
+    spawned: OnceLock<usize>,
+    threads_spawned_total: AtomicU64,
+    batches_submitted: AtomicU64,
+    tasks_executed: AtomicU64,
+    park_wakeups: AtomicU64,
+}
+
+static POOL: Pool = Pool {
+    state: Mutex::new(State { queue: Vec::new() }),
+    work_cv: Condvar::new(),
+    done_cv: Condvar::new(),
+    spawned: OnceLock::new(),
+    threads_spawned_total: AtomicU64::new(0),
+    batches_submitted: AtomicU64::new(0),
+    tasks_executed: AtomicU64::new(0),
+    park_wakeups: AtomicU64::new(0),
+};
+
+/// Indices claimed per `fetch_add`: enough blocks for ~4 claims per
+/// executor so the tail balances, min 1.
+fn block_size(n: usize, workers: usize) -> usize {
+    (n / (workers.max(1) * 4)).max(1)
+}
+
+/// Spawn the worker threads exactly once; returns how many exist.
+/// Spawn failure degrades gracefully: fewer (possibly zero) workers
+/// simply means the submitter does more (or all) of the work.
+fn ensure_workers() -> usize {
+    *POOL.spawned.get_or_init(|| {
+        let target = cores().saturating_sub(1);
+        let mut spawned = 0usize;
+        for i in 0..target {
+            let ok = std::thread::Builder::new()
+                .name(format!("udt-pool-{i}"))
+                .spawn(worker_loop)
+                .is_ok();
+            if !ok {
+                break;
+            }
+            spawned += 1;
+        }
+        POOL.threads_spawned_total
+            .fetch_add(spawned as u64, Ordering::Relaxed);
+        spawned
+    })
+}
+
+fn worker_loop() {
+    let mut st = POOL.state.lock().unwrap();
+    loop {
+        let picked = st
+            .queue
+            .iter()
+            .find(|e| {
+                e.core.running.load(Ordering::Relaxed) < e.core.extra_cap
+                    && e.core.cursor.load(Ordering::Relaxed) < e.core.n
+            })
+            .map(|e| (Arc::clone(&e.core), e.job));
+        match picked {
+            Some((core, job)) => {
+                core.running.fetch_add(1, Ordering::Relaxed);
+                drop(st);
+                if let Err(payload) = catch_unwind(AssertUnwindSafe(job)) {
+                    let mut slot = core.panic.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                }
+                st = POOL.state.lock().unwrap();
+                core.running.fetch_sub(1, Ordering::Relaxed);
+                POOL.done_cv.notify_all();
+            }
+            None => {
+                st = POOL.work_cv.wait(st).unwrap();
+                POOL.park_wakeups.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Order-preserving parallel map with per-executor scratch, run on the
+/// persistent pool. `n_threads == 0` means all cores; `1` is an inline
+/// sequential fast path that never touches the pool.
+pub fn map_scratch<T, R, S>(
+    items: Vec<T>,
+    n_threads: usize,
+    make_scratch: impl Fn() -> S + Sync,
+    f: impl Fn(T, &mut S) -> R + Sync,
+) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = threads(n_threads).min(n);
+    if workers == 1 || ensure_workers() == 0 {
+        let mut scratch = make_scratch();
+        return items.into_iter().map(|it| f(it, &mut scratch)).collect();
+    }
+    run_batch(items, workers, &make_scratch, &f)
+}
+
+fn run_batch<T, R, S>(
+    items: Vec<T>,
+    workers: usize,
+    make_scratch: &(impl Fn() -> S + Sync),
+    f: &(impl Fn(T, &mut S) -> R + Sync),
+) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+{
+    let n = items.len();
+    let slots: Vec<Slot<T>> = items.into_iter().map(|t| Slot::new(Some(t))).collect();
+    let results: Vec<Slot<R>> = (0..n).map(|_| Slot::new(None)).collect();
+    let core = Arc::new(BatchCore {
+        cursor: AtomicUsize::new(0),
+        n,
+        block: block_size(n, workers),
+        extra_cap: workers - 1,
+        running: AtomicUsize::new(0),
+        panic: Mutex::new(None),
+    });
+
+    let job = {
+        let core = Arc::clone(&core);
+        let slots = &slots;
+        let results = &results;
+        move || {
+            let mut scratch = make_scratch();
+            let mut done = 0u64;
+            loop {
+                let start = core.cursor.fetch_add(core.block, Ordering::Relaxed);
+                if start >= core.n {
+                    break;
+                }
+                let end = (start + core.block).min(core.n);
+                for i in start..end {
+                    // SAFETY: the fetch_add above handed start..end to
+                    // this executor exclusively.
+                    let item = unsafe { (*slots[i].0.get()).take() }.expect("item present");
+                    let r = f(item, &mut scratch);
+                    unsafe { *results[i].0.get() = Some(r) };
+                }
+                done += (end - start) as u64;
+            }
+            if done > 0 {
+                POOL.tasks_executed.fetch_add(done, Ordering::Relaxed);
+            }
+        }
+    };
+    let job_ref: &(dyn Fn() + Sync) = &job;
+    // SAFETY: retire protocol — the entry is dequeued and `running == 0`
+    // is observed under the pool mutex before this frame returns, so no
+    // worker can hold or re-acquire this reference afterwards (module
+    // docs, "Safety of the lifetime erasure").
+    let job_static: Job =
+        unsafe { std::mem::transmute::<&(dyn Fn() + Sync), &'static (dyn Fn() + Sync)>(job_ref) };
+
+    {
+        let mut st = POOL.state.lock().unwrap();
+        st.queue.push(Entry {
+            core: Arc::clone(&core),
+            job: job_static,
+        });
+    }
+    POOL.batches_submitted.fetch_add(1, Ordering::Relaxed);
+    POOL.work_cv.notify_all();
+
+    // The submitter is always executor 0: it drives the cursor to
+    // exhaustion itself, so the batch finishes even if every pool
+    // worker is busy elsewhere (or parked in a nested submission).
+    let mine = catch_unwind(AssertUnwindSafe(&job));
+
+    // Retire: remove the entry so no new worker can pick it, then wait
+    // for in-flight workers to leave. After this block the job
+    // reference is unreachable.
+    {
+        let mut st = POOL.state.lock().unwrap();
+        st.queue.retain(|e| !Arc::ptr_eq(&e.core, &core));
+        while core.running.load(Ordering::Relaxed) > 0 {
+            st = POOL.done_cv.wait(st).unwrap();
+        }
+    }
+
+    if let Err(payload) = mine {
+        let mut slot = core.panic.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(payload);
+        }
+    }
+    if let Some(payload) = core.panic.lock().unwrap().take() {
+        resume_unwind(payload);
+    }
+
+    results
+        .into_iter()
+        .map(|s| s.0.into_inner().expect("batch completed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_threads_means_all_cores_everywhere() {
+        // The satellite regression: 0 used to mean "all cores" for the
+        // chunked path but "sequential" for map/map_scratch.
+        assert_eq!(threads(0), cores());
+        assert_eq!(threads(1), 1);
+        assert_eq!(threads(7), 7);
+        assert!(cores() >= 1);
+        // And cores() is stable across calls (memoized).
+        assert_eq!(cores(), cores());
+    }
+
+    #[test]
+    fn map_preserves_order_with_zero_meaning_all_cores() {
+        let items: Vec<usize> = (0..10_000).collect();
+        let out = map_scratch(items, 0, || (), |x, _| x * 3);
+        assert_eq!(out.len(), 10_000);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * 3);
+        }
+    }
+
+    #[test]
+    fn non_clone_items_move_through_the_pool() {
+        let items: Vec<String> = (0..257).map(|i| format!("item-{i}")).collect();
+        let out = map_scratch(items, 5, || (), |s, _| s + "!");
+        assert_eq!(out.len(), 257);
+        assert_eq!(out[0], "item-0!");
+        assert_eq!(out[256], "item-256!");
+    }
+
+    #[test]
+    fn scratch_is_per_executor_not_per_item() {
+        use std::sync::atomic::AtomicUsize;
+        static MADE: AtomicUsize = AtomicUsize::new(0);
+        let items: Vec<u64> = (0..100).collect();
+        let before = MADE.load(Ordering::Relaxed);
+        let out = map_scratch(
+            items,
+            4,
+            || {
+                MADE.fetch_add(1, Ordering::Relaxed);
+                0u64
+            },
+            |x, acc: &mut u64| {
+                *acc += x;
+                x
+            },
+        );
+        let made = MADE.load(Ordering::Relaxed) - before;
+        assert_eq!(out.iter().sum::<u64>(), (0..100).sum::<u64>());
+        // At most one scratch per executor (≤ 4), never one per item.
+        assert!((1..=4).contains(&made), "made {made} scratches");
+    }
+
+    #[test]
+    fn panicking_batch_propagates_and_pool_stays_usable() {
+        let items: Vec<usize> = (0..64).collect();
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            map_scratch(items, 4, || (), |x, _| {
+                if x == 33 {
+                    panic!("boom at {x}");
+                }
+                x
+            })
+        }));
+        assert!(caught.is_err(), "panic must reach the submitter");
+        // The pool is still fully usable for the next batch.
+        let clean: Vec<usize> = (0..512).collect();
+        let out = map_scratch(clean, 4, || (), |x, _| x + 1);
+        assert_eq!(out.len(), 512);
+        assert_eq!(out[511], 512);
+    }
+
+    #[test]
+    fn nested_submission_completes() {
+        // Outer level-batch tasks submit inner feature-batches, as the
+        // builder's small-frontier path does. Must finish even when the
+        // inner batches find every worker busy.
+        let outer: Vec<usize> = (0..8).collect();
+        let out = map_scratch(outer, 0, || (), |o, _| {
+            let inner: Vec<usize> = (0..50).collect();
+            map_scratch(inner, 0, || (), |i, _| i * o).iter().sum::<usize>()
+        });
+        for (o, v) in out.iter().enumerate() {
+            assert_eq!(*v, o * (0..50).sum::<usize>());
+        }
+    }
+
+    #[test]
+    fn spawn_happens_at_most_once_per_process() {
+        // Run real work twice; the global spawn counter must never
+        // exceed cores() - 1 no matter how many batches (including
+        // those from concurrently running tests) have executed.
+        for _ in 0..2 {
+            let items: Vec<usize> = (0..1000).collect();
+            let out = map_scratch(items, 0, || (), |x, _| x ^ 1);
+            assert_eq!(out.len(), 1000);
+        }
+        let s = stats();
+        assert!(
+            s.threads_spawned_total <= cores() as u64,
+            "spawned {} threads on a {}-core machine",
+            s.threads_spawned_total,
+            cores()
+        );
+        if cores() > 1 {
+            assert!(s.batches_submitted >= 2);
+            assert!(s.tasks_executed >= 2000);
+        }
+    }
+
+    #[test]
+    fn block_size_scales_with_items_per_worker() {
+        assert_eq!(block_size(0, 4), 1);
+        assert_eq!(block_size(16, 4), 1);
+        assert_eq!(block_size(1000, 4), 62);
+        assert_eq!(block_size(100_000, 8), 3125);
+        // Degenerate worker count never divides by zero.
+        assert_eq!(block_size(10, 0), 2);
+    }
+
+    #[test]
+    fn delta_since_subtracts_counters() {
+        let a = PoolStats {
+            threads_spawned_total: 3,
+            batches_submitted: 10,
+            tasks_executed: 100,
+            park_wakeups: 7,
+        };
+        let b = PoolStats {
+            threads_spawned_total: 3,
+            batches_submitted: 14,
+            tasks_executed: 260,
+            park_wakeups: 9,
+        };
+        let d = b.delta_since(&a);
+        assert_eq!(d.threads_spawned_total, 0);
+        assert_eq!(d.batches_submitted, 4);
+        assert_eq!(d.tasks_executed, 160);
+        assert_eq!(d.park_wakeups, 2);
+    }
+}

@@ -31,7 +31,7 @@
 use super::frontier::{ArenaStats, Frontier, LevelNode, SplitTask};
 use super::label_split;
 use super::{Backend, Node, NodeLabel, RegStrategy, TrainConfig, Tree};
-use crate::coordinator::parallel::{effective_threads, parallel_map_scratch};
+use crate::coordinator::parallel::parallel_map_scratch;
 use crate::data::dataset::{BinnedIndex, Dataset, Labels, TaskKind};
 use crate::data::sorted_index::SortedIndex;
 use crate::error::{Result, UdtError};
@@ -258,7 +258,7 @@ fn fit_rows_core(
     };
     tree.nodes.push(placeholder_node()); // root slot
 
-    let n_threads = effective_threads(config.n_threads).max(1);
+    let n_threads = crate::runtime::threads(config.n_threads);
 
     loop {
         let n_level = frontier.n_nodes();

@@ -94,8 +94,10 @@ pub struct TrainConfig {
     pub backend: Backend,
     /// Regression split strategy.
     pub reg_strategy: RegStrategy,
-    /// Worker threads (1 = sequential). The coordinator parallelizes
-    /// level-synchronously over frontier nodes and over features.
+    /// Worker threads (0 = all cores, 1 = sequential; resolved by
+    /// [`crate::runtime::threads`]). The coordinator parallelizes
+    /// level-synchronously over frontier nodes and over features on the
+    /// persistent pool ([`crate::runtime::pool`]).
     pub n_threads: usize,
 }
 

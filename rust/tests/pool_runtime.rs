@@ -1,0 +1,192 @@
+//! Witness suite for the persistent worker-pool runtime
+//! (`runtime/pool.rs`): training and serving reuse one process-wide set
+//! of threads instead of spawning per level / per round / per batch.
+//!
+//! The pool's counters are process-global and the test harness runs
+//! tests concurrently, so assertions here are phrased as process-wide
+//! invariants (the spawn total can never exceed `cores() - 1`; after
+//! any parallel batch has run, the spawn counter is frozen forever by
+//! the `OnceLock`) rather than exact per-test deltas.
+
+use udt::coordinator::parallel::parallel_map;
+use udt::coordinator::pipeline::run_pipeline;
+use udt::coordinator::registry::ModelRegistry;
+use udt::data::synth::{generate_any, SynthSpec};
+use udt::inference::RowFrame;
+use udt::runtime::{cores, pool_stats};
+use udt::tree::forest::ForestConfig;
+use udt::tree::tuning::TuneGrid;
+use udt::tree::TrainConfig;
+use udt::{Boosted, BoostedConfig, Forest, Model, SavedModel};
+
+fn ds(name: &str, rows: usize, seed: u64) -> udt::Dataset {
+    let mut spec = SynthSpec::classification(name, rows, 6, 3);
+    spec.noise = 0.1;
+    generate_any(&spec, seed)
+}
+
+/// Force the pool's one-time spawn (on multicore machines) so that a
+/// following measured region provably spawns nothing.
+fn warm_pool() {
+    let xs: Vec<usize> = (0..256).collect();
+    let _ = parallel_map(xs, 0, |x| x + 1);
+}
+
+fn all_cores_config() -> TrainConfig {
+    TrainConfig {
+        n_threads: 0,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn forest_fit_spawns_threads_at_most_once() {
+    let ds = ds("pool-forest", 2000, 11);
+    let cfg = ForestConfig {
+        n_trees: 4,
+        tree: all_cores_config(),
+        ..ForestConfig::default()
+    };
+    // First fit may trigger the process's single spawn set.
+    let first = Forest::fit(&ds, &cfg).unwrap();
+    let before = pool_stats();
+    // Second full fit: every level of every bagged tree runs on the
+    // already-spawned pool.
+    let second = Forest::fit(&ds, &cfg).unwrap();
+    let delta = pool_stats().delta_since(&before);
+    assert_eq!(
+        delta.threads_spawned_total, 0,
+        "a forest fit spawned threads after the pool was warm"
+    );
+    assert!(pool_stats().threads_spawned_total <= cores() as u64);
+    if cores() > 1 {
+        // The fit really did go through the pool.
+        assert!(delta.batches_submitted > 0);
+        assert!(delta.tasks_executed > 0);
+    }
+    assert_eq!(first.n_features(), second.n_features());
+}
+
+#[test]
+fn boost_run_spawns_threads_at_most_once() {
+    let ds = ds("pool-boost", 1500, 12);
+    let cfg = BoostedConfig {
+        n_rounds: 5,
+        n_threads: 0,
+        ..BoostedConfig::default()
+    };
+    let _first = Boosted::fit(&ds, &cfg).unwrap();
+    let before = pool_stats();
+    // 5 more rounds × all their levels: zero spawns.
+    let _second = Boosted::fit(&ds, &cfg).unwrap();
+    let delta = pool_stats().delta_since(&before);
+    assert_eq!(
+        delta.threads_spawned_total, 0,
+        "a boost run spawned threads after the pool was warm"
+    );
+    assert!(pool_stats().threads_spawned_total <= cores() as u64);
+    if cores() > 1 {
+        assert!(delta.batches_submitted > 0);
+    }
+}
+
+#[test]
+fn tuning_sweep_pipeline_reports_pool_counters_and_no_respawn() {
+    let ds = ds("pool-pipe", 3000, 13);
+    let cfg = all_cores_config();
+    let first = run_pipeline(&ds, &cfg, &TuneGrid::default(), 1).unwrap();
+    assert!(first.pool_threads_spawned <= cores() as u64);
+    // The first run (or any concurrent test) completed a parallel batch,
+    // so the OnceLock is set on multicore machines: a second full
+    // train → tune → retrain sweep must spawn exactly zero threads.
+    let second = run_pipeline(&ds, &cfg, &TuneGrid::default(), 1).unwrap();
+    assert_eq!(
+        second.pool_threads_spawned, 0,
+        "tuning sweep respawned pool threads"
+    );
+    if cores() > 1 {
+        assert!(second.pool_batches > 0, "sweep bypassed the pool");
+        assert!(second.pool_tasks > 0);
+    }
+    // Same data, same seed → identical report modulo timing/counters.
+    assert_eq!(first.full_nodes, second.full_nodes);
+    assert_eq!(first.best_max_depth, second.best_max_depth);
+}
+
+#[test]
+fn concurrent_registry_predictions_match_sequential_bit_for_bit() {
+    // Two threads driving the registry's compiled predict through the
+    // shared pool must see no cross-batch interleaving: every result
+    // identical to a sequential run.
+    let ds = ds("pool-serve", 1200, 14);
+    let tree = udt::Udt::builder().threads(0).fit(&ds).unwrap();
+    let registry = ModelRegistry::new();
+    registry
+        .load("m", SavedModel::new(Model::SingleTree(tree), &ds))
+        .unwrap();
+    let entry = registry.get(None).unwrap();
+    let frame = RowFrame::from_dataset(&ds);
+
+    let expected = entry.predict_frame(&frame).unwrap().into_labels();
+    assert_eq!(expected.len(), ds.n_rows());
+
+    std::thread::scope(|scope| {
+        for _ in 0..2 {
+            scope.spawn(|| {
+                for _ in 0..8 {
+                    let got = entry.predict_frame(&frame).unwrap().into_labels();
+                    assert_eq!(got, expected, "concurrent predict diverged");
+                }
+            });
+        }
+    });
+    // Serving concurrency never grows the pool past its cap either.
+    assert!(pool_stats().threads_spawned_total <= cores() as u64);
+}
+
+#[test]
+fn panicking_batch_leaves_pool_usable_for_training() {
+    warm_pool();
+    let poisoned = std::panic::catch_unwind(|| {
+        let xs: Vec<usize> = (0..128).collect();
+        parallel_map(xs, 0, |x| {
+            if x == 77 {
+                panic!("task failure");
+            }
+            x
+        })
+    });
+    assert!(poisoned.is_err(), "panic must propagate to the submitter");
+    // A real training run straight after works on the same pool.
+    let ds = ds("pool-panic", 1000, 15);
+    let tree = udt::Udt::builder().threads(0).fit(&ds).unwrap();
+    assert!(tree.n_nodes() >= 3);
+    let before = pool_stats();
+    let tree2 = udt::Udt::builder().threads(0).fit(&ds).unwrap();
+    assert_eq!(tree.n_nodes(), tree2.n_nodes());
+    assert_eq!(
+        pool_stats().delta_since(&before).threads_spawned_total,
+        0,
+        "recovery must not respawn workers"
+    );
+}
+
+#[test]
+fn zero_threads_trains_identically_to_explicit_core_count() {
+    // The n_threads == 0 semantics regression, end to end: 0 ("all
+    // cores"), 1 (sequential) and an explicit count all build the same
+    // tree thanks to order-preserving, thread-count-invariant batches.
+    let ds = ds("pool-zero", 1800, 16);
+    let fit = |threads: usize| udt::Udt::builder().threads(threads).fit(&ds).unwrap();
+    let seq = fit(1);
+    let zero = fit(0);
+    let four = fit(4);
+    assert_eq!(seq.n_nodes(), zero.n_nodes());
+    assert_eq!(seq.n_nodes(), four.n_nodes());
+    assert_eq!(seq.depth, zero.depth);
+    for r in 0..ds.n_rows() {
+        let a = udt::tree::predict::predict_ds(&seq, &ds, r, usize::MAX, 0);
+        assert_eq!(a, udt::tree::predict::predict_ds(&zero, &ds, r, usize::MAX, 0));
+        assert_eq!(a, udt::tree::predict::predict_ds(&four, &ds, r, usize::MAX, 0));
+    }
+}
