@@ -39,6 +39,8 @@ fn scoped_map<T: Send, R: Send>(
     f: impl Fn(T) -> R + Sync,
 ) -> Vec<R> {
     struct Slot<V>(UnsafeCell<Option<V>>);
+    // SAFETY: each slot is touched by exactly one worker — the one that won
+    // its index from the cursor — so shared `&Slot` never aliases a write.
     unsafe impl<V: Send> Sync for Slot<V> {}
 
     let n = items.len();
@@ -63,6 +65,8 @@ fn scoped_map<T: Send, R: Send>(
                 // alone; the scope join publishes the writes.
                 let item = unsafe { (*slots[i].0.get()).take() }.expect("item present");
                 let r = f(item);
+                // SAFETY: same exclusivity argument — index `i` belongs to
+                // this worker alone; the scope join publishes the write.
                 unsafe { *results[i].0.get() = Some(r) };
             });
         }

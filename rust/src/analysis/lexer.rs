@@ -1,0 +1,415 @@
+//! Comment- and string-aware masking of Rust source text.
+//!
+//! `udt-analyze` is zero-dependency by design (the offline image has no
+//! `syn`/`proc-macro2`), so instead of parsing Rust it *masks* it: one
+//! linear scan classifies every character as code, comment or literal
+//! content, and produces
+//!
+//! * `code` — the source with comment text and string/char literal
+//!   *contents* blanked to spaces (delimiters and newlines kept, so
+//!   byte-for-byte line structure survives), and
+//! * `comments` — every comment's text with the line it starts on.
+//!
+//! Rules then pattern-match on the masked code — `unsafe` inside a
+//! string literal or a doc example can never fire a finding — and read
+//! waivers / `SAFETY:` markers from the comment list. This is exactly
+//! the split that lets the analyzer scan its own fixture-bearing test
+//! sources without tripping on the violations embedded in their string
+//! literals.
+//!
+//! The scanner understands the token shapes that matter for masking:
+//! line comments (`//`, `///`, `//!`), nested block comments
+//! (`/* /* */ */`), string literals with escapes, raw strings with any
+//! hash arity (`r#"…"#`), byte strings (`b"…"`, `br#"…"#`), char and
+//! byte-char literals, and the char-vs-lifetime ambiguity (`'a'` vs
+//! `'a`). It does not need to understand anything else about Rust.
+
+/// One comment, with the 1-based line its opening `//` or `/*` sits on.
+/// Multi-line block comments are recorded once, at their start line,
+/// with their full text (newlines included).
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: usize,
+    pub text: String,
+}
+
+/// The result of [`mask`]: blanked source plus the extracted comments.
+#[derive(Debug, Clone)]
+pub struct MaskedSource {
+    /// Source text with comment text and literal contents replaced by
+    /// spaces. Newlines and literal delimiters are preserved, so line
+    /// numbers and gross code shape match the original exactly.
+    pub code: String,
+    /// Every comment, in source order.
+    pub comments: Vec<Comment>,
+}
+
+enum State {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+}
+
+fn ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Mask `src` (see module docs). Total, never fails: malformed source
+/// degrades to "everything after the confusing point is literal
+/// content", which is the conservative direction for a linter (it can
+/// only suppress findings in broken files, never invent them in valid
+/// ones).
+pub fn mask(src: &str) -> MaskedSource {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut code = String::with_capacity(src.len());
+    let mut comments: Vec<Comment> = Vec::new();
+
+    let mut line = 1usize;
+    let mut i = 0usize;
+    let mut state = State::Code;
+    // Accumulator for the comment currently being scanned.
+    let mut ctext = String::new();
+    let mut cline = 0usize;
+    // Last code character emitted (for literal-prefix disambiguation:
+    // the `r` in `number"` is part of an identifier, not a raw-string
+    // prefix).
+    let mut prev_code: char = '\0';
+
+    while i < n {
+        let c = chars[i];
+        let next = if i + 1 < n { chars[i + 1] } else { '\0' };
+        match state {
+            State::Code => {
+                if c == '/' && next == '/' {
+                    state = State::LineComment;
+                    cline = line;
+                    ctext.clear();
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                } else if c == '/' && next == '*' {
+                    state = State::BlockComment(1);
+                    cline = line;
+                    ctext.clear();
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Str;
+                    code.push('"');
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !ident_char(prev_code) {
+                    // Possible literal prefix: r"…", r#"…"#, b"…", br"…",
+                    // br#"…"#, b'…'. Look ahead without committing.
+                    let mut j = i + 1;
+                    if c == 'b' && j < n && chars[j] == 'r' {
+                        j += 1;
+                    }
+                    let mut hashes = 0u32;
+                    while j < n && chars[j] == '#' {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    let raw = j > i + 1 || (c == 'r');
+                    if j < n && chars[j] == '"' && (raw || c == 'b') {
+                        // Emit the prefix + opening quote verbatim.
+                        for k in i..=j {
+                            code.push(chars[k]);
+                        }
+                        i = j + 1;
+                        state = if raw { State::RawStr(hashes) } else { State::Str };
+                        prev_code = '"';
+                    } else if c == 'b' && hashes == 0 && i + 1 < n && chars[i + 1] == '\'' {
+                        // Byte-char literal b'…': emit the prefix, let the
+                        // generic char-literal arm consume the rest.
+                        code.push(c);
+                        prev_code = c;
+                        i += 1;
+                    } else {
+                        code.push(c);
+                        prev_code = c;
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal vs lifetime/label: 'x' and '\n' are
+                    // literals; 'a (no closing quote two ahead) is a
+                    // lifetime and stays plain code.
+                    let two_ahead = if i + 2 < n { chars[i + 2] } else { '\0' };
+                    if next == '\\' || two_ahead == '\'' {
+                        code.push('\'');
+                        i += 1;
+                        // Consume masked content until the closing quote.
+                        while i < n {
+                            let cc = chars[i];
+                            if cc == '\\' {
+                                code.push(' ');
+                                i += 1;
+                                if i < n {
+                                    if chars[i] == '\n' {
+                                        line += 1;
+                                        code.push('\n');
+                                    } else {
+                                        code.push(' ');
+                                    }
+                                    i += 1;
+                                }
+                            } else if cc == '\'' {
+                                code.push('\'');
+                                i += 1;
+                                break;
+                            } else {
+                                if cc == '\n' {
+                                    // Unterminated char literal: bail out
+                                    // conservatively at the line break.
+                                    line += 1;
+                                    code.push('\n');
+                                    i += 1;
+                                    break;
+                                }
+                                code.push(' ');
+                                i += 1;
+                            }
+                        }
+                        prev_code = '\'';
+                    } else {
+                        code.push('\'');
+                        prev_code = '\'';
+                        i += 1;
+                    }
+                } else {
+                    if c == '\n' {
+                        line += 1;
+                    }
+                    code.push(c);
+                    prev_code = c;
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                if c == '\n' {
+                    comments.push(Comment {
+                        line: cline,
+                        text: ctext.clone(),
+                    });
+                    state = State::Code;
+                    line += 1;
+                    code.push('\n');
+                    i += 1;
+                } else {
+                    ctext.push(c);
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            State::BlockComment(depth) => {
+                if c == '*' && next == '/' {
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                    if depth == 1 {
+                        comments.push(Comment {
+                            line: cline,
+                            text: ctext.clone(),
+                        });
+                        state = State::Code;
+                    } else {
+                        state = State::BlockComment(depth - 1);
+                    }
+                } else if c == '/' && next == '*' {
+                    code.push(' ');
+                    code.push(' ');
+                    ctext.push_str("/*");
+                    i += 2;
+                    state = State::BlockComment(depth + 1);
+                } else {
+                    if c == '\n' {
+                        line += 1;
+                        code.push('\n');
+                    } else {
+                        code.push(' ');
+                    }
+                    ctext.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    code.push(' ');
+                    i += 1;
+                    if i < n {
+                        if chars[i] == '\n' {
+                            line += 1;
+                            code.push('\n');
+                        } else {
+                            code.push(' ');
+                        }
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Code;
+                    prev_code = '"';
+                    i += 1;
+                } else {
+                    if c == '\n' {
+                        line += 1;
+                        code.push('\n');
+                    } else {
+                        code.push(' ');
+                    }
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' {
+                    let mut h = 0u32;
+                    let mut j = i + 1;
+                    while j < n && chars[j] == '#' && h < hashes {
+                        h += 1;
+                        j += 1;
+                    }
+                    if h == hashes {
+                        for k in i..j {
+                            code.push(chars[k]);
+                        }
+                        i = j;
+                        state = State::Code;
+                        prev_code = '"';
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                } else {
+                    if c == '\n' {
+                        line += 1;
+                        code.push('\n');
+                    } else {
+                        code.push(' ');
+                    }
+                    i += 1;
+                }
+            }
+        }
+    }
+    // Flush a comment left open at EOF (file ends inside `//` or `/*`).
+    match state {
+        State::LineComment | State::BlockComment(_) => {
+            comments.push(Comment {
+                line: cline,
+                text: ctext,
+            });
+        }
+        _ => {}
+    }
+    MaskedSource { code, comments }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_comments_are_blanked_and_collected() {
+        let src = "let x = 1; // trailing note\n// full line\nlet y = 2;\n";
+        let m = mask(src);
+        assert!(!m.code.contains("trailing"));
+        assert!(!m.code.contains("full line"));
+        assert!(m.code.contains("let x = 1;"));
+        assert!(m.code.contains("let y = 2;"));
+        assert_eq!(m.comments.len(), 2);
+        assert_eq!(m.comments[0].line, 1);
+        assert_eq!(m.comments[0].text, " trailing note");
+        assert_eq!(m.comments[1].line, 2);
+        // Line structure is preserved exactly.
+        assert_eq!(m.code.matches('\n').count(), src.matches('\n').count());
+    }
+
+    #[test]
+    fn nested_block_comments_end_at_the_outer_close() {
+        let src = "a /* one /* two */ still */ b\n";
+        let m = mask(src);
+        assert!(m.code.contains('a'));
+        assert!(m.code.contains('b'));
+        assert!(!m.code.contains("still"));
+        assert_eq!(m.comments.len(), 1);
+        assert!(m.comments[0].text.contains("one"));
+        assert!(m.comments[0].text.contains("still"));
+    }
+
+    #[test]
+    fn string_contents_are_masked_but_code_is_not() {
+        let src = "call(\"unsafe .unwrap() // not a comment\"); done();\n";
+        let m = mask(src);
+        assert!(!m.code.contains("unsafe"));
+        assert!(!m.code.contains("unwrap"));
+        assert!(m.code.contains("call(\""));
+        assert!(m.code.contains("done();"));
+        assert!(m.comments.is_empty());
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_strings() {
+        let src = r#"x("a\"b // still string"); // real comment"#;
+        let m = mask(src);
+        assert!(!m.code.contains("still string"));
+        assert_eq!(m.comments.len(), 1);
+        assert_eq!(m.comments[0].text, " real comment");
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_mask_their_contents() {
+        let src = "let f = r#\"// ANALYZE-ALLOW(no-unwrap): fake\"#; real();\n";
+        let m = mask(src);
+        assert!(!m.code.contains("ANALYZE-ALLOW"));
+        assert!(m.code.contains("real();"));
+        assert!(m.comments.is_empty());
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars_are_literals() {
+        let src = "out.push(b'\\n'); let s = b\"unsafe\"; tail();\n";
+        let m = mask(src);
+        assert!(!m.code.contains("unsafe"));
+        assert!(m.code.contains("tail();"));
+    }
+
+    #[test]
+    fn lifetimes_are_code_char_literals_are_masked() {
+        let src = "fn f<'a>(x: &'a str) { let c = 'u'; let q = '\\''; }\n";
+        let m = mask(src);
+        // Lifetimes survive as code…
+        assert!(m.code.contains("<'a>"));
+        assert!(m.code.contains("&'a str"));
+        // …char contents do not.
+        assert!(!m.code.contains("'u'"));
+    }
+
+    #[test]
+    fn multiline_block_comment_is_recorded_at_its_start_line() {
+        let src = "one();\n/* SAFETY: spans\n   lines */\nunsafe_marker();\n";
+        let m = mask(src);
+        assert_eq!(m.comments.len(), 1);
+        assert_eq!(m.comments[0].line, 2);
+        assert!(m.comments[0].text.contains("SAFETY: spans"));
+        assert!(m.code.contains("unsafe_marker();"));
+        assert_eq!(m.code.matches('\n').count(), 4);
+    }
+
+    #[test]
+    fn r_as_last_ident_char_is_not_a_raw_string_prefix() {
+        let src = "let number = 4; let r = 1; format!(\"{number}\");\n";
+        let m = mask(src);
+        assert!(m.code.contains("let number = 4;"));
+        assert!(m.code.contains("let r = 1;"));
+    }
+
+    #[test]
+    fn comment_open_at_eof_is_flushed() {
+        let m = mask("x(); // no trailing newline");
+        assert_eq!(m.comments.len(), 1);
+        assert_eq!(m.comments[0].text, " no trailing newline");
+    }
+}

@@ -1,0 +1,224 @@
+//! `udt-analyze` — the project's zero-dependency source lint.
+//!
+//! The crate's hot path rides on an unsafe concurrency core
+//! ([`crate::runtime::pool`]'s lifetime-erased job refs and
+//! `UnsafeCell` result slots, [`crate::coordinator::reactor`]'s raw
+//! syscalls and `repr(C, packed)` kernel structs). This module is the
+//! static third of the correctness tooling that keeps that core honest
+//! (the dynamic third is the cfg-gated race witness in
+//! `runtime::pool::check`; the compile-time third is the `const`
+//! layout assertions in `coordinator/reactor/sys.rs`):
+//!
+//! * [`lexer`] masks Rust source — comments and literal contents
+//!   blanked, line structure preserved — with no external parser;
+//! * [`rules`] enforces the unsafe-hygiene invariants (see its table)
+//!   over the masked text and applies `ANALYZE-ALLOW` waivers;
+//! * this module walks the source tree, aggregates per-file results
+//!   into a [`TreeReport`], and renders the `file:line: [rule] msg`
+//!   listing behind `udt analyze`.
+//!
+//! Run it locally with `cargo run --release -- analyze`; CI runs the
+//! same command as a blocking gate. Exit is non-zero iff any unwaived
+//! finding survives.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{check_file, FileAnalysis, Finding, Rule, Waiver};
+
+use crate::error::{Result, UdtError};
+use std::path::{Path, PathBuf};
+
+/// One analyzed file: its workspace-relative path (`/`-separated) and
+/// what the rules produced for it.
+#[derive(Debug, Clone)]
+pub struct FileReport {
+    pub path: String,
+    pub analysis: FileAnalysis,
+}
+
+/// The whole tree's results, in sorted path order.
+#[derive(Debug, Clone, Default)]
+pub struct TreeReport {
+    pub files: Vec<FileReport>,
+}
+
+impl TreeReport {
+    /// Total unwaived findings across every file.
+    pub fn total_findings(&self) -> usize {
+        self.files.iter().map(|f| f.analysis.findings.len()).sum()
+    }
+
+    /// `(rule id, used waiver count)` for every rule with at least one
+    /// used waiver, in [`Rule::all`] order.
+    pub fn waiver_counts(&self) -> Vec<(&'static str, usize)> {
+        Rule::all()
+            .iter()
+            .filter_map(|r| {
+                let n = self
+                    .files
+                    .iter()
+                    .flat_map(|f| f.analysis.waivers.iter())
+                    .filter(|w| w.used && w.rule == r.id())
+                    .count();
+                if n > 0 {
+                    Some((r.id(), n))
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+
+    /// Waivers that absorbed no finding — stale, worth deleting.
+    pub fn unused_waivers(&self) -> Vec<(String, usize, String)> {
+        let mut out = Vec::new();
+        for f in &self.files {
+            for w in &f.analysis.waivers {
+                if !w.used {
+                    out.push((f.path.clone(), w.line, w.rule.clone()));
+                }
+            }
+        }
+        out
+    }
+
+    /// Human-readable listing: one `path:line: [rule] message` per
+    /// finding, then the waiver summary. Stable ordering (paths sorted
+    /// by the walker, findings line-sorted per file) so CI diffs are
+    /// meaningful.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.files {
+            for finding in &f.analysis.findings {
+                out.push_str(&format!(
+                    "{}:{}: [{}] {}\n",
+                    f.path,
+                    finding.line,
+                    finding.rule.id(),
+                    finding.message
+                ));
+            }
+        }
+        let n_files = self.files.len();
+        let n_findings = self.total_findings();
+        out.push_str(&format!(
+            "udt-analyze: {} file(s) scanned, {} finding(s)\n",
+            n_files, n_findings
+        ));
+        for (rule, n) in self.waiver_counts() {
+            out.push_str(&format!("  waived [{rule}]: {n}\n"));
+        }
+        for (path, line, rule) in self.unused_waivers() {
+            out.push_str(&format!("  unused waiver at {path}:{line} [{rule}]\n"));
+        }
+        out
+    }
+}
+
+/// Analyze one in-memory source file (the test-fixture entry point —
+/// identical rule behavior to the tree walk).
+pub fn analyze_source(rel_path: &str, src: &str) -> FileAnalysis {
+    check_file(rel_path, src)
+}
+
+/// Analyze every `.rs` file under `root`'s source directories.
+///
+/// `root` may be the workspace root (containing `rust/src`) or the
+/// package root (containing `src`); both layouts resolve. Scans
+/// `src/`, `tests/`, `benches/` and `examples/` recursively, skipping
+/// any `target/` directory, in sorted path order.
+pub fn analyze_tree(root: &Path) -> Result<TreeReport> {
+    let base = if root.join("rust").join("src").is_dir() {
+        root.join("rust")
+    } else if root.join("src").is_dir() {
+        root.to_path_buf()
+    } else {
+        return Err(UdtError::Usage(format!(
+            "analyze: no src/ under {} (pass the workspace or package root)",
+            root.display()
+        )));
+    };
+
+    let mut files: Vec<PathBuf> = Vec::new();
+    for dir in ["src", "tests", "benches", "examples"] {
+        let d = base.join(dir);
+        if d.is_dir() {
+            collect_rs(&d, &mut files)?;
+        }
+    }
+    files.sort();
+
+    let mut report = TreeReport::default();
+    for path in files {
+        let rel = path
+            .strip_prefix(&base)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(&path).map_err(UdtError::Io)?;
+        report.files.push(FileReport {
+            path: rel.clone(),
+            analysis: check_file(&rel, &src),
+        });
+    }
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries = std::fs::read_dir(dir).map_err(UdtError::Io)?;
+    for entry in entries {
+        let entry = entry.map_err(UdtError::Io)?;
+        let path = entry.path();
+        if path.is_dir() {
+            if path.file_name().map(|n| n == "target").unwrap_or(false) {
+                continue;
+            }
+            collect_rs(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_findings_and_waiver_counts() {
+        let mut report = TreeReport::default();
+        report.files.push(FileReport {
+            path: "src/a.rs".to_string(),
+            analysis: check_file("src/a.rs", "fn f() { x.unwrap(); }\n"),
+        });
+        report.files.push(FileReport {
+            path: "src/b.rs".to_string(),
+            analysis: check_file(
+                "src/b.rs",
+                "fn f() { x.unwrap(); } // ANALYZE-ALLOW(no-unwrap): demo reason\n",
+            ),
+        });
+        assert_eq!(report.total_findings(), 1);
+        let rendered = report.render();
+        assert!(rendered.contains("src/a.rs:1: [no-unwrap]"));
+        assert!(rendered.contains("waived [no-unwrap]: 1"));
+        assert!(rendered.contains("2 file(s) scanned, 1 finding(s)"));
+    }
+
+    #[test]
+    fn unused_waivers_are_surfaced_not_fatal() {
+        let mut report = TreeReport::default();
+        report.files.push(FileReport {
+            path: "src/a.rs".to_string(),
+            analysis: check_file(
+                "src/a.rs",
+                "// ANALYZE-ALLOW(no-unwrap): nothing here needs this\nfn f() {}\n",
+            ),
+        });
+        assert_eq!(report.total_findings(), 0);
+        assert_eq!(report.unused_waivers().len(), 1);
+        assert!(report.render().contains("unused waiver at src/a.rs:1"));
+    }
+}

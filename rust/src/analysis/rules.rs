@@ -1,0 +1,567 @@
+//! The `udt-analyze` rule set: project unsafe-hygiene invariants
+//! checked against [masked](super::lexer) source.
+//!
+//! | rule id          | invariant                                                        |
+//! |------------------|------------------------------------------------------------------|
+//! | `safety-comment` | every `unsafe` occurrence is preceded by a `SAFETY:` comment     |
+//! | `thread-spawn`   | no `thread::spawn`/`scope`/`Builder` outside `runtime/pool.rs`   |
+//! | `no-unwrap`      | no `.unwrap()` / `.expect(` / `panic!` in library code           |
+//! | `as-truncation`  | no narrowing `as` casts in the byte-level decoders               |
+//! | `waiver-syntax`  | every `ANALYZE-ALLOW` comment parses and names a known rule      |
+//!
+//! Findings can be waived in-source with
+//! `ANALYZE-ALLOW(no-unwrap): slice length pinned by take()` — a `//`
+//! comment that *begins* with the marker (mid-prose mentions, like the
+//! ones in this paragraph, are ignored), names the rule and gives a
+//! non-empty reason. A waiver on line *L* covers findings on lines *L*
+//! and *L + 1*, so it works both trailing on the offending line and on
+//! its own line directly above. Waivers are counted and reported,
+//! never silent; `waiver-syntax` findings cannot themselves be waived.
+//!
+//! Scope rules:
+//! * `no-unwrap` and `thread-spawn` apply to **library code** only:
+//!   files under `tests/`, `benches/`, `examples/`, files named
+//!   `main.rs`, and `#[cfg(test)]` spans inside library files are
+//!   exempt.
+//! * `as-truncation` applies only to the byte-level decoder files
+//!   (`data/shard/format.rs`, `coordinator/reactor/sys.rs`) where a
+//!   silent truncation corrupts on-disk or kernel data.
+//! * `safety-comment` applies everywhere — an unsound `unsafe` in a
+//!   bench corrupts memory just as well as one in `src/`.
+
+use super::lexer::{mask, Comment};
+
+/// Rule identifiers, stable across releases; `Rule::id` is the string
+/// used in findings, waivers and the CLI summary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Rule {
+    SafetyComment,
+    ThreadSpawn,
+    NoUnwrap,
+    AsTruncation,
+    WaiverSyntax,
+}
+
+impl Rule {
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::SafetyComment => "safety-comment",
+            Rule::ThreadSpawn => "thread-spawn",
+            Rule::NoUnwrap => "no-unwrap",
+            Rule::AsTruncation => "as-truncation",
+            Rule::WaiverSyntax => "waiver-syntax",
+        }
+    }
+
+    /// All rules, in reporting order.
+    pub fn all() -> [Rule; 5] {
+        [
+            Rule::SafetyComment,
+            Rule::ThreadSpawn,
+            Rule::NoUnwrap,
+            Rule::AsTruncation,
+            Rule::WaiverSyntax,
+        ]
+    }
+}
+
+/// Rule ids a waiver may name (`waiver-syntax` is deliberately absent:
+/// a malformed waiver cannot be waived by another waiver).
+pub const WAIVABLE: [&str; 4] = [
+    "safety-comment",
+    "thread-spawn",
+    "no-unwrap",
+    "as-truncation",
+];
+
+/// One unwaived violation at `line` (1-based) of the analyzed file.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: Rule,
+    pub line: usize,
+    pub message: String,
+}
+
+/// One parsed `ANALYZE-ALLOW` comment. `used` is set when it absorbed
+/// at least one finding; unused waivers are reported (stale waivers
+/// rot) but are not failures.
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+    pub used: bool,
+}
+
+/// Everything the rules produced for one file: surviving findings
+/// (line-sorted) plus every waiver encountered.
+#[derive(Debug, Clone)]
+pub struct FileAnalysis {
+    pub findings: Vec<Finding>,
+    pub waivers: Vec<Waiver>,
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// True when the `pat` occurrence at byte `off` in `code` sits on
+/// identifier boundaries (so `unsafe` does not fire inside
+/// `unsafe_marker`, nor `as u8` inside `as u816`).
+fn on_word_boundary(code: &str, off: usize, pat: &str) -> bool {
+    let bytes = code.as_bytes();
+    let before_ok = off == 0 || !is_ident(bytes[off - 1]);
+    let end = off + pat.len();
+    let after_ok = end >= bytes.len() || !is_ident(bytes[end]);
+    before_ok && after_ok
+}
+
+/// Byte offsets where each line of `code` starts; `line_of` maps a
+/// byte offset back to its 1-based line via binary search.
+fn line_starts(code: &str) -> Vec<usize> {
+    let mut starts = vec![0usize];
+    for (i, b) in code.bytes().enumerate() {
+        if b == b'\n' {
+            starts.push(i + 1);
+        }
+    }
+    starts
+}
+
+fn line_of(starts: &[usize], off: usize) -> usize {
+    match starts.binary_search(&off) {
+        Ok(i) => i + 1,
+        Err(i) => i,
+    }
+}
+
+/// Per-line flags computed from path + masked source, shared by every
+/// rule so the exemption logic exists exactly once.
+struct FileContext {
+    /// Masked code (comments/literal contents blanked).
+    code: String,
+    /// Masked code split by line (index 0 = line 1).
+    lines: Vec<String>,
+    starts: Vec<usize>,
+    comments: Vec<Comment>,
+    /// `comment_cover[l]` / `safety_cover[l]`: 1-based line `l` is
+    /// covered by a comment / by a comment carrying a SAFETY marker.
+    comment_cover: Vec<bool>,
+    safety_cover: Vec<bool>,
+    /// Lines inside a `#[cfg(test)]` item span.
+    test_line: Vec<bool>,
+    /// File-level exemptions derived from the path.
+    lib_code: bool,
+    decoder_file: bool,
+    pool_file: bool,
+}
+
+impl FileContext {
+    fn new(rel_path: &str, src: &str) -> FileContext {
+        let masked = mask(src);
+        let lines: Vec<String> = masked.code.split('\n').map(|l| l.to_string()).collect();
+        let n_lines = lines.len();
+        let starts = line_starts(&masked.code);
+
+        let mut comment_cover = vec![false; n_lines + 2];
+        let mut safety_cover = vec![false; n_lines + 2];
+        for c in &masked.comments {
+            let span = c.text.matches('\n').count();
+            let has_safety = c.text.contains("SAFETY") || c.text.contains("# Safety");
+            for l in c.line..=(c.line + span).min(n_lines) {
+                comment_cover[l] = true;
+                if has_safety {
+                    safety_cover[l] = true;
+                }
+            }
+        }
+
+        // Normalize so `/tests/` matches whether the relative path is
+        // `tests/foo.rs` or `rust/tests/foo.rs`, on any separator.
+        let p = format!("/{}", rel_path.replace('\\', "/"));
+        let lib_code = !(p.contains("/tests/")
+            || p.contains("/benches/")
+            || p.contains("/examples/")
+            || p.ends_with("/main.rs"));
+        let decoder_file =
+            p.ends_with("data/shard/format.rs") || p.ends_with("coordinator/reactor/sys.rs");
+        let pool_file = p.ends_with("runtime/pool.rs");
+
+        let mut ctx = FileContext {
+            code: masked.code,
+            lines,
+            starts,
+            comments: masked.comments,
+            comment_cover,
+            safety_cover,
+            test_line: vec![false; n_lines + 2],
+            lib_code,
+            decoder_file,
+            pool_file,
+        };
+        ctx.mark_test_spans();
+        ctx
+    }
+
+    /// Mark every line belonging to a `#[cfg(test)]` item. The span
+    /// runs from the attribute to the matching `}` of the first brace
+    /// that follows it (or the first top-level `;` for a braceless
+    /// item). Brace matching on masked code is exact: comment and
+    /// string braces are already blanked.
+    fn mark_test_spans(&mut self) {
+        let bytes = self.code.as_bytes();
+        let n_lines = self.lines.len();
+        let occurrences: Vec<usize> = self
+            .code
+            .match_indices("#[cfg(test)]")
+            .map(|(off, _)| off)
+            .collect();
+        for off in occurrences {
+            let start_line = line_of(&self.starts, off);
+            let mut i = off + "#[cfg(test)]".len();
+            let mut end_line = start_line;
+            // Find the item's first `{` or a terminating `;`.
+            while i < bytes.len() {
+                match bytes[i] {
+                    b'{' => {
+                        let mut depth = 1usize;
+                        i += 1;
+                        while i < bytes.len() && depth > 0 {
+                            match bytes[i] {
+                                b'{' => depth += 1,
+                                b'}' => depth -= 1,
+                                _ => {}
+                            }
+                            i += 1;
+                        }
+                        end_line = line_of(&self.starts, i.saturating_sub(1));
+                        break;
+                    }
+                    b';' => {
+                        end_line = line_of(&self.starts, i);
+                        break;
+                    }
+                    _ => i += 1,
+                }
+            }
+            if i >= bytes.len() {
+                end_line = n_lines;
+            }
+            for l in start_line..=end_line.min(n_lines) {
+                self.test_line[l] = true;
+            }
+        }
+    }
+
+    fn masked_line(&self, l: usize) -> &str {
+        if l >= 1 && l <= self.lines.len() {
+            &self.lines[l - 1]
+        } else {
+            ""
+        }
+    }
+
+    /// The `safety-comment` satisfaction walk: a SAFETY comment on the
+    /// `unsafe` line itself, or reachable upward through lines that are
+    /// comment-only, blank, or attribute-only. The first code line
+    /// stops the walk.
+    fn safety_reachable(&self, line: usize) -> bool {
+        if self.safety_cover[line] {
+            return true;
+        }
+        let mut l = line;
+        while l > 1 {
+            l -= 1;
+            if self.safety_cover[l] {
+                return true;
+            }
+            let t = self.masked_line(l).trim();
+            let pass_through = t.is_empty() || t.starts_with("#[") || t.starts_with("#!");
+            if !pass_through {
+                return false;
+            }
+        }
+        false
+    }
+}
+
+/// Run every rule over one file. `rel_path` is workspace-relative with
+/// `/` separators (used only for exemption matching and messages —
+/// the caller prefixes it onto findings when rendering).
+pub fn check_file(rel_path: &str, src: &str) -> FileAnalysis {
+    let ctx = FileContext::new(rel_path, src);
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut waivers: Vec<Waiver> = Vec::new();
+
+    // ---- waiver-syntax: parse every ANALYZE-ALLOW comment first ----
+    // A waiver must *begin* its comment (after doc-comment sigils and
+    // whitespace); a mid-prose mention of the marker is documentation,
+    // not a waiver, and is ignored entirely.
+    for c in &ctx.comments {
+        let t = c.text.trim_start_matches(['/', '!', '*', ' ', '\t']);
+        if t.starts_with("ANALYZE-ALLOW") {
+            match parse_waiver(t) {
+                Ok((rule, reason)) => waivers.push(Waiver {
+                    line: c.line,
+                    rule,
+                    reason,
+                    used: false,
+                }),
+                Err(why) => findings.push(Finding {
+                    rule: Rule::WaiverSyntax,
+                    line: c.line,
+                    message: format!("malformed ANALYZE-ALLOW waiver: {why}"),
+                }),
+            }
+        }
+    }
+
+    // ---- safety-comment: every `unsafe` needs a reachable SAFETY ----
+    let mut flagged_lines: Vec<usize> = Vec::new();
+    for (off, _) in ctx.code.match_indices("unsafe") {
+        if !on_word_boundary(&ctx.code, off, "unsafe") {
+            continue;
+        }
+        let line = line_of(&ctx.starts, off);
+        if flagged_lines.contains(&line) {
+            continue; // one finding per line even if `unsafe` repeats
+        }
+        if !ctx.safety_reachable(line) {
+            flagged_lines.push(line);
+            findings.push(Finding {
+                rule: Rule::SafetyComment,
+                line,
+                message: "`unsafe` without a preceding SAFETY comment".to_string(),
+            });
+        }
+    }
+
+    // ---- thread-spawn: raw thread primitives live in the pool only ----
+    if ctx.lib_code && !ctx.pool_file {
+        for pat in ["thread::spawn", "thread::scope", "thread::Builder"] {
+            for (off, _) in ctx.code.match_indices(pat) {
+                if !on_word_boundary(&ctx.code, off, pat) {
+                    continue;
+                }
+                let line = line_of(&ctx.starts, off);
+                if ctx.test_line[line] {
+                    continue;
+                }
+                findings.push(Finding {
+                    rule: Rule::ThreadSpawn,
+                    line,
+                    message: format!(
+                        "`{pat}` outside runtime/pool.rs (route work through runtime::pool)"
+                    ),
+                });
+            }
+        }
+    }
+
+    // ---- no-unwrap: library code returns UdtError, it doesn't panic ----
+    if ctx.lib_code {
+        for pat in [".unwrap()", ".expect(", "panic!"] {
+            for (off, _) in ctx.code.match_indices(pat) {
+                // `.expect(`/`.unwrap()` start with `.` so the leading
+                // boundary is inherent; `panic!` needs the ident check
+                // (and its trailing `!`/`(` is a natural boundary).
+                let bytes = ctx.code.as_bytes();
+                if pat == "panic!" && off > 0 && is_ident(bytes[off - 1]) {
+                    continue;
+                }
+                let line = line_of(&ctx.starts, off);
+                if ctx.test_line[line] {
+                    continue;
+                }
+                findings.push(Finding {
+                    rule: Rule::NoUnwrap,
+                    line,
+                    message: format!("`{pat}` in library code (return a typed UdtError)"),
+                });
+            }
+        }
+    }
+
+    // ---- as-truncation: byte-level decoders must not narrow silently ----
+    if ctx.decoder_file {
+        for pat in ["as u8", "as u16", "as u32", "as i8", "as i16", "as i32"] {
+            for (off, _) in ctx.code.match_indices(pat) {
+                if !on_word_boundary(&ctx.code, off, pat) {
+                    continue;
+                }
+                let line = line_of(&ctx.starts, off);
+                if ctx.test_line[line] {
+                    continue;
+                }
+                findings.push(Finding {
+                    rule: Rule::AsTruncation,
+                    line,
+                    message: format!("narrowing `{pat}` cast in a byte-level decoder"),
+                });
+            }
+        }
+    }
+
+    // ---- apply waivers: a waiver on line L covers L and L + 1 ----
+    findings.retain(|f| {
+        if f.rule == Rule::WaiverSyntax {
+            return true;
+        }
+        for w in waivers.iter_mut() {
+            if w.rule == f.rule.id() && (w.line == f.line || w.line + 1 == f.line) {
+                w.used = true;
+                return false;
+            }
+        }
+        true
+    });
+
+    findings.sort_by_key(|f| (f.line, f.rule.id()));
+    FileAnalysis { findings, waivers }
+}
+
+/// Parse a comment that begins with the waiver marker. Returns
+/// `(rule, reason)` or a diagnostic for the `waiver-syntax` finding.
+fn parse_waiver(text: &str) -> Result<(String, String), String> {
+    let rest = &text["ANALYZE-ALLOW".len()..];
+    let rest = match rest.strip_prefix('(') {
+        Some(r) => r,
+        None => return Err("expected `(` after ANALYZE-ALLOW".to_string()),
+    };
+    let close = match rest.find(')') {
+        Some(i) => i,
+        None => return Err("unclosed `(` in ANALYZE-ALLOW".to_string()),
+    };
+    let rule = rest[..close].trim().to_string();
+    if !WAIVABLE.contains(&rule.as_str()) {
+        return Err(format!(
+            "unknown or unwaivable rule `{rule}` (waivable: {})",
+            WAIVABLE.join(", ")
+        ));
+    }
+    let after = &rest[close + 1..];
+    let after = match after.trim_start().strip_prefix(':') {
+        Some(r) => r,
+        None => match after.strip_prefix(':') {
+            Some(r) => r,
+            None => return Err("expected `: reason` after ANALYZE-ALLOW(rule)".to_string()),
+        },
+    };
+    // Reason runs to end-of-line: a waiver inside a multi-line block
+    // comment covers its own line, not the whole comment.
+    let reason = after.lines().next().unwrap_or("").trim().to_string();
+    if reason.is_empty() {
+        return Err("empty reason in ANALYZE-ALLOW waiver".to_string());
+    }
+    Ok((rule, reason))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn findings_of(path: &str, src: &str) -> Vec<(String, usize)> {
+        check_file(path, src)
+            .findings
+            .iter()
+            .map(|f| (f.rule.id().to_string(), f.line))
+            .collect()
+    }
+
+    #[test]
+    fn undocumented_unsafe_is_flagged_documented_is_not() {
+        let bad = "fn f() {\n    unsafe { g() }\n}\n";
+        assert_eq!(findings_of("src/a.rs", bad), vec![("safety-comment".into(), 2)]);
+        let good = "fn f() {\n    // SAFETY: g has no preconditions here\n    unsafe { g() }\n}\n";
+        assert!(findings_of("src/a.rs", good).is_empty());
+    }
+
+    #[test]
+    fn safety_walk_passes_attributes_blanks_and_doc_comments() {
+        let src = "/// Does a thing.\n///\n/// # Safety\n/// caller upholds X\n#[inline]\npub unsafe fn f() {}\n";
+        assert!(findings_of("src/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn safety_walk_stops_at_code() {
+        let src = "// SAFETY: stale, detached\nlet x = 1;\nunsafe { g() }\n";
+        assert_eq!(findings_of("src/a.rs", src), vec![("safety-comment".into(), 3)]);
+    }
+
+    #[test]
+    fn thread_spawn_flagged_outside_pool_only() {
+        let src = "fn f() { std::thread::spawn(|| {}); }\n";
+        assert_eq!(findings_of("src/coordinator/x.rs", src), vec![("thread-spawn".into(), 1)]);
+        assert!(findings_of("src/runtime/pool.rs", src).is_empty());
+        assert!(findings_of("tests/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_flagged_in_lib_exempt_in_tests_benches_main_and_cfg_test() {
+        let src = "fn f() { x.unwrap(); }\n";
+        assert_eq!(findings_of("src/a.rs", src), vec![("no-unwrap".into(), 1)]);
+        assert!(findings_of("tests/a.rs", src).is_empty());
+        assert!(findings_of("benches/a.rs", src).is_empty());
+        assert!(findings_of("src/main.rs", src).is_empty());
+        let gated = "fn f() -> Option<u8> { None }\n#[cfg(test)]\nmod tests {\n    fn g() { super::f().unwrap(); }\n}\n";
+        assert!(findings_of("src/a.rs", gated).is_empty());
+    }
+
+    #[test]
+    fn expect_and_panic_are_flagged_but_not_lookalikes() {
+        let src = "fn f() { x.expect(\"boom\"); panic!(\"no\"); }\n";
+        let got = findings_of("src/a.rs", src);
+        assert_eq!(got.len(), 2);
+        let fine = "fn f() { p.expect_lit(\"x\"); set_panic_on = 1; }\n";
+        assert!(findings_of("src/a.rs", fine).is_empty());
+    }
+
+    #[test]
+    fn as_truncation_only_in_decoder_files_and_not_widening() {
+        let src = "fn f(x: u64) -> u32 { x as u32 }\n";
+        assert_eq!(
+            findings_of("src/data/shard/format.rs", src),
+            vec![("as-truncation".into(), 1)]
+        );
+        assert!(findings_of("src/tree/builder.rs", src).is_empty());
+        let wide = "fn f(x: u8) -> usize { x as usize }\n";
+        assert!(findings_of("src/data/shard/format.rs", wide).is_empty());
+    }
+
+    #[test]
+    fn waivers_cover_same_and_next_line_and_are_marked_used() {
+        let trailing =
+            "fn f() { x.unwrap(); } // ANALYZE-ALLOW(no-unwrap): invariant documented here\n";
+        let r = check_file("src/a.rs", trailing);
+        assert!(r.findings.is_empty());
+        assert!(r.waivers[0].used);
+        let above = "// ANALYZE-ALLOW(no-unwrap): invariant documented here\nfn f() { x.unwrap(); }\n";
+        let r = check_file("src/a.rs", above);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        // Two lines below: out of the waiver window.
+        let far = "// ANALYZE-ALLOW(no-unwrap): too far away\nfn g() {}\nfn f() { x.unwrap(); }\n";
+        let r = check_file("src/a.rs", far);
+        assert_eq!(r.findings.len(), 1);
+        assert!(!r.waivers[0].used);
+    }
+
+    #[test]
+    fn malformed_waivers_are_findings() {
+        for bad in [
+            "fn f() {} // ANALYZE-ALLOW: no parens\n",
+            "fn f() {} // ANALYZE-ALLOW(not-a-rule): reason\n",
+            "fn f() {} // ANALYZE-ALLOW(no-unwrap):\n",
+            "fn f() {} // ANALYZE-ALLOW(waiver-syntax): cannot waive the waiver rule\n",
+        ] {
+            let got = findings_of("src/a.rs", bad);
+            assert_eq!(got.len(), 1, "{bad:?} -> {got:?}");
+            assert_eq!(got[0].0, "waiver-syntax");
+        }
+    }
+
+    #[test]
+    fn violations_inside_string_literals_are_invisible() {
+        let src = "fn f() { log(\"unsafe x.unwrap() panic! thread::spawn\"); }\n";
+        assert!(findings_of("src/a.rs", src).is_empty());
+    }
+}

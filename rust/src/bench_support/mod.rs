@@ -33,6 +33,7 @@ impl Measurement {
             return f64::NAN;
         }
         let mut sorted = self.runs.clone();
+        // ANALYZE-ALLOW(no-unwrap): run times come from Duration::as_secs_f64, never NaN
         sorted.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
         let rank = p.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
         let lo = rank.floor() as usize;

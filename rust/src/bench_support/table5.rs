@@ -22,6 +22,7 @@ pub struct Point {
 /// The workload spec (credit-card-fraud shape, numeric feature 0).
 fn workload_spec(n_rows: usize) -> SynthSpec {
     let mut spec = registry::find("credit_card_fraud")
+        // ANALYZE-ALLOW(no-unwrap): "credit_card_fraud" is a registry constant
         .expect("registered")
         .spec
         .clone();

@@ -41,6 +41,36 @@ mod nr {
     pub const PRLIMIT64: i64 = 261;
 }
 
+// Compile-time pins on the syscall-number tables: a wrong number here
+// doesn't fail cleanly, it *runs a different syscall* with whatever is
+// in the argument registers. These duplicate the UAPI values on
+// purpose — an accidental edit to either copy breaks the build instead
+// of the kernel boundary. (Sources: arch/x86/entry/syscalls/
+// syscall_64.tbl and include/uapi/asm-generic/unistd.h.)
+#[cfg(target_arch = "x86_64")]
+const _: () = {
+    assert!(nr::READ == 0);
+    assert!(nr::WRITE == 1);
+    assert!(nr::CLOSE == 3);
+    assert!(nr::EPOLL_CTL == 233);
+    assert!(nr::EPOLL_PWAIT == 281);
+    assert!(nr::EPOLL_CREATE1 == 291);
+    assert!(nr::PIPE2 == 293);
+    assert!(nr::PRLIMIT64 == 302);
+};
+
+#[cfg(target_arch = "aarch64")]
+const _: () = {
+    assert!(nr::EPOLL_CREATE1 == 20);
+    assert!(nr::EPOLL_CTL == 21);
+    assert!(nr::EPOLL_PWAIT == 22);
+    assert!(nr::CLOSE == 57);
+    assert!(nr::PIPE2 == 59);
+    assert!(nr::READ == 63);
+    assert!(nr::WRITE == 64);
+    assert!(nr::PRLIMIT64 == 261);
+};
+
 /// Issue a raw 6-argument syscall (unused trailing arguments are 0).
 ///
 /// # Safety
@@ -90,6 +120,7 @@ unsafe fn syscall6(n: i64, a1: i64, a2: i64, a3: i64, a4: i64, a5: i64, a6: i64)
 /// Map the kernel's `-errno` return convention to `io::Result`.
 fn check(ret: i64) -> io::Result<i64> {
     if ret < 0 {
+        // ANALYZE-ALLOW(as-truncation): kernel errnos are small positive ints, always in i32 range
         Err(io::Error::from_raw_os_error((-ret) as i32))
     } else {
         Ok(ret)
@@ -134,6 +165,27 @@ impl EpollEvent {
     }
 }
 
+// Compile-time layout pins: `epoll_ctl`/`epoll_pwait` receive this
+// struct by raw pointer, so its exact size and field offsets *are* the
+// ABI. If a future edit drops the packed attribute (or a toolchain
+// ever lays repr(C) out differently), the build fails here instead of
+// the kernel reading garbage.
+#[cfg(target_arch = "x86_64")]
+const _: () = {
+    assert!(std::mem::size_of::<EpollEvent>() == 12);
+    assert!(std::mem::align_of::<EpollEvent>() == 1);
+    assert!(std::mem::offset_of!(EpollEvent, events) == 0);
+    assert!(std::mem::offset_of!(EpollEvent, data) == 4);
+};
+
+#[cfg(target_arch = "aarch64")]
+const _: () = {
+    assert!(std::mem::size_of::<EpollEvent>() == 16);
+    assert!(std::mem::align_of::<EpollEvent>() == 8);
+    assert!(std::mem::offset_of!(EpollEvent, events) == 0);
+    assert!(std::mem::offset_of!(EpollEvent, data) == 8);
+};
+
 /// An owned epoll instance (closed on drop).
 pub struct Epoll {
     fd: i32,
@@ -141,7 +193,9 @@ pub struct Epoll {
 
 impl Epoll {
     pub fn new() -> io::Result<Epoll> {
+        // SAFETY: epoll_create1 takes no pointers; flags is a valid bitset.
         let fd = check(unsafe { syscall6(nr::EPOLL_CREATE1, EPOLL_CLOEXEC, 0, 0, 0, 0, 0) })?;
+        // ANALYZE-ALLOW(as-truncation): the kernel allocates fds in i32 range by definition
         Ok(Epoll { fd: fd as i32 })
     }
 
@@ -158,6 +212,8 @@ impl Epoll {
     /// Deregister `fd` (closing an fd deregisters it implicitly; this is
     /// for keeping a still-open fd out of the interest set).
     pub fn del(&self, fd: i32) -> io::Result<()> {
+        // SAFETY: EPOLL_CTL_DEL passes no event pointer (the kernel
+        // ignores that argument); both fds are plain integers.
         check(unsafe {
             syscall6(nr::EPOLL_CTL, self.fd as i64, EPOLL_CTL_DEL, fd as i64, 0, 0, 0)
         })?;
@@ -166,6 +222,9 @@ impl Epoll {
 
     fn ctl(&self, op: i64, fd: i32, events: u32, token: u64) -> io::Result<()> {
         let mut ev = EpollEvent { events, data: token };
+        // SAFETY: `ev` is a live, layout-pinned EpollEvent (const
+        // asserts above) that outlives the call; the kernel reads it
+        // before returning and keeps no reference.
         check(unsafe {
             syscall6(
                 nr::EPOLL_CTL,
@@ -186,6 +245,9 @@ impl Epoll {
     /// leading entries of `events` were filled.
     pub fn wait(&self, events: &mut [EpollEvent], timeout_ms: i32) -> io::Result<usize> {
         loop {
+            // SAFETY: the buffer pointer/length come from a live
+            // exclusive slice of layout-pinned EpollEvents; the kernel
+            // writes at most `events.len()` entries into it.
             let ret = unsafe {
                 syscall6(
                     nr::EPOLL_PWAIT,
@@ -208,6 +270,8 @@ impl Epoll {
 
 impl Drop for Epoll {
     fn drop(&mut self) {
+        // SAFETY: `self.fd` is owned by this struct and closed exactly
+        // once, here; close takes no pointers.
         unsafe {
             syscall6(nr::CLOSE, self.fd as i64, 0, 0, 0, 0, 0);
         }
@@ -226,6 +290,8 @@ impl PipeWriter {
     /// is already pending, which is all a waker needs to guarantee.
     pub fn wake(&self) {
         let byte = [1u8];
+        // SAFETY: writes exactly one byte from a live local buffer to
+        // an fd this struct owns; the result is deliberately ignored.
         unsafe {
             syscall6(nr::WRITE, self.fd as i64, byte.as_ptr() as i64, 1, 0, 0, 0);
         }
@@ -234,6 +300,8 @@ impl PipeWriter {
 
 impl Drop for PipeWriter {
     fn drop(&mut self) {
+        // SAFETY: `self.fd` is owned by this struct and closed exactly
+        // once, here; close takes no pointers.
         unsafe {
             syscall6(nr::CLOSE, self.fd as i64, 0, 0, 0, 0, 0);
         }
@@ -251,6 +319,8 @@ pub struct WakePipe {
 impl WakePipe {
     pub fn new() -> io::Result<WakePipe> {
         let mut fds = [0i32; 2];
+        // SAFETY: pipe2 writes exactly two i32 fds into the live
+        // two-element array passed by pointer.
         check(unsafe {
             syscall6(
                 nr::PIPE2,
@@ -282,6 +352,8 @@ impl WakePipe {
     pub fn drain(&self) {
         let mut buf = [0u8; 64];
         loop {
+            // SAFETY: reads at most `buf.len()` bytes into a live
+            // exclusive local buffer from an fd this struct owns.
             let ret = unsafe {
                 syscall6(
                     nr::READ,
@@ -302,6 +374,8 @@ impl WakePipe {
 
 impl Drop for WakePipe {
     fn drop(&mut self) {
+        // SAFETY: `read_fd` is owned by this struct and closed exactly
+        // once, here (the writer end closes in PipeWriter's drop).
         unsafe {
             syscall6(nr::CLOSE, self.read_fd as i64, 0, 0, 0, 0, 0);
         }
@@ -316,12 +390,22 @@ struct RLimit64 {
     max: u64,
 }
 
+// Same ABI pin as EpollEvent: prlimit64 reads/writes this struct by
+// raw pointer on every architecture, 16 bytes, soft limit first.
+const _: () = {
+    assert!(std::mem::size_of::<RLimit64>() == 16);
+    assert!(std::mem::offset_of!(RLimit64, cur) == 0);
+    assert!(std::mem::offset_of!(RLimit64, max) == 8);
+};
+
 /// Raise this process's soft open-file limit to its hard limit and
 /// return the resulting soft limit. The serve bench calls this before
 /// opening 10k+ client sockets; failure is non-fatal (the bench then
 /// reports how many connections it actually achieved).
 pub fn raise_nofile_limit() -> io::Result<u64> {
     let mut old = RLimit64 { cur: 0, max: 0 };
+    // SAFETY: null new-limit pointer (read-only query); `old` is a
+    // live, layout-pinned RLimit64 the kernel fills in.
     check(unsafe {
         syscall6(
             nr::PRLIMIT64,
@@ -340,6 +424,8 @@ pub fn raise_nofile_limit() -> io::Result<u64> {
         cur: old.max,
         max: old.max,
     };
+    // SAFETY: `new` is a live, layout-pinned RLimit64 the kernel reads;
+    // the old-limit pointer is null (we already have it).
     check(unsafe {
         syscall6(
             nr::PRLIMIT64,

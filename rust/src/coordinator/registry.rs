@@ -132,6 +132,19 @@ impl ModelRegistry {
         ModelRegistry::default()
     }
 
+    /// All registry methods go through these two accessors, which
+    /// recover from lock poisoning ([`crate::util::sync`]): the guarded
+    /// sections are pure map/name bookkeeping that never leaves the
+    /// state half-updated, and propagating a `PoisonError` here would
+    /// take down every serving thread over one panicked request.
+    fn read_state(&self) -> std::sync::RwLockReadGuard<'_, RegistryState> {
+        crate::util::sync::read(&self.state)
+    }
+
+    fn write_state(&self) -> std::sync::RwLockWriteGuard<'_, RegistryState> {
+        crate::util::sync::write(&self.state)
+    }
+
     /// Compile and register a model under `name` (replacing any previous
     /// model of that name). The first load becomes the default target
     /// for unaddressed requests. A name may not shadow an existing alias
@@ -144,7 +157,7 @@ impl ModelRegistry {
         // Compile outside the lock (it can be expensive); validate and
         // commit atomically under it.
         let entry = Arc::new(ModelEntry::new(name, saved)?);
-        let mut st = self.state.write().unwrap();
+        let mut st = self.write_state();
         if st.aliases.contains_key(name) {
             return Err(UdtError::invalid_config(format!(
                 "model name `{name}` collides with an existing alias"
@@ -161,7 +174,7 @@ impl ModelRegistry {
     /// a model of that name existed. A removed default falls back to the
     /// first remaining name.
     pub fn unload(&self, name: &str) -> bool {
-        let mut st = self.state.write().unwrap();
+        let mut st = self.write_state();
         let existed = st.models.remove(name).is_some();
         if existed {
             st.aliases.retain(|_, target| target.as_str() != name);
@@ -176,7 +189,7 @@ impl ModelRegistry {
     /// An alias may not shadow a loaded model's name — `get` resolves
     /// canonical names first, so such an alias would be silently dead.
     pub fn alias(&self, alias: &str, target: &str) -> Result<()> {
-        let mut st = self.state.write().unwrap();
+        let mut st = self.write_state();
         if !st.models.contains_key(target) {
             return Err(UdtError::predict(format!("unknown model `{target}`")));
         }
@@ -195,7 +208,7 @@ impl ModelRegistry {
     /// first-remaining-name fallback even when the default was set via
     /// an alias.
     pub fn set_default(&self, name: &str) -> Result<()> {
-        let mut st = self.state.write().unwrap();
+        let mut st = self.write_state();
         let canonical = st.resolve(name)?.name().to_string();
         st.default_name = Some(canonical);
         Ok(())
@@ -203,7 +216,7 @@ impl ModelRegistry {
 
     /// Name unaddressed requests currently resolve to.
     pub fn default_name(&self) -> Option<String> {
-        self.state.read().unwrap().default_name.clone()
+        self.read_state().default_name.clone()
     }
 
     /// Resolve a request's model reference: a name, an alias, or `None`
@@ -212,7 +225,7 @@ impl ModelRegistry {
     /// typed predict errors (they surface as protocol `error` responses,
     /// not panics).
     pub fn get(&self, name: Option<&str>) -> Result<Arc<ModelEntry>> {
-        let st = self.state.read().unwrap();
+        let st = self.read_state();
         let name = match name {
             Some(n) => n,
             None => st
@@ -225,14 +238,12 @@ impl ModelRegistry {
 
     /// Loaded model names (canonical, sorted; aliases not included).
     pub fn names(&self) -> Vec<String> {
-        self.state.read().unwrap().models.keys().cloned().collect()
+        self.read_state().models.keys().cloned().collect()
     }
 
     /// Alias table as `(alias, target)` pairs, sorted by alias.
     pub fn aliases_list(&self) -> Vec<(String, String)> {
-        self.state
-            .read()
-            .unwrap()
+        self.read_state()
             .aliases
             .iter()
             .map(|(a, t)| (a.clone(), t.clone()))
@@ -241,15 +252,15 @@ impl ModelRegistry {
 
     /// Snapshot of every loaded entry (stats reporting).
     pub fn entries(&self) -> Vec<Arc<ModelEntry>> {
-        self.state.read().unwrap().models.values().cloned().collect()
+        self.read_state().models.values().cloned().collect()
     }
 
     pub fn len(&self) -> usize {
-        self.state.read().unwrap().models.len()
+        self.read_state().models.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.state.read().unwrap().models.is_empty()
+        self.read_state().models.is_empty()
     }
 }
 

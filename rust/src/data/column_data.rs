@@ -250,6 +250,7 @@ impl ColumnData {
                 .map(|r| (vals[r], r as u32))
                 .collect(),
         };
+        // ANALYZE-ALLOW(no-unwrap): numeric cells are non-NaN (NaN ingests as Missing)
         pairs.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
         (
             pairs.iter().map(|p| p.1).collect(),
@@ -490,6 +491,7 @@ fn append_bits(dst: &mut Vec<u64>, dst_len: usize, src: &[u64], n: usize) {
     let low = 64 - shift;
     let mut rem = n;
     for &w in src {
+        // ANALYZE-ALLOW(no-unwrap): caller seeds dst with a partial word when shift != 0
         *dst.last_mut().expect("shift != 0 implies a partial word") |= w << shift;
         if rem > low {
             dst.push(w >> low);

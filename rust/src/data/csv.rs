@@ -477,6 +477,7 @@ pub fn load_csv_str(name: &str, text: &str, opts: &CsvOptions) -> Result<Dataset
         .zip(parsed.columns)
         .map(|(n, d)| Column::from_data(n, d))
         .collect();
+    // ANALYZE-ALLOW(no-unwrap): dataset-mode parse always produces a labels column
     let labels = parsed.labels.expect("dataset parse always yields labels");
     let mut ds = Dataset::new(name, columns, labels, parsed.interner)?;
     ds.class_names = std::sync::Arc::new(parsed.class_names);

@@ -54,6 +54,7 @@ impl Labels {
     pub fn class(&self, row: usize) -> u16 {
         match self {
             Labels::Class { ids, .. } => ids[row],
+            // ANALYZE-ALLOW(no-unwrap): accessor misuse across task kinds is an internal bug
             Labels::Reg { .. } => panic!("class() on regression labels"),
         }
     }
@@ -62,6 +63,7 @@ impl Labels {
     pub fn target(&self, row: usize) -> f64 {
         match self {
             Labels::Reg { values } => values[row],
+            // ANALYZE-ALLOW(no-unwrap): accessor misuse across task kinds is an internal bug
             Labels::Class { .. } => panic!("target() on classification labels"),
         }
     }

@@ -232,6 +232,7 @@ impl ShardedDataset {
                 .drain()
                 .map(|(bits, n)| (f64::from_bits(bits), n))
                 .collect();
+            // ANALYZE-ALLOW(no-unwrap): keys are bits of non-NaN cells (NaN ingests as Missing)
             runs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
             edges.push(quantile_bins_from_runs(&runs, max_bins).map(|rb| rb.edges));
         }

@@ -144,11 +144,13 @@ impl<'a> Cur<'a> {
 
     fn u32(&mut self, what: &str) -> Result<u32> {
         let b = self.take(4, what)?;
+        // ANALYZE-ALLOW(no-unwrap): take(4) pins the slice length for try_into
         Ok(u32::from_le_bytes(b.try_into().unwrap()))
     }
 
     fn u64(&mut self, what: &str) -> Result<u64> {
         let b = self.take(8, what)?;
+        // ANALYZE-ALLOW(no-unwrap): take(8) pins the slice length for try_into
         Ok(u64::from_le_bytes(b.try_into().unwrap()))
     }
 
@@ -163,6 +165,7 @@ impl<'a> Cur<'a> {
     fn f64s(&mut self, n: usize, what: &str) -> Result<Vec<f64>> {
         let b = self.take(n * 8, what)?;
         Ok(b.chunks_exact(8)
+            // ANALYZE-ALLOW(no-unwrap): chunks_exact(8) pins the chunk length
             .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
@@ -170,6 +173,7 @@ impl<'a> Cur<'a> {
     fn u64s(&mut self, n: usize, what: &str) -> Result<Vec<u64>> {
         let b = self.take(n * 8, what)?;
         Ok(b.chunks_exact(8)
+            // ANALYZE-ALLOW(no-unwrap): chunks_exact(8) pins the chunk length
             .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
@@ -177,6 +181,7 @@ impl<'a> Cur<'a> {
     fn u32s(&mut self, n: usize, what: &str) -> Result<Vec<u32>> {
         let b = self.take(n * 4, what)?;
         Ok(b.chunks_exact(4)
+            // ANALYZE-ALLOW(no-unwrap): chunks_exact(4) pins the chunk length
             .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
@@ -184,6 +189,7 @@ impl<'a> Cur<'a> {
     fn u16s(&mut self, n: usize, what: &str) -> Result<Vec<u16>> {
         let b = self.take(n * 2, what)?;
         Ok(b.chunks_exact(2)
+            // ANALYZE-ALLOW(no-unwrap): chunks_exact(2) pins the chunk length
             .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
@@ -385,7 +391,9 @@ impl BinIdLane {
     #[inline]
     pub fn get(&self, i: usize) -> Option<u32> {
         match self {
+            // ANALYZE-ALLOW(as-truncation): u8 -> u32 widens, it cannot truncate
             BinIdLane::U8(v) => (v[i] != NO_BIN_U8).then(|| v[i] as u32),
+            // ANALYZE-ALLOW(as-truncation): u16 -> u32 widens, it cannot truncate
             BinIdLane::U16(v) => (v[i] != NO_BIN_U16).then(|| v[i] as u32),
         }
     }

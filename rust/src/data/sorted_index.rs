@@ -91,6 +91,7 @@ impl SortedIndex {
                 idx.sort_by(|&a, &b| {
                     values[a as usize]
                         .partial_cmp(&values[b as usize])
+                        // ANALYZE-ALLOW(no-unwrap): surfaces NaN targets loudly; total_cmp would reorder ±0.0 ties and change tree identity
                         .unwrap()
                         .then(a.cmp(&b))
                 });

@@ -270,6 +270,7 @@ fn generate(spec: &SynthSpec, seed: u64) -> Dataset {
         .map(|(i, cells)| Column::new(format!("f{i}"), cells))
         .collect();
     let mut ds = Dataset::new(spec.name.clone(), columns, labels, interner)
+        // ANALYZE-ALLOW(no-unwrap): the generator emits well-formed columns by construction
         .expect("synthetic dataset is always well-formed");
     if !spec.is_regression() {
         ds.class_names =

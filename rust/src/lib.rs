@@ -65,6 +65,7 @@
 //! }
 //! ```
 
+pub mod analysis;
 pub mod bench_support;
 pub mod config;
 pub mod coordinator;

@@ -12,6 +12,8 @@
 //!   serve        TCP prediction server over a registry of compiled
 //!                models (`--model name=path` repeatable)
 //!   artifacts    inspect the AOT artifact manifest
+//!   analyze      run the udt-analyze source lint (unsafe hygiene,
+//!                thread discipline, unwrap audit, decoder casts)
 //!
 //! Run `udt <subcommand> --help` for options. Every training command
 //! accepts `--set key=value` overrides (e.g. `--set tune.min_split_steps=50`
@@ -55,6 +57,7 @@ fn run(args: &[String]) -> Result<()> {
         "bench-suite" => cmd_bench_suite(rest),
         "serve" => cmd_serve(rest),
         "artifacts" => cmd_artifacts(rest),
+        "analyze" => cmd_analyze(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -79,7 +82,9 @@ fn print_usage() {
            bench-selection  Table 5: generic vs superfast on one feature\n\
            bench-suite      Table 6/7 rows over the dataset registry\n\
            serve            TCP server over a registry of compiled models\n\
-           artifacts        list AOT artifacts and their shapes\n"
+           artifacts        list AOT artifacts and their shapes\n\
+           analyze          source lint: SAFETY comments, thread discipline,\n\
+                            unwrap audit, decoder casts (non-zero on findings)\n"
     );
 }
 
@@ -771,6 +776,22 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         serve_cfg.max_connections
     );
     server.serve_with(serve_cfg, &addr, |bound| println!("bound {bound}"))
+}
+
+fn cmd_analyze(raw: &[String]) -> Result<()> {
+    let cmd = Command::new("analyze", "run the udt-analyze source lint over the tree")
+        .opt("root", "workspace or package root to scan", Some("."));
+    let a = cmd.parse(raw)?;
+    let root = a.get_or("root", ".");
+    let report = udt::analysis::analyze_tree(std::path::Path::new(&root))?;
+    print!("{}", report.render());
+    let n = report.total_findings();
+    if n > 0 {
+        return Err(UdtError::Runtime(format!(
+            "udt-analyze: {n} unwaived finding(s)"
+        )));
+    }
+    Ok(())
 }
 
 fn cmd_artifacts(raw: &[String]) -> Result<()> {

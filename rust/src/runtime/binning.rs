@@ -71,10 +71,9 @@ pub fn quantile_bins_from_runs(runs: &[(f64, usize)], max_bins: usize) -> Option
             current_bin += 1;
             in_bin = 0;
         }
-        if in_bin == 0 {
-            edges.push(v);
-        } else {
-            *edges.last_mut().unwrap() = v;
+        match edges.last_mut() {
+            Some(last) if in_bin > 0 => *last = v,
+            _ => edges.push(v),
         }
         bin_of_run.push(current_bin);
         in_bin += run;

@@ -50,6 +50,21 @@
 //! and waits under that same lock until `running == 0`. After that, no
 //! worker holds or can ever re-acquire the reference, so it never
 //! outlives the frame it points into.
+//!
+//! # Race witness (`check` / [`witness`])
+//!
+//! In debug builds and under `--cfg udt_check`, every result slot
+//! carries a shadow-ownership tag driven by atomic CAS: an executor
+//! must move a slot FREE → CLAIMED before taking its item and
+//! CLAIMED → DONE after writing its result, and the submitter asserts
+//! DONE before reading. Any double-claim, double-commit or
+//! read-before-commit — i.e. any violation of the exclusivity argument
+//! the `unsafe` blocks below rest on — aborts with a diagnostic
+//! instead of silently corrupting. A seeded yield injector
+//! ([`witness::set_yield_seed`]) perturbs the claim/park/retire
+//! protocol points deterministically so stress tests widen the
+//! interleavings they cover. Release builds compile all of it to
+//! nothing (the tag set is a ZST there).
 
 use std::any::Any;
 use std::cell::UnsafeCell;
@@ -124,6 +139,189 @@ pub fn stats() -> PoolStats {
     }
 }
 
+/// Stable identifiers for the pool's protocol points, fed to the
+/// yield injector so one seed reproduces one interleaving schedule.
+/// Ungated: point names are part of the protocol's vocabulary even
+/// when the injector compiles to a no-op.
+pub(crate) mod protocol_point {
+    /// An executor is about to bump the batch cursor.
+    pub const CLAIM: u64 = 1;
+    /// Between claiming an index and taking its item.
+    pub const TAKE: u64 = 2;
+    /// Between computing a result and writing its slot.
+    pub const COMMIT: u64 = 3;
+    /// A pool worker picked an entry and is about to run the job.
+    pub const PICKUP: u64 = 4;
+    /// The submitter is about to dequeue and drain the batch.
+    pub const RETIRE: u64 = 5;
+    /// The submitter is about to push the entry onto the queue.
+    pub const SUBMIT: u64 = 6;
+}
+
+/// Dynamic race witness: shadow-ownership tags + seeded yield
+/// injection. Real in debug builds and under `--cfg udt_check`;
+/// compiled to no-ops (ZST tags, empty hooks) otherwise, so the
+/// release hot path pays nothing.
+#[cfg(any(debug_assertions, udt_check))]
+pub(crate) mod check {
+    use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+
+    const FREE: u8 = 0;
+    const CLAIMED: u8 = 1;
+    const DONE: u8 = 2;
+
+    /// One shadow tag per batch slot, mirroring the ownership the
+    /// cursor protocol is *supposed* to guarantee: FREE → CLAIMED
+    /// (executor takes the index) → DONE (result written). Every
+    /// transition is a CAS, so the first interleaving in which two
+    /// executors own one index trips a [`violation`] instead of a
+    /// silent double-write.
+    ///
+    /// All tag operations use `Relaxed` ordering **on purpose**: the
+    /// witness must not add acquire/release edges the real protocol
+    /// doesn't have, or it would synchronize racing threads and mask
+    /// under TSan exactly the bugs it exists to catch.
+    pub struct SlotTags(Vec<AtomicU8>);
+
+    impl SlotTags {
+        pub fn new(n: usize) -> SlotTags {
+            SlotTags((0..n).map(|_| AtomicU8::new(FREE)).collect())
+        }
+
+        /// FREE → CLAIMED; aborts on a double-claim.
+        pub fn claim(&self, i: usize) {
+            if let Err(seen) =
+                self.0[i].compare_exchange(FREE, CLAIMED, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                violation(&format!(
+                    "pool slot {i} double-claimed (tag {seen}, expected FREE): \
+                     two executors own one index"
+                ));
+            }
+        }
+
+        /// CLAIMED → DONE; aborts on a commit without a claim.
+        pub fn commit(&self, i: usize) {
+            if let Err(seen) =
+                self.0[i].compare_exchange(CLAIMED, DONE, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                violation(&format!(
+                    "pool slot {i} committed from tag {seen} (expected CLAIMED): \
+                     result written without ownership"
+                ));
+            }
+        }
+
+        /// Submitter-side read barrier: the batch retired, so every
+        /// slot must be DONE before its result is moved out.
+        pub fn assert_done(&self, i: usize) {
+            let seen = self.0[i].load(Ordering::Relaxed);
+            if seen != DONE {
+                violation(&format!(
+                    "pool batch retired with slot {i} at tag {seen} (expected DONE): \
+                     result read before commit"
+                ));
+            }
+        }
+    }
+
+    /// In production a violation means memory is already suspect, so
+    /// the only safe move is `abort`. Tests flip this to get a
+    /// catchable panic instead (the abort path is untestable
+    /// in-process).
+    static PANIC_ON_VIOLATION: AtomicBool = AtomicBool::new(false);
+
+    pub fn set_panic_on_violation(on: bool) {
+        PANIC_ON_VIOLATION.store(on, Ordering::Relaxed);
+    }
+
+    #[cold]
+    pub fn violation(msg: &str) -> ! {
+        if PANIC_ON_VIOLATION.load(Ordering::Relaxed) {
+            // ANALYZE-ALLOW(no-unwrap): failing loudly is this function's job; tests opt into panic over abort
+            panic!("udt_check violation: {msg}");
+        }
+        eprintln!("udt_check violation: {msg}");
+        std::process::abort();
+    }
+
+    /// Yield-injection seed; 0 (the default) disables injection.
+    static YIELD_SEED: AtomicU64 = AtomicU64::new(0);
+
+    pub fn set_yield_seed(seed: u64) {
+        YIELD_SEED.store(seed, Ordering::Relaxed);
+    }
+
+    thread_local! {
+        /// Per-thread protocol-point counter: makes the schedule a
+        /// deterministic function of (seed, thread history, point)
+        /// rather than of wall-clock timing.
+        static TICK: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+    }
+
+    fn splitmix64(mut z: u64) -> u64 {
+        z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Maybe yield at a protocol point (~1 in 5 visits when a seed is
+    /// set). Called at every claim/take/commit/pickup/retire/submit
+    /// site so a stress run explores interleavings the scheduler would
+    /// rarely produce on its own.
+    pub fn interleave(point: u64) {
+        let seed = YIELD_SEED.load(Ordering::Relaxed);
+        if seed == 0 {
+            return;
+        }
+        let tick = TICK.with(|c| {
+            let v = c.get().wrapping_add(1);
+            c.set(v);
+            v
+        });
+        let z = splitmix64(seed ^ tick.rotate_left(17) ^ point.rotate_left(48));
+        if z % 5 == 0 {
+            std::thread::yield_now();
+        }
+    }
+}
+
+/// Release stubs: same surface as the gated `check` module, all no-ops
+/// — `SlotTags` is a ZST, the hooks inline to nothing.
+#[cfg(not(any(debug_assertions, udt_check)))]
+pub(crate) mod check {
+    pub struct SlotTags;
+
+    impl SlotTags {
+        #[inline(always)]
+        pub fn new(_n: usize) -> SlotTags {
+            SlotTags
+        }
+        #[inline(always)]
+        pub fn claim(&self, _i: usize) {}
+        #[inline(always)]
+        pub fn commit(&self, _i: usize) {}
+        #[inline(always)]
+        pub fn assert_done(&self, _i: usize) {}
+    }
+
+    #[inline(always)]
+    pub fn set_panic_on_violation(_on: bool) {}
+    #[inline(always)]
+    pub fn set_yield_seed(_seed: u64) {}
+    #[inline(always)]
+    pub fn interleave(_point: u64) {}
+}
+
+/// Test-harness surface of the race witness (`tests/race_witness.rs`
+/// drives it): present in every build so test code compiles uniformly,
+/// functional only in debug / `--cfg udt_check` builds.
+#[doc(hidden)]
+pub mod witness {
+    pub use super::check::{set_panic_on_violation, set_yield_seed, SlotTags};
+}
+
 /// A cell written by exactly one executor (index ownership via the
 /// batch cursor) and read only after the batch retires.
 struct Slot<V>(UnsafeCell<Option<V>>);
@@ -158,6 +356,10 @@ struct BatchCore {
     running: AtomicUsize,
     /// First panic payload from any executor of this batch.
     panic: Mutex<Option<Box<dyn Any + Send + 'static>>>,
+    /// Shadow-ownership tags (debug / `--cfg udt_check` only; ZST in
+    /// release). Witnesses the index-exclusivity argument the unsafe
+    /// slot accesses rely on.
+    tags: check::SlotTags,
 }
 
 struct Entry {
@@ -225,6 +427,7 @@ fn ensure_workers() -> usize {
 }
 
 fn worker_loop() {
+    // ANALYZE-ALLOW(no-unwrap): no pool lock is ever held while user code runs (panic contract), so it cannot be poisoned
     let mut st = POOL.state.lock().unwrap();
     loop {
         let picked = st
@@ -239,17 +442,21 @@ fn worker_loop() {
             Some((core, job)) => {
                 core.running.fetch_add(1, Ordering::Relaxed);
                 drop(st);
+                check::interleave(protocol_point::PICKUP);
                 if let Err(payload) = catch_unwind(AssertUnwindSafe(job)) {
+                    // ANALYZE-ALLOW(no-unwrap): the panic mutex only guards a payload swap — no user code, never poisoned
                     let mut slot = core.panic.lock().unwrap();
                     if slot.is_none() {
                         *slot = Some(payload);
                     }
                 }
+                // ANALYZE-ALLOW(no-unwrap): no pool lock is ever held while user code runs (panic contract), so it cannot be poisoned
                 st = POOL.state.lock().unwrap();
                 core.running.fetch_sub(1, Ordering::Relaxed);
                 POOL.done_cv.notify_all();
             }
             None => {
+                // ANALYZE-ALLOW(no-unwrap): condvar wait re-acquires the never-poisoned pool lock
                 st = POOL.work_cv.wait(st).unwrap();
                 POOL.park_wakeups.fetch_add(1, Ordering::Relaxed);
             }
@@ -302,6 +509,7 @@ where
         extra_cap: workers - 1,
         running: AtomicUsize::new(0),
         panic: Mutex::new(None),
+        tags: check::SlotTags::new(n),
     });
 
     let job = {
@@ -312,17 +520,27 @@ where
             let mut scratch = make_scratch();
             let mut done = 0u64;
             loop {
+                check::interleave(protocol_point::CLAIM);
                 let start = core.cursor.fetch_add(core.block, Ordering::Relaxed);
                 if start >= core.n {
                     break;
                 }
                 let end = (start + core.block).min(core.n);
                 for i in start..end {
+                    core.tags.claim(i);
+                    check::interleave(protocol_point::TAKE);
                     // SAFETY: the fetch_add above handed start..end to
-                    // this executor exclusively.
+                    // this executor exclusively (CAS-witnessed by the
+                    // FREE → CLAIMED transition in debug builds).
+                    // ANALYZE-ALLOW(no-unwrap): a freshly claimed index still holds its item by the same exclusivity
                     let item = unsafe { (*slots[i].0.get()).take() }.expect("item present");
                     let r = f(item, &mut scratch);
+                    check::interleave(protocol_point::COMMIT);
+                    // SAFETY: same exclusivity — this executor is the
+                    // only writer of results[i], and the submitter
+                    // reads it only after the batch retires.
                     unsafe { *results[i].0.get() = Some(r) };
+                    core.tags.commit(i);
                 }
                 done += (end - start) as u64;
             }
@@ -336,10 +554,13 @@ where
     // is observed under the pool mutex before this frame returns, so no
     // worker can hold or re-acquire this reference afterwards (module
     // docs, "Safety of the lifetime erasure").
-    let job_static: Job =
-        unsafe { std::mem::transmute::<&(dyn Fn() + Sync), &'static (dyn Fn() + Sync)>(job_ref) };
+    let job_static: Job = unsafe {
+        std::mem::transmute::<&(dyn Fn() + Sync), &'static (dyn Fn() + Sync)>(job_ref)
+    };
 
     {
+        check::interleave(protocol_point::SUBMIT);
+        // ANALYZE-ALLOW(no-unwrap): no pool lock is ever held while user code runs (panic contract), so it cannot be poisoned
         let mut st = POOL.state.lock().unwrap();
         st.queue.push(Entry {
             core: Arc::clone(&core),
@@ -358,26 +579,38 @@ where
     // for in-flight workers to leave. After this block the job
     // reference is unreachable.
     {
+        check::interleave(protocol_point::RETIRE);
+        // ANALYZE-ALLOW(no-unwrap): no pool lock is ever held while user code runs (panic contract), so it cannot be poisoned
         let mut st = POOL.state.lock().unwrap();
         st.queue.retain(|e| !Arc::ptr_eq(&e.core, &core));
         while core.running.load(Ordering::Relaxed) > 0 {
+            // ANALYZE-ALLOW(no-unwrap): condvar wait re-acquires the never-poisoned pool lock
             st = POOL.done_cv.wait(st).unwrap();
         }
     }
 
     if let Err(payload) = mine {
+        // ANALYZE-ALLOW(no-unwrap): the panic mutex only guards a payload swap — no user code, never poisoned
         let mut slot = core.panic.lock().unwrap();
         if slot.is_none() {
             *slot = Some(payload);
         }
     }
+    // ANALYZE-ALLOW(no-unwrap): the panic mutex only guards a payload swap — no user code, never poisoned
     if let Some(payload) = core.panic.lock().unwrap().take() {
         resume_unwind(payload);
     }
 
     results
         .into_iter()
-        .map(|s| s.0.into_inner().expect("batch completed"))
+        .enumerate()
+        .map(|(i, s)| {
+            // The witness's read barrier: every slot must have passed
+            // CLAIMED → DONE before its result is moved out.
+            core.tags.assert_done(i);
+            // ANALYZE-ALLOW(no-unwrap): retirement (cursor exhausted, running == 0, no panic) implies every slot was written
+            s.0.into_inner().expect("batch completed")
+        })
         .collect()
 }
 

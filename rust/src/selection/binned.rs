@@ -57,6 +57,7 @@ pub fn best_split_on_feat_binned(
         (LabelsView::Reg { values }, Criterion::Sse) => {
             regression(view, values, hist, edges)
         }
+        // ANALYZE-ALLOW(no-unwrap): criterion/labels pairing is fixed by task kind at config validation
         _ => panic!("criterion/labels kind mismatch"),
     }
 }
@@ -181,6 +182,7 @@ fn regression(
         n_num += pair[0];
         sum_num += pair[1];
     }
+    // ANALYZE-ALLOW(no-unwrap): the builder computes reg stats for every regression node
     let (n_all_s, sum_all_s) = view.reg_stats.expect("builder provides node reg stats");
     let n_rest = n_all_s - n_num;
     let sum_rest = sum_all_s - sum_num;

@@ -102,6 +102,7 @@ pub fn top_k(ds: &Dataset, criterion: Criterion, k: usize) -> Result<(Dataset, V
         ds.labels.clone(),
         ds.interner.clone(),
     )
+    // ANALYZE-ALLOW(no-unwrap): columns were validated when the source dataset was built
     .expect("columns already validated");
     filtered.class_names = ds.class_names.clone();
     Ok((filtered, keep))

@@ -39,6 +39,7 @@ pub fn best_split_on_feat_generic(
             Value::Missing => {}
         }
     }
+    // ANALYZE-ALLOW(no-unwrap): Value::Num cells are non-NaN (NaN ingests as Missing)
     nums.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
     nums.dedup();
 
@@ -82,6 +83,7 @@ pub fn best_split_on_feat_generic(
                 if tp > 0.0 && tn > 0.0 {
                     let crit = match criterion {
                         Criterion::Class(cc) => cc,
+                        // ANALYZE-ALLOW(no-unwrap): criterion/labels pairing is fixed by task kind at config validation
                         Criterion::Sse => panic!("criterion/labels kind mismatch"),
                     };
                     consider(crit.score(&pos, &neg), op, &mut best);

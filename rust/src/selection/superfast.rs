@@ -179,6 +179,7 @@ pub fn best_split_on_feat_with(
             classification(view, ids, *n_classes, crit, scratch)
         }
         (LabelsView::Reg { values }, Criterion::Sse) => regression(view, values, scratch),
+        // ANALYZE-ALLOW(no-unwrap): criterion/labels pairing is fixed by task kind at config validation
         _ => panic!("criterion/labels kind mismatch"),
     }
 }

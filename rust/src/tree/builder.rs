@@ -400,6 +400,7 @@ impl BinnedState {
     }
 
     fn block_len(&self) -> usize {
+        // ANALYZE-ALLOW(no-unwrap): feat_off always holds n_features + 1 entries
         *self.feat_off.last().unwrap()
     }
 
@@ -712,7 +713,9 @@ fn node_label(
             let (best, &max) = counts_buf
                 .iter()
                 .enumerate()
+                // ANALYZE-ALLOW(no-unwrap): class counts are integral f64, never NaN
                 .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
+                // ANALYZE-ALLOW(no-unwrap): counts_buf holds n_classes >= 1 entries
                 .unwrap();
             (
                 NodeLabel::Class(best as u16),

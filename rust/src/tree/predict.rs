@@ -25,7 +25,9 @@ pub fn predict_row(tree: &Tree, row: &[Value], max_depth: usize, min_split: usiz
         if node.is_leaf() || (node.n_samples as usize) < min_split || depth >= max_depth {
             return node.label;
         }
+        // ANALYZE-ALLOW(no-unwrap): non-leaf nodes always carry a split
         let split = node.split.as_ref().unwrap();
+        // ANALYZE-ALLOW(no-unwrap): non-leaf nodes always carry children
         let (pos, neg) = node.children.unwrap();
         let next = if split.eval_row(row) { pos } else { neg };
         node = &tree.nodes[next as usize];
@@ -48,7 +50,9 @@ pub fn predict_ds(
         if node.is_leaf() || (node.n_samples as usize) < min_split || depth >= max_depth {
             return node.label;
         }
+        // ANALYZE-ALLOW(no-unwrap): non-leaf nodes always carry a split
         let split = node.split.as_ref().unwrap();
+        // ANALYZE-ALLOW(no-unwrap): non-leaf nodes always carry children
         let (pos, neg) = node.children.unwrap();
         let next = if split.eval_value(ds.value(split.feature, r)) {
             pos

@@ -30,6 +30,7 @@ pub fn prune(tree: &Tree, max_depth: usize, min_split: usize) -> Tree {
             n.split = None;
             n.children = None;
         } else {
+            // ANALYZE-ALLOW(no-unwrap): un-cut nodes are non-leaf and carry children
             let (pos, neg) = old.children.unwrap();
             let pos_new = nodes.len() as u32;
             let neg_new = pos_new + 1;

@@ -333,6 +333,7 @@ pub fn fit_sharded_sampled(
                 let bin_of = |t: f64| {
                     let edges = meta.edges[f]
                         .as_ref()
+                        // ANALYZE-ALLOW(no-unwrap): numeric splits only come from binned columns
                         .expect("numeric split on a column with bin edges");
                     edges.partition_point(|e| *e < t) as u32
                 };
@@ -443,15 +444,18 @@ pub fn fit_sharded_sampled(
             let parent_depth = level[slot].depth;
             let (pos_id, neg_id) = tree.nodes[level[slot].tree_id as usize]
                 .children
+                // ANALYZE-ALLOW(no-unwrap): split nodes were just given children this level
                 .expect("split node has children");
             let small = small_of_split[s] as usize;
             let large = small ^ 1;
             let small_block = acc_of_slot[small].map(|a| std::mem::take(&mut acc_blocks[a as usize]));
             let mut blocks: [Option<Vec<f64>>; 2] = [None, None];
             if child_needs[large] {
+                // ANALYZE-ALLOW(no-unwrap): level protocol keeps blocks on scored nodes until split
                 let mut pb = parent_block.expect("scored node keeps its block until split");
                 let sm = small_block
                     .as_ref()
+                    // ANALYZE-ALLOW(no-unwrap): the smaller child is always accumulated when its sibling needs a block
                     .expect("smaller child accumulated when sibling needs a block");
                 for (d, sv) in pb.iter_mut().zip(sm) {
                     *d -= sv;
@@ -564,7 +568,9 @@ fn score_node(
             let (best, &max) = counts
                 .iter()
                 .enumerate()
+                // ANALYZE-ALLOW(no-unwrap): class counts are integral f64, never NaN
                 .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
+                // ANALYZE-ALLOW(no-unwrap): counts holds n_classes >= 1 entries
                 .unwrap();
             (NodeLabel::Class(best as u16), max as usize == node.n_rows)
         }
@@ -591,6 +597,7 @@ fn score_node(
     let block = node
         .block
         .as_ref()
+        // ANALYZE-ALLOW(no-unwrap): the level protocol keeps blocks on scoreable nodes
         .expect("scoreable node carries a histogram block");
 
     // Winner fold across features: strictly greater, feature order —

@@ -217,7 +217,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn expect(&mut self, lit: &str) -> Result<(), JsonError> {
+    fn expect_lit(&mut self, lit: &str) -> Result<(), JsonError> {
         if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
             self.pos += lit.len();
             Ok(())
@@ -230,15 +230,15 @@ impl<'a> Parser<'a> {
         self.skip_ws();
         match self.peek() {
             Some(b'n') => {
-                self.expect("null")?;
+                self.expect_lit("null")?;
                 Ok(Json::Null)
             }
             Some(b't') => {
-                self.expect("true")?;
+                self.expect_lit("true")?;
                 Ok(Json::Bool(true))
             }
             Some(b'f') => {
-                self.expect("false")?;
+                self.expect_lit("false")?;
                 Ok(Json::Bool(false))
             }
             Some(b'"') => Ok(Json::Str(self.string()?)),
@@ -269,7 +269,7 @@ impl<'a> Parser<'a> {
                         let cp = self.hex4()?;
                         // Handle surrogate pairs.
                         if (0xD800..0xDC00).contains(&cp) {
-                            self.expect("\\u")?;
+                            self.expect_lit("\\u")?;
                             let lo = self.hex4()?;
                             if !(0xDC00..0xE000).contains(&lo) {
                                 return Err(self.err("invalid low surrogate"));
@@ -337,8 +337,12 @@ impl<'a> Parser<'a> {
                 self.bump();
             }
         }
-        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
-        text.parse::<f64>()
+        // The scanned span is ASCII digits/sign/dot/exponent only, but
+        // route the impossible error into the parse failure anyway —
+        // cheaper than justifying an unwrap.
+        std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.err("invalid number"))?
+            .parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("invalid number"))
     }

@@ -1,8 +1,10 @@
 //! Small self-contained substrates the offline build environment forces us
-//! to own: PRNG, CLI parsing, JSON, property testing, timing.
+//! to own: PRNG, CLI parsing, JSON, property testing, timing, and
+//! poison-recovering lock acquisition for the serving layer.
 
 pub mod cli;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod sync;
 pub mod timer;

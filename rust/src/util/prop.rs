@@ -79,6 +79,7 @@ where
                     break;
                 }
             }
+            // ANALYZE-ALLOW(no-unwrap): the harness's job is to fail the calling test with a shrunken case
             panic!(
                 "property `{name}` failed (case {case}/{}, size {}, seed {:#x}):\n  {}",
                 config.cases, smallest.0, smallest.1, smallest.2

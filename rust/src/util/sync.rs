@@ -1,0 +1,66 @@
+//! Poison-recovering lock acquisition.
+//!
+//! `Mutex`/`RwLock` poisoning exists to warn that a panic happened
+//! mid-critical-section. In this crate's server paths the guarded
+//! sections are pure bookkeeping (map inserts, config swaps, counter
+//! bumps) that cannot leave the protected data half-updated in a way a
+//! later reader would misread — but a propagated `PoisonError` *would*
+//! take down every other serving thread that touches the same lock.
+//! So the serving layer recovers deliberately: take the guard out of
+//! the error and keep serving.
+//!
+//! These helpers exist so that policy is written (and justified) in
+//! exactly one place instead of as scattered `.unwrap()` calls — which
+//! the `udt-analyze` `no-unwrap` rule now rejects. Code whose locks
+//! provably *cannot* be poisoned (the worker pool never holds its lock
+//! while user code runs) instead documents that invariant with an
+//! `ANALYZE-ALLOW` waiver at each site.
+
+use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Read-lock an `RwLock`, recovering the guard from poisoning.
+pub fn read<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Write-lock an `RwLock`, recovering the guard from poisoning.
+pub fn write<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::{Mutex, RwLock};
+
+    #[test]
+    fn mutex_guard_survives_a_poisoning_panic() {
+        let m = Mutex::new(7u32);
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison it");
+        }));
+        assert!(m.is_poisoned());
+        assert_eq!(*lock(&m), 7);
+        *lock(&m) = 8;
+        assert_eq!(*lock(&m), 8);
+    }
+
+    #[test]
+    fn rwlock_guards_survive_a_poisoning_panic() {
+        let l = RwLock::new(vec![1, 2, 3]);
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            let _g = l.write().unwrap();
+            panic!("poison it");
+        }));
+        assert_eq!(read(&l).len(), 3);
+        write(&l).push(4);
+        assert_eq!(read(&l).len(), 4);
+    }
+}

@@ -1,0 +1,229 @@
+//! Seeded-violation fixtures for the `udt-analyze` source lint
+//! (`src/analysis/`): each rule gets a fixture that must trip it at an
+//! exact line, a fixture that must NOT trip it (exemption or waiver),
+//! and the whole suite closes with a self-scan of this very crate that
+//! must come back clean — the lint gates CI, so the repo must always
+//! pass its own lint.
+//!
+//! Fixture sources are plain string literals. The lexer masks string
+//! contents before the rules run, which is exactly why this file can
+//! hold `.unwrap()` / `unsafe` / waiver text in fixtures without
+//! tripping the self-scan.
+
+use udt::analysis::{analyze_source, analyze_tree};
+
+/// Assert the fixture produces exactly the `(rule, line)` pairs given.
+fn expect(rel_path: &str, src: &str, want: &[(&str, usize)]) {
+    let got: Vec<(String, usize)> = analyze_source(rel_path, src)
+        .findings
+        .iter()
+        .map(|f| (f.rule.id().to_string(), f.line))
+        .collect();
+    let want: Vec<(String, usize)> = want
+        .iter()
+        .map(|(r, l)| (r.to_string(), *l))
+        .collect();
+    assert_eq!(got, want, "findings for fixture at {rel_path}:\n{src}");
+}
+
+// ---------------------------------------------------------------- SAFETY
+
+#[test]
+fn unsafe_without_safety_comment_is_flagged_at_its_line() {
+    let src = "pub fn f(p: *const u8) -> u8 {\n    unsafe { p.read() }\n}\n";
+    expect("src/foo.rs", src, &[("safety-comment", 2)]);
+}
+
+#[test]
+fn safety_comment_directly_above_satisfies_the_rule() {
+    let src = "pub fn f(p: *const u8) -> u8 {\n    // SAFETY: caller guarantees p is valid\n    unsafe { p.read() }\n}\n";
+    expect("src/foo.rs", src, &[]);
+}
+
+#[test]
+fn safety_comment_reaches_through_attributes_and_blank_lines() {
+    let src = "/// Docs.\n///\n/// # Safety\n/// caller upholds the contract\n#[inline]\n#[must_use]\npub unsafe fn f() {}\n";
+    expect("src/foo.rs", src, &[]);
+}
+
+#[test]
+fn code_line_between_safety_comment_and_unsafe_breaks_coverage() {
+    let src = "// SAFETY: stale comment\nfn other() {}\nfn f(p: *const u8) {\n    unsafe { p.read() };\n}\n";
+    expect("src/foo.rs", src, &[("safety-comment", 4)]);
+}
+
+#[test]
+fn safety_rule_applies_even_in_test_and_bench_paths() {
+    let src = "fn f(p: *const u8) -> u8 {\n    unsafe { p.read() }\n}\n";
+    expect("tests/foo.rs", src, &[("safety-comment", 2)]);
+    expect("benches/foo.rs", src, &[("safety-comment", 2)]);
+}
+
+// ---------------------------------------------------------- thread-spawn
+
+#[test]
+fn thread_spawn_outside_the_pool_is_flagged() {
+    let src = "pub fn go() {\n    std::thread::spawn(|| {});\n}\n";
+    expect("src/coordinator/foo.rs", src, &[("thread-spawn", 2)]);
+}
+
+#[test]
+fn thread_scope_is_also_flagged() {
+    let src = "pub fn go() {\n    std::thread::scope(|_s| {});\n}\n";
+    expect("src/foo.rs", src, &[("thread-spawn", 2)]);
+}
+
+#[test]
+fn the_pool_module_itself_may_spawn() {
+    let src = "pub fn go() {\n    std::thread::spawn(|| {});\n}\n";
+    expect("src/runtime/pool.rs", src, &[]);
+}
+
+#[test]
+fn tests_and_benches_may_spawn() {
+    let src = "fn go() {\n    std::thread::spawn(|| {});\n}\n";
+    expect("tests/foo.rs", src, &[]);
+    expect("benches/foo.rs", src, &[]);
+}
+
+// ------------------------------------------------------------- no-unwrap
+
+#[test]
+fn unwrap_expect_and_panic_are_flagged_in_library_code() {
+    let src = "pub fn f(x: Option<u8>) -> u8 {\n    let a = x.unwrap();\n    let b = x.expect(\"b\");\n    if a != b { panic!(\"boom\") }\n    a\n}\n";
+    expect(
+        "src/foo.rs",
+        src,
+        &[("no-unwrap", 2), ("no-unwrap", 3), ("no-unwrap", 4)],
+    );
+}
+
+#[test]
+fn main_rs_is_exempt_from_no_unwrap() {
+    let src = "fn main() {\n    run().unwrap();\n}\n";
+    expect("src/main.rs", src, &[]);
+}
+
+#[test]
+fn cfg_test_modules_are_exempt_from_no_unwrap() {
+    let src = "pub fn lib() {}\n\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        Some(1).unwrap();\n    }\n}\n";
+    expect("src/foo.rs", src, &[]);
+}
+
+#[test]
+fn unwrap_before_a_cfg_test_module_is_still_flagged() {
+    let src = "pub fn lib(x: Option<u8>) -> u8 {\n    x.unwrap()\n}\n\n#[cfg(test)]\nmod tests {}\n";
+    expect("src/foo.rs", src, &[("no-unwrap", 2)]);
+}
+
+// --------------------------------------------------------- as-truncation
+
+#[test]
+fn narrowing_as_casts_are_flagged_in_decoder_files() {
+    let src = "pub fn f(x: u64) -> u16 {\n    x as u16\n}\n";
+    expect("src/data/shard/format.rs", src, &[("as-truncation", 2)]);
+    expect("src/coordinator/reactor/sys.rs", src, &[("as-truncation", 2)]);
+}
+
+#[test]
+fn as_casts_outside_decoder_files_are_not_this_rules_business() {
+    let src = "pub fn f(x: u64) -> u16 {\n    x as u16\n}\n";
+    expect("src/foo.rs", src, &[]);
+}
+
+#[test]
+fn widening_as_casts_to_wide_targets_are_not_flagged() {
+    let src = "pub fn f(x: u8) -> u64 {\n    x as u64\n}\n";
+    expect("src/data/shard/format.rs", src, &[]);
+}
+
+// ---------------------------------------------------------------- waivers
+
+#[test]
+fn waiver_on_the_preceding_line_absorbs_the_finding_and_is_used() {
+    let src = "pub fn f(x: Option<u8>) -> u8 {\n    // ANALYZE-ALLOW(no-unwrap): fixture reason\n    x.unwrap()\n}\n";
+    let fa = analyze_source("src/foo.rs", src);
+    assert!(fa.findings.is_empty(), "waiver failed to absorb: {:?}", fa.findings);
+    assert_eq!(fa.waivers.len(), 1);
+    assert!(fa.waivers[0].used, "absorbing waiver not marked used");
+    assert_eq!(fa.waivers[0].rule, "no-unwrap");
+}
+
+#[test]
+fn trailing_waiver_on_the_same_line_absorbs_the_finding() {
+    let src = "pub fn f(x: Option<u8>) -> u8 {\n    x.unwrap() // ANALYZE-ALLOW(no-unwrap): fixture reason\n}\n";
+    let fa = analyze_source("src/foo.rs", src);
+    assert!(fa.findings.is_empty());
+    assert!(fa.waivers[0].used);
+}
+
+#[test]
+fn waiver_for_the_wrong_rule_does_not_absorb() {
+    let src = "pub fn f(x: Option<u8>) -> u8 {\n    // ANALYZE-ALLOW(as-truncation): wrong rule\n    x.unwrap()\n}\n";
+    let fa = analyze_source("src/foo.rs", src);
+    assert_eq!(fa.findings.len(), 1);
+    assert_eq!(fa.findings[0].rule.id(), "no-unwrap");
+    assert!(!fa.waivers[0].used, "mismatched waiver wrongly marked used");
+}
+
+#[test]
+fn malformed_waivers_are_findings_with_exact_lines() {
+    let src = "// ANALYZE-ALLOW(no-such-rule): bad id\nfn a() {}\n// ANALYZE-ALLOW(no-unwrap) missing colon\nfn b() {}\n// ANALYZE-ALLOW(no-unwrap):\nfn c() {}\n";
+    expect(
+        "src/foo.rs",
+        src,
+        &[
+            ("waiver-syntax", 1),
+            ("waiver-syntax", 3),
+            ("waiver-syntax", 5),
+        ],
+    );
+}
+
+#[test]
+fn waiver_syntax_itself_cannot_be_waived() {
+    let src = "// ANALYZE-ALLOW(waiver-syntax): try to waive the waiver\nfn a() {}\n";
+    let fa = analyze_source("src/foo.rs", src);
+    assert_eq!(fa.findings.len(), 1);
+    assert_eq!(fa.findings[0].rule.id(), "waiver-syntax");
+}
+
+// -------------------------------------------------------------- masking
+
+#[test]
+fn violations_inside_string_literals_are_invisible() {
+    let src = "pub fn f() -> &'static str {\n    \".unwrap() unsafe thread::spawn panic!\"\n}\n";
+    expect("src/foo.rs", src, &[]);
+}
+
+#[test]
+fn violations_inside_comments_are_invisible() {
+    let src = "// never call .unwrap() or unsafe thread::spawn here\npub fn f() {}\n";
+    expect("src/foo.rs", src, &[]);
+}
+
+// ------------------------------------------------------------ self-scan
+
+/// The gate itself: the repo must pass its own lint, every waiver in
+/// the tree must be well-formed, and none may be dead. Run the same
+/// scan CI runs (`udt analyze`) against this crate's manifest dir.
+#[test]
+fn repo_self_scan_is_clean_with_no_unused_waivers() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = analyze_tree(root).expect("self-scan walks the source tree");
+    let rendered = report.render();
+    assert_eq!(
+        report.total_findings(),
+        0,
+        "repo fails its own lint:\n{rendered}"
+    );
+    assert!(
+        report.unused_waivers().is_empty(),
+        "dead waivers in tree:\n{rendered}"
+    );
+    // The audit left real, counted waivers behind — the report must
+    // show them rather than pretending the tree is waiver-free.
+    let waived: usize = report.waiver_counts().iter().map(|(_, n)| n).sum();
+    assert!(waived > 0, "expected a nonzero used-waiver count");
+    assert!(rendered.contains("0 finding(s)"), "render summary:\n{rendered}");
+}

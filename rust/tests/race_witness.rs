@@ -1,0 +1,184 @@
+//! Stress suite for the pool's dynamic race witness
+//! (`runtime/pool.rs::check`): the shadow-ownership tags must catch
+//! every protocol violation we can inject, and seeded yield-injection
+//! at the claim/take/commit/pickup/retire/submit points must never
+//! change what a batch computes — only how its schedule interleaves.
+//!
+//! Detection tests are gated like the witness itself
+//! (`debug_assertions` or `--cfg udt_check`): plain release builds
+//! compile the witness down to no-op stubs (that is the point of the
+//! gate), so there is nothing to detect there. The equivalence tests
+//! run in every profile; the CI sanitizer lanes run the whole file in
+//! an optimized build with the witness armed via `--cfg udt_check`.
+
+#[cfg(any(debug_assertions, udt_check))]
+use std::panic::{catch_unwind, AssertUnwindSafe};
+#[cfg(any(debug_assertions, udt_check))]
+use std::sync::Arc;
+
+use udt::runtime::pool::{map_scratch, witness};
+
+/// Every detection test opts into catchable panics (the production
+/// path aborts, which is untestable in-process). The flag is global
+/// and sticky; legit runs never trip a violation, so leaving it set
+/// is harmless to concurrently running tests.
+#[cfg(any(debug_assertions, udt_check))]
+fn arm() {
+    witness::set_panic_on_violation(true);
+}
+
+#[cfg(any(debug_assertions, udt_check))]
+fn violation_message(r: Result<(), Box<dyn std::any::Any + Send>>) -> String {
+    let payload = r.expect_err("expected a witness violation");
+    payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default()
+}
+
+#[cfg(any(debug_assertions, udt_check))]
+#[test]
+fn double_claim_is_caught() {
+    arm();
+    let tags = witness::SlotTags::new(4);
+    tags.claim(1);
+    let msg = violation_message(catch_unwind(AssertUnwindSafe(|| tags.claim(1))));
+    assert!(
+        msg.contains("double-claimed"),
+        "wrong diagnostic for a double-claim: {msg}"
+    );
+}
+
+#[cfg(any(debug_assertions, udt_check))]
+#[test]
+fn commit_without_claim_is_caught() {
+    arm();
+    let tags = witness::SlotTags::new(4);
+    let msg = violation_message(catch_unwind(AssertUnwindSafe(|| tags.commit(2))));
+    assert!(
+        msg.contains("without ownership"),
+        "wrong diagnostic for an unowned commit: {msg}"
+    );
+}
+
+#[cfg(any(debug_assertions, udt_check))]
+#[test]
+fn retire_before_commit_is_caught() {
+    arm();
+    let tags = witness::SlotTags::new(4);
+    tags.claim(0); // claimed but never committed
+    let msg = violation_message(catch_unwind(AssertUnwindSafe(|| tags.assert_done(0))));
+    assert!(
+        msg.contains("expected DONE"),
+        "wrong diagnostic for retire-before-drain: {msg}"
+    );
+}
+
+#[cfg(any(debug_assertions, udt_check))]
+#[test]
+fn clean_protocol_run_raises_nothing() {
+    arm();
+    let tags = witness::SlotTags::new(8);
+    for i in 0..8 {
+        tags.claim(i);
+        tags.commit(i);
+    }
+    for i in 0..8 {
+        tags.assert_done(i);
+    }
+}
+
+/// Racing CAS stress: four threads fight over one slot; the witness
+/// must admit exactly one winner per round and fault the rest, no
+/// matter how the scheduler lands.
+#[cfg(any(debug_assertions, udt_check))]
+#[test]
+fn concurrent_double_claim_admits_exactly_one_winner() {
+    arm();
+    for _round in 0..8 {
+        let tags = Arc::new(witness::SlotTags::new(1));
+        let barrier = Arc::new(std::sync::Barrier::new(4));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let tags = Arc::clone(&tags);
+                let barrier = Arc::clone(&barrier);
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    tags.claim(0); // panics for every thread but one
+                })
+            })
+            .collect();
+        let winners = handles
+            .into_iter()
+            .map(|h| h.join())
+            .filter(Result::is_ok)
+            .count();
+        assert_eq!(winners, 1, "slot claimed by {winners} threads in one round");
+        tags.commit(0);
+        tags.assert_done(0);
+    }
+}
+
+// ------------------------------------------------ yield-injection 1≡N
+
+/// Node-for-node structural tree equality, matching the property
+/// suites' notion of "identical".
+fn same_tree(a: &udt::tree::Tree, b: &udt::tree::Tree) {
+    assert_eq!(a.n_nodes(), b.n_nodes(), "node counts differ");
+    assert_eq!(a.depth, b.depth, "depths differ");
+    for (i, (x, y)) in a.nodes.iter().zip(&b.nodes).enumerate() {
+        assert_eq!(x.split, y.split, "node {i} split");
+        assert_eq!(x.children, y.children, "node {i} children");
+        assert_eq!(x.n_samples, y.n_samples, "node {i} samples");
+        assert_eq!(x.label, y.label, "node {i} label");
+    }
+}
+
+#[test]
+fn map_scratch_is_order_and_value_exact_under_yield_injection() {
+    for seed in [1u64, 42, 0xDEAD_BEEF_DEAD_BEEF] {
+        witness::set_yield_seed(seed);
+        let out = map_scratch(
+            (0..500u64).collect::<Vec<_>>(),
+            4,
+            || 0u64,
+            |x, calls| {
+                *calls += 1;
+                x * 3 + 1
+            },
+        );
+        witness::set_yield_seed(0);
+        let want: Vec<u64> = (0..500).map(|x| x * 3 + 1).collect();
+        assert_eq!(out, want, "seed {seed:#x} perturbed batch results");
+    }
+}
+
+#[test]
+fn tree_build_is_identical_at_1_and_4_threads_under_yield_injection() {
+    use udt::data::synth::{generate_any, SynthSpec};
+    use udt::tree::{TrainConfig, Tree};
+
+    let mut spec = SynthSpec::classification("race-witness", 600, 6, 3);
+    spec.cat_frac = 0.3;
+    spec.missing_frac = 0.1;
+    spec.noise = 0.15;
+    let ds = generate_any(&spec, 0xA11CE);
+    let rows: Vec<u32> = (0..ds.n_rows() as u32).collect();
+
+    let seq = Tree::fit_rows(&ds, &rows, &TrainConfig::default()).expect("sequential fit");
+    for seed in [7u64, 0xBAD_5EED] {
+        witness::set_yield_seed(seed);
+        let par = Tree::fit_rows(
+            &ds,
+            &rows,
+            &TrainConfig {
+                n_threads: 4,
+                ..Default::default()
+            },
+        )
+        .expect("parallel fit under yield injection");
+        witness::set_yield_seed(0);
+        same_tree(&seq, &par);
+    }
+}
